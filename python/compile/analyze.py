@@ -1,0 +1,110 @@
+"""Static performance analysis of the AOT artifacts (EXPERIMENTS.md §Perf).
+
+L2: HLO op histogram per artifact — fusion counts, dot/convolution counts,
+    sort counts (the ssProp selection overhead), total instruction count.
+L1: BlockSpec-derived VMEM footprint and MXU-utilization estimate for the
+    Pallas img2col GEMMs at the paper's layer shapes. interpret=True gives
+    CPU-numpy timings only, so TPU efficiency is *estimated structurally*:
+      mxu_util = real MACs / padded-tile MACs  (tile quantization loss)
+      vmem     = per-step working set (A tile + B tile + acc + out)
+
+Usage:  python -m compile.analyze [--artifacts ../artifacts] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+from collections import Counter
+
+from .kernels.matmul import BK, BM, BN, vmem_bytes
+
+# result type may be a tuple "(f32[16]{0}, s32[16]{0})", hence the parens
+OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]{},/() ]+?\s([a-z][\w\-]*)\(")
+
+
+def hlo_op_histogram(text: str) -> Counter:
+    """Count HLO instruction kinds in an HLO text module."""
+    ops = Counter()
+    for line in text.splitlines():
+        m = OP_RE.match(line)
+        if m:
+            ops[m.group(1)] += 1
+    return ops
+
+
+def summarize_artifact(path: str) -> dict:
+    with open(path) as f:
+        ops = hlo_op_histogram(f.read())
+    total = sum(ops.values())
+    return {
+        "total_ops": total,
+        "fusion": ops.get("fusion", 0),
+        "dot": ops.get("dot", 0),
+        "convolution": ops.get("convolution", 0),
+        "sort": ops.get("sort", 0),
+        "while": ops.get("while", 0),
+        "top5": ops.most_common(5),
+    }
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def gemm_tile_analysis(m: int, n: int, k: int, bm: int = BM, bn: int = BN, bk: int = BK) -> dict:
+    """Tile-quantization MXU utilization + VMEM footprint for one GEMM."""
+    bm, bn, bk = min(bm, _ceil_to(m, 8)), min(bn, _ceil_to(n, 8)), min(bk, _ceil_to(k, 8))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    real = m * n * k
+    padded = mp * np_ * kp
+    return {
+        "gemm": (m, n, k),
+        "block": (bm, bn, bk),
+        "grid": (mp // bm, np_ // bn, kp // bk),
+        "vmem_bytes": vmem_bytes(bm, bn, bk),
+        "mxu_util": real / padded,
+    }
+
+
+def ssprop_backward_gemms(bt: int, cin: int, cout: int, k: int, ho: int, wo: int,
+                          drop: float) -> list:
+    """The two shrunk GEMMs of the compacted backward at drop rate `drop`."""
+    mm = bt * ho * wo
+    nn = cin * k * k
+    keep = max(1, round((1.0 - drop) * cout))
+    return [
+        gemm_tile_analysis(nn, keep, mm),   # dW' = col_X^T @ col[dY]'
+        gemm_tile_analysis(mm, nn, keep),   # dX  = col[dY]' @ col_W'^T
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    print("== L2: HLO op histograms ==")
+    names = sorted(f for f in os.listdir(args.artifacts) if f.endswith(".hlo.txt"))
+    if args.only:
+        names = [n for n in names if args.only in n]
+    for name in names:
+        s = summarize_artifact(os.path.join(args.artifacts, name))
+        print(f"{name:44s} ops={s['total_ops']:6d} fusion={s['fusion']:4d} "
+              f"dot={s['dot']:3d} conv={s['convolution']:3d} sort={s['sort']:3d} "
+              f"while={s['while']:3d}")
+
+    print("\n== L1: Pallas GEMM tile analysis (ResNet-18 stage shapes, bs 128, full width) ==")
+    for (cin, cout, k, ho) in [(64, 64, 3, 32), (128, 128, 3, 16), (256, 256, 3, 8),
+                               (512, 512, 3, 4)]:
+        for drop in (0.0, 0.8):
+            for g in ssprop_backward_gemms(128, cin, cout, k, ho, ho, drop):
+                print(f"conv {cin:3d}->{cout:3d} k{k} h{ho:2d} D={drop:.1f}  "
+                      f"gemm={str(g['gemm']):22s} block={g['block']}  "
+                      f"vmem={g['vmem_bytes']/1024:.0f} KiB  mxu_util={g['mxu_util']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

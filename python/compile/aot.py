@@ -1,0 +1,237 @@
+"""AOT compiler — lowers every L2 graph to HLO text + manifest + init params.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged); Python
+never appears on the request path afterwards.
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Per artifact ``NAME`` we write:
+    artifacts/NAME.hlo.txt         the lowered computation (return_tuple=True)
+    artifacts/NAME.manifest.json   flattened I/O specs + model/dataset/FLOPs metadata
+    artifacts/NAME.init.tstore     Kaiming-initialized params (+opt,+bn) for trains
+plus a global ``artifacts/index.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from typing import Any, Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import steps as steps_mod
+from . import tensorstore
+from .models.ddpm_unet import UNet
+from .models.resnet import ResNet
+from .models.simple_cnn import SimpleCNN
+from .ssprop import make_ssprop_conv_pallas
+
+# ---------------------------------------------------------------------------
+# dataset registry (geometry of paper Table 1, scaled; see DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+DATASETS = {
+    # name: (channels, img, classes, loss, batch)
+    "mnist":      (1, 28, 10, "ce", 32),
+    "fashion":    (1, 28, 10, "ce", 32),
+    "cifar10":    (3, 32, 10, "ce", 32),
+    "cifar100":   (3, 32, 100, "ce", 32),
+    "celeba":     (3, 64, 40, "bce", 16),
+    # ImageNet-1k substitute: 64px, 100 classes (documented in DESIGN.md).
+    "imagenet64": (3, 64, 100, "ce", 16),
+}
+
+DDPM_DATASETS = {
+    # name: (channels, img, timesteps, batch)
+    "mnist":   (1, 28, 200, 16),
+    "fashion": (1, 28, 200, 16),
+    "celeba":  (3, 64, 100, 8),
+}
+
+WIDTH_MULT = 0.25  # CPU-testbed width scale; analytic FLOPs stay full-width
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# artifact emission
+# ---------------------------------------------------------------------------
+
+def _emit(out_dir: str, name: str, fn: Callable, args, roles, out_roles,
+          meta: Dict[str, Any], init_roles=("param", "opt", "bn")) -> Dict[str, Any]:
+    # keep_unused=True: the manifest-driven rust runtime supplies EVERY input
+    # (e.g. `dropout_rate` on models without Dropout, `key` under top-k
+    # selection), so unused-arg pruning must be disabled.
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    hlo = to_hlo_text(lowered)
+    outs = jax.eval_shape(fn, *args)
+    if not isinstance(outs, tuple):
+        outs = (outs,)
+    inputs, outputs = steps_mod.manifest_io(args, roles, outs, out_roles)
+    manifest = dict(name=name, inputs=inputs, outputs=outputs, **meta)
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(hlo)
+    with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    # initial values for state-role inputs
+    tensors = []
+    for role, tree in zip(roles, args):
+        if role not in init_roles:
+            continue
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            tensors.append((role + jax.tree_util.keystr(path), np.asarray(leaf)))
+    if tensors:
+        tensorstore.write(os.path.join(out_dir, f"{name}.init.tstore"), tensors)
+    return {"name": name, "kind": meta.get("kind"), "hlo_bytes": len(hlo),
+            "n_inputs": len(inputs), "n_outputs": len(outputs)}
+
+
+def _classifier_artifacts(model, mname: str, ds: str, *, optimizer="adam",
+                          suffix="") -> List[Dict[str, Any]]:
+    cin, img, classes, loss, batch = DATASETS[ds]
+    pair = steps_mod.make_classify_steps(model, batch=batch, loss=loss,
+                                         optimizer=optimizer)
+    inv = model.inventory().as_json()
+    meta = dict(model=mname, dataset=ds, batch=batch, loss=loss, img=img,
+                channels=cin, classes=classes, width_mult=getattr(model, "width_mult", 1.0),
+                layers=inv)
+    specs = []
+    for kind in ("train", "eval"):
+        fn, args, roles, out_roles = pair[kind]
+        specs.append((f"{mname}_{ds}{suffix}_{kind}", fn, args, roles, out_roles,
+                      dict(kind=kind, **meta)))
+    return specs
+
+
+def build_registry() -> List[tuple]:
+    """All artifact specs: (name, fn, args, roles, out_roles, meta)."""
+    specs: List[tuple] = []
+
+    # -- Table 4: ResNet-18/50 on six datasets (+ Table 7's ResNet-26) -------
+    for arch in ("resnet18", "resnet50"):
+        for ds in ("mnist", "fashion", "cifar10", "cifar100", "celeba", "imagenet64"):
+            cin, img, classes, _, _ = DATASETS[ds]
+            model = ResNet(arch=arch, in_ch=cin, img=img, classes=classes,
+                           width_mult=WIDTH_MULT, with_dropout=(arch == "resnet50"))
+            specs.extend(_classifier_artifacts(model, arch, ds))
+    for ds in ("cifar10", "cifar100"):
+        cin, img, classes, _, _ = DATASETS[ds]
+        model = ResNet(arch="resnet26", in_ch=cin, img=img, classes=classes,
+                       width_mult=WIDTH_MULT)
+        specs.extend(_classifier_artifacts(model, "resnet26", ds))
+
+    # -- Fig. 2a/2b: selection-mode variants on ResNet-18 / CIFAR-10 ---------
+    for mode, select, tag in (("hw", "topk", "hw"), ("all", "topk", "all"),
+                              ("channel", "random", "random")):
+        cin, img, classes, _, _ = DATASETS["cifar10"]
+        model = ResNet(arch="resnet18", in_ch=cin, img=img, classes=classes,
+                       width_mult=WIDTH_MULT, mode=mode, select=select)
+        specs.extend(_classifier_artifacts(model, "resnet18", "cifar10",
+                                           suffix=f"_{tag}"))
+
+    # -- Fig. 4: SimpleCNN depth sweep on CIFAR-100 --------------------------
+    for depth in (2, 3, 4, 5, 6, 7):
+        cin, img, classes, _, _ = DATASETS["cifar100"]
+        model = SimpleCNN(depth=depth, in_ch=cin, img=img, classes=classes)
+        specs.extend(_classifier_artifacts(model, f"cnn{depth}", "cifar100"))
+
+    # -- Table 5 / Fig. 3: DDPM -----------------------------------------------
+    for ds, (cin, img, T, batch) in DDPM_DATASETS.items():
+        unet = UNet(in_ch=cin, img=img)
+        pair = steps_mod.make_ddpm_steps(unet, batch=batch, timesteps=T)
+        meta = dict(model="ddpm_unet", dataset=ds, batch=batch, img=img,
+                    channels=cin, timesteps=T, layers=unet.inventory().as_json(),
+                    beta_schedule=pair["schedule"])
+        for kind in ("train", "denoise"):
+            fn, args, roles, out_roles = pair[kind]
+            specs.append((f"ddpm_{ds}_{kind}", fn, args, roles, out_roles,
+                          dict(kind=kind, **meta)))
+
+    # -- compacted Pallas hot-path microbench (true-sparse FLOPs saving) -----
+    for tag, drop in (("dense", 0.0), ("d50", 0.5), ("d80", 0.8)):
+        conv = make_ssprop_conv_pallas(stride=1, padding=1, drop_rate=drop)
+
+        def grad_fn(x, w, b, conv=conv):
+            def lf(x, w, b):
+                y = conv(x, w, b)
+                return jnp.sum(y * y)
+            l, (dx, dw, db) = jax.value_and_grad(lf, (0, 1, 2))(x, w, b)
+            return dx, dw, db, l
+
+        bt, cc, hh, kk = 8, 32, 12, 3
+        args = (jnp.zeros((bt, cc, hh, hh), jnp.float32),
+                jnp.zeros((cc, cc, kk, kk), jnp.float32),
+                jnp.zeros((cc,), jnp.float32))
+        meta = dict(kind="kernel", model="conv_pallas", drop_rate=drop,
+                    layers={"convs": [dict(cin=cc, cout=cc, k=kk, stride=1, padding=1,
+                                           hin=hh, win=hh, hout=hh, wout=hh)],
+                            "bns": [], "dropouts": []},
+                    batch=bt)
+        specs.append((f"conv_pallas_{tag}", grad_fn, args,
+                      ["data_x", "param", "param"], ["gx", "gw", "gb", "loss"], meta))
+
+    return specs
+
+
+def _input_digest(root: str) -> str:
+    h = hashlib.sha256()
+    for base, _, files in sorted(os.walk(os.path.join(root, "compile"))):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(base, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="", help="substring filter on artifact names")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    specs = build_registry()
+    if args.only:
+        specs = [s for s in specs if args.only in s[0]]
+    if args.list:
+        for s in specs:
+            print(s[0])
+        return
+
+    # merge with any existing index so `--only` rebuilds don't clobber it
+    index_path = os.path.join(args.out_dir, "index.json")
+    existing = {}
+    if args.only and os.path.exists(index_path):
+        with open(index_path) as f:
+            existing = {a["name"]: a for a in json.load(f).get("artifacts", [])}
+    for (name, fn, fargs, roles, out_roles, meta) in specs:
+        info = _emit(args.out_dir, name, fn, fargs, roles, out_roles, meta)
+        existing[name] = info
+        print(f"  lowered {name}  ({info['hlo_bytes']//1024} KiB, "
+              f"{info['n_inputs']} in / {info['n_outputs']} out)", flush=True)
+    index = {"artifacts": sorted(existing.values(), key=lambda a: a["name"]),
+             "digest": _input_digest(os.path.dirname(os.path.dirname(__file__)))}
+    with open(index_path, "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"wrote {len(specs)} artifacts to {args.out_dir} (index: {len(existing)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Pallas img2col / col2img kernels (paper Fig. 1b).
+
+im2col: grid over (batch, output-row). Each program reads the K input rows
+that contribute to one output row (a (Cin, K, Wp) slab — the natural
+HBM->VMEM streaming unit on TPU, expressed with a BlockSpec over the padded
+input) and emits the W_out patch rows of col_X.
+
+col2img: the reverse scatter-add. Programs iterate output rows per batch
+element sequentially on the grid's minor axis so overlapping windows
+accumulate without atomics — the same trick Mosaic uses for revisiting
+output tiles (the out BlockSpec maps every (b, i) to the same batch block).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import out_size
+
+
+def _im2col_kernel(x_ref, o_ref, *, k: int, stride: int, wo: int):
+    # x_ref: (1, Cin, Hp, Wp) — full padded image of batch b
+    # o_ref: (1, 1, wo, Cin*K*K) — patch rows of output row i
+    i = pl.program_id(1)
+    cin = x_ref.shape[1]
+    slab = x_ref[0, :, pl.ds(i * stride, k), :]  # (Cin, K, Wp)
+    rows = []
+    for j in range(wo):
+        win = slab[:, :, j * stride : j * stride + k]  # (Cin, K, K)
+        rows.append(win.reshape(cin * k * k))
+    o_ref[0, 0] = jnp.stack(rows)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "padding", "interpret"))
+def im2col(x, *, k: int, stride: int = 1, padding: int = 0, interpret: bool = True):
+    """(Bt,Cin,H,W) -> (Bt*Hout*Wout, Cin*K*K), matching ref.im2col_ref."""
+    bt, cin, h, w = x.shape
+    ho = out_size(h, k, stride, padding)
+    wo = out_size(w, k, stride, padding)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    wp = w + 2 * padding
+    out = pl.pallas_call(
+        functools.partial(_im2col_kernel, k=k, stride=stride, wo=wo),
+        grid=(bt, ho),
+        in_specs=[
+            # whole padded image per batch element; the kernel slices the
+            # (Cin, K, Wp) slab for row i with pl.ds (overlapping slabs cannot
+            # be expressed in block-unit BlockSpec index maps).
+            pl.BlockSpec((1, cin, h + 2 * padding, wp), lambda b, i: (b, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, wo, cin * k * k), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bt, ho, wo, cin * k * k), x.dtype),
+        interpret=interpret,
+    )(xp)
+    return out.reshape(bt * ho * wo, cin * k * k)
+
+
+def _col2img_kernel(c_ref, o_ref, *, k: int, stride: int, ho: int, wo: int, cin: int):
+    # c_ref: (1, 1, wo, Cin*K*K) — patch rows of output row i
+    # o_ref: (1, Cin, Hp, Wp)    — full padded image of batch b (revisited per i)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    rows = c_ref[0, 0]  # (wo, Cin*K*K)
+    for j in range(wo):
+        win = rows[j].reshape(cin, k, k)
+        cur = o_ref[0, :, pl.ds(i * stride, k), pl.ds(j * stride, k)]
+        o_ref[0, :, pl.ds(i * stride, k), pl.ds(j * stride, k)] = cur + win
+
+
+@functools.partial(jax.jit, static_argnames=("x_shape", "k", "stride", "padding", "interpret"))
+def col2img(cols, *, x_shape, k: int, stride: int = 1, padding: int = 0, interpret: bool = True):
+    """(Bt*Hout*Wout, Cin*K*K) -> x_shape scatter-add, matching col2img_ref."""
+    bt, cin, h, w = x_shape
+    ho = out_size(h, k, stride, padding)
+    wo = out_size(w, k, stride, padding)
+    hp, wp = h + 2 * padding, w + 2 * padding
+    c4 = cols.reshape(bt, ho, wo, cin * k * k)
+    # NOTE: i*stride slabs overlap for k > stride, so the output block must be
+    # the whole padded image; the (b, i) grid revisits it row-sequentially.
+    xp = pl.pallas_call(
+        functools.partial(_col2img_kernel, k=k, stride=stride, ho=ho, wo=wo, cin=cin),
+        grid=(bt, ho),
+        in_specs=[pl.BlockSpec((1, 1, wo, cin * k * k), lambda b, i: (b, i, 0, 0))],
+        out_specs=pl.BlockSpec((1, cin, hp, wp), lambda b, i: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bt, cin, hp, wp), cols.dtype),
+        interpret=interpret,
+    )(c4)
+    if padding:
+        xp = xp[:, :, padding:-padding, padding:-padding]
+    return xp

@@ -1,0 +1,77 @@
+"""Tiled Pallas matmul — the GEMM at the heart of the img2col formulation.
+
+This is the canonical MXU-shaped kernel: a 3-D grid over (M-tiles, N-tiles,
+K-steps) with an f32 VMEM accumulator scratch. On a real TPU each (bm, bk) x
+(bk, bn) block pair streams HBM->VMEM under the BlockSpec schedule and the
+``jnp.dot`` maps onto the 128x128 systolic array; here we run it with
+``interpret=True`` so the same HLO executes on the CPU PJRT client.
+
+Both ssProp backward matmuls reuse this kernel:
+    dW' = col_X^T @ col[dY]'     (N x M) @ (M x k')
+    dXc = col[dY]' @ col_W'^T    (M x k') @ (k' x N)
+The *compaction* (k' < C_out) is what shrinks the contraction/output dim and
+realizes the paper's FLOPs saving; see DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default tile sizes: MXU-friendly 128x128 output tiles with a 128-deep
+# contraction step. The wrapper shrinks tiles for small operands so the
+# interpret-mode tests stay fast.
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(a, b, *, bm: int = BM, bn: int = BN, bk: int = BK, interpret: bool = True):
+    """C = A @ B with zero-padding to tile multiples (padding contributes 0)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, _ceil_to(m, 8)), min(bn, _ceil_to(n, 8)), min(bk, _ceil_to(k, 8))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    ap = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    bp = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """Static VMEM footprint of one grid step: A-tile + B-tile + acc + out."""
+    return itemsize * (bm * bk + bk * bn + 2 * bm * bn)

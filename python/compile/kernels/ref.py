@@ -1,0 +1,234 @@
+"""Pure-jnp reference oracle for every Pallas kernel (L1 correctness anchor).
+
+Everything in this file is written with plain ``jax.numpy``/``jax.lax`` ops so
+it is trivially auditable against the paper's equations:
+
+* Eq. 1      -> :func:`conv_fwd_ref`
+* Eq. 3/4/5  -> :func:`conv_bwd_ref` (via ``jax.vjp`` of the forward)
+* img2col    -> :func:`im2col_ref`
+* col2img    -> :func:`col2img_ref`
+* channel importance (Fig. 1a "abs + spatial mean") -> :func:`importance_ref`
+* exact-k top-k mask   -> :func:`topk_mask_ref`
+* compacted backward (the shrunk matmuls of Sec. "Scheduled Sparse BP")
+                       -> :func:`sparse_bwd_compact_ref`
+
+The pytest suite asserts ``assert_allclose(pallas_kernel(...), *_ref(...))``
+over hypothesis-generated shapes/dtypes, which is the core L1 signal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# convolution forward / backward (dense reference)
+# ---------------------------------------------------------------------------
+
+DIMS = ("NCHW", "OIHW", "NCHW")  # paper's layout throughout
+
+
+def conv_fwd_ref(x, w, b=None, *, stride=1, padding=0):
+    """Eq. 1 — dense conv forward in NCHW/OIHW, square kernel/stride/pad."""
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=DIMS,
+    )
+    if b is not None:
+        y = y + b[None, :, None, None]
+    return y
+
+
+def conv_bwd_ref(x, w, g, *, stride=1, padding=0):
+    """Eq. 3/4/5 — exact dense gradients (dx, dw, db) via jax.vjp."""
+    _, vjp = jax.vjp(
+        lambda xx, ww: conv_fwd_ref(xx, ww, None, stride=stride, padding=padding), x, w
+    )
+    dx, dw = vjp(g)
+    db = jnp.sum(g, axis=(0, 2, 3))
+    return dx, dw, db
+
+
+# ---------------------------------------------------------------------------
+# img2col / col2img (paper Fig. 1b)
+# ---------------------------------------------------------------------------
+
+def out_size(h: int, k: int, stride: int, padding: int) -> int:
+    return (h + 2 * padding - k) // stride + 1
+
+
+def im2col_ref(x, *, k: int, stride: int = 1, padding: int = 0):
+    """(Bt,Cin,H,W) -> col_X of shape (Bt*Hout*Wout, Cin*K*K).
+
+    Row (b, i, j) is the flattened Cin x K x K patch under output pixel
+    (i, j) — exactly the stretching of Fig. 1(b).
+    """
+    bt, cin, h, w = x.shape
+    ho, wo = out_size(h, k, stride, padding), out_size(w, k, stride, padding)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (padding, padding), (padding, padding)))
+    ri = jnp.arange(ho)[:, None] * stride + jnp.arange(k)[None, :]  # (ho,k)
+    ci = jnp.arange(wo)[:, None] * stride + jnp.arange(k)[None, :]  # (wo,k)
+    # patches: (bt, cin, ho, k, wo, k)
+    p = xp[:, :, ri[:, :, None, None], ci[None, None, :, :]]
+    # -> (bt, ho, wo, cin, k, k) -> (bt*ho*wo, cin*k*k)
+    p = jnp.transpose(p, (0, 2, 4, 1, 3, 5))
+    return p.reshape(bt * ho * wo, cin * k * k)
+
+
+def col2img_ref(cols, *, x_shape, k: int, stride: int = 1, padding: int = 0):
+    """Inverse of im2col: scatter-add (Bt*Hout*Wout, Cin*K*K) back to x_shape."""
+    bt, cin, h, w = x_shape
+    ho, wo = out_size(h, k, stride, padding), out_size(w, k, stride, padding)
+    hp, wp = h + 2 * padding, w + 2 * padding
+    p = cols.reshape(bt, ho, wo, cin, k, k)
+    ri = (jnp.arange(ho)[:, None] * stride + jnp.arange(k)[None, :]).reshape(-1)  # (ho*k,)
+    ci = (jnp.arange(wo)[:, None] * stride + jnp.arange(k)[None, :]).reshape(-1)  # (wo*k,)
+    p = jnp.transpose(p, (0, 3, 1, 4, 2, 5)).reshape(bt, cin, ho * k, wo * k)
+    xp = jnp.zeros((bt, cin, hp, wp), cols.dtype)
+    xp = xp.at[:, :, ri[:, None], ci[None, :]].add(p)
+    if padding:
+        xp = xp[:, :, padding:-padding, padding:-padding]
+    return xp
+
+
+def col_w_ref(w):
+    """(Cout,Cin,K,K) -> col_W (Cin*K*K, Cout), matching im2col row layout."""
+    cout = w.shape[0]
+    return w.reshape(cout, -1).T
+
+
+def conv_fwd_im2col_ref(x, w, b=None, *, stride=1, padding=0):
+    """Forward through the explicit img2col matmul — must equal conv_fwd_ref."""
+    bt, cin, h, wd = x.shape
+    cout, _, k, _ = w.shape
+    ho, wo = out_size(h, k, stride, padding), out_size(wd, k, stride, padding)
+    cols = im2col_ref(x, k=k, stride=stride, padding=padding)
+    y = cols @ col_w_ref(w)  # (Bt*Ho*Wo, Cout)
+    if b is not None:
+        y = y + b[None, :]
+    return jnp.transpose(y.reshape(bt, ho, wo, cout), (0, 3, 1, 2))
+
+
+# ---------------------------------------------------------------------------
+# ssProp selection primitives
+# ---------------------------------------------------------------------------
+
+def importance_ref(g, mode: str = "channel"):
+    """Fig. 1(a): abs then mean over the non-selected dims.
+
+    mode='channel' -> (Cout,)     mean over (Bt, H, W)  [paper's deployed mode]
+    mode='hw'      -> (H*W,)      mean over (Bt, Cout)
+    mode='all'     -> (Cout*H*W,) mean over Bt
+    """
+    a = jnp.abs(g)
+    if mode == "channel":
+        return jnp.mean(a, axis=(0, 2, 3))
+    if mode == "hw":
+        return jnp.mean(a, axis=(0, 1)).reshape(-1)
+    if mode == "all":
+        return jnp.mean(a, axis=0).reshape(-1)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def topk_mask_ref(imp, keep_k):
+    """Exact-k {0,1} mask keeping the k largest entries.
+
+    Deterministic under ties via stable argsort rank. ``keep_k`` may be a
+    traced scalar (the masked train step computes it from the runtime
+    drop-rate input), so no output shape depends on it.
+    """
+    n = imp.shape[0]
+    order = jnp.argsort(-imp)  # stable; descending
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    return (ranks < keep_k).astype(imp.dtype)
+
+
+def random_mask_ref(key, n, keep_k, dtype=jnp.float32):
+    """Random-selection baseline of Fig. 2(b): keep k uniformly random entries."""
+    ranks = jax.random.permutation(key, jnp.arange(n, dtype=jnp.int32))
+    return (ranks < keep_k).astype(dtype)
+
+
+def keep_k_from_drop_rate(drop_rate, n: int):
+    """k = clamp(round((1-D)*n), 1, n) — shared rust/python semantics."""
+    kf = jnp.round((1.0 - drop_rate) * n)
+    return jnp.clip(kf, 1, n).astype(jnp.int32)
+
+
+def mask_grad_ref(g, mask, mode: str = "channel"):
+    """Broadcast a selection mask back onto the gradient map."""
+    bt, c, h, w = g.shape
+    if mode == "channel":
+        return g * mask[None, :, None, None]
+    if mode == "hw":
+        return g * mask.reshape(1, 1, h, w)
+    if mode == "all":
+        return g * mask.reshape(1, c, h, w)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# compacted (true-sparse) backward — the shrunk matmuls
+# ---------------------------------------------------------------------------
+
+def sparse_bwd_compact_ref(x, w, g, keep_idx, *, stride=1, padding=0):
+    """Paper's compacted img2col backward with static keep indices.
+
+    col[dY]' has shape (Bt*Ho*Wo, k') after channel compaction; then
+      dW'      = col_X^T  @ col[dY]'          (N x k')
+      col[dX]  = col[dY]' @ col_W'^T          (M x N)
+      db'      = sum over M of col[dY]'
+    Dropped channels receive exactly-zero dW/db rows; dX gets only kept
+    channels' contributions — identical numerics to the masked path.
+    """
+    bt, cin, h, wd = x.shape
+    cout, _, k, _ = w.shape
+    ho, wo = out_size(h, k, stride, padding), out_size(wd, k, stride, padding)
+    cols = im2col_ref(x, k=k, stride=stride, padding=padding)            # (M, N)
+    gc = jnp.transpose(g, (0, 2, 3, 1)).reshape(bt * ho * wo, cout)      # col[dY]
+    gck = jnp.take(gc, keep_idx, axis=1)                                 # (M, k')
+    cw = col_w_ref(w)                                                    # (N, Cout)
+    cwk = jnp.take(cw, keep_idx, axis=1)                                 # (N, k')
+    dwk = cols.T @ gck                                                   # (N, k')
+    dw = jnp.zeros((cin * k * k, cout), cols.dtype).at[:, keep_idx].set(dwk)
+    dw = jnp.transpose(dw, (1, 0)).reshape(cout, cin, k, k)
+    dcols = gck @ cwk.T                                                  # (M, N)
+    dx = col2img_ref(dcols, x_shape=x.shape, k=k, stride=stride, padding=padding)
+    db = jnp.zeros((cout,), g.dtype).at[keep_idx].set(jnp.sum(gck, axis=0))
+    return dx, dw, db
+
+
+# ---------------------------------------------------------------------------
+# FLOPs model (paper Eq. 6/7/8/10) — mirrored in rust/src/flops; tested equal
+# ---------------------------------------------------------------------------
+
+def conv_bwd_flops(bt, cin, cout, k, ho, wo, drop_rate=0.0, with_selection=False):
+    """Eq. 6, and Eq. 9's RHS when drop_rate > 0 / selection enabled."""
+    m = bt * ho * wo
+    n = cin * k * k
+    if drop_rate == 0.0 and not with_selection:
+        return float(m * (4 * n + 1) * cout)
+    keep = max(1, round((1.0 - drop_rate) * cout))
+    fl = float(4 * m * n + m) * keep  # (4MN+M)*C'out — Eq. 9 RHS first term
+    if with_selection:
+        fl += float(m - 1) * cout  # summation overhead of the importance reduce
+    return fl
+
+
+def bn_bwd_flops(bt, c, h, w):
+    """Eq. 7."""
+    return float(12 * (bt * h * w * c) + 10 * c)
+
+
+def dropout_bwd_flops(bt, c, h, w):
+    """Eq. 8."""
+    return float(2 * (bt * h * w * c))
+
+
+def drop_rate_lower_bound(cin, k):
+    """Eq. 10."""
+    return 1.0 / (4 * cin * k * k + 1)

@@ -1,0 +1,150 @@
+"""Shared layers for the L2 model zoo.
+
+All parameters live in nested dicts of jnp arrays; BatchNorm running
+statistics live in a parallel ``state`` dict. Every convolution is an
+:func:`compile.ssprop.ssprop_conv`, so the whole zoo inherits scheduled
+sparse back-propagation from a single runtime ``drop_rate`` scalar.
+
+Initialization is Kaiming-normal (paper: "all models are initialized with
+Kaiming Initialization"), biases zero, BN gamma=1/beta=0.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..ssprop import ConvSpec, ssprop_conv
+
+Params = Dict[str, Any]
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.1
+
+
+# -- init -------------------------------------------------------------------
+
+def kaiming_conv(key, cin: int, cout: int, k: int):
+    fan_in = cin * k * k
+    std = math.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, (cout, cin, k, k), jnp.float32) * std
+
+
+def init_conv(key, cin: int, cout: int, k: int) -> Params:
+    return {"w": kaiming_conv(key, cin, cout, k), "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def init_bn(c: int) -> Params:
+    return {"gamma": jnp.ones((c,), jnp.float32), "beta": jnp.zeros((c,), jnp.float32)}
+
+
+def init_bn_state(c: int) -> Params:
+    return {"mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)}
+
+
+def init_gn(c: int) -> Params:
+    return {"gamma": jnp.ones((c,), jnp.float32), "beta": jnp.zeros((c,), jnp.float32)}
+
+
+def init_dense(key, nin: int, nout: int) -> Params:
+    std = math.sqrt(2.0 / nin)
+    return {
+        "w": jax.random.normal(key, (nin, nout), jnp.float32) * std,
+        "b": jnp.zeros((nout,), jnp.float32),
+    }
+
+
+# -- ops --------------------------------------------------------------------
+
+def conv(p: Params, x, drop_rate, key, *, stride=1, padding=1,
+         mode="channel", select="topk"):
+    spec = ConvSpec(stride=stride, padding=padding, mode=mode, select=select)
+    return ssprop_conv(x, p["w"], p["b"], drop_rate, key, spec)
+
+
+def batchnorm(p: Params, s: Params, x, *, train: bool):
+    """Returns (y, new_state). Running stats update only when train=True."""
+    if train:
+        mu = jnp.mean(x, axis=(0, 2, 3))
+        var = jnp.var(x, axis=(0, 2, 3))
+        new_s = {
+            "mean": (1 - BN_MOMENTUM) * s["mean"] + BN_MOMENTUM * mu,
+            "var": (1 - BN_MOMENTUM) * s["var"] + BN_MOMENTUM * var,
+        }
+    else:
+        mu, var = s["mean"], s["var"]
+        new_s = s
+    inv = jax.lax.rsqrt(var + BN_EPS)
+    y = (x - mu[None, :, None, None]) * inv[None, :, None, None]
+    return y * p["gamma"][None, :, None, None] + p["beta"][None, :, None, None], new_s
+
+
+def groupnorm(p: Params, x, *, groups: int = 4):
+    bt, c, h, w = x.shape
+    g = min(groups, c)
+    xg = x.reshape(bt, g, c // g, h, w)
+    mu = jnp.mean(xg, axis=(2, 3, 4), keepdims=True)
+    var = jnp.var(xg, axis=(2, 3, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + BN_EPS)
+    x = xg.reshape(bt, c, h, w)
+    return x * p["gamma"][None, :, None, None] + p["beta"][None, :, None, None]
+
+
+def dense(p: Params, x):
+    return x @ p["w"] + p["b"]
+
+
+def dropout(x, rate, key):
+    """Inverted dropout with *runtime* rate (0 => identity, exactly)."""
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape).astype(x.dtype)
+    # rate==0 -> keep==1 -> mask==1 and division is exact identity.
+    return jnp.where(rate > 0, x * mask / jnp.maximum(keep, 1e-6), x)
+
+
+def fold_key(key_u32, i: int):
+    """Derive a per-layer (2,) uint32 key from the step key input (cheap
+    Weyl-sequence fold; only consumed by random-select and Dropout)."""
+    return (key_u32 + jnp.asarray([(i * 2654435761) % (2 ** 32), i], jnp.uint32)).astype(jnp.uint32)
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(2, 3))
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# -- FLOPs inventory helpers (mirrors rust/src/flops) -------------------------
+
+def conv_out(h: int, k: int, s: int, p: int) -> int:
+    return (h + 2 * p - k) // s + 1
+
+
+class Inventory:
+    """Records conv/bn/dropout layer geometry while a model is constructed,
+    for the rust-side FLOPs accounting (manifest ``layers`` section)."""
+
+    def __init__(self):
+        self.convs = []      # dicts: cin,cout,k,stride,padding,hin,win,hout,wout
+        self.bns = []        # dicts: c,h,w
+        self.dropouts = []   # dicts: c,h,w
+
+    def conv(self, cin, cout, k, s, p, hin, win):
+        ho, wo = conv_out(hin, k, s, p), conv_out(win, k, s, p)
+        self.convs.append(dict(cin=cin, cout=cout, k=k, stride=s, padding=p,
+                               hin=hin, win=win, hout=ho, wout=wo))
+        return ho, wo
+
+    def bn(self, c, h, w):
+        self.bns.append(dict(c=c, h=h, w=w))
+
+    def dropout(self, c, h, w):
+        self.dropouts.append(dict(c=c, h=h, w=w))
+
+    def as_json(self):
+        return {"convs": self.convs, "bns": self.bns, "dropouts": self.dropouts}

@@ -1,0 +1,131 @@
+"""Tiny DDPM UNet (Ho et al. 2020) with ssProp convolutions.
+
+Matches the paper's generation setup structurally: GroupNorm (excluded from
+the FLOPs accounting, as the paper does), sinusoidal time embedding, residual
+blocks with time injection, one down/up level pair plus a middle block. Every
+convolution is an ssProp conv, so Table 5's sparse DDPM training runs through
+the identical selection path as classification.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+
+def time_embedding(t, dim: int):
+    """Sinusoidal embedding of integer timesteps t (B,) -> (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class UNet:
+    def __init__(self, *, in_ch: int, img: int, base: int = 16,
+                 mode: str = "channel", select: str = "topk"):
+        self.in_ch, self.img, self.base = in_ch, img, base
+        self.mode, self.select = mode, select
+        self.tdim = base * 4
+        c1, c2 = base, base * 2
+        self.c1, self.c2 = c1, c2
+        h2 = img // 2
+        # (name, cin, cout, k, s, p, h) — mirrors inventory
+        self.plan = [
+            ("stem",      in_ch, c1, 3, 1, 1, img),
+            ("d1.conv1",  c1, c1, 3, 1, 1, img),
+            ("d1.conv2",  c1, c1, 3, 1, 1, img),
+            ("down",      c1, c2, 3, 2, 1, img),
+            ("d2.conv1",  c2, c2, 3, 1, 1, h2),
+            ("d2.conv2",  c2, c2, 3, 1, 1, h2),
+            ("mid.conv1", c2, c2, 3, 1, 1, h2),
+            ("mid.conv2", c2, c2, 3, 1, 1, h2),
+            ("up",        c2, c1, 3, 1, 1, img),          # after nearest x2
+            ("u1.conv1",  c1 + c1, c1, 3, 1, 1, img),     # concat skip
+            ("u1.conv2",  c1, c1, 3, 1, 1, img),
+            ("out",       c1, in_ch, 3, 1, 1, img),
+        ]
+        self.res_blocks = ["d1", "d2", "mid", "u1"]
+
+    def inventory(self) -> cm.Inventory:
+        inv = cm.Inventory()
+        for (_, cin, cout, k, s, p, h) in self.plan:
+            inv.conv(cin, cout, k, s, p, h, h)
+        return inv
+
+    def init(self, key):
+        params = {}
+        keys = jax.random.split(key, len(self.plan) + 2 + 2 * len(self.res_blocks) + 2)
+        ki = 0
+        for (name, cin, cout, k, *_rest) in self.plan:
+            params[name] = cm.init_conv(keys[ki], cin, cout, k); ki += 1
+        # time MLP
+        params["tmlp1"] = cm.init_dense(keys[ki], self.tdim, self.tdim); ki += 1
+        params["tmlp2"] = cm.init_dense(keys[ki], self.tdim, self.tdim); ki += 1
+        # per-res-block time projection + the two GroupNorms
+        for rb in self.res_blocks:
+            ch = self.c1 if rb in ("d1", "u1") else self.c2
+            params[f"{rb}.tproj"] = cm.init_dense(keys[ki], self.tdim, ch); ki += 1
+            params[f"{rb}.gn1"] = cm.init_gn(ch)
+            params[f"{rb}.gn2"] = cm.init_gn(ch)
+        params["out.gn"] = cm.init_gn(self.c1)
+        return params, {}  # no BN state in the UNet (GroupNorm is stateless)
+
+    def _res(self, params, rb, x, temb, drop_rate, key, li):
+        ch = x.shape[1]
+        h = cm.groupnorm(params[f"{rb}.gn1"], x)
+        h = cm.silu(h)
+        h = cm.conv(params[f"{rb}.conv1"], h, drop_rate, cm.fold_key(key, li),
+                    stride=1, padding=1, mode=self.mode, select=self.select)
+        h = h + cm.dense(params[f"{rb}.tproj"], temb)[:, :, None, None]
+        h = cm.groupnorm(params[f"{rb}.gn2"], h)
+        h = cm.silu(h)
+        h = cm.conv(params[f"{rb}.conv2"], h, drop_rate, cm.fold_key(key, li + 1),
+                    stride=1, padding=1, mode=self.mode, select=self.select)
+        return x + h
+
+    def apply(self, params, x, t, *, drop_rate, key):
+        """eps prediction: x (B,C,H,W), t (B,) int32 -> (B,C,H,W)."""
+        temb = time_embedding(t, self.tdim)
+        temb = cm.dense(params["tmlp2"], cm.silu(cm.dense(params["tmlp1"], temb)))
+        li = 0
+        h0 = cm.conv(params["stem"], x, drop_rate, cm.fold_key(key, li), stride=1, padding=1,
+                     mode=self.mode, select=self.select); li += 1
+        h1 = self._res(params, "d1", h0, temb, drop_rate, key, li); li += 2
+        hd = cm.conv(params["down"], h1, drop_rate, cm.fold_key(key, li), stride=2, padding=1,
+                     mode=self.mode, select=self.select); li += 1
+        h2 = self._res(params, "d2", hd, temb, drop_rate, key, li); li += 2
+        hm = self._res(params, "mid", h2, temb, drop_rate, key, li); li += 2
+        # upsample (nearest x2) + conv
+        hu = jnp.repeat(jnp.repeat(hm, 2, axis=2), 2, axis=3)
+        hu = cm.conv(params["up"], hu, drop_rate, cm.fold_key(key, li), stride=1, padding=1,
+                     mode=self.mode, select=self.select); li += 1
+        hc = jnp.concatenate([hu, h1], axis=1)
+        hc = cm.conv(params["u1.conv1"], hc, drop_rate, cm.fold_key(key, li), stride=1, padding=1,
+                     mode=self.mode, select=self.select); li += 1
+        h3 = self._res_u1_tail(params, hc, temb, drop_rate, key, li); li += 1
+        out = cm.groupnorm(params["out.gn"], h3)
+        out = cm.silu(out)
+        return cm.conv(params["out"], out, drop_rate, cm.fold_key(key, li), stride=1, padding=1,
+                       mode=self.mode, select=self.select)
+
+    def _res_u1_tail(self, params, x, temb, drop_rate, key, li):
+        h = x + cm.dense(params["u1.tproj"], temb)[:, :, None, None]
+        h = cm.groupnorm(params["u1.gn1"], h)
+        h = cm.silu(h)
+        h = cm.conv(params["u1.conv2"], h, drop_rate, cm.fold_key(key, li),
+                    stride=1, padding=1, mode=self.mode, select=self.select)
+        return cm.groupnorm(params["u1.gn2"], x + h)
+
+
+def make_beta_schedule(timesteps: int, beta_start=1e-4, beta_end=0.02):
+    """Linear beta schedule (Ho et al. 2020); exported to the manifest so the
+    rust sampler (rust/src/ddpm.rs) uses bit-identical constants."""
+    betas = jnp.linspace(beta_start, beta_end, timesteps, dtype=jnp.float32)
+    alphas = 1.0 - betas
+    abar = jnp.cumprod(alphas)
+    return {"betas": betas, "alphas": alphas, "alpha_bar": abar}

@@ -1,0 +1,151 @@
+"""ResNet family (He et al. 2016) with ssProp convolutions.
+
+Configurations used by the paper:
+  * ResNet-18: BasicBlock, (2, 2, 2, 2)
+  * ResNet-26: BasicBlock, (2, 3, 5, 2)   — the iso-FLOPs model of Table 7
+  * ResNet-50: Bottleneck, (3, 4, 6, 3)
+
+``width_mult`` scales all channel counts (default 0.25 for the CPU-PJRT
+testbed; the analytic FLOPs tables are always computed at full width, see
+rust/src/flops). Stems adapt to image size: 3x3/s1 for <=32 px (CIFAR-style),
+5x5/s2 for 64 px. Optional spatial Dropout (runtime rate; 0 = exact identity)
+after each stage implements the paper's "w/ Dropout" rows in Table 6.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+CONFIGS = {
+    "resnet18": ("basic", (2, 2, 2, 2)),
+    "resnet26": ("basic", (2, 3, 5, 2)),
+    "resnet50": ("bottleneck", (3, 4, 6, 3)),
+}
+BASE_WIDTHS = (64, 128, 256, 512)
+EXPANSION = {"basic": 1, "bottleneck": 4}
+
+
+class ResNet:
+    def __init__(self, *, arch: str, in_ch: int, img: int, classes: int,
+                 width_mult: float = 0.25, mode: str = "channel",
+                 select: str = "topk", with_dropout: bool = False):
+        self.arch, self.in_ch, self.img, self.classes = arch, in_ch, img, classes
+        self.mode, self.select, self.with_dropout = mode, select, with_dropout
+        self.block, self.layers = CONFIGS[arch]
+        self.exp = EXPANSION[self.block]
+        self.widths = [max(8, int(w * width_mult)) for w in BASE_WIDTHS]
+        self.width_mult = width_mult
+        if img <= 32:
+            self.stem = dict(k=3, s=1, p=1)
+        else:
+            self.stem = dict(k=5, s=2, p=2)
+        # Build a static plan of every conv: list of dicts with names.
+        self.plan = []
+        self._build_plan()
+
+    # -- static architecture plan --------------------------------------------
+    def _add(self, name, cin, cout, k, s, p, h):
+        ho = cm.conv_out(h, k, s, p)
+        self.plan.append(dict(name=name, cin=cin, cout=cout, k=k, s=s, p=p,
+                              hin=h, hout=ho))
+        return ho
+
+    def _build_plan(self):
+        c = self.widths[0]
+        h = self._add("stem", self.in_ch, c, self.stem["k"], self.stem["s"], self.stem["p"], self.img)
+        cin = c
+        for si, (w, n) in enumerate(zip(self.widths, self.layers)):
+            for bi in range(n):
+                s = 2 if (bi == 0 and si > 0) else 1
+                pre = f"s{si}b{bi}"
+                cout = w * self.exp
+                if self.block == "basic":
+                    h2 = self._add(f"{pre}.conv1", cin, w, 3, s, 1, h)
+                    self._add(f"{pre}.conv2", w, w, 3, 1, 1, h2)
+                    if s != 1 or cin != cout:
+                        self._add(f"{pre}.down", cin, cout, 1, s, 0, h)
+                    h = h2
+                    cin = cout
+                else:
+                    h2 = self._add(f"{pre}.conv1", cin, w, 1, 1, 0, h)
+                    h2 = self._add(f"{pre}.conv2", w, w, 3, s, 1, h2)
+                    self._add(f"{pre}.conv3", w, cout, 1, 1, 0, h2)
+                    if s != 1 or cin != cout:
+                        self._add(f"{pre}.down", cin, cout, 1, s, 0, h)
+                    h = h2
+                    cin = cout
+        self.out_ch, self.out_hw = cin, h
+
+    def inventory(self) -> cm.Inventory:
+        inv = cm.Inventory()
+        for c in self.plan:
+            inv.conv(c["cin"], c["cout"], c["k"], c["s"], c["p"], c["hin"], c["hin"])
+            inv.bn(c["cout"], c["hout"], c["hout"])
+        if self.with_dropout:
+            # one spatial dropout after each stage
+            h = None
+            for si in range(4):
+                last = [c for c in self.plan if c["name"].startswith(f"s{si}b")][-1]
+                inv.dropout(last["cout"], last["hout"], last["hout"])
+        return inv
+
+    # -- params ---------------------------------------------------------------
+    def init(self, key):
+        params, state = {}, {}
+        keys = jax.random.split(key, len(self.plan) + 1)
+        for i, c in enumerate(self.plan):
+            params[c["name"]] = cm.init_conv(keys[i], c["cin"], c["cout"], c["k"])
+            params[c["name"] + ".bn"] = cm.init_bn(c["cout"])
+            state[c["name"] + ".bn"] = cm.init_bn_state(c["cout"])
+        params["fc"] = cm.init_dense(keys[-1], self.out_ch, self.classes)
+        return params, state
+
+    # -- forward ---------------------------------------------------------------
+    def _conv_bn(self, params, state, new_state, name, x, drop_rate, key, i, *,
+                 train, relu=True):
+        c = next(p for p in self.plan if p["name"] == name)
+        x = cm.conv(params[name], x, drop_rate, cm.fold_key(key, i),
+                    stride=c["s"], padding=c["p"], mode=self.mode, select=self.select)
+        x, new_state[name + ".bn"] = cm.batchnorm(params[name + ".bn"], state[name + ".bn"], x, train=train)
+        return jax.nn.relu(x) if relu else x
+
+    def apply(self, params, state, x, *, train: bool, drop_rate, dropout_rate, key):
+        new_state = {}
+        li = 0  # running conv index for key folding
+        x = self._conv_bn(params, state, new_state, "stem", x, drop_rate, key, li, train=train)
+        li += 1
+        cin = self.widths[0]
+        for si, (w, n) in enumerate(zip(self.widths, self.layers)):
+            for bi in range(n):
+                s = 2 if (bi == 0 and si > 0) else 1
+                pre = f"s{si}b{bi}"
+                cout = w * self.exp
+                identity = x
+                if self.block == "basic":
+                    y = self._conv_bn(params, state, new_state, f"{pre}.conv1", x, drop_rate, key, li, train=train); li += 1
+                    y = self._conv_bn(params, state, new_state, f"{pre}.conv2", y, drop_rate, key, li, train=train, relu=False); li += 1
+                else:
+                    y = self._conv_bn(params, state, new_state, f"{pre}.conv1", x, drop_rate, key, li, train=train); li += 1
+                    y = self._conv_bn(params, state, new_state, f"{pre}.conv2", y, drop_rate, key, li, train=train); li += 1
+                    y = self._conv_bn(params, state, new_state, f"{pre}.conv3", y, drop_rate, key, li, train=train, relu=False); li += 1
+                if s != 1 or cin != cout:
+                    identity = self._conv_bn(params, state, new_state, f"{pre}.down", x, drop_rate, key, li, train=train, relu=False); li += 1
+                x = jax.nn.relu(y + identity)
+                cin = cout
+            if self.with_dropout and train:
+                # spatial (channel-wise) dropout, runtime rate
+                bt, c, h, wd = x.shape
+                mask = jax.random.bernoulli(
+                    _threefry(cm.fold_key(key, 1000 + si)), 1.0 - dropout_rate, (bt, c, 1, 1)
+                ).astype(x.dtype)
+                x = jnp.where(dropout_rate > 0,
+                              x * mask / jnp.maximum(1.0 - dropout_rate, 1e-6), x)
+        x = cm.global_avg_pool(x)
+        return cm.dense(params["fc"], x), new_state
+
+
+def _threefry(key_u32):
+    return jax.random.wrap_key_data(key_u32.astype(jnp.uint32), impl="threefry2x32")

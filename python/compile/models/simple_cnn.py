@@ -1,0 +1,64 @@
+"""SimpleCNN-d — the hyperparameter-search model of Fig. 4.
+
+"a simple CNN architecture with a few convolutional layers followed by a
+fully connected layer"; depth ranges 2..11 in the paper's sweep. Channels
+start at ``width`` and double on each stride-2 downsample (every second
+layer), capped so the spatial size never drops below 2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+
+class SimpleCNN:
+    def __init__(self, *, depth: int, in_ch: int, img: int, classes: int,
+                 width: int = 16, mode: str = "channel", select: str = "topk"):
+        assert depth >= 1
+        self.depth, self.in_ch, self.img, self.classes = depth, in_ch, img, classes
+        self.width, self.mode, self.select = width, mode, select
+        # plan: (cin, cout, stride) per layer
+        self.plan = []
+        c, h = in_ch, img
+        w = width
+        for i in range(depth):
+            stride = 2 if (i % 2 == 1 and h > 4) else 1
+            cout = min(w * (2 ** sum(1 for (_, _, s) in self.plan if s == 2)), 128)
+            self.plan.append((c, cout, stride))
+            c = cout
+            h = cm.conv_out(h, 3, stride, 1)
+        self.out_ch, self.out_hw = c, h
+
+    def inventory(self) -> cm.Inventory:
+        inv = cm.Inventory()
+        h = self.img
+        for (cin, cout, s) in self.plan:
+            ho, _ = inv.conv(cin, cout, 3, s, 1, h, h)
+            inv.bn(cout, ho, ho)
+            h = ho
+        return inv
+
+    def init(self, key):
+        params, state = {}, {}
+        keys = jax.random.split(key, self.depth + 1)
+        for i, (cin, cout, _) in enumerate(self.plan):
+            params[f"conv{i}"] = cm.init_conv(keys[i], cin, cout, 3)
+            params[f"bn{i}"] = cm.init_bn(cout)
+            state[f"bn{i}"] = cm.init_bn_state(cout)
+        params["fc"] = cm.init_dense(keys[-1], self.out_ch, self.classes)
+        return params, state
+
+    def apply(self, params, state, x, *, train: bool, drop_rate, dropout_rate, key):
+        del dropout_rate  # SimpleCNN has no Dropout layers
+        new_state = {}
+        for i, (_, _, s) in enumerate(self.plan):
+            lkey = cm.fold_key(key, i)
+            x = cm.conv(params[f"conv{i}"], x, drop_rate, lkey,
+                        stride=s, padding=1, mode=self.mode, select=self.select)
+            x, new_state[f"bn{i}"] = cm.batchnorm(params[f"bn{i}"], state[f"bn{i}"], x, train=train)
+            x = jax.nn.relu(x)
+        x = cm.global_avg_pool(x)
+        return cm.dense(params["fc"], x), new_state

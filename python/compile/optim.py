@@ -1,0 +1,48 @@
+"""Adam / AdamW with state threaded through the AOT step (paper Tables 2/3).
+
+Optimizer state is a pytree ``{"m": like(params), "v": like(params),
+"t": i32 scalar}`` that the rust coordinator feeds back each iteration.
+``lr`` is a runtime scalar input so one executable serves every learning
+rate (Fig. 4's sweep) and any LR schedule the coordinator wants.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+B1, B2, EPS = 0.9, 0.999, 1e-8  # paper: Adam betas (0.9, 0.999)
+ADAMW_WD = 0.01                  # paper: AdamW "default parameters" (torch)
+
+
+def init_opt_state(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, *, weight_decay: float = 0.0):
+    """One Adam(W) step. weight_decay > 0 gives decoupled AdamW."""
+    t = state["t"] + 1
+    tf = t.astype(jnp.float32)
+    bc1 = 1.0 - B1 ** tf
+    bc2 = 1.0 - B2 ** tf
+
+    def upd(p, g, m, v):
+        m2 = B1 * m + (1.0 - B1) * g
+        v2 = B2 * v + (1.0 - B2) * (g * g)
+        step = lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + EPS)
+        p2 = p - step
+        if weight_decay:
+            p2 = p2 - lr * weight_decay * p
+        return p2, m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "t": t}

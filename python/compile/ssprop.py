@@ -1,0 +1,165 @@
+"""ssProp convolution — scheduled sparse back-propagation (paper's core).
+
+Two interchangeable implementations, mirroring the paper's own pair
+("img2col version" and "PyTorch built-in backward version"):
+
+* :func:`ssprop_conv` — **masked, runtime drop rate.** Forward is the dense
+  XLA conv; backward computes the channel importance, builds an exact-k mask
+  from the *runtime scalar* ``drop_rate`` and zeroes dropped channels before
+  the (dense) dW/dX/dB computation. Numerically identical to physically
+  discarding channels; one AOT executable serves every drop rate, selection
+  mode, and scheduler — this is what the L3 coordinator drives for all
+  accuracy experiments.
+
+* :func:`ssprop_conv_pallas` — **compacted, static drop rate.** The true
+  img2col path built from the L1 Pallas kernels: importance reduction,
+  static top-k channel compaction, and the *shrunk* matmuls
+  ``dW' = col_Xᵀ @ col[dY]'`` and ``col[dX] = col[dY]' @ col_W'ᵀ`` that
+  realize the FLOPs saving in the executed graph.
+
+Selection semantics shared by both: k = clamp(round((1-D)·C_out), 1, C_out),
+exact-k by stable rank (ties deterministic). drop_rate == 0 reproduces dense
+training bit-for-bit, which the integration tests assert.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.im2col import col2img, im2col
+from .kernels.importance import channel_importance
+from .kernels.matmul import matmul
+
+
+class ConvSpec(NamedTuple):
+    """Static configuration of one ssProp convolution."""
+
+    stride: int = 1
+    padding: int = 0
+    mode: str = "channel"  # 'channel' | 'hw' | 'all'  (Fig. 2a)
+    select: str = "topk"   # 'topk' | 'random'         (Fig. 2b)
+
+
+# ---------------------------------------------------------------------------
+# masked path (runtime drop rate) — used by every AOT train step
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def ssprop_conv(x, w, b, drop_rate, key, spec: ConvSpec = ConvSpec()):
+    """Dense forward; sparse backward controlled by runtime ``drop_rate``.
+
+    Args:
+      x: (Bt, Cin, H, W) input.
+      w: (Cout, Cin, K, K) filters.  b: (Cout,) bias.
+      drop_rate: f32 scalar in [0, 1) — fraction of gradient channels dropped.
+      key: (2,) uint32 — only consumed when spec.select == 'random'.
+      spec: static conv/selection configuration.
+    """
+    return ref.conv_fwd_ref(x, w, b, stride=spec.stride, padding=spec.padding)
+
+
+def _selection_size(g_shape, mode: str) -> int:
+    _, c, h, w = g_shape
+    return {"channel": c, "hw": h * w, "all": c * h * w}[mode]
+
+
+def _make_mask(g, drop_rate, key, spec: ConvSpec):
+    n = _selection_size(g.shape, spec.mode)
+    keep_k = ref.keep_k_from_drop_rate(drop_rate, n)
+    if spec.select == "topk":
+        imp = ref.importance_ref(g, spec.mode)
+        mask = ref.topk_mask_ref(imp, keep_k)
+    elif spec.select == "random":
+        mask = ref.random_mask_ref(_key_from_u32(key), n, keep_k, g.dtype)
+    else:
+        raise ValueError(f"unknown select {spec.select!r}")
+    return ref.mask_grad_ref(g, mask.astype(g.dtype), spec.mode)
+
+
+def _key_from_u32(key_u32):
+    """(2,) uint32 runtime input -> jax PRNG key (threefry)."""
+    return jax.random.wrap_key_data(key_u32.astype(jnp.uint32), impl="threefry2x32")
+
+
+def _ssprop_fwd(x, w, b, drop_rate, key, spec: ConvSpec):
+    y = ref.conv_fwd_ref(x, w, b, stride=spec.stride, padding=spec.padding)
+    return y, (x, w, drop_rate, key)
+
+
+def _ssprop_bwd(spec: ConvSpec, res, g):
+    x, w, drop_rate, key = res
+    gm = _make_mask(g, drop_rate, key, spec)
+    dx, dw, db = ref.conv_bwd_ref(x, w, gm, stride=spec.stride, padding=spec.padding)
+    # drop_rate and key are non-differentiable controls.
+    return dx, dw, db, jnp.zeros_like(drop_rate), jnp.zeros_like(key)
+
+
+ssprop_conv.defvjp(_ssprop_fwd, _ssprop_bwd)
+
+
+# ---------------------------------------------------------------------------
+# compacted Pallas path (static drop rate) — the true-sparse hot path
+# ---------------------------------------------------------------------------
+
+def _static_keep(cout: int, drop_rate: float) -> int:
+    return int(max(1, min(cout, round((1.0 - drop_rate) * cout))))
+
+
+def make_ssprop_conv_pallas(*, stride=1, padding=0, drop_rate=0.8, interpret=True):
+    """Build a compacted ssProp conv with a *static* drop rate.
+
+    Returns f(x, w, b) -> y whose VJP runs entirely through the L1 Pallas
+    kernels with physically shrunk matmuls (k' = keep channels). Used for the
+    ``*_compact_*`` artifacts and the kernel-level perf benches.
+    """
+
+    @jax.custom_vjp
+    def conv(x, w, b):
+        return _pallas_fwd_impl(x, w, b)
+
+    def _pallas_fwd_impl(x, w, b):
+        bt, cin, h, wd = x.shape
+        cout, _, k, _ = w.shape
+        ho = ref.out_size(h, k, stride, padding)
+        wo = ref.out_size(wd, k, stride, padding)
+        cols = im2col(x, k=k, stride=stride, padding=padding, interpret=interpret)
+        y = matmul(cols, ref.col_w_ref(w), interpret=interpret) + b[None, :]
+        return jnp.transpose(y.reshape(bt, ho, wo, cout), (0, 3, 1, 2))
+
+    def fwd(x, w, b):
+        return _pallas_fwd_impl(x, w, b), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        bt, cin, h, wd = x.shape
+        cout, _, k, _ = w.shape
+        ho = ref.out_size(h, k, stride, padding)
+        wo = ref.out_size(wd, k, stride, padding)
+        keep = _static_keep(cout, drop_rate)
+        imp = channel_importance(g, interpret=interpret)
+        # static-shape top-k indices (sorted for deterministic scatter).
+        # NOTE: argsort rather than lax.top_k — the latter lowers to a
+        # `topk(..., largest=true)` HLO attribute the xla_extension 0.5.1
+        # text parser rejects.
+        idx = jnp.sort(jnp.argsort(-imp)[:keep])
+        cols = im2col(x, k=k, stride=stride, padding=padding, interpret=interpret)
+        gc = jnp.transpose(g, (0, 2, 3, 1)).reshape(bt * ho * wo, cout)
+        gck = jnp.take(gc, idx, axis=1)                      # (M, k') compaction
+        cw = ref.col_w_ref(w)
+        cwk = jnp.take(cw, idx, axis=1)                      # (N, k')
+        dwk = matmul(cols.T, gck, interpret=interpret)       # shrunk GEMM 1
+        dw = jnp.zeros((cin * k * k, cout), x.dtype).at[:, idx].set(dwk)
+        dw = jnp.transpose(dw, (1, 0)).reshape(cout, cin, k, k)
+        dcols = matmul(gck, cwk.T, interpret=interpret)      # shrunk GEMM 2
+        dx = col2img(dcols, x_shape=x.shape, k=k, stride=stride, padding=padding,
+                     interpret=interpret)
+        db = jnp.zeros((cout,), g.dtype).at[idx].set(jnp.sum(gck, axis=0))
+        return dx, dw, db
+
+    conv.defvjp(fwd, bwd)
+    return conv

@@ -1,0 +1,161 @@
+"""AOT step builders — the compute graphs the rust coordinator executes.
+
+Each builder returns ``(fn, example_args, arg_roles, out_roles)`` where
+``fn`` is the jittable step function and the role lists drive the manifest
+(rust maps output leaves back onto next-iteration inputs by name).
+
+Runtime scalars (never baked into the graph): ``lr``, ``drop_rate``,
+``dropout_rate``, the PRNG ``key``. This is what lets ONE executable serve
+every point of Fig. 2's drop-rate sweep, Fig. 4's LR sweep, and every
+scheduler the L3 coordinator implements.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import optim
+from .models.ddpm_unet import UNet, make_beta_schedule
+
+Role = str
+
+
+def _ce_loss(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def _bce_loss(logits, y):
+    yf = y.astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * yf + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    acc = jnp.mean(((logits > 0).astype(jnp.float32) == yf).astype(jnp.float32))
+    return loss, acc
+
+
+def make_classify_steps(model, *, batch: int, loss: str, optimizer: str = "adam"):
+    """Returns (train_fn, train_args, eval_fn, eval_args) + roles via attrs."""
+    wd = optim.ADAMW_WD if optimizer == "adamw" else 0.0
+    img, cin, classes = model.img, model.in_ch, model.classes
+    x = jnp.zeros((batch, cin, img, img), jnp.float32)
+    if loss == "ce":
+        y = jnp.zeros((batch,), jnp.int32)
+        loss_fn = _ce_loss
+    elif loss == "bce":
+        y = jnp.zeros((batch, classes), jnp.float32)
+        loss_fn = _bce_loss
+    else:
+        raise ValueError(loss)
+
+    params0, bn0 = model.init(jax.random.PRNGKey(0))
+    opt0 = optim.init_opt_state(params0)
+    scalars = (jnp.float32(0), jnp.float32(0), jnp.float32(0),
+               jnp.zeros((2,), jnp.uint32))  # lr, drop_rate, dropout_rate, key
+
+    def train_step(params, opt_state, bn_state, xb, yb, lr, drop_rate, dropout_rate, key):
+        def lf(p):
+            logits, new_bn = model.apply(p, bn_state, xb, train=True,
+                                         drop_rate=drop_rate,
+                                         dropout_rate=dropout_rate, key=key)
+            l, a = loss_fn(logits, yb)
+            return l, (new_bn, a)
+
+        (l, (new_bn, a)), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_p, new_opt = optim.adam_update(params, grads, opt_state, lr, weight_decay=wd)
+        return new_p, new_opt, new_bn, l, a
+
+    def eval_step(params, bn_state, xb, yb):
+        logits, _ = model.apply(params, bn_state, xb, train=False,
+                                drop_rate=jnp.float32(0), dropout_rate=jnp.float32(0),
+                                key=jnp.zeros((2,), jnp.uint32))
+        l, a = loss_fn(logits, yb)
+        return l, a
+
+    train_args = (params0, opt0, bn0, x, y) + scalars
+    eval_args = (params0, bn0, x, y)
+    train_roles = ["param", "opt", "bn", "data_x", "data_y", "lr", "drop_rate", "dropout_rate", "key"]
+    train_out_roles = ["param", "opt", "bn", "loss", "acc"]
+    eval_roles = ["param", "bn", "data_x", "data_y"]
+    eval_out_roles = ["loss", "acc"]
+    return dict(train=(train_step, train_args, train_roles, train_out_roles),
+                eval=(eval_step, eval_args, eval_roles, eval_out_roles))
+
+
+def make_ddpm_steps(unet: UNet, *, batch: int, timesteps: int):
+    """DDPM training + denoise graphs (Table 5 / Fig. 3).
+
+    train: samples t ~ U[0,T) and eps ~ N(0,1) from the runtime key,
+           minimizes ||eps - eps_theta(x_t, t)||^2 (Ho et al. 2020, Alg. 1).
+    denoise: eps prediction for the sampler loop (Alg. 2 runs in rust).
+    """
+    sched = make_beta_schedule(timesteps)
+    abar = sched["alpha_bar"]
+    img, cin = unet.img, unet.in_ch
+    x0 = jnp.zeros((batch, cin, img, img), jnp.float32)
+    params0, _ = unet.init(jax.random.PRNGKey(0))
+    opt0 = optim.init_opt_state(params0)
+
+    def train_step(params, opt_state, xb, lr, drop_rate, key):
+        kt = jax.random.wrap_key_data(key, impl="threefry2x32")
+        k1, k2 = jax.random.split(kt)
+        t = jax.random.randint(k1, (batch,), 0, timesteps)
+        eps = jax.random.normal(k2, xb.shape, jnp.float32)
+        ab = abar[t][:, None, None, None]
+        xt = jnp.sqrt(ab) * xb + jnp.sqrt(1.0 - ab) * eps
+
+        def lf(p):
+            pred = unet.apply(p, xt, t, drop_rate=drop_rate, key=key)
+            return jnp.mean((pred - eps) ** 2)
+
+        l, grads = jax.value_and_grad(lf)(params)
+        new_p, new_opt = optim.adam_update(params, grads, opt_state, lr,
+                                           weight_decay=optim.ADAMW_WD)
+        return new_p, new_opt, l
+
+    def denoise_step(params, xt, t):
+        return unet.apply(params, xt, t, drop_rate=jnp.float32(0),
+                          key=jnp.zeros((2,), jnp.uint32))
+
+    train_args = (params0, opt0, x0, jnp.float32(0), jnp.float32(0),
+                  jnp.zeros((2,), jnp.uint32))
+    denoise_args = (params0, x0, jnp.zeros((batch,), jnp.int32))
+    return dict(
+        train=(train_step, train_args, ["param", "opt", "data_x", "lr", "drop_rate", "key"],
+               ["param", "opt", "loss"]),
+        denoise=(denoise_step, denoise_args, ["param", "data_x", "t"], ["eps"]),
+        schedule={k: [float(v) for v in sched[k]] for k in sched},
+    )
+
+
+# ---------------------------------------------------------------------------
+# manifest construction
+# ---------------------------------------------------------------------------
+
+def _leaf_entries(role: Role, tree) -> List[Dict[str, Any]]:
+    out = []
+    dt_names = {"float32": "f32", "int32": "i32", "uint32": "u32"}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = role + jax.tree_util.keystr(path)
+        # works for both concrete arrays and jax.eval_shape's ShapeDtypeStructs
+        out.append({"name": name, "role": role, "shape": list(leaf.shape),
+                    "dtype": dt_names[str(leaf.dtype)]})
+    return out
+
+
+def manifest_io(args: Tuple, roles: List[Role], outs: Tuple, out_roles: List[Role]):
+    """Flattened input/output specs in exactly jax.jit's calling convention
+    order (arg-by-arg, tree-leaf order within each arg)."""
+    inputs, outputs = [], []
+    for role, tree in zip(roles, args):
+        inputs.extend(_leaf_entries(role, tree))
+    for role, tree in zip(out_roles, outs):
+        outputs.extend(_leaf_entries(role, tree))
+    # feeds: map output index -> input index for state that loops back
+    by_name = {e["name"]: i for i, e in enumerate(inputs)}
+    for e in outputs:
+        e["feeds_input"] = by_name.get(e["name"], -1) if e["role"] in ("param", "opt", "bn") else -1
+    return inputs, outputs

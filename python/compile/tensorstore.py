@@ -1,0 +1,61 @@
+"""Tensorstore — the tiny binary tensor-interchange format shared with rust.
+
+Layout (little-endian):
+    8 bytes   magic  b"TSTORE01"
+    u32       header length (bytes)
+    header    JSON: {"tensors": [{"name", "dtype", "shape", "offset", "nbytes"}]}
+    payload   raw tensor bytes, offsets relative to payload start
+
+dtypes: "f32" | "i32" | "u32". The rust reader/writer lives in
+rust/src/tensorstore.rs; round-trip equality is tested on both sides.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+MAGIC = b"TSTORE01"
+DTYPES = {"f32": np.float32, "i32": np.int32, "u32": np.uint32}
+DTYPE_NAMES = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32",
+               np.dtype(np.uint32): "u32"}
+
+
+def write(path: str, tensors: List[Tuple[str, np.ndarray]]) -> None:
+    metas, blobs, off = [], [], 0
+    for name, arr in tensors:
+        shape = list(np.shape(arr))  # before ascontiguousarray: it promotes 0-d to 1-d
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype not in DTYPE_NAMES:
+            raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+        raw = arr.tobytes()
+        metas.append({"name": name, "dtype": DTYPE_NAMES[arr.dtype],
+                      "shape": shape, "offset": off, "nbytes": len(raw)})
+        blobs.append(raw)
+        off += len(raw)
+    header = json.dumps({"tensors": metas}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+
+
+def read(path: str) -> Dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad magic {magic!r}")
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        payload = f.read()
+    out = {}
+    for m in header["tensors"]:
+        dt = DTYPES[m["dtype"]]
+        raw = payload[m["offset"]: m["offset"] + m["nbytes"]]
+        out[m["name"]] = np.frombuffer(raw, dtype=dt).reshape(m["shape"]).copy()
+    return out

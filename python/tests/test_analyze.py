@@ -1,0 +1,50 @@
+"""Static-analysis helpers (compile.analyze)."""
+
+from compile.analyze import gemm_tile_analysis, hlo_op_histogram, ssprop_backward_gemms
+
+
+SAMPLE_HLO = """\
+HloModule test
+
+ENTRY %main (p0: f32[2,2]) -> f32[2,2] {
+  %p0 = f32[2,2]{1,0} parameter(0)
+  %dot.1 = f32[2,2]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %sort.2 = f32[2,2]{1,0} sort(%dot.1), dimensions={1}, to_apply=%cmp
+  ROOT %add.3 = f32[2,2]{1,0} add(%dot.1, %sort.2)
+}
+"""
+
+
+def test_histogram_counts_ops():
+    h = hlo_op_histogram(SAMPLE_HLO)
+    assert h["dot"] == 1
+    assert h["sort"] == 1
+    assert h["add"] == 1
+    assert h["parameter"] == 1
+
+
+def test_tile_analysis_bounds():
+    g = gemm_tile_analysis(100, 100, 100)
+    assert 0 < g["mxu_util"] <= 1.0
+    assert g["vmem_bytes"] > 0
+    # exact-multiple shapes waste nothing
+    g2 = gemm_tile_analysis(256, 256, 256)
+    assert g2["mxu_util"] == 1.0
+
+
+def test_compaction_shrinks_gemm_but_costs_utilization():
+    dense = ssprop_backward_gemms(128, 64, 64, 3, 32, 32, 0.0)
+    sparse = ssprop_backward_gemms(128, 64, 64, 3, 32, 32, 0.8)
+    # dW' output width shrinks 64 -> 13
+    assert dense[0]["gemm"][1] == 64
+    assert sparse[0]["gemm"][1] == 13
+    # real work drops even though tile padding reduces utilization
+    def work(g):
+        m, n, k = g["gemm"]
+        return m * n * k
+    assert work(sparse[0]) < 0.25 * work(dense[0])
+
+
+def test_vmem_within_budget_for_default_blocks():
+    g = gemm_tile_analysis(4096, 4096, 4096)
+    assert g["vmem_bytes"] <= 4 * 1024 * 1024  # fits VMEM with margin

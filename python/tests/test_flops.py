@@ -1,0 +1,45 @@
+"""FLOPs model (Eq. 6/7/8/10) — python mirror; exact parity with rust is
+asserted by rust/tests (both sides compute the same closed forms)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def test_eq6_example():
+    # hand-computed: Bt=2, Hout=Wout=4, Cin=3, K=3, Cout=8
+    m, n = 2 * 4 * 4, 3 * 9
+    assert ref.conv_bwd_flops(2, 3, 8, 3, 4, 4) == m * (4 * n + 1) * 8
+
+
+def test_eq7_eq8_examples():
+    assert ref.bn_bwd_flops(2, 8, 4, 4) == 12 * (2 * 4 * 4 * 8) + 10 * 8
+    assert ref.dropout_bwd_flops(2, 8, 4, 4) == 2 * (2 * 4 * 4 * 8)
+
+
+@settings(max_examples=50, deadline=None)
+@given(bt=st.integers(1, 64), cin=st.integers(1, 64), cout=st.integers(2, 128),
+       k=st.sampled_from([1, 3, 5, 7]), ho=st.integers(1, 32), d=st.floats(0.05, 0.95))
+def test_sparse_flops_below_dense_above_lower_bound(bt, cin, cout, k, ho, d):
+    dense = ref.conv_bwd_flops(bt, cin, cout, k, ho, ho)
+    sparse = ref.conv_bwd_flops(bt, cin, cout, k, ho, ho, drop_rate=d, with_selection=True)
+    lb = ref.drop_rate_lower_bound(cin, k)
+    keep = max(1, round((1.0 - d) * cout))
+    if d > lb and keep < cout and bt * ho * ho > 1:
+        assert sparse < dense
+
+
+def test_lower_bound_eq11():
+    # paper: K>=3, Cin>=1 -> bound <= 1/37 ~ 2.70%
+    assert abs(ref.drop_rate_lower_bound(1, 3) - 1 / 37) < 1e-12
+    assert ref.drop_rate_lower_bound(1, 3) <= 0.027028
+    # larger layers have an even smaller break-even rate
+    assert ref.drop_rate_lower_bound(64, 3) < ref.drop_rate_lower_bound(1, 3)
+
+
+def test_savings_at_paper_config():
+    """80% drop on a typical conv saves ~80% of backward conv FLOPs."""
+    dense = ref.conv_bwd_flops(128, 64, 128, 3, 16, 16)
+    sparse = ref.conv_bwd_flops(128, 64, 128, 3, 16, 16, drop_rate=0.8, with_selection=True)
+    assert 0.79 < 1.0 - sparse / dense < 0.81

@@ -1,0 +1,178 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/strides/padding/dtypes; assert_allclose against the
+reference is the core L1 signal demanded by DESIGN.md §7.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.im2col import col2img, im2col
+from compile.kernels.importance import channel_importance
+from compile.kernels.matmul import matmul, vmem_bytes
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# tiled matmul
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 70),
+       seed=st.integers(0, 2 ** 31))
+def test_matmul_matches_numpy(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    got = np.asarray(matmul(jnp.array(a), jnp.array(b)))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8), (128, 128, 128)])
+def test_matmul_block_shapes(bm, bn, bk):
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(33, 45)).astype(np.float32)
+    b = rng.normal(size=(45, 21)).astype(np.float32)
+    got = np.asarray(matmul(jnp.array(a), jnp.array(b), bm=bm, bn=bn, bk=bk))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_bf16():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(32, 32)).astype(np.float32)
+    b = rng.normal(size=(32, 32)).astype(np.float32)
+    got = matmul(jnp.array(a, jnp.bfloat16), jnp.array(b, jnp.bfloat16))
+    np.testing.assert_allclose(np.asarray(got, np.float32), a @ b, rtol=0.1, atol=0.5)
+
+
+def test_vmem_footprint_within_tpu_budget():
+    # default 128x128x128 f32 tiles must fit VMEM (~16 MiB/core) with margin
+    assert vmem_bytes(128, 128, 128) <= 4 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# im2col / col2img
+# ---------------------------------------------------------------------------
+
+conv_geom = st.tuples(
+    st.integers(1, 3),               # bt
+    st.integers(1, 4),               # cin
+    st.integers(4, 10),              # h
+    st.integers(4, 10),              # w
+    st.sampled_from([1, 2, 3]),      # k
+    st.sampled_from([1, 2]),         # stride
+    st.sampled_from([0, 1]),         # padding
+).filter(lambda t: t[2] + 2 * t[6] >= t[4] and t[3] + 2 * t[6] >= t[4])
+
+
+@settings(**SETTINGS)
+@given(geom=conv_geom, seed=st.integers(0, 2 ** 31))
+def test_im2col_matches_ref(geom, seed):
+    bt, cin, h, w, k, s, p = geom
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.normal(size=(bt, cin, h, w)).astype(np.float32))
+    got = im2col(x, k=k, stride=s, padding=p)
+    want = ref.im2col_ref(x, k=k, stride=s, padding=p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(geom=conv_geom, seed=st.integers(0, 2 ** 31))
+def test_col2img_matches_ref(geom, seed):
+    bt, cin, h, w, k, s, p = geom
+    rng = np.random.default_rng(seed)
+    ho, wo = ref.out_size(h, k, s, p), ref.out_size(w, k, s, p)
+    cols = jnp.array(rng.normal(size=(bt * ho * wo, cin * k * k)).astype(np.float32))
+    got = col2img(cols, x_shape=(bt, cin, h, w), k=k, stride=s, padding=p)
+    want = ref.col2img_ref(cols, x_shape=(bt, cin, h, w), k=k, stride=s, padding=p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_col2img_is_im2col_adjoint():
+    """<im2col(x), c> == <x, col2img(c)> — the defining adjoint property."""
+    rng = np.random.default_rng(3)
+    x = jnp.array(rng.normal(size=(2, 3, 8, 8)).astype(np.float32))
+    k, s, p = 3, 2, 1
+    cols = ref.im2col_ref(x, k=k, stride=s, padding=p)
+    c = jnp.array(rng.normal(size=cols.shape).astype(np.float32))
+    lhs = jnp.sum(cols * c)
+    rhs = jnp.sum(x * ref.col2img_ref(c, x_shape=x.shape, k=k, stride=s, padding=p))
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=1e-4)
+
+
+def test_im2col_forward_equals_lax_conv():
+    rng = np.random.default_rng(4)
+    x = jnp.array(rng.normal(size=(2, 3, 9, 9)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(5, 3, 3, 3)).astype(np.float32))
+    b = jnp.array(rng.normal(size=(5,)).astype(np.float32))
+    y1 = ref.conv_fwd_ref(x, w, b, stride=2, padding=1)
+    y2 = ref.conv_fwd_im2col_ref(x, w, b, stride=2, padding=1)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# channel importance
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(bt=st.integers(1, 4), c=st.integers(1, 20), h=st.integers(1, 9),
+       w=st.integers(1, 9), cb=st.sampled_from([1, 4, 8]), seed=st.integers(0, 2 ** 31))
+def test_importance_matches_ref(bt, c, h, w, cb, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.array(rng.normal(size=(bt, c, h, w)).astype(np.float32))
+    got = channel_importance(g, cb=cb)
+    want = ref.importance_ref(g, "channel")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_importance_nonnegative_and_scale_equivariant():
+    rng = np.random.default_rng(5)
+    g = jnp.array(rng.normal(size=(2, 6, 4, 4)).astype(np.float32))
+    imp = np.asarray(channel_importance(g))
+    assert (imp >= 0).all()
+    imp2 = np.asarray(channel_importance(2.0 * g))
+    np.testing.assert_allclose(imp2, 2.0 * imp, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# selection semantics
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 64), frac=st.floats(0.0, 0.99), seed=st.integers(0, 2 ** 31))
+def test_topk_mask_exact_k(n, frac, seed):
+    rng = np.random.default_rng(seed)
+    imp = jnp.array(rng.normal(size=(n,)).astype(np.float32))
+    k = ref.keep_k_from_drop_rate(jnp.float32(frac), n)
+    mask = np.asarray(ref.topk_mask_ref(imp, k))
+    assert mask.sum() == int(k)
+    # kept entries dominate dropped entries
+    if 0 < int(k) < n:
+        assert np.min(np.asarray(imp)[mask > 0]) >= np.max(np.asarray(imp)[mask == 0]) - 1e-6
+
+
+def test_topk_mask_tie_determinism():
+    imp = jnp.ones((8,), jnp.float32)
+    m1 = np.asarray(ref.topk_mask_ref(imp, jnp.int32(3)))
+    m2 = np.asarray(ref.topk_mask_ref(imp, jnp.int32(3)))
+    assert (m1 == m2).all() and m1.sum() == 3
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 64), k=st.integers(1, 64), seed=st.integers(0, 2 ** 31))
+def test_random_mask_exact_k(n, k, seed):
+    k = min(k, n)
+    mask = np.asarray(ref.random_mask_ref(jax.random.PRNGKey(seed), n, jnp.int32(k)))
+    assert mask.sum() == k
+
+
+def test_keep_k_bounds():
+    assert int(ref.keep_k_from_drop_rate(jnp.float32(0.0), 10)) == 10
+    assert int(ref.keep_k_from_drop_rate(jnp.float32(0.999), 10)) == 1
+    assert int(ref.keep_k_from_drop_rate(jnp.float32(0.8), 10)) == 2
+    assert int(ref.keep_k_from_drop_rate(jnp.float32(0.5), 1)) == 1

@@ -1,0 +1,142 @@
+"""Edge-case and dtype sweeps for the L1 kernels beyond the main suite."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.im2col import col2img, im2col
+from compile.kernels.matmul import matmul
+from compile.ssprop import ConvSpec, make_ssprop_conv_pallas, ssprop_conv
+
+KEY0 = jnp.zeros((2,), jnp.uint32)
+
+
+# -- degenerate geometries ----------------------------------------------------
+
+def test_one_by_one_kernel_conv():
+    """K=1 convs (half of ResNet-50's bottlenecks) through both paths."""
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.normal(size=(2, 4, 6, 6)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(8, 4, 1, 1)).astype(np.float32))
+    b = jnp.zeros((8,), jnp.float32)
+    conv_p = make_ssprop_conv_pallas(stride=1, padding=0, drop_rate=0.5)
+    np.testing.assert_allclose(
+        np.asarray(conv_p(x, w, b)),
+        np.asarray(ref.conv_fwd_ref(x, w, b, stride=1, padding=0)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_single_pixel_output():
+    """Kernel size == input size -> 1x1 output map."""
+    rng = np.random.default_rng(1)
+    x = jnp.array(rng.normal(size=(1, 2, 4, 4)).astype(np.float32))
+    cols = im2col(x, k=4, stride=1, padding=0)
+    assert cols.shape == (1, 2 * 16)
+    np.testing.assert_allclose(np.asarray(cols),
+                               np.asarray(ref.im2col_ref(x, k=4, stride=1, padding=0)),
+                               rtol=1e-6)
+
+
+def test_single_channel_single_batch():
+    rng = np.random.default_rng(2)
+    x = jnp.array(rng.normal(size=(1, 1, 5, 5)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(1, 1, 3, 3)).astype(np.float32))
+    b = jnp.zeros((1,), jnp.float32)
+    spec = ConvSpec(stride=1, padding=1)
+
+    def loss(x, w, b):
+        return jnp.sum(ssprop_conv(x, w, b, jnp.float32(0.9), KEY0, spec) ** 2)
+
+    gx, gw = jax.grad(loss, (0, 1))(x, w, b)
+    # with a single channel, keep_k clamps to 1 -> gradients stay dense
+    assert np.abs(np.asarray(gw)).sum() > 0
+    assert np.isfinite(np.asarray(gx)).all()
+
+
+def test_drop_rate_one_clamps_to_one_channel():
+    rng = np.random.default_rng(3)
+    x = jnp.array(rng.normal(size=(2, 3, 6, 6)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(8, 3, 3, 3)).astype(np.float32))
+    b = jnp.zeros((8,), jnp.float32)
+    spec = ConvSpec(stride=1, padding=1)
+
+    def loss(x, w, b):
+        return jnp.sum(ssprop_conv(x, w, b, jnp.float32(0.9999), KEY0, spec) ** 2)
+
+    gw = jax.grad(loss, 1)(x, w, b)
+    rows = np.abs(np.asarray(gw).reshape(8, -1)).sum(axis=1)
+    assert (rows > 0).sum() == 1  # exactly one kept channel
+
+
+# -- dtype robustness ---------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(4, 40), k=st.integers(4, 40), n=st.integers(4, 40))
+def test_matmul_bf16_tolerance(m, k, n):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    got = np.asarray(matmul(jnp.array(a, jnp.bfloat16), jnp.array(b, jnp.bfloat16)),
+                     dtype=np.float32)
+    # bf16 inputs, f32 accumulation: error bounded by input rounding
+    np.testing.assert_allclose(got, a @ b, rtol=0.05, atol=0.3 * np.sqrt(k))
+
+
+def test_im2col_preserves_dtype():
+    x = jnp.ones((1, 2, 5, 5), jnp.bfloat16)
+    assert im2col(x, k=3, stride=1, padding=1).dtype == jnp.bfloat16
+    cols = jnp.ones((25, 18), jnp.bfloat16)
+    assert col2img(cols, x_shape=(1, 2, 5, 5), k=3, stride=1, padding=1).dtype == jnp.bfloat16
+
+
+# -- gradient-selection invariants under transformations -----------------------
+
+def test_mask_invariant_to_gradient_scaling():
+    """Top-k selection is scale-invariant: 2*g selects the same channels."""
+    rng = np.random.default_rng(5)
+    g = jnp.array(rng.normal(size=(2, 12, 4, 4)).astype(np.float32))
+    k = jnp.int32(3)
+    m1 = ref.topk_mask_ref(ref.importance_ref(g), k)
+    m2 = ref.topk_mask_ref(ref.importance_ref(2.0 * g), k)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+def test_mask_permutation_equivariance():
+    """Permuting channels permutes the mask identically."""
+    rng = np.random.default_rng(6)
+    g = jnp.array(rng.normal(size=(2, 10, 4, 4)).astype(np.float32))
+    perm = jnp.array(rng.permutation(10))
+    k = jnp.int32(4)
+    m = ref.topk_mask_ref(ref.importance_ref(g), k)
+    mp = ref.topk_mask_ref(ref.importance_ref(g[:, perm]), k)
+    np.testing.assert_array_equal(np.asarray(m)[np.asarray(perm)], np.asarray(mp))
+
+
+def test_compact_ref_with_unsorted_vs_sorted_indices():
+    """Scatter of dW' is order-independent."""
+    rng = np.random.default_rng(7)
+    x = jnp.array(rng.normal(size=(1, 2, 6, 6)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(6, 2, 3, 3)).astype(np.float32))
+    g = jnp.array(rng.normal(size=(1, 6, 6, 6)).astype(np.float32))
+    idx_sorted = jnp.array([1, 3, 5])
+    idx_unsorted = jnp.array([5, 1, 3])
+    a = ref.sparse_bwd_compact_ref(x, w, g, idx_sorted, stride=1, padding=1)
+    b = ref.sparse_bwd_compact_ref(x, w, g, idx_unsorted, stride=1, padding=1)
+    for ta, tb in zip(a, b):
+        np.testing.assert_allclose(np.asarray(ta), np.asarray(tb), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("stride,padding", [(1, 0), (2, 1), (3, 2)])
+def test_pallas_fwd_strides_and_pads(stride, padding):
+    rng = np.random.default_rng(8)
+    x = jnp.array(rng.normal(size=(2, 3, 11, 11)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(4, 3, 3, 3)).astype(np.float32))
+    b = jnp.array(rng.normal(size=(4,)).astype(np.float32))
+    conv_p = make_ssprop_conv_pallas(stride=stride, padding=padding, drop_rate=0.0)
+    np.testing.assert_allclose(
+        np.asarray(conv_p(x, w, b)),
+        np.asarray(ref.conv_fwd_ref(x, w, b, stride=stride, padding=padding)),
+        rtol=1e-4, atol=1e-4)

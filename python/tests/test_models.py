@@ -1,0 +1,151 @@
+"""L2 model zoo: shapes, finiteness, BN state, inventory consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import compile.ssprop as ssprop_mod
+from compile.models.ddpm_unet import UNet, make_beta_schedule, time_embedding
+from compile.models.resnet import ResNet
+from compile.models.simple_cnn import SimpleCNN
+
+KEY0 = jnp.zeros((2,), jnp.uint32)
+D0 = jnp.float32(0)
+
+
+def _apply(model, x, train=True, drop=0.0, dropout=0.0):
+    params, state = model.init(jax.random.PRNGKey(0))
+    return model.apply(params, state, x, train=train, drop_rate=jnp.float32(drop),
+                       dropout_rate=jnp.float32(dropout), key=KEY0)
+
+
+@pytest.mark.parametrize("depth", [1, 2, 5, 8, 11])
+def test_simple_cnn_shapes(depth):
+    m = SimpleCNN(depth=depth, in_ch=3, img=32, classes=100)
+    x = jnp.zeros((4, 3, 32, 32))
+    logits, new_state = _apply(m, x)
+    assert logits.shape == (4, 100)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert len(new_state) == depth
+
+
+@pytest.mark.parametrize("arch,img,cin", [
+    ("resnet18", 32, 3), ("resnet26", 32, 3), ("resnet50", 32, 3),
+    ("resnet18", 28, 1), ("resnet50", 64, 3),
+])
+def test_resnet_shapes(arch, img, cin):
+    m = ResNet(arch=arch, in_ch=cin, img=img, classes=10, width_mult=0.125)
+    x = jnp.zeros((2, cin, img, img))
+    logits, _ = _apply(m, x)
+    assert logits.shape == (2, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_resnet_conv_counts():
+    # paper topologies: 18 = 17 convs + fc (incl. 3 downsample 1x1 at 32px stem),
+    # verify against the static plan rather than magic numbers:
+    for arch, nblocks, per in (("resnet18", (2, 2, 2, 2), 2), ("resnet26", (2, 3, 5, 2), 2)):
+        m = ResNet(arch=arch, in_ch=3, img=32, classes=10)
+        base = 1 + per * sum(nblocks)          # stem + block convs
+        downs = 3                              # stages 1..3 change stride/width
+        assert len(m.plan) == base + downs
+    m50 = ResNet(arch="resnet50", in_ch=3, img=32, classes=10)
+    assert len(m50.plan) == 1 + 3 * 16 + 4     # bottleneck: stage0 also projects
+
+
+def test_inventory_matches_applied_convs(monkeypatch):
+    """Every ssprop_conv call during apply() must appear in the inventory."""
+    calls = []
+    orig = ssprop_mod.ssprop_conv
+
+    def counting(x, w, b, d, k, spec=ssprop_mod.ConvSpec()):
+        calls.append((x.shape, w.shape, spec.stride, spec.padding))
+        return orig(x, w, b, d, k, spec)
+
+    for model in (SimpleCNN(depth=4, in_ch=3, img=32, classes=10),
+                  ResNet(arch="resnet18", in_ch=3, img=32, classes=10, width_mult=0.25)):
+        calls.clear()
+        import compile.models.common as cm
+        monkeypatch.setattr(cm, "ssprop_conv", counting)
+        _apply(model, jnp.zeros((2, 3, 32, 32)))
+        inv = model.inventory()
+        assert len(calls) == len(inv.convs)
+        for (xshape, wshape, s, p), c in zip(calls, inv.convs):
+            assert xshape[1] == c["cin"] and wshape[0] == c["cout"]
+            assert wshape[2] == c["k"] and s == c["stride"] and p == c["padding"]
+            assert xshape[2] == c["hin"]
+
+
+def test_bn_state_updates_in_train_only():
+    m = SimpleCNN(depth=2, in_ch=1, img=28, classes=10)
+    params, state = m.init(jax.random.PRNGKey(1))
+    x = jnp.array(np.random.default_rng(0).normal(size=(8, 1, 28, 28)), jnp.float32)
+    _, st_train = m.apply(params, state, x, train=True, drop_rate=D0,
+                          dropout_rate=D0, key=KEY0)
+    _, st_eval = m.apply(params, state, x, train=False, drop_rate=D0,
+                         dropout_rate=D0, key=KEY0)
+    assert not np.allclose(np.asarray(st_train["bn0"]["mean"]), np.asarray(state["bn0"]["mean"]))
+    np.testing.assert_array_equal(np.asarray(st_eval["bn0"]["mean"]),
+                                  np.asarray(state["bn0"]["mean"]))
+
+
+def test_resnet_dropout_identity_at_zero_rate():
+    m = ResNet(arch="resnet50", in_ch=3, img=32, classes=10, width_mult=0.125,
+               with_dropout=True)
+    params, state = m.init(jax.random.PRNGKey(2))
+    x = jnp.array(np.random.default_rng(1).normal(size=(2, 3, 32, 32)), jnp.float32)
+    y0, _ = m.apply(params, state, x, train=True, drop_rate=D0,
+                    dropout_rate=jnp.float32(0), key=KEY0)
+    y1, _ = m.apply(params, state, x, train=True, drop_rate=D0,
+                    dropout_rate=jnp.float32(0), key=jnp.asarray([5, 6], jnp.uint32))
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    y2, _ = m.apply(params, state, x, train=True, drop_rate=D0,
+                    dropout_rate=jnp.float32(0.5), key=KEY0)
+    assert not np.allclose(np.asarray(y0), np.asarray(y2))
+
+
+# -- DDPM --------------------------------------------------------------------
+
+def test_unet_shapes_and_finiteness():
+    for cin, img in ((1, 28), (3, 64)):
+        u = UNet(in_ch=cin, img=img, base=8)
+        params, _ = u.init(jax.random.PRNGKey(0))
+        x = jnp.array(np.random.default_rng(0).normal(size=(2, cin, img, img)), jnp.float32)
+        t = jnp.array([0, 5], jnp.int32)
+        eps = u.apply(params, x, t, drop_rate=D0, key=KEY0)
+        assert eps.shape == x.shape
+        assert np.isfinite(np.asarray(eps)).all()
+
+
+def test_time_embedding_distinct_and_bounded():
+    t = jnp.arange(10, dtype=jnp.int32)
+    e = np.asarray(time_embedding(t, 32))
+    assert e.shape == (10, 32)
+    assert np.abs(e).max() <= 1.0 + 1e-6
+    assert np.linalg.matrix_rank(e) > 1
+
+
+def test_beta_schedule_monotone():
+    s = make_beta_schedule(100)
+    betas, abar = np.asarray(s["betas"]), np.asarray(s["alpha_bar"])
+    assert (np.diff(betas) > 0).all()
+    assert (np.diff(abar) < 0).all()
+    assert 0 < abar[-1] < abar[0] < 1
+
+
+def test_unet_inventory_matches_convs(monkeypatch):
+    calls = []
+    orig = ssprop_mod.ssprop_conv
+
+    def counting(x, w, b, d, k, spec=ssprop_mod.ConvSpec()):
+        calls.append(x.shape)
+        return orig(x, w, b, d, k, spec)
+
+    import compile.models.common as cm
+    monkeypatch.setattr(cm, "ssprop_conv", counting)
+    u = UNet(in_ch=1, img=28, base=8)
+    params, _ = u.init(jax.random.PRNGKey(0))
+    u.apply(params, jnp.zeros((2, 1, 28, 28)), jnp.zeros((2,), jnp.int32),
+            drop_rate=D0, key=KEY0)
+    assert len(calls) == len(u.inventory().convs)

@@ -1,0 +1,164 @@
+"""ssProp convolution semantics: masked path, compacted Pallas path, modes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.ssprop import ConvSpec, make_ssprop_conv_pallas, ssprop_conv
+
+KEY0 = jnp.zeros((2,), jnp.uint32)
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _mk(seed, bt=2, cin=3, cout=8, h=8, k=3):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.normal(size=(bt, cin, h, h)).astype(np.float32))
+    w = jnp.array(rng.normal(size=(cout, cin, k, k)).astype(np.float32)) * 0.2
+    b = jnp.array(rng.normal(size=(cout,)).astype(np.float32)) * 0.1
+    return x, w, b
+
+
+def _loss(spec, d, key=KEY0):
+    def f(x, w, b):
+        y = ssprop_conv(x, w, b, jnp.float32(d), key, spec)
+        return jnp.sum(jnp.sin(y) * y)
+    return f
+
+
+def test_forward_equals_dense_conv():
+    x, w, b = _mk(0)
+    spec = ConvSpec(stride=1, padding=1)
+    y = ssprop_conv(x, w, b, jnp.float32(0.8), KEY0, spec)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(ref.conv_fwd_ref(x, w, b, stride=1, padding=1)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_drop_zero_equals_dense_grads():
+    """D=0 must reproduce dense back-prop bit-for-bit (bar scheduler's dense epochs)."""
+    x, w, b = _mk(1)
+    spec = ConvSpec(stride=1, padding=1)
+    gx, gw, gb = jax.grad(_loss(spec, 0.0), (0, 1, 2))(x, w, b)
+
+    def dense(x, w, b):
+        y = ref.conv_fwd_ref(x, w, b, stride=1, padding=1)
+        return jnp.sum(jnp.sin(y) * y)
+
+    dx, dw, db = jax.grad(dense, (0, 1, 2))(x, w, b)
+    np.testing.assert_array_equal(np.asarray(gx), np.asarray(dx))
+    np.testing.assert_array_equal(np.asarray(gw), np.asarray(dw))
+    np.testing.assert_array_equal(np.asarray(gb), np.asarray(db))
+
+
+@settings(**SETTINGS)
+@given(d=st.floats(0.05, 0.95), stride=st.sampled_from([1, 2]),
+       padding=st.sampled_from([0, 1]), seed=st.integers(0, 2 ** 31))
+def test_masked_grads_match_manual_masking(d, stride, padding, seed):
+    x, w, b = _mk(seed)
+    spec = ConvSpec(stride=stride, padding=padding)
+    gx, gw, gb = jax.grad(_loss(spec, d), (0, 1, 2))(x, w, b)
+
+    # manual: dense output grad, mask top-k channels, dense backward
+    def fwd(x, w, b):
+        return ref.conv_fwd_ref(x, w, b, stride=stride, padding=padding)
+
+    y, vjp = jax.vjp(fwd, x, w, b)
+    g = jnp.cos(y) * y + jnp.sin(y)
+    mask = ref.topk_mask_ref(ref.importance_ref(g),
+                             ref.keep_k_from_drop_rate(jnp.float32(d), g.shape[1]))
+    gm = ref.mask_grad_ref(g, mask)
+    mx, mw, mb = vjp(gm)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(mx), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(mw), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(mb), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["hw", "all"])
+def test_alternate_modes_zero_the_right_entries(mode):
+    x, w, b = _mk(2)
+    spec = ConvSpec(stride=1, padding=1, mode=mode)
+    d = 0.6
+
+    def fwd(x, w, b):
+        return ref.conv_fwd_ref(x, w, b, stride=1, padding=1)
+
+    y, vjp = jax.vjp(fwd, x, w, b)
+    g = jnp.cos(y) * y + jnp.sin(y)
+    n = {"hw": g.shape[2] * g.shape[3], "all": g.shape[1] * g.shape[2] * g.shape[3]}[mode]
+    mask = ref.topk_mask_ref(ref.importance_ref(g, mode),
+                             ref.keep_k_from_drop_rate(jnp.float32(d), n))
+    gm = ref.mask_grad_ref(g, mask, mode)
+    mx, mw, mb = vjp(gm)
+    gx, gw, gb = jax.grad(_loss(spec, d), (0, 1, 2))(x, w, b)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(mx), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(mw), rtol=1e-4, atol=1e-4)
+
+
+def test_random_select_differs_from_topk_but_same_sparsity():
+    x, w, b = _mk(3, cout=16)
+    key = jnp.asarray([7, 9], jnp.uint32)
+    d = 0.5
+    gt = jax.grad(_loss(ConvSpec(1, 1, "channel", "topk"), d, key), 1)(x, w, b)
+    gr = jax.grad(_loss(ConvSpec(1, 1, "channel", "random"), d, key), 1)(x, w, b)
+    # per-output-channel dW rows: exactly k' nonzero in both
+    nz_t = np.unique(np.nonzero(np.asarray(gt))[0]).size
+    nz_r = np.unique(np.nonzero(np.asarray(gr))[0]).size
+    assert nz_t == nz_r == 8
+    assert not np.allclose(np.asarray(gt), np.asarray(gr))
+
+
+def test_dropped_channels_get_zero_weight_grads():
+    x, w, b = _mk(4, cout=10)
+    spec = ConvSpec(stride=1, padding=1)
+    gw = jax.grad(_loss(spec, 0.8), 1)(x, w, b)
+    gb = jax.grad(_loss(spec, 0.8), 2)(x, w, b)
+    rows = np.asarray(gw).reshape(10, -1)
+    nonzero_rows = (np.abs(rows).sum(axis=1) > 0).sum()
+    assert nonzero_rows == 2  # keep_k(0.8, 10) = 2
+    assert (np.abs(np.asarray(gb)) > 0).sum() == 2
+
+
+# ---------------------------------------------------------------------------
+# compacted Pallas path
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(d=st.sampled_from([0.0, 0.25, 0.5, 0.8]), stride=st.sampled_from([1, 2]),
+       seed=st.integers(0, 2 ** 31))
+def test_pallas_compact_matches_masked(d, stride, seed):
+    x, w, b = _mk(seed, h=9)
+    conv_p = make_ssprop_conv_pallas(stride=stride, padding=1, drop_rate=d)
+    spec = ConvSpec(stride=stride, padding=1)
+
+    def loss_p(x, w, b):
+        y = conv_p(x, w, b)
+        return jnp.sum(jnp.sin(y) * y)
+
+    np.testing.assert_allclose(
+        np.asarray(conv_p(x, w, b)),
+        np.asarray(ref.conv_fwd_ref(x, w, b, stride=stride, padding=1)),
+        rtol=1e-4, atol=1e-4)
+    px, pw, pb = jax.grad(loss_p, (0, 1, 2))(x, w, b)
+    mx, mw, mb = jax.grad(_loss(spec, d), (0, 1, 2))(x, w, b)
+    np.testing.assert_allclose(np.asarray(px), np.asarray(mx), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(pw), np.asarray(mw), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(pb), np.asarray(mb), rtol=1e-3, atol=1e-4)
+
+
+def test_compact_ref_matches_masked_ref():
+    """sparse_bwd_compact_ref (shrunk matmuls) == masked dense backward."""
+    x, w, b = _mk(6, cout=12)
+    y = ref.conv_fwd_ref(x, w, b, stride=1, padding=1)
+    g = jnp.tanh(y)
+    imp = ref.importance_ref(g)
+    k = int(ref.keep_k_from_drop_rate(jnp.float32(0.5), 12))
+    idx = jnp.sort(jnp.argsort(-imp)[:k])
+    cx, cw, cb_ = ref.sparse_bwd_compact_ref(x, w, g, idx, stride=1, padding=1)
+    gm = ref.mask_grad_ref(g, ref.topk_mask_ref(imp, jnp.int32(k)))
+    mx, mw, mb = ref.conv_bwd_ref(x, w, gm, stride=1, padding=1)
+    np.testing.assert_allclose(np.asarray(cx), np.asarray(mx), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cw), np.asarray(mw), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(cb_), np.asarray(mb), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,42 @@
+"""Tensorstore format: python round-trip (rust side tested in cargo)."""
+
+import numpy as np
+import pytest
+
+from compile import tensorstore as ts
+
+
+def test_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = [
+        ("param.w", rng.normal(size=(3, 4, 5)).astype(np.float32)),
+        ("param.b", np.arange(7, dtype=np.int32)),
+        ("key", np.array([1, 2], dtype=np.uint32)),
+        ("scalar", np.float32(3.5).reshape(())),
+    ]
+    p = tmp_path / "t.tstore"
+    ts.write(str(p), tensors)
+    back = ts.read(str(p))
+    assert set(back) == {n for n, _ in tensors}
+    for name, arr in tensors:
+        np.testing.assert_array_equal(back[name], arr)
+        assert back[name].dtype == arr.dtype
+
+
+def test_empty_shape_and_zero_size(tmp_path):
+    p = tmp_path / "t.tstore"
+    ts.write(str(p), [("empty", np.zeros((0, 3), np.float32))])
+    back = ts.read(str(p))
+    assert back["empty"].shape == (0, 3)
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "bad.tstore"
+    p.write_bytes(b"NOTMAGIC" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        ts.read(str(p))
+
+
+def test_unsupported_dtype_rejected(tmp_path):
+    with pytest.raises(TypeError):
+        ts.write(str(tmp_path / "x.tstore"), [("f64", np.zeros(3, np.float64))])

@@ -1,0 +1,75 @@
+//! Checkpointing: persist/restore the coordinator's state leaves (params,
+//! optimizer moments, BN statistics) as a tensorstore file, plus a JSON
+//! sidecar with the training position. Checkpoints are interchangeable with
+//! the Python side (same format as `*.init.tstore`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{literal_to_tensor, tensor_to_literal};
+use crate::tensorstore;
+use crate::util::json::{num, obj, s, Json};
+
+pub fn save<P: AsRef<Path>>(
+    path: P,
+    state: &HashMap<String, xla::Literal>,
+    artifact: &str,
+    epoch: usize,
+) -> Result<()> {
+    let mut names: Vec<&String> = state.keys().collect();
+    names.sort();
+    let mut tensors = Vec::with_capacity(names.len());
+    for name in names {
+        tensors.push((name.clone(), literal_to_tensor(&state[name])?));
+    }
+    tensorstore::write(path.as_ref(), &tensors)?;
+    let meta = obj(vec![
+        ("artifact", s(artifact)),
+        ("epoch", num(epoch as f64)),
+        ("leaves", num(tensors.len() as f64)),
+    ]);
+    std::fs::write(sidecar(path.as_ref()), meta.to_string())?;
+    Ok(())
+}
+
+pub fn load<P: AsRef<Path>>(path: P) -> Result<(HashMap<String, xla::Literal>, String, usize)> {
+    let mut state = HashMap::new();
+    for (name, t) in tensorstore::read(path.as_ref())? {
+        state.insert(name, tensor_to_literal(&t)?);
+    }
+    let meta_text = std::fs::read_to_string(sidecar(path.as_ref()))
+        .with_context(|| "checkpoint sidecar missing")?;
+    let meta = Json::parse(&meta_text).map_err(anyhow::Error::msg)?;
+    let artifact = meta.str_field("artifact").map_err(anyhow::Error::msg)?.to_string();
+    let epoch = meta.usize_field("epoch").map_err(anyhow::Error::msg)?;
+    Ok((state, artifact, epoch))
+}
+
+fn sidecar(path: &Path) -> std::path::PathBuf {
+    path.with_extension("meta.json")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::f32_literal;
+
+    #[test]
+    fn roundtrip_state() {
+        let dir = std::env::temp_dir().join("ssprop_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ck.tstore");
+        let mut state = HashMap::new();
+        state.insert("param['w']".to_string(), f32_literal(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap());
+        state.insert("opt['m']".to_string(), f32_literal(&[2], &[0.5, -0.5]).unwrap());
+        save(&p, &state, "resnet18_cifar10", 7).unwrap();
+        let (back, artifact, epoch) = load(&p).unwrap();
+        assert_eq!(artifact, "resnet18_cifar10");
+        assert_eq!(epoch, 7);
+        assert_eq!(back.len(), 2);
+        let w = back["param['w']"].to_vec::<f32>().unwrap();
+        assert_eq!(w, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,149 @@
+//! Training metrics: loss/acc curves, FLOPs ledger (dense-equivalent vs
+//! actual under the schedule), wall-clock, and energy estimates.
+
+use std::time::Duration;
+
+use crate::energy::{estimate, DeviceProfile, EnergyReport};
+use crate::runtime::Manifest;
+
+#[derive(Debug, Default, Clone)]
+pub struct TrainMetrics {
+    pub losses: Vec<f64>,
+    pub accs: Vec<f64>,
+    pub drop_rates: Vec<f64>,
+    /// (epoch, test loss, test acc)
+    pub evals: Vec<(usize, f64, f64)>,
+    pub epoch_secs: Vec<f64>,
+    /// Backward FLOPs if every iteration had been dense (Eq. 6).
+    pub flops_dense: f64,
+    /// Backward FLOPs actually incurred under the schedule (Eq. 9).
+    pub flops_actual: f64,
+}
+
+impl TrainMetrics {
+    pub fn record_iter(&mut self, loss: f64, acc: f64, drop_rate: f64, man: &Manifest) {
+        self.losses.push(loss);
+        self.accs.push(acc);
+        self.drop_rates.push(drop_rate);
+        self.flops_dense += man.bwd_flops(0.0);
+        self.flops_actual += man.bwd_flops(drop_rate);
+    }
+
+    pub fn record_epoch(&mut self, wall: Duration) {
+        self.epoch_secs.push(wall.as_secs_f64());
+    }
+
+    pub fn record_eval(&mut self, epoch: usize, loss: f64, acc: f64) {
+        self.evals.push((epoch, loss, acc));
+    }
+
+    pub fn last_epoch_loss(&self, ipe: usize) -> f64 {
+        mean_tail(&self.losses, ipe)
+    }
+
+    pub fn last_epoch_acc(&self, ipe: usize) -> f64 {
+        mean_tail(&self.accs, ipe)
+    }
+
+    pub fn final_test_acc(&self) -> f64 {
+        self.evals.last().map(|e| e.2).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_test_loss(&self) -> f64 {
+        self.evals.last().map(|e| e.1).unwrap_or(f64::NAN)
+    }
+
+    /// Fraction of backward FLOPs saved vs dense training.
+    pub fn flops_saving(&self) -> f64 {
+        if self.flops_dense <= 0.0 {
+            0.0
+        } else {
+            1.0 - self.flops_actual / self.flops_dense
+        }
+    }
+
+    pub fn total_wall_secs(&self) -> f64 {
+        self.epoch_secs.iter().sum()
+    }
+
+    /// Energy the *saved* FLOPs would have cost on `dev`.
+    pub fn energy_saved(&self, dev: &DeviceProfile) -> EnergyReport {
+        estimate(self.flops_dense - self.flops_actual, dev)
+    }
+
+    /// Mean drop rate realized over training (≈ target/2 under bar-2-epoch).
+    pub fn mean_drop_rate(&self) -> f64 {
+        if self.drop_rates.is_empty() {
+            0.0
+        } else {
+            self.drop_rates.iter().sum::<f64>() / self.drop_rates.len() as f64
+        }
+    }
+}
+
+fn mean_tail(v: &[f64], n: usize) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    let tail = &v[v.len().saturating_sub(n)..];
+    tail.iter().sum::<f64>() / tail.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn toy_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{"name":"t","kind":"train","batch":8,
+                "inputs":[],"outputs":[],
+                "layers":{"convs":[{"cin":3,"cout":16,"k":3,"stride":1,"padding":1,
+                                    "hin":8,"win":8,"hout":8,"wout":8}],
+                          "bns":[],"dropouts":[]}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn flops_ledger_tracks_schedule() {
+        let man = toy_manifest();
+        let mut m = TrainMetrics::default();
+        m.record_iter(1.0, 0.1, 0.0, &man);
+        m.record_iter(0.9, 0.2, 0.8, &man);
+        assert!(m.flops_actual < m.flops_dense);
+        let saving = m.flops_saving();
+        assert!(saving > 0.3 && saving < 0.5, "saving {saving}");
+        assert!((m.mean_drop_rate() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_only_run_saves_nothing() {
+        let man = toy_manifest();
+        let mut m = TrainMetrics::default();
+        for _ in 0..4 {
+            m.record_iter(1.0, 0.5, 0.0, &man);
+        }
+        assert_eq!(m.flops_saving(), 0.0);
+    }
+
+    #[test]
+    fn tail_means() {
+        let mut m = TrainMetrics::default();
+        let man = toy_manifest();
+        for (i, l) in [4.0, 3.0, 2.0, 1.0].iter().enumerate() {
+            m.record_iter(*l, i as f64, 0.0, &man);
+        }
+        assert_eq!(m.last_epoch_loss(2), 1.5);
+        assert_eq!(m.last_epoch_acc(2), 2.5);
+    }
+
+    #[test]
+    fn eval_bookkeeping() {
+        let mut m = TrainMetrics::default();
+        m.record_eval(0, 2.0, 0.3);
+        m.record_eval(1, 1.0, 0.6);
+        assert_eq!(m.final_test_acc(), 0.6);
+        assert_eq!(m.final_test_loss(), 1.0);
+    }
+}

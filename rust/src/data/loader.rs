@@ -1,0 +1,176 @@
+//! Batching pipeline: per-epoch seeded shuffling, normalization, and a
+//! prefetch thread with bounded-channel backpressure (the L3 "data plane").
+
+use std::sync::mpsc;
+use std::thread;
+
+use super::{Label, Loss, Split, SynthDataset};
+use crate::util::rng::Pcg;
+
+/// One ready-to-execute batch in the AOT step's layout.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// (batch, C, H, W) flattened.
+    pub x: Vec<f32>,
+    /// CE labels, i32 (empty when loss is BCE).
+    pub y_class: Vec<i32>,
+    /// BCE labels, f32 multi-hot (empty when loss is CE).
+    pub y_multi: Vec<f32>,
+    pub batch_size: usize,
+}
+
+/// Deterministic batch loader. `normalize` applies per-dataset whitening
+/// (mean/std estimated once from the first 64 training examples, mirroring
+/// the paper's per-dataset normalization).
+pub struct Loader {
+    pub ds: SynthDataset,
+    pub split: Split,
+    pub batch_size: usize,
+    mean: f32,
+    std: f32,
+}
+
+impl Loader {
+    pub fn new(ds: SynthDataset, split: Split, batch_size: usize) -> Loader {
+        let (mean, std) = estimate_stats(&ds);
+        Loader { ds, split, batch_size, mean, std }
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.ds.len(self.split) / self.batch_size
+    }
+
+    /// Shuffled example order for `epoch` (bit-reproducible).
+    pub fn epoch_order(&self, epoch: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.ds.len(self.split)).collect();
+        let mut rng = Pcg::new(0x5EED ^ epoch as u64, 7);
+        if self.split == Split::Train {
+            rng.shuffle(&mut idx);
+        }
+        idx
+    }
+
+    pub fn batch(&self, order: &[usize], b: usize) -> Batch {
+        let lo = b * self.batch_size;
+        let ids = &order[lo..lo + self.batch_size];
+        let n = self.ds.spec.channels * self.ds.spec.img * self.ds.spec.img;
+        let mut x = Vec::with_capacity(self.batch_size * n);
+        let mut y_class = Vec::new();
+        let mut y_multi = Vec::new();
+        for &i in ids {
+            let (img, label) = self.ds.example(self.split, i);
+            x.extend(img.iter().map(|v| (v - self.mean) / self.std));
+            match label {
+                Label::Class(c) => y_class.push(c as i32),
+                Label::Multi(bits) => y_multi.extend(bits),
+            }
+        }
+        Batch { x, y_class, y_multi, batch_size: self.batch_size }
+    }
+
+    /// Spawn a prefetch thread producing the epoch's batches with bounded
+    /// lookahead (backpressure: the channel holds at most `depth` batches).
+    pub fn prefetch_epoch(self: &Loader, epoch: usize, depth: usize) -> mpsc::Receiver<Batch>
+    where
+        SynthDataset: Clone,
+    {
+        let (tx, rx) = mpsc::sync_channel(depth);
+        let loader = Loader {
+            ds: self.ds.clone(),
+            split: self.split,
+            batch_size: self.batch_size,
+            mean: self.mean,
+            std: self.std,
+        };
+        thread::spawn(move || {
+            let order = loader.epoch_order(epoch);
+            for b in 0..loader.batches_per_epoch() {
+                let batch = loader.batch(&order, b);
+                if tx.send(batch).is_err() {
+                    return; // consumer dropped — stop generating
+                }
+            }
+        });
+        rx
+    }
+
+    pub fn loss(&self) -> Loss {
+        self.ds.spec.loss
+    }
+}
+
+fn estimate_stats(ds: &SynthDataset) -> (f32, f32) {
+    let mut vals = Vec::new();
+    for i in 0..64.min(ds.spec.train_n) {
+        vals.extend(ds.example(Split::Train, i).0);
+    }
+    let n = vals.len() as f32;
+    let mean = vals.iter().sum::<f32>() / n;
+    let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    (mean, var.sqrt().max(1e-6))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spec;
+
+    fn loader(name: &str, bs: usize) -> Loader {
+        Loader::new(SynthDataset::new(spec(name).unwrap(), 1), Split::Train, bs)
+    }
+
+    #[test]
+    fn batch_shapes_and_normalization() {
+        let l = loader("cifar10", 8);
+        let order = l.epoch_order(0);
+        let b = l.batch(&order, 0);
+        assert_eq!(b.x.len(), 8 * 3 * 32 * 32);
+        assert_eq!(b.y_class.len(), 8);
+        assert!(b.y_multi.is_empty());
+        // normalized data roughly zero-mean unit-var
+        let mean = b.x.iter().sum::<f32>() / b.x.len() as f32;
+        assert!(mean.abs() < 0.3, "mean {mean}");
+    }
+
+    #[test]
+    fn epoch_orders_differ_but_replay() {
+        let l = loader("mnist", 16);
+        let o0 = l.epoch_order(0);
+        let o1 = l.epoch_order(1);
+        assert_ne!(o0, o1);
+        assert_eq!(o0, l.epoch_order(0));
+        let mut sorted = o0.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..l.ds.len(Split::Train)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn val_split_not_shuffled() {
+        let l = Loader::new(SynthDataset::new(spec("mnist").unwrap(), 1), Split::Val, 16);
+        assert_eq!(l.epoch_order(3), (0..512).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bce_batches_have_multi_labels() {
+        let l = loader("celeba", 4);
+        let order = l.epoch_order(0);
+        let b = l.batch(&order, 0);
+        assert_eq!(b.y_multi.len(), 4 * 40);
+        assert!(b.y_class.is_empty());
+    }
+
+    #[test]
+    fn prefetch_matches_sync_path() {
+        let l = loader("mnist", 32);
+        let rx = l.prefetch_epoch(2, 2);
+        let order = l.epoch_order(2);
+        let mut got = 0;
+        for (b, batch) in rx.iter().enumerate() {
+            let sync = l.batch(&order, b);
+            assert_eq!(batch.x, sync.x);
+            assert_eq!(batch.y_class, sync.y_class);
+            got += 1;
+        }
+        assert_eq!(got, l.batches_per_epoch());
+    }
+}

@@ -1,0 +1,116 @@
+//! Synthetic dataset substrate (S14) — stands in for the paper's six
+//! datasets (Table 1) per DESIGN.md §3's substitution rule.
+//!
+//! Every dataset is *procedural*: images are generated deterministically
+//! from (seed, split, index), so there is nothing to download, epochs can
+//! be replayed bit-identically, and the generator doubles as an unbounded
+//! augmentation source. Class structure (oriented sinusoid textures +
+//! class-conditional channel biases + noise) makes the tasks learnable yet
+//! overfittable — the axis Tables 4/6/7 measure.
+
+pub mod loader;
+pub mod synth;
+
+pub use loader::{Batch, Loader};
+pub use synth::SynthDataset;
+
+/// Loss family, mirroring the manifest's `loss` field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Loss {
+    /// Softmax cross-entropy, integer labels.
+    Ce,
+    /// Sigmoid binary cross-entropy, multi-hot labels (CelebA's 40 attrs).
+    Bce,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+/// Geometry + statistics of one dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub channels: usize,
+    pub img: usize,
+    pub classes: usize,
+    pub loss: Loss,
+    /// Paper Table 1 sizes (reported by `ssprop datasets`).
+    pub paper_split: (usize, usize, usize),
+    /// Scaled sizes actually generated on this testbed.
+    pub train_n: usize,
+    pub val_n: usize,
+    pub test_n: usize,
+}
+
+/// Registry mirroring python/compile/aot.py's DATASETS (geometry of Table 1).
+pub fn registry() -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec {
+            name: "mnist", channels: 1, img: 28, classes: 10, loss: Loss::Ce,
+            paper_split: (48_000, 12_000, 10_000), train_n: 2048, val_n: 512, test_n: 512,
+        },
+        DatasetSpec {
+            name: "fashion", channels: 1, img: 28, classes: 10, loss: Loss::Ce,
+            paper_split: (48_000, 12_000, 10_000), train_n: 2048, val_n: 512, test_n: 512,
+        },
+        DatasetSpec {
+            name: "cifar10", channels: 3, img: 32, classes: 10, loss: Loss::Ce,
+            paper_split: (40_000, 10_000, 10_000), train_n: 2048, val_n: 512, test_n: 512,
+        },
+        DatasetSpec {
+            name: "cifar100", channels: 3, img: 32, classes: 100, loss: Loss::Ce,
+            paper_split: (40_000, 10_000, 10_000), train_n: 4096, val_n: 512, test_n: 512,
+        },
+        DatasetSpec {
+            name: "celeba", channels: 3, img: 64, classes: 40, loss: Loss::Bce,
+            paper_split: (162_770, 19_867, 19_962), train_n: 1024, val_n: 256, test_n: 256,
+        },
+        DatasetSpec {
+            name: "imagenet64", channels: 3, img: 64, classes: 100, loss: Loss::Ce,
+            paper_split: (1_281_167, 50_000, 100_000), train_n: 4096, val_n: 512, test_n: 512,
+        },
+    ]
+}
+
+pub fn spec(name: &str) -> Option<DatasetSpec> {
+    registry().into_iter().find(|d| d.name == name)
+}
+
+/// Label for one example.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Label {
+    Class(u32),
+    Multi(Vec<f32>),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_paper_geometry() {
+        let r = registry();
+        assert_eq!(r.len(), 6);
+        let mnist = spec("mnist").unwrap();
+        assert_eq!((mnist.channels, mnist.img, mnist.classes), (1, 28, 10));
+        assert_eq!(mnist.paper_split.0 + mnist.paper_split.1 + mnist.paper_split.2, 70_000);
+        let celeba = spec("celeba").unwrap();
+        assert_eq!(celeba.loss, Loss::Bce);
+        assert_eq!(celeba.classes, 40);
+        let c100 = spec("cifar100").unwrap();
+        assert_eq!(c100.classes, 100);
+        assert_eq!(
+            c100.paper_split.0 + c100.paper_split.1 + c100.paper_split.2,
+            60_000
+        );
+    }
+
+    #[test]
+    fn unknown_dataset_is_none() {
+        assert!(spec("svhn").is_none());
+    }
+}

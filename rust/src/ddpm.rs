@@ -1,0 +1,194 @@
+//! DDPM substrate (S19): β-schedule math and the ancestral sampling loop
+//! (Ho et al. 2020, Alg. 2), driving the AOT `*_denoise` graph through PJRT.
+//!
+//! Training runs through the generic coordinator machinery; only the eps
+//! prediction ε_θ(x_t, t) is a compiled graph — the posterior update runs
+//! in rust with constants exported from the manifest's beta schedule so
+//! both sides are bit-identical.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{run_with_state, TrainMetrics};
+use crate::data::SynthDataset;
+use crate::runtime::{
+    f32_literal, i32_literal, literal_scalar_f32, scalar_f32, tensor_to_literal, u32_literal,
+    Engine, LoadedGraph, Role,
+};
+use crate::schedule::DropScheduler;
+use crate::util::rng::Pcg;
+
+/// DDPM training job (Table 5 rows).
+pub struct DdpmTrainer {
+    pub train_graph: Arc<LoadedGraph>,
+    pub denoise_graph: Arc<LoadedGraph>,
+    pub state: HashMap<String, xla::Literal>,
+    pub ds: SynthDataset,
+    pub metrics: TrainMetrics,
+    pub lr: f64,
+    rng: Pcg,
+}
+
+impl DdpmTrainer {
+    pub fn new(engine: &Engine, dataset: &str, lr: f64, seed: u64) -> Result<DdpmTrainer> {
+        let train_graph = engine.load(&format!("ddpm_{dataset}_train"))?;
+        let denoise_graph = engine.load(&format!("ddpm_{dataset}_denoise"))?;
+        let spec = crate::data::spec(dataset).context("unknown dataset")?;
+        let ds = SynthDataset::new(spec, seed);
+        let mut state = HashMap::new();
+        for (name, t) in engine.load_init(&format!("ddpm_{dataset}_train"))? {
+            state.insert(name, tensor_to_literal(&t)?);
+        }
+        Ok(DdpmTrainer {
+            train_graph,
+            denoise_graph,
+            state,
+            ds,
+            metrics: TrainMetrics::default(),
+            lr,
+            rng: Pcg::new(seed ^ 0xDDD, 13),
+        })
+    }
+
+    /// Train for `iters` iterations under `sched`; returns final loss.
+    pub fn train(&mut self, iters: usize, sched: &DropScheduler) -> Result<f64> {
+        let man = self.train_graph.manifest.clone();
+        let batch = man.batch;
+        let n = man.channels * man.img * man.img;
+        let mut loss = f64::NAN;
+        let t0 = Instant::now();
+        for it in 0..iters {
+            let d = sched.rate_at(it);
+            // assemble a training batch of target images
+            let mut x = Vec::with_capacity(batch * n);
+            for b in 0..batch {
+                let idx = self.rng.below(self.ds.spec.train_n as u64) as usize;
+                let _ = b;
+                x.extend(self.ds.ddpm_example(idx));
+            }
+            let key = self.rng.jax_key();
+            let mut ephemeral: Vec<(usize, xla::Literal)> = Vec::new();
+            for (idx, spec) in man.inputs.iter().enumerate() {
+                let lit = match spec.role {
+                    Role::Param | Role::Opt => continue,
+                    Role::DataX => f32_literal(&spec.shape, &x)?,
+                    Role::Lr => scalar_f32(self.lr as f32)?,
+                    Role::DropRate => scalar_f32(d as f32)?,
+                    Role::Key => u32_literal(&spec.shape, &key)?,
+                    other => bail!("unexpected ddpm train input role {other:?}"),
+                };
+                ephemeral.push((idx, lit));
+            }
+            let outs = run_with_state(&self.train_graph, &self.state, ephemeral)?;
+            for (o, lit) in man.outputs.iter().zip(outs) {
+                if o.feeds_input >= 0 {
+                    self.state.insert(o.name.clone(), lit);
+                } else if o.role == Role::Loss {
+                    loss = literal_scalar_f32(&lit)? as f64;
+                }
+            }
+            self.metrics.record_iter(loss, f64::NAN, d, &man);
+        }
+        self.metrics.record_epoch(t0.elapsed());
+        Ok(loss)
+    }
+
+    /// Ancestral sampling (Alg. 2): returns `batch` images (flattened CHW).
+    pub fn sample(&mut self, seed: u64) -> Result<Vec<Vec<f32>>> {
+        let man = self.denoise_graph.manifest.clone();
+        let tman = &self.train_graph.manifest;
+        let (batch, n) = (man.batch, man.channels * man.img * man.img);
+        let timesteps = tman.timesteps;
+        let abar = &tman.alpha_bar;
+        let betas = &tman.betas;
+        if abar.len() != timesteps || betas.len() != timesteps {
+            bail!("beta schedule missing from manifest");
+        }
+        let mut rng = Pcg::new(seed ^ 0x5A3F, 17);
+        let mut x: Vec<f32> = (0..batch * n).map(|_| rng.normal()).collect();
+        for t in (0..timesteps).rev() {
+            let eps = self.predict_eps(&x, t, batch)?;
+            let alpha_t = 1.0 - betas[t];
+            let abar_t = abar[t];
+            let c1 = 1.0 / alpha_t.sqrt();
+            let c2 = betas[t] / (1.0 - abar_t).sqrt();
+            let sigma = if t > 0 { betas[t].sqrt() } else { 0.0 };
+            for i in 0..x.len() {
+                let mu = c1 as f32 * (x[i] - c2 as f32 * eps[i]);
+                x[i] = mu + sigma as f32 * if t > 0 { rng.normal() } else { 0.0 };
+            }
+        }
+        Ok(x.chunks(n).map(|c| c.to_vec()).collect())
+    }
+
+    fn predict_eps(&self, x: &[f32], t: usize, batch: usize) -> Result<Vec<f32>> {
+        let man = &self.denoise_graph.manifest;
+        let tvec = vec![t as i32; batch];
+        let mut ephemeral: Vec<(usize, xla::Literal)> = Vec::new();
+        for (idx, spec) in man.inputs.iter().enumerate() {
+            let lit = match spec.role {
+                Role::Param => continue,
+                Role::DataX => f32_literal(&spec.shape, x)?,
+                Role::T => i32_literal(&spec.shape, &tvec)?,
+                other => bail!("unexpected denoise input role {other:?}"),
+            };
+            ephemeral.push((idx, lit));
+        }
+        let outs = run_with_state(&self.denoise_graph, &self.state, ephemeral)?;
+        outs[man.output_index(Role::Eps).context("eps output")?]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{e:?}"))
+    }
+
+    /// Real data reference batch for FID-proxy evaluation.
+    pub fn real_batch(&self, count: usize) -> Vec<Vec<f32>> {
+        (0..count).map(|i| self.ds.ddpm_example(i)).collect()
+    }
+}
+
+/// Write a grid of generated samples as a PGM image (Fig. 3 artifact).
+pub fn write_pgm_grid(path: &str, images: &[Vec<f32>], img: usize, channels: usize) -> Result<()> {
+    let cols = (images.len() as f64).sqrt().ceil() as usize;
+    let rows = images.len().div_ceil(cols);
+    let (gw, gh) = (cols * (img + 2), rows * (img + 2));
+    let mut canvas = vec![0u8; gw * gh];
+    for (i, im) in images.iter().enumerate() {
+        let (r, c) = (i / cols, i % cols);
+        for y in 0..img {
+            for x in 0..img {
+                // grayscale: mean over channels, map [-1,1] -> [0,255]
+                let mut v = 0.0;
+                for ch in 0..channels {
+                    v += im[(ch * img + y) * img + x];
+                }
+                v /= channels as f32;
+                let px = ((v * 0.5 + 0.5).clamp(0.0, 1.0) * 255.0) as u8;
+                canvas[(r * (img + 2) + y + 1) * gw + c * (img + 2) + x + 1] = px;
+            }
+        }
+    }
+    let mut out = format!("P5\n{gw} {gh}\n255\n").into_bytes();
+    out.extend(canvas);
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pgm_grid_writes_valid_header() {
+        let dir = std::env::temp_dir().join("ssprop_pgm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.pgm");
+        let imgs = vec![vec![0.0f32; 4 * 4]; 4];
+        write_pgm_grid(p.to_str().unwrap(), &imgs, 4, 1).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        assert!(data.starts_with(b"P5\n12 12\n255\n"));
+        assert_eq!(data.len(), b"P5\n12 12\n255\n".len() + 144);
+    }
+}

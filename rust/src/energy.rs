@@ -1,0 +1,117 @@
+//! Energy / carbon model (S16) — turns the FLOPs accounting into the
+//! paper's sustainability claim: backward-FLOPs → device-seconds → kWh →
+//! gCO₂e, with device profiles for the paper's testbed (RTX A5000) and a
+//! reference TPU target.
+//!
+//! The paper argues savings at the *R&D-phase* scale: many training runs
+//! during hyperparameter search (Fig. 4). `rnd_phase_savings` models that.
+
+/// Hardware profile for converting FLOPs to time and energy.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Peak f32 throughput in FLOP/s.
+    pub peak_flops: f64,
+    /// Sustained fraction of peak achieved on conv workloads.
+    pub utilization: f64,
+    /// Board power draw at load, watts.
+    pub watts: f64,
+}
+
+/// The paper's testbed GPU.
+pub const RTX_A5000: DeviceProfile = DeviceProfile {
+    name: "RTX A5000",
+    peak_flops: 27.8e12,
+    utilization: 0.45,
+    watts: 230.0,
+};
+
+/// TPU v4-ish single-core profile (for the §Hardware-Adaptation estimate).
+pub const TPU_CORE: DeviceProfile = DeviceProfile {
+    name: "TPU core (bf16 MXU)",
+    peak_flops: 137.5e12,
+    utilization: 0.55,
+    watts: 170.0,
+};
+
+/// This CPU-PJRT testbed (rough single-socket estimate; used for scaled
+/// wall-clock sanity checks, not headline numbers).
+pub const CPU_TESTBED: DeviceProfile = DeviceProfile {
+    name: "CPU (PJRT)",
+    peak_flops: 3.0e11,
+    utilization: 0.30,
+    watts: 120.0,
+};
+
+/// Grid carbon intensity, gCO₂e per kWh (US average ~390).
+pub const GRID_GCO2_PER_KWH: f64 = 390.0;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyReport {
+    pub flops: f64,
+    pub seconds: f64,
+    pub kwh: f64,
+    pub gco2e: f64,
+}
+
+pub fn estimate(flops: f64, dev: &DeviceProfile) -> EnergyReport {
+    let seconds = flops / (dev.peak_flops * dev.utilization);
+    let kwh = seconds * dev.watts / 3.6e6;
+    EnergyReport { flops, seconds, kwh, gco2e: kwh * GRID_GCO2_PER_KWH }
+}
+
+/// R&D-phase savings: `runs` independent trainings (hyperparameter search),
+/// each of `flops_per_run` backward FLOPs, trained with a schedule saving
+/// `saving_frac` of backward compute.
+pub fn rnd_phase_savings(runs: usize, flops_per_run: f64, saving_frac: f64,
+                         dev: &DeviceProfile) -> EnergyReport {
+    estimate(runs as f64 * flops_per_run * saving_frac, dev)
+}
+
+pub fn fmt_flops(f: f64) -> String {
+    if f >= 1e15 {
+        format!("{:.2} PFLOPs", f / 1e15)
+    } else if f >= 1e12 {
+        format!("{:.2} TFLOPs", f / 1e12)
+    } else if f >= 1e9 {
+        format!("{:.2} GFLOPs", f / 1e9)
+    } else {
+        format!("{:.2} MFLOPs", f / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_scales_linearly_with_flops() {
+        let a = estimate(1e12, &RTX_A5000);
+        let b = estimate(2e12, &RTX_A5000);
+        assert!((b.kwh / a.kwh - 2.0).abs() < 1e-9);
+        assert!((b.gco2e / a.gco2e - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_scale_sanity() {
+        // Table 4 ImageNet ResNet-50: 17,064.82 quadrillion FLOPs total.
+        let r = estimate(17_064.82e15, &RTX_A5000);
+        // should be on the order of days of GPU time, not minutes or years
+        assert!(r.seconds > 3600.0 * 24.0, "{}s", r.seconds);
+        assert!(r.seconds < 3600.0 * 24.0 * 60.0, "{}s", r.seconds);
+        assert!(r.kwh > 10.0 && r.kwh < 10_000.0);
+    }
+
+    #[test]
+    fn savings_accumulate_over_rnd_runs() {
+        let one = rnd_phase_savings(1, 1e15, 0.4, &RTX_A5000);
+        let hundred = rnd_phase_savings(100, 1e15, 0.4, &RTX_A5000);
+        assert!((hundred.gco2e / one.gco2e - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tpu_more_efficient_than_cpu() {
+        let flops = 1e15;
+        assert!(estimate(flops, &TPU_CORE).kwh < estimate(flops, &CPU_TESTBED).kwh);
+    }
+}

@@ -1,0 +1,166 @@
+//! Figure drivers: paper Fig. 2 (sensitivity), Fig. 3 (samples), Fig. 4
+//! (hyperparameter-search reliability).
+
+use anyhow::Result;
+
+use super::report::{f3, Table};
+use super::{run_classifier, Scale};
+use crate::ddpm::{write_pgm_grid, DdpmTrainer};
+use crate::runtime::Engine;
+use crate::schedule::{DropScheduler, Schedule};
+
+/// Fig. 2a: sparsified dimension (channel vs hw vs all) over drop rates.
+pub fn fig2a(engine: &Engine, scale: Scale, rates: &[f64]) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 2a — sparsified dimensions vs drop rate (CIFAR-10, ResNet-18, constant schedule)",
+        &["Drop rate", "sparse-channel", "sparse-hw", "sparse-all"],
+    );
+    for &d in rates {
+        let mut row = vec![format!("{:.0}%", d * 100.0)];
+        for suffix in ["", "_hw", "_all"] {
+            let artifact = format!("resnet18_cifar10{suffix}");
+            let (_, acc) =
+                run_classifier(engine, &artifact, scale, Schedule::Constant, d, 0.0)?;
+            row.push(f3(acc));
+        }
+        t.row(row);
+    }
+    t.save_json("fig2a");
+    Ok(t)
+}
+
+/// Fig. 2b: top-k vs random gradient selection.
+pub fn fig2b(engine: &Engine, scale: Scale, rates: &[f64]) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 2b — top-k vs random selection (CIFAR-10, ResNet-18)",
+        &["Drop rate", "top-k", "random"],
+    );
+    for &d in rates {
+        let (_, acc_t) =
+            run_classifier(engine, "resnet18_cifar10", scale, Schedule::Constant, d, 0.0)?;
+        let (_, acc_r) =
+            run_classifier(engine, "resnet18_cifar10_random", scale, Schedule::Constant, d, 0.0)?;
+        t.row(vec![format!("{:.0}%", d * 100.0), f3(acc_t), f3(acc_r)]);
+    }
+    t.save_json("fig2b");
+    Ok(t)
+}
+
+/// Fig. 2c: scheduler shapes (constant / linear / cosine / bar) per target rate.
+pub fn fig2c(engine: &Engine, scale: Scale, rates: &[f64]) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 2c — drop schedulers vs target rate (CIFAR-10, ResNet-18)",
+        &["Target rate", "constant", "linear", "cosine", "bar"],
+    );
+    for &d in rates {
+        let mut row = vec![format!("{:.0}%", d * 100.0)];
+        for s in [Schedule::Constant, Schedule::Linear, Schedule::Cosine, Schedule::Bar] {
+            let (_, acc) = run_classifier(engine, "resnet18_cifar10", scale, s, d, 0.0)?;
+            row.push(f3(acc));
+        }
+        t.row(row);
+    }
+    t.save_json("fig2c");
+    Ok(t)
+}
+
+/// Fig. 2d: scheduler period sweep (iteration-periodic bar vs 2-epoch bar).
+pub fn fig2d(engine: &Engine, scale: Scale, periods: &[usize]) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 2d — bar-scheduler period sweep at D*=0.8 (CIFAR-10, ResNet-18)",
+        &["Period (iters)", "Test acc"],
+    );
+    for &p in periods {
+        let (_, acc) = run_classifier(
+            engine,
+            "resnet18_cifar10",
+            scale,
+            Schedule::IterPeriodic { period: p },
+            0.8,
+            0.0,
+        )?;
+        t.row(vec![p.to_string(), f3(acc)]);
+    }
+    // the paper's deployed 2-epoch period
+    let (_, acc) = run_classifier(
+        engine,
+        "resnet18_cifar10",
+        scale,
+        Schedule::EpochBar { period_epochs: 2 },
+        0.8,
+        0.0,
+    )?;
+    t.row(vec!["2 epochs".into(), f3(acc)]);
+    t.save_json("fig2d");
+    Ok(t)
+}
+
+/// Fig. 3: DDPM sample grids -> results/fig3_<dataset>.pgm.
+pub fn fig3(engine: &Engine, scale: Scale, datasets: &[&str]) -> Result<Vec<String>> {
+    let mut written = Vec::new();
+    std::fs::create_dir_all("results")?;
+    for &ds in datasets {
+        let mut tr = DdpmTrainer::new(engine, ds, scale.lr, scale.seed)?;
+        let sched = DropScheduler::paper_default(scale.epochs, scale.iters_per_epoch);
+        tr.train(scale.epochs * scale.iters_per_epoch, &sched)?;
+        let samples = tr.sample(scale.seed + 7)?;
+        let man = &tr.denoise_graph.manifest.clone();
+        let path = format!("results/fig3_{ds}.pgm");
+        write_pgm_grid(&path, &samples, man.img, man.channels)?;
+        written.push(path);
+    }
+    Ok(written)
+}
+
+/// Fig. 4: depth x learning-rate reliability grid, dense vs sparse.
+pub fn fig4(engine: &Engine, scale: Scale, depths: &[usize], lrs: &[f64]) -> Result<(Table, Table)> {
+    let run = |sparse: bool| -> Result<Table> {
+        let title = if sparse {
+            "Fig 4 (sparse mode) — test acc, SimpleCNN depth x LR on CIFAR-100"
+        } else {
+            "Fig 4 (normal mode) — test acc, SimpleCNN depth x LR on CIFAR-100"
+        };
+        let mut headers = vec!["depth \\ lr".to_string()];
+        headers.extend(lrs.iter().map(|l| format!("{l:.0e}")));
+        let mut t = Table::new(title, &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for &d in depths {
+            let mut row = vec![d.to_string()];
+            for &lr in lrs {
+                let mut sc = scale;
+                sc.lr = lr;
+                let (schedule, target) = if sparse {
+                    (Schedule::EpochBar { period_epochs: 2 }, 0.8)
+                } else {
+                    (Schedule::Constant, 0.0)
+                };
+                let (_, acc) =
+                    run_classifier(engine, &format!("cnn{d}_cifar100"), sc, schedule, target, 0.0)?;
+                row.push(f3(acc));
+            }
+            t.row(row);
+        }
+        t.save_json(if sparse { "fig4_sparse" } else { "fig4_normal" });
+        Ok(t)
+    };
+    Ok((run(false)?, run(true)?))
+}
+
+/// Correlation between the two Fig. 4 grids (the paper's reliability claim:
+/// the best hyperparameters agree between modes).
+pub fn fig4_agreement(normal: &Table, sparse: &Table) -> (usize, usize, f64) {
+    let parse = |t: &Table| -> Vec<f64> {
+        t.rows.iter().flat_map(|r| r[1..].iter().filter_map(|c| c.parse().ok())).collect()
+    };
+    let a = parse(normal);
+    let b = parse(sparse);
+    let argmax = |v: &[f64]| v.iter().enumerate().max_by(|x, y| x.1.total_cmp(y.1)).map(|(i, _)| i).unwrap_or(0);
+    let (ia, ib) = (argmax(&a), argmax(&b));
+    // Pearson correlation of the two accuracy surfaces
+    let n = a.len().min(b.len()) as f64;
+    let (ma, mb) = (a.iter().sum::<f64>() / n, b.iter().sum::<f64>() / n);
+    let cov: f64 = a.iter().zip(&b).map(|(x, y)| (x - ma) * (y - mb)).sum();
+    let va: f64 = a.iter().map(|x| (x - ma) * (x - ma)).sum();
+    let vb: f64 = b.iter().map(|y| (y - mb) * (y - mb)).sum();
+    let corr = cov / (va.sqrt() * vb.sqrt()).max(1e-12);
+    (ia, ib, corr)
+}

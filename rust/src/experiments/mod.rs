@@ -1,0 +1,69 @@
+//! Experiment harness (S22): one driver per paper table/figure.
+//!
+//! Every driver prints a markdown table mirroring the paper's rows and
+//! writes raw JSON under `results/`. Scale knobs (`epochs`, `iters`) default
+//! to CPU-testbed sizes; absolute accuracies are synthetic-data accuracies,
+//! but the *comparisons* (dense vs ssProp, Dropout interactions, iso-FLOPs,
+//! scheduler shapes) reproduce the paper's findings. FLOPs columns are
+//! analytic and match the paper exactly at full width (flops.rs).
+
+pub mod report;
+pub mod tables;
+pub mod figures;
+
+use anyhow::Result;
+
+use crate::coordinator::{TrainConfig, Trainer};
+use crate::runtime::Engine;
+use crate::schedule::{DropScheduler, Schedule};
+
+/// Shared scale knobs for all experiment drivers.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    pub epochs: usize,
+    pub iters_per_epoch: usize,
+    pub seed: u64,
+    pub lr: f64,
+}
+
+impl Default for Scale {
+    fn default() -> Self {
+        Scale { epochs: 4, iters_per_epoch: 24, seed: 0, lr: 1e-3 }
+    }
+}
+
+/// One classifier training run; returns (trainer-with-metrics, test acc).
+pub fn run_classifier(
+    engine: &Engine,
+    artifact: &str,
+    scale: Scale,
+    schedule: Schedule,
+    target_drop: f64,
+    dropout_rate: f64,
+) -> Result<(Trainer, f64)> {
+    let sched = DropScheduler::new(schedule, target_drop.min(0.999), scale.epochs, scale.iters_per_epoch);
+    let cfg = TrainConfig {
+        artifact: artifact.to_string(),
+        epochs: scale.epochs,
+        iters_per_epoch: scale.iters_per_epoch,
+        lr: scale.lr,
+        scheduler: sched,
+        dropout_rate,
+        seed: scale.seed,
+        eval_every: 0,
+        verbose: false,
+    };
+    let mut t = Trainer::new(engine, cfg)?;
+    let (_, acc) = t.run()?;
+    Ok((t, acc))
+}
+
+/// Dense baseline: constant schedule at rate 0.
+pub fn run_dense(engine: &Engine, artifact: &str, scale: Scale) -> Result<(Trainer, f64)> {
+    run_classifier(engine, artifact, scale, Schedule::Constant, 0.0, 0.0)
+}
+
+/// Paper-default ssProp: bar scheduler, 2-epoch period, D* = 0.8.
+pub fn run_ssprop(engine: &Engine, artifact: &str, scale: Scale) -> Result<(Trainer, f64)> {
+    run_classifier(engine, artifact, scale, Schedule::EpochBar { period_epochs: 2 }, 0.8, 0.0)
+}

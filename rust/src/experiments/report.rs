@@ -1,0 +1,126 @@
+//! Report formatting: markdown tables on stdout + raw JSON rows under
+//! `results/` so EXPERIMENTS.md can be regenerated from data.
+
+use std::path::Path;
+
+use crate::util::json::{arr, Json};
+
+/// Simple column-aligned markdown table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n### {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Persist rows as JSON for downstream regeneration.
+    pub fn save_json(&self, id: &str) {
+        let _ = std::fs::create_dir_all("results");
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                arr(r.iter().map(|c| Json::Str(c.clone())).collect())
+            })
+            .collect();
+        let j = crate::util::json::obj(vec![
+            ("id", Json::Str(id.to_string())),
+            ("title", Json::Str(self.title.clone())),
+            ("headers", arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect())),
+            ("rows", arr(rows)),
+        ]);
+        let path = Path::new("results").join(format!("{id}.json"));
+        let _ = std::fs::write(path, j.to_string());
+    }
+}
+
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn f4(v: f64) -> String {
+    format!("{v:.4}")
+}
+
+pub fn pct(v: f64) -> String {
+    format!("{:.1}%", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("T", &["a", "bcd"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["1000".into(), "x".into()]);
+        let r = t.render();
+        assert!(r.contains("### T"));
+        assert!(r.contains("| a    | bcd |"));
+        assert!(r.contains("| 1000 | x   |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(f2(1.005), "1.00");
+        assert_eq!(f3(0.12345), "0.123");
+        assert_eq!(pct(0.4), "40.0%");
+    }
+}

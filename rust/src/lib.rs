@@ -1,0 +1,29 @@
+//! # ssProp — energy-efficient CNN training with scheduled sparse back-prop
+//!
+//! Rust + JAX + Pallas reproduction of *"ssProp: Energy-Efficient Training
+//! for Convolutional Neural Networks with Scheduled Sparse Back Propagation"*
+//! (Zhong, Huang, Shi; 2024), as a three-layer AOT stack:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas kernels — img2col GEMMs,
+//!   channel-importance reduction, compacted sparse backward.
+//! * **L2** (`python/compile/`): JAX model zoo (SimpleCNN, ResNet-18/26/50,
+//!   DDPM UNet) built on the ssProp `custom_vjp` convolution; AOT-lowered
+//!   once to HLO text.
+//! * **L3** (this crate): the coordinator — drop-rate schedulers, executable
+//!   routing, synthetic data plane, FLOPs/energy accounting, metrics,
+//!   checkpoints, experiment harness. Python never runs at L3.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record of every table and figure.
+
+pub mod coordinator;
+pub mod data;
+pub mod ddpm;
+pub mod energy;
+pub mod experiments;
+pub mod flops;
+pub mod metrics;
+pub mod runtime;
+pub mod schedule;
+pub mod tensorstore;
+pub mod util;

@@ -1,0 +1,229 @@
+//! Small dense symmetric linear algebra: cyclic Jacobi eigendecomposition
+//! and PSD matrix square roots — enough to compute the Fréchet distance
+//! exactly (no external BLAS in the offline vendor set).
+
+/// Row-major square matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(n: usize) -> Mat {
+        Mat { n, a: vec![0.0; n * n] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.a[i * n + j] += aik * other.a[k * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.n).map(|i| self[(i, i)]).sum()
+    }
+
+    pub fn symmetrize(&mut self) {
+        let n = self.n;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.a[i * self.n + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.a[i * self.n + j]
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Returns (eigenvalues, eigenvectors as columns of V) with A = V diag(w) Vᵀ.
+pub fn eigh(m: &Mat, sweeps: usize) -> (Vec<f64>, Mat) {
+    let n = m.n;
+    let mut a = m.clone();
+    let mut v = Mat::eye(n);
+    for _ in 0..sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[(i, j)] * a[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + a.trace().abs()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let theta = (a[(q, q)] - a[(p, p)]) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of A
+                for k in 0..n {
+                    let akp = a[(k, p)];
+                    let akq = a[(k, q)];
+                    a[(k, p)] = c * akp - s * akq;
+                    a[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[(p, k)];
+                    let aqk = a[(q, k)];
+                    a[(p, k)] = c * apk - s * aqk;
+                    a[(q, k)] = s * apk + c * aqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let w = (0..n).map(|i| a[(i, i)]).collect();
+    (w, v)
+}
+
+/// Symmetric PSD matrix square root via eigendecomposition (negative
+/// eigenvalues from numerical noise are clamped to zero).
+pub fn sqrtm_psd(m: &Mat) -> Mat {
+    let (w, v) = eigh(m, 30);
+    let n = m.n;
+    let mut out = Mat::zeros(n);
+    // V diag(sqrt(w)) V^T
+    for k in 0..n {
+        let s = w[k].max(0.0).sqrt();
+        if s == 0.0 {
+            continue;
+        }
+        for i in 0..n {
+            let vik = v[(i, k)] * s;
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out.a[i * n + j] += vik * v[(j, k)];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn random_psd(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg::new(seed, 0);
+        let mut b = Mat::zeros(n);
+        for i in 0..n * n {
+            b.a[i] = rng.normal() as f64;
+        }
+        let mut m = b.matmul(&b.transpose());
+        m.symmetrize();
+        m
+    }
+
+    #[test]
+    fn eigh_reconstructs() {
+        let m = random_psd(8, 1);
+        let (w, v) = eigh(&m, 30);
+        // A = V diag(w) V^T
+        let mut rec = Mat::zeros(8);
+        for k in 0..8 {
+            for i in 0..8 {
+                for j in 0..8 {
+                    rec.a[i * 8 + j] += v[(i, k)] * w[k] * v[(j, k)];
+                }
+            }
+        }
+        for i in 0..64 {
+            assert!((rec.a[i] - m.a[i]).abs() < 1e-8, "i={i}");
+        }
+        assert!(w.iter().all(|&x| x > -1e-9), "PSD eigvals {w:?}");
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        let m = random_psd(6, 2);
+        let s = sqrtm_psd(&m);
+        let s2 = s.matmul(&s);
+        for i in 0..36 {
+            assert!((s2.a[i] - m.a[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn sqrtm_of_diagonal() {
+        let mut m = Mat::zeros(3);
+        m[(0, 0)] = 4.0;
+        m[(1, 1)] = 9.0;
+        m[(2, 2)] = 16.0;
+        let s = sqrtm_psd(&m);
+        assert!((s[(0, 0)] - 2.0).abs() < 1e-12);
+        assert!((s[(1, 1)] - 3.0).abs() < 1e-12);
+        assert!((s[(2, 2)] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let m = random_psd(5, 3);
+        let (_, v) = eigh(&m, 30);
+        let vtv = v.transpose().matmul(&v);
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv[(i, j)] - want).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Evaluation metrics beyond train-loop loss/acc: the FID-proxy for
+//! generation quality (S20) and the small dense linear algebra it needs.
+
+pub mod fid;
+pub mod linalg;
+
+pub use fid::{fid_proxy, FeatureExtractor};

@@ -1,0 +1,272 @@
+//! Artifact manifest: the contract between the Python compile path and the
+//! rust runtime. Produced by python/compile/aot.py, one JSON per artifact.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::flops::{ConvLayer, LayerSet};
+use crate::util::json::Json;
+
+/// Input/output role taxonomy (mirrors python/compile/steps.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Param,
+    Opt,
+    Bn,
+    DataX,
+    DataY,
+    Lr,
+    DropRate,
+    DropoutRate,
+    Key,
+    T,
+    Loss,
+    Acc,
+    Eps,
+    Other,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> Role {
+        match s {
+            "param" => Role::Param,
+            "opt" => Role::Opt,
+            "bn" => Role::Bn,
+            "data_x" => Role::DataX,
+            "data_y" => Role::DataY,
+            "lr" => Role::Lr,
+            "drop_rate" => Role::DropRate,
+            "dropout_rate" => Role::DropoutRate,
+            "key" => Role::Key,
+            "t" => Role::T,
+            "loss" => Role::Loss,
+            "acc" => Role::Acc,
+            "eps" => Role::Eps,
+            _ => Role::Other,
+        }
+    }
+
+    /// Roles whose values persist across iterations (looped-back state).
+    pub fn is_state(self) -> bool {
+        matches!(self, Role::Param | Role::Opt | Role::Bn)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub role: Role,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    /// For outputs: index of the input this output feeds next iteration (-1 none).
+    pub feeds_input: i64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub kind: String,
+    pub model: String,
+    pub dataset: String,
+    pub batch: usize,
+    pub loss: String,
+    pub classes: usize,
+    pub img: usize,
+    pub channels: usize,
+    pub timesteps: usize,
+    pub width_mult: f64,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub layers: LayerSet,
+    /// DDPM beta schedule (empty for classifiers).
+    pub alpha_bar: Vec<f64>,
+    pub betas: Vec<f64>,
+}
+
+fn parse_io(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j.str_field("name").map_err(anyhow::Error::msg)?.to_string(),
+        role: Role::parse(j.str_field("role").map_err(anyhow::Error::msg)?),
+        shape: j
+            .arr_field("shape")
+            .map_err(anyhow::Error::msg)?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect(),
+        dtype: j.str_field("dtype").map_err(anyhow::Error::msg)?.to_string(),
+        feeds_input: j.get("feeds_input").and_then(Json::as_i64).unwrap_or(-1),
+    })
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {:?}", path.as_ref()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(anyhow::Error::msg)?;
+        let inputs = j
+            .arr_field("inputs")
+            .map_err(anyhow::Error::msg)?
+            .iter()
+            .map(parse_io)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = j
+            .arr_field("outputs")
+            .map_err(anyhow::Error::msg)?
+            .iter()
+            .map(parse_io)
+            .collect::<Result<Vec<_>>>()?;
+        for o in &outputs {
+            if o.feeds_input >= inputs.len() as i64 {
+                bail!("output {} feeds out-of-range input {}", o.name, o.feeds_input);
+            }
+        }
+
+        let mut layers = LayerSet::default();
+        if let Some(ls) = j.get("layers") {
+            if let Some(convs) = ls.get("convs").and_then(Json::as_arr) {
+                for c in convs {
+                    layers.convs.push(ConvLayer {
+                        cin: c.usize_field("cin").map_err(anyhow::Error::msg)?,
+                        cout: c.usize_field("cout").map_err(anyhow::Error::msg)?,
+                        k: c.usize_field("k").map_err(anyhow::Error::msg)?,
+                        hout: c.usize_field("hout").map_err(anyhow::Error::msg)?,
+                        wout: c.usize_field("wout").map_err(anyhow::Error::msg)?,
+                        counted_bn: false,
+                    });
+                }
+            }
+            // bns in the manifest are listed separately; mark matching convs
+            let nbns = ls.get("bns").and_then(Json::as_arr).map(|a| a.len()).unwrap_or(0);
+            for (i, c) in layers.convs.iter_mut().enumerate() {
+                if i < nbns {
+                    c.counted_bn = true;
+                }
+            }
+            if let Some(drops) = ls.get("dropouts").and_then(Json::as_arr) {
+                for d in drops {
+                    layers.dropouts.push((
+                        d.usize_field("c").map_err(anyhow::Error::msg)?,
+                        d.usize_field("h").map_err(anyhow::Error::msg)?,
+                        d.usize_field("w").map_err(anyhow::Error::msg)?,
+                    ));
+                }
+            }
+        }
+
+        let sched = j.get("beta_schedule");
+        let getf = |key: &str| -> Vec<f64> {
+            sched
+                .and_then(|s| s.get(key))
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default()
+        };
+
+        Ok(Manifest {
+            name: j.str_field("name").map_err(anyhow::Error::msg)?.to_string(),
+            kind: j.get("kind").and_then(Json::as_str).unwrap_or("").to_string(),
+            model: j.get("model").and_then(Json::as_str).unwrap_or("").to_string(),
+            dataset: j.get("dataset").and_then(Json::as_str).unwrap_or("").to_string(),
+            batch: j.get("batch").and_then(Json::as_usize).unwrap_or(0),
+            loss: j.get("loss").and_then(Json::as_str).unwrap_or("").to_string(),
+            classes: j.get("classes").and_then(Json::as_usize).unwrap_or(0),
+            img: j.get("img").and_then(Json::as_usize).unwrap_or(0),
+            channels: j.get("channels").and_then(Json::as_usize).unwrap_or(0),
+            timesteps: j.get("timesteps").and_then(Json::as_usize).unwrap_or(0),
+            width_mult: j.get("width_mult").and_then(Json::as_f64).unwrap_or(1.0),
+            inputs,
+            outputs,
+            layers,
+            alpha_bar: getf("alpha_bar"),
+            betas: getf("betas"),
+        })
+    }
+
+    pub fn input_index(&self, role: Role) -> Option<usize> {
+        self.inputs.iter().position(|i| i.role == role)
+    }
+
+    pub fn output_index(&self, role: Role) -> Option<usize> {
+        self.outputs.iter().position(|o| o.role == role)
+    }
+
+    /// Backward FLOPs per iteration at drop rate d (uses manifest geometry —
+    /// i.e. the *scaled* model actually executing; full-width paper numbers
+    /// come from flops::paper_resnet).
+    pub fn bwd_flops(&self, d: f64) -> f64 {
+        self.layers.bwd_flops_per_iter(self.batch, d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "toy_train", "kind": "train", "model": "cnn2", "dataset": "cifar10",
+      "batch": 8, "loss": "ce", "classes": 10, "img": 32, "channels": 3,
+      "width_mult": 0.25,
+      "inputs": [
+        {"name": "param['w']", "role": "param", "shape": [4, 3, 3, 3], "dtype": "f32"},
+        {"name": "lr", "role": "lr", "shape": [], "dtype": "f32"},
+        {"name": "drop_rate", "role": "drop_rate", "shape": [], "dtype": "f32"}
+      ],
+      "outputs": [
+        {"name": "param['w']", "role": "param", "shape": [4, 3, 3, 3], "dtype": "f32", "feeds_input": 0},
+        {"name": "loss", "role": "loss", "shape": [], "dtype": "f32", "feeds_input": -1}
+      ],
+      "layers": {"convs": [{"cin": 3, "cout": 4, "k": 3, "stride": 1, "padding": 1,
+                            "hin": 32, "win": 32, "hout": 32, "wout": 32}],
+                 "bns": [{"c": 4, "h": 32, "w": 32}], "dropouts": []}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "toy_train");
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.outputs[0].feeds_input, 0);
+        assert_eq!(m.inputs[0].role, Role::Param);
+        assert_eq!(m.layers.convs.len(), 1);
+        assert!(m.layers.convs[0].counted_bn);
+        assert_eq!(m.input_index(Role::Lr), Some(1));
+        assert_eq!(m.output_index(Role::Loss), Some(1));
+    }
+
+    #[test]
+    fn flops_from_manifest_geometry() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let dense = m.bwd_flops(0.0);
+        // conv Eq6 + bn Eq7 at bs 8
+        let conv = (8 * 32 * 32) as f64 * (4.0 * 27.0 + 1.0) * 4.0;
+        let bn = 12.0 * (8 * 32 * 32 * 4) as f64 + 40.0;
+        assert!((dense - (conv + bn)).abs() < 1e-6);
+        assert!(m.bwd_flops(0.8) < dense);
+    }
+
+    #[test]
+    fn rejects_out_of_range_feed() {
+        let bad = SAMPLE.replace("\"feeds_input\": 0", "\"feeds_input\": 99");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn role_parse_roundtrip() {
+        for (s, r) in [
+            ("param", Role::Param), ("opt", Role::Opt), ("bn", Role::Bn),
+            ("data_x", Role::DataX), ("data_y", Role::DataY), ("lr", Role::Lr),
+            ("drop_rate", Role::DropRate), ("dropout_rate", Role::DropoutRate),
+            ("key", Role::Key), ("t", Role::T), ("loss", Role::Loss),
+            ("acc", Role::Acc), ("eps", Role::Eps), ("whatever", Role::Other),
+        ] {
+            assert_eq!(Role::parse(s), r);
+        }
+        assert!(Role::Param.is_state() && Role::Opt.is_state() && Role::Bn.is_state());
+        assert!(!Role::Loss.is_state());
+    }
+}

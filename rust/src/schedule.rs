@@ -1,0 +1,301 @@
+//! Drop-rate schedulers — the "scheduled" in ssProp (paper Fig. 2c/2d).
+//!
+//! The L3 coordinator evaluates the schedule each iteration and feeds the
+//! resulting drop rate to the AOT train step's runtime `drop_rate` input
+//! (and routes to the compacted executable when one exists for that rate).
+//!
+//! Shapes (target rate D*, training horizon T iterations):
+//!   * Constant:   d(t) = D*                       (paper's baseline mode)
+//!   * Linear:     d(t) = D* · t/T
+//!   * Cosine:     d(t) = D* · (1 − cos(π·t/T))/2  (ramps 0 → D*)
+//!   * Bar:        d(t) = 0 for t < T/2, else D*   (step function)
+//!   * IterPeriodic{period}: bar wave with the given period in iterations
+//!     (Fig. 2d sweeps 30..300)
+//!   * EpochBar{period_epochs}: the paper's deployed schedule — alternate
+//!     dense / D* epochs (period 2 ⇒ epochs 1,3,5,… dense; 2,4,6,… at D*).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    Constant,
+    Linear,
+    Cosine,
+    Bar,
+    IterPeriodic { period: usize },
+    EpochBar { period_epochs: usize },
+    /// Paper §Conclusion future work (1): dense warm-up for the first
+    /// `warmup_epochs`, then the paper's 2-epoch bar at the target rate.
+    WarmupBar { warmup_epochs: usize, period_epochs: usize },
+}
+
+impl Schedule {
+    pub fn parse(name: &str, period: usize) -> Option<Schedule> {
+        Some(match name {
+            "constant" => Schedule::Constant,
+            "linear" => Schedule::Linear,
+            "cosine" => Schedule::Cosine,
+            "bar" => Schedule::Bar,
+            "iter-bar" | "iter_periodic" => Schedule::IterPeriodic { period: period.max(1) },
+            "epoch-bar" | "bar2" => Schedule::EpochBar { period_epochs: period.max(2) },
+            "warmup-bar" => Schedule::WarmupBar { warmup_epochs: period.max(1), period_epochs: 2 },
+            _ => return None,
+        })
+    }
+}
+
+/// A fully-specified drop scheduler over a training horizon.
+#[derive(Debug, Clone, Copy)]
+pub struct DropScheduler {
+    pub schedule: Schedule,
+    /// Target (maximum) drop rate D* in [0, 1).
+    pub target: f64,
+    pub total_epochs: usize,
+    pub iters_per_epoch: usize,
+}
+
+impl DropScheduler {
+    pub fn new(schedule: Schedule, target: f64, total_epochs: usize, iters_per_epoch: usize) -> Self {
+        assert!((0.0..1.0).contains(&target), "target drop rate must be in [0,1)");
+        assert!(total_epochs > 0 && iters_per_epoch > 0);
+        DropScheduler { schedule, target, total_epochs, iters_per_epoch }
+    }
+
+    /// Paper's deployed configuration: bar scheduler, 2-epoch period, D*=0.8.
+    pub fn paper_default(total_epochs: usize, iters_per_epoch: usize) -> Self {
+        Self::new(Schedule::EpochBar { period_epochs: 2 }, 0.8, total_epochs, iters_per_epoch)
+    }
+
+    /// Drop rate for global iteration `it` (0-based).
+    pub fn rate_at(&self, it: usize) -> f64 {
+        let total = self.total_epochs * self.iters_per_epoch;
+        let it = it.min(total.saturating_sub(1));
+        let frac = if total <= 1 { 1.0 } else { it as f64 / (total - 1) as f64 };
+        match self.schedule {
+            Schedule::Constant => self.target,
+            Schedule::Linear => self.target * frac,
+            Schedule::Cosine => self.target * 0.5 * (1.0 - (std::f64::consts::PI * frac).cos()),
+            Schedule::Bar => {
+                if frac < 0.5 {
+                    0.0
+                } else {
+                    self.target
+                }
+            }
+            Schedule::IterPeriodic { period } => {
+                if (it / period) % 2 == 0 {
+                    0.0
+                } else {
+                    self.target
+                }
+            }
+            Schedule::EpochBar { period_epochs } => {
+                let epoch = it / self.iters_per_epoch;
+                let phase = epoch % period_epochs;
+                // first half of each period dense, second half sparse
+                if phase < period_epochs / 2 {
+                    0.0
+                } else {
+                    self.target
+                }
+            }
+            Schedule::WarmupBar { warmup_epochs, period_epochs } => {
+                let epoch = it / self.iters_per_epoch;
+                if epoch < warmup_epochs {
+                    return 0.0;
+                }
+                let phase = (epoch - warmup_epochs) % period_epochs;
+                if phase < period_epochs / 2 {
+                    0.0
+                } else {
+                    self.target
+                }
+            }
+        }
+    }
+
+    /// All per-iteration rates (for FLOPs accounting over a whole run).
+    pub fn rates(&self) -> Vec<f64> {
+        (0..self.total_epochs * self.iters_per_epoch).map(|it| self.rate_at(it)).collect()
+    }
+
+    /// Time-averaged drop rate over the run.
+    pub fn mean_rate(&self) -> f64 {
+        let r = self.rates();
+        r.iter().sum::<f64>() / r.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check_no_shrink, DEFAULT_CASES};
+    use crate::util::rng::Pcg;
+
+    fn sched(s: Schedule) -> DropScheduler {
+        DropScheduler::new(s, 0.8, 10, 100)
+    }
+
+    #[test]
+    fn epoch_bar_alternates_dense_sparse() {
+        let d = DropScheduler::paper_default(6, 10);
+        for it in 0..60 {
+            let epoch = it / 10;
+            let expect = if epoch % 2 == 0 { 0.0 } else { 0.8 };
+            assert_eq!(d.rate_at(it), expect, "iter {it}");
+        }
+        // mean is exactly target/2 -> the paper's ~40% average saving
+        assert!((d.mean_rate() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_and_cosine_ramp_from_zero_to_target() {
+        for s in [Schedule::Linear, Schedule::Cosine] {
+            let d = sched(s);
+            assert_eq!(d.rate_at(0), 0.0);
+            assert!((d.rate_at(999) - 0.8).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bar_is_a_step_at_half() {
+        let d = sched(Schedule::Bar);
+        assert_eq!(d.rate_at(0), 0.0);
+        assert_eq!(d.rate_at(498), 0.0);
+        assert_eq!(d.rate_at(501), 0.8);
+        assert_eq!(d.rate_at(999), 0.8);
+    }
+
+    #[test]
+    fn iter_periodic_wave() {
+        let d = DropScheduler::new(Schedule::IterPeriodic { period: 30 }, 0.5, 2, 300);
+        assert_eq!(d.rate_at(0), 0.0);
+        assert_eq!(d.rate_at(29), 0.0);
+        assert_eq!(d.rate_at(30), 0.5);
+        assert_eq!(d.rate_at(59), 0.5);
+        assert_eq!(d.rate_at(60), 0.0);
+    }
+
+    #[test]
+    fn warmup_bar_is_dense_through_warmup_then_bars() {
+        let d = DropScheduler::new(
+            Schedule::WarmupBar { warmup_epochs: 3, period_epochs: 2 },
+            0.8,
+            9,
+            10,
+        );
+        for it in 0..30 {
+            assert_eq!(d.rate_at(it), 0.0, "warm-up iter {it}");
+        }
+        // epochs 3,5,7 dense; 4,6,8 sparse
+        assert_eq!(d.rate_at(30), 0.0);
+        assert_eq!(d.rate_at(40), 0.8);
+        assert_eq!(d.rate_at(50), 0.0);
+        assert_eq!(d.rate_at(60), 0.8);
+        // mean drop sits below the plain bar's target/2 because of warm-up
+        let plain = DropScheduler::paper_default(9, 10);
+        assert!(d.mean_rate() < plain.mean_rate());
+    }
+
+    #[test]
+    fn warmup_bar_parses() {
+        assert_eq!(
+            Schedule::parse("warmup-bar", 5),
+            Some(Schedule::WarmupBar { warmup_epochs: 5, period_epochs: 2 })
+        );
+    }
+
+    // -- property tests (S13 mini-framework) ---------------------------------
+
+    #[test]
+    fn prop_rates_always_bounded() {
+        check_no_shrink(
+            "rates-in-[0,target]",
+            DEFAULT_CASES,
+            |r: &mut Pcg| {
+                let schedules = [
+                    Schedule::Constant,
+                    Schedule::Linear,
+                    Schedule::Cosine,
+                    Schedule::Bar,
+                    Schedule::IterPeriodic { period: 1 + r.below(100) as usize },
+                    Schedule::EpochBar { period_epochs: 2 + r.below(4) as usize },
+                    Schedule::WarmupBar {
+                        warmup_epochs: r.below(5) as usize,
+                        period_epochs: 2 + r.below(4) as usize,
+                    },
+                ];
+                let s = schedules[r.below(7) as usize];
+                let target = r.uniform() as f64 * 0.99;
+                let epochs = 1 + r.below(20) as usize;
+                let ipe = 1 + r.below(200) as usize;
+                let it = r.below((epochs * ipe) as u64 * 2) as usize;
+                (s, target, epochs, ipe, it)
+            },
+            |&(s, target, epochs, ipe, it)| {
+                let d = DropScheduler::new(s, target, epochs, ipe);
+                let r = d.rate_at(it);
+                (0.0..=target + 1e-12).contains(&r)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_linear_monotone_nondecreasing() {
+        check_no_shrink(
+            "linear-monotone",
+            DEFAULT_CASES,
+            |r: &mut Pcg| {
+                let epochs = 1 + r.below(10) as usize;
+                let ipe = 2 + r.below(100) as usize;
+                let it = r.below((epochs * ipe - 1) as u64) as usize;
+                (epochs, ipe, it)
+            },
+            |&(epochs, ipe, it)| {
+                let d = DropScheduler::new(Schedule::Linear, 0.9, epochs, ipe);
+                d.rate_at(it) <= d.rate_at(it + 1) + 1e-12
+            },
+        );
+    }
+
+    #[test]
+    fn prop_epoch_bar_mean_is_half_target_for_even_epochs() {
+        check_no_shrink(
+            "epoch-bar-mean",
+            64,
+            |r: &mut Pcg| {
+                let epochs = 2 * (1 + r.below(10) as usize);
+                let ipe = 1 + r.below(50) as usize;
+                let target = 0.05 + 0.9 * r.uniform() as f64;
+                (epochs, ipe, target)
+            },
+            |&(epochs, ipe, target)| {
+                let d = DropScheduler::new(
+                    Schedule::EpochBar { period_epochs: 2 },
+                    target,
+                    epochs,
+                    ipe,
+                );
+                (d.mean_rate() - target / 2.0).abs() < 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn prop_rate_constant_within_epoch_for_epoch_bar() {
+        check_no_shrink(
+            "epoch-bar-constant-within-epoch",
+            DEFAULT_CASES,
+            |r: &mut Pcg| {
+                let ipe = 2 + r.below(100) as usize;
+                let epochs = 2 + r.below(10) as usize;
+                let e = r.below(epochs as u64) as usize;
+                let i1 = r.below(ipe as u64) as usize;
+                let i2 = r.below(ipe as u64) as usize;
+                (epochs, ipe, e, i1, i2)
+            },
+            |&(epochs, ipe, e, i1, i2)| {
+                let d = DropScheduler::paper_default(epochs, ipe);
+                d.rate_at(e * ipe + i1) == d.rate_at(e * ipe + i2)
+            },
+        );
+    }
+}

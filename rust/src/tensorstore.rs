@@ -1,0 +1,223 @@
+//! Tensorstore — binary tensor interchange with the Python compile path
+//! (S8). Format documented in python/compile/tensorstore.py; round-trip
+//! equality across languages is covered by rust/tests/tensorstore_interop.rs.
+
+use std::collections::BTreeMap;
+use std::io::{Read as _, Write as _};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+const MAGIC: &[u8; 8] = b"TSTORE01";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+            Dtype::U32 => "u32",
+        }
+    }
+    pub fn from_name(n: &str) -> Result<Dtype> {
+        Ok(match n {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "u32" => Dtype::U32,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+    pub fn size(self) -> usize {
+        4
+    }
+}
+
+/// A host tensor: raw little-endian bytes + shape + dtype.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn from_f32(shape: Vec<usize>, vals: &[f32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: Dtype::F32, shape, data }
+    }
+
+    pub fn from_i32(shape: Vec<usize>, vals: &[i32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: Dtype::I32, shape, data }
+    }
+
+    pub fn from_u32(shape: Vec<usize>, vals: &[u32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { dtype: Dtype::U32, shape, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, Dtype::F32);
+        self.data.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+    }
+
+    pub fn to_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, Dtype::I32);
+        self.data.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+    }
+
+    pub fn to_u32(&self) -> Vec<u32> {
+        assert_eq!(self.dtype, Dtype::U32);
+        self.data.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+    }
+}
+
+/// Write tensors (ordered) to `path`.
+pub fn write<P: AsRef<Path>>(path: P, tensors: &[(String, Tensor)]) -> Result<()> {
+    let mut metas = Vec::new();
+    let mut offset = 0usize;
+    for (name, t) in tensors {
+        metas.push(obj(vec![
+            ("name", s(name)),
+            ("dtype", s(t.dtype.name())),
+            ("shape", arr(t.shape.iter().map(|&d| num(d as f64)).collect())),
+            ("offset", num(offset as f64)),
+            ("nbytes", num(t.data.len() as f64)),
+        ]));
+        offset += t.data.len();
+    }
+    let header = obj(vec![("tensors", arr(metas))]).to_string();
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {:?}", path.as_ref()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for (_, t) in tensors {
+        f.write_all(&t.data)?;
+    }
+    Ok(())
+}
+
+/// Read all tensors from `path`, preserving file order.
+pub fn read<P: AsRef<Path>>(path: P) -> Result<Vec<(String, Tensor)>> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {:?}", path.as_ref()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{:?}: bad magic {:?}", path.as_ref(), magic);
+    }
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4)?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?).map_err(anyhow::Error::msg)?;
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+
+    let mut out = Vec::new();
+    for m in header.arr_field("tensors").map_err(anyhow::Error::msg)? {
+        let name = m.str_field("name").map_err(anyhow::Error::msg)?.to_string();
+        let dtype = Dtype::from_name(m.str_field("dtype").map_err(anyhow::Error::msg)?)?;
+        let shape: Vec<usize> = m
+            .arr_field("shape")
+            .map_err(anyhow::Error::msg)?
+            .iter()
+            .map(|j| j.as_usize().unwrap_or(0))
+            .collect();
+        let off = m.usize_field("offset").map_err(anyhow::Error::msg)?;
+        let nbytes = m.usize_field("nbytes").map_err(anyhow::Error::msg)?;
+        if off + nbytes > payload.len() {
+            bail!("tensor {name} out of bounds");
+        }
+        out.push((
+            name,
+            Tensor { dtype, shape, data: payload[off..off + nbytes].to_vec() },
+        ));
+    }
+    Ok(out)
+}
+
+/// Read into a name-keyed map.
+pub fn read_map<P: AsRef<Path>>(path: P) -> Result<BTreeMap<String, Tensor>> {
+    Ok(read(path)?.into_iter().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let dir = std::env::temp_dir().join("ssprop_ts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("a.tstore");
+        let tensors = vec![
+            ("w".to_string(), Tensor::from_f32(vec![2, 3], &[1.0, -2.5, 3.0, 0.0, 5.5, -6.0])),
+            ("idx".to_string(), Tensor::from_i32(vec![4], &[-1, 0, 1, 2])),
+            ("key".to_string(), Tensor::from_u32(vec![2], &[7, 9])),
+            ("scalar".to_string(), Tensor::from_f32(vec![], &[42.0])),
+        ];
+        write(&p, &tensors).unwrap();
+        let back = read(&p).unwrap();
+        assert_eq!(back, tensors);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("ssprop_ts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.tstore");
+        std::fs::write(&p, b"NOTMAGICxxxxxxxxxxx").unwrap();
+        assert!(read(&p).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let dir = std::env::temp_dir().join("ssprop_ts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trunc.tstore");
+        let tensors = vec![("w".to_string(), Tensor::from_f32(vec![4], &[1.0; 4]))];
+        write(&p, &tensors).unwrap();
+        let all = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &all[..all.len() - 8]).unwrap();
+        assert!(read(&p).is_err());
+    }
+
+    #[test]
+    fn scalar_and_empty_shapes() {
+        let t = Tensor::from_f32(vec![], &[3.5]);
+        assert_eq!(t.len(), 1);
+        let e = Tensor::from_f32(vec![0, 3], &[]);
+        assert!(e.is_empty());
+    }
+}

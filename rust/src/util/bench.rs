@@ -1,0 +1,144 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set; S12).
+//!
+//! Warmup + timed iterations with median / MAD / throughput reporting, and a
+//! machine-readable JSON row per benchmark appended to `results/bench.jsonl`
+//! so EXPERIMENTS.md tables regenerate from raw data.
+
+use std::io::Write as _;
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> Duration {
+        Duration::from_nanos(self.median_ns as u64)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed passes then up to `iters` timed ones
+/// (capped by `budget`). Returns robust statistics.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, budget: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples_ns: Vec<f64> = Vec::with_capacity(iters);
+    let start = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    summarize(name, samples_ns)
+}
+
+fn summarize(name: &str, mut ns: Vec<f64>) -> BenchResult {
+    assert!(!ns.is_empty());
+    ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = percentile(&ns, 50.0);
+    let mut dev: Vec<f64> = ns.iter().map(|x| (x - median).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = percentile(&dev, 50.0);
+    let mean = ns.iter().sum::<f64>() / ns.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: ns.len(),
+        median_ns: median,
+        mad_ns: mad,
+        mean_ns: mean,
+        min_ns: ns[0],
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = p / 100.0 * (sorted.len() - 1) as f64;
+    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+    let frac = pos - pos.floor();
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Print a criterion-style line and append the JSON record.
+pub fn report(r: &BenchResult) {
+    println!(
+        "{:<48} {:>12} ± {:<10} ({} iters, min {})",
+        r.name,
+        fmt_ns(r.median_ns),
+        fmt_ns(r.mad_ns),
+        r.iters,
+        fmt_ns(r.min_ns)
+    );
+    let _ = std::fs::create_dir_all("results");
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("results/bench.jsonl")
+    {
+        let _ = writeln!(
+            f,
+            "{{\"name\":\"{}\",\"median_ns\":{},\"mad_ns\":{},\"mean_ns\":{},\"iters\":{}}}",
+            r.name, r.median_ns, r.mad_ns, r.mean_ns, r.iters
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_on_known_samples() {
+        let r = summarize("t", vec![10.0, 20.0, 30.0, 40.0, 50.0]);
+        assert_eq!(r.median_ns, 30.0);
+        assert_eq!(r.mad_ns, 10.0);
+        assert_eq!(r.min_ns, 10.0);
+        assert_eq!(r.mean_ns, 30.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = vec![0.0, 10.0];
+        assert_eq!(percentile(&v, 50.0), 5.0);
+        assert_eq!(percentile(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    fn bench_runs_and_respects_budget() {
+        let r = bench("sleepless", 1, 10_000, Duration::from_millis(50), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 1);
+        assert!(r.median_ns < 1e7);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

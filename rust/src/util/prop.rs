@@ -1,0 +1,105 @@
+//! Mini property-testing framework (proptest is not in the offline vendor
+//! set; S13). Seeded generators + a check loop with failure shrinking for
+//! integer/float tuples. Used for coordinator invariants (schedulers,
+//! selection, batching, FLOPs monotonicity).
+
+use super::rng::Pcg;
+
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` on `cases` random inputs drawn by `gen`. On failure, attempt
+/// to shrink the input with `shrink` (halving-style candidates) and panic
+/// with the smallest failing case found.
+pub fn check<T, G, P, S>(name: &str, cases: usize, mut gen: G, mut prop: P, shrink: S)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg) -> T,
+    P: FnMut(&T) -> bool,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Pcg::new(0x5550_5250, name.len() as u64);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // shrink loop
+        let mut smallest = input.clone();
+        let mut improved = true;
+        while improved {
+            improved = false;
+            for cand in shrink(&smallest) {
+                if !prop(&cand) {
+                    smallest = cand;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+        panic!(
+            "property {name:?} failed at case {case}:\n  original: {input:?}\n  shrunk:   {smallest:?}"
+        );
+    }
+}
+
+/// Convenience: no shrinking.
+pub fn check_no_shrink<T, G, P>(name: &str, cases: usize, gen: G, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg) -> T,
+    P: FnMut(&T) -> bool,
+{
+    check(name, cases, gen, prop, |_| Vec::new());
+}
+
+/// Shrinker for a single usize: 0, n/2, n-1.
+pub fn shrink_usize(n: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    if n > 0 {
+        v.push(0);
+        v.push(n / 2);
+        v.push(n - 1);
+    }
+    v.dedup();
+    v
+}
+
+/// Shrinker for an f64 in [0,1]: 0, x/2.
+pub fn shrink_unit_f64(x: f64) -> Vec<f64> {
+    if x > 1e-9 {
+        vec![0.0, x / 2.0]
+    } else {
+        vec![]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check_no_shrink("add-commutes", 128, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk")]
+    fn failing_property_shrinks() {
+        check(
+            "all-below-50",
+            512,
+            |r| r.below(100) as usize,
+            |&n| n < 50,
+            |&n| shrink_usize(n),
+        );
+    }
+
+    #[test]
+    fn shrinkers_propose_smaller() {
+        assert!(shrink_usize(10).iter().all(|&c| c < 10));
+        assert!(shrink_unit_f64(0.8).iter().all(|&c| c < 0.8));
+        assert!(shrink_usize(0).is_empty());
+    }
+}

@@ -1,0 +1,284 @@
+//! Integration tests over real AOT artifacts (require `make artifacts`).
+//!
+//! These exercise the full L3→runtime→compiled-HLO path: loading, manifest
+//! binding, state feedback, schedulers, checkpoints, the DDPM sampler, and
+//! the compacted Pallas executables.
+
+use std::sync::OnceLock;
+
+use ssprop::coordinator::{checkpoint, TrainConfig, Trainer};
+use ssprop::data::{Loader, Split, SynthDataset};
+use ssprop::ddpm::DdpmTrainer;
+use ssprop::runtime::{f32_literal, literal_scalar_f32, Engine, Role};
+use ssprop::schedule::{DropScheduler, Schedule};
+use ssprop::util::rng::Pcg;
+
+fn engine() -> &'static Engine {
+    static ENGINE: OnceLock<Engine> = OnceLock::new();
+    ENGINE.get_or_init(|| {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
+        assert!(
+            dir.join("index.json").exists(),
+            "artifacts missing — run `make artifacts` first"
+        );
+        Engine::new(dir).expect("PJRT engine")
+    })
+}
+
+fn quick_cfg(artifact: &str, epochs: usize, ipe: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::quick(artifact, epochs, ipe);
+    cfg.lr = 2e-3;
+    cfg
+}
+
+#[test]
+fn loads_artifact_and_manifest_consistent() {
+    let g = engine().load("cnn2_cifar100_train").unwrap();
+    let man = &g.manifest;
+    assert_eq!(man.kind, "train");
+    assert_eq!(man.dataset, "cifar100");
+    assert!(man.input_index(Role::DropRate).is_some());
+    assert!(man.input_index(Role::Lr).is_some());
+    // every param output feeds a param input
+    for o in &man.outputs {
+        if o.role.is_state() {
+            assert!(o.feeds_input >= 0, "{} must feed an input", o.name);
+            let i = &man.inputs[o.feeds_input as usize];
+            assert_eq!(i.name, o.name);
+            assert_eq!(i.shape, o.shape);
+        }
+    }
+}
+
+#[test]
+fn single_step_runs_and_is_deterministic() {
+    let e = engine();
+    let mut t1 = Trainer::new(e, quick_cfg("cnn2_cifar100", 1, 2)).unwrap();
+    let mut t2 = Trainer::new(e, quick_cfg("cnn2_cifar100", 1, 2)).unwrap();
+    let order = t1.loader.epoch_order(0);
+    let batch = t1.loader.batch(&order, 0);
+    let (l1, a1) = t1.step(&batch, 0.0).unwrap();
+    let (l2, a2) = t2.step(&batch, 0.0).unwrap();
+    assert!(l1.is_finite() && (0.0..=1.0).contains(&a1));
+    assert_eq!(l1, l2);
+    assert_eq!(a1, a2);
+}
+
+#[test]
+fn training_decreases_loss_dense_and_sparse() {
+    let e = engine();
+    for (schedule, target) in [
+        (Schedule::Constant, 0.0),
+        (Schedule::EpochBar { period_epochs: 2 }, 0.8),
+    ] {
+        let mut cfg = quick_cfg("cnn2_cifar100", 4, 12);
+        cfg.scheduler = DropScheduler::new(schedule, target, 4, 12);
+        let mut t = Trainer::new(e, cfg).unwrap();
+        t.run().unwrap();
+        let m = &t.metrics;
+        let first = m.losses[..6].iter().sum::<f64>() / 6.0;
+        let last = m.losses[m.losses.len() - 6..].iter().sum::<f64>() / 6.0;
+        assert!(
+            last < first,
+            "target {target}: loss should fall ({first:.3} -> {last:.3})"
+        );
+        if target > 0.0 {
+            assert!(m.flops_saving() > 0.3, "saving {}", m.flops_saving());
+        } else {
+            assert_eq!(m.flops_saving(), 0.0);
+        }
+    }
+}
+
+#[test]
+fn sparse_step_diverges_from_dense_step() {
+    let e = engine();
+    let mut td = Trainer::new(e, quick_cfg("cnn2_cifar100", 1, 2)).unwrap();
+    let mut ts = Trainer::new(e, quick_cfg("cnn2_cifar100", 1, 2)).unwrap();
+    let order = td.loader.epoch_order(0);
+    let batch = td.loader.batch(&order, 0);
+    td.step(&batch, 0.0).unwrap();
+    ts.step(&batch, 0.8).unwrap();
+    // pick a conv weight leaf and compare
+    let name = td
+        .state
+        .keys()
+        .find(|k| k.starts_with("param") && k.contains("conv"))
+        .unwrap()
+        .clone();
+    let wd = td.state[&name].to_vec::<f32>().unwrap();
+    let ws = ts.state[&name].to_vec::<f32>().unwrap();
+    assert_ne!(wd, ws, "sparse backward must change the update");
+}
+
+#[test]
+fn eval_graph_runs_and_scores() {
+    let e = engine();
+    let mut t = Trainer::new(e, quick_cfg("cnn2_cifar100", 1, 4)).unwrap();
+    let (loss, acc) = t.run().unwrap();
+    assert!(loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn resnet_artifact_trains() {
+    let e = engine();
+    let mut cfg = quick_cfg("resnet18_cifar10", 2, 4);
+    cfg.scheduler = DropScheduler::paper_default(2, 4);
+    let mut t = Trainer::new(e, cfg).unwrap();
+    let (loss, _) = t.run().unwrap();
+    assert!(loss.is_finite());
+    // epoch 0 dense, epoch 1 at 0.8 -> mean drop 0.4
+    assert!((t.metrics.mean_drop_rate() - 0.4).abs() < 1e-9);
+}
+
+#[test]
+fn dropout_artifact_accepts_runtime_rate() {
+    let e = engine();
+    let mut cfg = quick_cfg("resnet50_cifar10", 1, 2);
+    cfg.dropout_rate = 0.4;
+    let mut t = Trainer::new(e, cfg).unwrap();
+    let order = t.loader.epoch_order(0);
+    let batch = t.loader.batch(&order, 0);
+    let (loss, _) = t.step(&batch, 0.0).unwrap();
+    assert!(loss.is_finite());
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_training() {
+    let e = engine();
+    let dir = std::env::temp_dir().join("ssprop_int_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("state.tstore");
+
+    let mut t = Trainer::new(e, quick_cfg("cnn2_cifar100", 1, 4)).unwrap();
+    t.run().unwrap();
+    checkpoint::save(&path, &t.state, "cnn2_cifar100", 1).unwrap();
+    let (state, artifact, epoch) = checkpoint::load(&path).unwrap();
+    assert_eq!(artifact, "cnn2_cifar100");
+    assert_eq!(epoch, 1);
+    assert_eq!(state.len(), t.state.len());
+
+    // restored state continues training identically to in-memory state
+    let mut t2 = Trainer::new(e, quick_cfg("cnn2_cifar100", 1, 4)).unwrap();
+    t2.state = state;
+    let order = t.loader.epoch_order(5);
+    let batch = t.loader.batch(&order, 0);
+    let (l1, _) = t.step(&batch, 0.0).unwrap();
+    let (l2, _) = t2.step(&batch, 0.0).unwrap();
+    assert_eq!(l1, l2);
+}
+
+#[test]
+fn ddpm_trains_and_samples() {
+    let e = engine();
+    let mut tr = DdpmTrainer::new(e, "mnist", 2e-3, 0).unwrap();
+    let sched = DropScheduler::paper_default(2, 8);
+    let loss = tr.train(16, &sched).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    let samples = tr.sample(3).unwrap();
+    assert_eq!(samples.len(), tr.denoise_graph.manifest.batch);
+    for s in &samples {
+        assert_eq!(s.len(), 28 * 28);
+        assert!(s.iter().all(|v| v.is_finite()));
+    }
+    assert!(tr.metrics.flops_saving() > 0.2);
+}
+
+#[test]
+fn compacted_pallas_executables_match_semantics() {
+    let e = engine();
+    let dense = e.load("conv_pallas_dense").unwrap();
+    let d80 = e.load("conv_pallas_d80").unwrap();
+    let man = &dense.manifest;
+    let (bt, c, h) = (man.batch, man.layers.convs[0].cout, man.layers.convs[0].hout);
+    let k = man.layers.convs[0].k;
+    let cin = man.layers.convs[0].cin;
+
+    let mut rng = Pcg::new(5, 1);
+    let x: Vec<f32> = (0..bt * cin * h * h).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..c * cin * k * k).map(|_| rng.normal() * 0.1).collect();
+    let b: Vec<f32> = (0..c).map(|_| rng.normal() * 0.1).collect();
+    let inputs = vec![
+        f32_literal(&[bt, cin, h, h], &x).unwrap(),
+        f32_literal(&[c, cin, k, k], &w).unwrap(),
+        f32_literal(&[c], &b).unwrap(),
+    ];
+    let out_dense = dense.run(&inputs).unwrap();
+    let out_d80 = d80.run(&inputs).unwrap();
+
+    // loss (output 3) identical: forward is dense in both
+    let ld = literal_scalar_f32(&out_dense[3]).unwrap();
+    let ls = literal_scalar_f32(&out_d80[3]).unwrap();
+    assert!((ld - ls).abs() <= 1e-2 * ld.abs().max(1.0), "fwd must match: {ld} vs {ls}");
+
+    // dW (output 1): dense has all rows nonzero, d80 exactly ceil(0.2*C)
+    let count_rows = |lit: &xla::Literal| -> usize {
+        let v = lit.to_vec::<f32>().unwrap();
+        let row = cin * k * k;
+        (0..c).filter(|i| v[i * row..(i + 1) * row].iter().any(|x| *x != 0.0)).count()
+    };
+    assert_eq!(count_rows(&out_dense[1]), c);
+    let keep = ssprop::flops::keep_channels(c, 0.8);
+    assert_eq!(count_rows(&out_d80[1]), keep);
+}
+
+#[test]
+fn prefetched_loader_feeds_trainer_consistently() {
+    let e = engine();
+    let t = Trainer::new(e, quick_cfg("cnn2_cifar100", 1, 4)).unwrap();
+    let rx = t.loader.prefetch_epoch(0, 2);
+    let order = t.loader.epoch_order(0);
+    for (i, b) in rx.iter().take(4).enumerate() {
+        assert_eq!(b.x, t.loader.batch(&order, i).x);
+    }
+}
+
+#[test]
+fn celeba_multilabel_artifact_runs() {
+    let e = engine();
+    let mut t = Trainer::new(e, quick_cfg("resnet18_celeba", 1, 2)).unwrap();
+    let order = t.loader.epoch_order(0);
+    let batch = t.loader.batch(&order, 0);
+    assert!(!batch.y_multi.is_empty());
+    let (loss, acc) = t.step(&batch, 0.5).unwrap();
+    assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn fig2_variant_artifacts_load_and_step() {
+    let e = engine();
+    for suffix in ["_hw", "_all", "_random"] {
+        let name = format!("resnet18_cifar10{suffix}");
+        let mut t = Trainer::new(e, quick_cfg(&name, 1, 2)).unwrap();
+        let order = t.loader.epoch_order(0);
+        let batch = t.loader.batch(&order, 0);
+        let (loss, _) = t.step(&batch, 0.6).unwrap();
+        assert!(loss.is_finite(), "{name}");
+    }
+}
+
+#[test]
+fn python_written_tensorstore_reads_back() {
+    let init = engine().load_init("cnn2_cifar100_train").unwrap();
+    assert!(!init.is_empty());
+    let names: Vec<&str> = init.iter().map(|(n, _)| n.as_str()).collect();
+    assert!(names.iter().any(|n| n.starts_with("param")));
+    assert!(names.iter().any(|n| n.starts_with("opt")));
+    assert!(names.iter().any(|n| n.starts_with("bn")));
+    for (_, t) in &init {
+        assert_eq!(t.data.len(), t.len() * 4);
+    }
+}
+
+#[test]
+fn loader_matches_manifest_geometry() {
+    let g = engine().load("resnet18_cifar10_train").unwrap();
+    let man = &g.manifest;
+    let ds = SynthDataset::new(ssprop::data::spec(&man.dataset).unwrap(), 0);
+    let loader = Loader::new(ds, Split::Train, man.batch);
+    let order = loader.epoch_order(0);
+    let b = loader.batch(&order, 0);
+    let x_spec = &man.inputs[man.input_index(Role::DataX).unwrap()];
+    assert_eq!(b.x.len(), x_spec.shape.iter().product::<usize>());
+}
