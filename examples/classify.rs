@@ -2,70 +2,104 @@
 //! ssProp, several hundred steps each; logs both loss curves to
 //! results/classify_loss.csv and reports the Table 4-style comparison.
 //!
+//! Requires `--features pjrt` + artifacts (`make artifacts`):
+//!
 //! ```bash
-//! cargo run --release --example classify -- --epochs 6 --iters 50
+//! cargo run --release --features pjrt --example classify -- --epochs 6 --iters 50
 //! ```
 
-use std::io::Write as _;
-
 use anyhow::Result;
-use ssprop::coordinator::{TrainConfig, Trainer};
-use ssprop::flops::paper_resnet;
-use ssprop::runtime::Engine;
-use ssprop::schedule::{DropScheduler, Schedule};
-use ssprop::util::cli::Args;
 
-fn run(engine: &Engine, label: &str, schedule: Schedule, target: f64,
-       epochs: usize, ipe: usize) -> Result<Trainer> {
-    let cfg = TrainConfig {
-        artifact: "resnet18_cifar10".into(),
-        epochs,
-        iters_per_epoch: ipe,
-        lr: 1e-3,
-        scheduler: DropScheduler::new(schedule, target, epochs, ipe),
-        dropout_rate: 0.0,
-        seed: 0,
-        eval_every: 0,
-        verbose: false,
-    };
-    let mut t = Trainer::new(engine, cfg)?;
-    let (loss, acc) = t.run()?;
-    let m = &t.metrics;
-    println!(
-        "{label:<10} test loss {loss:.4}  test acc {acc:.3}  bwd FLOPs {:.3e} ({:.1}% saved)  wall {:.1}s",
-        m.flops_actual,
-        m.flops_saving() * 100.0,
-        m.total_wall_secs()
-    );
-    Ok(t)
+#[cfg(feature = "pjrt")]
+mod pjrt_example {
+    use std::io::Write as _;
+
+    use anyhow::Result;
+    use ssprop::coordinator::{TrainConfig, Trainer};
+    use ssprop::flops::paper_resnet;
+    use ssprop::runtime::Engine;
+    use ssprop::schedule::{DropScheduler, Schedule};
+    use ssprop::util::cli::Args;
+
+    fn train(
+        engine: &Engine,
+        label: &str,
+        schedule: Schedule,
+        target: f64,
+        epochs: usize,
+        ipe: usize,
+    ) -> Result<Trainer> {
+        let cfg = TrainConfig {
+            artifact: "resnet18_cifar10".into(),
+            epochs,
+            iters_per_epoch: ipe,
+            lr: 1e-3,
+            scheduler: DropScheduler::new(schedule, target, epochs, ipe),
+            dropout_rate: 0.0,
+            seed: 0,
+            eval_every: 0,
+            verbose: false,
+        };
+        let mut t = Trainer::new(engine, cfg)?;
+        let (loss, acc) = t.run()?;
+        let m = &t.metrics;
+        println!(
+            "{label:<10} test loss {loss:.4}  test acc {acc:.3}  bwd FLOPs {:.3e} \
+             ({:.1}% saved)  wall {:.1}s",
+            m.flops_actual,
+            m.flops_saving() * 100.0,
+            m.total_wall_secs()
+        );
+        Ok(t)
+    }
+
+    pub fn run() -> Result<()> {
+        let args = Args::from_env();
+        let epochs = args.get_usize("epochs", 6);
+        let ipe = args.get_usize("iters", 50);
+        let engine = Engine::auto()?;
+
+        println!("== e2e: ResNet-18 (w=0.25), synth-CIFAR-10, {epochs} epochs x {ipe} iters ==\n");
+        let dense = train(&engine, "dense", Schedule::Constant, 0.0, epochs, ipe)?;
+        let ssprop =
+            train(&engine, "ssProp", Schedule::EpochBar { period_epochs: 2 }, 0.8, epochs, ipe)?;
+
+        // full-width analytic comparison (the paper's Table 4 row)
+        let full = paper_resnet("resnet18", 32, 3, 1.0);
+        println!("\nfull-width analytic (paper Table 4, bs 128):");
+        println!("  dense  {:.2} B/iter (paper 285.32)", full.bwd_flops_per_iter(128, 0.0) / 1e9);
+        println!(
+            "  ssProp {:.2} B/iter (paper 171.61)",
+            full.bwd_flops_scheduled(128, &[0.0, 0.8]) / 1e9
+        );
+
+        std::fs::create_dir_all("results")?;
+        let mut f = std::fs::File::create("results/classify_loss.csv")?;
+        writeln!(f, "iter,dense_loss,ssprop_loss,ssprop_drop_rate")?;
+        for i in 0..dense.metrics.losses.len().min(ssprop.metrics.losses.len()) {
+            writeln!(
+                f,
+                "{i},{:.6},{:.6},{:.2}",
+                dense.metrics.losses[i], ssprop.metrics.losses[i], ssprop.metrics.drop_rates[i]
+            )?;
+        }
+        println!("\nloss curves -> results/classify_loss.csv");
+        Ok(())
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn run() -> Result<()> {
+    pjrt_example::run()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run() -> Result<()> {
+    println!("classify drives PJRT artifacts; rebuild with --features pjrt");
+    println!("(for a no-setup demo, try: cargo run --release --example quickstart)");
+    Ok(())
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
-    let epochs = args.get_usize("epochs", 6);
-    let ipe = args.get_usize("iters", 50);
-    let engine = Engine::auto()?;
-
-    println!("== e2e: ResNet-18 (w=0.25) on synth-CIFAR-10, {epochs} epochs x {ipe} iters ==\n");
-    let dense = run(&engine, "dense", Schedule::Constant, 0.0, epochs, ipe)?;
-    let ssprop = run(&engine, "ssProp", Schedule::EpochBar { period_epochs: 2 }, 0.8, epochs, ipe)?;
-
-    // full-width analytic comparison (the paper's Table 4 row)
-    let full = paper_resnet("resnet18", 32, 3, 1.0);
-    println!("\nfull-width analytic (paper Table 4, bs 128):");
-    println!("  dense  {:.2} B/iter (paper 285.32)", full.bwd_flops_per_iter(128, 0.0) / 1e9);
-    println!("  ssProp {:.2} B/iter (paper 171.61)", full.bwd_flops_scheduled(128, &[0.0, 0.8]) / 1e9);
-
-    std::fs::create_dir_all("results")?;
-    let mut f = std::fs::File::create("results/classify_loss.csv")?;
-    writeln!(f, "iter,dense_loss,ssprop_loss,ssprop_drop_rate")?;
-    for i in 0..dense.metrics.losses.len().min(ssprop.metrics.losses.len()) {
-        writeln!(
-            f,
-            "{i},{:.6},{:.6},{:.2}",
-            dense.metrics.losses[i], ssprop.metrics.losses[i], ssprop.metrics.drop_rates[i]
-        )?;
-    }
-    println!("\nloss curves -> results/classify_loss.csv");
-    Ok(())
+    run()
 }

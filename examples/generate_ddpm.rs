@@ -2,46 +2,69 @@
 //! ssProp convolutions on synth-MNIST, sample with the rust ancestral
 //! sampler, score with the FID-proxy, and write a sample grid.
 //!
+//! Requires `--features pjrt` + artifacts (`make artifacts`):
+//!
 //! ```bash
-//! cargo run --release --example generate_ddpm -- --iters 200
+//! cargo run --release --features pjrt --example generate_ddpm -- --iters 200
 //! ```
 
 use anyhow::Result;
-use ssprop::ddpm::{write_pgm_grid, DdpmTrainer};
-use ssprop::metrics::fid_proxy;
-use ssprop::runtime::Engine;
-use ssprop::schedule::{DropScheduler, Schedule};
-use ssprop::util::cli::Args;
+
+#[cfg(feature = "pjrt")]
+mod pjrt_example {
+    use anyhow::Result;
+    use ssprop::ddpm::{write_pgm_grid, DdpmTrainer};
+    use ssprop::metrics::fid_proxy;
+    use ssprop::runtime::Engine;
+    use ssprop::schedule::{DropScheduler, Schedule};
+    use ssprop::util::cli::Args;
+
+    pub fn run() -> Result<()> {
+        let args = Args::from_env();
+        let iters = args.get_usize("iters", 200);
+        let dataset = args.get_or("dataset", "mnist").to_string();
+        let engine = Engine::auto()?;
+
+        println!("== DDPM on synth-{dataset}: dense vs ssProp ({iters} iters each) ==\n");
+        std::fs::create_dir_all("results")?;
+
+        for (label, schedule, target) in [
+            ("dense", Schedule::Constant, 0.0),
+            ("ssprop", Schedule::EpochBar { period_epochs: 2 }, 0.8),
+        ] {
+            let mut tr = DdpmTrainer::new(&engine, &dataset, 2e-3, 0)?;
+            let sched = DropScheduler::new(schedule, target, 2, iters.div_ceil(2).max(1));
+            let loss = tr.train(iters, &sched)?;
+            let samples = tr.sample(7)?;
+            let real = tr.real_batch(128);
+            let fid = fid_proxy(&real, &samples, 1234);
+            let man = tr.denoise_graph.manifest.clone();
+            let path = format!("results/ddpm_{dataset}_{label}.pgm");
+            write_pgm_grid(&path, &samples, man.img, man.channels)?;
+            let m = &tr.metrics;
+            println!(
+                "{label:<7} loss {loss:.4}  FID-proxy {fid:.4}  bwd FLOPs {:.3e} \
+                 ({:.1}% saved)  wall {:.1}s  -> {path}",
+                m.flops_actual,
+                m.flops_saving() * 100.0,
+                m.total_wall_secs()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn run() -> Result<()> {
+    pjrt_example::run()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run() -> Result<()> {
+    println!("generate_ddpm drives PJRT artifacts; rebuild with --features pjrt");
+    Ok(())
+}
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
-    let iters = args.get_usize("iters", 200);
-    let dataset = args.get_or("dataset", "mnist").to_string();
-    let engine = Engine::auto()?;
-
-    println!("== DDPM on synth-{dataset}: dense vs ssProp ({iters} iters each) ==\n");
-    std::fs::create_dir_all("results")?;
-
-    for (label, schedule, target) in [
-        ("dense", Schedule::Constant, 0.0),
-        ("ssprop", Schedule::EpochBar { period_epochs: 2 }, 0.8),
-    ] {
-        let mut tr = DdpmTrainer::new(&engine, &dataset, 2e-3, 0)?;
-        let sched = DropScheduler::new(schedule, target, 2, iters.div_ceil(2).max(1));
-        let loss = tr.train(iters, &sched)?;
-        let samples = tr.sample(7)?;
-        let real = tr.real_batch(128);
-        let fid = fid_proxy(&real, &samples, 1234);
-        let man = tr.denoise_graph.manifest.clone();
-        let path = format!("results/ddpm_{dataset}_{label}.pgm");
-        write_pgm_grid(&path, &samples, man.img, man.channels)?;
-        let m = &tr.metrics;
-        println!(
-            "{label:<7} loss {loss:.4}  FID-proxy {fid:.4}  bwd FLOPs {:.3e} ({:.1}% saved)  wall {:.1}s  -> {path}",
-            m.flops_actual,
-            m.flops_saving() * 100.0,
-            m.total_wall_secs()
-        );
-    }
-    Ok(())
+    run()
 }

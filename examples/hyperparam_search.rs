@@ -2,50 +2,77 @@
 //! sweep SimpleCNN depth x learning rate in normal and sparse modes, check
 //! that the best cell agrees, and project the energy the sparse search saved.
 //!
+//! Requires `--features pjrt` + artifacts (`make artifacts`):
+//!
 //! ```bash
-//! cargo run --release --example hyperparam_search -- --epochs 4 --iters 16
+//! cargo run --release --features pjrt --example hyperparam_search -- --epochs 4 --iters 16
 //! ```
 
 use anyhow::Result;
-use ssprop::energy::{estimate, RTX_A5000};
-use ssprop::experiments::{figures, Scale};
-use ssprop::runtime::Engine;
-use ssprop::util::cli::Args;
+
+#[cfg(feature = "pjrt")]
+mod pjrt_example {
+    use anyhow::Result;
+    use ssprop::energy::{estimate, RTX_A5000};
+    use ssprop::experiments::{figures, Scale};
+    use ssprop::runtime::Engine;
+    use ssprop::util::cli::Args;
+
+    pub fn run() -> Result<()> {
+        let args = Args::from_env();
+        let engine = Engine::auto()?;
+        let scale = Scale {
+            epochs: args.get_usize("epochs", 4),
+            iters_per_epoch: args.get_usize("iters", 12),
+            seed: args.get_u64("seed", 0),
+            lr: 1e-3,
+        };
+        let depths = [2usize, 4, 6];
+        let lrs = [4e-4, 1.6e-3, 6.4e-3];
+
+        println!("== Fig 4: hyperparameter search reliability (SimpleCNN on synth-CIFAR-100) ==");
+        let (normal, sparse) = figures::fig4(&engine, scale, &depths, &lrs)?;
+        normal.print();
+        sparse.print();
+
+        let (ia, ib, corr) = figures::fig4_agreement(&normal, &sparse);
+        let cell = |i: usize| (depths[i / lrs.len()], lrs[i % lrs.len()]);
+        let (dn, ln) = cell(ia);
+        let (ds, ls) = cell(ib);
+        println!("\nbest normal cell: depth {dn}, lr {ln:.1e}");
+        println!("best sparse cell: depth {ds}, lr {ls:.1e}");
+        println!("accuracy-surface correlation: {corr:.3}");
+        println!(
+            "reliability: {}",
+            if ia == ib { "EXACT agreement (paper's claim)" } else { "adjacent cells" }
+        );
+
+        // R&D-phase saving: the sparse search spends ~40% fewer backward FLOPs
+        // per run; at the paper's CIFAR-100 ResNet-50 scale that is
+        let runs = depths.len() * lrs.len();
+        let paper_run_flops = 65.41e15; // Table 4 total, CIFAR-10 ResNet-50
+        let saved = estimate(runs as f64 * paper_run_flops * 0.4, &RTX_A5000);
+        println!(
+            "\nprojected R&D saving for this {runs}-run search at paper scale: \
+             {:.1} kWh / {:.0} gCO2e",
+            saved.kwh, saved.gco2e
+        );
+        Ok(())
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn run() -> Result<()> {
+    pjrt_example::run()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run() -> Result<()> {
+    println!("hyperparam_search drives PJRT artifacts; rebuild with --features pjrt");
+    println!("(for a native sweep, try: cargo run -- train-native --dataset cifar100 --depth 4)");
+    Ok(())
+}
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
-    let engine = Engine::auto()?;
-    let scale = Scale {
-        epochs: args.get_usize("epochs", 4),
-        iters_per_epoch: args.get_usize("iters", 12),
-        seed: args.get_u64("seed", 0),
-        lr: 1e-3,
-    };
-    let depths = [2usize, 4, 6];
-    let lrs = [4e-4, 1.6e-3, 6.4e-3];
-
-    println!("== Fig 4: hyperparameter search reliability (SimpleCNN on synth-CIFAR-100) ==");
-    let (normal, sparse) = figures::fig4(&engine, scale, &depths, &lrs)?;
-    normal.print();
-    sparse.print();
-
-    let (ia, ib, corr) = figures::fig4_agreement(&normal, &sparse);
-    let cell = |i: usize| (depths[i / lrs.len()], lrs[i % lrs.len()]);
-    let (dn, ln) = cell(ia);
-    let (ds, ls) = cell(ib);
-    println!("\nbest normal cell: depth {dn}, lr {ln:.1e}");
-    println!("best sparse cell: depth {ds}, lr {ls:.1e}");
-    println!("accuracy-surface correlation: {corr:.3}");
-    println!("reliability: {}", if ia == ib { "EXACT agreement (paper's claim)" } else { "adjacent cells" });
-
-    // R&D-phase saving: the sparse search spends ~40% fewer backward FLOPs
-    // per run; at the paper's CIFAR-100 ResNet-50 scale that is
-    let runs = depths.len() * lrs.len();
-    let paper_run_flops = 65.41e15; // Table 4 total, CIFAR-10 ResNet-50
-    let saved = estimate(runs as f64 * paper_run_flops * 0.4, &RTX_A5000);
-    println!(
-        "\nprojected R&D saving for this {runs}-run search at paper scale: {:.1} kWh / {:.0} gCO2e",
-        saved.kwh, saved.gco2e
-    );
-    Ok(())
+    run()
 }

@@ -1,46 +1,43 @@
-//! Quickstart: train a small CNN with scheduled sparse back-propagation.
+//! Quickstart: train a small CNN with scheduled sparse back-propagation —
+//! pure Rust, no artifacts, no FFI, runs on any machine:
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 //!
-//! Loads the AOT-compiled `cnn4_cifar100` train/eval graphs, trains a few
-//! epochs with the paper's bar-2-epoch scheduler at D*=0.8, and prints the
-//! loss curve plus the FLOPs/energy ledger.
+//! Trains a SimpleCNN on the synthetic CIFAR-10 substitute with the paper's
+//! bar-2-epoch scheduler at D*=0.8 through the NativeBackend (img2col GEMM
+//! forward, channel top-k compacted sparse backward), and prints the loss
+//! curve plus the FLOPs/energy ledger.
 
 use anyhow::Result;
-use ssprop::coordinator::{TrainConfig, Trainer};
+use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
 use ssprop::energy::RTX_A5000;
-use ssprop::runtime::Engine;
 use ssprop::schedule::DropScheduler;
 
 fn main() -> Result<()> {
-    let engine = Engine::auto()?;
+    let (epochs, ipe) = (4, 24);
+    let mut cfg = NativeTrainConfig::quick("cifar10", epochs, ipe);
+    cfg.scheduler = DropScheduler::paper_default(epochs, ipe); // bar, 2-epoch, D*=0.8
+    cfg.verbose = true;
 
-    let (epochs, ipe) = (4, 16);
-    let cfg = TrainConfig {
-        artifact: "cnn4_cifar100".into(),
-        epochs,
-        iters_per_epoch: ipe,
-        lr: 2e-3,
-        scheduler: DropScheduler::paper_default(epochs, ipe), // bar, 2-epoch, D*=0.8
-        dropout_rate: 0.0,
-        seed: 0,
-        eval_every: 1,
-        verbose: true,
-    };
-
-    println!("== ssProp quickstart: SimpleCNN-4 on synth-CIFAR-100 ==\n");
-    let mut trainer = Trainer::new(&engine, cfg)?;
+    println!("== ssProp quickstart: SimpleCNN on synth-CIFAR-10 (native backend) ==\n");
+    let mut trainer = NativeTrainer::new(cfg)?;
     let (test_loss, test_acc) = trainer.run()?;
 
     let m = &trainer.metrics;
     println!("\nfinal test loss {test_loss:.4}, acc {test_acc:.3}");
-    println!("loss curve (every 8 iters): {:?}",
-             m.losses.iter().step_by(8).map(|l| (l * 100.0).round() / 100.0).collect::<Vec<_>>());
+    println!(
+        "loss curve (every 8 iters): {:?}",
+        m.losses.iter().step_by(8).map(|l| (l * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
     println!("mean drop rate  {:.2} (bar scheduler alternates 0 / 0.8)", m.mean_drop_rate());
-    println!("backward FLOPs  {:.3e} dense-equivalent -> {:.3e} actual ({:.1}% saved)",
-             m.flops_dense, m.flops_actual, m.flops_saving() * 100.0);
+    println!(
+        "backward FLOPs  {:.3e} dense-equivalent -> {:.3e} actual ({:.1}% saved)",
+        m.flops_dense,
+        m.flops_actual,
+        m.flops_saving() * 100.0
+    );
     let saved = m.energy_saved(&RTX_A5000);
     println!("energy saved    {:.6} kWh / {:.4} gCO2e at A5000 scale", saved.kwh, saved.gco2e);
     Ok(())

@@ -1,0 +1,202 @@
+"""Export conv fwd/bwd reference fixtures for the Rust NativeBackend tests.
+
+Mirrors the exact algorithms implemented in ``rust/src/backend/`` with plain
+numpy loops, cross-checks every value against the L1 reference oracle
+(:mod:`python.compile.kernels.ref`, i.e. the paper's equations via JAX), and
+writes ``rust/tests/fixtures/native_conv.json``.
+
+Run from the repo root:
+
+    python python/compile/export_fixtures.py
+
+The JSON is committed so `cargo test` never needs Python/JAX; re-run this
+script only when the reference semantics change.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
+import jax.numpy as jnp  # noqa: E402
+from kernels import ref  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# numpy mirror of the Rust NativeBackend (same index math, same loop order)
+# ---------------------------------------------------------------------------
+
+def out_size(h: int, k: int, stride: int, padding: int) -> int:
+    return (h + 2 * padding - k) // stride + 1
+
+
+def np_im2col(x, k, stride, padding):
+    bt, cin, h, w = x.shape
+    ho, wo = out_size(h, k, stride, padding), out_size(w, k, stride, padding)
+    cols = np.zeros((bt * ho * wo, cin * k * k), np.float32)
+    for b in range(bt):
+        for i in range(ho):
+            for j in range(wo):
+                m = (b * ho + i) * wo + j
+                for c in range(cin):
+                    for ky in range(k):
+                        for kx in range(k):
+                            n = (c * k + ky) * k + kx
+                            y = i * stride + ky - padding
+                            xx = j * stride + kx - padding
+                            if 0 <= y < h and 0 <= xx < w:
+                                cols[m, n] = x[b, c, y, xx]
+    return cols
+
+
+def np_col2img(cols, x_shape, k, stride, padding):
+    bt, cin, h, w = x_shape
+    ho, wo = out_size(h, k, stride, padding), out_size(w, k, stride, padding)
+    out = np.zeros(x_shape, np.float32)
+    for b in range(bt):
+        for i in range(ho):
+            for j in range(wo):
+                m = (b * ho + i) * wo + j
+                for c in range(cin):
+                    for ky in range(k):
+                        for kx in range(k):
+                            n = (c * k + ky) * k + kx
+                            y = i * stride + ky - padding
+                            xx = j * stride + kx - padding
+                            if 0 <= y < h and 0 <= xx < w:
+                                out[b, c, y, xx] += cols[m, n]
+    return out
+
+
+def np_keep_channels(cout: int, d: float) -> int:
+    # ties-to-even, matching both jnp.round and Rust f64::round_ties_even
+    return int(min(max(np.round((1.0 - d) * cout), 1), cout))
+
+
+def np_importance(g):
+    return np.mean(np.abs(g), axis=(0, 2, 3), dtype=np.float32).astype(np.float32)
+
+
+def np_topk_channels(imp, keep):
+    order = sorted(range(len(imp)), key=lambda i: (-imp[i], i))
+    return sorted(order[:keep])
+
+
+def np_backend(x, w, b, g, drop_rate, stride, padding):
+    """Forward + ssProp backward exactly as NativeBackend computes them."""
+    bt, cin, h, wd = x.shape
+    cout, _, k, _ = w.shape
+    ho, wo = out_size(h, k, stride, padding), out_size(wd, k, stride, padding)
+    m, n = bt * ho * wo, cin * k * k
+
+    cols = np_im2col(x, k, stride, padding)              # (M, N)
+    cw = w.reshape(cout, n).T.copy()                     # (N, Cout)
+    ycol = cols @ cw + b[None, :]                        # (M, Cout)
+    y = ycol.reshape(bt, ho, wo, cout).transpose(0, 3, 1, 2)
+
+    imp = np_importance(g)
+    keep = np_keep_channels(cout, drop_rate)
+    keep_idx = np_topk_channels(imp, keep)
+
+    gc = g.transpose(0, 2, 3, 1).reshape(m, cout)        # col[dY]
+    gck = gc[:, keep_idx]                                # (M, k')
+    cwk = cw[:, keep_idx]                                # (N, k')
+    dwk = cols.T @ gck                                   # (N, k')
+    dw = np.zeros((cout, cin, k, k), np.float32)
+    for pos, o in enumerate(keep_idx):
+        dw[o] = dwk[:, pos].reshape(cin, k, k)
+    dcols = gck @ cwk.T                                  # (M, N)
+    dx = np_col2img(dcols, x.shape, k, stride, padding)
+    db = np.zeros(cout, np.float32)
+    for pos, o in enumerate(keep_idx):
+        db[o] = gck[:, pos].sum()
+    return y.astype(np.float32), imp, keep_idx, dx, dw.astype(np.float32), db
+
+
+# ---------------------------------------------------------------------------
+# cross-check against the JAX reference oracle, then export
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # (name, bt, cin, cout, h, w, k, stride, padding, drop_rate)
+    ("k3_s1_p1_d50", 2, 3, 8, 6, 6, 3, 1, 1, 0.5),
+    ("k3_s2_p0_d90", 1, 2, 4, 5, 5, 3, 2, 0, 0.9),
+    ("k3_s2_p1_dense", 2, 1, 6, 8, 8, 3, 2, 1, 0.0),
+    # keep-count tie: (1-0.5)*5 = 2.5 rounds to even -> keep 2
+    ("k3_s1_p1_tie", 1, 2, 5, 4, 4, 3, 1, 1, 0.5),
+]
+
+
+def check_close(name, a, b, tol=1e-5):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    err = np.max(np.abs(a - b) / np.maximum(1.0, np.abs(b)))
+    assert err < tol, f"{name}: max rel err {err}"
+    return err
+
+
+def build_case(name, bt, cin, cout, h, w, k, stride, padding, drop_rate, rng):
+    x = rng.standard_normal((bt, cin, h, w)).astype(np.float32)
+    wt = (rng.standard_normal((cout, cin, k, k)) * 0.2).astype(np.float32)
+    b = (rng.standard_normal(cout) * 0.1).astype(np.float32)
+    ho, wo = out_size(h, k, stride, padding), out_size(w, k, stride, padding)
+    g = rng.standard_normal((bt, cout, ho, wo)).astype(np.float32)
+
+    y, imp, keep_idx, dx, dw, db = np_backend(x, wt, b, g, drop_rate, stride, padding)
+
+    # oracle: forward + importance + selection
+    y_ref = ref.conv_fwd_ref(jnp.array(x), jnp.array(wt), jnp.array(b),
+                             stride=stride, padding=padding)
+    check_close(f"{name}/y", y, y_ref)
+    imp_ref = ref.importance_ref(jnp.array(g), "channel")
+    check_close(f"{name}/importance", imp, imp_ref)
+    keep_ref = int(ref.keep_k_from_drop_rate(jnp.float32(drop_rate), cout))
+    assert len(keep_idx) == keep_ref, f"{name}: keep {len(keep_idx)} vs ref {keep_ref}"
+    mask_ref = np.asarray(ref.topk_mask_ref(jnp.array(imp), keep_ref))
+    assert keep_idx == [i for i in range(cout) if mask_ref[i] > 0], f"{name}: keep_idx"
+
+    # oracle: backward (compacted reference; dense when keep == cout)
+    dx_ref, dw_ref, db_ref = ref.sparse_bwd_compact_ref(
+        jnp.array(x), jnp.array(wt), jnp.array(g), jnp.array(keep_idx),
+        stride=stride, padding=padding,
+    )
+    check_close(f"{name}/dx", dx, dx_ref)
+    check_close(f"{name}/dw", dw, dw_ref)
+    check_close(f"{name}/db", db, db_ref)
+    if drop_rate == 0.0:
+        ddx, ddw, ddb = ref.conv_bwd_ref(jnp.array(x), jnp.array(wt), jnp.array(g),
+                                         stride=stride, padding=padding)
+        check_close(f"{name}/dx_dense", dx, ddx)
+        check_close(f"{name}/dw_dense", dw, ddw)
+        check_close(f"{name}/db_dense", db, ddb)
+
+    flat = lambda a: [float(v) for v in np.asarray(a, np.float32).reshape(-1)]
+    return {
+        "name": name,
+        "bt": bt, "cin": cin, "cout": cout, "h": h, "w": w,
+        "k": k, "stride": stride, "padding": padding,
+        "drop_rate": drop_rate,
+        # "wt"/"bias": the conv parameters ("w" is the image width above)
+        "x": flat(x), "wt": flat(wt), "bias": flat(b), "g": flat(g),
+        "y": flat(y), "importance": flat(imp),
+        "keep_idx": keep_idx,
+        "dx": flat(dx), "dw": flat(dw), "db": flat(db),
+    }
+
+
+def main():
+    rng = np.random.default_rng(20240825)
+    cases = [build_case(*case, rng) for case in CASES]
+    out = pathlib.Path(__file__).resolve().parents[2] / "rust" / "tests" / "fixtures"
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / "native_conv.json"
+    path.write_text(json.dumps({"cases": cases}))
+    print(f"wrote {path} ({path.stat().st_size} bytes, {len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,60 +3,85 @@
 //! (c)   scheduler evaluation throughput across shapes,
 //! (d)   period-sweep rate computation cost.
 //!
-//! Run: `cargo bench --bench fig2_sensitivity`
+//! Requires `--features pjrt` + artifacts; skips with a message otherwise.
+//!
+//! Run: `cargo bench --bench fig2_sensitivity --features pjrt`
 
-use std::time::Duration;
+#[cfg(feature = "pjrt")]
+mod pjrt_bench {
+    use std::time::Duration;
 
-use ssprop::coordinator::{TrainConfig, Trainer};
-use ssprop::runtime::Engine;
-use ssprop::schedule::{DropScheduler, Schedule};
-use ssprop::util::bench::{bench, report};
+    use ssprop::coordinator::{TrainConfig, Trainer};
+    use ssprop::runtime::Engine;
+    use ssprop::schedule::{DropScheduler, Schedule};
+    use ssprop::util::bench::{bench, report};
+
+    pub fn run() {
+        let engine = match Engine::auto() {
+            Ok(e) => e,
+            Err(err) => {
+                println!("skipping fig2_sensitivity: {err}");
+                return;
+            }
+        };
+        println!("== Fig 2 bench: selection-mode step latency + scheduler throughput ==\n");
+
+        // (a/b) selection-mode variants at D = 0.8
+        for (suffix, label) in [
+            ("", "channel_topk"),
+            ("_hw", "hw_topk"),
+            ("_all", "all_topk"),
+            ("_random", "channel_random"),
+        ] {
+            let artifact = format!("resnet18_cifar10{suffix}");
+            let mut t = Trainer::new(&engine, TrainConfig::quick(&artifact, 1, 1)).unwrap();
+            let order = t.loader.epoch_order(0);
+            let batch = t.loader.batch(&order, 0);
+            let r = bench(&format!("fig2ab/{label}/step_d80"), 2, 12, Duration::from_secs(8), || {
+                t.step(&batch, 0.8).unwrap();
+            });
+            report(&r);
+        }
+
+        // (c) scheduler shapes: rate_at over a full training horizon
+        println!();
+        for (name, s) in [
+            ("constant", Schedule::Constant),
+            ("linear", Schedule::Linear),
+            ("cosine", Schedule::Cosine),
+            ("bar", Schedule::Bar),
+            ("epoch_bar", Schedule::EpochBar { period_epochs: 2 }),
+        ] {
+            let d = DropScheduler::new(s, 0.8, 50, 300);
+            let r =
+                bench(&format!("fig2c/{name}/rates_15k_iters"), 2, 50, Duration::from_secs(3), || {
+                    let rates = d.rates();
+                    std::hint::black_box(rates.len());
+                });
+            report(&r);
+        }
+
+        // (d) period sweep cost
+        println!();
+        for p in [30usize, 120, 300] {
+            let d = DropScheduler::new(Schedule::IterPeriodic { period: p }, 0.8, 50, 300);
+            let r =
+                bench(&format!("fig2d/period_{p}/mean_rate"), 2, 50, Duration::from_secs(3), || {
+                    std::hint::black_box(d.mean_rate());
+                });
+            report(&r);
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+use pjrt_bench::run;
+
+#[cfg(not(feature = "pjrt"))]
+fn run() {
+    println!("skipping fig2_sensitivity: PJRT runtime not compiled (build with --features pjrt)");
+}
 
 fn main() {
-    let engine = Engine::auto().expect("artifacts present");
-    println!("== Fig 2 bench: selection-mode step latency + scheduler throughput ==\n");
-
-    // (a/b) selection-mode variants at D = 0.8
-    for (suffix, label) in [
-        ("", "channel_topk"),
-        ("_hw", "hw_topk"),
-        ("_all", "all_topk"),
-        ("_random", "channel_random"),
-    ] {
-        let artifact = format!("resnet18_cifar10{suffix}");
-        let mut t = Trainer::new(&engine, TrainConfig::quick(&artifact, 1, 1)).unwrap();
-        let order = t.loader.epoch_order(0);
-        let batch = t.loader.batch(&order, 0);
-        let r = bench(&format!("fig2ab/{label}/step_d80"), 2, 12, Duration::from_secs(8), || {
-            t.step(&batch, 0.8).unwrap();
-        });
-        report(&r);
-    }
-
-    // (c) scheduler shapes: rate_at over a full training horizon
-    println!();
-    for (name, s) in [
-        ("constant", Schedule::Constant),
-        ("linear", Schedule::Linear),
-        ("cosine", Schedule::Cosine),
-        ("bar", Schedule::Bar),
-        ("epoch_bar", Schedule::EpochBar { period_epochs: 2 }),
-    ] {
-        let d = DropScheduler::new(s, 0.8, 50, 300);
-        let r = bench(&format!("fig2c/{name}/rates_15k_iters"), 2, 50, Duration::from_secs(3), || {
-            let rates = d.rates();
-            std::hint::black_box(rates.len());
-        });
-        report(&r);
-    }
-
-    // (d) period sweep cost
-    println!();
-    for p in [30usize, 120, 300] {
-        let d = DropScheduler::new(Schedule::IterPeriodic { period: p }, 0.8, 50, 300);
-        let r = bench(&format!("fig2d/period_{p}/mean_rate"), 2, 50, Duration::from_secs(3), || {
-            std::hint::black_box(d.mean_rate());
-        });
-        report(&r);
-    }
+    run();
 }

@@ -2,40 +2,63 @@
 //! SimpleCNN depths in dense and sparse modes — the quantity the paper's
 //! R&D-phase energy claim scales with.
 //!
-//! Run: `cargo bench --bench fig4_reliability`
+//! Requires `--features pjrt` + artifacts; skips with a message otherwise.
+//!
+//! Run: `cargo bench --bench fig4_reliability --features pjrt`
 
-use std::time::Duration;
+#[cfg(feature = "pjrt")]
+mod pjrt_bench {
+    use std::time::Duration;
 
-use ssprop::coordinator::{TrainConfig, Trainer};
-use ssprop::runtime::Engine;
-use ssprop::util::bench::{bench, report};
+    use ssprop::coordinator::{TrainConfig, Trainer};
+    use ssprop::runtime::Engine;
+    use ssprop::util::bench::{bench, report};
+
+    pub fn run() {
+        let engine = match Engine::auto() {
+            Ok(e) => e,
+            Err(err) => {
+                println!("skipping fig4_reliability: {err}");
+                return;
+            }
+        };
+        println!("== Fig 4 bench: SimpleCNN depth sweep, dense vs sparse step ==\n");
+
+        for depth in [2usize, 4, 6] {
+            let artifact = format!("cnn{depth}_cifar100");
+            let mut t = Trainer::new(&engine, TrainConfig::quick(&artifact, 1, 1)).unwrap();
+            let order = t.loader.epoch_order(0);
+            let batch = t.loader.batch(&order, 0);
+            for (mode, d) in [("dense", 0.0f64), ("sparse_d80", 0.8)] {
+                let r = bench(
+                    &format!("cnn{depth}/{mode}/step"),
+                    2,
+                    15,
+                    Duration::from_secs(6),
+                    || {
+                        t.step(&batch, d).unwrap();
+                    },
+                );
+                report(&r);
+            }
+            let man = &t.train_graph.manifest;
+            println!(
+                "  analytic bwd FLOPs/iter: dense {:.4} B, D=0.8 {:.4} B\n",
+                man.bwd_flops(0.0) / 1e9,
+                man.bwd_flops(0.8) / 1e9
+            );
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+use pjrt_bench::run;
+
+#[cfg(not(feature = "pjrt"))]
+fn run() {
+    println!("skipping fig4_reliability: PJRT runtime not compiled (build with --features pjrt)");
+}
 
 fn main() {
-    let engine = Engine::auto().expect("artifacts present");
-    println!("== Fig 4 bench: SimpleCNN depth sweep, dense vs sparse step ==\n");
-
-    for depth in [2usize, 4, 6] {
-        let artifact = format!("cnn{depth}_cifar100");
-        let mut t = Trainer::new(&engine, TrainConfig::quick(&artifact, 1, 1)).unwrap();
-        let order = t.loader.epoch_order(0);
-        let batch = t.loader.batch(&order, 0);
-        for (mode, d) in [("dense", 0.0f64), ("sparse_d80", 0.8)] {
-            let r = bench(
-                &format!("cnn{depth}/{mode}/step"),
-                2,
-                15,
-                Duration::from_secs(6),
-                || {
-                    t.step(&batch, d).unwrap();
-                },
-            );
-            report(&r);
-        }
-        let man = &t.train_graph.manifest;
-        println!(
-            "  analytic bwd FLOPs/iter: dense {:.4} B, D=0.8 {:.4} B\n",
-            man.bwd_flops(0.0) / 1e9,
-            man.bwd_flops(0.8) / 1e9
-        );
-    }
+    run();
 }

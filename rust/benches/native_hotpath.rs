@@ -1,0 +1,62 @@
+//! Native-backend hot path: img2col conv forward, dense vs compacted
+//! sparse backward, and the raw GEMM — the costs the ROADMAP's "faster hot
+//! paths" work items move. Runs on the default build (no PJRT, no
+//! artifacts), so any machine can baseline it:
+//!
+//! Run: `cargo bench --bench native_hotpath`
+
+use std::time::Duration;
+
+use ssprop::backend::{Backend, Conv2d, NativeBackend};
+use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
+use ssprop::util::bench::{bench, report};
+use ssprop::util::rng::Pcg;
+
+fn main() {
+    let be = NativeBackend::new();
+    println!("== native backend hot path ==\n-- conv fwd/bwd (bt 16, 32ch, 16x16, k3) --");
+
+    let cfg = Conv2d { bt: 16, cin: 32, h: 16, w: 16, cout: 32, k: 3, stride: 1, padding: 1 };
+    let mut rng = Pcg::new(3, 3);
+    let x: Vec<f32> = (0..cfg.in_len()).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..cfg.w_len()).map(|_| rng.normal() * 0.1).collect();
+    let b: Vec<f32> = (0..cfg.cout).map(|_| rng.normal() * 0.1).collect();
+    let g: Vec<f32> = (0..cfg.out_len()).map(|_| rng.normal()).collect();
+
+    let r = bench("native/conv_fwd", 2, 20, Duration::from_secs(6), || {
+        std::hint::black_box(be.conv2d_fwd(&cfg, &x, &w, Some(&b)));
+    });
+    report(&r);
+
+    for (label, d, need_dx) in [
+        ("dense", 0.0f64, true),
+        ("d50", 0.5, true),
+        ("d80", 0.8, true),
+        ("d80_nodx", 0.8, false),
+    ] {
+        let r = bench(&format!("native/conv_bwd_{label}"), 2, 20, Duration::from_secs(6), || {
+            std::hint::black_box(be.conv2d_bwd_ssprop(&cfg, &x, &w, &g, d, need_dx));
+        });
+        report(&r);
+    }
+
+    println!("\n-- raw GEMM (256x288 . 288x128) --");
+    let (m, k, n) = (256, 288, 128);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let bb: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let r = bench("native/gemm_256x288x128", 2, 30, Duration::from_secs(5), || {
+        std::hint::black_box(be.gemm(m, k, n, &a, &bb));
+    });
+    report(&r);
+
+    println!("\n-- end-to-end SimpleCNN training step --");
+    for (label, d) in [("dense", 0.0f64), ("d80", 0.8)] {
+        let mut t = NativeTrainer::new(NativeTrainConfig::quick("cifar10", 1, 1)).unwrap();
+        let order = t.loader.epoch_order(0);
+        let batch = t.loader.batch(&order, 0);
+        let r = bench(&format!("native/train_step_{label}"), 2, 20, Duration::from_secs(6), || {
+            t.step(&batch, d).unwrap();
+        });
+        report(&r);
+    }
+}

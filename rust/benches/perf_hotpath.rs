@@ -3,82 +3,104 @@
 //! construction, batch generation, manifest-order input assembly).
 //!
 //! This is the bench the EXPERIMENTS.md §Perf iteration log tracks.
+//! Requires `--features pjrt` + artifacts; skips with a message otherwise.
 //!
-//! Run: `cargo bench --bench perf_hotpath`
+//! Run: `cargo bench --bench perf_hotpath --features pjrt`
 
-use std::time::Duration;
+#[cfg(feature = "pjrt")]
+mod pjrt_bench {
+    use std::time::Duration;
 
-use ssprop::coordinator::{TrainConfig, Trainer};
-use ssprop::data::{Loader, Split, SynthDataset};
-use ssprop::runtime::{f32_literal, Engine};
-use ssprop::util::bench::{bench, report};
-use ssprop::util::rng::Pcg;
+    use ssprop::coordinator::{TrainConfig, Trainer};
+    use ssprop::data::{Loader, Split, SynthDataset};
+    use ssprop::runtime::{f32_literal, Engine};
+    use ssprop::util::bench::{bench, report};
+    use ssprop::util::rng::Pcg;
 
-fn main() {
-    let engine = Engine::auto().expect("artifacts present");
-    println!("== §Perf hot path ==\n-- compacted Pallas conv bwd (true sparse) --");
+    pub fn run() {
+        let engine = match Engine::auto() {
+            Ok(e) => e,
+            Err(err) => {
+                println!("skipping perf_hotpath: {err}");
+                return;
+            }
+        };
+        println!("== §Perf hot path ==\n-- compacted Pallas conv bwd (true sparse) --");
 
-    // compacted conv executables: dense vs d50 vs d80
-    let g = engine.load("conv_pallas_dense").unwrap();
-    let man = g.manifest.clone();
-    let l = &man.layers.convs[0];
-    let (bt, c, h, k, cin) = (man.batch, l.cout, l.hout, l.k, l.cin);
-    let mut rng = Pcg::new(1, 1);
-    let x: Vec<f32> = (0..bt * cin * h * h).map(|_| rng.normal()).collect();
-    let w: Vec<f32> = (0..c * cin * k * k).map(|_| rng.normal() * 0.1).collect();
-    let b: Vec<f32> = (0..c).map(|_| rng.normal() * 0.1).collect();
-    let inputs = vec![
-        f32_literal(&[bt, cin, h, h], &x).unwrap(),
-        f32_literal(&[c, cin, k, k], &w).unwrap(),
-        f32_literal(&[c], &b).unwrap(),
-    ];
-    for name in ["conv_pallas_dense", "conv_pallas_d50", "conv_pallas_d80"] {
-        let g = engine.load(name).unwrap();
-        let r = bench(&format!("{name}/fwd+bwd"), 2, 12, Duration::from_secs(10), || {
-            g.run(&inputs).unwrap();
+        // compacted conv executables: dense vs d50 vs d80
+        let g = engine.load("conv_pallas_dense").unwrap();
+        let man = g.manifest.clone();
+        let l = &man.layers.convs[0];
+        let (bt, c, h, k, cin) = (man.batch, l.cout, l.hout, l.k, l.cin);
+        let mut rng = Pcg::new(1, 1);
+        let x: Vec<f32> = (0..bt * cin * h * h).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..c * cin * k * k).map(|_| rng.normal() * 0.1).collect();
+        let b: Vec<f32> = (0..c).map(|_| rng.normal() * 0.1).collect();
+        let inputs = vec![
+            f32_literal(&[bt, cin, h, h], &x).unwrap(),
+            f32_literal(&[c, cin, k, k], &w).unwrap(),
+            f32_literal(&[c], &b).unwrap(),
+        ];
+        for name in ["conv_pallas_dense", "conv_pallas_d50", "conv_pallas_d80"] {
+            let g = engine.load(name).unwrap();
+            let r = bench(&format!("{name}/fwd+bwd"), 2, 12, Duration::from_secs(10), || {
+                g.run(&inputs).unwrap();
+            });
+            report(&r);
+        }
+
+        println!("\n-- L3 overheads around the step --");
+        let ds = SynthDataset::new(ssprop::data::spec("cifar10").unwrap(), 0);
+        let loader = Loader::new(ds, Split::Train, 32);
+        let order = loader.epoch_order(0);
+        let r = bench("l3/batch_generation_bs32", 2, 30, Duration::from_secs(5), || {
+            std::hint::black_box(loader.batch(&order, 0));
+        });
+        report(&r);
+
+        let batch = loader.batch(&order, 0);
+        let r = bench("l3/literal_from_batch", 2, 50, Duration::from_secs(5), || {
+            std::hint::black_box(f32_literal(&[32, 3, 32, 32], &batch.x).unwrap());
+        });
+        report(&r);
+
+        // end-to-end step vs its pieces: quantifies non-execute overhead
+        let mut t = Trainer::new(&engine, TrainConfig::quick("resnet18_cifar10", 1, 1)).unwrap();
+        let r = bench("l3/resnet18_step_total", 2, 15, Duration::from_secs(8), || {
+            t.step(&batch, 0.8).unwrap();
+        });
+        report(&r);
+
+        println!("\n-- substrate microbenches --");
+        let manifest_text = std::fs::read_to_string(
+            engine.artifacts_dir.join("resnet18_cifar10_train.manifest.json"),
+        )
+        .unwrap();
+        let r = bench("json/parse_resnet18_manifest", 2, 30, Duration::from_secs(5), || {
+            std::hint::black_box(ssprop::util::json::Json::parse(&manifest_text).unwrap());
+        });
+        report(&r);
+
+        let mut rng2 = Pcg::new(9, 9);
+        let r = bench("rng/normal_x10k", 2, 100, Duration::from_secs(3), || {
+            let mut acc = 0.0f32;
+            for _ in 0..10_000 {
+                acc += rng2.normal();
+            }
+            std::hint::black_box(acc);
         });
         report(&r);
     }
+}
 
-    println!("\n-- L3 overheads around the step --");
-    let ds = SynthDataset::new(ssprop::data::spec("cifar10").unwrap(), 0);
-    let loader = Loader::new(ds, Split::Train, 32);
-    let order = loader.epoch_order(0);
-    let r = bench("l3/batch_generation_bs32", 2, 30, Duration::from_secs(5), || {
-        std::hint::black_box(loader.batch(&order, 0));
-    });
-    report(&r);
+#[cfg(feature = "pjrt")]
+use pjrt_bench::run;
 
-    let batch = loader.batch(&order, 0);
-    let r = bench("l3/literal_from_batch", 2, 50, Duration::from_secs(5), || {
-        std::hint::black_box(f32_literal(&[32, 3, 32, 32], &batch.x).unwrap());
-    });
-    report(&r);
+#[cfg(not(feature = "pjrt"))]
+fn run() {
+    println!("skipping perf_hotpath: PJRT runtime not compiled (build with --features pjrt)");
+}
 
-    // end-to-end step vs its pieces: quantifies non-execute overhead
-    let mut t = Trainer::new(&engine, TrainConfig::quick("resnet18_cifar10", 1, 1)).unwrap();
-    let r = bench("l3/resnet18_step_total", 2, 15, Duration::from_secs(8), || {
-        t.step(&batch, 0.8).unwrap();
-    });
-    report(&r);
-
-    println!("\n-- substrate microbenches --");
-    let manifest_text = std::fs::read_to_string(
-        engine.artifacts_dir.join("resnet18_cifar10_train.manifest.json"),
-    )
-    .unwrap();
-    let r = bench("json/parse_resnet18_manifest", 2, 30, Duration::from_secs(5), || {
-        std::hint::black_box(ssprop::util::json::Json::parse(&manifest_text).unwrap());
-    });
-    report(&r);
-
-    let mut rng2 = Pcg::new(9, 9);
-    let r = bench("rng/normal_x10k", 2, 100, Duration::from_secs(3), || {
-        let mut acc = 0.0f32;
-        for _ in 0..10_000 {
-            acc += rng2.normal();
-        }
-        std::hint::black_box(acc);
-    });
-    report(&r);
+fn main() {
+    run();
 }

@@ -2,46 +2,71 @@
 //! across the classification artifacts, plus the analytic FLOPs columns
 //! (which match the paper exactly at full width — see `ssprop flops`).
 //!
-//! Run: `cargo bench --bench table4_classification`
+//! Requires `--features pjrt` + artifacts; skips with a message otherwise.
+//!
+//! Run: `cargo bench --bench table4_classification --features pjrt`
 
-use std::time::Duration;
+#[cfg(feature = "pjrt")]
+mod pjrt_bench {
+    use std::time::Duration;
 
-use ssprop::coordinator::{TrainConfig, Trainer};
-use ssprop::flops::paper_resnet;
-use ssprop::runtime::Engine;
-use ssprop::util::bench::{bench, report};
+    use ssprop::coordinator::{TrainConfig, Trainer};
+    use ssprop::flops::paper_resnet;
+    use ssprop::runtime::Engine;
+    use ssprop::util::bench::{bench, report};
+
+    pub fn run() {
+        let engine = match Engine::auto() {
+            Ok(e) => e,
+            Err(err) => {
+                println!("skipping table4_classification: {err}");
+                return;
+            }
+        };
+        println!("== Table 4 bench: step latency + analytic FLOPs, dense vs ssProp ==\n");
+
+        for (artifact, arch, img, in_ch, paper_bt, paper_dense, paper_ss) in [
+            ("resnet18_mnist", "resnet18", 28, 1, 128, 234.10, 140.79),
+            ("resnet18_cifar10", "resnet18", 32, 3, 128, 285.32, 171.61),
+            ("resnet50_cifar10", "resnet50", 32, 3, 128, 669.75, 404.18),
+        ] {
+            let mut t = Trainer::new(&engine, TrainConfig::quick(artifact, 1, 1)).unwrap();
+            let order = t.loader.epoch_order(0);
+            let batch = t.loader.batch(&order, 0);
+
+            for (mode, d) in [("dense", 0.0f64), ("ssprop_d80", 0.8)] {
+                let r = bench(
+                    &format!("{artifact}/{mode}/step"),
+                    2,
+                    20,
+                    Duration::from_secs(8),
+                    || {
+                        t.step(&batch, d).unwrap();
+                    },
+                );
+                report(&r);
+            }
+            let full = paper_resnet(arch, img, in_ch, 1.0);
+            println!(
+                "  analytic B/iter @bs{paper_bt}: dense {:.2} (paper {paper_dense}), \
+                 ssProp {:.2} (paper {paper_ss})\n",
+                full.bwd_flops_per_iter(paper_bt, 0.0) / 1e9,
+                full.bwd_flops_scheduled(paper_bt, &[0.0, 0.8]) / 1e9,
+            );
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+use pjrt_bench::run;
+
+#[cfg(not(feature = "pjrt"))]
+fn run() {
+    println!(
+        "skipping table4_classification: PJRT runtime not compiled (build with --features pjrt)"
+    );
+}
 
 fn main() {
-    let engine = Engine::auto().expect("artifacts present (make artifacts)");
-    println!("== Table 4 bench: step latency + analytic FLOPs, dense vs ssProp ==\n");
-
-    for (artifact, arch, img, in_ch, paper_bt, paper_dense, paper_ss) in [
-        ("resnet18_mnist", "resnet18", 28, 1, 128, 234.10, 140.79),
-        ("resnet18_cifar10", "resnet18", 32, 3, 128, 285.32, 171.61),
-        ("resnet50_cifar10", "resnet50", 32, 3, 128, 669.75, 404.18),
-    ] {
-        let mut t = Trainer::new(&engine, TrainConfig::quick(artifact, 1, 1)).unwrap();
-        let order = t.loader.epoch_order(0);
-        let batch = t.loader.batch(&order, 0);
-
-        for (mode, d) in [("dense", 0.0f64), ("ssprop_d80", 0.8)] {
-            let r = bench(
-                &format!("{artifact}/{mode}/step"),
-                2,
-                20,
-                Duration::from_secs(8),
-                || {
-                    t.step(&batch, d).unwrap();
-                },
-            );
-            report(&r);
-        }
-        let full = paper_resnet(arch, img, in_ch, 1.0);
-        println!(
-            "  analytic B/iter @bs{paper_bt}: dense {:.2} (paper {paper_dense}), \
-             ssProp {:.2} (paper {paper_ss})\n",
-            full.bwd_flops_per_iter(paper_bt, 0.0) / 1e9,
-            full.bwd_flops_scheduled(paper_bt, &[0.0, 0.8]) / 1e9,
-        );
-    }
+    run();
 }

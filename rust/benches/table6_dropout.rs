@@ -2,41 +2,67 @@
 //! both. Shows ssProp *reduces* backward cost while Dropout adds forward
 //! cost (Eq. 8's extra FLOPs), mirroring the table's FLOPs columns.
 //!
-//! Run: `cargo bench --bench table6_dropout`
+//! Requires `--features pjrt` + artifacts; skips with a message otherwise.
+//!
+//! Run: `cargo bench --bench table6_dropout --features pjrt`
 
-use std::time::Duration;
+#[cfg(feature = "pjrt")]
+mod pjrt_bench {
+    use std::time::Duration;
 
-use ssprop::coordinator::{TrainConfig, Trainer};
-use ssprop::runtime::Engine;
-use ssprop::util::bench::{bench, report};
+    use ssprop::coordinator::{TrainConfig, Trainer};
+    use ssprop::runtime::Engine;
+    use ssprop::util::bench::{bench, report};
+
+    pub fn run() {
+        let engine = match Engine::auto() {
+            Ok(e) => e,
+            Err(err) => {
+                println!("skipping table6_dropout: {err}");
+                return;
+            }
+        };
+        println!("== Table 6 bench: ResNet-50 step latency — Dropout vs ssProp vs both ==\n");
+
+        for (label, drop_rate, dropout) in [
+            ("baseline", 0.0f64, 0.0f64),
+            ("dropout_0.4", 0.0, 0.4),
+            ("ssprop_0.4", 0.4, 0.0),
+            ("both_0.2+0.2", 0.2, 0.2),
+            ("both_0.4+0.4", 0.4, 0.4),
+        ] {
+            let mut cfg = TrainConfig::quick("resnet50_cifar10", 1, 1);
+            cfg.dropout_rate = dropout;
+            let mut t = Trainer::new(&engine, cfg).unwrap();
+            let order = t.loader.epoch_order(0);
+            let batch = t.loader.batch(&order, 0);
+            let r = bench(
+                &format!("resnet50_cifar10/{label}/step"),
+                2,
+                15,
+                Duration::from_secs(8),
+                || {
+                    t.step(&batch, drop_rate).unwrap();
+                },
+            );
+            report(&r);
+            let man = &t.train_graph.manifest;
+            println!(
+                "  analytic bwd FLOPs/iter at D={drop_rate}: {:.3} B",
+                man.bwd_flops(drop_rate) / 1e9
+            );
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+use pjrt_bench::run;
+
+#[cfg(not(feature = "pjrt"))]
+fn run() {
+    println!("skipping table6_dropout: PJRT runtime not compiled (build with --features pjrt)");
+}
 
 fn main() {
-    let engine = Engine::auto().expect("artifacts present");
-    println!("== Table 6 bench: ResNet-50 step latency — Dropout vs ssProp vs both ==\n");
-
-    for (label, drop_rate, dropout) in [
-        ("baseline", 0.0f64, 0.0f64),
-        ("dropout_0.4", 0.0, 0.4),
-        ("ssprop_0.4", 0.4, 0.0),
-        ("both_0.2+0.2", 0.2, 0.2),
-        ("both_0.4+0.4", 0.4, 0.4),
-    ] {
-        let mut cfg = TrainConfig::quick("resnet50_cifar10", 1, 1);
-        cfg.dropout_rate = dropout;
-        let mut t = Trainer::new(&engine, cfg).unwrap();
-        let order = t.loader.epoch_order(0);
-        let batch = t.loader.batch(&order, 0);
-        let r = bench(
-            &format!("resnet50_cifar10/{label}/step"),
-            2,
-            15,
-            Duration::from_secs(8),
-            || {
-                t.step(&batch, drop_rate).unwrap();
-            },
-        );
-        report(&r);
-        let man = &t.train_graph.manifest;
-        println!("  analytic bwd FLOPs/iter at D={drop_rate}: {:.3} B", man.bwd_flops(drop_rate) / 1e9);
-    }
+    run();
 }

@@ -3,39 +3,64 @@
 //! ResNet-26 dense ≈ 440 B/iter at full width); latencies show the same
 //! ordering on this testbed's scaled models.
 //!
-//! Run: `cargo bench --bench table7_similar_flops`
+//! Requires `--features pjrt` + artifacts; skips with a message otherwise.
+//!
+//! Run: `cargo bench --bench table7_similar_flops --features pjrt`
 
-use std::time::Duration;
+#[cfg(feature = "pjrt")]
+mod pjrt_bench {
+    use std::time::Duration;
 
-use ssprop::coordinator::{TrainConfig, Trainer};
-use ssprop::flops::paper_resnet;
-use ssprop::runtime::Engine;
-use ssprop::util::bench::{bench, report};
+    use ssprop::coordinator::{TrainConfig, Trainer};
+    use ssprop::flops::paper_resnet;
+    use ssprop::runtime::Engine;
+    use ssprop::util::bench::{bench, report};
+
+    pub fn run() {
+        let engine = match Engine::auto() {
+            Ok(e) => e,
+            Err(err) => {
+                println!("skipping table7_similar_flops: {err}");
+                return;
+            }
+        };
+        println!("== Table 7 bench: ssProp-50 vs ResNet-26 (iso-FLOPs) ==\n");
+
+        for (artifact, arch, d, label) in [
+            ("resnet50_cifar10", "resnet50", 0.0f64, "resnet50/dense"),
+            ("resnet50_cifar10", "resnet50", 0.8, "resnet50/ssprop_d80"),
+            ("resnet26_cifar10", "resnet26", 0.0, "resnet26/dense"),
+            ("resnet26_cifar10", "resnet26", 0.8, "resnet26/ssprop_d80"),
+        ] {
+            let mut t = Trainer::new(&engine, TrainConfig::quick(artifact, 1, 1)).unwrap();
+            let order = t.loader.epoch_order(0);
+            let batch = t.loader.batch(&order, 0);
+            let r = bench(&format!("{label}/step"), 2, 15, Duration::from_secs(8), || {
+                t.step(&batch, d).unwrap();
+            });
+            report(&r);
+            let full = paper_resnet(arch, 32, 3, 1.0);
+            let b = if d == 0.0 {
+                full.bwd_flops_per_iter(128, 0.0)
+            } else {
+                full.bwd_flops_scheduled(128, &[0.0, 0.8])
+            } / 1e9;
+            println!("  full-width analytic: {b:.2} B/iter");
+        }
+        println!("\npaper pairing: ssProp-50 404.18 vs ResNet-26 440.19 (B/iter) — iso-FLOPs");
+    }
+}
+
+#[cfg(feature = "pjrt")]
+use pjrt_bench::run;
+
+#[cfg(not(feature = "pjrt"))]
+fn run() {
+    println!(
+        "skipping table7_similar_flops: PJRT runtime not compiled (build with --features pjrt)"
+    );
+}
 
 fn main() {
-    let engine = Engine::auto().expect("artifacts present");
-    println!("== Table 7 bench: ssProp-50 vs ResNet-26 (iso-FLOPs) ==\n");
-
-    for (artifact, arch, d, label) in [
-        ("resnet50_cifar10", "resnet50", 0.0f64, "resnet50/dense"),
-        ("resnet50_cifar10", "resnet50", 0.8, "resnet50/ssprop_d80"),
-        ("resnet26_cifar10", "resnet26", 0.0, "resnet26/dense"),
-        ("resnet26_cifar10", "resnet26", 0.8, "resnet26/ssprop_d80"),
-    ] {
-        let mut t = Trainer::new(&engine, TrainConfig::quick(artifact, 1, 1)).unwrap();
-        let order = t.loader.epoch_order(0);
-        let batch = t.loader.batch(&order, 0);
-        let r = bench(&format!("{label}/step"), 2, 15, Duration::from_secs(8), || {
-            t.step(&batch, d).unwrap();
-        });
-        report(&r);
-        let full = paper_resnet(arch, 32, 3, 1.0);
-        let b = if d == 0.0 {
-            full.bwd_flops_per_iter(128, 0.0)
-        } else {
-            full.bwd_flops_scheduled(128, &[0.0, 0.8])
-        } / 1e9;
-        println!("  full-width analytic: {b:.2} B/iter");
-    }
-    println!("\npaper pairing: ssProp-50 404.18 vs ResNet-26 440.19 (B/iter) — iso-FLOPs");
+    run();
 }

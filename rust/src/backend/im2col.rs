@@ -1,0 +1,143 @@
+//! img2col / col2img (paper Fig. 1b), mirroring `ref.py::im2col_ref` /
+//! `col2img_ref` index-for-index.
+//!
+//! Row `(b, i, j)` of the column matrix is the flattened Cin×K×K patch
+//! under output pixel `(i, j)`: row `m = (b·Ho + i)·Wo + j`, column
+//! `n = (c·K + ky)·K + kx`. `col_w` lays weights out as (N, Cout) so the
+//! forward is one `cols · col_w` GEMM.
+
+use super::Conv2d;
+
+/// Output spatial size: (H + 2P − K) / S + 1.
+pub fn out_size(h: usize, k: usize, stride: usize, padding: usize) -> usize {
+    (h + 2 * padding - k) / stride + 1
+}
+
+/// (Bt, Cin, H, W) -> column matrix (M, N), zero-padded out of bounds.
+pub fn im2col(cfg: &Conv2d, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), cfg.in_len(), "im2col input length");
+    let (ho, wo, n) = (cfg.hout(), cfg.wout(), cfg.n());
+    let mut cols = vec![0f32; cfg.m() * n];
+    for b in 0..cfg.bt {
+        for c in 0..cfg.cin {
+            let plane = &x[(b * cfg.cin + c) * cfg.h * cfg.w..][..cfg.h * cfg.w];
+            for i in 0..ho {
+                for ky in 0..cfg.k {
+                    let y = i * cfg.stride + ky;
+                    if y < cfg.padding || y >= cfg.h + cfg.padding {
+                        continue;
+                    }
+                    let row = &plane[(y - cfg.padding) * cfg.w..][..cfg.w];
+                    for j in 0..wo {
+                        let m = (b * ho + i) * wo + j;
+                        for kx in 0..cfg.k {
+                            let xx = j * cfg.stride + kx;
+                            if xx < cfg.padding || xx >= cfg.w + cfg.padding {
+                                continue;
+                            }
+                            cols[m * n + (c * cfg.k + ky) * cfg.k + kx] = row[xx - cfg.padding];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    cols
+}
+
+/// Inverse of [`im2col`]: scatter-add (M, N) columns back to (Bt, Cin, H, W).
+pub fn col2img(cfg: &Conv2d, cols: &[f32]) -> Vec<f32> {
+    let (ho, wo, n) = (cfg.hout(), cfg.wout(), cfg.n());
+    assert_eq!(cols.len(), cfg.m() * n, "col2img input length");
+    let mut x = vec![0f32; cfg.in_len()];
+    for b in 0..cfg.bt {
+        for c in 0..cfg.cin {
+            let plane = &mut x[(b * cfg.cin + c) * cfg.h * cfg.w..][..cfg.h * cfg.w];
+            for i in 0..ho {
+                for ky in 0..cfg.k {
+                    let y = i * cfg.stride + ky;
+                    if y < cfg.padding || y >= cfg.h + cfg.padding {
+                        continue;
+                    }
+                    for j in 0..wo {
+                        let m = (b * ho + i) * wo + j;
+                        for kx in 0..cfg.k {
+                            let xx = j * cfg.stride + kx;
+                            if xx < cfg.padding || xx >= cfg.w + cfg.padding {
+                                continue;
+                            }
+                            plane[(y - cfg.padding) * cfg.w + (xx - cfg.padding)] +=
+                                cols[m * n + (c * cfg.k + ky) * cfg.k + kx];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    x
+}
+
+/// (Cout, Cin, K, K) -> col_W (N, Cout), matching the im2col row layout
+/// (`ref.py::col_w_ref`).
+pub fn col_w(cfg: &Conv2d, w: &[f32]) -> Vec<f32> {
+    let n = cfg.n();
+    assert_eq!(w.len(), cfg.w_len(), "col_w input length");
+    let mut cw = vec![0f32; n * cfg.cout];
+    for o in 0..cfg.cout {
+        for i in 0..n {
+            cw[i * cfg.cout + o] = w[o * n + i];
+        }
+    }
+    cw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_3x3() -> Conv2d {
+        Conv2d { bt: 1, cin: 1, h: 3, w: 3, cout: 1, k: 3, stride: 1, padding: 1 }
+    }
+
+    #[test]
+    fn out_size_matches_reference() {
+        assert_eq!(out_size(6, 3, 1, 1), 6);
+        assert_eq!(out_size(5, 3, 2, 0), 2);
+        assert_eq!(out_size(8, 3, 2, 1), 4);
+        assert_eq!(out_size(28, 3, 2, 1), 14);
+    }
+
+    #[test]
+    fn im2col_center_row_is_full_patch() {
+        // 3x3 image 1..9, padded 3x3 kernel: center output row = the image.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let cols = im2col(&cfg_3x3(), &x);
+        assert_eq!(cols.len(), 9 * 9);
+        let center = &cols[4 * 9..5 * 9];
+        assert_eq!(center, x.as_slice());
+        // corner row (0,0): only the bottom-right 2x2 of the patch in-bounds
+        let corner = &cols[0..9];
+        assert_eq!(corner, &[0.0, 0.0, 0.0, 0.0, 1.0, 2.0, 0.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn col2img_adjoint_of_im2col() {
+        // <im2col(x), c> == <x, col2img(c)> for random-ish x, c (adjointness
+        // is exactly what the backward pass relies on).
+        let cfg = Conv2d { bt: 2, cin: 2, h: 5, w: 4, cout: 1, k: 3, stride: 2, padding: 1 };
+        let x: Vec<f32> = (0..cfg.in_len()).map(|i| ((i * 37 + 11) % 17) as f32 - 8.0).collect();
+        let c: Vec<f32> =
+            (0..cfg.m() * cfg.n()).map(|i| ((i * 13 + 5) % 19) as f32 - 9.0).collect();
+        let lhs: f32 = im2col(&cfg, &x).iter().zip(&c).map(|(a, b)| a * b).sum();
+        let rhs: f32 = x.iter().zip(col2img(&cfg, &c)).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn col_w_transposes_weights() {
+        let cfg = Conv2d { bt: 1, cin: 2, h: 3, w: 3, cout: 3, k: 1, stride: 1, padding: 0 };
+        let w = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // (3, 2, 1, 1)
+        let cw = col_w(&cfg, &w);
+        assert_eq!(cw, vec![1.0, 3.0, 5.0, 2.0, 4.0, 6.0]); // (2, 3)
+    }
+}

@@ -1,0 +1,146 @@
+//! Backend subsystem: pluggable executors for the conv ops ssProp needs.
+//!
+//! The [`Backend`] trait is the op-level contract — dense conv2d forward,
+//! the ssProp sparse backward (channel-importance top-k selection +
+//! compacted GEMMs, paper Sec. "Scheduled Sparse BP"), and the GEMM/bias
+//! helpers they are built from. [`NativeBackend`] implements it in pure
+//! Rust (img2col GEMMs mirroring `python/compile/kernels/ref.py`), so the
+//! default build trains end-to-end on any machine with zero FFI
+//! dependencies. The PJRT whole-graph path (`runtime/`, behind the `pjrt`
+//! feature) remains the fast AOT route when compiled artifacts exist.
+//!
+//! Layout conventions follow the paper throughout: activations NCHW,
+//! weights OIHW, row-major flattened `Vec<f32>`.
+
+pub mod im2col;
+pub mod native;
+pub mod simple_cnn;
+pub mod sparse;
+
+pub use native::NativeBackend;
+pub use simple_cnn::{SimpleCnn, SimpleCnnCfg, StepStats};
+
+/// Geometry of one conv2d call (square kernel/stride/padding, as in the
+/// paper's Eq. 1 and the AOT manifests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2d {
+    pub bt: usize,
+    pub cin: usize,
+    pub h: usize,
+    pub w: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub padding: usize,
+}
+
+impl Conv2d {
+    pub fn hout(&self) -> usize {
+        im2col::out_size(self.h, self.k, self.stride, self.padding)
+    }
+
+    pub fn wout(&self) -> usize {
+        im2col::out_size(self.w, self.k, self.stride, self.padding)
+    }
+
+    /// GEMM row count M = Bt·Hout·Wout.
+    pub fn m(&self) -> usize {
+        self.bt * self.hout() * self.wout()
+    }
+
+    /// GEMM depth N = Cin·K².
+    pub fn n(&self) -> usize {
+        self.cin * self.k * self.k
+    }
+
+    pub fn in_len(&self) -> usize {
+        self.bt * self.cin * self.h * self.w
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.bt * self.cout * self.hout() * self.wout()
+    }
+
+    pub fn w_len(&self) -> usize {
+        self.cout * self.cin * self.k * self.k
+    }
+}
+
+/// Gradients of one conv layer under ssProp selection. Dropped output
+/// channels hold exactly-zero `dw`/`db` rows; `dx` receives only the kept
+/// channels' contributions — identical numerics to the masked path.
+#[derive(Debug, Clone)]
+pub struct ConvGrads {
+    /// d loss / d x, shape (Bt, Cin, H, W) — empty when the caller asked
+    /// to skip it (`need_dx = false`, e.g. the first layer of a network).
+    pub dx: Vec<f32>,
+    /// d loss / d w, shape (Cout, Cin, K, K).
+    pub dw: Vec<f32>,
+    /// d loss / d b, shape (Cout,).
+    pub db: Vec<f32>,
+    /// Channels selected by importance top-k (ascending; all when dense).
+    pub keep_idx: Vec<usize>,
+}
+
+/// Op-level executor. Implementations must match the reference oracle
+/// `python/compile/kernels/ref.py` within f32 tolerance (enforced by
+/// `rust/tests/native_backend.rs` fixtures).
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Dense conv forward `y = x * w (+ b)` in NCHW/OIHW (paper Eq. 1).
+    fn conv2d_fwd(&self, cfg: &Conv2d, x: &[f32], w: &[f32], b: Option<&[f32]>) -> Vec<f32>;
+
+    /// ssProp backward at `drop_rate` (paper Eq. 3/4/5 with the channel
+    /// top-k compaction): importance = mean |g| over (Bt, H, W) per output
+    /// channel; keep k = clamp(round((1−D)·Cout), 1, Cout) channels (ties
+    /// to even, matching the compile path); run the shrunk img2col GEMMs.
+    /// `drop_rate = 0` reproduces exact dense gradients. `need_dx = false`
+    /// skips the col[dX] GEMM + scatter entirely (the first layer of a
+    /// network never consumes dx — a large share of its backward cost).
+    fn conv2d_bwd_ssprop(
+        &self,
+        cfg: &Conv2d,
+        x: &[f32],
+        w: &[f32],
+        g: &[f32],
+        drop_rate: f64,
+        need_dx: bool,
+    ) -> ConvGrads;
+
+    /// Row-major GEMM helper: C(m×n) = A(m×k) · B(k×n).
+    fn gemm(&self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32>;
+
+    /// Add a per-channel bias onto an NCHW activation in place.
+    fn bias_add(&self, cfg: &Conv2d, y: &mut [f32], b: &[f32]);
+}
+
+/// The backend every coordinator path uses unless an accelerator route is
+/// explicitly selected (the PJRT path routes whole graphs, not single ops).
+pub fn default_backend() -> Box<dyn Backend> {
+    Box::new(NativeBackend::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv2d_geometry() {
+        let c = Conv2d { bt: 2, cin: 3, h: 6, w: 6, cout: 8, k: 3, stride: 1, padding: 1 };
+        assert_eq!((c.hout(), c.wout()), (6, 6));
+        assert_eq!(c.m(), 2 * 36);
+        assert_eq!(c.n(), 27);
+        assert_eq!(c.in_len(), 2 * 3 * 36);
+        assert_eq!(c.out_len(), 2 * 8 * 36);
+        assert_eq!(c.w_len(), 8 * 27);
+
+        let s2 = Conv2d { bt: 1, cin: 2, h: 5, w: 5, cout: 4, k: 3, stride: 2, padding: 0 };
+        assert_eq!((s2.hout(), s2.wout()), (2, 2));
+    }
+
+    #[test]
+    fn default_backend_is_native() {
+        assert_eq!(default_backend().name(), "native");
+    }
+}

@@ -1,0 +1,150 @@
+//! Pure-Rust [`Backend`]: img2col GEMM forward + the compacted sparse
+//! backward from [`super::sparse`]. Zero FFI, runs anywhere — this is the
+//! crate's default executor and the correctness anchor the fixture tests
+//! pin against `python/compile/kernels/ref.py`.
+
+use super::im2col::{col_w, im2col};
+use super::sparse::{select_channels, sparse_bwd_compact};
+use super::{Backend, Conv2d, ConvGrads};
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn conv2d_fwd(&self, cfg: &Conv2d, x: &[f32], w: &[f32], b: Option<&[f32]>) -> Vec<f32> {
+        let (m, n) = (cfg.m(), cfg.n());
+        let (ho, wo) = (cfg.hout(), cfg.wout());
+        let cols = im2col(cfg, x);
+        let cw = col_w(cfg, w);
+        let ycol = self.gemm(m, n, cfg.cout, &cols, &cw); // (M, Cout)
+
+        // (M, Cout) -> NCHW, folding the bias in during the transpose
+        let mut y = vec![0f32; cfg.out_len()];
+        for bi in 0..cfg.bt {
+            for o in 0..cfg.cout {
+                let bias = b.map_or(0.0, |bb| bb[o]);
+                let plane = &mut y[(bi * cfg.cout + o) * ho * wo..][..ho * wo];
+                for (pix, v) in plane.iter_mut().enumerate() {
+                    *v = ycol[(bi * ho * wo + pix) * cfg.cout + o] + bias;
+                }
+            }
+        }
+        y
+    }
+
+    fn conv2d_bwd_ssprop(
+        &self,
+        cfg: &Conv2d,
+        x: &[f32],
+        w: &[f32],
+        g: &[f32],
+        drop_rate: f64,
+        need_dx: bool,
+    ) -> ConvGrads {
+        let keep_idx = select_channels(cfg, g, drop_rate);
+        sparse_bwd_compact(cfg, x, w, g, &keep_idx, need_dx)
+    }
+
+    fn gemm(&self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        assert_eq!(a.len(), m * k, "gemm lhs length");
+        assert_eq!(b.len(), k * n, "gemm rhs length");
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            let crow = &mut c[i * n..][..n];
+            for (p, &av) in a[i * k..][..k].iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..][..n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+        c
+    }
+
+    fn bias_add(&self, cfg: &Conv2d, y: &mut [f32], b: &[f32]) {
+        let hw = cfg.hout() * cfg.wout();
+        assert_eq!(y.len(), cfg.out_len(), "bias_add activation length");
+        assert_eq!(b.len(), cfg.cout, "bias_add bias length");
+        for bi in 0..cfg.bt {
+            for (o, &bias) in b.iter().enumerate() {
+                let plane = &mut y[(bi * cfg.cout + o) * hw..][..hw];
+                for v in plane.iter_mut() {
+                    *v += bias;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_identity_and_known_product() {
+        let be = NativeBackend::new();
+        // 2x2 identity
+        let c = be.gemm(2, 2, 2, &[1.0, 0.0, 0.0, 1.0], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(c, vec![1.0, 2.0, 3.0, 4.0]);
+        // (1x3) . (3x2)
+        let c = be.gemm(1, 3, 2, &[1.0, 2.0, 3.0], &[1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        assert_eq!(c, vec![14.0, 32.0]);
+    }
+
+    #[test]
+    fn conv_fwd_1x1_kernel_is_channel_mix() {
+        // 1x1 conv == per-pixel matmul over channels: easy to hand-check.
+        let cfg = Conv2d { bt: 1, cin: 2, h: 2, w: 2, cout: 1, k: 1, stride: 1, padding: 0 };
+        let x = vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0]; // (1,2,2,2)
+        let w = vec![2.0, 0.5]; // (1,2,1,1)
+        let y = NativeBackend::new().conv2d_fwd(&cfg, &x, &w, Some(&[1.0]));
+        assert_eq!(y, vec![2.0 + 5.0 + 1.0, 4.0 + 10.0 + 1.0, 6.0 + 15.0 + 1.0, 8.0 + 20.0 + 1.0]);
+    }
+
+    #[test]
+    fn dense_bwd_keeps_every_channel() {
+        let cfg = Conv2d { bt: 1, cin: 1, h: 4, w: 4, cout: 3, k: 3, stride: 1, padding: 1 };
+        let x: Vec<f32> = (0..cfg.in_len()).map(|i| i as f32 * 0.1).collect();
+        let w: Vec<f32> = (0..cfg.w_len()).map(|i| (i % 3) as f32 - 1.0).collect();
+        let g: Vec<f32> = (0..cfg.out_len()).map(|i| ((i % 5) as f32 - 2.0) * 0.2).collect();
+        let out = NativeBackend::new().conv2d_bwd_ssprop(&cfg, &x, &w, &g, 0.0, true);
+        assert_eq!(out.keep_idx, vec![0, 1, 2]);
+        assert_eq!(out.dx.len(), cfg.in_len());
+        // skipping dx leaves dw/db identical and dx empty
+        let nodx = NativeBackend::new().conv2d_bwd_ssprop(&cfg, &x, &w, &g, 0.0, false);
+        assert!(nodx.dx.is_empty());
+        assert_eq!(nodx.dw, out.dw);
+        assert_eq!(nodx.db, out.db);
+        assert_eq!(out.dw.len(), cfg.w_len());
+        // dense db = plain sum of g per channel
+        let hw = cfg.hout() * cfg.wout();
+        for o in 0..3 {
+            let want: f32 = g[o * hw..(o + 1) * hw].iter().sum();
+            assert!((out.db[o] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bias_add_broadcasts_per_channel() {
+        let cfg = Conv2d { bt: 2, cin: 1, h: 2, w: 2, cout: 2, k: 1, stride: 1, padding: 0 };
+        let mut y = vec![0f32; cfg.out_len()];
+        NativeBackend::new().bias_add(&cfg, &mut y, &[1.0, -2.0]);
+        let mut want = vec![1.0f32; 4];
+        want.extend([-2.0; 4]);
+        let want = [want.clone(), want].concat();
+        assert_eq!(y, want);
+    }
+}

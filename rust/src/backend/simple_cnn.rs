@@ -1,0 +1,447 @@
+//! Native SimpleCNN: the paper's Fig. 4 workhorse, trained entirely through
+//! the [`Backend`] trait — conv stack (3×3, first layer stride 2) + ReLU,
+//! global average pool, linear classifier, softmax cross-entropy, SGD.
+//!
+//! Every conv backward routes through [`Backend::conv2d_bwd_ssprop`], so a
+//! drop-rate schedule sparsifies training exactly as the AOT/PJRT path
+//! does; FLOPs accounting reuses the same Eq. 6/9 [`LayerSet`] machinery.
+
+use anyhow::{bail, Result};
+
+use super::{Backend, Conv2d};
+use crate::flops::{ConvLayer, LayerSet};
+use crate::tensorstore::Tensor;
+use crate::util::rng::Pcg;
+
+/// Geometry/init knobs for a native SimpleCNN.
+#[derive(Debug, Clone, Copy)]
+pub struct SimpleCnnCfg {
+    pub in_ch: usize,
+    pub img: usize,
+    pub classes: usize,
+    /// Number of 3×3 conv layers (≥ 1); the first is stride 2.
+    pub depth: usize,
+    /// Channels per conv layer.
+    pub width: usize,
+    pub seed: u64,
+}
+
+/// One conv layer's parameters.
+#[derive(Debug, Clone)]
+pub struct ConvBlock {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub cin: usize,
+    pub stride: usize,
+}
+
+/// Per-step statistics returned by [`SimpleCnn::train_step`].
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub loss: f64,
+    pub acc: f64,
+    /// Output channels actually back-propagated, summed over conv layers.
+    pub kept_channels: usize,
+    /// Total output channels over conv layers (kept == total when dense).
+    pub total_channels: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimpleCnn {
+    pub cfg: SimpleCnnCfg,
+    pub convs: Vec<ConvBlock>,
+    /// (width, classes) row-major.
+    pub fc_w: Vec<f32>,
+    /// (classes,)
+    pub fc_b: Vec<f32>,
+}
+
+impl SimpleCnn {
+    pub fn new(cfg: SimpleCnnCfg) -> SimpleCnn {
+        assert!(cfg.depth >= 1 && cfg.width >= 1 && cfg.classes >= 1);
+        let mut rng = Pcg::new(cfg.seed ^ 0xC44, 29);
+        let mut convs = Vec::with_capacity(cfg.depth);
+        for l in 0..cfg.depth {
+            let cin = if l == 0 { cfg.in_ch } else { cfg.width };
+            let fan_in = (cin * 9) as f32;
+            let scale = (2.0 / fan_in).sqrt();
+            convs.push(ConvBlock {
+                w: (0..cfg.width * cin * 9).map(|_| rng.normal() * scale).collect(),
+                b: vec![0f32; cfg.width],
+                cin,
+                stride: if l == 0 { 2 } else { 1 },
+            });
+        }
+        let fc_scale = (2.0 / cfg.width as f32).sqrt();
+        SimpleCnn {
+            cfg,
+            convs,
+            fc_w: (0..cfg.width * cfg.classes).map(|_| rng.normal() * fc_scale).collect(),
+            fc_b: vec![0f32; cfg.classes],
+        }
+    }
+
+    /// Spatial size of layer `l`'s input feature map.
+    fn in_size(&self, l: usize) -> usize {
+        if l == 0 {
+            self.cfg.img
+        } else {
+            super::im2col::out_size(self.cfg.img, 3, 2, 1)
+        }
+    }
+
+    /// Conv geometry for layer `l` at batch size `bt`.
+    pub fn conv_cfg(&self, l: usize, bt: usize) -> Conv2d {
+        let s = self.in_size(l);
+        Conv2d {
+            bt,
+            cin: self.convs[l].cin,
+            h: s,
+            w: s,
+            cout: self.cfg.width,
+            k: 3,
+            stride: self.convs[l].stride,
+            padding: 1,
+        }
+    }
+
+    /// Conv inventory for Eq. 6/9 FLOPs accounting (no BN in this model).
+    pub fn layer_set(&self) -> LayerSet {
+        let mut set = LayerSet::default();
+        for l in 0..self.cfg.depth {
+            let c = self.conv_cfg(l, 1);
+            set.convs.push(ConvLayer {
+                cin: c.cin,
+                cout: c.cout,
+                k: c.k,
+                hout: c.hout(),
+                wout: c.wout(),
+                counted_bn: false,
+            });
+        }
+        set
+    }
+
+    /// Forward pass keeping every intermediate needed for backward:
+    /// `acts[l]` is layer l's input (acts[0] = x), `zs[l]` its pre-ReLU
+    /// output; returns (acts, zs, pooled, logits).
+    #[allow(clippy::type_complexity)]
+    fn forward(
+        &self,
+        backend: &dyn Backend,
+        x: &[f32],
+        bt: usize,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<f32>, Vec<f32>) {
+        let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(self.cfg.depth);
+        for l in 0..self.cfg.depth {
+            let cfg = self.conv_cfg(l, bt);
+            let z = backend.conv2d_fwd(&cfg, &acts[l], &self.convs[l].w, Some(&self.convs[l].b));
+            let a: Vec<f32> = z.iter().map(|&v| v.max(0.0)).collect();
+            zs.push(z);
+            acts.push(a);
+        }
+        // global average pool over the last feature map -> (bt, width)
+        let last = self.conv_cfg(self.cfg.depth - 1, bt);
+        let hw = last.hout() * last.wout();
+        let width = self.cfg.width;
+        let mut pooled = vec![0f32; bt * width];
+        let top = &acts[self.cfg.depth];
+        for b in 0..bt {
+            for f in 0..width {
+                let plane = &top[(b * width + f) * hw..][..hw];
+                pooled[b * width + f] = plane.iter().sum::<f32>() / hw as f32;
+            }
+        }
+        // logits = pooled . fc_w + fc_b
+        let classes = self.cfg.classes;
+        let mut logits = backend.gemm(bt, width, classes, &pooled, &self.fc_w);
+        for b in 0..bt {
+            for (c, &bias) in self.fc_b.iter().enumerate() {
+                logits[b * classes + c] += bias;
+            }
+        }
+        (acts, zs, pooled, logits)
+    }
+
+    /// One SGD training step at `drop_rate`; returns loss/acc/kept-channel
+    /// stats. `x` is (bt, in_ch, img, img) flattened, `y` integer labels.
+    pub fn train_step(
+        &mut self,
+        backend: &dyn Backend,
+        x: &[f32],
+        y: &[i32],
+        drop_rate: f64,
+        lr: f32,
+    ) -> Result<StepStats> {
+        let bt = y.len();
+        if bt == 0 || x.len() != bt * self.cfg.in_ch * self.cfg.img * self.cfg.img {
+            bail!("bad batch geometry: {} inputs for {bt} labels", x.len());
+        }
+        let (acts, zs, pooled, logits) = self.forward(backend, x, bt);
+        let (loss, acc, dlogits) = softmax_ce(&logits, y, self.cfg.classes);
+        if !loss.is_finite() {
+            bail!("non-finite loss at drop rate {drop_rate}");
+        }
+
+        // FC backward + update
+        let (width, classes) = (self.cfg.width, self.cfg.classes);
+        let mut dpooled = vec![0f32; bt * width];
+        for b in 0..bt {
+            let drow = &dlogits[b * classes..][..classes];
+            for f in 0..width {
+                let wrow = &self.fc_w[f * classes..][..classes];
+                let mut acc_dp = 0f32;
+                for (dv, wv) in drow.iter().zip(wrow) {
+                    acc_dp += dv * wv;
+                }
+                dpooled[b * width + f] = acc_dp;
+            }
+        }
+        for b in 0..bt {
+            let drow = &dlogits[b * classes..][..classes];
+            let prow = &pooled[b * width..][..width];
+            for (f, &pv) in prow.iter().enumerate() {
+                let wrow = &mut self.fc_w[f * classes..][..classes];
+                for (wv, &dv) in wrow.iter_mut().zip(drow) {
+                    *wv -= lr * pv * dv;
+                }
+            }
+            for (bv, &dv) in self.fc_b.iter_mut().zip(drow) {
+                *bv -= lr * dv;
+            }
+        }
+
+        // pool backward -> gradient on the top feature map, through ReLU
+        let last = self.conv_cfg(self.cfg.depth - 1, bt);
+        let hw = last.hout() * last.wout();
+        let inv_hw = 1.0 / hw as f32;
+        let mut g = vec![0f32; bt * width * hw];
+        let ztop = &zs[self.cfg.depth - 1];
+        for b in 0..bt {
+            for f in 0..width {
+                let gv = dpooled[b * width + f] * inv_hw;
+                let base = (b * width + f) * hw;
+                for pix in 0..hw {
+                    if ztop[base + pix] > 0.0 {
+                        g[base + pix] = gv;
+                    }
+                }
+            }
+        }
+
+        // conv stack backward (ssProp-selected) + SGD updates.
+        // Known cost: the backward re-derives each layer's im2col matrix
+        // that the forward already built (ROADMAP open item: cache cols or
+        // add a fused fwd+bwd Backend entry point).
+        let mut kept = 0usize;
+        for l in (0..self.cfg.depth).rev() {
+            let cfg = self.conv_cfg(l, bt);
+            // layer 0 never consumes dx — let the backend skip that GEMM
+            let grads =
+                backend.conv2d_bwd_ssprop(&cfg, &acts[l], &self.convs[l].w, &g, drop_rate, l > 0);
+            kept += grads.keep_idx.len();
+            for (wv, &dv) in self.convs[l].w.iter_mut().zip(&grads.dw) {
+                *wv -= lr * dv;
+            }
+            for (bv, &dv) in self.convs[l].b.iter_mut().zip(&grads.db) {
+                *bv -= lr * dv;
+            }
+            if l > 0 {
+                let zprev = &zs[l - 1];
+                g = grads.dx;
+                for (gv, &zv) in g.iter_mut().zip(zprev) {
+                    if zv <= 0.0 {
+                        *gv = 0.0;
+                    }
+                }
+            }
+        }
+
+        Ok(StepStats {
+            loss,
+            acc,
+            kept_channels: kept,
+            total_channels: self.cfg.depth * self.cfg.width,
+        })
+    }
+
+    /// Forward-only loss/accuracy on a batch.
+    pub fn eval_batch(&self, backend: &dyn Backend, x: &[f32], y: &[i32]) -> (f64, f64) {
+        let bt = y.len();
+        let (_, _, _, logits) = self.forward(backend, x, bt);
+        let (loss, acc, _) = softmax_ce(&logits, y, self.cfg.classes);
+        (loss, acc)
+    }
+
+    /// Parameters as named tensors (checkpoint format shared with the AOT
+    /// path's `*.init.tstore`).
+    pub fn state_tensors(&self) -> Vec<(String, Tensor)> {
+        let mut out = Vec::new();
+        for (l, cb) in self.convs.iter().enumerate() {
+            let shape = vec![self.cfg.width, cb.cin, 3, 3];
+            out.push((format!("param['conv{l}.w']"), Tensor::from_f32(shape, &cb.w)));
+            let bias = Tensor::from_f32(vec![self.cfg.width], &cb.b);
+            out.push((format!("param['conv{l}.b']"), bias));
+        }
+        out.push((
+            "param['fc.w']".to_string(),
+            Tensor::from_f32(vec![self.cfg.width, self.cfg.classes], &self.fc_w),
+        ));
+        out.push((
+            "param['fc.b']".to_string(),
+            Tensor::from_f32(vec![self.cfg.classes], &self.fc_b),
+        ));
+        out
+    }
+
+    /// Restore parameters saved by [`SimpleCnn::state_tensors`].
+    pub fn load_state_tensors(&mut self, tensors: &[(String, Tensor)]) -> Result<()> {
+        for (name, t) in tensors {
+            let vals = t.to_f32();
+            let dst: &mut Vec<f32> = if let Some(rest) = name.strip_prefix("param['conv") {
+                let (idx, field) = rest
+                    .split_once('.')
+                    .map(|(i, f)| (i, f.trim_end_matches("']")))
+                    .unwrap_or(("", ""));
+                let l: usize = idx.parse().map_err(|_| anyhow::anyhow!("bad layer in {name:?}"))?;
+                if l >= self.convs.len() {
+                    bail!("checkpoint layer {l} out of range");
+                }
+                match field {
+                    "w" => &mut self.convs[l].w,
+                    "b" => &mut self.convs[l].b,
+                    other => bail!("unknown conv field {other:?} in {name:?}"),
+                }
+            } else {
+                match name.as_str() {
+                    "param['fc.w']" => &mut self.fc_w,
+                    "param['fc.b']" => &mut self.fc_b,
+                    other => bail!("unknown state leaf {other:?}"),
+                }
+            };
+            if dst.len() != vals.len() {
+                bail!("shape mismatch for {name:?}: {} vs {}", vals.len(), dst.len());
+            }
+            *dst = vals;
+        }
+        Ok(())
+    }
+}
+
+/// Softmax cross-entropy over integer labels: returns (mean loss, accuracy,
+/// d loss / d logits) with the 1/Bt factor folded into the gradient.
+fn softmax_ce(logits: &[f32], y: &[i32], classes: usize) -> (f64, f64, Vec<f32>) {
+    let bt = y.len();
+    let mut dlogits = vec![0f32; bt * classes];
+    let (mut loss, mut correct) = (0f64, 0usize);
+    for b in 0..bt {
+        let row = &logits[b * classes..][..classes];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut denom = 0f32;
+        for &v in row {
+            denom += (v - max).exp();
+        }
+        let label = y[b] as usize;
+        loss += (denom.ln() - (row[label] - max)) as f64;
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if argmax == label {
+            correct += 1;
+        }
+        let drow = &mut dlogits[b * classes..][..classes];
+        for (c, &v) in row.iter().enumerate() {
+            let p = (v - max).exp() / denom;
+            drow[c] = (p - if c == label { 1.0 } else { 0.0 }) / bt as f32;
+        }
+    }
+    (loss / bt as f64, correct as f64 / bt as f64, dlogits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+
+    fn tiny() -> SimpleCnn {
+        SimpleCnn::new(SimpleCnnCfg { in_ch: 1, img: 8, classes: 3, depth: 2, width: 4, seed: 7 })
+    }
+
+    fn batch(model: &SimpleCnn, bt: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Pcg::new(seed, 1);
+        let n = model.cfg.in_ch * model.cfg.img * model.cfg.img;
+        let x = (0..bt * n).map(|_| rng.normal()).collect();
+        let y = (0..bt).map(|i| (i % model.cfg.classes) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn softmax_ce_uniform_logits() {
+        let (loss, acc, d) = softmax_ce(&[0.0, 0.0, 0.0, 0.0], &[1, 0], 2);
+        assert!((loss - (2f64).ln()).abs() < 1e-6);
+        assert!((0.0..=1.0).contains(&acc));
+        // gradient rows sum to zero (softmax minus one-hot)
+        assert!((d[0] + d[1]).abs() < 1e-6);
+        assert!((d[2] + d[3]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_fixed_batch() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        let (x, y) = batch(&m, 6, 3);
+        let first = m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        for _ in 0..20 {
+            m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        }
+        let last = m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        assert!(last.loss < first.loss, "{} -> {}", first.loss, last.loss);
+        assert_eq!(first.kept_channels, first.total_channels);
+    }
+
+    #[test]
+    fn sparse_step_keeps_fewer_channels_and_diverges_from_dense() {
+        let be = NativeBackend::new();
+        let mut dense = tiny();
+        let mut sparse = tiny();
+        let (x, y) = batch(&dense, 4, 9);
+        dense.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        let stats = sparse.train_step(&be, &x, &y, 0.8, 0.05).unwrap();
+        // width 4 at D=0.8: keep round(0.8) = 1 channel per layer
+        assert_eq!(stats.kept_channels, 2);
+        assert_eq!(stats.total_channels, 8);
+        assert_ne!(dense.convs[0].w, sparse.convs[0].w);
+    }
+
+    #[test]
+    fn state_tensor_roundtrip() {
+        let mut a = tiny();
+        let be = NativeBackend::new();
+        let (x, y) = batch(&a, 4, 5);
+        a.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        let saved = a.state_tensors();
+        assert_eq!(saved.len(), 2 * 2 + 2);
+
+        let mut b = tiny();
+        assert_ne!(a.convs[0].w, b.convs[0].w);
+        b.load_state_tensors(&saved).unwrap();
+        assert_eq!(a.convs[0].w, b.convs[0].w);
+        assert_eq!(a.fc_w, b.fc_w);
+        let (la, _) = a.eval_batch(&be, &x, &y);
+        let (lb, _) = b.eval_batch(&be, &x, &y);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn load_rejects_bad_shapes() {
+        let mut m = tiny();
+        let bad = vec![("param['fc.b']".to_string(), Tensor::from_f32(vec![2], &[0.0, 1.0]))];
+        assert!(m.load_state_tensors(&bad).is_err());
+        let unknown = vec![("param['nope']".to_string(), Tensor::from_f32(vec![1], &[0.0]))];
+        assert!(m.load_state_tensors(&unknown).is_err());
+    }
+}

@@ -1,0 +1,203 @@
+//! ssProp selection primitives + the compacted (true-sparse) backward:
+//! channel importance (paper Fig. 1a "abs + spatial mean"), exact-k top-k
+//! with deterministic tie-breaking, and the shrunk img2col GEMMs of
+//! Sec. "Scheduled Sparse BP". Mirrors `ref.py::importance_ref`,
+//! `topk_mask_ref`, `keep_k_from_drop_rate`, `sparse_bwd_compact_ref`.
+
+use super::im2col::{col2img, col_w, im2col};
+use super::{Conv2d, ConvGrads};
+use crate::flops::keep_channels;
+
+/// Fig. 1(a) channel mode: importance[o] = mean |g| over (Bt, H, W).
+pub fn channel_importance(cfg: &Conv2d, g: &[f32]) -> Vec<f32> {
+    let hw = cfg.hout() * cfg.wout();
+    assert_eq!(g.len(), cfg.bt * cfg.cout * hw, "gradient length");
+    let mut imp = vec![0f32; cfg.cout];
+    for b in 0..cfg.bt {
+        for o in 0..cfg.cout {
+            let plane = &g[(b * cfg.cout + o) * hw..][..hw];
+            imp[o] += plane.iter().map(|v| v.abs()).sum::<f32>();
+        }
+    }
+    let denom = (cfg.bt * hw) as f32;
+    for v in &mut imp {
+        *v /= denom;
+    }
+    imp
+}
+
+/// Indices of the `keep` largest importances, ascending. Ties break toward
+/// the lower channel index (matching the stable argsort in the reference).
+pub fn topk_channels(imp: &[f32], keep: usize) -> Vec<usize> {
+    let keep = keep.min(imp.len());
+    let mut order: Vec<usize> = (0..imp.len()).collect();
+    order.sort_by(|&a, &b| {
+        imp[b].partial_cmp(&imp[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut kept = order[..keep].to_vec();
+    kept.sort_unstable();
+    kept
+}
+
+/// Selection for a drop rate: k = clamp(round((1−D)·Cout), 1, Cout)
+/// channels by importance (shared rust/python semantics via
+/// [`keep_channels`]).
+pub fn select_channels(cfg: &Conv2d, g: &[f32], drop_rate: f64) -> Vec<usize> {
+    let keep = keep_channels(cfg.cout, drop_rate);
+    if keep == cfg.cout {
+        return (0..cfg.cout).collect();
+    }
+    topk_channels(&channel_importance(cfg, g), keep)
+}
+
+/// Compacted img2col backward with static keep indices:
+///   col[dY]' = channel-compacted col[dY]          (M × k')
+///   dW'      = col_Xᵀ · col[dY]'                  (N × k')
+///   col[dX]  = col[dY]' · col_W'ᵀ                 (M × N)
+///   db'      = column sums of col[dY]'
+/// Dropped channels receive exactly-zero dW/db rows. With
+/// `keep_idx = 0..Cout` this is the exact dense backward (Eq. 3/4/5).
+/// `need_dx = false` skips the col[dX] GEMM + col2img (dx comes back
+/// empty).
+pub fn sparse_bwd_compact(
+    cfg: &Conv2d,
+    x: &[f32],
+    w: &[f32],
+    g: &[f32],
+    keep_idx: &[usize],
+    need_dx: bool,
+) -> ConvGrads {
+    let (m, n, kp) = (cfg.m(), cfg.n(), keep_idx.len());
+    let (ho, wo) = (cfg.hout(), cfg.wout());
+    assert!((1..=cfg.cout).contains(&kp), "keep count out of range");
+    assert_eq!(g.len(), cfg.out_len(), "gradient length");
+
+    let cols = im2col(cfg, x); // (M, N)
+
+    // col[dY]' — gather kept channels while transposing NCHW -> (M, k')
+    let mut gck = vec![0f32; m * kp];
+    for b in 0..cfg.bt {
+        for (pos, &o) in keep_idx.iter().enumerate() {
+            let plane = &g[(b * cfg.cout + o) * ho * wo..][..ho * wo];
+            for (pix, &gv) in plane.iter().enumerate() {
+                gck[(b * ho * wo + pix) * kp + pos] = gv;
+            }
+        }
+    }
+
+    // dW' = col_Xᵀ · col[dY]'  (N × k'), accumulated row-by-row over M
+    let mut dwk = vec![0f32; n * kp];
+    for mi in 0..m {
+        let crow = &cols[mi * n..][..n];
+        let grow = &gck[mi * kp..][..kp];
+        for (ni, &cv) in crow.iter().enumerate() {
+            if cv == 0.0 {
+                continue;
+            }
+            let dst = &mut dwk[ni * kp..][..kp];
+            for (d, &gv) in dst.iter_mut().zip(grow) {
+                *d += cv * gv;
+            }
+        }
+    }
+    // scatter into full (Cout, Cin, K, K)
+    let mut dw = vec![0f32; cfg.w_len()];
+    for (pos, &o) in keep_idx.iter().enumerate() {
+        let dst = &mut dw[o * n..][..n];
+        for (ni, d) in dst.iter_mut().enumerate() {
+            *d = dwk[ni * kp + pos];
+        }
+    }
+
+    // col_W' (k' columns of col_W), then col[dX] = col[dY]' · col_W'ᵀ
+    let dx = if need_dx {
+        let cw = col_w(cfg, w); // (N, Cout)
+        let mut cwk = vec![0f32; n * kp];
+        for ni in 0..n {
+            for (pos, &o) in keep_idx.iter().enumerate() {
+                cwk[ni * kp + pos] = cw[ni * cfg.cout + o];
+            }
+        }
+        let mut dcols = vec![0f32; m * n];
+        for mi in 0..m {
+            let grow = &gck[mi * kp..][..kp];
+            let drow = &mut dcols[mi * n..][..n];
+            for (ni, d) in drow.iter_mut().enumerate() {
+                let wrow = &cwk[ni * kp..][..kp];
+                let mut acc = 0f32;
+                for (gv, wv) in grow.iter().zip(wrow) {
+                    acc += gv * wv;
+                }
+                *d = acc;
+            }
+        }
+        col2img(cfg, &dcols)
+    } else {
+        Vec::new()
+    };
+
+    // db' — column sums of col[dY]', scattered to kept channels
+    let mut db = vec![0f32; cfg.cout];
+    for mi in 0..m {
+        let grow = &gck[mi * kp..][..kp];
+        for (pos, &o) in keep_idx.iter().enumerate() {
+            db[o] += grow[pos];
+        }
+    }
+
+    ConvGrads { dx, dw, db, keep_idx: keep_idx.to_vec() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> Conv2d {
+        Conv2d { bt: 2, cin: 1, h: 4, w: 4, cout: 3, k: 3, stride: 1, padding: 1 }
+    }
+
+    #[test]
+    fn importance_is_abs_mean_per_channel() {
+        let c = cfg();
+        let hw = c.hout() * c.wout();
+        let mut g = vec![0f32; c.out_len()];
+        // channel 1 gets |v| = 2 everywhere in batch 0 only -> mean 1.0
+        for v in &mut g[hw..2 * hw] {
+            *v = -2.0;
+        }
+        let imp = channel_importance(&c, &g);
+        assert_eq!(imp, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_stable_under_ties() {
+        assert_eq!(topk_channels(&[0.5, 0.5, 0.5, 0.5], 2), vec![0, 1]);
+        assert_eq!(topk_channels(&[0.1, 0.9, 0.3, 0.9], 2), vec![1, 3]);
+        assert_eq!(topk_channels(&[0.1, 0.9, 0.3], 5), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn select_channels_keeps_clamped_count() {
+        let c = cfg();
+        let g = vec![1.0f32; c.out_len()];
+        assert_eq!(select_channels(&c, &g, 0.0).len(), 3);
+        assert_eq!(select_channels(&c, &g, 0.5).len(), 2); // round(1.5) = 2
+        assert_eq!(select_channels(&c, &g, 0.99).len(), 1); // clamp to 1
+    }
+
+    #[test]
+    fn dropped_channels_get_zero_dw_db() {
+        let c = cfg();
+        let x: Vec<f32> = (0..c.in_len()).map(|i| (i % 7) as f32 - 3.0).collect();
+        let w: Vec<f32> = (0..c.w_len()).map(|i| (i % 5) as f32 * 0.1).collect();
+        let g: Vec<f32> = (0..c.out_len()).map(|i| (i % 11) as f32 - 5.0).collect();
+        let out = sparse_bwd_compact(&c, &x, &w, &g, &[1], true);
+        let n = c.n();
+        assert!(out.dw[..n].iter().all(|&v| v == 0.0), "channel 0 dw must be zero");
+        assert!(out.dw[2 * n..].iter().all(|&v| v == 0.0), "channel 2 dw must be zero");
+        assert!(out.dw[n..2 * n].iter().any(|&v| v != 0.0), "kept channel dw nonzero");
+        assert_eq!(out.db[0], 0.0);
+        assert_eq!(out.db[2], 0.0);
+        assert_ne!(out.db[1], 0.0);
+    }
+}

@@ -1,20 +1,22 @@
-//! Checkpointing: persist/restore the coordinator's state leaves (params,
+//! Checkpointing: persist/restore a training job's state leaves (params,
 //! optimizer moments, BN statistics) as a tensorstore file, plus a JSON
 //! sidecar with the training position. Checkpoints are interchangeable with
-//! the Python side (same format as `*.init.tstore`).
+//! the Python side (same format as `*.init.tstore`) and across executors:
+//! the core works on host [`Tensor`]s; the `pjrt` feature adds
+//! literal-keyed wrappers for the PJRT trainer's state maps.
 
 use std::collections::HashMap;
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{literal_to_tensor, tensor_to_literal};
-use crate::tensorstore;
+use crate::tensorstore::{self, Tensor};
 use crate::util::json::{num, obj, s, Json};
 
-pub fn save<P: AsRef<Path>>(
+/// Save named tensors (sorted by name for stable files) + sidecar metadata.
+pub fn save_tensors<P: AsRef<Path>>(
     path: P,
-    state: &HashMap<String, xla::Literal>,
+    state: &HashMap<String, Tensor>,
     artifact: &str,
     epoch: usize,
 ) -> Result<()> {
@@ -22,7 +24,7 @@ pub fn save<P: AsRef<Path>>(
     names.sort();
     let mut tensors = Vec::with_capacity(names.len());
     for name in names {
-        tensors.push((name.clone(), literal_to_tensor(&state[name])?));
+        tensors.push((name.clone(), state[name].clone()));
     }
     tensorstore::write(path.as_ref(), &tensors)?;
     let meta = obj(vec![
@@ -34,16 +36,40 @@ pub fn save<P: AsRef<Path>>(
     Ok(())
 }
 
-pub fn load<P: AsRef<Path>>(path: P) -> Result<(HashMap<String, xla::Literal>, String, usize)> {
-    let mut state = HashMap::new();
-    for (name, t) in tensorstore::read(path.as_ref())? {
-        state.insert(name, tensor_to_literal(&t)?);
-    }
+/// Load a checkpoint back into (state tensors, artifact name, epoch).
+pub fn load_tensors<P: AsRef<Path>>(path: P) -> Result<(HashMap<String, Tensor>, String, usize)> {
+    let state: HashMap<String, Tensor> = tensorstore::read(path.as_ref())?.into_iter().collect();
     let meta_text = std::fs::read_to_string(sidecar(path.as_ref()))
         .with_context(|| "checkpoint sidecar missing")?;
     let meta = Json::parse(&meta_text).map_err(anyhow::Error::msg)?;
     let artifact = meta.str_field("artifact").map_err(anyhow::Error::msg)?.to_string();
     let epoch = meta.usize_field("epoch").map_err(anyhow::Error::msg)?;
+    Ok((state, artifact, epoch))
+}
+
+/// PJRT wrapper: save a literal-keyed state map.
+#[cfg(feature = "pjrt")]
+pub fn save<P: AsRef<Path>>(
+    path: P,
+    state: &HashMap<String, xla::Literal>,
+    artifact: &str,
+    epoch: usize,
+) -> Result<()> {
+    let mut tensors = HashMap::with_capacity(state.len());
+    for (name, lit) in state {
+        tensors.insert(name.clone(), crate::runtime::literal_to_tensor(lit)?);
+    }
+    save_tensors(path, &tensors, artifact, epoch)
+}
+
+/// PJRT wrapper: load a checkpoint into a literal-keyed state map.
+#[cfg(feature = "pjrt")]
+pub fn load<P: AsRef<Path>>(path: P) -> Result<(HashMap<String, xla::Literal>, String, usize)> {
+    let (tensors, artifact, epoch) = load_tensors(path)?;
+    let mut state = HashMap::with_capacity(tensors.len());
+    for (name, t) in tensors {
+        state.insert(name, crate::runtime::tensor_to_literal(&t)?);
+    }
     Ok((state, artifact, epoch))
 }
 
@@ -54,22 +80,49 @@ fn sidecar(path: &Path) -> std::path::PathBuf {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::f32_literal;
 
     #[test]
-    fn roundtrip_state() {
+    fn roundtrip_tensor_state() {
         let dir = std::env::temp_dir().join("ssprop_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("ck.tstore");
         let mut state = HashMap::new();
-        state.insert("param['w']".to_string(), f32_literal(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap());
-        state.insert("opt['m']".to_string(), f32_literal(&[2], &[0.5, -0.5]).unwrap());
-        save(&p, &state, "resnet18_cifar10", 7).unwrap();
-        let (back, artifact, epoch) = load(&p).unwrap();
+        state.insert(
+            "param['w']".to_string(),
+            Tensor::from_f32(vec![2, 2], &[1.0, 2.0, 3.0, 4.0]),
+        );
+        state.insert("opt['m']".to_string(), Tensor::from_f32(vec![2], &[0.5, -0.5]));
+        save_tensors(&p, &state, "resnet18_cifar10", 7).unwrap();
+        let (back, artifact, epoch) = load_tensors(&p).unwrap();
         assert_eq!(artifact, "resnet18_cifar10");
         assert_eq!(epoch, 7);
         assert_eq!(back.len(), 2);
-        let w = back["param['w']"].to_vec::<f32>().unwrap();
-        assert_eq!(w, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(back["param['w']"].to_f32(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn missing_sidecar_is_an_error() {
+        let dir = std::env::temp_dir().join("ssprop_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("nosidecar.tstore");
+        tensorstore::write(&p, &[("w".to_string(), Tensor::from_f32(vec![1], &[1.0]))]).unwrap();
+        let _ = std::fs::remove_file(sidecar(&p));
+        assert!(load_tensors(&p).is_err());
+    }
+
+    #[cfg(feature = "pjrt")]
+    #[test]
+    fn roundtrip_literal_state() {
+        use crate::runtime::f32_literal;
+        let dir = std::env::temp_dir().join("ssprop_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ck_lit.tstore");
+        let mut state = HashMap::new();
+        state
+            .insert("param['w']".to_string(), f32_literal(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap());
+        save(&p, &state, "resnet18_cifar10", 3).unwrap();
+        let (back, artifact, epoch) = load(&p).unwrap();
+        assert_eq!((artifact.as_str(), epoch), ("resnet18_cifar10", 3));
+        assert_eq!(back["param['w']"].to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
     }
 }

@@ -1,10 +1,12 @@
 //! Training metrics: loss/acc curves, FLOPs ledger (dense-equivalent vs
-//! actual under the schedule), wall-clock, and energy estimates.
+//! actual under the schedule), wall-clock, and energy estimates. Keyed on
+//! the conv inventory ([`LayerSet`]) rather than any runtime's manifest, so
+//! native and PJRT trainers share one ledger.
 
 use std::time::Duration;
 
 use crate::energy::{estimate, DeviceProfile, EnergyReport};
-use crate::runtime::Manifest;
+use crate::flops::LayerSet;
 
 #[derive(Debug, Default, Clone)]
 pub struct TrainMetrics {
@@ -21,12 +23,19 @@ pub struct TrainMetrics {
 }
 
 impl TrainMetrics {
-    pub fn record_iter(&mut self, loss: f64, acc: f64, drop_rate: f64, man: &Manifest) {
+    pub fn record_iter(
+        &mut self,
+        loss: f64,
+        acc: f64,
+        drop_rate: f64,
+        layers: &LayerSet,
+        bt: usize,
+    ) {
         self.losses.push(loss);
         self.accs.push(acc);
         self.drop_rates.push(drop_rate);
-        self.flops_dense += man.bwd_flops(0.0);
-        self.flops_actual += man.bwd_flops(drop_rate);
+        self.flops_dense += layers.bwd_flops_per_iter(bt, 0.0);
+        self.flops_actual += layers.bwd_flops_per_iter(bt, drop_rate);
     }
 
     pub fn record_epoch(&mut self, wall: Duration) {
@@ -92,25 +101,21 @@ fn mean_tail(v: &[f64], n: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::Manifest;
+    use crate::flops::ConvLayer;
 
-    fn toy_manifest() -> Manifest {
-        Manifest::parse(
-            r#"{"name":"t","kind":"train","batch":8,
-                "inputs":[],"outputs":[],
-                "layers":{"convs":[{"cin":3,"cout":16,"k":3,"stride":1,"padding":1,
-                                    "hin":8,"win":8,"hout":8,"wout":8}],
-                          "bns":[],"dropouts":[]}}"#,
-        )
-        .unwrap()
+    fn toy_layers() -> LayerSet {
+        LayerSet {
+            convs: vec![ConvLayer { cin: 3, cout: 16, k: 3, hout: 8, wout: 8, counted_bn: false }],
+            dropouts: Vec::new(),
+        }
     }
 
     #[test]
     fn flops_ledger_tracks_schedule() {
-        let man = toy_manifest();
+        let layers = toy_layers();
         let mut m = TrainMetrics::default();
-        m.record_iter(1.0, 0.1, 0.0, &man);
-        m.record_iter(0.9, 0.2, 0.8, &man);
+        m.record_iter(1.0, 0.1, 0.0, &layers, 8);
+        m.record_iter(0.9, 0.2, 0.8, &layers, 8);
         assert!(m.flops_actual < m.flops_dense);
         let saving = m.flops_saving();
         assert!(saving > 0.3 && saving < 0.5, "saving {saving}");
@@ -119,10 +124,10 @@ mod tests {
 
     #[test]
     fn dense_only_run_saves_nothing() {
-        let man = toy_manifest();
+        let layers = toy_layers();
         let mut m = TrainMetrics::default();
         for _ in 0..4 {
-            m.record_iter(1.0, 0.5, 0.0, &man);
+            m.record_iter(1.0, 0.5, 0.0, &layers, 8);
         }
         assert_eq!(m.flops_saving(), 0.0);
     }
@@ -130,9 +135,9 @@ mod tests {
     #[test]
     fn tail_means() {
         let mut m = TrainMetrics::default();
-        let man = toy_manifest();
+        let layers = toy_layers();
         for (i, l) in [4.0, 3.0, 2.0, 1.0].iter().enumerate() {
-            m.record_iter(*l, i as f64, 0.0, &man);
+            m.record_iter(*l, i as f64, 0.0, &layers, 8);
         }
         assert_eq!(m.last_epoch_loss(2), 1.5);
         assert_eq!(m.last_epoch_acc(2), 2.5);

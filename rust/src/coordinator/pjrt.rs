@@ -1,0 +1,220 @@
+//! PJRT training loop (feature `pjrt`): drives AOT-compiled train/eval
+//! graphs, feeding state leaves back from the previous iteration's outputs.
+//! The same loop drives every classifier artifact; `ddpm.rs` reuses the
+//! state machinery for generation.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::{TrainConfig, TrainMetrics};
+use crate::data::{Loader, Split, SynthDataset};
+use crate::runtime::{
+    f32_literal, i32_literal, literal_scalar_f32, scalar_f32, tensor_to_literal, u32_literal,
+    Engine, LoadedGraph, Role,
+};
+use crate::util::rng::Pcg;
+
+/// A live training job: compiled graphs + mutable state leaves.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub train_graph: Arc<LoadedGraph>,
+    pub eval_graph: Option<Arc<LoadedGraph>>,
+    /// State leaves keyed by manifest input name (params, opt, bn).
+    pub state: HashMap<String, xla::Literal>,
+    pub loader: Loader,
+    pub test_loader: Loader,
+    pub metrics: TrainMetrics,
+    rng: Pcg,
+}
+
+impl Trainer {
+    pub fn new(engine: &Engine, cfg: TrainConfig) -> Result<Trainer> {
+        let train_graph = engine.load(&format!("{}_train", cfg.artifact))?;
+        let eval_graph = engine.load(&format!("{}_eval", cfg.artifact)).ok();
+        let man = &train_graph.manifest;
+        let spec = crate::data::spec(&man.dataset)
+            .with_context(|| format!("unknown dataset {:?}", man.dataset))?;
+        let ds = SynthDataset::new(spec.clone(), cfg.seed);
+        let loader = Loader::new(ds.clone(), Split::Train, man.batch);
+        let test_loader = Loader::new(ds, Split::Test, man.batch);
+
+        // initial state from the AOT-produced tensorstore
+        let mut state = HashMap::new();
+        for (name, t) in engine.load_init(&format!("{}_train", cfg.artifact))? {
+            state.insert(name, tensor_to_literal(&t)?);
+        }
+        // sanity: every state input has an initial value
+        for i in &man.inputs {
+            if i.role.is_state() && !state.contains_key(&i.name) {
+                bail!("no initial value for state input {:?}", i.name);
+            }
+        }
+        let rng = Pcg::new(cfg.seed ^ 0xC0FFEE, 11);
+        Ok(Trainer {
+            cfg,
+            train_graph,
+            eval_graph,
+            state,
+            loader,
+            test_loader,
+            metrics: TrainMetrics::default(),
+            rng,
+        })
+    }
+
+    /// Iterations per epoch after capping to the dataset size.
+    pub fn iters_per_epoch(&self) -> usize {
+        self.cfg.iters_per_epoch.min(self.loader.batches_per_epoch()).max(1)
+    }
+
+    /// Run the configured number of epochs. Returns final test (loss, acc).
+    pub fn run(&mut self) -> Result<(f64, f64)> {
+        let ipe = self.iters_per_epoch();
+        let mut it = 0usize;
+        for epoch in 0..self.cfg.epochs {
+            let rx = self.loader.prefetch_epoch(epoch, 4);
+            let t0 = Instant::now();
+            for (b, batch) in rx.iter().enumerate() {
+                if b >= ipe {
+                    break;
+                }
+                let d = self.cfg.scheduler.rate_at(it);
+                let (loss, acc) = self.step(&batch, d)?;
+                let man = &self.train_graph.manifest;
+                self.metrics.record_iter(loss, acc, d, &man.layers, man.batch);
+                it += 1;
+            }
+            self.metrics.record_epoch(t0.elapsed());
+            if self.cfg.verbose {
+                let m = &self.metrics;
+                println!(
+                    "epoch {epoch:>3}  loss {:.4}  acc {:.3}  drop {:.2}  ({} iters)",
+                    m.last_epoch_loss(ipe),
+                    m.last_epoch_acc(ipe),
+                    self.cfg.scheduler.rate_at(it.saturating_sub(1)),
+                    ipe
+                );
+            }
+            if self.cfg.eval_every > 0 && (epoch + 1) % self.cfg.eval_every == 0 {
+                let (l, a) = self.evaluate()?;
+                self.metrics.record_eval(epoch, l, a);
+                if self.cfg.verbose {
+                    println!("          test loss {l:.4}  test acc {a:.3}");
+                }
+            }
+        }
+        let fin = self.evaluate()?;
+        self.metrics.record_eval(self.cfg.epochs.saturating_sub(1), fin.0, fin.1);
+        Ok(fin)
+    }
+
+    /// One training step at drop rate `d`.
+    pub fn step(&mut self, batch: &crate::data::Batch, d: f64) -> Result<(f64, f64)> {
+        // keep an Arc to the graph so `man` borrows from it, not from self
+        // (avoids deep-cloning the manifest every iteration).
+        let graph = self.train_graph.clone();
+        let man = &graph.manifest;
+        let key = self.rng.jax_key();
+        // ephemeral (non-state) literals, keyed by input index
+        let mut ephemeral: Vec<(usize, xla::Literal)> = Vec::new();
+        for (idx, spec) in man.inputs.iter().enumerate() {
+            let lit = match spec.role {
+                Role::Param | Role::Opt | Role::Bn => continue,
+                Role::DataX => f32_literal(&spec.shape, &batch.x)?,
+                Role::DataY => {
+                    if spec.dtype == "i32" {
+                        i32_literal(&spec.shape, &batch.y_class)?
+                    } else {
+                        f32_literal(&spec.shape, &batch.y_multi)?
+                    }
+                }
+                Role::Lr => scalar_f32(self.cfg.lr as f32)?,
+                Role::DropRate => scalar_f32(d as f32)?,
+                Role::DropoutRate => scalar_f32(self.cfg.dropout_rate as f32)?,
+                Role::Key => u32_literal(&spec.shape, &key)?,
+                other => bail!("unexpected train input role {other:?}"),
+            };
+            ephemeral.push((idx, lit));
+        }
+        let outs = run_with_state(&graph, &self.state, ephemeral)?;
+
+        // re-bind state + extract scalars
+        let mut loss = f64::NAN;
+        let mut acc = f64::NAN;
+        for (o, lit) in man.outputs.iter().zip(outs) {
+            if o.feeds_input >= 0 {
+                self.state.insert(o.name.clone(), lit);
+            } else if o.role == Role::Loss {
+                loss = literal_scalar_f32(&lit)? as f64;
+            } else if o.role == Role::Acc {
+                acc = literal_scalar_f32(&lit)? as f64;
+            }
+        }
+        if !loss.is_finite() {
+            bail!("non-finite loss at drop rate {d}");
+        }
+        Ok((loss, acc))
+    }
+
+    /// Mean (loss, acc) over the test split using the eval graph.
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        let graph = match &self.eval_graph {
+            Some(g) => g.clone(),
+            None => return Ok((f64::NAN, f64::NAN)),
+        };
+        let man = &graph.manifest;
+        let order = self.test_loader.epoch_order(0);
+        let nb = self.test_loader.batches_per_epoch();
+        let (mut sl, mut sa) = (0.0, 0.0);
+        for b in 0..nb {
+            let batch = self.test_loader.batch(&order, b);
+            let mut ephemeral: Vec<(usize, xla::Literal)> = Vec::new();
+            for (idx, spec) in man.inputs.iter().enumerate() {
+                let lit = match spec.role {
+                    Role::Param | Role::Bn => continue,
+                    Role::DataX => f32_literal(&spec.shape, &batch.x)?,
+                    Role::DataY => {
+                        if spec.dtype == "i32" {
+                            i32_literal(&spec.shape, &batch.y_class)?
+                        } else {
+                            f32_literal(&spec.shape, &batch.y_multi)?
+                        }
+                    }
+                    other => bail!("unexpected eval input role {other:?}"),
+                };
+                ephemeral.push((idx, lit));
+            }
+            let outs = run_with_state(&graph, &self.state, ephemeral)?;
+            sl += literal_scalar_f32(&outs[man.output_index(Role::Loss).context("loss")?])? as f64;
+            sa += literal_scalar_f32(&outs[man.output_index(Role::Acc).context("acc")?])? as f64;
+        }
+        Ok((sl / nb as f64, sa / nb as f64))
+    }
+}
+
+/// Execute `graph` with state leaves pulled from `state` by name and the
+/// provided ephemeral literals (indexed by manifest input position).
+pub fn run_with_state(
+    graph: &LoadedGraph,
+    state: &HashMap<String, xla::Literal>,
+    ephemeral: Vec<(usize, xla::Literal)>,
+) -> Result<Vec<xla::Literal>> {
+    let man = &graph.manifest;
+    let eph: HashMap<usize, xla::Literal> = ephemeral.into_iter().collect();
+    let mut refs: Vec<&xla::Literal> = Vec::with_capacity(man.inputs.len());
+    for (idx, spec) in man.inputs.iter().enumerate() {
+        if let Some(l) = eph.get(&idx) {
+            refs.push(l);
+        } else {
+            refs.push(
+                state
+                    .get(&spec.name)
+                    .with_context(|| format!("missing state leaf {:?}", spec.name))?,
+            );
+        }
+    }
+    graph.run(&refs)
+}

@@ -70,10 +70,7 @@ impl Loader {
 
     /// Spawn a prefetch thread producing the epoch's batches with bounded
     /// lookahead (backpressure: the channel holds at most `depth` batches).
-    pub fn prefetch_epoch(self: &Loader, epoch: usize, depth: usize) -> mpsc::Receiver<Batch>
-    where
-        SynthDataset: Clone,
-    {
+    pub fn prefetch_epoch(&self, epoch: usize, depth: usize) -> mpsc::Receiver<Batch> {
         let (tx, rx) = mpsc::sync_channel(depth);
         let loader = Loader {
             ds: self.ds.clone(),

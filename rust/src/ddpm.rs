@@ -90,7 +90,7 @@ impl DdpmTrainer {
                     loss = literal_scalar_f32(&lit)? as f64;
                 }
             }
-            self.metrics.record_iter(loss, f64::NAN, d, &man);
+            self.metrics.record_iter(loss, f64::NAN, d, &man.layers, man.batch);
         }
         self.metrics.record_epoch(t0.elapsed());
         Ok(loss)

@@ -1,15 +1,25 @@
 //! Figure drivers: paper Fig. 2 (sensitivity), Fig. 3 (samples), Fig. 4
-//! (hyperparameter-search reliability).
+//! (hyperparameter-search reliability). All drivers train through PJRT
+//! artifacts (`pjrt` feature); the grid-agreement statistic
+//! [`fig4_agreement`] is pure table math and always available.
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
-use super::report::{f3, Table};
+#[cfg(feature = "pjrt")]
+use super::report::f3;
+use super::report::Table;
+#[cfg(feature = "pjrt")]
 use super::{run_classifier, Scale};
+#[cfg(feature = "pjrt")]
 use crate::ddpm::{write_pgm_grid, DdpmTrainer};
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
+#[cfg(feature = "pjrt")]
 use crate::schedule::{DropScheduler, Schedule};
 
 /// Fig. 2a: sparsified dimension (channel vs hw vs all) over drop rates.
+#[cfg(feature = "pjrt")]
 pub fn fig2a(engine: &Engine, scale: Scale, rates: &[f64]) -> Result<Table> {
     let mut t = Table::new(
         "Fig 2a — sparsified dimensions vs drop rate (CIFAR-10, ResNet-18, constant schedule)",
@@ -30,6 +40,7 @@ pub fn fig2a(engine: &Engine, scale: Scale, rates: &[f64]) -> Result<Table> {
 }
 
 /// Fig. 2b: top-k vs random gradient selection.
+#[cfg(feature = "pjrt")]
 pub fn fig2b(engine: &Engine, scale: Scale, rates: &[f64]) -> Result<Table> {
     let mut t = Table::new(
         "Fig 2b — top-k vs random selection (CIFAR-10, ResNet-18)",
@@ -47,6 +58,7 @@ pub fn fig2b(engine: &Engine, scale: Scale, rates: &[f64]) -> Result<Table> {
 }
 
 /// Fig. 2c: scheduler shapes (constant / linear / cosine / bar) per target rate.
+#[cfg(feature = "pjrt")]
 pub fn fig2c(engine: &Engine, scale: Scale, rates: &[f64]) -> Result<Table> {
     let mut t = Table::new(
         "Fig 2c — drop schedulers vs target rate (CIFAR-10, ResNet-18)",
@@ -65,6 +77,7 @@ pub fn fig2c(engine: &Engine, scale: Scale, rates: &[f64]) -> Result<Table> {
 }
 
 /// Fig. 2d: scheduler period sweep (iteration-periodic bar vs 2-epoch bar).
+#[cfg(feature = "pjrt")]
 pub fn fig2d(engine: &Engine, scale: Scale, periods: &[usize]) -> Result<Table> {
     let mut t = Table::new(
         "Fig 2d — bar-scheduler period sweep at D*=0.8 (CIFAR-10, ResNet-18)",
@@ -96,6 +109,7 @@ pub fn fig2d(engine: &Engine, scale: Scale, periods: &[usize]) -> Result<Table> 
 }
 
 /// Fig. 3: DDPM sample grids -> results/fig3_<dataset>.pgm.
+#[cfg(feature = "pjrt")]
 pub fn fig3(engine: &Engine, scale: Scale, datasets: &[&str]) -> Result<Vec<String>> {
     let mut written = Vec::new();
     std::fs::create_dir_all("results")?;
@@ -113,7 +127,13 @@ pub fn fig3(engine: &Engine, scale: Scale, datasets: &[&str]) -> Result<Vec<Stri
 }
 
 /// Fig. 4: depth x learning-rate reliability grid, dense vs sparse.
-pub fn fig4(engine: &Engine, scale: Scale, depths: &[usize], lrs: &[f64]) -> Result<(Table, Table)> {
+#[cfg(feature = "pjrt")]
+pub fn fig4(
+    engine: &Engine,
+    scale: Scale,
+    depths: &[usize],
+    lrs: &[f64],
+) -> Result<(Table, Table)> {
     let run = |sparse: bool| -> Result<Table> {
         let title = if sparse {
             "Fig 4 (sparse mode) — test acc, SimpleCNN depth x LR on CIFAR-100"
@@ -153,7 +173,9 @@ pub fn fig4_agreement(normal: &Table, sparse: &Table) -> (usize, usize, f64) {
     };
     let a = parse(normal);
     let b = parse(sparse);
-    let argmax = |v: &[f64]| v.iter().enumerate().max_by(|x, y| x.1.total_cmp(y.1)).map(|(i, _)| i).unwrap_or(0);
+    let argmax = |v: &[f64]| {
+        v.iter().enumerate().max_by(|x, y| x.1.total_cmp(y.1)).map(|(i, _)| i).unwrap_or(0)
+    };
     let (ia, ib) = (argmax(&a), argmax(&b));
     // Pearson correlation of the two accuracy surfaces
     let n = a.len().min(b.len()) as f64;

@@ -6,15 +6,23 @@
 //! but the *comparisons* (dense vs ssProp, Dropout interactions, iso-FLOPs,
 //! scheduler shapes) reproduce the paper's findings. FLOPs columns are
 //! analytic and match the paper exactly at full width (flops.rs).
+//!
+//! Analytic drivers (Tables 1–3, FLOPs parity, energy projection) run on
+//! any build; drivers that train through compiled artifacts require the
+//! `pjrt` feature.
 
+pub mod figures;
 pub mod report;
 pub mod tables;
-pub mod figures;
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
+#[cfg(feature = "pjrt")]
 use crate::coordinator::{TrainConfig, Trainer};
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
+#[cfg(feature = "pjrt")]
 use crate::schedule::{DropScheduler, Schedule};
 
 /// Shared scale knobs for all experiment drivers.
@@ -33,6 +41,7 @@ impl Default for Scale {
 }
 
 /// One classifier training run; returns (trainer-with-metrics, test acc).
+#[cfg(feature = "pjrt")]
 pub fn run_classifier(
     engine: &Engine,
     artifact: &str,
@@ -41,7 +50,8 @@ pub fn run_classifier(
     target_drop: f64,
     dropout_rate: f64,
 ) -> Result<(Trainer, f64)> {
-    let sched = DropScheduler::new(schedule, target_drop.min(0.999), scale.epochs, scale.iters_per_epoch);
+    let sched =
+        DropScheduler::new(schedule, target_drop.min(0.999), scale.epochs, scale.iters_per_epoch);
     let cfg = TrainConfig {
         artifact: artifact.to_string(),
         epochs: scale.epochs,
@@ -59,11 +69,13 @@ pub fn run_classifier(
 }
 
 /// Dense baseline: constant schedule at rate 0.
+#[cfg(feature = "pjrt")]
 pub fn run_dense(engine: &Engine, artifact: &str, scale: Scale) -> Result<(Trainer, f64)> {
     run_classifier(engine, artifact, scale, Schedule::Constant, 0.0, 0.0)
 }
 
 /// Paper-default ssProp: bar scheduler, 2-epoch period, D* = 0.8.
+#[cfg(feature = "pjrt")]
 pub fn run_ssprop(engine: &Engine, artifact: &str, scale: Scale) -> Result<(Trainer, f64)> {
     run_classifier(engine, artifact, scale, Schedule::EpochBar { period_epochs: 2 }, 0.8, 0.0)
 }

@@ -64,9 +64,7 @@ impl Table {
         let rows: Vec<Json> = self
             .rows
             .iter()
-            .map(|r| {
-                arr(r.iter().map(|c| Json::Str(c.clone())).collect())
-            })
+            .map(|r| arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
             .collect();
         let j = crate::util::json::obj(vec![
             ("id", Json::Str(id.to_string())),

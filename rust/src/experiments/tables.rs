@@ -1,15 +1,26 @@
-//! Table drivers: paper Tables 1–7.
+//! Table drivers: paper Tables 1–7. Tables 4–7 train through PJRT
+//! artifacts and are gated behind the `pjrt` feature; the analytic tables
+//! (1–3, FLOPs parity, energy) run on any build.
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
-use super::report::{f2, f3, f4, pct, Table};
-use super::{run_classifier, run_dense, run_ssprop, Scale};
+#[cfg(feature = "pjrt")]
+use super::report::{f3, f4, pct};
+use super::report::{f2, Table};
+#[cfg(feature = "pjrt")]
+use super::{run_classifier, run_dense, run_ssprop};
+use super::Scale;
 use crate::data;
+#[cfg(feature = "pjrt")]
 use crate::ddpm::DdpmTrainer;
 use crate::energy::{estimate, fmt_flops, RTX_A5000};
 use crate::flops::{paper_resnet, TABLE4_DENSE_BILLIONS};
+#[cfg(feature = "pjrt")]
 use crate::metrics::fid_proxy;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
+#[cfg(feature = "pjrt")]
 use crate::schedule::{DropScheduler, Schedule};
 
 /// Table 1: dataset geometry (paper) vs the synthetic substitutes.
@@ -63,11 +74,14 @@ pub fn table23(scale: Scale) -> Table {
 }
 
 /// Table 4: classification — dense vs ssProp. `datasets`/`archs` select rows.
+#[cfg(feature = "pjrt")]
 pub fn table4(engine: &Engine, scale: Scale, datasets: &[&str], archs: &[&str]) -> Result<Table> {
     let mut t = Table::new(
-        "Table 4 — classification: ResNet vs ssProp (paper FLOPs at full width; acc/time on synthetic testbed)",
-        &["Dataset", "Model", "Paper B/Iter", "Ours B/Iter (full width)", "Scaled B/Iter", "Total Est. FLOPs",
-          "Train Time (s)", "Test Acc", "Saving"],
+        "Table 4 — classification: ResNet vs ssProp (paper FLOPs full width; synthetic acc/time)",
+        &[
+            "Dataset", "Model", "Paper B/Iter", "Ours B/Iter (full width)", "Scaled B/Iter",
+            "Total Est. FLOPs", "Train Time (s)", "Test Acc", "Saving",
+        ],
     );
     for &ds in datasets {
         for &arch in archs {
@@ -110,6 +124,7 @@ pub fn table4(engine: &Engine, scale: Scale, datasets: &[&str], archs: &[&str]) 
     Ok(t)
 }
 
+#[cfg(feature = "pjrt")]
 fn paper_batch(arch: &str, ds: &str) -> usize {
     match (arch, ds) {
         (_, "mnist" | "fashion" | "cifar10" | "cifar100") => 128,
@@ -122,17 +137,25 @@ fn paper_batch(arch: &str, ds: &str) -> usize {
 }
 
 /// Table 5: DDPM generation — dense vs ssProp (FLOPs, time, FID-proxy).
+#[cfg(feature = "pjrt")]
 pub fn table5(engine: &Engine, scale: Scale, datasets: &[&str]) -> Result<Table> {
     let mut t = Table::new(
         "Table 5 — generation: DDPM vs ssProp-DDPM (FID-proxy on synthetic data)",
-        &["Dataset", "Model", "B/Iter (scaled)", "Total FLOPs", "Train Time (s)", "FID-proxy", "Saving"],
+        &[
+            "Dataset", "Model", "B/Iter (scaled)", "Total FLOPs", "Train Time (s)", "FID-proxy",
+            "Saving",
+        ],
     );
     let iters = scale.epochs * scale.iters_per_epoch;
     for &ds in datasets {
         for (label, target) in [("DDPM", 0.0), ("ssProp-DDPM", 0.8)] {
             let mut tr = DdpmTrainer::new(engine, ds, scale.lr, scale.seed)?;
             let sched = DropScheduler::new(
-                if target == 0.0 { Schedule::Constant } else { Schedule::EpochBar { period_epochs: 2 } },
+                if target == 0.0 {
+                    Schedule::Constant
+                } else {
+                    Schedule::EpochBar { period_epochs: 2 }
+                },
                 target,
                 scale.epochs,
                 scale.iters_per_epoch,
@@ -158,10 +181,14 @@ pub fn table5(engine: &Engine, scale: Scale, datasets: &[&str]) -> Result<Table>
 }
 
 /// Table 6: Dropout vs ssProp vs both, on ResNet-50.
+#[cfg(feature = "pjrt")]
 pub fn table6(engine: &Engine, scale: Scale, datasets: &[&str]) -> Result<Table> {
     let mut t = Table::new(
         "Table 6 — ResNet-50: Dropout vs ssProp vs combined",
-        &["Dataset", "Method (Drop Rate)", "B/Iter (scaled)", "Total FLOPs", "Train Time (s)", "Test Acc"],
+        &[
+            "Dataset", "Method (Drop Rate)", "B/Iter (scaled)", "Total FLOPs", "Train Time (s)",
+            "Test Acc",
+        ],
     );
     // (label, ssprop target, dropout rate, longer factor for dropout runs)
     let modes: &[(&str, f64, f64, usize)] = &[
@@ -199,10 +226,14 @@ pub fn table6(engine: &Engine, scale: Scale, datasets: &[&str]) -> Result<Table>
 }
 
 /// Table 7: sparse ResNet-50 vs iso-FLOPs ResNet-26.
+#[cfg(feature = "pjrt")]
 pub fn table7(engine: &Engine, scale: Scale, datasets: &[&str]) -> Result<Table> {
     let mut t = Table::new(
         "Table 7 — ssProp-50 vs normally-trained ResNet-26 (iso-FLOPs)",
-        &["Dataset", "Model", "Paper B/Iter", "Full-width B/Iter", "Total FLOPs", "Train Time (s)", "Test Acc"],
+        &[
+            "Dataset", "Model", "Paper B/Iter", "Full-width B/Iter", "Total FLOPs",
+            "Train Time (s)", "Test Acc",
+        ],
     );
     for &ds in datasets {
         let ds_geom = data::spec(ds).unwrap();

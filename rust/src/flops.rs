@@ -49,9 +49,12 @@ pub fn conv_bwd_flops_ssprop(bt: usize, l: &ConvLayer, d: f64) -> f64 {
     (4.0 * m * n + m) * keep + (m - 1.0) * l.cout as f64
 }
 
-/// Shared keep-count semantics: k = clamp(round((1−D)·C), 1, C).
+/// Shared keep-count semantics: k = clamp(round((1−D)·C), 1, C), with
+/// ties rounding to even — `jnp.round` semantics, so the Rust ledger and
+/// selection agree with the Python compile path at exact .5 keep counts
+/// (e.g. C=5, D=0.5 keeps 2 channels on both sides).
 pub fn keep_channels(cout: usize, d: f64) -> usize {
-    (((1.0 - d) * cout as f64).round() as usize).clamp(1, cout)
+    (((1.0 - d) * cout as f64).round_ties_even() as usize).clamp(1, cout)
 }
 
 /// Eq. 7: BatchNorm backward FLOPs.
@@ -138,8 +141,10 @@ fn conv_out(h: usize, k: usize, s: usize, p: usize) -> usize {
 /// `width_mult` = 1.0 reproduces Tables 4–7.
 pub fn paper_resnet(arch: &str, img: usize, in_ch: usize, width_mult: f64) -> LayerSet {
     let (block, layers) = resnet_config(arch).unwrap_or_else(|| panic!("unknown arch {arch}"));
-    let widths: Vec<usize> =
-        [64usize, 128, 256, 512].iter().map(|&w| ((w as f64 * width_mult) as usize).max(8)).collect();
+    let widths: Vec<usize> = [64usize, 128, 256, 512]
+        .iter()
+        .map(|&w| ((w as f64 * width_mult) as usize).max(8))
+        .collect();
     let exp = match block {
         Block::Basic => 1,
         Block::Bottleneck => 4,
@@ -223,6 +228,10 @@ mod tests {
         assert_eq!(keep_channels(10, 0.999), 1);
         assert_eq!(keep_channels(1, 0.5), 1);
         assert_eq!(keep_channels(128, 0.8), 26);
+        // ties round to even, matching jnp.round in the compile path
+        assert_eq!(keep_channels(5, 0.5), 2); // 2.5 -> 2
+        assert_eq!(keep_channels(6, 0.25), 4); // 4.5 -> 4
+        assert_eq!(keep_channels(7, 0.5), 4); // 3.5 -> 4
     }
 
     #[test]
@@ -253,7 +262,10 @@ mod tests {
             let set = paper_resnet(arch, img, in_ch, 1.0);
             let ours = set.bwd_flops_per_iter(bt, 0.0) / 1e9;
             let rel = (ours - paper_b).abs() / paper_b;
-            assert!(rel < 1.5e-3, "{arch}@{img} bs{bt}: ours {ours:.2} vs paper {paper_b} (rel {rel:.4})");
+            assert!(
+                rel < 1.5e-3,
+                "{arch}@{img} bs{bt}: ours {ours:.2} vs paper {paper_b} (rel {rel:.4})"
+            );
         }
     }
 

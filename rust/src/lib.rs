@@ -13,11 +13,35 @@
 //!   routing, synthetic data plane, FLOPs/energy accounting, metrics,
 //!   checkpoints, experiment harness. Python never runs at L3.
 //!
+//! ## Workspace layout
+//!
+//! The Cargo workspace root is the repository root; this package lives in
+//! `rust/` with two vendored path crates keeping the default build fully
+//! offline: `rust/vendor/anyhow` (API-compatible error shim) and
+//! `rust/vendor/xla` (compile-time stub of the PJRT FFI crate).
+//!
+//! Two execution routes share the L3 coordinator:
+//!
+//! * [`backend`] — the default, dependency-free route: a [`backend::Backend`]
+//!   op trait with a pure-Rust [`backend::NativeBackend`] (img2col GEMM
+//!   forward, channel top-k compacted sparse backward mirroring
+//!   `python/compile/kernels/ref.py`), driven by
+//!   [`coordinator::NativeTrainer`]. `cargo run -- quickstart` trains a
+//!   SimpleCNN on the synthetic data plane with zero setup.
+//! * [`runtime`] — the AOT/PJRT route (cargo feature `pjrt`): loads
+//!   `artifacts/*.hlo.txt` compiled by the Python side and executes whole
+//!   training-step graphs. Gated so the default build has no FFI deps;
+//!   [`runtime::find_artifacts_dir`] and the typed
+//!   [`runtime::EngineError`] stay available for artifact discovery either
+//!   way.
+//!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record of every table and figure.
 
+pub mod backend;
 pub mod coordinator;
 pub mod data;
+#[cfg(feature = "pjrt")]
 pub mod ddpm;
 pub mod energy;
 pub mod experiments;

@@ -1,14 +1,15 @@
 //! `ssprop` — CLI entrypoint for the L3 coordinator.
 //!
 //! Subcommands map 1:1 onto the paper's experiments; see `ssprop help`.
+//! Native commands (quickstart, train-native, datasets, presets, flops,
+//! energy) run on the pure-Rust backend with zero setup; artifact commands
+//! (train, ddpm, tables, figures) execute AOT-compiled graphs and require
+//! a build with `--features pjrt` plus `make artifacts`.
 
 use anyhow::{bail, Result};
-use ssprop::coordinator::{checkpoint, TrainConfig, Trainer};
-use ssprop::ddpm::DdpmTrainer;
+use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
 use ssprop::energy::{RTX_A5000, TPU_CORE};
-use ssprop::experiments::{figures, tables, Scale};
-use ssprop::metrics::fid_proxy;
-use ssprop::runtime::Engine;
+use ssprop::experiments::{tables, Scale};
 use ssprop::schedule::{DropScheduler, Schedule};
 use ssprop::util::cli::Args;
 
@@ -17,41 +18,69 @@ ssprop — scheduled sparse back-propagation coordinator (paper reproduction)
 
 USAGE: ssprop <command> [--flags]
 
-commands:
-  train        train one artifact         --artifact resnet18_cifar10 --epochs 4
-               [--iters 24] [--lr 1e-3]
+native commands (no artifacts needed; pure-Rust backend):
+  quickstart   train a SimpleCNN with the paper's scheduler and print the
+               FLOPs/energy ledger   [--dataset cifar10] [--epochs 4]
+               [--iters 24] [--target-drop 0.8] [--seed 0]
+  train-native full native training  --dataset cifar10 [--depth 2] [--width 8]
+               [--batch 16] [--epochs 3] [--iters 16] [--lr 0.3]
                [--schedule epoch-bar|constant|linear|cosine|bar|iter-bar|warmup-bar]
-               [--target-drop 0.8] [--period 2] [--dropout 0.0] [--seed 0]
+               [--target-drop 0.8] [--period 2] [--seed 0]
                [--save ck.tstore] [--verbose]
-  ddpm         train + sample a DDPM      --dataset mnist [--iters 100] [--lr 1e-3]
-  sample       sample from a DDPM checkpoint --dataset mnist [--out results/samples.pgm]
   datasets     print Table 1 (dataset geometry)
   presets      print Tables 2/3 (hyperparameters)
   flops        print FLOPs parity + Eq.10/11 lower-bound tables
   energy       print the paper-scale energy/carbon projection
+  help         this message
+
+artifact commands (build with --features pjrt, then `make artifacts`):
+  train        train one artifact         --artifact resnet18_cifar10 --epochs 4
+               [--iters 24] [--lr 1e-3] [--schedule ...] [--target-drop 0.8]
+               [--period 2] [--dropout 0.0] [--seed 0] [--save ck.tstore] [--verbose]
+  ddpm         train + sample a DDPM      --dataset mnist [--iters 100] [--lr 1e-3]
+  sample       sample from a DDPM checkpoint --dataset mnist [--out results/samples.pgm]
   table4|table5|table6|table7
                regenerate a paper table   [--epochs N --iters N --datasets a,b --archs x,y]
-  suite        the whole recorded suite in ONE process (shared executable
-               cache — ResNet-50 compiles once)  [--epochs 4 --iters 10]
+  suite        the whole recorded suite in ONE process (shared executable cache)
   fig2         regenerate Fig 2           --part a|b|c|d [--rates 0.25,0.55,0.8]
   fig3         DDPM sample grids          [--datasets mnist,fashion]
   fig4         hyperparameter grid        [--depths 2,4,6 --lrs 4e-4,1.6e-3,6.4e-3]
   artifacts    list compiled artifacts
-  help         this message
 
 global flags: --artifacts-dir DIR (default: artifacts)";
 
 fn scale_from(args: &Args) -> Scale {
-    let mut s = Scale::default();
-    s.epochs = args.get_usize("epochs", s.epochs);
-    s.iters_per_epoch = args.get_usize("iters", s.iters_per_epoch);
-    s.seed = args.get_u64("seed", s.seed);
-    s.lr = args.get_f64("lr", s.lr);
-    s
+    let d = Scale::default();
+    Scale {
+        epochs: args.get_usize("epochs", d.epochs),
+        iters_per_epoch: args.get_usize("iters", d.iters_per_epoch),
+        seed: args.get_u64("seed", d.seed),
+        lr: args.get_f64("lr", d.lr),
+    }
 }
 
-fn list_arg<'a>(args: &'a Args, key: &str, default: &'a str) -> Vec<String> {
-    args.get_or(key, default).split(',').map(|s| s.trim().to_string()).collect()
+fn parse_schedule(args: &Args) -> Result<Schedule> {
+    Schedule::parse(args.get_or("schedule", "epoch-bar"), args.get_usize("period", 2))
+        .ok_or_else(|| anyhow::anyhow!("unknown schedule"))
+}
+
+/// Validate the flags that would otherwise trip constructor asserts, so the
+/// CLI fails with a clean error instead of a panic.
+fn parse_horizon_and_target(
+    args: &Args,
+    def_epochs: usize,
+    def_iters: usize,
+) -> Result<(usize, usize, f64)> {
+    let epochs = args.get_usize("epochs", def_epochs);
+    let iters = args.get_usize("iters", def_iters);
+    if epochs == 0 || iters == 0 {
+        bail!("--epochs and --iters must be positive");
+    }
+    let target = args.get_f64("target-drop", 0.8);
+    if !(0.0..1.0).contains(&target) {
+        bail!("--target-drop must be in [0, 1) (got {target})");
+    }
+    Ok((epochs, iters, target))
 }
 
 fn main() -> Result<()> {
@@ -69,253 +98,397 @@ fn main() -> Result<()> {
             lb.print();
         }
         "energy" => tables::energy_report().print(),
-        "train" => cmd_train(&args, &artifacts_dir)?,
-        "ddpm" => cmd_ddpm(&args, &artifacts_dir)?,
-        "sample" => cmd_sample(&args, &artifacts_dir)?,
-        "artifacts" => {
-            let engine = Engine::new(&artifacts_dir)?;
-            for name in engine.list_artifacts()? {
-                println!("{name}");
+        "quickstart" => cmd_quickstart(&args)?,
+        "train-native" => cmd_train_native(&args)?,
+        other => {
+            if !artifact_cmd(other, &args, &artifacts_dir)? {
+                bail!("unknown command {other:?}; try `ssprop help`");
             }
         }
-        "table4" => {
-            let engine = Engine::new(&artifacts_dir)?;
-            let datasets = list_arg(&args, "datasets", "mnist,cifar10");
-            let archs = list_arg(&args, "archs", "resnet18,resnet50");
-            let t = tables::table4(
-                &engine,
-                scale_from(&args),
-                &datasets.iter().map(String::as_str).collect::<Vec<_>>(),
-                &archs.iter().map(String::as_str).collect::<Vec<_>>(),
-            )?;
-            t.print();
-        }
-        "table5" => {
-            let engine = Engine::new(&artifacts_dir)?;
-            let datasets = list_arg(&args, "datasets", "mnist");
-            let t = tables::table5(
-                &engine,
-                scale_from(&args),
-                &datasets.iter().map(String::as_str).collect::<Vec<_>>(),
-            )?;
-            t.print();
-        }
-        "table6" => {
-            let engine = Engine::new(&artifacts_dir)?;
-            let datasets = list_arg(&args, "datasets", "cifar10");
-            let t = tables::table6(
-                &engine,
-                scale_from(&args),
-                &datasets.iter().map(String::as_str).collect::<Vec<_>>(),
-            )?;
-            t.print();
-        }
-        "table7" => {
-            let engine = Engine::new(&artifacts_dir)?;
-            let datasets = list_arg(&args, "datasets", "cifar10");
-            let t = tables::table7(
-                &engine,
-                scale_from(&args),
-                &datasets.iter().map(String::as_str).collect::<Vec<_>>(),
-            )?;
-            t.print();
-        }
-        // one process for the whole recorded suite: the engine caches
-        // compiled executables, so each model compiles exactly once
-        // (ResNet-50 alone costs minutes of XLA CPU compile time).
-        "suite" => cmd_suite(&args, &artifacts_dir)?,
-        "fig2" => cmd_fig2(&args, &artifacts_dir)?,
-        "fig3" => {
-            let engine = Engine::new(&artifacts_dir)?;
-            let datasets = list_arg(&args, "datasets", "mnist");
-            let written = figures::fig3(
-                &engine,
-                scale_from(&args),
-                &datasets.iter().map(String::as_str).collect::<Vec<_>>(),
-            )?;
-            for p in written {
-                println!("wrote {p}");
-            }
-        }
-        "fig4" => {
-            let engine = Engine::new(&artifacts_dir)?;
-            let depths: Vec<usize> = list_arg(&args, "depths", "2,4,6")
-                .iter()
-                .filter_map(|s| s.parse().ok())
-                .collect();
-            let lrs: Vec<f64> = list_arg(&args, "lrs", "4e-4,1.6e-3,6.4e-3")
-                .iter()
-                .filter_map(|s| s.parse().ok())
-                .collect();
-            let (normal, sparse) = figures::fig4(&engine, scale_from(&args), &depths, &lrs)?;
-            normal.print();
-            sparse.print();
-            let (ia, ib, corr) = figures::fig4_agreement(&normal, &sparse);
-            println!("\nbest cell: normal #{ia}, sparse #{ib}; surface correlation {corr:.3}");
-        }
-        other => bail!("unknown command {other:?}; try `ssprop help`"),
     }
     Ok(())
 }
 
-fn cmd_train(args: &Args, artifacts_dir: &str) -> Result<()> {
-    let engine = Engine::new(artifacts_dir)?;
-    let artifact = args.get_or("artifact", "resnet18_cifar10").to_string();
-    let epochs = args.get_usize("epochs", 4);
-    let iters = args.get_usize("iters", 24);
-    let schedule = Schedule::parse(
-        args.get_or("schedule", "epoch-bar"),
-        args.get_usize("period", 2),
-    )
-    .ok_or_else(|| anyhow::anyhow!("unknown schedule"))?;
-    let cfg = TrainConfig {
-        artifact: artifact.clone(),
-        epochs,
-        iters_per_epoch: iters,
-        lr: args.get_f64("lr", 1e-3),
-        scheduler: DropScheduler::new(schedule, args.get_f64("target-drop", 0.8), epochs, iters),
-        dropout_rate: args.get_f64("dropout", 0.0),
-        seed: args.get_u64("seed", 0),
-        eval_every: args.get_usize("eval-every", 0),
-        verbose: args.has_flag("verbose") || args.get("verbose").is_some(),
-    };
-    let mut t = Trainer::new(&engine, cfg)?;
+/// Zero-setup demo: SimpleCNN on the synthetic data plane, paper-default
+/// bar scheduler, full FLOPs/energy ledger.
+fn cmd_quickstart(args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "cifar10").to_string();
+    let (epochs, iters, target) = parse_horizon_and_target(args, 4, 24)?;
+    let mut cfg = NativeTrainConfig::quick(&dataset, epochs, iters);
+    cfg.seed = args.get_u64("seed", 0);
+    cfg.scheduler =
+        DropScheduler::new(Schedule::EpochBar { period_epochs: 2 }, target, epochs, iters);
+    cfg.verbose = true;
+
+    println!("== ssProp quickstart: SimpleCNN on synth-{dataset} (native backend) ==\n");
+    let mut t = NativeTrainer::new(cfg)?;
     let (loss, acc) = t.run()?;
-    let m = &t.metrics;
-    println!("\nartifact         {artifact}");
-    println!("final test loss  {loss:.4}");
-    println!("final test acc   {acc:.4}");
-    println!("mean drop rate   {:.3}", m.mean_drop_rate());
-    println!("bwd FLOPs        dense-equivalent {:.3e}, actual {:.3e} (saved {:.1}%)",
-             m.flops_dense, m.flops_actual, m.flops_saving() * 100.0);
-    let saved = m.energy_saved(&RTX_A5000);
-    let saved_tpu = m.energy_saved(&TPU_CORE);
-    println!("energy saved     {:.6} kWh ({:.3} gCO2e) @A5000; {:.6} kWh @TPU",
-             saved.kwh, saved.gco2e, saved_tpu.kwh);
-    println!("wall time        {:.2}s", m.total_wall_secs());
+    print_native_summary(&t, loss, acc);
+    Ok(())
+}
+
+/// Full native training with every knob exposed.
+fn cmd_train_native(args: &Args) -> Result<()> {
+    let dataset = args.get_or("dataset", "cifar10").to_string();
+    let (epochs, iters, target) = parse_horizon_and_target(args, 3, 16)?;
+    let schedule = parse_schedule(args)?;
+    if args.get_usize("depth", 1) == 0 || args.get_usize("width", 1) == 0 {
+        bail!("--depth and --width must be positive");
+    }
+    let mut cfg = NativeTrainConfig::quick(&dataset, epochs, iters);
+    cfg.depth = args.get_usize("depth", cfg.depth);
+    cfg.width = args.get_usize("width", cfg.width);
+    cfg.batch = args.get_usize("batch", cfg.batch);
+    cfg.lr = args.get_f64("lr", cfg.lr);
+    cfg.seed = args.get_u64("seed", 0);
+    cfg.scheduler = DropScheduler::new(schedule, target, epochs, iters);
+    cfg.verbose = args.has_flag("verbose") || args.get("verbose").is_some();
+
+    let mut t = NativeTrainer::new(cfg)?;
+    let (loss, acc) = t.run()?;
+    print_native_summary(&t, loss, acc);
     if let Some(path) = args.get("save") {
-        checkpoint::save(path, &t.state, &artifact, epochs)?;
+        t.save_checkpoint(path, epochs)?;
         println!("checkpoint       {path}");
     }
     Ok(())
 }
 
-fn cmd_ddpm(args: &Args, artifacts_dir: &str) -> Result<()> {
-    let engine = Engine::new(artifacts_dir)?;
-    let dataset = args.get_or("dataset", "mnist").to_string();
-    let iters = args.get_usize("iters", 100);
-    let mut tr = DdpmTrainer::new(&engine, &dataset, args.get_f64("lr", 1e-3), args.get_u64("seed", 0))?;
-    let sched = DropScheduler::paper_default(2, iters.div_ceil(2).max(1));
-    let loss = tr.train(iters, &sched)?;
-    println!("ddpm {dataset}: {iters} iters, final loss {loss:.4}");
-    let samples = tr.sample(1)?;
-    let real = tr.real_batch(64);
-    let fid = fid_proxy(&real, &samples, 1234);
-    println!("FID-proxy {fid:.4} (vs real synthetic data)");
-    let m = &tr.metrics;
-    println!("bwd FLOPs saved {:.1}%, wall {:.2}s", m.flops_saving() * 100.0, m.total_wall_secs());
-    let out = args.get_or("out", "results/ddpm_samples.pgm");
-    std::fs::create_dir_all("results").ok();
-    let man = tr.denoise_graph.manifest.clone();
-    ssprop::ddpm::write_pgm_grid(out, &samples, man.img, man.channels)?;
-    println!("samples -> {out}");
-    Ok(())
+fn print_native_summary(t: &NativeTrainer, loss: f64, acc: f64) {
+    let m = &t.metrics;
+    println!("\nbackend          {}", t.backend_name());
+    println!("dataset          {} (SimpleCNN d{} w{})", t.cfg.dataset, t.cfg.depth, t.cfg.width);
+    println!("final test loss  {loss:.4}");
+    println!("final test acc   {acc:.4}");
+    println!("mean drop rate   {:.3}", m.mean_drop_rate());
+    println!(
+        "bwd FLOPs        dense-equivalent {:.3e}, actual {:.3e} (saved {:.1}%)",
+        m.flops_dense,
+        m.flops_actual,
+        m.flops_saving() * 100.0
+    );
+    let saved = m.energy_saved(&RTX_A5000);
+    let saved_tpu = m.energy_saved(&TPU_CORE);
+    println!(
+        "energy saved     {:.6} kWh ({:.3} gCO2e) @A5000; {:.6} kWh @TPU",
+        saved.kwh, saved.gco2e, saved_tpu.kwh
+    );
+    println!("wall time        {:.2}s", m.total_wall_secs());
 }
 
-fn cmd_sample(args: &Args, artifacts_dir: &str) -> Result<()> {
-    let engine = Engine::new(artifacts_dir)?;
-    let dataset = args.get_or("dataset", "mnist").to_string();
-    let mut tr = DdpmTrainer::new(&engine, &dataset, 1e-3, 0)?;
-    if let Some(ck) = args.get("checkpoint") {
-        let (state, _, _) = checkpoint::load(ck)?;
-        tr.state = state;
+// ---------------------------------------------------------------------------
+// artifact (PJRT) commands
+// ---------------------------------------------------------------------------
+
+/// Every command handled by `pjrt_cmds::dispatch` — kept in one place so
+/// the no-pjrt build's "rebuild with --features pjrt" hint and the real
+/// dispatcher cannot drift apart.
+const ARTIFACT_CMDS: &[&str] = &[
+    "train", "ddpm", "sample", "artifacts", "suite", "table4", "table5", "table6", "table7",
+    "fig2", "fig3", "fig4",
+];
+
+/// Dispatch `cmd` if it is an artifact command; Ok(false) when unknown.
+#[cfg(not(feature = "pjrt"))]
+fn artifact_cmd(cmd: &str, _args: &Args, _artifacts_dir: &str) -> Result<bool> {
+    if ARTIFACT_CMDS.contains(&cmd) {
+        bail!(
+            "`{cmd}` executes AOT artifacts through PJRT; rebuild with `cargo build \
+             --features pjrt` (native commands work on any build: quickstart, \
+             train-native, datasets, presets, flops, energy)"
+        );
     }
-    let samples = tr.sample(args.get_u64("seed", 0))?;
-    let out = args.get_or("out", "results/samples.pgm");
-    std::fs::create_dir_all("results").ok();
-    let man = tr.denoise_graph.manifest.clone();
-    ssprop::ddpm::write_pgm_grid(out, &samples, man.img, man.channels)?;
-    println!("wrote {out}");
-    Ok(())
+    Ok(false)
 }
 
-fn cmd_fig2(args: &Args, artifacts_dir: &str) -> Result<()> {
-    let engine = Engine::new(artifacts_dir)?;
-    let scale = scale_from(args);
-    let part = args.get_or("part", "c");
-    let rates: Vec<f64> = args
-        .get_or("rates", "0.25,0.55,0.8")
-        .split(',')
-        .filter_map(|s| s.trim().parse().ok())
-        .collect();
-    match part {
-        "a" => figures::fig2a(&engine, scale, &rates)?.print(),
-        "b" => figures::fig2b(&engine, scale, &rates)?.print(),
-        "c" => figures::fig2c(&engine, scale, &rates)?.print(),
-        "d" => {
-            let periods: Vec<usize> = args
-                .get_or("periods", "30,120,300")
-                .split(',')
-                .filter_map(|s| s.trim().parse().ok())
-                .collect();
-            figures::fig2d(&engine, scale, &periods)?.print()
+#[cfg(feature = "pjrt")]
+fn artifact_cmd(cmd: &str, args: &Args, artifacts_dir: &str) -> Result<bool> {
+    let handled = pjrt_cmds::dispatch(cmd, args, artifacts_dir)?;
+    debug_assert_eq!(
+        handled,
+        ARTIFACT_CMDS.contains(&cmd),
+        "ARTIFACT_CMDS out of sync for {cmd:?}"
+    );
+    Ok(handled)
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_cmds {
+    use anyhow::{bail, Result};
+    use ssprop::coordinator::{checkpoint, TrainConfig, Trainer};
+    use ssprop::ddpm::DdpmTrainer;
+    use ssprop::energy::RTX_A5000;
+    use ssprop::experiments::{figures, tables};
+    use ssprop::metrics::fid_proxy;
+    use ssprop::runtime::Engine;
+    use ssprop::schedule::DropScheduler;
+    use ssprop::util::cli::Args;
+
+    use super::{parse_horizon_and_target, parse_schedule, scale_from};
+
+    fn list_arg(args: &Args, key: &str, default: &str) -> Vec<String> {
+        args.get_or(key, default).split(',').map(|s| s.trim().to_string()).collect()
+    }
+
+    pub fn dispatch(cmd: &str, args: &Args, artifacts_dir: &str) -> Result<bool> {
+        match cmd {
+            "train" => cmd_train(args, artifacts_dir)?,
+            "ddpm" => cmd_ddpm(args, artifacts_dir)?,
+            "sample" => cmd_sample(args, artifacts_dir)?,
+            "artifacts" => {
+                let engine = Engine::new(artifacts_dir)?;
+                for name in engine.list_artifacts()? {
+                    println!("{name}");
+                }
+            }
+            "table4" => {
+                let engine = Engine::new(artifacts_dir)?;
+                let datasets = list_arg(args, "datasets", "mnist,cifar10");
+                let archs = list_arg(args, "archs", "resnet18,resnet50");
+                let t = tables::table4(
+                    &engine,
+                    scale_from(args),
+                    &datasets.iter().map(String::as_str).collect::<Vec<_>>(),
+                    &archs.iter().map(String::as_str).collect::<Vec<_>>(),
+                )?;
+                t.print();
+            }
+            "table5" => {
+                let engine = Engine::new(artifacts_dir)?;
+                let datasets = list_arg(args, "datasets", "mnist");
+                let t = tables::table5(
+                    &engine,
+                    scale_from(args),
+                    &datasets.iter().map(String::as_str).collect::<Vec<_>>(),
+                )?;
+                t.print();
+            }
+            "table6" => {
+                let engine = Engine::new(artifacts_dir)?;
+                let datasets = list_arg(args, "datasets", "cifar10");
+                let t = tables::table6(
+                    &engine,
+                    scale_from(args),
+                    &datasets.iter().map(String::as_str).collect::<Vec<_>>(),
+                )?;
+                t.print();
+            }
+            "table7" => {
+                let engine = Engine::new(artifacts_dir)?;
+                let datasets = list_arg(args, "datasets", "cifar10");
+                let t = tables::table7(
+                    &engine,
+                    scale_from(args),
+                    &datasets.iter().map(String::as_str).collect::<Vec<_>>(),
+                )?;
+                t.print();
+            }
+            // one process for the whole recorded suite: the engine caches
+            // compiled executables, so each model compiles exactly once
+            // (ResNet-50 alone costs minutes of XLA CPU compile time).
+            "suite" => cmd_suite(args, artifacts_dir)?,
+            "fig2" => cmd_fig2(args, artifacts_dir)?,
+            "fig3" => {
+                let engine = Engine::new(artifacts_dir)?;
+                let datasets = list_arg(args, "datasets", "mnist");
+                let written = figures::fig3(
+                    &engine,
+                    scale_from(args),
+                    &datasets.iter().map(String::as_str).collect::<Vec<_>>(),
+                )?;
+                for p in written {
+                    println!("wrote {p}");
+                }
+            }
+            "fig4" => {
+                let engine = Engine::new(artifacts_dir)?;
+                let depths: Vec<usize> = list_arg(args, "depths", "2,4,6")
+                    .iter()
+                    .filter_map(|s| s.parse().ok())
+                    .collect();
+                let lrs: Vec<f64> = list_arg(args, "lrs", "4e-4,1.6e-3,6.4e-3")
+                    .iter()
+                    .filter_map(|s| s.parse().ok())
+                    .collect();
+                let (normal, sparse) = figures::fig4(&engine, scale_from(args), &depths, &lrs)?;
+                normal.print();
+                sparse.print();
+                let (ia, ib, corr) = figures::fig4_agreement(&normal, &sparse);
+                println!("\nbest cell: normal #{ia}, sparse #{ib}; surface correlation {corr:.3}");
+            }
+            _ => return Ok(false),
         }
-        other => bail!("unknown fig2 part {other:?} (a|b|c|d)"),
-    }
-    Ok(())
-}
-
-/// The full recorded experiment suite in a single process (shared
-/// executable cache). Scale via --epochs/--iters; logs land in results/.
-fn cmd_suite(args: &Args, artifacts_dir: &str) -> Result<()> {
-    let engine = Engine::new(artifacts_dir)?;
-    let scale = scale_from(args);
-    let t0 = std::time::Instant::now();
-
-    tables::table1().print();
-    tables::table23(scale).print();
-    let (parity, lb) = tables::flops_report();
-    parity.print();
-    lb.print();
-    tables::energy_report().print();
-
-    println!("\n[{:.0}s] Table 4 (resnet18: mnist,cifar10; resnet50: cifar10)", t0.elapsed().as_secs_f64());
-    tables::table4(&engine, scale, &["mnist", "cifar10"], &["resnet18"])?.print();
-    tables::table4(&engine, scale, &["cifar10"], &["resnet50"])?.print();
-
-    println!("\n[{:.0}s] Table 7", t0.elapsed().as_secs_f64());
-    tables::table7(&engine, scale, &["cifar10"])?.print();
-
-    println!("\n[{:.0}s] Table 6", t0.elapsed().as_secs_f64());
-    let mut sc6 = scale;
-    sc6.epochs = (scale.epochs / 2).max(1);
-    tables::table6(&engine, sc6, &["cifar10"])?.print();
-
-    println!("\n[{:.0}s] Table 5 + Fig 3", t0.elapsed().as_secs_f64());
-    let mut sc5 = scale;
-    sc5.lr = 2e-3;
-    tables::table5(&engine, sc5, &["mnist"])?.print();
-    for p in figures::fig3(&engine, sc5, &["mnist"])? {
-        println!("wrote {p}");
+        Ok(true)
     }
 
-    println!("\n[{:.0}s] Fig 2", t0.elapsed().as_secs_f64());
-    let mut sc2 = scale;
-    sc2.iters_per_epoch = (scale.iters_per_epoch * 2 / 3).max(4);
-    figures::fig2a(&engine, sc2, &[0.25, 0.8])?.print();
-    figures::fig2b(&engine, sc2, &[0.25, 0.8])?.print();
-    figures::fig2c(&engine, sc2, &[0.55, 0.8])?.print();
-    figures::fig2d(&engine, sc2, &[8, 24])?.print();
+    fn cmd_train(args: &Args, artifacts_dir: &str) -> Result<()> {
+        let engine = Engine::new(artifacts_dir)?;
+        let artifact = args.get_or("artifact", "resnet18_cifar10").to_string();
+        let (epochs, iters, target) = parse_horizon_and_target(args, 4, 24)?;
+        let schedule = parse_schedule(args)?;
+        let cfg = TrainConfig {
+            artifact: artifact.clone(),
+            epochs,
+            iters_per_epoch: iters,
+            lr: args.get_f64("lr", 1e-3),
+            scheduler: DropScheduler::new(schedule, target, epochs, iters),
+            dropout_rate: args.get_f64("dropout", 0.0),
+            seed: args.get_u64("seed", 0),
+            eval_every: args.get_usize("eval-every", 0),
+            verbose: args.has_flag("verbose") || args.get("verbose").is_some(),
+        };
+        let mut t = Trainer::new(&engine, cfg)?;
+        let (loss, acc) = t.run()?;
+        let m = &t.metrics;
+        println!("\nartifact         {artifact}");
+        println!("final test loss  {loss:.4}");
+        println!("final test acc   {acc:.4}");
+        println!("mean drop rate   {:.3}", m.mean_drop_rate());
+        println!(
+            "bwd FLOPs        dense-equivalent {:.3e}, actual {:.3e} (saved {:.1}%)",
+            m.flops_dense,
+            m.flops_actual,
+            m.flops_saving() * 100.0
+        );
+        let saved = m.energy_saved(&RTX_A5000);
+        let saved_tpu = m.energy_saved(&ssprop::energy::TPU_CORE);
+        println!(
+            "energy saved     {:.6} kWh ({:.3} gCO2e) @A5000; {:.6} kWh @TPU",
+            saved.kwh, saved.gco2e, saved_tpu.kwh
+        );
+        println!("wall time        {:.2}s", m.total_wall_secs());
+        if let Some(path) = args.get("save") {
+            checkpoint::save(path, &t.state, &artifact, epochs)?;
+            println!("checkpoint       {path}");
+        }
+        Ok(())
+    }
 
-    println!("\n[{:.0}s] Fig 4", t0.elapsed().as_secs_f64());
-    let mut sc4 = scale;
-    sc4.epochs = 3;
-    let (normal, sparse) = figures::fig4(&engine, sc4, &[2, 4, 6], &[4e-4, 1.6e-3, 6.4e-3])?;
-    normal.print();
-    sparse.print();
-    let (ia, ib, corr) = figures::fig4_agreement(&normal, &sparse);
-    println!("\nfig4 best cell: normal #{ia}, sparse #{ib}; surface correlation {corr:.3}");
+    fn cmd_ddpm(args: &Args, artifacts_dir: &str) -> Result<()> {
+        let engine = Engine::new(artifacts_dir)?;
+        let dataset = args.get_or("dataset", "mnist").to_string();
+        let iters = args.get_usize("iters", 100);
+        let mut tr =
+            DdpmTrainer::new(&engine, &dataset, args.get_f64("lr", 1e-3), args.get_u64("seed", 0))?;
+        let sched = DropScheduler::paper_default(2, iters.div_ceil(2).max(1));
+        let loss = tr.train(iters, &sched)?;
+        println!("ddpm {dataset}: {iters} iters, final loss {loss:.4}");
+        let samples = tr.sample(1)?;
+        let real = tr.real_batch(64);
+        let fid = fid_proxy(&real, &samples, 1234);
+        println!("FID-proxy {fid:.4} (vs real synthetic data)");
+        let m = &tr.metrics;
+        println!(
+            "bwd FLOPs saved {:.1}%, wall {:.2}s",
+            m.flops_saving() * 100.0,
+            m.total_wall_secs()
+        );
+        let out = args.get_or("out", "results/ddpm_samples.pgm");
+        std::fs::create_dir_all("results").ok();
+        let man = tr.denoise_graph.manifest.clone();
+        ssprop::ddpm::write_pgm_grid(out, &samples, man.img, man.channels)?;
+        println!("samples -> {out}");
+        Ok(())
+    }
 
-    println!("\nsuite done in {:.0}s", t0.elapsed().as_secs_f64());
-    Ok(())
+    fn cmd_sample(args: &Args, artifacts_dir: &str) -> Result<()> {
+        let engine = Engine::new(artifacts_dir)?;
+        let dataset = args.get_or("dataset", "mnist").to_string();
+        let mut tr = DdpmTrainer::new(&engine, &dataset, 1e-3, 0)?;
+        if let Some(ck) = args.get("checkpoint") {
+            let (state, _, _) = checkpoint::load(ck)?;
+            tr.state = state;
+        }
+        let samples = tr.sample(args.get_u64("seed", 0))?;
+        let out = args.get_or("out", "results/samples.pgm");
+        std::fs::create_dir_all("results").ok();
+        let man = tr.denoise_graph.manifest.clone();
+        ssprop::ddpm::write_pgm_grid(out, &samples, man.img, man.channels)?;
+        println!("wrote {out}");
+        Ok(())
+    }
+
+    fn cmd_fig2(args: &Args, artifacts_dir: &str) -> Result<()> {
+        let engine = Engine::new(artifacts_dir)?;
+        let scale = scale_from(args);
+        let part = args.get_or("part", "c");
+        let rates: Vec<f64> = args
+            .get_or("rates", "0.25,0.55,0.8")
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect();
+        match part {
+            "a" => figures::fig2a(&engine, scale, &rates)?.print(),
+            "b" => figures::fig2b(&engine, scale, &rates)?.print(),
+            "c" => figures::fig2c(&engine, scale, &rates)?.print(),
+            "d" => {
+                let periods: Vec<usize> = args
+                    .get_or("periods", "30,120,300")
+                    .split(',')
+                    .filter_map(|s| s.trim().parse().ok())
+                    .collect();
+                figures::fig2d(&engine, scale, &periods)?.print()
+            }
+            other => bail!("unknown fig2 part {other:?} (a|b|c|d)"),
+        }
+        Ok(())
+    }
+
+    /// The full recorded experiment suite in a single process (shared
+    /// executable cache). Scale via --epochs/--iters; logs land in results/.
+    fn cmd_suite(args: &Args, artifacts_dir: &str) -> Result<()> {
+        let engine = Engine::new(artifacts_dir)?;
+        let scale = scale_from(args);
+        let t0 = std::time::Instant::now();
+
+        tables::table1().print();
+        tables::table23(scale).print();
+        let (parity, lb) = tables::flops_report();
+        parity.print();
+        lb.print();
+        tables::energy_report().print();
+
+        println!(
+            "\n[{:.0}s] Table 4 (resnet18: mnist,cifar10; resnet50: cifar10)",
+            t0.elapsed().as_secs_f64()
+        );
+        tables::table4(&engine, scale, &["mnist", "cifar10"], &["resnet18"])?.print();
+        tables::table4(&engine, scale, &["cifar10"], &["resnet50"])?.print();
+
+        println!("\n[{:.0}s] Table 7", t0.elapsed().as_secs_f64());
+        tables::table7(&engine, scale, &["cifar10"])?.print();
+
+        println!("\n[{:.0}s] Table 6", t0.elapsed().as_secs_f64());
+        let mut sc6 = scale;
+        sc6.epochs = (scale.epochs / 2).max(1);
+        tables::table6(&engine, sc6, &["cifar10"])?.print();
+
+        println!("\n[{:.0}s] Table 5 + Fig 3", t0.elapsed().as_secs_f64());
+        let mut sc5 = scale;
+        sc5.lr = 2e-3;
+        tables::table5(&engine, sc5, &["mnist"])?.print();
+        for p in figures::fig3(&engine, sc5, &["mnist"])? {
+            println!("wrote {p}");
+        }
+
+        println!("\n[{:.0}s] Fig 2", t0.elapsed().as_secs_f64());
+        let mut sc2 = scale;
+        sc2.iters_per_epoch = (scale.iters_per_epoch * 2 / 3).max(4);
+        figures::fig2a(&engine, sc2, &[0.25, 0.8])?.print();
+        figures::fig2b(&engine, sc2, &[0.25, 0.8])?.print();
+        figures::fig2c(&engine, sc2, &[0.55, 0.8])?.print();
+        figures::fig2d(&engine, sc2, &[8, 24])?.print();
+
+        println!("\n[{:.0}s] Fig 4", t0.elapsed().as_secs_f64());
+        let mut sc4 = scale;
+        sc4.epochs = 3;
+        let (normal, sparse) = figures::fig4(&engine, sc4, &[2, 4, 6], &[4e-4, 1.6e-3, 6.4e-3])?;
+        normal.print();
+        sparse.print();
+        let (ia, ib, corr) = figures::fig4_agreement(&normal, &sparse);
+        println!("\nfig4 best cell: normal #{ia}, sparse #{ib}; surface correlation {corr:.3}");
+
+        println!("\nsuite done in {:.0}s", t0.elapsed().as_secs_f64());
+        Ok(())
+    }
 }

@@ -53,7 +53,12 @@ pub struct DropScheduler {
 }
 
 impl DropScheduler {
-    pub fn new(schedule: Schedule, target: f64, total_epochs: usize, iters_per_epoch: usize) -> Self {
+    pub fn new(
+        schedule: Schedule,
+        target: f64,
+        total_epochs: usize,
+        iters_per_epoch: usize,
+    ) -> Self {
         assert!((0.0..1.0).contains(&target), "target drop rate must be in [0,1)");
         assert!(total_epochs > 0 && iters_per_epoch > 0);
         DropScheduler { schedule, target, total_epochs, iters_per_epoch }
@@ -203,6 +208,28 @@ mod tests {
         );
     }
 
+    #[test]
+    fn paper_default_curve_hits_target_mean_rate() {
+        // the deployed 2-epoch bar at D*=0.8 averages to D*/2 = 0.4 over any
+        // even number of epochs — the paper's ~40% backward-FLOPs headline
+        for epochs in [2usize, 6, 10, 50] {
+            let d = DropScheduler::paper_default(epochs, 37);
+            assert!((d.mean_rate() - 0.4).abs() < 1e-12, "epochs {epochs}");
+        }
+        // odd horizons end on a dense epoch, pulling the mean below D*/2
+        let odd = DropScheduler::paper_default(5, 10);
+        assert!(odd.mean_rate() < 0.4);
+        assert!((odd.mean_rate() - 0.8 * 2.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_is_flat_across_the_horizon() {
+        let d = sched(Schedule::Constant);
+        for it in [0usize, 1, 499, 999, 5000] {
+            assert_eq!(d.rate_at(it), 0.8);
+        }
+    }
+
     // -- property tests (S13 mini-framework) ---------------------------------
 
     #[test]
@@ -251,6 +278,24 @@ mod tests {
             },
             |&(epochs, ipe, it)| {
                 let d = DropScheduler::new(Schedule::Linear, 0.9, epochs, ipe);
+                d.rate_at(it) <= d.rate_at(it + 1) + 1e-12
+            },
+        );
+    }
+
+    #[test]
+    fn prop_cosine_monotone_nondecreasing() {
+        check_no_shrink(
+            "cosine-monotone",
+            DEFAULT_CASES,
+            |r: &mut Pcg| {
+                let epochs = 1 + r.below(10) as usize;
+                let ipe = 2 + r.below(100) as usize;
+                let it = r.below((epochs * ipe - 1) as u64) as usize;
+                (epochs, ipe, it)
+            },
+            |&(epochs, ipe, it)| {
+                let d = DropScheduler::new(Schedule::Cosine, 0.9, epochs, ipe);
                 d.rate_at(it) <= d.rate_at(it + 1) + 1e-12
             },
         );

@@ -24,7 +24,13 @@ impl BenchResult {
 
 /// Run `f` repeatedly: `warmup` untimed passes then up to `iters` timed ones
 /// (capped by `budget`). Returns robust statistics.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, budget: Duration, mut f: F) -> BenchResult {
+pub fn bench<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    budget: Duration,
+    mut f: F,
+) -> BenchResult {
     for _ in 0..warmup {
         f();
     }

@@ -88,13 +88,7 @@ impl Json {
         self.get(key).and_then(Json::as_arr).ok_or_else(|| format!("missing arr field {key:?}"))
     }
 
-    // -- writer ---------------------------------------------------------------
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
+    // -- writer (via Display; `json.to_string()` comes from ToString) ---------
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -130,6 +124,14 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 
@@ -170,7 +172,7 @@ struct Parser<'a> {
     i: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;

@@ -16,10 +16,7 @@ const MUL: u128 = 0x2360ed051fc65da44385df649fccf645;
 
 impl Pcg {
     pub fn new(seed: u64, stream: u64) -> Self {
-        let mut r = Pcg {
-            state: 0,
-            inc: ((stream as u128) << 1) | 1,
-        };
+        let mut r = Pcg { state: 0, inc: ((stream as u128) << 1) | 1 };
         r.state = r.state.wrapping_add(seed as u128).wrapping_mul(MUL).wrapping_add(r.inc);
         r.next_u64();
         r.next_u64();
@@ -35,7 +32,7 @@ impl Pcg {
         self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
         // DXSM output permutation
         let mut hi = (self.state >> 64) as u64;
-        let lo = ((self.state as u64) | 1) as u64;
+        let lo = (self.state as u64) | 1;
         hi ^= hi >> 32;
         hi = hi.wrapping_mul(0xda942042e4dd58b5);
         hi ^= hi >> 48;

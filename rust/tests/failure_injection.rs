@@ -1,9 +1,11 @@
 //! Failure injection: every layer of the runtime must fail loudly and
-//! specifically, never silently mis-train.
+//! specifically, never silently mis-train. The manifest/tensorstore/
+//! scheduler/discovery checks run on every build; engine-level checks need
+//! the `pjrt` feature.
 
 use std::io::Write as _;
 
-use ssprop::runtime::{f32_literal, Engine, Manifest};
+use ssprop::runtime::{EngineError, Manifest};
 use ssprop::tensorstore::{self, Tensor};
 
 fn tmp_dir(tag: &str) -> std::path::PathBuf {
@@ -14,44 +16,31 @@ fn tmp_dir(tag: &str) -> std::path::PathBuf {
 }
 
 #[test]
-fn missing_artifact_is_a_clean_error() {
-    let d = tmp_dir("missing");
-    std::fs::write(d.join("index.json"), r#"{"artifacts": []}"#).unwrap();
-    let engine = Engine::new(&d).unwrap();
-    let err = engine.load("nope_train").err().expect("must fail").to_string();
-    assert!(err.contains("nope_train"), "{err}");
-}
-
-#[test]
-fn garbage_hlo_text_fails_at_parse_not_execute() {
-    let d = tmp_dir("garbage");
-    std::fs::write(d.join("bad.hlo.txt"), "this is not hlo").unwrap();
-    std::fs::write(
-        d.join("bad.manifest.json"),
-        r#"{"name": "bad", "inputs": [], "outputs": []}"#,
-    )
-    .unwrap();
-    let engine = Engine::new(&d).unwrap();
-    let err = format!("{:?}", engine.load("bad").err().expect("must fail"));
-    assert!(err.contains("parse"), "{err}");
-}
-
-#[test]
-fn wrong_input_count_rejected_before_pjrt() {
-    // use the real artifacts if present; otherwise skip
-    let Ok(engine) = Engine::auto() else { return };
-    let Ok(g) = engine.load("conv_pallas_dense") else { return };
-    let one = f32_literal(&[1], &[0.0]).unwrap();
-    let err = g.run(&[&one]).err().expect("must fail").to_string();
-    assert!(err.contains("expects"), "{err}");
+fn artifacts_discovery_error_is_typed() {
+    // On a bare runner there is no artifacts/index.json: the error must be
+    // the typed ArtifactsMissing (downcastable through anyhow) so tests and
+    // benches can downgrade it to a skip. When artifacts do exist, the
+    // discovered directory must actually contain the index.
+    match ssprop::runtime::find_artifacts_dir() {
+        Ok(dir) => {
+            // env override is trusted verbatim; fallback needs the index
+            assert!(std::env::var("SSPROP_ARTIFACTS").is_ok() || dir.join("index.json").exists());
+        }
+        Err(err) => {
+            let EngineError::ArtifactsMissing { searched } = &err;
+            assert!(!searched.is_empty());
+            let any: anyhow::Error = err.clone().into();
+            assert!(any.downcast_ref::<EngineError>().is_some());
+        }
+    }
 }
 
 #[test]
 fn manifest_parser_rejects_malformed_documents() {
     for bad in [
-        "",                                        // empty
-        "{",                                       // truncated
-        r#"{"name": "x"}"#,                        // missing inputs/outputs
+        "",                                             // empty
+        "{",                                            // truncated
+        r#"{"name": "x"}"#,                             // missing inputs/outputs
         r#"{"name": "x", "inputs": 3, "outputs": []}"#, // wrong type
     ] {
         assert!(Manifest::parse(bad).is_err(), "should reject {bad:?}");
@@ -82,23 +71,73 @@ fn tensorstore_header_lying_about_offsets_rejected() {
 fn scheduler_rejects_invalid_targets() {
     use ssprop::schedule::{DropScheduler, Schedule};
     for bad in [1.0, 1.5, -0.1] {
-        let r = std::panic::catch_unwind(|| {
-            DropScheduler::new(Schedule::Constant, bad, 1, 1)
-        });
+        let r = std::panic::catch_unwind(|| DropScheduler::new(Schedule::Constant, bad, 1, 1));
         assert!(r.is_err(), "target {bad} must be rejected");
     }
 }
 
 #[test]
-fn engine_auto_fails_without_artifacts() {
-    let cwd = std::env::current_dir().unwrap();
-    let d = tmp_dir("empty_cwd");
-    // guard against parallel-test cwd races by using an explicit bad dir
-    let engine = Engine::new(d.join("does_not_exist"));
-    // Engine::new itself succeeds (lazy); loading must fail
-    if let Ok(e) = engine {
-        assert!(e.load("anything").is_err());
-        assert!(e.list_artifacts().is_err());
+fn native_trainer_rejects_bad_configs() {
+    use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
+    let mut cfg = NativeTrainConfig::quick("cifar10", 1, 1);
+    cfg.batch = 0;
+    assert!(NativeTrainer::new(cfg).is_err(), "zero batch must be rejected");
+    let err = NativeTrainer::new(NativeTrainConfig::quick("celeba", 1, 1))
+        .err()
+        .expect("BCE dataset must be rejected")
+        .to_string();
+    assert!(err.contains("CE"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// engine-level injections (PJRT builds only)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_failures {
+    use super::tmp_dir;
+    use ssprop::runtime::{f32_literal, Engine};
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let d = tmp_dir("missing");
+        std::fs::write(d.join("index.json"), r#"{"artifacts": []}"#).unwrap();
+        let engine = Engine::new(&d).unwrap();
+        let err = engine.load("nope_train").err().expect("must fail").to_string();
+        assert!(err.contains("nope_train"), "{err}");
     }
-    std::env::set_current_dir(cwd).unwrap();
+
+    #[test]
+    fn garbage_hlo_text_fails_at_parse_not_execute() {
+        let d = tmp_dir("garbage");
+        std::fs::write(d.join("bad.hlo.txt"), "this is not hlo").unwrap();
+        std::fs::write(
+            d.join("bad.manifest.json"),
+            r#"{"name": "bad", "inputs": [], "outputs": []}"#,
+        )
+        .unwrap();
+        let engine = Engine::new(&d).unwrap();
+        let err = format!("{:?}", engine.load("bad").err().expect("must fail"));
+        assert!(err.contains("parse"), "{err}");
+    }
+
+    #[test]
+    fn wrong_input_count_rejected_before_pjrt() {
+        // use the real artifacts if present; otherwise skip
+        let Ok(engine) = Engine::auto() else { return };
+        let Ok(g) = engine.load("conv_pallas_dense") else { return };
+        let one = f32_literal(&[1], &[0.0]).unwrap();
+        let err = g.run(&[&one]).err().expect("must fail").to_string();
+        assert!(err.contains("expects"), "{err}");
+    }
+
+    #[test]
+    fn engine_with_bad_dir_fails_lazily_on_use() {
+        let d = tmp_dir("empty_dir");
+        // Engine::new itself succeeds (lazy); loading must fail
+        if let Ok(e) = Engine::new(d.join("does_not_exist")) {
+            assert!(e.load("anything").is_err());
+            assert!(e.list_artifacts().is_err());
+        }
+    }
 }

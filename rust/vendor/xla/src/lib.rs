@@ -1,0 +1,258 @@
+//! Stub of the `xla` PJRT FFI crate, mirroring exactly the API surface the
+//! `ssprop` crate's `pjrt` feature uses.
+//!
+//! The real crate links libxla/PJRT, which is unavailable in the offline
+//! vendor set. This stub keeps `--features pjrt` *compiling* everywhere so
+//! the feature-gated runtime cannot rot:
+//!
+//! * [`Literal`] is implemented for real (host buffer + shape + dtype), so
+//!   literal/tensor conversion code and checkpoint round-trips work;
+//! * PJRT entry points ([`PjRtClient::compile`],
+//!   [`HloModuleProto::from_text_file`], execution) fail with an explicit
+//!   "stub" error — executing compiled HLO needs the real crate, installed
+//!   by pointing a `[patch."..."]` at an `xla` build with the PJRT
+//!   toolchain (see README "PJRT backend").
+
+use std::borrow::Borrow;
+
+/// Error type mirroring the real crate's (only `Debug` is relied upon).
+pub struct Error(pub String);
+
+impl Error {
+    fn stub(what: &str) -> Error {
+        Error(format!(
+            "xla stub: cannot {what} without the real PJRT toolchain — \
+             patch the `xla` dependency with a real build (see README)"
+        ))
+    }
+}
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes used by the ssprop runtime (subset of XLA's).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    F32,
+    F64,
+    S32,
+    S64,
+    U32,
+    U64,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        match self {
+            ElementType::Pred => 1,
+            ElementType::F32 | ElementType::S32 | ElementType::U32 => 4,
+            ElementType::F64 | ElementType::S64 | ElementType::U64 => 8,
+        }
+    }
+}
+
+/// Rust scalar types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(b: &[u8]) -> f32 {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(b: &[u8]) -> i32 {
+        i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+    fn from_le(b: &[u8]) -> u32 {
+        u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+/// Array shape: element type + dimensions.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host literal: shape + little-endian bytes. Fully functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    shape: ArrayShape,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product();
+        if elems * ty.byte_size() != data.len() {
+            return Err(Error(format!(
+                "literal size mismatch: shape {dims:?} x {ty:?} needs {} bytes, got {}",
+                elems * ty.byte_size(),
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            shape: ArrayShape { ty, dims: dims.iter().map(|&d| d as i64).collect() },
+            data: data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(self.shape.clone())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.shape.ty != T::TY {
+            return Err(Error(format!("dtype mismatch: literal is {:?}", self.shape.ty)));
+        }
+        Ok(self.data.chunks_exact(self.shape.ty.byte_size()).map(T::from_le).collect())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        let size = self.shape.ty.byte_size();
+        if self.shape.ty != T::TY || self.data.len() < size {
+            return Err(Error(format!("cannot read scalar from {:?} literal", self.shape.ty)));
+        }
+        Ok(T::from_le(&self.data[..size]))
+    }
+
+    /// Tuple literals are only produced by execution, which the stub
+    /// cannot perform.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::stub("decompose a tuple literal (only execution produces tuples)"))
+    }
+}
+
+/// Parsed HLO module (never constructible in the stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::stub("parse HLO text"))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client. Construction succeeds (it is lazy in the runtime's usage);
+/// compiling or executing anything fails with the stub error.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("compile an executable"))
+    }
+}
+
+/// Compiled executable handle (never constructible in the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("execute"))
+    }
+}
+
+/// Device buffer handle (never constructible in the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("fetch a device buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let vals: Vec<f32> = vec![1.0, -2.5, 3.5, 0.0, 7.0, -8.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 3], &bytes)
+            .unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &[0u8; 4]).is_err()
+        );
+    }
+
+    #[test]
+    fn pjrt_paths_fail_loudly() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation { _private: () };
+        let err = format!("{:?}", client.compile(&comp).err().unwrap());
+        assert!(err.contains("stub"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
