@@ -129,6 +129,13 @@ CASES = [
     ("k3_s2_p1_dense", 2, 1, 6, 8, 8, 3, 2, 1, 0.0),
     # keep-count tie: (1-0.5)*5 = 2.5 rounds to even -> keep 2
     ("k3_s1_p1_tie", 1, 2, 5, 4, 4, 3, 1, 1, 0.5),
+    # plan/fused-path coverage beyond the quickstart geometry: 1x1 kernels
+    # (pure channel mixes), stride-2 + padding-0 downsampling, rectangular
+    # H != W inputs, and a k=5 receptive field
+    ("k1_s1_p0_d50", 2, 3, 6, 5, 4, 1, 1, 0, 0.5),
+    ("k1_s2_p0_dense", 1, 4, 5, 6, 5, 1, 2, 0, 0.0),
+    ("k3_s2_p0_rect_d25", 2, 2, 6, 7, 6, 3, 2, 0, 0.25),
+    ("k5_s2_p0_d75", 1, 2, 4, 9, 7, 5, 2, 0, 0.75),
 ]
 
 

@@ -1,20 +1,32 @@
 //! Native-backend hot path: img2col conv forward, dense vs compacted
-//! sparse backward, and the raw GEMM — the costs the ROADMAP's "faster hot
-//! paths" work items move. Runs on the default build (no PJRT, no
+//! sparse backward, the raw GEMM, and — the headline — the fused
+//! plan/workspace fwd+bwd vs the unfused op calls (the fused path builds
+//! each (M, N) im2col matrix once per step instead of twice and reuses
+//! every scratch buffer). Runs on the default build (no PJRT, no
 //! artifacts), so any machine can baseline it:
 //!
 //! Run: `cargo bench --bench native_hotpath`
+//!
+//! `--smoke` shrinks warmup/iterations/budget to a CI-sized run that still
+//! exercises every path (used by the CI release job).
 
 use std::time::Duration;
 
-use ssprop::backend::{Backend, Conv2d, NativeBackend};
+use ssprop::backend::im2col::im2col;
+use ssprop::backend::sparse::{select_channels, sparse_bwd_with_cols, SparseBwdWorkspace};
+use ssprop::backend::{Backend, Conv2d, Conv2dPlan, NativeBackend};
 use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
 use ssprop::util::bench::{bench, report};
 use ssprop::util::rng::Pcg;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (warm, iters, secs) = if smoke { (1, 3, 1) } else { (2, 20, 6) };
+    let budget = Duration::from_secs(secs);
+
     let be = NativeBackend::new();
-    println!("== native backend hot path ==\n-- conv fwd/bwd (bt 16, 32ch, 16x16, k3) --");
+    println!("== native backend hot path{} ==", if smoke { " (smoke)" } else { "" });
+    println!("-- conv fwd/bwd (bt 16, 32ch, 16x16, k3) --");
 
     let cfg = Conv2d { bt: 16, cin: 32, h: 16, w: 16, cout: 32, k: 3, stride: 1, padding: 1 };
     let mut rng = Pcg::new(3, 3);
@@ -23,7 +35,7 @@ fn main() {
     let b: Vec<f32> = (0..cfg.cout).map(|_| rng.normal() * 0.1).collect();
     let g: Vec<f32> = (0..cfg.out_len()).map(|_| rng.normal()).collect();
 
-    let r = bench("native/conv_fwd", 2, 20, Duration::from_secs(6), || {
+    let r = bench("native/conv_fwd", warm, iters, budget, || {
         std::hint::black_box(be.conv2d_fwd(&cfg, &x, &w, Some(&b)));
     });
     report(&r);
@@ -34,27 +46,72 @@ fn main() {
         ("d80", 0.8, true),
         ("d80_nodx", 0.8, false),
     ] {
-        let r = bench(&format!("native/conv_bwd_{label}"), 2, 20, Duration::from_secs(6), || {
+        let r = bench(&format!("native/conv_bwd_{label}"), warm, iters, budget, || {
             std::hint::black_box(be.conv2d_bwd_ssprop(&cfg, &x, &w, &g, d, need_dx));
         });
         report(&r);
+    }
+
+    // The tentpole comparison, two cuts:
+    //  * full layer step — unfused op calls (two im2col builds, fresh
+    //    buffers every call) vs the fused plan path (one build, workspace
+    //    reused across iterations);
+    //  * backward only — rebuild-the-cols (`conv2d_bwd_ssprop`) vs the
+    //    cached-cols workspace backward the fused path runs. At the
+    //    paper's drop rates the compacted GEMMs shrink, so the removed
+    //    patch gather dominates and this ratio is the headline saving.
+    println!("\n-- fused plan path vs unfused op calls --");
+    let pairs = [("dense", 0.0f64, true), ("d80", 0.8, true), ("d80_nodx", 0.8, false)];
+    for (label, d, need_dx) in pairs {
+        let un = bench(&format!("native/unfused_fwd_bwd_{label}"), warm, iters, budget, || {
+            std::hint::black_box(be.conv2d_fwd(&cfg, &x, &w, Some(&b)));
+            std::hint::black_box(be.conv2d_bwd_ssprop(&cfg, &x, &w, &g, d, need_dx));
+        });
+        report(&un);
+        let mut plan = Conv2dPlan::new(cfg);
+        let fu = bench(&format!("native/fused_fwd_bwd_{label}"), warm, iters, budget, || {
+            std::hint::black_box(be.conv2d_fwd_bwd(&mut plan, &x, &w, Some(&b), &g, d, need_dx));
+        });
+        report(&fu);
+        let bwd = bench(&format!("native/bwd_rebuild_cols_{label}"), warm, iters, budget, || {
+            std::hint::black_box(be.conv2d_bwd_ssprop(&cfg, &x, &w, &g, d, need_dx));
+        });
+        report(&bwd);
+        let cols = im2col(&cfg, &x);
+        let mut ws = SparseBwdWorkspace::default();
+        let cached = bench(&format!("native/bwd_cached_cols_{label}"), warm, iters, budget, || {
+            let keep = select_channels(&cfg, &g, d);
+            let out = sparse_bwd_with_cols(&cfg, &cols, &w, &g, &keep, need_dx, &mut ws);
+            std::hint::black_box(out);
+        });
+        report(&cached);
+        println!(
+            "{:<48} {:>11.2}x (unfused / fused median)",
+            format!("native/fused_speedup_{label}"),
+            un.median_ns / fu.median_ns
+        );
+        println!(
+            "{:<48} {:>11.2}x (rebuild / cached median)",
+            format!("native/bwd_speedup_{label}"),
+            bwd.median_ns / cached.median_ns
+        );
     }
 
     println!("\n-- raw GEMM (256x288 . 288x128) --");
     let (m, k, n) = (256, 288, 128);
     let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
     let bb: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
-    let r = bench("native/gemm_256x288x128", 2, 30, Duration::from_secs(5), || {
+    let r = bench("native/gemm_256x288x128", warm, iters, budget, || {
         std::hint::black_box(be.gemm(m, k, n, &a, &bb));
     });
     report(&r);
 
-    println!("\n-- end-to-end SimpleCNN training step --");
+    println!("\n-- end-to-end SimpleCNN training step (planned path) --");
     for (label, d) in [("dense", 0.0f64), ("d80", 0.8)] {
         let mut t = NativeTrainer::new(NativeTrainConfig::quick("cifar10", 1, 1)).unwrap();
         let order = t.loader.epoch_order(0);
         let batch = t.loader.batch(&order, 0);
-        let r = bench(&format!("native/train_step_{label}"), 2, 20, Duration::from_secs(6), || {
+        let r = bench(&format!("native/train_step_{label}"), warm, iters, budget, || {
             t.step(&batch, d).unwrap();
         });
         report(&r);

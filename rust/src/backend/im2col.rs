@@ -15,9 +15,18 @@ pub fn out_size(h: usize, k: usize, stride: usize, padding: usize) -> usize {
 
 /// (Bt, Cin, H, W) -> column matrix (M, N), zero-padded out of bounds.
 pub fn im2col(cfg: &Conv2d, x: &[f32]) -> Vec<f32> {
+    let mut cols = Vec::new();
+    im2col_into(cfg, x, &mut cols);
+    cols
+}
+
+/// [`im2col`] into a caller-owned buffer, reusing its allocation (the
+/// plan/workspace hot path rebuilds into the same `Vec` every step).
+pub fn im2col_into(cfg: &Conv2d, x: &[f32], cols: &mut Vec<f32>) {
     assert_eq!(x.len(), cfg.in_len(), "im2col input length");
     let (ho, wo, n) = (cfg.hout(), cfg.wout(), cfg.n());
-    let mut cols = vec![0f32; cfg.m() * n];
+    cols.clear();
+    cols.resize(cfg.m() * n, 0f32);
     for b in 0..cfg.bt {
         for c in 0..cfg.cin {
             let plane = &x[(b * cfg.cin + c) * cfg.h * cfg.w..][..cfg.h * cfg.w];
@@ -42,7 +51,6 @@ pub fn im2col(cfg: &Conv2d, x: &[f32]) -> Vec<f32> {
             }
         }
     }
-    cols
 }
 
 /// Inverse of [`im2col`]: scatter-add (M, N) columns back to (Bt, Cin, H, W).
@@ -80,15 +88,22 @@ pub fn col2img(cfg: &Conv2d, cols: &[f32]) -> Vec<f32> {
 /// (Cout, Cin, K, K) -> col_W (N, Cout), matching the im2col row layout
 /// (`ref.py::col_w_ref`).
 pub fn col_w(cfg: &Conv2d, w: &[f32]) -> Vec<f32> {
+    let mut cw = Vec::new();
+    col_w_into(cfg, w, &mut cw);
+    cw
+}
+
+/// [`col_w`] into a caller-owned buffer, reusing its allocation.
+pub fn col_w_into(cfg: &Conv2d, w: &[f32], cw: &mut Vec<f32>) {
     let n = cfg.n();
     assert_eq!(w.len(), cfg.w_len(), "col_w input length");
-    let mut cw = vec![0f32; n * cfg.cout];
+    cw.clear();
+    cw.resize(n * cfg.cout, 0f32);
     for o in 0..cfg.cout {
         for i in 0..n {
             cw[i * cfg.cout + o] = w[o * n + i];
         }
     }
-    cw
 }
 
 #[cfg(test)]
@@ -131,6 +146,17 @@ mod tests {
         let lhs: f32 = im2col(&cfg, &x).iter().zip(&c).map(|(a, b)| a * b).sum();
         let rhs: f32 = x.iter().zip(col2img(&cfg, &c)).map(|(a, b)| a * b).sum();
         assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn into_variants_reuse_allocations() {
+        let cfg = cfg_3x3();
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let mut cols = im2col(&cfg, &x);
+        let (cap, ptr) = (cols.capacity(), cols.as_ptr());
+        im2col_into(&cfg, &x, &mut cols);
+        assert_eq!((cols.capacity(), cols.as_ptr()), (cap, ptr), "rebuild must not reallocate");
+        assert_eq!(cols, im2col(&cfg, &x));
     }
 
     #[test]

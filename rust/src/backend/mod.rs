@@ -1,23 +1,31 @@
 //! Backend subsystem: pluggable executors for the conv ops ssProp needs.
 //!
-//! The [`Backend`] trait is the op-level contract — dense conv2d forward,
-//! the ssProp sparse backward (channel-importance top-k selection +
-//! compacted GEMMs, paper Sec. "Scheduled Sparse BP"), and the GEMM/bias
-//! helpers they are built from. [`NativeBackend`] implements it in pure
-//! Rust (img2col GEMMs mirroring `python/compile/kernels/ref.py`), so the
-//! default build trains end-to-end on any machine with zero FFI
-//! dependencies. The PJRT whole-graph path (`runtime/`, behind the `pjrt`
-//! feature) remains the fast AOT route when compiled artifacts exist.
+//! The [`Backend`] trait's primitive contract is the **plan path**: a
+//! [`Conv2dPlan`] holds one layer's reusable buffers and the planned
+//! forward caches its im2col column matrix there for the planned ssProp
+//! backward (channel-importance top-k selection + compacted GEMMs, paper
+//! Sec. "Scheduled Sparse BP") to consume — one patch gather per layer per
+//! step instead of two. The historical op-level methods
+//! ([`Backend::conv2d_fwd`], [`Backend::conv2d_bwd_ssprop`]) are
+//! default-implemented wrappers that run the same code through a throwaway
+//! plan, so existing callers and the PJRT feature keep compiling.
+//! [`NativeBackend`] implements the plan path in pure Rust (img2col GEMMs
+//! mirroring `python/compile/kernels/ref.py`), so the default build trains
+//! end-to-end on any machine with zero FFI dependencies. The PJRT
+//! whole-graph path (`runtime/`, behind the `pjrt` feature) remains the
+//! fast AOT route when compiled artifacts exist.
 //!
 //! Layout conventions follow the paper throughout: activations NCHW,
 //! weights OIHW, row-major flattened `Vec<f32>`.
 
 pub mod im2col;
 pub mod native;
+pub mod plan;
 pub mod simple_cnn;
 pub mod sparse;
 
 pub use native::NativeBackend;
+pub use plan::Conv2dPlan;
 pub use simple_cnn::{SimpleCnn, SimpleCnnCfg, StepStats};
 
 /// Geometry of one conv2d call (square kernel/stride/padding, as in the
@@ -82,22 +90,72 @@ pub struct ConvGrads {
     pub keep_idx: Vec<usize>,
 }
 
-/// Op-level executor. Implementations must match the reference oracle
+/// Conv executor. The plan-path methods are the primitives every
+/// implementation provides; the op-level methods are provided wrappers
+/// over them. Implementations must match the reference oracle
 /// `python/compile/kernels/ref.py` within f32 tolerance (enforced by
-/// `rust/tests/native_backend.rs` fixtures).
+/// `rust/tests/native_backend.rs` fixtures on both routes).
 pub trait Backend {
     fn name(&self) -> &'static str;
 
-    /// Dense conv forward `y = x * w (+ b)` in NCHW/OIHW (paper Eq. 1).
-    fn conv2d_fwd(&self, cfg: &Conv2d, x: &[f32], w: &[f32], b: Option<&[f32]>) -> Vec<f32>;
+    /// Planned dense conv forward `y = x * w (+ b)` in NCHW/OIHW (paper
+    /// Eq. 1). Geometry comes from the plan ([`Conv2dPlan::cfg`]); the
+    /// im2col columns of `x` are built into the plan's buffers and stay
+    /// cached there for the next planned backward on the same plan.
+    fn conv2d_fwd_planned(
+        &self,
+        plan: &mut Conv2dPlan,
+        x: &[f32],
+        w: &[f32],
+        b: Option<&[f32]>,
+    ) -> Vec<f32>;
 
-    /// ssProp backward at `drop_rate` (paper Eq. 3/4/5 with the channel
-    /// top-k compaction): importance = mean |g| over (Bt, H, W) per output
-    /// channel; keep k = clamp(round((1−D)·Cout), 1, Cout) channels (ties
-    /// to even, matching the compile path); run the shrunk img2col GEMMs.
-    /// `drop_rate = 0` reproduces exact dense gradients. `need_dx = false`
-    /// skips the col[dX] GEMM + scatter entirely (the first layer of a
-    /// network never consumes dx — a large share of its backward cost).
+    /// Planned ssProp backward at `drop_rate` (paper Eq. 3/4/5 with the
+    /// channel top-k compaction): importance = mean |g| over (Bt, H, W)
+    /// per output channel; keep k = clamp(round((1−D)·Cout), 1, Cout)
+    /// channels (ties to even, matching the compile path); run the shrunk
+    /// img2col GEMMs out of the plan's workspace. Consumes the plan's
+    /// cached columns when live (skipping the patch gather entirely —
+    /// they must correspond to this `x`); otherwise gathers them from `x`
+    /// first. Either way the cache is spent afterwards. `drop_rate = 0`
+    /// reproduces exact dense gradients. `need_dx = false` skips the
+    /// col[dX] GEMM + scatter entirely (the first layer of a network
+    /// never consumes dx — a large share of its backward cost).
+    fn conv2d_bwd_planned(
+        &self,
+        plan: &mut Conv2dPlan,
+        x: &[f32],
+        w: &[f32],
+        g: &[f32],
+        drop_rate: f64,
+        need_dx: bool,
+    ) -> ConvGrads;
+
+    /// Fused forward+backward: one im2col build shared by both passes —
+    /// the layer-step primitive `SimpleCnn::train_step` is built on.
+    fn conv2d_fwd_bwd(
+        &self,
+        plan: &mut Conv2dPlan,
+        x: &[f32],
+        w: &[f32],
+        b: Option<&[f32]>,
+        g: &[f32],
+        drop_rate: f64,
+        need_dx: bool,
+    ) -> (Vec<f32>, ConvGrads) {
+        let y = self.conv2d_fwd_planned(plan, x, w, b);
+        let grads = self.conv2d_bwd_planned(plan, x, w, g, drop_rate, need_dx);
+        (y, grads)
+    }
+
+    /// Op-level dense conv forward (throwaway plan per call). Prefer the
+    /// plan path on hot loops.
+    fn conv2d_fwd(&self, cfg: &Conv2d, x: &[f32], w: &[f32], b: Option<&[f32]>) -> Vec<f32> {
+        self.conv2d_fwd_planned(&mut Conv2dPlan::new(*cfg), x, w, b)
+    }
+
+    /// Op-level ssProp backward (throwaway plan per call; rebuilds the
+    /// columns it could have reused). Prefer the plan path on hot loops.
     fn conv2d_bwd_ssprop(
         &self,
         cfg: &Conv2d,
@@ -106,7 +164,9 @@ pub trait Backend {
         g: &[f32],
         drop_rate: f64,
         need_dx: bool,
-    ) -> ConvGrads;
+    ) -> ConvGrads {
+        self.conv2d_bwd_planned(&mut Conv2dPlan::new(*cfg), x, w, g, drop_rate, need_dx)
+    }
 
     /// Row-major GEMM helper: C(m×n) = A(m×k) · B(k×n).
     fn gemm(&self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32>;

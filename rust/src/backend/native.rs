@@ -1,10 +1,13 @@
 //! Pure-Rust [`Backend`]: img2col GEMM forward + the compacted sparse
-//! backward from [`super::sparse`]. Zero FFI, runs anywhere — this is the
-//! crate's default executor and the correctness anchor the fixture tests
-//! pin against `python/compile/kernels/ref.py`.
+//! backward from [`super::sparse`], implemented over the plan/workspace
+//! path — one im2col per layer per fused fwd+bwd, every scratch buffer
+//! borrowed from the [`Conv2dPlan`]. Zero FFI, runs anywhere — this is
+//! the crate's default executor and the correctness anchor the fixture
+//! tests pin against `python/compile/kernels/ref.py`.
 
-use super::im2col::{col_w, im2col};
-use super::sparse::{select_channels, sparse_bwd_compact};
+use super::im2col::col_w_into;
+use super::plan::Conv2dPlan;
+use super::sparse::{select_channels, sparse_bwd_with_cols};
 use super::{Backend, Conv2d, ConvGrads};
 
 #[derive(Debug, Default, Clone, Copy)]
@@ -16,17 +19,45 @@ impl NativeBackend {
     }
 }
 
+/// C(m×n) = A(m×k) · B(k×n) into a caller-owned buffer (zeroed first,
+/// allocation reused).
+fn gemm_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut Vec<f32>) {
+    assert_eq!(a.len(), m * k, "gemm lhs length");
+    assert_eq!(b.len(), k * n, "gemm rhs length");
+    c.clear();
+    c.resize(m * n, 0f32);
+    for i in 0..m {
+        let crow = &mut c[i * n..][..n];
+        for (p, &av) in a[i * k..][..k].iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..][..n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
 impl Backend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
     }
 
-    fn conv2d_fwd(&self, cfg: &Conv2d, x: &[f32], w: &[f32], b: Option<&[f32]>) -> Vec<f32> {
+    fn conv2d_fwd_planned(
+        &self,
+        plan: &mut Conv2dPlan,
+        x: &[f32],
+        w: &[f32],
+        b: Option<&[f32]>,
+    ) -> Vec<f32> {
+        let cfg = *plan.cfg();
         let (m, n) = (cfg.m(), cfg.n());
         let (ho, wo) = (cfg.hout(), cfg.wout());
-        let cols = im2col(cfg, x);
-        let cw = col_w(cfg, w);
-        let ycol = self.gemm(m, n, cfg.cout, &cols, &cw); // (M, Cout)
+        plan.build_cols(x); // cached for the backward's dW GEMM
+        col_w_into(&cfg, w, &mut plan.cw);
+        gemm_into(m, n, cfg.cout, &plan.cols, &plan.cw, &mut plan.ycol); // (M, Cout)
 
         // (M, Cout) -> NCHW, folding the bias in during the transpose
         let mut y = vec![0f32; cfg.out_len()];
@@ -35,42 +66,37 @@ impl Backend for NativeBackend {
                 let bias = b.map_or(0.0, |bb| bb[o]);
                 let plane = &mut y[(bi * cfg.cout + o) * ho * wo..][..ho * wo];
                 for (pix, v) in plane.iter_mut().enumerate() {
-                    *v = ycol[(bi * ho * wo + pix) * cfg.cout + o] + bias;
+                    *v = plan.ycol[(bi * ho * wo + pix) * cfg.cout + o] + bias;
                 }
             }
         }
         y
     }
 
-    fn conv2d_bwd_ssprop(
+    fn conv2d_bwd_planned(
         &self,
-        cfg: &Conv2d,
+        plan: &mut Conv2dPlan,
         x: &[f32],
         w: &[f32],
         g: &[f32],
         drop_rate: f64,
         need_dx: bool,
     ) -> ConvGrads {
-        let keep_idx = select_channels(cfg, g, drop_rate);
-        sparse_bwd_compact(cfg, x, w, g, &keep_idx, need_dx)
+        let cfg = *plan.cfg();
+        if plan.cols_valid {
+            debug_assert!(plan.cols_match(x), "plan cols were cached from a different input");
+        } else {
+            plan.build_cols(x);
+        }
+        let keep_idx = select_channels(&cfg, g, drop_rate);
+        plan.cols_valid = false; // the cache is keyed to one fwd/bwd pair
+        let (cols, ws) = plan.split_cols_ws();
+        sparse_bwd_with_cols(&cfg, cols, w, g, &keep_idx, need_dx, ws)
     }
 
     fn gemm(&self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
-        assert_eq!(a.len(), m * k, "gemm lhs length");
-        assert_eq!(b.len(), k * n, "gemm rhs length");
-        let mut c = vec![0f32; m * n];
-        for i in 0..m {
-            let crow = &mut c[i * n..][..n];
-            for (p, &av) in a[i * k..][..k].iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                let brow = &b[p * n..][..n];
-                for (cv, &bv) in crow.iter_mut().zip(brow) {
-                    *cv += av * bv;
-                }
-            }
-        }
+        let mut c = Vec::new();
+        gemm_into(m, k, n, a, b, &mut c);
         c
     }
 
@@ -135,6 +161,27 @@ mod tests {
             let want: f32 = g[o * hw..(o + 1) * hw].iter().sum();
             assert!((out.db[o] - want).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn fused_plan_path_matches_op_path() {
+        let be = NativeBackend::new();
+        let cfg = Conv2d { bt: 2, cin: 2, h: 5, w: 4, cout: 4, k: 3, stride: 2, padding: 1 };
+        let x: Vec<f32> = (0..cfg.in_len()).map(|i| ((i * 7) % 13) as f32 * 0.1 - 0.6).collect();
+        let w: Vec<f32> = (0..cfg.w_len()).map(|i| ((i * 5) % 11) as f32 * 0.05 - 0.25).collect();
+        let b: Vec<f32> = (0..cfg.cout).map(|i| i as f32 * 0.1).collect();
+        let g: Vec<f32> = (0..cfg.out_len()).map(|i| ((i * 3) % 7) as f32 - 3.0).collect();
+        let mut plan = Conv2dPlan::new(cfg);
+        for d in [0.0, 0.5] {
+            let (y, grads) = be.conv2d_fwd_bwd(&mut plan, &x, &w, Some(&b), &g, d, true);
+            assert_eq!(y, be.conv2d_fwd(&cfg, &x, &w, Some(&b)), "fwd at d={d}");
+            let want = be.conv2d_bwd_ssprop(&cfg, &x, &w, &g, d, true);
+            assert_eq!(grads.keep_idx, want.keep_idx, "keep at d={d}");
+            assert_eq!(grads.dx, want.dx, "dx at d={d}");
+            assert_eq!(grads.dw, want.dw, "dw at d={d}");
+            assert_eq!(grads.db, want.db, "db at d={d}");
+        }
+        assert_eq!(plan.cols_builds(), 2, "exactly one im2col per fused pair");
     }
 
     #[test]

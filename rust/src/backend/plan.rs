@@ -1,0 +1,168 @@
+//! Per-layer plan/workspace for the conv hot path (the ROADMAP "cols built
+//! twice" item): one [`Conv2dPlan`] per conv layer holds every reusable
+//! buffer the planned forward/backward needs, so a training step builds the
+//! (M, N) im2col matrix exactly once per layer — the forward materializes
+//! it, the sparse backward's dW GEMM consumes it — and the next step
+//! reallocates nothing (buffers keep their capacity across steps).
+//!
+//! Plans are also the natural unit to shard once batching/multi-threading
+//! lands: each holds everything one layer's fwd+bwd touches.
+
+use super::im2col::im2col_into;
+use super::sparse::SparseBwdWorkspace;
+use super::Conv2d;
+
+/// Length + endpoint-bits fingerprint of an input slice (collision-proof
+/// enough for a debug assertion, free enough for the hot path).
+fn fingerprint(x: &[f32]) -> (usize, u64) {
+    let head = x.first().map_or(0, |v| v.to_bits() as u64);
+    let tail = x.last().map_or(0, |v| v.to_bits() as u64);
+    (x.len(), head | (tail << 32))
+}
+
+/// Reusable buffers for the planned conv path of one layer.
+///
+/// A plan is keyed to one [`Conv2d`] geometry; [`Conv2dPlan::ensure`]
+/// re-keys it in place (keeping allocated capacity) when the geometry
+/// changes, e.g. at a new batch size. The cached `cols` matrix is keyed to
+/// the `x` of the most recent planned forward and is *consumed* by the next
+/// planned backward — a backward without a preceding forward gathers its
+/// own columns, so the pair is always numerically identical to the unfused
+/// op-level route.
+#[derive(Debug, Clone)]
+pub struct Conv2dPlan {
+    cfg: Conv2d,
+    /// (M, N) im2col of the layer input, live between fwd and bwd.
+    pub(crate) cols: Vec<f32>,
+    pub(crate) cols_valid: bool,
+    cols_builds: u64,
+    /// Cheap fingerprint of the input the cached cols were built from
+    /// (debug-asserted by the planned backward to catch cache misuse).
+    cols_src: (usize, u64),
+    /// (N, Cout) col-form weights for the forward GEMM.
+    pub(crate) cw: Vec<f32>,
+    /// (M, Cout) forward GEMM output before the NCHW transpose.
+    pub(crate) ycol: Vec<f32>,
+    /// Sparse-backward scratch (compacted gradient / weight views).
+    pub(crate) ws: SparseBwdWorkspace,
+}
+
+impl Conv2dPlan {
+    pub fn new(cfg: Conv2d) -> Conv2dPlan {
+        Conv2dPlan {
+            cfg,
+            cols: Vec::new(),
+            cols_valid: false,
+            cols_builds: 0,
+            cols_src: (0, 0),
+            cw: Vec::new(),
+            ycol: Vec::new(),
+            ws: SparseBwdWorkspace::default(),
+        }
+    }
+
+    pub fn cfg(&self) -> &Conv2d {
+        &self.cfg
+    }
+
+    /// Re-key the plan to `cfg`, invalidating any cached columns but
+    /// keeping every buffer's capacity. No-op geometry-wise when unchanged.
+    pub fn ensure(&mut self, cfg: Conv2d) {
+        self.cfg = cfg;
+        self.cols_valid = false;
+    }
+
+    /// Drop the cached columns (call when `x` changed since the forward).
+    pub fn invalidate_cols(&mut self) {
+        self.cols_valid = false;
+    }
+
+    /// How many times this plan materialized its im2col matrix. On the
+    /// fused path this advances once per fwd+bwd pair — the
+    /// workspace-reuse tests pin `train_step` to exactly one build per
+    /// layer per step.
+    pub fn cols_builds(&self) -> u64 {
+        self.cols_builds
+    }
+
+    /// Capacity of every buffer (cols, cw, ycol, then the backward
+    /// scratch). Regression tests assert these stay flat across steps.
+    pub fn buffer_caps(&self) -> [usize; 7] {
+        let [gck, dwk, cwk, dcols] = self.ws.caps();
+        [self.cols.capacity(), self.cw.capacity(), self.ycol.capacity(), gck, dwk, cwk, dcols]
+    }
+
+    /// Materialize im2col(x) into the plan's column buffer and mark it live.
+    pub(crate) fn build_cols(&mut self, x: &[f32]) {
+        im2col_into(&self.cfg, x, &mut self.cols);
+        self.cols_valid = true;
+        self.cols_builds += 1;
+        self.cols_src = fingerprint(x);
+    }
+
+    /// Debug guard: were the cached columns built from this `x`? (A cheap
+    /// length + endpoint fingerprint — catches the cache-misuse pattern of
+    /// a forward on one input followed by a backward on another.)
+    pub(crate) fn cols_match(&self, x: &[f32]) -> bool {
+        self.cols_valid && self.cols_src == fingerprint(x)
+    }
+
+    /// Disjoint borrows of the cached columns and the backward scratch
+    /// (the dW GEMM reads one while writing the other).
+    pub(crate) fn split_cols_ws(&mut self) -> (&[f32], &mut SparseBwdWorkspace) {
+        (&self.cols, &mut self.ws)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> Conv2d {
+        Conv2d { bt: 1, cin: 2, h: 4, w: 4, cout: 3, k: 3, stride: 1, padding: 1 }
+    }
+
+    #[test]
+    fn build_counts_and_validity() {
+        let c = cfg();
+        let mut plan = Conv2dPlan::new(c);
+        assert_eq!(plan.cols_builds(), 0);
+        let x = vec![1f32; c.in_len()];
+        plan.build_cols(&x);
+        assert!(plan.cols_valid);
+        assert_eq!(plan.cols_builds(), 1);
+        assert_eq!(plan.cols.len(), c.m() * c.n());
+        plan.invalidate_cols();
+        assert!(!plan.cols_valid);
+        assert_eq!(plan.cols_builds(), 1, "invalidation is not a rebuild");
+    }
+
+    #[test]
+    fn cols_match_fingerprints_the_input() {
+        let c = cfg();
+        let mut plan = Conv2dPlan::new(c);
+        let x = vec![1f32; c.in_len()];
+        plan.build_cols(&x);
+        assert!(plan.cols_match(&x));
+        let mut other = x.clone();
+        *other.last_mut().unwrap() = 2.0;
+        assert!(!plan.cols_match(&other), "a different input must not match the cache");
+        plan.invalidate_cols();
+        assert!(!plan.cols_match(&x), "an invalidated cache matches nothing");
+    }
+
+    #[test]
+    fn ensure_rekeys_without_shrinking_buffers() {
+        let big = cfg();
+        let mut plan = Conv2dPlan::new(big);
+        plan.build_cols(&vec![0f32; big.in_len()]);
+        let caps = plan.buffer_caps();
+        let small = Conv2d { bt: 1, cin: 1, h: 3, w: 3, cout: 2, k: 3, stride: 1, padding: 1 };
+        plan.ensure(small);
+        assert_eq!(plan.cfg(), &small);
+        assert!(!plan.cols_valid, "re-keying must drop the cached cols");
+        plan.build_cols(&vec![0f32; small.in_len()]);
+        assert!(plan.buffer_caps()[0] >= small.m() * small.n());
+        assert_eq!(plan.buffer_caps()[0], caps[0], "capacity survives re-keying");
+    }
+}

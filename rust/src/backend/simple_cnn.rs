@@ -2,12 +2,17 @@
 //! the [`Backend`] trait — conv stack (3×3, first layer stride 2) + ReLU,
 //! global average pool, linear classifier, softmax cross-entropy, SGD.
 //!
-//! Every conv backward routes through [`Backend::conv2d_bwd_ssprop`], so a
-//! drop-rate schedule sparsifies training exactly as the AOT/PJRT path
-//! does; FLOPs accounting reuses the same Eq. 6/9 [`LayerSet`] machinery.
+//! The model owns one [`Conv2dPlan`] per conv layer, so `train_step` runs
+//! the planned path: the forward caches each layer's im2col columns in its
+//! plan and the ssProp backward ([`Backend::conv2d_bwd_planned`]) consumes
+//! them — exactly one patch gather per layer per step, zero steady-state
+//! allocation in the plan buffers. A drop-rate schedule sparsifies
+//! training exactly as the AOT/PJRT path does; FLOPs accounting reuses the
+//! same Eq. 6/9 [`LayerSet`] machinery.
 
 use anyhow::{bail, Result};
 
+use super::plan::Conv2dPlan;
 use super::{Backend, Conv2d};
 use crate::flops::{ConvLayer, LayerSet};
 use crate::tensorstore::Tensor;
@@ -54,6 +59,9 @@ pub struct SimpleCnn {
     pub fc_w: Vec<f32>,
     /// (classes,)
     pub fc_b: Vec<f32>,
+    /// Per-layer conv plans (im2col cache + backward scratch), re-keyed by
+    /// [`SimpleCnn::ensure_plans`] when the batch size changes.
+    plans: Vec<Conv2dPlan>,
 }
 
 impl SimpleCnn {
@@ -78,7 +86,33 @@ impl SimpleCnn {
             convs,
             fc_w: (0..cfg.width * cfg.classes).map(|_| rng.normal() * fc_scale).collect(),
             fc_b: vec![0f32; cfg.classes],
+            plans: Vec::new(),
         }
+    }
+
+    /// Key the per-layer plans to batch size `bt`, preserving every
+    /// buffer's capacity. Called by `train_step`; also useful to prewarm
+    /// before a timed loop.
+    pub fn ensure_plans(&mut self, bt: usize) {
+        for l in 0..self.cfg.depth {
+            let cfg = self.conv_cfg(l, bt);
+            if l < self.plans.len() {
+                self.plans[l].ensure(cfg);
+            } else {
+                self.plans.push(Conv2dPlan::new(cfg));
+            }
+        }
+    }
+
+    /// Read-only view of the per-layer plans (workspace-reuse tests).
+    pub fn plans(&self) -> &[Conv2dPlan] {
+        &self.plans
+    }
+
+    /// Total im2col materializations across layers since construction —
+    /// advances by exactly `depth` per `train_step` on the fused path.
+    pub fn plan_cols_builds(&self) -> u64 {
+        self.plans.iter().map(|p| p.cols_builds()).sum()
     }
 
     /// Spatial size of layer `l`'s input feature map.
@@ -124,19 +158,22 @@ impl SimpleCnn {
 
     /// Forward pass keeping every intermediate needed for backward:
     /// `acts[l]` is layer l's input (acts[0] = x), `zs[l]` its pre-ReLU
-    /// output; returns (acts, zs, pooled, logits).
+    /// output; returns (acts, zs, pooled, logits). Runs through the
+    /// planned path, leaving each layer's im2col columns cached in its
+    /// plan for the backward.
     #[allow(clippy::type_complexity)]
     fn forward(
         &self,
         backend: &dyn Backend,
         x: &[f32],
         bt: usize,
+        plans: &mut [Conv2dPlan],
     ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<f32>, Vec<f32>) {
         let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
         let mut zs: Vec<Vec<f32>> = Vec::with_capacity(self.cfg.depth);
         for l in 0..self.cfg.depth {
-            let cfg = self.conv_cfg(l, bt);
-            let z = backend.conv2d_fwd(&cfg, &acts[l], &self.convs[l].w, Some(&self.convs[l].b));
+            let cb = &self.convs[l];
+            let z = backend.conv2d_fwd_planned(&mut plans[l], &acts[l], &cb.w, Some(&cb.b));
             let a: Vec<f32> = z.iter().map(|&v| v.max(0.0)).collect();
             zs.push(z);
             acts.push(a);
@@ -178,7 +215,14 @@ impl SimpleCnn {
         if bt == 0 || x.len() != bt * self.cfg.in_ch * self.cfg.img * self.cfg.img {
             bail!("bad batch geometry: {} inputs for {bt} labels", x.len());
         }
-        let (acts, zs, pooled, logits) = self.forward(backend, x, bt);
+        // Planned path: take the plans out so the forward can borrow them
+        // alongside `self`; the forward caches each layer's cols in its
+        // plan and the backward below consumes them — one im2col per
+        // layer per step.
+        self.ensure_plans(bt);
+        let mut plans = std::mem::take(&mut self.plans);
+        let (acts, zs, pooled, logits) = self.forward(backend, x, bt, &mut plans);
+        self.plans = plans;
         let (loss, acc, dlogits) = softmax_ce(&logits, y, self.cfg.classes);
         if !loss.is_finite() {
             bail!("non-finite loss at drop rate {drop_rate}");
@@ -230,16 +274,20 @@ impl SimpleCnn {
             }
         }
 
-        // conv stack backward (ssProp-selected) + SGD updates.
-        // Known cost: the backward re-derives each layer's im2col matrix
-        // that the forward already built (ROADMAP open item: cache cols or
-        // add a fused fwd+bwd Backend entry point).
+        // conv stack backward (ssProp-selected) + SGD updates, consuming
+        // the im2col columns the forward cached in each layer's plan — no
+        // patch re-gather (this was the ROADMAP "cols built twice" item).
         let mut kept = 0usize;
         for l in (0..self.cfg.depth).rev() {
-            let cfg = self.conv_cfg(l, bt);
             // layer 0 never consumes dx — let the backend skip that GEMM
-            let grads =
-                backend.conv2d_bwd_ssprop(&cfg, &acts[l], &self.convs[l].w, &g, drop_rate, l > 0);
+            let grads = backend.conv2d_bwd_planned(
+                &mut self.plans[l],
+                &acts[l],
+                &self.convs[l].w,
+                &g,
+                drop_rate,
+                l > 0,
+            );
             kept += grads.keep_idx.len();
             for (wv, &dv) in self.convs[l].w.iter_mut().zip(&grads.dw) {
                 *wv -= lr * dv;
@@ -266,10 +314,13 @@ impl SimpleCnn {
         })
     }
 
-    /// Forward-only loss/accuracy on a batch.
+    /// Forward-only loss/accuracy on a batch (throwaway plans: eval has no
+    /// backward to reuse the columns, and `&self` keeps it shareable).
     pub fn eval_batch(&self, backend: &dyn Backend, x: &[f32], y: &[i32]) -> (f64, f64) {
         let bt = y.len();
-        let (_, _, _, logits) = self.forward(backend, x, bt);
+        let mut plans: Vec<Conv2dPlan> =
+            (0..self.cfg.depth).map(|l| Conv2dPlan::new(self.conv_cfg(l, bt))).collect();
+        let (_, _, _, logits) = self.forward(backend, x, bt, &mut plans);
         let (loss, acc, _) = softmax_ce(&logits, y, self.cfg.classes);
         (loss, acc)
     }
@@ -415,6 +466,18 @@ mod tests {
         assert_eq!(stats.kept_channels, 2);
         assert_eq!(stats.total_channels, 8);
         assert_ne!(dense.convs[0].w, sparse.convs[0].w);
+    }
+
+    #[test]
+    fn train_step_builds_cols_once_per_layer() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        let (x, y) = batch(&m, 4, 13);
+        assert_eq!(m.plan_cols_builds(), 0);
+        m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        assert_eq!(m.plan_cols_builds(), m.cfg.depth as u64, "fwd cols reused by bwd");
+        m.train_step(&be, &x, &y, 0.8, 0.05).unwrap();
+        assert_eq!(m.plan_cols_builds(), 2 * m.cfg.depth as u64);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! Sec. "Scheduled Sparse BP". Mirrors `ref.py::importance_ref`,
 //! `topk_mask_ref`, `keep_k_from_drop_rate`, `sparse_bwd_compact_ref`.
 
-use super::im2col::{col2img, col_w, im2col};
+use super::im2col::{col2img, im2col};
 use super::{Conv2d, ConvGrads};
 use crate::flops::keep_channels;
 
@@ -50,6 +50,32 @@ pub fn select_channels(cfg: &Conv2d, g: &[f32], drop_rate: f64) -> Vec<usize> {
     topk_channels(&channel_importance(cfg, g), keep)
 }
 
+/// Scratch buffers for [`sparse_bwd_with_cols`]: the compacted col-form
+/// gradient (`gck`, M × k'), compacted dW accumulator (`dwk`, N × k'),
+/// compacted weight view (`cwk`, N × k') and the col-form dx (`dcols`,
+/// M × N). Starts empty; every call resizes in place, so steady-state use
+/// allocates nothing (the workspace-reuse tests pin this).
+#[derive(Debug, Clone, Default)]
+pub struct SparseBwdWorkspace {
+    pub(crate) gck: Vec<f32>,
+    pub(crate) dwk: Vec<f32>,
+    pub(crate) cwk: Vec<f32>,
+    pub(crate) dcols: Vec<f32>,
+}
+
+impl SparseBwdWorkspace {
+    /// Capacity of each buffer (gck, dwk, cwk, dcols).
+    pub fn caps(&self) -> [usize; 4] {
+        [self.gck.capacity(), self.dwk.capacity(), self.cwk.capacity(), self.dcols.capacity()]
+    }
+}
+
+/// Zero-fill `buf` to `len` elements, reusing its allocation.
+fn reuse(buf: &mut Vec<f32>, len: usize) {
+    buf.clear();
+    buf.resize(len, 0.0);
+}
+
 /// Compacted img2col backward with static keep indices:
 ///   col[dY]' = channel-compacted col[dY]          (M × k')
 ///   dW'      = col_Xᵀ · col[dY]'                  (N × k')
@@ -58,7 +84,9 @@ pub fn select_channels(cfg: &Conv2d, g: &[f32], drop_rate: f64) -> Vec<usize> {
 /// Dropped channels receive exactly-zero dW/db rows. With
 /// `keep_idx = 0..Cout` this is the exact dense backward (Eq. 3/4/5).
 /// `need_dx = false` skips the col[dX] GEMM + col2img (dx comes back
-/// empty).
+/// empty). Allocates its columns and scratch fresh every call — the
+/// planned hot path uses [`sparse_bwd_with_cols`] with borrowed buffers
+/// instead, and the two are bit-identical.
 pub fn sparse_bwd_compact(
     cfg: &Conv2d,
     x: &[f32],
@@ -67,34 +95,51 @@ pub fn sparse_bwd_compact(
     keep_idx: &[usize],
     need_dx: bool,
 ) -> ConvGrads {
+    let cols = im2col(cfg, x); // (M, N)
+    sparse_bwd_with_cols(cfg, &cols, w, g, keep_idx, need_dx, &mut SparseBwdWorkspace::default())
+}
+
+/// The workspace form of [`sparse_bwd_compact`]: consumes a prebuilt
+/// column matrix (the forward's, on the fused path) and a borrowed
+/// scratch, so the hot loop gathers no patches and allocates only the
+/// returned gradients. Same FP operations in the same order as the
+/// allocating wrapper — bit-identical results.
+pub fn sparse_bwd_with_cols(
+    cfg: &Conv2d,
+    cols: &[f32],
+    w: &[f32],
+    g: &[f32],
+    keep_idx: &[usize],
+    need_dx: bool,
+    ws: &mut SparseBwdWorkspace,
+) -> ConvGrads {
     let (m, n, kp) = (cfg.m(), cfg.n(), keep_idx.len());
     let (ho, wo) = (cfg.hout(), cfg.wout());
     assert!((1..=cfg.cout).contains(&kp), "keep count out of range");
+    assert_eq!(cols.len(), m * n, "column matrix length");
     assert_eq!(g.len(), cfg.out_len(), "gradient length");
 
-    let cols = im2col(cfg, x); // (M, N)
-
     // col[dY]' — gather kept channels while transposing NCHW -> (M, k')
-    let mut gck = vec![0f32; m * kp];
+    reuse(&mut ws.gck, m * kp);
     for b in 0..cfg.bt {
         for (pos, &o) in keep_idx.iter().enumerate() {
             let plane = &g[(b * cfg.cout + o) * ho * wo..][..ho * wo];
             for (pix, &gv) in plane.iter().enumerate() {
-                gck[(b * ho * wo + pix) * kp + pos] = gv;
+                ws.gck[(b * ho * wo + pix) * kp + pos] = gv;
             }
         }
     }
 
     // dW' = col_Xᵀ · col[dY]'  (N × k'), accumulated row-by-row over M
-    let mut dwk = vec![0f32; n * kp];
+    reuse(&mut ws.dwk, n * kp);
     for mi in 0..m {
         let crow = &cols[mi * n..][..n];
-        let grow = &gck[mi * kp..][..kp];
+        let grow = &ws.gck[mi * kp..][..kp];
         for (ni, &cv) in crow.iter().enumerate() {
             if cv == 0.0 {
                 continue;
             }
-            let dst = &mut dwk[ni * kp..][..kp];
+            let dst = &mut ws.dwk[ni * kp..][..kp];
             for (d, &gv) in dst.iter_mut().zip(grow) {
                 *d += cv * gv;
             }
@@ -105,25 +150,27 @@ pub fn sparse_bwd_compact(
     for (pos, &o) in keep_idx.iter().enumerate() {
         let dst = &mut dw[o * n..][..n];
         for (ni, d) in dst.iter_mut().enumerate() {
-            *d = dwk[ni * kp + pos];
+            *d = ws.dwk[ni * kp + pos];
         }
     }
 
-    // col_W' (k' columns of col_W), then col[dX] = col[dY]' · col_W'ᵀ
+    // col_W' (k' columns of col_W, gathered straight from OIHW weights),
+    // then col[dX] = col[dY]' · col_W'ᵀ
     let dx = if need_dx {
-        let cw = col_w(cfg, w); // (N, Cout)
-        let mut cwk = vec![0f32; n * kp];
-        for ni in 0..n {
-            for (pos, &o) in keep_idx.iter().enumerate() {
-                cwk[ni * kp + pos] = cw[ni * cfg.cout + o];
+        assert_eq!(w.len(), cfg.w_len(), "weight length");
+        reuse(&mut ws.cwk, n * kp);
+        for (pos, &o) in keep_idx.iter().enumerate() {
+            let wrow = &w[o * n..][..n];
+            for (ni, &wv) in wrow.iter().enumerate() {
+                ws.cwk[ni * kp + pos] = wv;
             }
         }
-        let mut dcols = vec![0f32; m * n];
+        reuse(&mut ws.dcols, m * n);
         for mi in 0..m {
-            let grow = &gck[mi * kp..][..kp];
-            let drow = &mut dcols[mi * n..][..n];
+            let grow = &ws.gck[mi * kp..][..kp];
+            let drow = &mut ws.dcols[mi * n..][..n];
             for (ni, d) in drow.iter_mut().enumerate() {
-                let wrow = &cwk[ni * kp..][..kp];
+                let wrow = &ws.cwk[ni * kp..][..kp];
                 let mut acc = 0f32;
                 for (gv, wv) in grow.iter().zip(wrow) {
                     acc += gv * wv;
@@ -131,7 +178,7 @@ pub fn sparse_bwd_compact(
                 *d = acc;
             }
         }
-        col2img(cfg, &dcols)
+        col2img(cfg, &ws.dcols)
     } else {
         Vec::new()
     };
@@ -139,7 +186,7 @@ pub fn sparse_bwd_compact(
     // db' — column sums of col[dY]', scattered to kept channels
     let mut db = vec![0f32; cfg.cout];
     for mi in 0..m {
-        let grow = &gck[mi * kp..][..kp];
+        let grow = &ws.gck[mi * kp..][..kp];
         for (pos, &o) in keep_idx.iter().enumerate() {
             db[o] += grow[pos];
         }
@@ -183,6 +230,27 @@ mod tests {
         assert_eq!(select_channels(&c, &g, 0.0).len(), 3);
         assert_eq!(select_channels(&c, &g, 0.5).len(), 2); // round(1.5) = 2
         assert_eq!(select_channels(&c, &g, 0.99).len(), 1); // clamp to 1
+    }
+
+    #[test]
+    fn with_cols_matches_allocating_wrapper_bitwise() {
+        let c = cfg();
+        let x: Vec<f32> = (0..c.in_len()).map(|i| (i % 7) as f32 - 3.0).collect();
+        let w: Vec<f32> = (0..c.w_len()).map(|i| (i % 5) as f32 * 0.1).collect();
+        let g: Vec<f32> = (0..c.out_len()).map(|i| (i % 11) as f32 - 5.0).collect();
+        let cols = im2col(&c, &x);
+        let mut ws = SparseBwdWorkspace::default();
+        for keep in [vec![0, 1, 2], vec![1], vec![0, 2]] {
+            let a = sparse_bwd_compact(&c, &x, &w, &g, &keep, true);
+            let b = sparse_bwd_with_cols(&c, &cols, &w, &g, &keep, true, &mut ws);
+            assert_eq!(a.dx, b.dx, "keep {keep:?}");
+            assert_eq!(a.dw, b.dw, "keep {keep:?}");
+            assert_eq!(a.db, b.db, "keep {keep:?}");
+        }
+        // a repeat call must not grow the scratch
+        let caps = ws.caps();
+        sparse_bwd_with_cols(&c, &cols, &w, &g, &[1], true, &mut ws);
+        assert_eq!(ws.caps(), caps, "workspace must be reused, not regrown");
     }
 
     #[test]

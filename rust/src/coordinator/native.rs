@@ -90,7 +90,7 @@ impl NativeTrainer {
                 spec.test_n
             );
         }
-        let model = SimpleCnn::new(SimpleCnnCfg {
+        let mut model = SimpleCnn::new(SimpleCnnCfg {
             in_ch: spec.channels,
             img: spec.img,
             classes: spec.classes,
@@ -98,6 +98,9 @@ impl NativeTrainer {
             width: cfg.width,
             seed: cfg.seed,
         });
+        // Prewarm the per-layer conv plans at the configured batch size so
+        // the first timed step pays no workspace allocation.
+        model.ensure_plans(cfg.batch);
         let layers = model.layer_set();
         let ds = SynthDataset::new(spec.clone(), cfg.seed);
         let loader = Loader::new(ds.clone(), Split::Train, cfg.batch);
@@ -115,6 +118,12 @@ impl NativeTrainer {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Total im2col builds across the model's conv plans — advances by
+    /// exactly `depth` per training step when the fused path is healthy.
+    pub fn plan_cols_builds(&self) -> u64 {
+        self.model.plan_cols_builds()
     }
 
     /// Iterations per epoch after capping to the dataset size.
@@ -241,6 +250,20 @@ mod tests {
             - t.layers.bwd_flops_scheduled(t.cfg.batch, &[0.0, 0.8])
                 / t.layers.bwd_flops_per_iter(t.cfg.batch, 0.0);
         assert!((m.flops_saving() - expect).abs() < 1e-9, "{} vs {expect}", m.flops_saving());
+    }
+
+    #[test]
+    fn trainer_steps_reuse_plan_workspaces() {
+        let mut t = NativeTrainer::new(quick_cfg()).unwrap();
+        let order = t.loader.epoch_order(0);
+        let batch = t.loader.batch(&order, 0);
+        t.step(&batch, 0.5).unwrap();
+        let caps: Vec<_> = t.model.plans().iter().map(|p| p.buffer_caps()).collect();
+        assert_eq!(t.plan_cols_builds(), t.cfg.depth as u64, "one im2col per layer per step");
+        t.step(&batch, 0.5).unwrap();
+        assert_eq!(t.plan_cols_builds(), 2 * t.cfg.depth as u64);
+        let caps2: Vec<_> = t.model.plans().iter().map(|p| p.buffer_caps()).collect();
+        assert_eq!(caps, caps2, "second step must not grow any plan buffer");
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Backend equivalence suite: the fused plan/workspace path vs the
+//! op-level (unfused) route. The plan path reuses the forward's im2col
+//! columns and a borrowed scratch, so these tests pin it to the
+//! fresh-allocation reference (`sparse_bwd_compact`) over randomized
+//! geometries, prove `need_dx = false` is a pure subset of the full
+//! backward, and regression-test that consecutive `train_step`s reuse
+//! every plan buffer without changing the loss trajectory.
+
+use ssprop::backend::sparse::{select_channels, sparse_bwd_compact};
+use ssprop::backend::{Backend, Conv2d, Conv2dPlan, NativeBackend, SimpleCnn, SimpleCnnCfg};
+use ssprop::util::prop::check_no_shrink;
+use ssprop::util::rng::Pcg;
+
+/// One randomized property case: geometry (stride ∈ {1,2}, padding ∈
+/// {0,1}, k ∈ {1,3,5}, H ≠ W), drop rate, and a data seed.
+#[derive(Debug, Clone)]
+struct Case {
+    cfg: Conv2d,
+    drop_rate: f64,
+    seed: u64,
+}
+
+fn gen_case(r: &mut Pcg) -> Case {
+    let k = [1usize, 3, 5][r.below(3) as usize];
+    let h = k + r.below(5) as usize;
+    let mut w = k + r.below(5) as usize;
+    if w == h {
+        w += 1; // the suite must cover rectangular inputs (H ≠ W)
+    }
+    let cfg = Conv2d {
+        bt: 1 + r.below(2) as usize,
+        cin: 1 + r.below(3) as usize,
+        h,
+        w,
+        cout: 1 + r.below(6) as usize,
+        k,
+        stride: 1 + r.below(2) as usize,
+        padding: r.below(2) as usize,
+    };
+    let drop_rate = [0.0, 0.25, 0.5, 0.8][r.below(4) as usize];
+    Case { cfg, drop_rate, seed: r.next_u64() }
+}
+
+fn case_data(case: &Case) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let c = &case.cfg;
+    let mut rng = Pcg::new(case.seed, 17);
+    let x: Vec<f32> = (0..c.in_len()).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..c.w_len()).map(|_| rng.normal() * 0.2).collect();
+    let b: Vec<f32> = (0..c.cout).map(|_| rng.normal() * 0.1).collect();
+    let g: Vec<f32> = (0..c.out_len()).map(|_| rng.normal()).collect();
+    (x, w, b, g)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn fused_plan_path_matches_unfused_over_random_geometries() {
+    let be = NativeBackend::new();
+    check_no_shrink("fused-eq-unfused", 96, gen_case, |case| {
+        let c = case.cfg;
+        let (x, w, b, g) = case_data(case);
+        let mut plan = Conv2dPlan::new(c);
+        let (y, grads) = be.conv2d_fwd_bwd(&mut plan, &x, &w, Some(&b), &g, case.drop_rate, true);
+        if plan.cols_builds() != 1 {
+            return false; // the fused pair must share one im2col build
+        }
+        // forward: identical to the op-level route
+        if y != be.conv2d_fwd(&c, &x, &w, Some(&b)) {
+            return false;
+        }
+        if case.drop_rate == 0.0 {
+            // dense: match the unfused dense gradients within 1e-6
+            let all: Vec<usize> = (0..c.cout).collect();
+            let dense = sparse_bwd_compact(&c, &x, &w, &g, &all, true);
+            grads.keep_idx == all
+                && max_abs_diff(&grads.dx, &dense.dx) < 1e-6
+                && max_abs_diff(&grads.dw, &dense.dw) < 1e-6
+                && max_abs_diff(&grads.db, &dense.db) < 1e-6
+        } else {
+            // sparse: match the old sparse_bwd_compact exactly
+            let keep = select_channels(&c, &g, case.drop_rate);
+            let want = sparse_bwd_compact(&c, &x, &w, &g, &keep, true);
+            grads.keep_idx == keep
+                && grads.dx == want.dx
+                && grads.dw == want.dw
+                && grads.db == want.db
+        }
+    });
+}
+
+#[test]
+fn repeated_fused_calls_on_one_plan_are_deterministic() {
+    // Buffer reuse across fused calls must not leak state between calls.
+    let be = NativeBackend::new();
+    let mut rng = Pcg::new(0xBEEF, 5);
+    let mut plan: Option<Conv2dPlan> = None;
+    let case = Case {
+        cfg: Conv2d { bt: 2, cin: 2, h: 6, w: 5, cout: 4, k: 3, stride: 1, padding: 1 },
+        drop_rate: 0.5,
+        seed: rng.next_u64(),
+    };
+    let (x, w, b, g) = case_data(&case);
+    let mut outs = Vec::new();
+    for _ in 0..3 {
+        let p = plan.get_or_insert_with(|| Conv2dPlan::new(case.cfg));
+        outs.push(be.conv2d_fwd_bwd(p, &x, &w, Some(&b), &g, case.drop_rate, true));
+    }
+    let (y0, g0) = &outs[0];
+    for (y, gr) in &outs[1..] {
+        assert_eq!(y, y0, "forward must be identical across reused calls");
+        assert_eq!(gr.dx, g0.dx, "dx must be identical across reused calls");
+        assert_eq!(gr.dw, g0.dw, "dw must be identical across reused calls");
+        assert_eq!(gr.db, g0.db, "db must be identical across reused calls");
+    }
+    assert_eq!(plan.unwrap().cols_builds(), 3);
+}
+
+#[test]
+fn skipping_dx_is_bit_identical_on_fused_and_unfused_routes() {
+    let be = NativeBackend::new();
+    check_no_shrink("need-dx-subset", 48, gen_case, |case| {
+        let c = case.cfg;
+        let (x, w, b, g) = case_data(case);
+
+        // unfused route
+        let full = be.conv2d_bwd_ssprop(&c, &x, &w, &g, case.drop_rate, true);
+        let nodx = be.conv2d_bwd_ssprop(&c, &x, &w, &g, case.drop_rate, false);
+        if !(nodx.dx.is_empty() && nodx.dw == full.dw && nodx.db == full.db) {
+            return false;
+        }
+
+        // fused route (fresh plans so both calls see the same cache state)
+        let mut pa = Conv2dPlan::new(c);
+        let mut pb = Conv2dPlan::new(c);
+        let (_, ffull) = be.conv2d_fwd_bwd(&mut pa, &x, &w, Some(&b), &g, case.drop_rate, true);
+        let (_, fnodx) = be.conv2d_fwd_bwd(&mut pb, &x, &w, Some(&b), &g, case.drop_rate, false);
+        fnodx.dx.is_empty()
+            && fnodx.dw == ffull.dw
+            && fnodx.db == ffull.db
+            && ffull.dw == full.dw
+            && ffull.db == full.db
+    });
+}
+
+#[test]
+fn consecutive_train_steps_reuse_workspaces_and_match_fresh_model() {
+    let be = NativeBackend::new();
+    let mk = || {
+        SimpleCnn::new(SimpleCnnCfg { in_ch: 2, img: 8, classes: 3, depth: 2, width: 4, seed: 21 })
+    };
+    let model = mk();
+    let mut rng = Pcg::new(77, 2);
+    let n = model.cfg.in_ch * model.cfg.img * model.cfg.img;
+    let bt = 6;
+    let x: Vec<f32> = (0..bt * n).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..bt).map(|i| (i % model.cfg.classes) as i32).collect();
+
+    let mut m = model;
+    let s1 = m.train_step(&be, &x, &y, 0.5, 0.05).unwrap();
+    let caps: Vec<[usize; 7]> = m.plans().iter().map(|p| p.buffer_caps()).collect();
+    assert_eq!(m.plan_cols_builds(), 2, "step 1: one im2col per layer");
+
+    let s2 = m.train_step(&be, &x, &y, 0.5, 0.05).unwrap();
+    let caps2: Vec<[usize; 7]> = m.plans().iter().map(|p| p.buffer_caps()).collect();
+    assert_eq!(caps, caps2, "step 2 must allocate no new plan buffers");
+    assert_eq!(m.plan_cols_builds(), 4, "step 2: one im2col per layer");
+
+    // same loss trajectory as a freshly-built identical model
+    let mut fresh = mk();
+    let f1 = fresh.train_step(&be, &x, &y, 0.5, 0.05).unwrap();
+    let f2 = fresh.train_step(&be, &x, &y, 0.5, 0.05).unwrap();
+    assert_eq!(s1.loss, f1.loss, "step 1 loss must not depend on workspace reuse");
+    assert_eq!(s2.loss, f2.loss, "step 2 loss must not depend on workspace reuse");
+    assert_eq!(s1.kept_channels, f1.kept_channels);
+    assert_eq!(s2.kept_channels, f2.kept_channels);
+}
+
+#[test]
+fn plans_rekey_across_batch_sizes_without_losing_capacity() {
+    // A model stepped at a large batch then a small one must keep the
+    // large-batch capacity (no shrink) and still be numerically exact.
+    let be = NativeBackend::new();
+    let mut m =
+        SimpleCnn::new(SimpleCnnCfg { in_ch: 1, img: 8, classes: 2, depth: 2, width: 3, seed: 9 });
+    let mut rng = Pcg::new(5, 8);
+    let n = m.cfg.in_ch * m.cfg.img * m.cfg.img;
+    let mk_batch = |bt: usize, rng: &mut Pcg| {
+        let x: Vec<f32> = (0..bt * n).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..bt).map(|i| (i % 2) as i32).collect();
+        (x, y)
+    };
+    let (x8, y8) = mk_batch(8, &mut rng);
+    let (x2, y2) = mk_batch(2, &mut rng);
+    m.train_step(&be, &x8, &y8, 0.0, 0.05).unwrap();
+    let caps_big: Vec<[usize; 7]> = m.plans().iter().map(|p| p.buffer_caps()).collect();
+    m.train_step(&be, &x2, &y2, 0.0, 0.05).unwrap();
+    let caps_small: Vec<[usize; 7]> = m.plans().iter().map(|p| p.buffer_caps()).collect();
+    assert_eq!(caps_big, caps_small, "shrinking the batch must not reallocate");
+    m.train_step(&be, &x8, &y8, 0.0, 0.05).unwrap();
+    let caps_again: Vec<[usize; 7]> = m.plans().iter().map(|p| p.buffer_caps()).collect();
+    assert_eq!(caps_big, caps_again, "growing back to the old batch must reuse capacity");
+}

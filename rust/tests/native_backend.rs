@@ -1,13 +1,14 @@
 //! NativeBackend vs the L1 reference oracle: fixtures exported from
 //! `python/compile/kernels/ref.py` (via `python/compile/export_fixtures.py`)
 //! pin the conv forward, channel-importance selection, and compacted sparse
-//! backward to the paper's equations within 1e-4. Plus pure-Rust
-//! consistency checks (masked path ≡ compacted path) and an end-to-end
-//! native training run whose measured backward-FLOPs reduction must track
-//! the configured drop rate.
+//! backward to the paper's equations within 1e-4 — on both the op-level
+//! route and the fused plan/workspace route. Plus pure-Rust consistency
+//! checks (masked path ≡ compacted path) and an end-to-end native training
+//! run whose measured backward-FLOPs reduction must track the configured
+//! drop rate.
 
 use ssprop::backend::sparse::{channel_importance, select_channels, sparse_bwd_compact};
-use ssprop::backend::{Backend, Conv2d, NativeBackend};
+use ssprop::backend::{Backend, Conv2d, Conv2dPlan, NativeBackend};
 use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
 use ssprop::flops::keep_channels;
 use ssprop::schedule::{DropScheduler, Schedule};
@@ -57,6 +58,12 @@ fn native_backend_matches_reference_fixtures() {
     let fx = fixtures();
     let cases = fx.arr_field("cases").unwrap();
     assert!(!cases.is_empty());
+    // coverage beyond the quickstart geometry: k=1, stride-2/padding-0,
+    // rectangular inputs, k=5 (exported by export_fixtures.py)
+    for want in ["k1_s1_p0_d50", "k1_s2_p0_dense", "k3_s2_p0_rect_d25", "k5_s2_p0_d75"] {
+        let found = cases.iter().any(|c| c.str_field("name").unwrap() == want);
+        assert!(found, "fixture case {want} missing — re-run export_fixtures.py");
+    }
     for case in cases {
         let name = case.str_field("name").unwrap();
         let cfg = case_cfg(case);
@@ -85,6 +92,17 @@ fn native_backend_matches_reference_fixtures() {
         assert_close(&format!("{name}/dx"), &grads.dx, &vecf(case, "dx"), 1e-4);
         assert_close(&format!("{name}/dw"), &grads.dw, &vecf(case, "dw"), 1e-4);
         assert_close(&format!("{name}/db"), &grads.db, &vecf(case, "db"), 1e-4);
+
+        // the fused plan path must pin to the same oracle values, sharing
+        // a single im2col build between the forward and the backward
+        let mut plan = Conv2dPlan::new(cfg);
+        let (yf, gf) = be.conv2d_fwd_bwd(&mut plan, &x, &w, Some(&b), &g, drop_rate, true);
+        assert_eq!(plan.cols_builds(), 1, "{name}: fused pair must build cols once");
+        assert_close(&format!("{name}/fused_y"), &yf, &vecf(case, "y"), 1e-4);
+        assert_eq!(gf.keep_idx, want_keep, "{name}/fused keep_idx");
+        assert_close(&format!("{name}/fused_dx"), &gf.dx, &vecf(case, "dx"), 1e-4);
+        assert_close(&format!("{name}/fused_dw"), &gf.dw, &vecf(case, "dw"), 1e-4);
+        assert_close(&format!("{name}/fused_db"), &gf.db, &vecf(case, "db"), 1e-4);
     }
 }
 
