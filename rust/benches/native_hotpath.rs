@@ -14,7 +14,10 @@ use std::time::Duration;
 
 use ssprop::backend::im2col::im2col;
 use ssprop::backend::sparse::{select_channels, sparse_bwd_with_cols, SparseBwdWorkspace};
-use ssprop::backend::{Backend, Conv2d, Conv2dPlan, NativeBackend};
+use ssprop::backend::{
+    Backend, Conv2d, Conv2dPlan, ExecConfig, NativeBackend, ParallelExecutor, SimpleCnn,
+    SimpleCnnCfg,
+};
 use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
 use ssprop::util::bench::{bench, report};
 use ssprop::util::rng::Pcg;
@@ -115,5 +118,39 @@ fn main() {
             t.step(&batch, d).unwrap();
         });
         report(&r);
+    }
+
+    // Data-parallel executor vs the serial step on a 4-layer SimpleCNN
+    // (cifar10-sized input). Each parallel step shards the batch over the
+    // worker count, runs the fused plan path per shard, and tree-reduces
+    // gradients; `native/parallel_speedup_*` is the serial/parallel median
+    // ratio (> 1 = the sharded step is faster on this machine).
+    println!("\n-- data-parallel executor (SimpleCNN d4 w16, 3x32x32, bt 32) --");
+    let pcfg = SimpleCnnCfg { in_ch: 3, img: 32, classes: 10, depth: 4, width: 16, seed: 11 };
+    let n_in = pcfg.in_ch * pcfg.img * pcfg.img;
+    let bt = 32;
+    let mut prng = Pcg::new(17, 9);
+    let px: Vec<f32> = (0..bt * n_in).map(|_| prng.normal()).collect();
+    let py: Vec<i32> = (0..bt).map(|i| (i % pcfg.classes) as i32).collect();
+    for (label, d) in [("dense", 0.0f64), ("d80", 0.8)] {
+        let mut serial = SimpleCnn::new(pcfg);
+        let base = bench(&format!("native/serial_step_{label}"), warm, iters, budget, || {
+            serial.train_step(&be, &px, &py, d, 0.01).unwrap();
+        });
+        report(&base);
+        for threads in [2usize, 4] {
+            let mut model = SimpleCnn::new(pcfg);
+            let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+            let name = format!("native/parallel_step_{label}_t{threads}");
+            let r = bench(&name, warm, iters, budget, || {
+                exec.train_step(&mut model, &be, &px, &py, d, 0.01).unwrap();
+            });
+            report(&r);
+            println!(
+                "{:<48} {:>11.2}x (serial / t{threads} median)",
+                format!("native/parallel_speedup_{label}_t{threads}"),
+                base.median_ns / r.median_ns
+            );
+        }
     }
 }

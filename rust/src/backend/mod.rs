@@ -15,16 +15,25 @@
 //! whole-graph path (`runtime/`, behind the `pjrt` feature) remains the
 //! fast AOT route when compiled artifacts exist.
 //!
+//! Above the trait sits the execution layer ([`parallel`]): a
+//! [`ParallelExecutor`] shards each training batch over a fixed worker
+//! count, runs the fused plan path per shard on per-worker plans (no
+//! locking on the hot path), and tree-reduces gradients in a fixed order
+//! so runs are bit-reproducible. See `docs/ARCHITECTURE.md` for the layer
+//! map and the sharding/reduction design.
+//!
 //! Layout conventions follow the paper throughout: activations NCHW,
 //! weights OIHW, row-major flattened `Vec<f32>`.
 
 pub mod im2col;
 pub mod native;
+pub mod parallel;
 pub mod plan;
 pub mod simple_cnn;
 pub mod sparse;
 
 pub use native::NativeBackend;
+pub use parallel::{ExecConfig, ParallelExecutor};
 pub use plan::Conv2dPlan;
 pub use simple_cnn::{SimpleCnn, SimpleCnnCfg, StepStats};
 
@@ -32,21 +41,31 @@ pub use simple_cnn::{SimpleCnn, SimpleCnnCfg, StepStats};
 /// paper's Eq. 1 and the AOT manifests).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Conv2d {
+    /// Batch size.
     pub bt: usize,
+    /// Input channels.
     pub cin: usize,
+    /// Input height.
     pub h: usize,
+    /// Input width.
     pub w: usize,
+    /// Output channels.
     pub cout: usize,
+    /// Kernel size (square, K×K).
     pub k: usize,
+    /// Stride (same both axes).
     pub stride: usize,
+    /// Zero padding (same both axes).
     pub padding: usize,
 }
 
 impl Conv2d {
+    /// Output height: (H + 2P − K) / S + 1.
     pub fn hout(&self) -> usize {
         im2col::out_size(self.h, self.k, self.stride, self.padding)
     }
 
+    /// Output width: (W + 2P − K) / S + 1.
     pub fn wout(&self) -> usize {
         im2col::out_size(self.w, self.k, self.stride, self.padding)
     }
@@ -61,16 +80,25 @@ impl Conv2d {
         self.cin * self.k * self.k
     }
 
+    /// Flattened input activation length: Bt·Cin·H·W.
     pub fn in_len(&self) -> usize {
         self.bt * self.cin * self.h * self.w
     }
 
+    /// Flattened output activation length: Bt·Cout·Hout·Wout.
     pub fn out_len(&self) -> usize {
         self.bt * self.cout * self.hout() * self.wout()
     }
 
+    /// Flattened weight length: Cout·Cin·K².
     pub fn w_len(&self) -> usize {
         self.cout * self.cin * self.k * self.k
+    }
+
+    /// The same geometry at batch size `bt` (the sub-batch key the
+    /// data-parallel executor shards a full-batch geometry down to).
+    pub fn with_batch(&self, bt: usize) -> Conv2d {
+        Conv2d { bt, ..*self }
     }
 }
 
@@ -95,7 +123,12 @@ pub struct ConvGrads {
 /// over them. Implementations must match the reference oracle
 /// `python/compile/kernels/ref.py` within f32 tolerance (enforced by
 /// `rust/tests/native_backend.rs` fixtures on both routes).
-pub trait Backend {
+///
+/// `Send + Sync` is a supertrait so one backend can be shared by the
+/// data-parallel executor's worker threads; backends hold no per-call
+/// state (all mutable scratch lives in the caller's [`Conv2dPlan`]).
+pub trait Backend: Send + Sync {
+    /// Short stable identifier ("native", "pjrt", ...) for logs/reports.
     fn name(&self) -> &'static str;
 
     /// Planned dense conv forward `y = x * w (+ b)` in NCHW/OIHW (paper
@@ -110,17 +143,34 @@ pub trait Backend {
         b: Option<&[f32]>,
     ) -> Vec<f32>;
 
-    /// Planned ssProp backward at `drop_rate` (paper Eq. 3/4/5 with the
-    /// channel top-k compaction): importance = mean |g| over (Bt, H, W)
-    /// per output channel; keep k = clamp(round((1−D)·Cout), 1, Cout)
-    /// channels (ties to even, matching the compile path); run the shrunk
-    /// img2col GEMMs out of the plan's workspace. Consumes the plan's
-    /// cached columns when live (skipping the patch gather entirely —
-    /// they must correspond to this `x`); otherwise gathers them from `x`
-    /// first. Either way the cache is spent afterwards. `drop_rate = 0`
-    /// reproduces exact dense gradients. `need_dx = false` skips the
-    /// col[dX] GEMM + scatter entirely (the first layer of a network
-    /// never consumes dx — a large share of its backward cost).
+    /// Planned ssProp backward with the kept channels *already chosen*
+    /// (paper Eq. 3/4/5 with the channel compaction): run the shrunk
+    /// img2col GEMMs for exactly `keep_idx` (ascending, non-empty) out of
+    /// the plan's workspace. Consumes the plan's cached columns when live
+    /// (skipping the patch gather entirely — they must correspond to this
+    /// `x`); otherwise gathers them from `x` first. Either way the cache
+    /// is spent afterwards. `need_dx = false` skips the col[dX] GEMM +
+    /// scatter entirely (the first layer of a network never consumes dx —
+    /// a large share of its backward cost).
+    ///
+    /// This is the selection-free primitive the data-parallel executor
+    /// calls: selection there is *global* (importance reduced across
+    /// shards), so it cannot live inside the per-shard backward.
+    fn conv2d_bwd_planned_with(
+        &self,
+        plan: &mut Conv2dPlan,
+        x: &[f32],
+        w: &[f32],
+        g: &[f32],
+        keep_idx: &[usize],
+        need_dx: bool,
+    ) -> ConvGrads;
+
+    /// Planned ssProp backward at `drop_rate`: importance = mean |g| over
+    /// (Bt, H, W) per output channel; keep k = clamp(round((1−D)·Cout),
+    /// 1, Cout) channels (ties to even, matching the compile path); then
+    /// run [`Backend::conv2d_bwd_planned_with`] on the selection.
+    /// `drop_rate = 0` reproduces exact dense gradients.
     fn conv2d_bwd_planned(
         &self,
         plan: &mut Conv2dPlan,
@@ -129,7 +179,10 @@ pub trait Backend {
         g: &[f32],
         drop_rate: f64,
         need_dx: bool,
-    ) -> ConvGrads;
+    ) -> ConvGrads {
+        let keep_idx = sparse::select_channels(plan.cfg(), g, drop_rate);
+        self.conv2d_bwd_planned_with(plan, x, w, g, &keep_idx, need_dx)
+    }
 
     /// Fused forward+backward: one im2col build shared by both passes —
     /// the layer-step primitive `SimpleCnn::train_step` is built on.
@@ -197,6 +250,10 @@ mod tests {
 
         let s2 = Conv2d { bt: 1, cin: 2, h: 5, w: 5, cout: 4, k: 3, stride: 2, padding: 0 };
         assert_eq!((s2.hout(), s2.wout()), (2, 2));
+
+        let sub = c.with_batch(1);
+        assert_eq!(sub.bt, 1);
+        assert_eq!(Conv2d { bt: 2, ..sub }, c, "with_batch changes only the batch");
     }
 
     #[test]

@@ -7,13 +7,17 @@
 
 use super::im2col::col_w_into;
 use super::plan::Conv2dPlan;
-use super::sparse::{select_channels, sparse_bwd_with_cols};
+use super::sparse::sparse_bwd_with_cols;
 use super::{Backend, Conv2d, ConvGrads};
 
+/// The pure-Rust conv executor (see module docs). Stateless and `Copy`:
+/// all mutable scratch lives in the caller's [`Conv2dPlan`], so one value
+/// can be shared freely across the parallel executor's worker threads.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct NativeBackend;
 
 impl NativeBackend {
+    /// A native backend (stateless; equivalent to `NativeBackend::default()`).
     pub fn new() -> NativeBackend {
         NativeBackend
     }
@@ -73,13 +77,13 @@ impl Backend for NativeBackend {
         y
     }
 
-    fn conv2d_bwd_planned(
+    fn conv2d_bwd_planned_with(
         &self,
         plan: &mut Conv2dPlan,
         x: &[f32],
         w: &[f32],
         g: &[f32],
-        drop_rate: f64,
+        keep_idx: &[usize],
         need_dx: bool,
     ) -> ConvGrads {
         let cfg = *plan.cfg();
@@ -88,10 +92,9 @@ impl Backend for NativeBackend {
         } else {
             plan.build_cols(x);
         }
-        let keep_idx = select_channels(&cfg, g, drop_rate);
         plan.cols_valid = false; // the cache is keyed to one fwd/bwd pair
         let (cols, ws) = plan.split_cols_ws();
-        sparse_bwd_with_cols(&cfg, cols, w, g, &keep_idx, need_dx, ws)
+        sparse_bwd_with_cols(&cfg, cols, w, g, keep_idx, need_dx, ws)
     }
 
     fn gemm(&self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
@@ -182,6 +185,26 @@ mod tests {
             assert_eq!(grads.db, want.db, "db at d={d}");
         }
         assert_eq!(plan.cols_builds(), 2, "exactly one im2col per fused pair");
+    }
+
+    #[test]
+    fn bwd_planned_with_matches_drop_rate_route() {
+        use crate::backend::sparse::select_channels;
+        let be = NativeBackend::new();
+        let cfg = Conv2d { bt: 1, cin: 2, h: 4, w: 4, cout: 4, k: 3, stride: 1, padding: 1 };
+        let x: Vec<f32> = (0..cfg.in_len()).map(|i| ((i * 3) % 11) as f32 * 0.2 - 1.0).collect();
+        let w: Vec<f32> = (0..cfg.w_len()).map(|i| ((i * 7) % 5) as f32 * 0.1 - 0.2).collect();
+        let g: Vec<f32> = (0..cfg.out_len()).map(|i| ((i * 5) % 13) as f32 - 6.0).collect();
+        for d in [0.0, 0.5] {
+            let keep = select_channels(&cfg, &g, d);
+            let via_rate = be.conv2d_bwd_planned(&mut Conv2dPlan::new(cfg), &x, &w, &g, d, true);
+            let via_keep =
+                be.conv2d_bwd_planned_with(&mut Conv2dPlan::new(cfg), &x, &w, &g, &keep, true);
+            assert_eq!(via_rate.keep_idx, via_keep.keep_idx, "d={d}");
+            assert_eq!(via_rate.dx, via_keep.dx, "d={d}");
+            assert_eq!(via_rate.dw, via_keep.dw, "d={d}");
+            assert_eq!(via_rate.db, via_keep.db, "d={d}");
+        }
     }
 
     #[test]

@@ -1,0 +1,476 @@
+//! Data-parallel execution layer: shard each training batch over a fixed
+//! worker count, run the fused plan path per shard, reduce gradients
+//! deterministically.
+//!
+//! Design (see `docs/ARCHITECTURE.md` for the full write-up):
+//!
+//! * **Sharding.** The batch splits into contiguous sub-batches via
+//!   [`shard_ranges`] (non-divisible sizes allowed — leading shards take
+//!   the remainder). Each worker owns one [`Conv2dPlan`] per layer, forked
+//!   from the model's plans with [`Conv2dPlan::for_batch`], so the hot
+//!   path takes **no locks**: forward im2col columns are cached per worker
+//!   and consumed by that worker's backward, exactly like the serial path.
+//! * **Global selection.** ssProp's channel top-k is defined over the
+//!   *whole* batch, so per-layer the workers publish unnormalized
+//!   importance partials ([`channel_abs_sums`]), synchronize on a barrier,
+//!   worker 0 reduces them in fixed shard order and broadcasts the keep
+//!   set, and every shard runs the identical compacted backward
+//!   ([`Backend::conv2d_bwd_planned_with`]). Dense layers (keep == Cout)
+//!   skip the rendezvous entirely. This keeps parallel selection
+//!   *semantically identical* to serial selection.
+//! * **Deterministic reduction.** Weight/bias gradients reduce through a
+//!   fixed-shape pairwise tree (`tree_reduce`) in shard-index order —
+//!   never in thread-completion order — so repeated runs at the same
+//!   thread count are bit-identical, and a single-worker run reproduces
+//!   [`SimpleCnn::train_step`] exactly. Against other thread counts only
+//!   float re-association differs (≪ 1e-5 on the loss trajectory; pinned
+//!   by `rust/tests/determinism.rs`).
+//!
+//! Worker threads are scoped to each step (`std::thread::scope`), which
+//! keeps the borrows safe without `unsafe`; the persistent state a "pool"
+//! would carry — the per-worker plan workspaces — lives in the executor
+//! and is reused across steps, so steady-state steps allocate only the
+//! gradients themselves. A panicking worker (a backend invariant
+//! violation) aborts the step *loudly*: every worker owes a fixed number
+//! of rendezvous per step, and the `BarrierAttendance` guard pays any
+//! outstanding ones during unwinding, so the surviving workers are never
+//! left blocked on a barrier that cannot complete and the panic
+//! propagates out of `thread::scope` instead of deadlocking training.
+
+use std::sync::{Barrier, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::plan::Conv2dPlan;
+use super::simple_cnn::softmax_ce_core;
+use super::sparse::{channel_abs_sums, topk_channels};
+use super::{Backend, SimpleCnn, StepStats};
+use crate::flops::keep_channels;
+use crate::util::shard::shard_ranges;
+
+/// Execution-layer knobs for [`ParallelExecutor`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecConfig {
+    /// Worker threads a batch is sharded over (≥ 1; 1 = serial layout).
+    pub threads: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig { threads: 1 }
+    }
+}
+
+impl ExecConfig {
+    /// Config with `threads` workers (clamped to ≥ 1).
+    pub fn with_threads(threads: usize) -> ExecConfig {
+        ExecConfig { threads: threads.max(1) }
+    }
+}
+
+/// Everything one shard worker hands back to the reducer.
+#[derive(Debug, Default)]
+struct ShardOut {
+    /// Σ per-example losses over the shard (full-batch mean = Σ/Bt).
+    loss_sum: f64,
+    /// Correct predictions in the shard.
+    correct: usize,
+    /// Head gradients, already in full-batch (1/Bt) units.
+    dfc_w: Vec<f32>,
+    dfc_b: Vec<f32>,
+    /// Per conv layer (dw, db), full-batch units.
+    conv: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Kept channels summed over layers (filled by worker 0 only).
+    kept: usize,
+}
+
+/// Unwind insurance for the barrier protocol. Every worker owes the same
+/// fixed number of rendezvous per step (two per sparse layer); a worker
+/// that panics mid-step would otherwise leave its peers blocked forever
+/// on a `std::sync::Barrier` that cannot complete (std barriers have no
+/// poisoning). The guard tracks the waits still owed and pays them during
+/// unwinding, so peers proceed — at worst briefly computing on a stale or
+/// empty keep set, whose validity asserts make *them* panic and drain the
+/// same way — and the original panic then propagates out of
+/// `std::thread::scope`, aborting the step instead of deadlocking it.
+struct BarrierAttendance<'a> {
+    barrier: &'a Barrier,
+    remaining: std::cell::Cell<usize>,
+}
+
+impl<'a> BarrierAttendance<'a> {
+    fn new(barrier: &'a Barrier, total: usize) -> BarrierAttendance<'a> {
+        BarrierAttendance { barrier, remaining: std::cell::Cell::new(total) }
+    }
+
+    /// Attend one rendezvous and mark it paid.
+    fn wait(&self) {
+        self.barrier.wait();
+        self.remaining.set(self.remaining.get() - 1);
+    }
+}
+
+impl Drop for BarrierAttendance<'_> {
+    fn drop(&mut self) {
+        for _ in 0..self.remaining.get() {
+            self.barrier.wait();
+        }
+    }
+}
+
+/// Deterministic pairwise tree reduction: parts are summed elementwise in
+/// a fixed index-ordered binary tree — (0+1)+(2+3)… — so the result
+/// depends only on the part order, never on thread timing. A single part
+/// passes through bitwise untouched.
+fn tree_reduce(mut parts: Vec<Vec<f32>>) -> Vec<f32> {
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                for (av, bv) in a.iter_mut().zip(&b) {
+                    *av += bv;
+                }
+            }
+            next.push(a);
+        }
+        parts = next;
+    }
+    parts.pop().unwrap_or_default()
+}
+
+/// Reduce per-worker importance partials in fixed shard order, normalize
+/// by the *global* batch volume, and select the top-k channels — the
+/// cross-shard equivalent of [`super::sparse::select_channels`] (bitwise
+/// so for a single shard).
+fn reduce_select(
+    imp_slots: &[Mutex<Vec<f32>>],
+    bt: usize,
+    hw: usize,
+    cout: usize,
+    keep: usize,
+) -> Vec<usize> {
+    let mut imp = vec![0f32; cout];
+    for slot in imp_slots {
+        let part = slot.lock().expect("importance slot poisoned");
+        for (tot, &v) in imp.iter_mut().zip(part.iter()) {
+            *tot += v;
+        }
+    }
+    let denom = (bt * hw) as f32;
+    for v in &mut imp {
+        *v /= denom;
+    }
+    topk_channels(&imp, keep)
+}
+
+/// Data-parallel trainer over a [`SimpleCnn`]: owns the per-worker plan
+/// workspaces and runs [`ParallelExecutor::train_step`] as described in
+/// the module docs. Construct once and reuse — worker plans keep their
+/// buffer capacity across steps (and re-key in place when the batch size
+/// or shard sizes change, mirroring [`SimpleCnn::ensure_plans`]).
+#[derive(Debug)]
+pub struct ParallelExecutor {
+    cfg: ExecConfig,
+    /// `worker_plans[w][l]`: worker w's plan for conv layer l.
+    worker_plans: Vec<Vec<Conv2dPlan>>,
+}
+
+impl ParallelExecutor {
+    /// An executor with no allocated workspaces yet (they grow on first
+    /// step and are reused afterwards).
+    pub fn new(cfg: ExecConfig) -> ParallelExecutor {
+        ParallelExecutor { cfg, worker_plans: Vec::new() }
+    }
+
+    /// Configured worker count (shards per step; capped by the batch size
+    /// at step time).
+    pub fn threads(&self) -> usize {
+        self.cfg.threads
+    }
+
+    /// Total im2col materializations across all worker plans — advances by
+    /// `depth × workers` per step when the fused path is healthy (each
+    /// worker builds each layer's columns once, in its forward).
+    pub fn plan_cols_builds(&self) -> u64 {
+        self.worker_plans.iter().flatten().map(|p| p.cols_builds()).sum()
+    }
+
+    /// Key the per-worker plans to the given shard sizes, forking from the
+    /// model's (already ensured) full-batch plans. Capacity is preserved
+    /// on re-key, so steady-state steps allocate nothing here.
+    fn ensure_worker_plans(&mut self, model: &SimpleCnn, shards: &[std::ops::Range<usize>]) {
+        let depth = model.cfg.depth;
+        if self.worker_plans.len() != shards.len() {
+            self.worker_plans.resize_with(shards.len(), Vec::new);
+        }
+        for (wp, r) in self.worker_plans.iter_mut().zip(shards) {
+            let sbt = r.end - r.start;
+            wp.truncate(depth);
+            for (l, mp) in model.plans().iter().enumerate() {
+                if l < wp.len() {
+                    wp[l].ensure(mp.cfg().with_batch(sbt));
+                } else {
+                    wp.push(mp.for_batch(sbt));
+                }
+            }
+        }
+    }
+
+    /// One data-parallel SGD training step at `drop_rate`; the parallel
+    /// counterpart of [`SimpleCnn::train_step`] with identical semantics:
+    /// same loss/accuracy, same global channel selection, gradients equal
+    /// up to float re-association (bit-identical with one worker, and
+    /// bit-identical run-to-run at any fixed worker count).
+    pub fn train_step(
+        &mut self,
+        model: &mut SimpleCnn,
+        backend: &dyn Backend,
+        x: &[f32],
+        y: &[i32],
+        drop_rate: f64,
+        lr: f32,
+    ) -> Result<StepStats> {
+        let bt = y.len();
+        let n_in = model.cfg.in_ch * model.cfg.img * model.cfg.img;
+        if bt == 0 || x.len() != bt * n_in {
+            bail!("bad batch geometry: {} inputs for {bt} labels", x.len());
+        }
+        let depth = model.cfg.depth;
+        let shards = shard_ranges(bt, self.cfg.threads);
+        let nw = shards.len();
+        model.ensure_plans(bt);
+        self.ensure_worker_plans(model, &shards);
+
+        let mut outs: Vec<ShardOut> = (0..nw).map(|_| ShardOut::default()).collect();
+        let barrier = Barrier::new(nw);
+        let imp_slots: Vec<Mutex<Vec<f32>>> = (0..nw).map(|_| Mutex::new(Vec::new())).collect();
+        let keep_slot: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        let m: &SimpleCnn = model;
+
+        std::thread::scope(|s| {
+            let worker_iter = shards.iter().zip(self.worker_plans.iter_mut()).zip(outs.iter_mut());
+            for (w, ((range, plans), out)) in worker_iter.enumerate() {
+                let (barrier, imp_slots, keep_slot) = (&barrier, &imp_slots, &keep_slot);
+                let range = range.clone();
+                s.spawn(move || {
+                    let sbt = range.end - range.start;
+                    let xs = &x[range.start * n_in..range.end * n_in];
+                    let ys = &y[range.start..range.end];
+
+                    // Fixed rendezvous budget (two per sparse layer); the
+                    // guard pays any outstanding waits if we unwind, so a
+                    // panic here can never strand the other workers.
+                    let sparse_layers = (0..depth)
+                        .filter(|&l| {
+                            let c = m.conv_cfg(l, sbt);
+                            keep_channels(c.cout, drop_rate) < c.cout
+                        })
+                        .count();
+                    let attendance = BarrierAttendance::new(barrier, 2 * sparse_layers);
+
+                    // Shard-local forward + head/pool backward, all in
+                    // full-batch gradient units (grad_denom = bt).
+                    let (acts, zs, pooled, logits) = m.forward(backend, xs, sbt, plans);
+                    let (loss_sum, correct, dlogits) =
+                        softmax_ce_core(&logits, ys, m.cfg.classes, bt);
+                    let (dfc_w, dfc_b, dpooled) = m.head_backward(&pooled, &dlogits, sbt);
+                    let mut g = m.pool_backward(&dpooled, &zs[depth - 1], sbt);
+                    out.loss_sum = loss_sum;
+                    out.correct = correct;
+                    out.dfc_w = dfc_w;
+                    out.dfc_b = dfc_b;
+                    out.conv = (0..depth).map(|_| (Vec::new(), Vec::new())).collect();
+
+                    // Conv stack backward, top-down. Selection is global:
+                    // publish importance partials, rendezvous, worker 0
+                    // reduces + broadcasts; dense layers skip the sync.
+                    for l in (0..depth).rev() {
+                        let cfg = *plans[l].cfg();
+                        let keep_count = keep_channels(cfg.cout, drop_rate);
+                        let keep = if keep_count == cfg.cout {
+                            (0..cfg.cout).collect::<Vec<_>>()
+                        } else {
+                            *imp_slots[w].lock().expect("importance slot poisoned") =
+                                channel_abs_sums(&cfg, &g);
+                            attendance.wait();
+                            if w == 0 {
+                                let hw = cfg.hout() * cfg.wout();
+                                let sel = reduce_select(imp_slots, bt, hw, cfg.cout, keep_count);
+                                *keep_slot.lock().expect("keep slot poisoned") = sel;
+                            }
+                            attendance.wait();
+                            keep_slot.lock().expect("keep slot poisoned").clone()
+                        };
+                        if w == 0 {
+                            out.kept += keep.len();
+                        }
+                        let grads = backend.conv2d_bwd_planned_with(
+                            &mut plans[l],
+                            &acts[l],
+                            &m.convs[l].w,
+                            &g,
+                            &keep,
+                            l > 0,
+                        );
+                        if l > 0 {
+                            g = grads.dx;
+                            for (gv, &zv) in g.iter_mut().zip(&zs[l - 1]) {
+                                if zv <= 0.0 {
+                                    *gv = 0.0;
+                                }
+                            }
+                        }
+                        out.conv[l] = (grads.dw, grads.db);
+                    }
+                });
+            }
+        });
+
+        // Scalar reductions in fixed shard order.
+        let (mut loss_sum, mut correct) = (0f64, 0usize);
+        for o in &outs {
+            loss_sum += o.loss_sum;
+            correct += o.correct;
+        }
+        let loss = loss_sum / bt as f64;
+        if !loss.is_finite() {
+            bail!("non-finite loss at drop rate {drop_rate}");
+        }
+        let kept = outs[0].kept;
+
+        // Gradient tree-reduction (fixed shard order) + SGD updates.
+        let mut dfc_w_parts = Vec::with_capacity(nw);
+        let mut dfc_b_parts = Vec::with_capacity(nw);
+        let mut conv_dw: Vec<Vec<Vec<f32>>> = (0..depth).map(|_| Vec::with_capacity(nw)).collect();
+        let mut conv_db: Vec<Vec<Vec<f32>>> = (0..depth).map(|_| Vec::with_capacity(nw)).collect();
+        for o in outs {
+            dfc_w_parts.push(o.dfc_w);
+            dfc_b_parts.push(o.dfc_b);
+            for (l, (dw, db)) in o.conv.into_iter().enumerate() {
+                conv_dw[l].push(dw);
+                conv_db[l].push(db);
+            }
+        }
+        let dfc_w = tree_reduce(dfc_w_parts);
+        let dfc_b = tree_reduce(dfc_b_parts);
+        for (wv, &dv) in model.fc_w.iter_mut().zip(&dfc_w) {
+            *wv -= lr * dv;
+        }
+        for (bv, &dv) in model.fc_b.iter_mut().zip(&dfc_b) {
+            *bv -= lr * dv;
+        }
+        for (l, (dw_parts, db_parts)) in conv_dw.into_iter().zip(conv_db).enumerate() {
+            let dw = tree_reduce(dw_parts);
+            let db = tree_reduce(db_parts);
+            for (wv, &dv) in model.convs[l].w.iter_mut().zip(&dw) {
+                *wv -= lr * dv;
+            }
+            for (bv, &dv) in model.convs[l].b.iter_mut().zip(&db) {
+                *bv -= lr * dv;
+            }
+        }
+
+        Ok(StepStats {
+            loss,
+            acc: correct as f64 / bt as f64,
+            kept_channels: kept,
+            total_channels: depth * model.cfg.width,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{NativeBackend, SimpleCnnCfg};
+    use crate::util::rng::Pcg;
+
+    fn tiny() -> SimpleCnn {
+        SimpleCnn::new(SimpleCnnCfg { in_ch: 1, img: 8, classes: 3, depth: 2, width: 4, seed: 7 })
+    }
+
+    fn batch(m: &SimpleCnn, bt: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Pcg::new(seed, 1);
+        let n = m.cfg.in_ch * m.cfg.img * m.cfg.img;
+        let x = (0..bt * n).map(|_| rng.normal()).collect();
+        let y = (0..bt).map(|i| (i % m.cfg.classes) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn tree_reduce_sums_in_any_part_count() {
+        for nparts in 1..6 {
+            let parts: Vec<Vec<f32>> = (0..nparts).map(|p| vec![p as f32, 1.0]).collect();
+            let want: f32 = (0..nparts).map(|p| p as f32).sum();
+            let got = tree_reduce(parts);
+            assert_eq!(got[0], want, "{nparts} parts");
+            assert_eq!(got[1], nparts as f32);
+        }
+        assert!(tree_reduce(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn exec_config_clamps_threads() {
+        assert_eq!(ExecConfig::with_threads(0).threads, 1);
+        assert_eq!(ExecConfig::with_threads(3).threads, 3);
+        assert_eq!(ExecConfig::default().threads, 1);
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        let mut exec = ParallelExecutor::new(ExecConfig::with_threads(2));
+        assert!(exec.train_step(&mut m, &be, &[0.0; 3], &[0, 1], 0.0, 0.05).is_err());
+        assert!(exec.train_step(&mut m, &be, &[], &[], 0.0, 0.05).is_err());
+    }
+
+    #[test]
+    fn worker_plans_build_cols_once_per_layer_per_step() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        let (x, y) = batch(&m, 6, 13);
+        let mut exec = ParallelExecutor::new(ExecConfig::with_threads(3));
+        exec.train_step(&mut m, &be, &x, &y, 0.5, 0.05).unwrap();
+        let per_step = (m.cfg.depth * 3) as u64;
+        assert_eq!(exec.plan_cols_builds(), per_step, "one build per layer per worker");
+        exec.train_step(&mut m, &be, &x, &y, 0.5, 0.05).unwrap();
+        assert_eq!(exec.plan_cols_builds(), 2 * per_step);
+    }
+
+    #[test]
+    fn more_threads_than_examples_still_trains() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        let (x, y) = batch(&m, 2, 5);
+        let mut exec = ParallelExecutor::new(ExecConfig::with_threads(8));
+        let stats = exec.train_step(&mut m, &be, &x, &y, 0.8, 0.05).unwrap();
+        assert!(stats.loss.is_finite());
+        assert_eq!(stats.kept_channels, 2, "D=0.8 at width 4 keeps 1 channel per layer");
+        assert_eq!(exec.worker_plans.len(), 2, "shards are capped at the batch size");
+    }
+
+    #[test]
+    fn workspaces_rekey_across_batch_sizes() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        let mut exec = ParallelExecutor::new(ExecConfig::with_threads(2));
+        let (x8, y8) = batch(&m, 8, 3);
+        let (x4, y4) = batch(&m, 4, 4);
+        exec.train_step(&mut m, &be, &x8, &y8, 0.0, 0.05).unwrap();
+        let caps: Vec<Vec<[usize; 7]>> = exec
+            .worker_plans
+            .iter()
+            .map(|wp| wp.iter().map(|p| p.buffer_caps()).collect())
+            .collect();
+        exec.train_step(&mut m, &be, &x4, &y4, 0.0, 0.05).unwrap();
+        exec.train_step(&mut m, &be, &x8, &y8, 0.0, 0.05).unwrap();
+        let caps2: Vec<Vec<[usize; 7]>> = exec
+            .worker_plans
+            .iter()
+            .map(|wp| wp.iter().map(|p| p.buffer_caps()).collect())
+            .collect();
+        assert_eq!(caps, caps2, "shrinking then regrowing the batch must reuse capacity");
+    }
+}

@@ -48,6 +48,7 @@ pub struct Conv2dPlan {
 }
 
 impl Conv2dPlan {
+    /// An empty plan keyed to `cfg` (buffers grow lazily on first use).
     pub fn new(cfg: Conv2d) -> Conv2dPlan {
         Conv2dPlan {
             cfg,
@@ -61,6 +62,7 @@ impl Conv2dPlan {
         }
     }
 
+    /// The geometry this plan is currently keyed to.
     pub fn cfg(&self) -> &Conv2d {
         &self.cfg
     }
@@ -70,6 +72,16 @@ impl Conv2dPlan {
     pub fn ensure(&mut self, cfg: Conv2d) {
         self.cfg = cfg;
         self.cols_valid = false;
+    }
+
+    /// A fresh plan for the same layer at sub-batch size `bt` — the
+    /// sharding primitive: the data-parallel executor forks one per-worker
+    /// plan per layer from the model's full-batch plans, so each worker
+    /// owns its buffers and the hot path takes no locks. Buffers start
+    /// empty (a shard never needs the full-batch capacity) and the fork
+    /// carries no cached columns or build counts.
+    pub fn for_batch(&self, bt: usize) -> Conv2dPlan {
+        Conv2dPlan::new(self.cfg.with_batch(bt))
     }
 
     /// Drop the cached columns (call when `x` changed since the forward).
@@ -164,5 +176,18 @@ mod tests {
         plan.build_cols(&vec![0f32; small.in_len()]);
         assert!(plan.buffer_caps()[0] >= small.m() * small.n());
         assert_eq!(plan.buffer_caps()[0], caps[0], "capacity survives re-keying");
+    }
+
+    #[test]
+    fn for_batch_forks_a_clean_sub_batch_plan() {
+        let c = cfg();
+        let mut plan = Conv2dPlan::new(c);
+        plan.build_cols(&vec![1f32; c.in_len()]);
+        let sub = plan.for_batch(3);
+        assert_eq!(sub.cfg().bt, 3);
+        assert_eq!((sub.cfg().cin, sub.cfg().h, sub.cfg().w), (c.cin, c.h, c.w));
+        assert_eq!(sub.cols_builds(), 0, "fork must not inherit build counts");
+        assert!(!sub.cols_valid, "fork must not inherit the cols cache");
+        assert_eq!(plan.cols_builds(), 1, "the source plan is untouched");
     }
 }

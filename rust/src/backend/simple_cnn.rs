@@ -21,29 +21,39 @@ use crate::util::rng::Pcg;
 /// Geometry/init knobs for a native SimpleCNN.
 #[derive(Debug, Clone, Copy)]
 pub struct SimpleCnnCfg {
+    /// Input channels (1 for grayscale datasets, 3 for RGB).
     pub in_ch: usize,
+    /// Input image side length (images are square).
     pub img: usize,
+    /// Number of classifier outputs.
     pub classes: usize,
     /// Number of 3×3 conv layers (≥ 1); the first is stride 2.
     pub depth: usize,
     /// Channels per conv layer.
     pub width: usize,
+    /// Parameter-init seed (two models built from equal cfgs are equal).
     pub seed: u64,
 }
 
 /// One conv layer's parameters.
 #[derive(Debug, Clone)]
 pub struct ConvBlock {
+    /// Weights, (width, cin, 3, 3) flattened OIHW.
     pub w: Vec<f32>,
+    /// Bias, (width,).
     pub b: Vec<f32>,
+    /// Input channels of this layer.
     pub cin: usize,
+    /// Stride (2 on the stem layer, 1 elsewhere).
     pub stride: usize,
 }
 
 /// Per-step statistics returned by [`SimpleCnn::train_step`].
 #[derive(Debug, Clone, Copy)]
 pub struct StepStats {
+    /// Mean softmax cross-entropy over the batch.
     pub loss: f64,
+    /// Fraction of the batch classified correctly.
     pub acc: f64,
     /// Output channels actually back-propagated, summed over conv layers.
     pub kept_channels: usize,
@@ -51,13 +61,17 @@ pub struct StepStats {
     pub total_channels: usize,
 }
 
+/// The paper's Fig. 4 workhorse model (see module docs), trained entirely
+/// through the [`Backend`] trait.
 #[derive(Debug, Clone)]
 pub struct SimpleCnn {
+    /// Geometry/init knobs the model was built from.
     pub cfg: SimpleCnnCfg,
+    /// Conv stack parameters, index 0 = the stride-2 stem.
     pub convs: Vec<ConvBlock>,
-    /// (width, classes) row-major.
+    /// Classifier weights, (width, classes) row-major.
     pub fc_w: Vec<f32>,
-    /// (classes,)
+    /// Classifier bias, (classes,).
     pub fc_b: Vec<f32>,
     /// Per-layer conv plans (im2col cache + backward scratch), re-keyed by
     /// [`SimpleCnn::ensure_plans`] when the batch size changes.
@@ -65,6 +79,7 @@ pub struct SimpleCnn {
 }
 
 impl SimpleCnn {
+    /// Build and He-initialize a model from `cfg` (deterministic per seed).
     pub fn new(cfg: SimpleCnnCfg) -> SimpleCnn {
         assert!(cfg.depth >= 1 && cfg.width >= 1 && cfg.classes >= 1);
         let mut rng = Pcg::new(cfg.seed ^ 0xC44, 29);
@@ -160,9 +175,10 @@ impl SimpleCnn {
     /// `acts[l]` is layer l's input (acts[0] = x), `zs[l]` its pre-ReLU
     /// output; returns (acts, zs, pooled, logits). Runs through the
     /// planned path, leaving each layer's im2col columns cached in its
-    /// plan for the backward.
+    /// plan for the backward. Crate-visible so the data-parallel executor
+    /// can run the identical forward per shard on per-worker plans.
     #[allow(clippy::type_complexity)]
-    fn forward(
+    pub(crate) fn forward(
         &self,
         backend: &dyn Backend,
         x: &[f32],
@@ -201,6 +217,73 @@ impl SimpleCnn {
         (acts, zs, pooled, logits)
     }
 
+    /// Classifier-head backward for a (sub-)batch: given the pooled
+    /// features and `dlogits`, returns (d fc_w, d fc_b, d pooled). Pure
+    /// gradient computation (no update), so the serial step and the
+    /// data-parallel executor's shard workers share it verbatim — the
+    /// executor tree-reduces the returned pieces across shards.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn head_backward(
+        &self,
+        pooled: &[f32],
+        dlogits: &[f32],
+        bt: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (width, classes) = (self.cfg.width, self.cfg.classes);
+        let mut dpooled = vec![0f32; bt * width];
+        for b in 0..bt {
+            let drow = &dlogits[b * classes..][..classes];
+            for f in 0..width {
+                let wrow = &self.fc_w[f * classes..][..classes];
+                let mut acc_dp = 0f32;
+                for (dv, wv) in drow.iter().zip(wrow) {
+                    acc_dp += dv * wv;
+                }
+                dpooled[b * width + f] = acc_dp;
+            }
+        }
+        let mut dfc_w = vec![0f32; width * classes];
+        let mut dfc_b = vec![0f32; classes];
+        for b in 0..bt {
+            let drow = &dlogits[b * classes..][..classes];
+            let prow = &pooled[b * width..][..width];
+            for (f, &pv) in prow.iter().enumerate() {
+                let dst = &mut dfc_w[f * classes..][..classes];
+                for (dw, &dv) in dst.iter_mut().zip(drow) {
+                    *dw += pv * dv;
+                }
+            }
+            for (db, &dv) in dfc_b.iter_mut().zip(drow) {
+                *db += dv;
+            }
+        }
+        (dfc_w, dfc_b, dpooled)
+    }
+
+    /// Global-average-pool backward through the top ReLU: spread `dpooled`
+    /// uniformly over each feature plane, zeroing pixels whose pre-ReLU
+    /// activation `ztop` was non-positive. Shared by the serial step and
+    /// the shard workers (each passes its own sub-batch slices).
+    pub(crate) fn pool_backward(&self, dpooled: &[f32], ztop: &[f32], bt: usize) -> Vec<f32> {
+        let width = self.cfg.width;
+        let last = self.conv_cfg(self.cfg.depth - 1, bt);
+        let hw = last.hout() * last.wout();
+        let inv_hw = 1.0 / hw as f32;
+        let mut g = vec![0f32; bt * width * hw];
+        for b in 0..bt {
+            for f in 0..width {
+                let gv = dpooled[b * width + f] * inv_hw;
+                let base = (b * width + f) * hw;
+                for pix in 0..hw {
+                    if ztop[base + pix] > 0.0 {
+                        g[base + pix] = gv;
+                    }
+                }
+            }
+        }
+        g
+    }
+
     /// One SGD training step at `drop_rate`; returns loss/acc/kept-channel
     /// stats. `x` is (bt, in_ch, img, img) flattened, `y` integer labels.
     pub fn train_step(
@@ -223,55 +306,22 @@ impl SimpleCnn {
         let mut plans = std::mem::take(&mut self.plans);
         let (acts, zs, pooled, logits) = self.forward(backend, x, bt, &mut plans);
         self.plans = plans;
-        let (loss, acc, dlogits) = softmax_ce(&logits, y, self.cfg.classes);
+        let (loss_sum, correct, dlogits) = softmax_ce_core(&logits, y, self.cfg.classes, bt);
+        let loss = loss_sum / bt as f64;
+        let acc = correct as f64 / bt as f64;
         if !loss.is_finite() {
             bail!("non-finite loss at drop rate {drop_rate}");
         }
 
-        // FC backward + update
-        let (width, classes) = (self.cfg.width, self.cfg.classes);
-        let mut dpooled = vec![0f32; bt * width];
-        for b in 0..bt {
-            let drow = &dlogits[b * classes..][..classes];
-            for f in 0..width {
-                let wrow = &self.fc_w[f * classes..][..classes];
-                let mut acc_dp = 0f32;
-                for (dv, wv) in drow.iter().zip(wrow) {
-                    acc_dp += dv * wv;
-                }
-                dpooled[b * width + f] = acc_dp;
-            }
+        // FC backward + update, then pool backward -> gradient on the top
+        // feature map through its ReLU
+        let (dfc_w, dfc_b, dpooled) = self.head_backward(&pooled, &dlogits, bt);
+        let mut g = self.pool_backward(&dpooled, &zs[self.cfg.depth - 1], bt);
+        for (wv, &dv) in self.fc_w.iter_mut().zip(&dfc_w) {
+            *wv -= lr * dv;
         }
-        for b in 0..bt {
-            let drow = &dlogits[b * classes..][..classes];
-            let prow = &pooled[b * width..][..width];
-            for (f, &pv) in prow.iter().enumerate() {
-                let wrow = &mut self.fc_w[f * classes..][..classes];
-                for (wv, &dv) in wrow.iter_mut().zip(drow) {
-                    *wv -= lr * pv * dv;
-                }
-            }
-            for (bv, &dv) in self.fc_b.iter_mut().zip(drow) {
-                *bv -= lr * dv;
-            }
-        }
-
-        // pool backward -> gradient on the top feature map, through ReLU
-        let last = self.conv_cfg(self.cfg.depth - 1, bt);
-        let hw = last.hout() * last.wout();
-        let inv_hw = 1.0 / hw as f32;
-        let mut g = vec![0f32; bt * width * hw];
-        let ztop = &zs[self.cfg.depth - 1];
-        for b in 0..bt {
-            for f in 0..width {
-                let gv = dpooled[b * width + f] * inv_hw;
-                let base = (b * width + f) * hw;
-                for pix in 0..hw {
-                    if ztop[base + pix] > 0.0 {
-                        g[base + pix] = gv;
-                    }
-                }
-            }
+        for (bv, &dv) in self.fc_b.iter_mut().zip(&dfc_b) {
+            *bv -= lr * dv;
         }
 
         // conv stack backward (ssProp-selected) + SGD updates, consuming
@@ -380,9 +430,18 @@ impl SimpleCnn {
     }
 }
 
-/// Softmax cross-entropy over integer labels: returns (mean loss, accuracy,
-/// d loss / d logits) with the 1/Bt factor folded into the gradient.
-fn softmax_ce(logits: &[f32], y: &[i32], classes: usize) -> (f64, f64, Vec<f32>) {
+/// Softmax cross-entropy core over integer labels for a (sub-)batch:
+/// returns (sum of per-example losses, correct count, d loss / d logits)
+/// with `1 / grad_denom` folded into the gradient. The serial step passes
+/// `grad_denom = bt`; the data-parallel executor passes the *full* batch
+/// size from every shard, so per-shard gradients are already in full-batch
+/// units and reduce by plain summation.
+pub(crate) fn softmax_ce_core(
+    logits: &[f32],
+    y: &[i32],
+    classes: usize,
+    grad_denom: usize,
+) -> (f64, usize, Vec<f32>) {
     let bt = y.len();
     let mut dlogits = vec![0f32; bt * classes];
     let (mut loss, mut correct) = (0f64, 0usize);
@@ -407,10 +466,18 @@ fn softmax_ce(logits: &[f32], y: &[i32], classes: usize) -> (f64, f64, Vec<f32>)
         let drow = &mut dlogits[b * classes..][..classes];
         for (c, &v) in row.iter().enumerate() {
             let p = (v - max).exp() / denom;
-            drow[c] = (p - if c == label { 1.0 } else { 0.0 }) / bt as f32;
+            drow[c] = (p - if c == label { 1.0 } else { 0.0 }) / grad_denom as f32;
         }
     }
-    (loss / bt as f64, correct as f64 / bt as f64, dlogits)
+    (loss, correct, dlogits)
+}
+
+/// Softmax cross-entropy over integer labels: returns (mean loss, accuracy,
+/// d loss / d logits) with the 1/Bt factor folded into the gradient.
+fn softmax_ce(logits: &[f32], y: &[i32], classes: usize) -> (f64, f64, Vec<f32>) {
+    let bt = y.len();
+    let (loss_sum, correct, dlogits) = softmax_ce_core(logits, y, classes, bt);
+    (loss_sum / bt as f64, correct as f64 / bt as f64, dlogits)
 }
 
 #[cfg(test)]

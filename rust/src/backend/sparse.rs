@@ -8,8 +8,17 @@ use super::im2col::{col2img, im2col};
 use super::{Conv2d, ConvGrads};
 use crate::flops::keep_channels;
 
-/// Fig. 1(a) channel mode: importance[o] = mean |g| over (Bt, H, W).
-pub fn channel_importance(cfg: &Conv2d, g: &[f32]) -> Vec<f32> {
+/// Unnormalized channel importance: per-output-channel Σ|g| over `cfg`'s
+/// (Bt, H, W). This is the shard-local partial the data-parallel executor
+/// reduces across workers (in fixed shard order, so runs are
+/// bit-reproducible) before dividing by the *global* batch volume. With a
+/// single shard the reduction reproduces the serial
+/// [`channel_importance`] accumulation bit-for-bit; across shards the
+/// pre-summed partials re-associate the f32 additions, so importances —
+/// and, for near-tied channels, the selection — can differ from serial by
+/// float rounding (the determinism suite therefore pins cross-thread
+/// agreement at a tolerance, not bitwise).
+pub fn channel_abs_sums(cfg: &Conv2d, g: &[f32]) -> Vec<f32> {
     let hw = cfg.hout() * cfg.wout();
     assert_eq!(g.len(), cfg.bt * cfg.cout * hw, "gradient length");
     let mut imp = vec![0f32; cfg.cout];
@@ -19,7 +28,13 @@ pub fn channel_importance(cfg: &Conv2d, g: &[f32]) -> Vec<f32> {
             imp[o] += plane.iter().map(|v| v.abs()).sum::<f32>();
         }
     }
-    let denom = (cfg.bt * hw) as f32;
+    imp
+}
+
+/// Fig. 1(a) channel mode: importance[o] = mean |g| over (Bt, H, W).
+pub fn channel_importance(cfg: &Conv2d, g: &[f32]) -> Vec<f32> {
+    let mut imp = channel_abs_sums(cfg, g);
+    let denom = (cfg.bt * cfg.hout() * cfg.wout()) as f32;
     for v in &mut imp {
         *v /= denom;
     }
@@ -214,6 +229,18 @@ mod tests {
         }
         let imp = channel_importance(&c, &g);
         assert_eq!(imp, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn abs_sums_are_unnormalized_importance() {
+        let c = cfg();
+        let g: Vec<f32> = (0..c.out_len()).map(|i| (i % 9) as f32 - 4.0).collect();
+        let sums = channel_abs_sums(&c, &g);
+        let imp = channel_importance(&c, &g);
+        let denom = (c.bt * c.hout() * c.wout()) as f32;
+        for (s, i) in sums.iter().zip(&imp) {
+            assert_eq!(s / denom, *i);
+        }
     }
 
     #[test]

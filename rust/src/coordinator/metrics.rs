@@ -8,13 +8,18 @@ use std::time::Duration;
 use crate::energy::{estimate, DeviceProfile, EnergyReport};
 use crate::flops::LayerSet;
 
+/// Rolling record of one training run (see module docs).
 #[derive(Debug, Default, Clone)]
 pub struct TrainMetrics {
+    /// Per-iteration training loss.
     pub losses: Vec<f64>,
+    /// Per-iteration training accuracy.
     pub accs: Vec<f64>,
+    /// Per-iteration scheduled drop rate.
     pub drop_rates: Vec<f64>,
     /// (epoch, test loss, test acc)
     pub evals: Vec<(usize, f64, f64)>,
+    /// Wall-clock seconds per epoch.
     pub epoch_secs: Vec<f64>,
     /// Backward FLOPs if every iteration had been dense (Eq. 6).
     pub flops_dense: f64,
@@ -23,6 +28,7 @@ pub struct TrainMetrics {
 }
 
 impl TrainMetrics {
+    /// Record one training iteration: curves + the FLOPs ledger update.
     pub fn record_iter(
         &mut self,
         loss: f64,
@@ -38,26 +44,32 @@ impl TrainMetrics {
         self.flops_actual += layers.bwd_flops_per_iter(bt, drop_rate);
     }
 
+    /// Record one epoch's wall-clock time.
     pub fn record_epoch(&mut self, wall: Duration) {
         self.epoch_secs.push(wall.as_secs_f64());
     }
 
+    /// Record a test-split evaluation at `epoch`.
     pub fn record_eval(&mut self, epoch: usize, loss: f64, acc: f64) {
         self.evals.push((epoch, loss, acc));
     }
 
+    /// Mean training loss over the last `ipe` iterations.
     pub fn last_epoch_loss(&self, ipe: usize) -> f64 {
         mean_tail(&self.losses, ipe)
     }
 
+    /// Mean training accuracy over the last `ipe` iterations.
     pub fn last_epoch_acc(&self, ipe: usize) -> f64 {
         mean_tail(&self.accs, ipe)
     }
 
+    /// Most recent recorded test accuracy (NaN when never evaluated).
     pub fn final_test_acc(&self) -> f64 {
         self.evals.last().map(|e| e.2).unwrap_or(f64::NAN)
     }
 
+    /// Most recent recorded test loss (NaN when never evaluated).
     pub fn final_test_loss(&self) -> f64 {
         self.evals.last().map(|e| e.1).unwrap_or(f64::NAN)
     }
@@ -71,6 +83,7 @@ impl TrainMetrics {
         }
     }
 
+    /// Total recorded wall-clock time, seconds.
     pub fn total_wall_secs(&self) -> f64 {
         self.epoch_secs.iter().sum()
     }

@@ -12,7 +12,7 @@
 //! * [`NativeTrainer`] (always available) drives a SimpleCNN through the
 //!   [`Backend`](crate::backend::Backend) op trait — pure Rust, no
 //!   artifacts, no FFI;
-//! * [`Trainer`] (feature `pjrt`) assembles the AOT step's inputs in
+//! * `Trainer` (feature `pjrt`) assembles the AOT step's inputs in
 //!   manifest order, executes through PJRT, and re-binds state via
 //!   `feeds_input`. `ddpm.rs` reuses the same state machinery for
 //!   generation.
@@ -35,20 +35,27 @@ use crate::schedule::DropScheduler;
 pub struct TrainConfig {
     /// Artifact base name, e.g. "resnet18_cifar10" (loads `_train`/`_eval`).
     pub artifact: String,
+    /// Epochs to run.
     pub epochs: usize,
     /// Iterations per epoch (caps the synthetic dataset's epoch length).
     pub iters_per_epoch: usize,
+    /// Learning rate fed to the AOT step's `lr` input.
     pub lr: f64,
+    /// Drop-rate schedule driving the ssProp sparsity.
     pub scheduler: DropScheduler,
     /// Runtime Dropout rate (paper Table 6's "w/ Dropout" rows).
     pub dropout_rate: f64,
+    /// Seed for data order and the step's RNG key input.
     pub seed: u64,
     /// Evaluate on the test split every N epochs (0 = only at the end).
     pub eval_every: usize,
+    /// Print per-epoch progress lines.
     pub verbose: bool,
 }
 
 impl TrainConfig {
+    /// Paper-default hyperparameters (Table 2 lr, bar-2-epoch scheduler)
+    /// at the given scale.
     pub fn quick(artifact: &str, epochs: usize, iters_per_epoch: usize) -> TrainConfig {
         TrainConfig {
             artifact: artifact.to_string(),

@@ -10,7 +10,9 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::{checkpoint, TrainMetrics};
-use crate::backend::{default_backend, Backend, SimpleCnn, SimpleCnnCfg};
+use crate::backend::{
+    default_backend, Backend, ExecConfig, ParallelExecutor, SimpleCnn, SimpleCnnCfg,
+};
 use crate::data::{Loader, Loss, Split, SynthDataset};
 use crate::flops::LayerSet;
 use crate::schedule::DropScheduler;
@@ -24,12 +26,22 @@ pub struct NativeTrainConfig {
     pub depth: usize,
     /// Channels per conv layer.
     pub width: usize,
+    /// Training batch size (must fit both splits).
     pub batch: usize,
+    /// Epochs to run.
     pub epochs: usize,
+    /// Iterations per epoch (capped by the dataset's epoch length).
     pub iters_per_epoch: usize,
+    /// SGD learning rate.
     pub lr: f64,
+    /// Drop-rate schedule driving the ssProp sparsity.
     pub scheduler: DropScheduler,
+    /// Seed for model init and the synthetic data plane.
     pub seed: u64,
+    /// Worker threads for data-parallel train steps (1 = single-threaded;
+    /// batches shard across a [`ParallelExecutor`] when > 1).
+    pub threads: usize,
+    /// Print per-epoch progress lines.
     pub verbose: bool,
 }
 
@@ -48,6 +60,7 @@ impl NativeTrainConfig {
             lr: 0.3,
             scheduler: DropScheduler::paper_default(epochs, iters_per_epoch),
             seed: 0,
+            threads: 1,
             verbose: false,
         }
     }
@@ -55,20 +68,31 @@ impl NativeTrainConfig {
 
 /// A live native training job: model + backend + data plane + metrics.
 pub struct NativeTrainer {
+    /// The configuration this job was built from.
     pub cfg: NativeTrainConfig,
+    /// The model being trained.
     pub model: SimpleCnn,
+    /// Train-split batch loader.
     pub loader: Loader,
+    /// Test-split batch loader (evaluation).
     pub test_loader: Loader,
+    /// Conv inventory for the Eq. 6/9 FLOPs ledger.
     pub layers: LayerSet,
+    /// Loss/acc curves, FLOPs ledger, wall-clock.
     pub metrics: TrainMetrics,
     backend: Box<dyn Backend>,
+    /// Data-parallel executor; drives `step` when `cfg.threads > 1`.
+    executor: ParallelExecutor,
 }
 
 impl NativeTrainer {
+    /// A trainer on the default ([`crate::backend::NativeBackend`]) backend.
     pub fn new(cfg: NativeTrainConfig) -> Result<NativeTrainer> {
         NativeTrainer::with_backend(cfg, default_backend())
     }
 
+    /// A trainer over an explicit backend (validates config and dataset,
+    /// prewarms the model's conv plans at the configured batch size).
     pub fn with_backend(
         cfg: NativeTrainConfig,
         backend: Box<dyn Backend>,
@@ -80,6 +104,9 @@ impl NativeTrainer {
         }
         if cfg.batch == 0 || cfg.epochs == 0 || cfg.iters_per_epoch == 0 {
             bail!("batch/epochs/iters must be positive");
+        }
+        if cfg.threads == 0 {
+            bail!("threads must be positive (1 = single-threaded)");
         }
         if cfg.batch > spec.train_n || cfg.batch > spec.test_n {
             bail!(
@@ -105,6 +132,7 @@ impl NativeTrainer {
         let ds = SynthDataset::new(spec.clone(), cfg.seed);
         let loader = Loader::new(ds.clone(), Split::Train, cfg.batch);
         let test_loader = Loader::new(ds, Split::Test, cfg.batch);
+        let executor = ParallelExecutor::new(ExecConfig::with_threads(cfg.threads));
         Ok(NativeTrainer {
             cfg,
             model,
@@ -113,17 +141,20 @@ impl NativeTrainer {
             layers,
             metrics: TrainMetrics::default(),
             backend,
+            executor,
         })
     }
 
+    /// Name of the backend executing the conv ops.
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }
 
-    /// Total im2col builds across the model's conv plans — advances by
-    /// exactly `depth` per training step when the fused path is healthy.
+    /// Total im2col builds across the model's and the executor's conv
+    /// plans — advances by exactly `depth` per training step single-thread
+    /// (or `depth × workers` data-parallel) when the fused path is healthy.
     pub fn plan_cols_builds(&self) -> u64 {
-        self.model.plan_cols_builds()
+        self.model.plan_cols_builds() + self.executor.plan_cols_builds()
     }
 
     /// Iterations per epoch after capping to the dataset size.
@@ -131,15 +162,24 @@ impl NativeTrainer {
         self.cfg.iters_per_epoch.min(self.loader.batches_per_epoch()).max(1)
     }
 
-    /// One training step at drop rate `d`; returns (loss, acc).
+    /// One training step at drop rate `d`; returns (loss, acc). Routes
+    /// through the data-parallel executor when `cfg.threads > 1` (sharded
+    /// batch, globally-selected channels, tree-reduced gradients) and
+    /// through the serial [`SimpleCnn::train_step`] otherwise.
     pub fn step(&mut self, batch: &crate::data::Batch, d: f64) -> Result<(f64, f64)> {
-        let stats = self.model.train_step(
-            self.backend.as_ref(),
-            &batch.x,
-            &batch.y_class,
-            d,
-            self.cfg.lr as f32,
-        )?;
+        let lr = self.cfg.lr as f32;
+        let stats = if self.executor.threads() > 1 {
+            self.executor.train_step(
+                &mut self.model,
+                self.backend.as_ref(),
+                &batch.x,
+                &batch.y_class,
+                d,
+                lr,
+            )?
+        } else {
+            self.model.train_step(self.backend.as_ref(), &batch.x, &batch.y_class, d, lr)?
+        };
         Ok((stats.loss, stats.acc))
     }
 
@@ -222,6 +262,31 @@ mod tests {
     fn rejects_bce_and_unknown_datasets() {
         assert!(NativeTrainer::new(NativeTrainConfig::quick("celeba", 1, 1)).is_err());
         assert!(NativeTrainer::new(NativeTrainConfig::quick("nope", 1, 1)).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_threads() {
+        let mut cfg = quick_cfg();
+        cfg.threads = 0;
+        let err = NativeTrainer::new(cfg).err().expect("must reject").to_string();
+        assert!(err.contains("threads"), "{err}");
+    }
+
+    #[test]
+    fn multithreaded_run_matches_single_thread_loss() {
+        let t1_cfg = quick_cfg();
+        let mut t4_cfg = quick_cfg();
+        t4_cfg.threads = 4;
+        let mut t1 = NativeTrainer::new(t1_cfg).unwrap();
+        let mut t4 = NativeTrainer::new(t4_cfg).unwrap();
+        let (l1, _) = t1.run().unwrap();
+        let (l4, _) = t4.run().unwrap();
+        // same schedule, same data, same selection semantics — only float
+        // re-association differs between the serial and sharded paths
+        assert!((l1 - l4).abs() < 1e-4, "test loss {l1} vs {l4}");
+        assert_eq!(t1.metrics.flops_actual, t4.metrics.flops_actual, "same FLOPs ledger");
+        // the parallel path builds its cols in the executor's worker plans
+        assert!(t4.plan_cols_builds() > 0);
     }
 
     #[test]

@@ -19,18 +19,26 @@ use crate::util::rng::Pcg;
 
 /// A live training job: compiled graphs + mutable state leaves.
 pub struct Trainer {
+    /// The configuration this job was built from.
     pub cfg: TrainConfig,
+    /// Compiled training-step graph.
     pub train_graph: Arc<LoadedGraph>,
+    /// Compiled eval graph, when the artifact provides one.
     pub eval_graph: Option<Arc<LoadedGraph>>,
     /// State leaves keyed by manifest input name (params, opt, bn).
     pub state: HashMap<String, xla::Literal>,
+    /// Train-split batch loader.
     pub loader: Loader,
+    /// Test-split batch loader (evaluation).
     pub test_loader: Loader,
+    /// Loss/acc curves, FLOPs ledger, wall-clock.
     pub metrics: TrainMetrics,
     rng: Pcg,
 }
 
 impl Trainer {
+    /// Load the artifact's `_train`/`_eval` graphs, initial state and
+    /// data plane for `cfg`.
     pub fn new(engine: &Engine, cfg: TrainConfig) -> Result<Trainer> {
         let train_graph = engine.load(&format!("{}_train", cfg.artifact))?;
         let eval_graph = engine.load(&format!("{}_eval", cfg.artifact)).ok();

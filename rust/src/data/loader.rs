@@ -6,6 +6,7 @@ use std::thread;
 
 use super::{Label, Loss, Split, SynthDataset};
 use crate::util::rng::Pcg;
+use crate::util::shard::shard_ranges;
 
 /// One ready-to-execute batch in the AOT step's layout.
 #[derive(Debug, Clone)]
@@ -16,26 +17,62 @@ pub struct Batch {
     pub y_class: Vec<i32>,
     /// BCE labels, f32 multi-hot (empty when loss is CE).
     pub y_multi: Vec<f32>,
+    /// Number of examples in this batch.
     pub batch_size: usize,
+}
+
+impl Batch {
+    /// Split into at most `parts` contiguous sub-batches, aligned with the
+    /// parallel executor's shard boundaries ([`shard_ranges`] is the single
+    /// source of truth for both). Non-divisible sizes are handled — shard
+    /// sizes differ by at most one, never panicking — and `parts` beyond
+    /// the batch size yields one shard per example. Examples keep their
+    /// order, so concatenating the shards reproduces `self`.
+    pub fn shard(&self, parts: usize) -> Vec<Batch> {
+        let bt = self.batch_size;
+        // per-example strides, robust to whichever label family is empty
+        let nx = if bt == 0 { 0 } else { self.x.len() / bt };
+        let nc = if bt == 0 { 0 } else { self.y_class.len() / bt };
+        let nm = if bt == 0 { 0 } else { self.y_multi.len() / bt };
+        shard_ranges(bt, parts)
+            .into_iter()
+            .map(|r| Batch {
+                x: self.x[r.start * nx..r.end * nx].to_vec(),
+                y_class: self.y_class[r.start * nc..r.end * nc].to_vec(),
+                y_multi: self.y_multi[r.start * nm..r.end * nm].to_vec(),
+                batch_size: r.end - r.start,
+            })
+            .collect()
+    }
 }
 
 /// Deterministic batch loader. `normalize` applies per-dataset whitening
 /// (mean/std estimated once from the first 64 training examples, mirroring
 /// the paper's per-dataset normalization).
 pub struct Loader {
+    /// The procedural dataset batches are drawn from.
     pub ds: SynthDataset,
+    /// Which split this loader serves.
     pub split: Split,
+    /// Examples per batch.
     pub batch_size: usize,
     mean: f32,
     std: f32,
 }
 
 impl Loader {
+    /// A loader over `split` of `ds`, estimating normalization stats once.
     pub fn new(ds: SynthDataset, split: Split, batch_size: usize) -> Loader {
         let (mean, std) = estimate_stats(&ds);
         Loader { ds, split, batch_size, mean, std }
     }
 
+    /// Full batches per epoch: ⌊split len / batch size⌋. **The tail
+    /// partial batch is dropped** — an epoch visits `len − len %
+    /// batch_size` examples, matching the AOT step's fixed batch geometry.
+    /// (The shuffled order changes per epoch, so over a run every example
+    /// is still seen.) Sub-batch slicing, by contrast, handles
+    /// non-divisible sizes: see [`Batch::shard`].
     pub fn batches_per_epoch(&self) -> usize {
         self.ds.len(self.split) / self.batch_size
     }
@@ -50,6 +87,7 @@ impl Loader {
         idx
     }
 
+    /// Materialize batch `b` of `order` (normalized images + labels).
     pub fn batch(&self, order: &[usize], b: usize) -> Batch {
         let lo = b * self.batch_size;
         let ids = &order[lo..lo + self.batch_size];
@@ -91,6 +129,7 @@ impl Loader {
         rx
     }
 
+    /// Loss family of the underlying dataset (CE or BCE).
     pub fn loss(&self) -> Loss {
         self.ds.spec.loss
     }
@@ -154,6 +193,45 @@ mod tests {
         let b = l.batch(&order, 0);
         assert_eq!(b.y_multi.len(), 4 * 40);
         assert!(b.y_class.is_empty());
+    }
+
+    #[test]
+    fn batch_shards_cover_and_concatenate_back() {
+        let l = loader("cifar10", 10); // 10 examples over 4 shards: 3,3,2,2
+        let order = l.epoch_order(0);
+        let b = l.batch(&order, 0);
+        let shards = b.shard(4);
+        assert_eq!(shards.iter().map(|s| s.batch_size).collect::<Vec<_>>(), vec![3, 3, 2, 2]);
+        let x: Vec<f32> = shards.iter().flat_map(|s| s.x.clone()).collect();
+        let y: Vec<i32> = shards.iter().flat_map(|s| s.y_class.clone()).collect();
+        assert_eq!(x, b.x, "shards must concatenate back to the batch");
+        assert_eq!(y, b.y_class);
+        assert!(shards.iter().all(|s| s.y_multi.is_empty()));
+    }
+
+    #[test]
+    fn batch_shard_handles_degenerate_part_counts() {
+        let l = loader("mnist", 3);
+        let b = l.batch(&l.epoch_order(1), 0);
+        assert_eq!(b.shard(1).len(), 1);
+        assert_eq!(b.shard(1)[0].x, b.x);
+        // more parts than examples: one shard per example, none empty
+        let per_example = b.shard(9);
+        assert_eq!(per_example.len(), 3);
+        assert!(per_example.iter().all(|s| s.batch_size == 1));
+        // parts = 0 clamps to a single shard
+        assert_eq!(b.shard(0).len(), 1);
+    }
+
+    #[test]
+    fn bce_batches_shard_multi_labels() {
+        let l = loader("celeba", 5);
+        let b = l.batch(&l.epoch_order(0), 0);
+        let shards = b.shard(2); // 3 + 2
+        assert_eq!(shards[0].y_multi.len(), 3 * 40);
+        assert_eq!(shards[1].y_multi.len(), 2 * 40);
+        let cat: Vec<f32> = shards.iter().flat_map(|s| s.y_multi.clone()).collect();
+        assert_eq!(cat, b.y_multi);
     }
 
     #[test]

@@ -23,26 +23,37 @@ pub enum Loss {
     Bce,
 }
 
+/// Dataset split identity (each split draws from its own RNG stream).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Split {
+    /// Training split (shuffled per epoch).
     Train,
+    /// Validation split (fixed order).
     Val,
+    /// Test split (fixed order).
     Test,
 }
 
 /// Geometry + statistics of one dataset.
 #[derive(Debug, Clone)]
 pub struct DatasetSpec {
+    /// Registry name ("mnist", "cifar10", ...).
     pub name: &'static str,
+    /// Image channels.
     pub channels: usize,
+    /// Image side length (square).
     pub img: usize,
+    /// Class count (CE) or attribute count (BCE).
     pub classes: usize,
+    /// Loss family the dataset trains under.
     pub loss: Loss,
     /// Paper Table 1 sizes (reported by `ssprop datasets`).
     pub paper_split: (usize, usize, usize),
-    /// Scaled sizes actually generated on this testbed.
+    /// Scaled train-split size actually generated on this testbed.
     pub train_n: usize,
+    /// Scaled validation-split size.
     pub val_n: usize,
+    /// Scaled test-split size.
     pub test_n: usize,
 }
 
@@ -76,6 +87,7 @@ pub fn registry() -> Vec<DatasetSpec> {
     ]
 }
 
+/// Look up a dataset by registry name.
 pub fn spec(name: &str) -> Option<DatasetSpec> {
     registry().into_iter().find(|d| d.name == name)
 }
@@ -83,7 +95,9 @@ pub fn spec(name: &str) -> Option<DatasetSpec> {
 /// Label for one example.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Label {
+    /// Single class index (CE datasets).
     Class(u32),
+    /// Multi-hot attribute bits (BCE datasets).
     Multi(Vec<f32>),
 }
 

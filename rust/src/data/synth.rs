@@ -34,8 +34,11 @@ struct AttrOverlay {
     amp: f32,
 }
 
+/// A procedural dataset: examples generated deterministically from
+/// (seed, split, index) — nothing to download, epochs replay bit-identically.
 #[derive(Debug, Clone)]
 pub struct SynthDataset {
+    /// Geometry/statistics of the dataset being stood in for.
     pub spec: DatasetSpec,
     seed: u64,
     templates: Vec<ClassTemplate>,
@@ -49,6 +52,7 @@ const TEX_AMP: f32 = 0.55;
 const BLOB_AMP: f32 = 0.9;
 
 impl SynthDataset {
+    /// A dataset whose class templates derive from (name, seed) only.
     pub fn new(spec: DatasetSpec, seed: u64) -> SynthDataset {
         // Templates depend only on (dataset name, seed): the same classes
         // look the same across runs and across train/val/test splits.
@@ -75,6 +79,7 @@ impl SynthDataset {
         SynthDataset { spec, seed, templates, overlays }
     }
 
+    /// Number of examples in `split` (testbed-scaled sizes).
     pub fn len(&self, split: Split) -> usize {
         match split {
             Split::Train => self.spec.train_n,
@@ -83,6 +88,7 @@ impl SynthDataset {
         }
     }
 
+    /// Whether `split` holds no examples.
     pub fn is_empty(&self, split: Split) -> bool {
         self.len(split) == 0
     }

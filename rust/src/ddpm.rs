@@ -23,16 +23,23 @@ use crate::util::rng::Pcg;
 
 /// DDPM training job (Table 5 rows).
 pub struct DdpmTrainer {
+    /// Compiled training-step graph.
     pub train_graph: Arc<LoadedGraph>,
+    /// Compiled ε-prediction graph driven by the sampling loop.
     pub denoise_graph: Arc<LoadedGraph>,
+    /// Looped-back state leaves (params, optimizer moments).
     pub state: HashMap<String, xla::Literal>,
+    /// Target-distribution dataset.
     pub ds: SynthDataset,
+    /// Loss curve + FLOPs ledger.
     pub metrics: TrainMetrics,
+    /// Learning rate fed to the step's `lr` input.
     pub lr: f64,
     rng: Pcg,
 }
 
 impl DdpmTrainer {
+    /// Load the `ddpm_<dataset>_{train,denoise}` graphs and initial state.
     pub fn new(engine: &Engine, dataset: &str, lr: f64, seed: u64) -> Result<DdpmTrainer> {
         let train_graph = engine.load(&format!("ddpm_{dataset}_train"))?;
         let denoise_graph = engine.load(&format!("ddpm_{dataset}_denoise"))?;

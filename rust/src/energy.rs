@@ -9,6 +9,7 @@
 /// Hardware profile for converting FLOPs to time and energy.
 #[derive(Debug, Clone, Copy)]
 pub struct DeviceProfile {
+    /// Human-readable device name.
     pub name: &'static str,
     /// Peak f32 throughput in FLOP/s.
     pub peak_flops: f64,
@@ -46,14 +47,20 @@ pub const CPU_TESTBED: DeviceProfile = DeviceProfile {
 /// Grid carbon intensity, gCO₂e per kWh (US average ~390).
 pub const GRID_GCO2_PER_KWH: f64 = 390.0;
 
+/// FLOPs converted to device-time, energy and carbon on one device.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EnergyReport {
+    /// The FLOPs this report accounts for.
     pub flops: f64,
+    /// Device-seconds at sustained throughput.
     pub seconds: f64,
+    /// Energy at the device's load power, kWh.
     pub kwh: f64,
+    /// Emissions at [`GRID_GCO2_PER_KWH`], grams CO₂-equivalent.
     pub gco2e: f64,
 }
 
+/// Convert `flops` into time/energy/carbon on device `dev`.
 pub fn estimate(flops: f64, dev: &DeviceProfile) -> EnergyReport {
     let seconds = flops / (dev.peak_flops * dev.utilization);
     let kwh = seconds * dev.watts / 3.6e6;
@@ -68,6 +75,7 @@ pub fn rnd_phase_savings(runs: usize, flops_per_run: f64, saving_frac: f64,
     estimate(runs as f64 * flops_per_run * saving_frac, dev)
 }
 
+/// Human-readable FLOPs (MFLOPs → PFLOPs autoscaling).
 pub fn fmt_flops(f: f64) -> String {
     if f >= 1e15 {
         format!("{:.2} PFLOPs", f / 1e15)

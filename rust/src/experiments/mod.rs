@@ -28,9 +28,13 @@ use crate::schedule::{DropScheduler, Schedule};
 /// Shared scale knobs for all experiment drivers.
 #[derive(Debug, Clone, Copy)]
 pub struct Scale {
+    /// Epochs per run.
     pub epochs: usize,
+    /// Iterations per epoch.
     pub iters_per_epoch: usize,
+    /// Base seed for data order and init.
     pub seed: u64,
+    /// Learning rate.
     pub lr: f64,
 }
 

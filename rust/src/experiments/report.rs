@@ -7,12 +7,16 @@ use crate::util::json::{arr, Json};
 
 /// Simple column-aligned markdown table.
 pub struct Table {
+    /// Heading printed above the table.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows (each the same arity as `headers`).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given title and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -21,11 +25,13 @@ impl Table {
         }
     }
 
+    /// Append a row (panics on arity mismatch).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);
     }
 
+    /// Render as column-aligned markdown.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for r in &self.rows {
@@ -54,6 +60,7 @@ impl Table {
         out
     }
 
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }
@@ -77,18 +84,22 @@ impl Table {
     }
 }
 
+/// Format with 2 decimal places.
 pub fn f2(v: f64) -> String {
     format!("{v:.2}")
 }
 
+/// Format with 3 decimal places.
 pub fn f3(v: f64) -> String {
     format!("{v:.3}")
 }
 
+/// Format with 4 decimal places.
 pub fn f4(v: f64) -> String {
     format!("{v:.4}")
 }
 
+/// Format a fraction as a percentage with 1 decimal place.
 pub fn pct(v: f64) -> String {
     format!("{:.1}%", v * 100.0)
 }

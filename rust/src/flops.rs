@@ -12,10 +12,15 @@
 /// One convolution layer's geometry (backward-relevant fields).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ConvLayer {
+    /// Input channels.
     pub cin: usize,
+    /// Output channels.
     pub cout: usize,
+    /// Kernel size (square).
     pub k: usize,
+    /// Output height.
     pub hout: usize,
+    /// Output width.
     pub wout: usize,
     /// BatchNorm after this conv is included in Eq. 7 accounting.
     pub counted_bn: bool,
@@ -24,6 +29,7 @@ pub struct ConvLayer {
 /// A model's conv inventory plus auxiliary normalization/dropout layers.
 #[derive(Debug, Clone, Default)]
 pub struct LayerSet {
+    /// Convolution layers, network order.
     pub convs: Vec<ConvLayer>,
     /// (C, H, W) of standalone Dropout layers (Eq. 8).
     pub dropouts: Vec<(usize, usize, usize)>,
@@ -116,12 +122,16 @@ impl LayerSet {
 // full-width paper models (Tables 4–7 parity)
 // ---------------------------------------------------------------------------
 
+/// ResNet block family.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Block {
+    /// Two 3×3 convs (ResNet-18/26/34).
     Basic,
+    /// 1×1 → 3×3 → 1×1 with 4× expansion (ResNet-50).
     Bottleneck,
 }
 
+/// Block family + stage depths for a named ResNet architecture.
 pub fn resnet_config(arch: &str) -> Option<(Block, [usize; 4])> {
     Some(match arch {
         "resnet18" => (Block::Basic, [2, 2, 2, 2]),

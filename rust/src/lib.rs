@@ -35,8 +35,12 @@
 //!   [`runtime::EngineError`] stay available for artifact discovery either
 //!   way.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record of every table and figure.
+//! See `docs/ARCHITECTURE.md` for the layer map and the data-parallel
+//! execution design.
+
+// Every public item must carry rustdoc; CI denies rustdoc warnings
+// (`cargo doc --no-deps -p ssprop` with RUSTDOCFLAGS="-D warnings").
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod coordinator;

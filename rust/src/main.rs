@@ -21,12 +21,14 @@ USAGE: ssprop <command> [--flags]
 native commands (no artifacts needed; pure-Rust backend):
   quickstart   train a SimpleCNN with the paper's scheduler and print the
                FLOPs/energy ledger   [--dataset cifar10] [--epochs 4]
-               [--iters 24] [--target-drop 0.8] [--seed 0]
+               [--iters 24] [--target-drop 0.8] [--seed 0] [--threads 1]
   train-native full native training  --dataset cifar10 [--depth 2] [--width 8]
                [--batch 16] [--epochs 3] [--iters 16] [--lr 0.3]
                [--schedule epoch-bar|constant|linear|cosine|bar|iter-bar|warmup-bar]
-               [--target-drop 0.8] [--period 2] [--seed 0]
+               [--target-drop 0.8] [--period 2] [--seed 0] [--threads 1]
                [--save ck.tstore] [--verbose]
+               (--threads N shards each batch across N workers with
+               deterministic gradient reduction)
   datasets     print Table 1 (dataset geometry)
   presets      print Tables 2/3 (hyperparameters)
   flops        print FLOPs parity + Eq.10/11 lower-bound tables
@@ -83,6 +85,16 @@ fn parse_horizon_and_target(
     Ok((epochs, iters, target))
 }
 
+/// Parse `--threads` (default 1 = single-threaded), rejecting 0 here so
+/// the CLI fails with a clean message instead of a constructor error.
+fn parse_threads(args: &Args) -> Result<usize> {
+    let threads = args.get_usize("threads", 1);
+    if threads == 0 {
+        bail!("--threads must be positive (1 = single-threaded)");
+    }
+    Ok(threads)
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
@@ -116,6 +128,7 @@ fn cmd_quickstart(args: &Args) -> Result<()> {
     let (epochs, iters, target) = parse_horizon_and_target(args, 4, 24)?;
     let mut cfg = NativeTrainConfig::quick(&dataset, epochs, iters);
     cfg.seed = args.get_u64("seed", 0);
+    cfg.threads = parse_threads(args)?;
     cfg.scheduler =
         DropScheduler::new(Schedule::EpochBar { period_epochs: 2 }, target, epochs, iters);
     cfg.verbose = true;
@@ -141,6 +154,7 @@ fn cmd_train_native(args: &Args) -> Result<()> {
     cfg.batch = args.get_usize("batch", cfg.batch);
     cfg.lr = args.get_f64("lr", cfg.lr);
     cfg.seed = args.get_u64("seed", 0);
+    cfg.threads = parse_threads(args)?;
     cfg.scheduler = DropScheduler::new(schedule, target, epochs, iters);
     cfg.verbose = args.has_flag("verbose") || args.get("verbose").is_some();
 
@@ -157,6 +171,7 @@ fn cmd_train_native(args: &Args) -> Result<()> {
 fn print_native_summary(t: &NativeTrainer, loss: f64, acc: f64) {
     let m = &t.metrics;
     println!("\nbackend          {}", t.backend_name());
+    println!("threads          {}", t.cfg.threads);
     println!("dataset          {} (SimpleCNN d{} w{})", t.cfg.dataset, t.cfg.depth, t.cfg.width);
     println!("final test loss  {loss:.4}");
     println!("final test acc   {acc:.4}");

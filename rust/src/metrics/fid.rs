@@ -13,6 +13,7 @@
 use crate::metrics::linalg::{sqrtm_psd, Mat};
 use crate::util::rng::Pcg;
 
+/// Dimensionality of the random-projection feature space.
 pub const FEATURE_DIM: usize = 24;
 
 /// Fixed random-projection feature extractor (deterministic per seed+shape).
@@ -23,6 +24,7 @@ pub struct FeatureExtractor {
 }
 
 impl FeatureExtractor {
+    /// An extractor for flattened images of `input_dim` pixels.
     pub fn new(input_dim: usize, seed: u64) -> FeatureExtractor {
         let mut rng = Pcg::new(seed ^ 0xF1D, 23);
         let scale = (2.0 / input_dim as f32).sqrt();
@@ -31,6 +33,7 @@ impl FeatureExtractor {
         FeatureExtractor { input_dim, w, b }
     }
 
+    /// Project one flattened image into the [`FEATURE_DIM`] feature space.
     pub fn features(&self, img: &[f32]) -> Vec<f64> {
         assert_eq!(img.len(), self.input_dim);
         (0..FEATURE_DIM)

@@ -5,15 +5,19 @@
 /// Row-major square matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {
+    /// Side length.
     pub n: usize,
+    /// Row-major entries, length n².
     pub a: Vec<f64>,
 }
 
 impl Mat {
+    /// The n×n zero matrix.
     pub fn zeros(n: usize) -> Mat {
         Mat { n, a: vec![0.0; n * n] }
     }
 
+    /// The n×n identity matrix.
     pub fn eye(n: usize) -> Mat {
         let mut m = Mat::zeros(n);
         for i in 0..n {
@@ -22,6 +26,7 @@ impl Mat {
         m
     }
 
+    /// Dense product `self · other` (same dimensions).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.n, other.n);
         let n = self.n;
@@ -40,6 +45,7 @@ impl Mat {
         out
     }
 
+    /// The transposed matrix.
     pub fn transpose(&self) -> Mat {
         let n = self.n;
         let mut out = Mat::zeros(n);
@@ -51,10 +57,12 @@ impl Mat {
         out
     }
 
+    /// Sum of the diagonal.
     pub fn trace(&self) -> f64 {
         (0..self.n).map(|i| self[(i, i)]).sum()
     }
 
+    /// Average A with Aᵀ in place (clean up numerical asymmetry).
     pub fn symmetrize(&mut self) {
         let n = self.n;
         for i in 0..n {

@@ -11,23 +11,38 @@ use crate::util::json::Json;
 /// Input/output role taxonomy (mirrors python/compile/steps.py).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Role {
+    /// Model parameter leaf (looped-back state).
     Param,
+    /// Optimizer moment leaf (looped-back state).
     Opt,
+    /// BatchNorm running statistic (looped-back state).
     Bn,
+    /// Input images.
     DataX,
+    /// Input labels.
     DataY,
+    /// Learning-rate scalar.
     Lr,
+    /// ssProp drop-rate scalar.
     DropRate,
+    /// Runtime Dropout-rate scalar.
     DropoutRate,
+    /// RNG key, (2,) u32.
     Key,
+    /// Diffusion timestep (DDPM steps).
     T,
+    /// Loss output scalar.
     Loss,
+    /// Accuracy output scalar.
     Acc,
+    /// Sampled noise (DDPM steps).
     Eps,
+    /// Anything the runtime routes opaquely.
     Other,
 }
 
 impl Role {
+    /// Parse a manifest role string (unknown strings map to [`Role::Other`]).
     pub fn parse(s: &str) -> Role {
         match s {
             "param" => Role::Param,
@@ -53,34 +68,55 @@ impl Role {
     }
 }
 
+/// One input or output of a compiled step.
 #[derive(Debug, Clone)]
 pub struct IoSpec {
+    /// Leaf name, e.g. `param['conv0.w']`.
     pub name: String,
+    /// Routing role.
     pub role: Role,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Dtype name ("f32", "i32", "u32").
     pub dtype: String,
     /// For outputs: index of the input this output feeds next iteration (-1 none).
     pub feeds_input: i64,
 }
 
+/// A compiled artifact's manifest (one JSON per artifact).
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Artifact name, e.g. "resnet18_cifar10_train".
     pub name: String,
+    /// Step kind ("train", "eval", "denoise", ...).
     pub kind: String,
+    /// Model architecture name.
     pub model: String,
+    /// Dataset the step was lowered for.
     pub dataset: String,
+    /// Batch size baked into the graph.
     pub batch: usize,
+    /// Loss family name ("ce" / "bce" / "mse").
     pub loss: String,
+    /// Class count.
     pub classes: usize,
+    /// Image side length.
     pub img: usize,
+    /// Image channels.
     pub channels: usize,
+    /// Diffusion timesteps (0 for classifiers).
     pub timesteps: usize,
+    /// Width multiplier the model was scaled by.
     pub width_mult: f64,
+    /// Step inputs, execution order.
     pub inputs: Vec<IoSpec>,
+    /// Step outputs, execution order.
     pub outputs: Vec<IoSpec>,
+    /// Conv inventory for FLOPs accounting.
     pub layers: LayerSet,
     /// DDPM beta schedule (empty for classifiers).
     pub alpha_bar: Vec<f64>,
+    /// DDPM per-step betas (empty for classifiers).
     pub betas: Vec<f64>,
 }
 
@@ -100,12 +136,14 @@ fn parse_io(j: &Json) -> Result<IoSpec> {
 }
 
 impl Manifest {
+    /// Load and parse a manifest JSON file.
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Manifest> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("read {:?}", path.as_ref()))?;
         Manifest::parse(&text)
     }
 
+    /// Parse a manifest from JSON text (validates `feeds_input` ranges).
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = Json::parse(text).map_err(anyhow::Error::msg)?;
         let inputs = j
@@ -187,10 +225,12 @@ impl Manifest {
         })
     }
 
+    /// Index of the first input with `role`.
     pub fn input_index(&self, role: Role) -> Option<usize> {
         self.inputs.iter().position(|i| i.role == role)
     }
 
+    /// Index of the first output with `role`.
     pub fn output_index(&self, role: Role) -> Option<usize> {
         self.outputs.iter().position(|o| o.role == role)
     }

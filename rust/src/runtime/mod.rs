@@ -6,7 +6,7 @@
 //! `ArtifactsMissing` to a skip instead of failing on bare runners.
 //!
 //! Behind the `pjrt` cargo feature: the PJRT engine itself
-//! ([`Engine`]/[`LoadedGraph`] in [`pjrt`]), which loads `artifacts/*.hlo.txt`
+//! (`Engine`/`LoadedGraph` in the `pjrt` module), which loads `artifacts/*.hlo.txt`
 //! produced by the Python compile path, compiles them on the CPU PJRT
 //! client, and executes them from the coordinator's hot loop. Python never
 //! runs here.

@@ -22,14 +22,19 @@ use crate::tensorstore::{Dtype, Tensor};
 
 /// A compiled graph plus its manifest.
 pub struct LoadedGraph {
+    /// Artifact name the graph was loaded from.
     pub name: String,
+    /// The compiled PJRT executable.
     pub exe: xla::PjRtLoadedExecutable,
+    /// The artifact's manifest (I/O specs, geometry, FLOPs inventory).
     pub manifest: Manifest,
 }
 
 /// Engine: one PJRT client + an executable cache keyed by artifact name.
 pub struct Engine {
+    /// The CPU PJRT client graphs compile against.
     pub client: xla::PjRtClient,
+    /// Directory holding `*.hlo.txt` + `*.manifest.json` artifacts.
     pub artifacts_dir: PathBuf,
     cache: Mutex<HashMap<String, Arc<LoadedGraph>>>,
 }
@@ -52,6 +57,7 @@ impl Engine {
         Engine::new(dir)
     }
 
+    /// Engine over an explicit artifacts directory.
     pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Engine> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
         Ok(Engine {
@@ -142,6 +148,7 @@ impl LoadedGraph {
 // host tensor <-> literal bridge
 // ---------------------------------------------------------------------------
 
+/// Convert a host [`Tensor`] into an `xla::Literal`.
 pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
     let ty = match t.dtype {
         Dtype::F32 => xla::ElementType::F32,
@@ -152,6 +159,7 @@ pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
         .map_err(|e| anyhow::anyhow!("literal from tensor: {e:?}"))
 }
 
+/// Convert an `xla::Literal` back into a host [`Tensor`].
 pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
     let shape = l.array_shape().map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
     let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -180,22 +188,26 @@ pub fn f32_literal(shape: &[usize], vals: &[f32]) -> Result<xla::Literal> {
         .map_err(|e| anyhow::anyhow!("f32 literal: {e:?}"))
 }
 
+/// i32 literal helper for hot-path input construction.
 pub fn i32_literal(shape: &[usize], vals: &[i32]) -> Result<xla::Literal> {
     let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, &bytes)
         .map_err(|e| anyhow::anyhow!("i32 literal: {e:?}"))
 }
 
+/// u32 literal helper for hot-path input construction.
 pub fn u32_literal(shape: &[usize], vals: &[u32]) -> Result<xla::Literal> {
     let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U32, shape, &bytes)
         .map_err(|e| anyhow::anyhow!("u32 literal: {e:?}"))
 }
 
+/// Scalar f32 literal (shape `[]`).
 pub fn scalar_f32(v: f32) -> Result<xla::Literal> {
     f32_literal(&[], &[v])
 }
 
+/// Read a scalar f32 back out of a literal.
 pub fn literal_scalar_f32(l: &xla::Literal) -> Result<f32> {
     l.get_first_element::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
 }

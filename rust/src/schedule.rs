@@ -14,20 +14,39 @@
 //!   * EpochBar{period_epochs}: the paper's deployed schedule — alternate
 //!     dense / D* epochs (period 2 ⇒ epochs 1,3,5,… dense; 2,4,6,… at D*).
 
+/// Drop-rate schedule shape (see module docs for the formulas).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Schedule {
+    /// d(t) = D* for every iteration.
     Constant,
+    /// Linear ramp 0 → D* over the horizon.
     Linear,
+    /// Cosine ramp 0 → D* over the horizon.
     Cosine,
+    /// Dense first half, D* second half.
     Bar,
-    IterPeriodic { period: usize },
-    EpochBar { period_epochs: usize },
+    /// Bar wave alternating every `period` iterations (Fig. 2d).
+    IterPeriodic {
+        /// Half-period in iterations.
+        period: usize,
+    },
+    /// The paper's deployed schedule: alternate dense / D* epochs.
+    EpochBar {
+        /// Full period in epochs (2 ⇒ dense, D*, dense, D*, …).
+        period_epochs: usize,
+    },
     /// Paper §Conclusion future work (1): dense warm-up for the first
     /// `warmup_epochs`, then the paper's 2-epoch bar at the target rate.
-    WarmupBar { warmup_epochs: usize, period_epochs: usize },
+    WarmupBar {
+        /// Dense epochs before the bar starts.
+        warmup_epochs: usize,
+        /// Bar period in epochs after warm-up.
+        period_epochs: usize,
+    },
 }
 
 impl Schedule {
+    /// Parse a CLI schedule name (+ its `--period` argument, where used).
     pub fn parse(name: &str, period: usize) -> Option<Schedule> {
         Some(match name {
             "constant" => Schedule::Constant,
@@ -45,14 +64,19 @@ impl Schedule {
 /// A fully-specified drop scheduler over a training horizon.
 #[derive(Debug, Clone, Copy)]
 pub struct DropScheduler {
+    /// Schedule shape.
     pub schedule: Schedule,
     /// Target (maximum) drop rate D* in [0, 1).
     pub target: f64,
+    /// Training horizon, epochs.
     pub total_epochs: usize,
+    /// Training horizon, iterations per epoch.
     pub iters_per_epoch: usize,
 }
 
 impl DropScheduler {
+    /// A scheduler over `total_epochs × iters_per_epoch` iterations
+    /// (asserts `target` ∈ [0, 1) and a positive horizon).
     pub fn new(
         schedule: Schedule,
         target: f64,

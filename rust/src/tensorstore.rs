@@ -12,14 +12,19 @@ use crate::util::json::{arr, num, obj, s, Json};
 
 const MAGIC: &[u8; 8] = b"TSTORE01";
 
+/// Element type of a stored tensor (all 4-byte, little-endian).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
+    /// 32-bit unsigned integer.
     U32,
 }
 
 impl Dtype {
+    /// Wire name used in headers ("f32" / "i32" / "u32").
     pub fn name(self) -> &'static str {
         match self {
             Dtype::F32 => "f32",
@@ -27,6 +32,7 @@ impl Dtype {
             Dtype::U32 => "u32",
         }
     }
+    /// Parse a wire name back into a dtype.
     pub fn from_name(n: &str) -> Result<Dtype> {
         Ok(match n {
             "f32" => Dtype::F32,
@@ -35,6 +41,7 @@ impl Dtype {
             other => bail!("unsupported dtype {other:?}"),
         })
     }
+    /// Bytes per element.
     pub fn size(self) -> usize {
         4
     }
@@ -43,12 +50,16 @@ impl Dtype {
 /// A host tensor: raw little-endian bytes + shape + dtype.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Element type.
     pub dtype: Dtype,
+    /// Dimensions (empty = scalar).
     pub shape: Vec<usize>,
+    /// Raw little-endian element bytes.
     pub data: Vec<u8>,
 }
 
 impl Tensor {
+    /// An f32 tensor from values (asserts shape/value-count agreement).
     pub fn from_f32(shape: Vec<usize>, vals: &[f32]) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), vals.len());
         let mut data = Vec::with_capacity(vals.len() * 4);
@@ -58,6 +69,7 @@ impl Tensor {
         Tensor { dtype: Dtype::F32, shape, data }
     }
 
+    /// An i32 tensor from values (asserts shape/value-count agreement).
     pub fn from_i32(shape: Vec<usize>, vals: &[i32]) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), vals.len());
         let mut data = Vec::with_capacity(vals.len() * 4);
@@ -67,6 +79,7 @@ impl Tensor {
         Tensor { dtype: Dtype::I32, shape, data }
     }
 
+    /// A u32 tensor from values (asserts shape/value-count agreement).
     pub fn from_u32(shape: Vec<usize>, vals: &[u32]) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), vals.len());
         let mut data = Vec::with_capacity(vals.len() * 4);
@@ -76,24 +89,29 @@ impl Tensor {
         Tensor { dtype: Dtype::U32, shape, data }
     }
 
+    /// Element count (product of the shape; 1 for scalars).
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Whether the tensor holds zero elements (some dimension is 0).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Decode as f32 values (asserts the dtype).
     pub fn to_f32(&self) -> Vec<f32> {
         assert_eq!(self.dtype, Dtype::F32);
         self.data.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
     }
 
+    /// Decode as i32 values (asserts the dtype).
     pub fn to_i32(&self) -> Vec<i32> {
         assert_eq!(self.dtype, Dtype::I32);
         self.data.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
     }
 
+    /// Decode as u32 values (asserts the dtype).
     pub fn to_u32(&self) -> Vec<u32> {
         assert_eq!(self.dtype, Dtype::U32);
         self.data.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()

@@ -7,16 +7,24 @@
 use std::io::Write as _;
 use std::time::{Duration, Instant};
 
+/// Robust statistics of one benchmark's timed iterations.
 pub struct BenchResult {
+    /// Benchmark name (`native/...` convention).
     pub name: String,
+    /// Timed iterations actually run (budget-capped).
     pub iters: usize,
+    /// Median iteration time, nanoseconds.
     pub median_ns: f64,
+    /// Median absolute deviation, nanoseconds.
     pub mad_ns: f64,
+    /// Mean iteration time, nanoseconds.
     pub mean_ns: f64,
+    /// Fastest iteration, nanoseconds.
     pub min_ns: f64,
 }
 
 impl BenchResult {
+    /// The median as a [`Duration`].
     pub fn median(&self) -> Duration {
         Duration::from_nanos(self.median_ns as u64)
     }
@@ -75,6 +83,7 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Human-readable nanoseconds (ns → µs → ms → s autoscaling).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.0} ns")

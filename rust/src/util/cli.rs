@@ -5,14 +5,19 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: positionals, `--key value` options, bare `--flag`s.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Arguments without a leading `--`, in order (subcommand first).
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s (no value followed).
     pub flags: Vec<String>,
 }
 
 impl Args {
+    /// Parse an argv slice (excluding the program name).
     pub fn parse(argv: &[String]) -> Args {
         let mut out = Args::default();
         let mut i = 0;
@@ -35,30 +40,37 @@ impl Args {
         out
     }
 
+    /// Parse the process's own command line.
     pub fn from_env() -> Args {
         Args::parse(&std::env::args().skip(1).collect::<Vec<_>>())
     }
 
+    /// Raw value of option `key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Value of option `key`, or `default` when absent.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// `key` parsed as f64; `default` when absent or unparsable.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `key` parsed as usize; `default` when absent or unparsable.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `key` parsed as u64; `default` when absent or unparsable.
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Was the bare flag `--name` passed (with no value attached)?
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }

@@ -8,17 +8,25 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A parsed JSON value (numbers as f64, objects key-sorted).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any JSON number.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (BTreeMap keeps writer output deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (rejects trailing data).
     pub fn parse(s: &str) -> Result<Json, String> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.ws();
@@ -31,42 +39,51 @@ impl Json {
     }
 
     // -- typed accessors ----------------------------------------------------
+
+    /// Object field `key`, if this is an object holding it.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
             _ => None,
         }
     }
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The numeric value truncated to i64, if this is a number.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|f| f as i64)
     }
+    /// The numeric value as usize, if this is a non-negative number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|f| if f >= 0.0 { Some(f as usize) } else { None })
     }
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// The key-value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -74,16 +91,19 @@ impl Json {
         }
     }
 
-    /// `obj.str("key")?` style helpers that error with the key name.
+    /// `obj.str_field("key")?` style helper that errors with the key name.
     pub fn str_field(&self, key: &str) -> Result<&str, String> {
         self.get(key).and_then(Json::as_str).ok_or_else(|| format!("missing str field {key:?}"))
     }
+    /// Like [`Json::str_field`], for non-negative integer fields.
     pub fn usize_field(&self, key: &str) -> Result<usize, String> {
         self.get(key).and_then(Json::as_usize).ok_or_else(|| format!("missing int field {key:?}"))
     }
+    /// Like [`Json::str_field`], for numeric fields.
     pub fn f64_field(&self, key: &str) -> Result<f64, String> {
         self.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing num field {key:?}"))
     }
+    /// Like [`Json::str_field`], for array fields.
     pub fn arr_field(&self, key: &str) -> Result<&[Json], String> {
         self.get(key).and_then(Json::as_arr).ok_or_else(|| format!("missing arr field {key:?}"))
     }
@@ -135,16 +155,19 @@ impl std::fmt::Display for Json {
     }
 }
 
-/// Convenience constructors for building results/report JSON.
+/// Convenience constructor: an object from (key, value) pairs.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
+/// Convenience constructor: a number.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
+/// Convenience constructor: a string.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
+/// Convenience constructor: an array.
 pub fn arr(v: Vec<Json>) -> Json {
     Json::Arr(v)
 }

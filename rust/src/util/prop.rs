@@ -5,6 +5,7 @@
 
 use super::rng::Pcg;
 
+/// Default number of random cases per property.
 pub const DEFAULT_CASES: usize = 256;
 
 /// Run `prop` on `cases` random inputs drawn by `gen`. On failure, attempt

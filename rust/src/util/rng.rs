@@ -15,6 +15,8 @@ pub struct Pcg {
 const MUL: u128 = 0x2360ed051fc65da44385df649fccf645;
 
 impl Pcg {
+    /// A generator seeded on (seed, stream) — distinct streams are
+    /// independent sequences for the same seed.
     pub fn new(seed: u64, stream: u64) -> Self {
         let mut r = Pcg { state: 0, inc: ((stream as u128) << 1) | 1 };
         r.state = r.state.wrapping_add(seed as u128).wrapping_mul(MUL).wrapping_add(r.inc);
@@ -28,6 +30,7 @@ impl Pcg {
         Pcg::new(self.next_u64() ^ tag.wrapping_mul(0x9e3779b97f4a7c15), tag)
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
         // DXSM output permutation
@@ -39,6 +42,7 @@ impl Pcg {
         hi.wrapping_mul(lo)
     }
 
+    /// Next 32-bit output (high bits of [`Pcg::next_u64`]).
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
     }

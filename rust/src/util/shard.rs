@@ -1,0 +1,79 @@
+//! Deterministic contiguous partitioning, shared by the data plane (batch
+//! slicing) and the parallel executor (batch sharding). Keeping the split
+//! rule in one place guarantees `Batch::shard` and the executor agree on
+//! which examples land in which shard.
+
+use std::ops::Range;
+
+/// Split `0..n` into at most `parts` contiguous non-empty ranges whose
+/// lengths differ by at most one — the first `n % parts` ranges take the
+/// extra element, so non-divisible sizes shard without padding or panics.
+/// Returns fewer than `parts` ranges when `n < parts` (never an empty
+/// range) and no ranges at all when `n == 0`; `parts` is clamped to ≥ 1.
+pub fn shard_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let (base, extra) = (n / parts, n % parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Ranges must tile 0..n in order with no gaps or overlaps.
+    fn assert_covers(n: usize, parts: usize) {
+        let ranges = shard_ranges(n, parts);
+        let mut pos = 0;
+        for r in &ranges {
+            assert_eq!(r.start, pos, "gap/overlap at {r:?} (n={n}, parts={parts})");
+            assert!(r.end > r.start, "empty shard {r:?} (n={n}, parts={parts})");
+            pos = r.end;
+        }
+        assert_eq!(pos, n, "ranges must cover 0..{n}");
+    }
+
+    #[test]
+    fn divisible_split_is_even() {
+        let r = shard_ranges(8, 4);
+        assert_eq!(r, vec![0..2, 2..4, 4..6, 6..8]);
+    }
+
+    #[test]
+    fn remainder_goes_to_leading_shards() {
+        // 10 over 4: sizes 3,3,2,2 — lengths differ by at most one
+        let r = shard_ranges(10, 4);
+        assert_eq!(r, vec![0..3, 3..6, 6..8, 8..10]);
+    }
+
+    #[test]
+    fn more_parts_than_items_drops_empty_shards() {
+        let r = shard_ranges(2, 4);
+        assert_eq!(r, vec![0..1, 1..2]);
+    }
+
+    #[test]
+    fn zero_items_and_zero_parts() {
+        assert!(shard_ranges(0, 4).is_empty());
+        assert_eq!(shard_ranges(3, 0), vec![0..3], "parts clamps to 1");
+        assert_eq!(shard_ranges(3, 1), vec![0..3]);
+    }
+
+    #[test]
+    fn always_covers_without_gaps() {
+        for n in 0..40 {
+            for parts in 0..10 {
+                assert_covers(n, parts);
+            }
+        }
+    }
+}

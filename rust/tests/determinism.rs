@@ -1,0 +1,141 @@
+//! Determinism suite for the data-parallel executor (run in release mode
+//! by CI): repeated parallel runs must be **bit-identical** at any fixed
+//! worker count, a single-worker run must reproduce the serial
+//! `SimpleCnn::train_step` exactly, and multi-worker loss trajectories
+//! must track the serial one within accumulation tolerance (1e-5 over 10
+//! steps) — gradients differ only by float re-association, never by
+//! selection semantics (channel top-k is reduced globally across shards).
+
+use ssprop::backend::{
+    ExecConfig, NativeBackend, ParallelExecutor, SimpleCnn, SimpleCnnCfg, StepStats,
+};
+use ssprop::util::rng::Pcg;
+
+fn model() -> SimpleCnn {
+    SimpleCnn::new(SimpleCnnCfg { in_ch: 2, img: 12, classes: 4, depth: 3, width: 8, seed: 33 })
+}
+
+/// Ten fixed batches of `bt` examples (bt = 12 shards evenly over 1/2/4
+/// workers; the uneven 3/3/2/2 case uses bt = 10 over 4).
+fn batches(m: &SimpleCnn, bt: usize) -> Vec<(Vec<f32>, Vec<i32>)> {
+    let n = m.cfg.in_ch * m.cfg.img * m.cfg.img;
+    (0..10)
+        .map(|i| {
+            let mut rng = Pcg::new(0xD0_0D + i, 2);
+            let x = (0..bt * n).map(|_| rng.normal()).collect();
+            let y = (0..bt).map(|j| ((i as usize + j) % m.cfg.classes) as i32).collect();
+            (x, y)
+        })
+        .collect()
+}
+
+/// Every parameter of the model, flattened (bitwise comparison target).
+fn params(m: &SimpleCnn) -> Vec<f32> {
+    let mut out = Vec::new();
+    for cb in &m.convs {
+        out.extend_from_slice(&cb.w);
+        out.extend_from_slice(&cb.b);
+    }
+    out.extend_from_slice(&m.fc_w);
+    out.extend_from_slice(&m.fc_b);
+    out
+}
+
+/// The alternating dense/sparse schedule the trajectory tests use.
+fn drop_at(step: usize) -> f64 {
+    if step % 2 == 0 {
+        0.0
+    } else {
+        0.8
+    }
+}
+
+#[test]
+fn parallel_loss_trajectory_matches_serial_within_1e5() {
+    let be = NativeBackend::new();
+    let bt = 12;
+    let data = batches(&model(), bt);
+
+    let mut serial = model();
+    let mut want: Vec<StepStats> = Vec::new();
+    for (step, (x, y)) in data.iter().enumerate() {
+        want.push(serial.train_step(&be, x, y, drop_at(step), 0.05).unwrap());
+    }
+
+    for threads in [1usize, 2, 4] {
+        let mut m = model();
+        let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+        for (step, (x, y)) in data.iter().enumerate() {
+            let stats = exec.train_step(&mut m, &be, x, y, drop_at(step), 0.05).unwrap();
+            let (got, exp) = (stats.loss, want[step].loss);
+            assert!((got - exp).abs() < 1e-5, "t{threads} step {step}: loss {got} vs {exp}");
+            assert_eq!(
+                stats.kept_channels, want[step].kept_channels,
+                "t{threads} step {step}: kept-channel accounting must match serial"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_runs_are_bit_identical_at_every_thread_count() {
+    let be = NativeBackend::new();
+    let bt = 12;
+    let data = batches(&model(), bt);
+    for threads in [1usize, 2, 4] {
+        let run = || {
+            let mut m = model();
+            let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+            for (step, (x, y)) in data.iter().take(4).enumerate() {
+                exec.train_step(&mut m, &be, x, y, drop_at(step + 1), 0.05).unwrap();
+            }
+            params(&m)
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "t{threads}: repeated runs must be bit-identical");
+    }
+}
+
+#[test]
+fn single_worker_executor_reproduces_serial_bitwise() {
+    // With one shard the executor runs the exact serial computation (the
+    // helpers are shared code), so even the weights are bit-identical.
+    let be = NativeBackend::new();
+    let bt = 6;
+    let data = batches(&model(), bt);
+    let mut serial = model();
+    let mut parallel = model();
+    let mut exec = ParallelExecutor::new(ExecConfig::with_threads(1));
+    for (step, (x, y)) in data.iter().enumerate() {
+        let d = drop_at(step + 1); // start sparse: selection must agree too
+        let a = serial.train_step(&be, x, y, d, 0.05).unwrap();
+        let b = exec.train_step(&mut parallel, &be, x, y, d, 0.05).unwrap();
+        assert_eq!(a.loss, b.loss, "step {step} loss");
+        assert_eq!(a.kept_channels, b.kept_channels, "step {step} selection");
+        assert_eq!(params(&serial), params(&parallel), "step {step} weights");
+    }
+}
+
+#[test]
+fn uneven_shards_stay_deterministic_and_close_to_serial() {
+    // bt = 10 over 4 workers shards as 3/3/2/2 — the non-divisible path.
+    let be = NativeBackend::new();
+    let bt = 10;
+    let data = batches(&model(), bt);
+    let mut serial = model();
+    let mut m = model();
+    let mut exec = ParallelExecutor::new(ExecConfig::with_threads(4));
+    for (step, (x, y)) in data.iter().enumerate() {
+        let a = serial.train_step(&be, x, y, drop_at(step), 0.05).unwrap();
+        let b = exec.train_step(&mut m, &be, x, y, drop_at(step), 0.05).unwrap();
+        assert!((a.loss - b.loss).abs() < 1e-5, "step {step}: {} vs {}", a.loss, b.loss);
+        assert_eq!(a.kept_channels, b.kept_channels, "step {step}");
+    }
+    // and the uneven run is itself reproducible
+    let mut m2 = model();
+    let mut exec2 = ParallelExecutor::new(ExecConfig::with_threads(4));
+    for (step, (x, y)) in data.iter().enumerate() {
+        exec2.train_step(&mut m2, &be, x, y, drop_at(step), 0.05).unwrap();
+    }
+    assert_eq!(params(&m), params(&m2), "uneven sharding must be bit-reproducible");
+}
