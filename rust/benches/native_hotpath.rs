@@ -8,24 +8,43 @@
 //! Run: `cargo bench --bench native_hotpath`
 //!
 //! `--smoke` shrinks warmup/iterations/budget to a CI-sized run that still
-//! exercises every path (used by the CI release job).
+//! exercises every path (used by the CI release job). `--model SPEC`
+//! restricts the run to the data-parallel executor section for that model
+//! zoo preset (`simple-cnn-d4-w16`, `vgg-tiny`, `dropout-cnn-w8-p25`, ...)
+//! and tags the `native/{serial,parallel}_step_*` /
+//! `native/parallel_speedup_*` lines with the spec, so CI can compare the
+//! sharding win across architectures.
 
 use std::time::Duration;
 
 use ssprop::backend::im2col::im2col;
 use ssprop::backend::sparse::{select_channels, sparse_bwd_with_cols, SparseBwdWorkspace};
 use ssprop::backend::{
-    Backend, Conv2d, Conv2dPlan, ExecConfig, NativeBackend, ParallelExecutor, SimpleCnn,
-    SimpleCnnCfg,
+    build_model, parse_model_spec, Backend, Conv2d, Conv2dPlan, ExecConfig, NativeBackend,
+    ParallelExecutor, Sequential,
 };
 use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
 use ssprop::util::bench::{bench, report};
 use ssprop::util::rng::Pcg;
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let model_arg = argv
+        .iter()
+        .position(|a| a == "--model")
+        .and_then(|i| argv.get(i + 1))
+        .map(String::as_str);
     let (warm, iters, secs) = if smoke { (1, 3, 1) } else { (2, 20, 6) };
     let budget = Duration::from_secs(secs);
+
+    // With an explicit --model, run only the data-parallel executor
+    // section for that preset (CI invokes this once per zoo model).
+    if let Some(spec) = model_arg {
+        println!("== native backend hot path{} ==", if smoke { " (smoke)" } else { "" });
+        parallel_section(spec, warm, iters, budget);
+        return;
+    }
 
     let be = NativeBackend::new();
     println!("== native backend hot path{} ==", if smoke { " (smoke)" } else { "" });
@@ -120,35 +139,44 @@ fn main() {
         report(&r);
     }
 
-    // Data-parallel executor vs the serial step on a 4-layer SimpleCNN
-    // (cifar10-sized input). Each parallel step shards the batch over the
-    // worker count, runs the fused plan path per shard, and tree-reduces
-    // gradients; `native/parallel_speedup_*` is the serial/parallel median
-    // ratio (> 1 = the sharded step is faster on this machine).
-    println!("\n-- data-parallel executor (SimpleCNN d4 w16, 3x32x32, bt 32) --");
-    let pcfg = SimpleCnnCfg { in_ch: 3, img: 32, classes: 10, depth: 4, width: 16, seed: 11 };
-    let n_in = pcfg.in_ch * pcfg.img * pcfg.img;
+    parallel_section("simple-cnn-d4-w16", warm, iters, budget);
+}
+
+/// Data-parallel executor vs the serial step for one zoo preset on a
+/// cifar10-sized input (3x32x32, bt 32). Each parallel step shards the
+/// batch over the worker count, runs the layer graph per shard with
+/// globally-reduced channel selection, and tree-reduces gradients;
+/// `native/parallel_speedup_{spec}_*` is the serial/parallel median ratio
+/// (> 1 = the sharded step is faster on this machine).
+fn parallel_section(spec: &str, warm: usize, iters: usize, budget: Duration) {
+    let be = NativeBackend::new();
+    let parsed = parse_model_spec(spec).expect("--model spec");
+    let slug = parsed.canonical();
+    let build = || -> Sequential { build_model(&parsed, 3, 32, 10, 11).expect("zoo build") };
+    println!("\n-- data-parallel executor ({slug}, 3x32x32, bt 32) --");
+    let n_in = 3 * 32 * 32;
     let bt = 32;
     let mut prng = Pcg::new(17, 9);
     let px: Vec<f32> = (0..bt * n_in).map(|_| prng.normal()).collect();
-    let py: Vec<i32> = (0..bt).map(|i| (i % pcfg.classes) as i32).collect();
+    let py: Vec<i32> = (0..bt).map(|i| (i % 10) as i32).collect();
     for (label, d) in [("dense", 0.0f64), ("d80", 0.8)] {
-        let mut serial = SimpleCnn::new(pcfg);
-        let base = bench(&format!("native/serial_step_{label}"), warm, iters, budget, || {
+        let mut serial = build();
+        let name = format!("native/serial_step_{slug}_{label}");
+        let base = bench(&name, warm, iters, budget, || {
             serial.train_step(&be, &px, &py, d, 0.01).unwrap();
         });
         report(&base);
         for threads in [2usize, 4] {
-            let mut model = SimpleCnn::new(pcfg);
+            let mut model = build();
             let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
-            let name = format!("native/parallel_step_{label}_t{threads}");
+            let name = format!("native/parallel_step_{slug}_{label}_t{threads}");
             let r = bench(&name, warm, iters, budget, || {
                 exec.train_step(&mut model, &be, &px, &py, d, 0.01).unwrap();
             });
             report(&r);
             println!(
                 "{:<48} {:>11.2}x (serial / t{threads} median)",
-                format!("native/parallel_speedup_{label}_t{threads}"),
+                format!("native/parallel_speedup_{slug}_{label}_t{threads}"),
                 base.median_ns / r.median_ns
             );
         }

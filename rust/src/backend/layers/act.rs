@@ -1,0 +1,254 @@
+//! Activation layers: ReLU and (inverted) Dropout — the paper's
+//! compatibility claim is that ssProp composes with Dropout, so the layer
+//! graph carries a real Dropout whose masks are deterministic per
+//! (seed, step, global example), making sharded training reproduce the
+//! serial masks exactly.
+
+use anyhow::Result;
+
+use super::{BwdOut, FwdCtx, Layer, LayerWs, Selection, Shape};
+use crate::backend::Backend;
+use crate::flops::LayerSet;
+use crate::util::rng::Pcg;
+
+/// Elementwise `max(0, x)`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReLU;
+
+impl Layer for ReLU {
+    fn describe(&self) -> String {
+        "relu".to_string()
+    }
+
+    fn out_shape(&self, input: &Shape) -> Result<Shape> {
+        Ok(*input)
+    }
+
+    fn forward(
+        &self,
+        _be: &dyn Backend,
+        x: &[f32],
+        _bt: usize,
+        _ws: &mut LayerWs,
+        _ctx: &FwdCtx,
+    ) -> Vec<f32> {
+        x.iter().map(|&v| v.max(0.0)).collect()
+    }
+
+    fn backward(
+        &self,
+        _be: &dyn Backend,
+        x: &[f32],
+        g: &[f32],
+        _bt: usize,
+        _ws: &mut LayerWs,
+        _sel: Selection<'_>,
+        need_dx: bool,
+    ) -> BwdOut {
+        if !need_dx {
+            return BwdOut::default();
+        }
+        let dx = g.iter().zip(x).map(|(&gv, &xv)| if xv > 0.0 { gv } else { 0.0 }).collect();
+        BwdOut { dx, ..BwdOut::default() }
+    }
+}
+
+/// Inverted dropout: in training, each element is zeroed with probability
+/// `rate` and survivors are scaled by `1/(1-rate)`; in eval it is the
+/// identity. The mask for a given (step, global example) is a pure
+/// function of the layer seed, so any batch sharding reproduces it.
+#[derive(Debug, Clone)]
+pub struct Dropout {
+    /// Drop probability in [0, 1).
+    rate: f64,
+    /// Per-example activation shape (identity geometry; kept for the
+    /// Eq. 8 FLOPs ledger).
+    shape: Shape,
+    /// Mask stream seed (distinct per dropout layer in a graph).
+    seed: u64,
+}
+
+impl Dropout {
+    /// A dropout layer at `rate` over activations of `shape`, drawing its
+    /// masks from `seed`'s stream.
+    pub fn new(rate: f64, shape: Shape, seed: u64) -> Dropout {
+        assert!((0.0..1.0).contains(&rate), "dropout rate must be in [0, 1), got {rate}");
+        Dropout { rate, shape, seed }
+    }
+
+    /// The configured drop probability.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+}
+
+impl Layer for Dropout {
+    fn describe(&self) -> String {
+        format!("dropout p{:.2}", self.rate)
+    }
+
+    fn out_shape(&self, input: &Shape) -> Result<Shape> {
+        if *input != self.shape {
+            anyhow::bail!("dropout built for {:?}, got {input:?}", self.shape);
+        }
+        Ok(*input)
+    }
+
+    fn forward(
+        &self,
+        _be: &dyn Backend,
+        x: &[f32],
+        bt: usize,
+        ws: &mut LayerWs,
+        ctx: &FwdCtx,
+    ) -> Vec<f32> {
+        if !ctx.train || self.rate == 0.0 {
+            ws.mask.clear();
+            return x.to_vec();
+        }
+        let n = self.shape.volume();
+        let scale = (1.0 / (1.0 - self.rate)) as f32;
+        let p = self.rate as f32;
+        ws.mask.clear();
+        ws.mask.resize(bt * n, 0.0);
+        for b in 0..bt {
+            // One stream per (step, global example): sharded forwards
+            // reproduce the serial masks regardless of shard boundaries.
+            let example = (ctx.example_offset + b) as u64;
+            let stream_seed = self.seed ^ ctx.step.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let mut rng = Pcg::new(stream_seed, example);
+            let row = &mut ws.mask[b * n..][..n];
+            for m in row.iter_mut() {
+                *m = if rng.uniform() < p { 0.0 } else { scale };
+            }
+        }
+        x.iter().zip(&ws.mask).map(|(&v, &m)| v * m).collect()
+    }
+
+    fn backward(
+        &self,
+        _be: &dyn Backend,
+        _x: &[f32],
+        g: &[f32],
+        _bt: usize,
+        ws: &mut LayerWs,
+        _sel: Selection<'_>,
+        need_dx: bool,
+    ) -> BwdOut {
+        if !need_dx {
+            return BwdOut::default();
+        }
+        let dx = if ws.mask.is_empty() {
+            g.to_vec()
+        } else {
+            g.iter().zip(&ws.mask).map(|(&gv, &m)| gv * m).collect()
+        };
+        BwdOut { dx, ..BwdOut::default() }
+    }
+
+    fn account_flops(&self, set: &mut LayerSet) {
+        let dims = match self.shape {
+            Shape::Spatial { c, h, w } => (c, h, w),
+            Shape::Flat { features } => (features, 1, 1),
+        };
+        set.dropouts.push(dims);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+
+    fn ctx(train: bool, step: u64, offset: usize) -> FwdCtx {
+        FwdCtx { train, step, example_offset: offset }
+    }
+
+    #[test]
+    fn relu_forward_backward() {
+        let be = NativeBackend::new();
+        let r = ReLU;
+        let mut ws = LayerWs::default();
+        let x = vec![-1.0, 0.0, 2.0, -0.5];
+        let y = r.forward(&be, &x, 2, &mut ws, &ctx(true, 0, 0));
+        assert_eq!(y, vec![0.0, 0.0, 2.0, 0.0]);
+        let g = vec![1.0, 1.0, 1.0, 1.0];
+        let out = r.backward(&be, &x, &g, 2, &mut ws, Selection::Local(0.0), true);
+        assert_eq!(out.dx, vec![0.0, 0.0, 1.0, 0.0]);
+        assert!(out.grads.is_empty());
+        let skipped = r.backward(&be, &x, &g, 2, &mut ws, Selection::Local(0.0), false);
+        assert!(skipped.dx.is_empty());
+    }
+
+    #[test]
+    fn dropout_eval_is_identity_and_train_masks() {
+        let be = NativeBackend::new();
+        let shape = Shape::Flat { features: 64 };
+        let d = Dropout::new(0.5, shape, 7);
+        let x: Vec<f32> = (0..128).map(|i| i as f32 * 0.1 + 1.0).collect();
+        let mut ws = LayerWs::default();
+        let ye = d.forward(&be, &x, 2, &mut ws, &ctx(false, 0, 0));
+        assert_eq!(ye, x, "eval mode must be the identity");
+        assert!(ws.mask.is_empty());
+
+        let yt = d.forward(&be, &x, 2, &mut ws, &ctx(true, 0, 0));
+        assert_ne!(yt, x, "training mode must mask");
+        let zeros = yt.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros > 16 && zeros < 112, "about half drop at p=0.5, got {zeros}");
+        for (&y, &m) in yt.iter().zip(&ws.mask) {
+            assert!(m == 0.0 || (m - 2.0).abs() < 1e-6, "inverted scaling");
+            if m == 0.0 {
+                assert_eq!(y, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn dropout_masks_are_shard_invariant() {
+        let be = NativeBackend::new();
+        let shape = Shape::Flat { features: 16 };
+        let d = Dropout::new(0.3, shape, 99);
+        let x: Vec<f32> = (0..4 * 16).map(|i| (i % 5) as f32 + 1.0).collect();
+        let mut ws = LayerWs::default();
+        let full = d.forward(&be, &x, 4, &mut ws, &ctx(true, 3, 0));
+        // shard [2, 4) forwarded with the matching global offset
+        let mut ws2 = LayerWs::default();
+        let tail = d.forward(&be, &x[2 * 16..], 2, &mut ws2, &ctx(true, 3, 2));
+        assert_eq!(tail[..], full[2 * 16..], "shard must reproduce the serial mask");
+        // a different step draws a different mask
+        let mut ws3 = LayerWs::default();
+        let other = d.forward(&be, &x, 4, &mut ws3, &ctx(true, 4, 0));
+        assert_ne!(other, full);
+    }
+
+    #[test]
+    fn dropout_backward_applies_the_forward_mask() {
+        let be = NativeBackend::new();
+        let d = Dropout::new(0.4, Shape::Flat { features: 32 }, 1);
+        let x = vec![1.0f32; 32];
+        let mut ws = LayerWs::default();
+        let y = d.forward(&be, &x, 1, &mut ws, &ctx(true, 0, 0));
+        let g = vec![1.0f32; 32];
+        let out = d.backward(&be, &x, &g, 1, &mut ws, Selection::Local(0.0), true);
+        assert_eq!(out.dx, y, "with unit x and unit g, dx equals the masked forward");
+        // eval (empty mask) backward passes the gradient through
+        let ye = d.forward(&be, &x, 1, &mut ws, &ctx(false, 0, 0));
+        assert_eq!(ye, x);
+        let thru = d.backward(&be, &x, &g, 1, &mut ws, Selection::Local(0.0), true);
+        assert_eq!(thru.dx, g);
+    }
+
+    #[test]
+    fn dropout_flops_entry() {
+        let mut set = LayerSet::default();
+        Dropout::new(0.25, Shape::Spatial { c: 4, h: 3, w: 3 }, 0).account_flops(&mut set);
+        Dropout::new(0.25, Shape::Flat { features: 10 }, 0).account_flops(&mut set);
+        assert_eq!(set.dropouts, vec![(4, 3, 3), (10, 1, 1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dropout rate")]
+    fn dropout_rejects_rate_one() {
+        Dropout::new(1.0, Shape::Flat { features: 4 }, 0);
+    }
+}

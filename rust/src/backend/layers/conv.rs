@@ -1,0 +1,233 @@
+//! ssProp-sparsified 2-D convolution layer: arbitrary kernel/stride/pad,
+//! run through the plan/workspace [`Backend`] path — the forward caches
+//! its im2col columns in the layer's [`Conv2dPlan`], the backward consumes
+//! them (one patch gather per layer per step), and the channel top-k makes
+//! this the layer the drop-rate schedule acts on.
+
+use anyhow::{bail, Result};
+
+use super::{BwdOut, FwdCtx, Layer, LayerWs, ParamView, Selection, Shape};
+use crate::backend::plan::Conv2dPlan;
+use crate::backend::{Backend, Conv2d};
+use crate::flops::{ConvLayer, LayerSet};
+use crate::util::rng::Pcg;
+
+/// A conv layer (weights OIHW, per-channel bias) with fixed input geometry.
+/// He-initialized from the shared model RNG so multi-layer graphs draw one
+/// deterministic parameter stream, exactly like the historical SimpleCNN.
+#[derive(Debug, Clone)]
+pub struct Conv2dLayer {
+    /// Batch-1 geometry (the ssProp selection unit).
+    geom: Conv2d,
+    /// Weights, (Cout, Cin, K, K) flattened.
+    w: Vec<f32>,
+    /// Bias, (Cout,).
+    b: Vec<f32>,
+}
+
+impl Conv2dLayer {
+    /// He-initialize a conv over a `(cin, h, w_in)` input: `cout` filters
+    /// of size `k`×`k` at `stride`/`padding`. Weight draws come from `rng`
+    /// in (Cout, Cin, K, K) order; biases start at zero.
+    #[allow(clippy::too_many_arguments)]
+    pub fn init(
+        rng: &mut Pcg,
+        cin: usize,
+        h: usize,
+        w_in: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        padding: usize,
+    ) -> Conv2dLayer {
+        assert!(cin >= 1 && cout >= 1 && k >= 1 && stride >= 1, "degenerate conv geometry");
+        let geom = Conv2d { bt: 1, cin, h, w: w_in, cout, k, stride, padding };
+        let fan_in = (cin * k * k) as f32;
+        let scale = (2.0 / fan_in).sqrt();
+        Conv2dLayer {
+            geom,
+            w: (0..cout * cin * k * k).map(|_| rng.normal() * scale).collect(),
+            b: vec![0f32; cout],
+        }
+    }
+
+    /// This layer's geometry at batch size `bt`.
+    pub fn cfg_at(&self, bt: usize) -> Conv2d {
+        self.geom.with_batch(bt)
+    }
+}
+
+impl Layer for Conv2dLayer {
+    fn describe(&self) -> String {
+        let g = &self.geom;
+        format!("conv{}x{}/s{} {}->{}", g.k, g.k, g.stride, g.cin, g.cout)
+    }
+
+    fn out_shape(&self, input: &Shape) -> Result<Shape> {
+        let g = &self.geom;
+        match *input {
+            Shape::Spatial { c, h, w } if (c, h, w) == (g.cin, g.h, g.w) => {
+                Ok(Shape::Spatial { c: g.cout, h: g.hout(), w: g.wout() })
+            }
+            other => {
+                let want = (g.cin, g.h, g.w);
+                bail!("{} expects {want:?} input, got {other:?}", self.describe())
+            }
+        }
+    }
+
+    fn ensure_ws(&self, ws: &mut LayerWs, bt: usize) {
+        let cfg = self.cfg_at(bt);
+        match &mut ws.plan {
+            Some(plan) => plan.ensure(cfg),
+            None => ws.plan = Some(Conv2dPlan::new(cfg)),
+        }
+    }
+
+    fn forward(
+        &self,
+        be: &dyn Backend,
+        x: &[f32],
+        bt: usize,
+        ws: &mut LayerWs,
+        _ctx: &FwdCtx,
+    ) -> Vec<f32> {
+        self.ensure_ws(ws, bt);
+        let plan = ws.plan.as_mut().expect("conv plan just ensured");
+        be.conv2d_fwd_planned(plan, x, &self.w, Some(&self.b))
+    }
+
+    fn backward(
+        &self,
+        be: &dyn Backend,
+        x: &[f32],
+        g: &[f32],
+        _bt: usize,
+        ws: &mut LayerWs,
+        sel: Selection<'_>,
+        need_dx: bool,
+    ) -> BwdOut {
+        let plan = ws.plan.as_mut().expect("conv backward without a forward-keyed workspace");
+        let grads = match sel {
+            Selection::Local(d) => be.conv2d_bwd_planned(plan, x, &self.w, g, d, need_dx),
+            Selection::Keep(keep) => be.conv2d_bwd_planned_with(plan, x, &self.w, g, keep, need_dx),
+        };
+        BwdOut { dx: grads.dx, kept: grads.keep_idx.len(), grads: vec![grads.dw, grads.db] }
+    }
+
+    fn params(&self) -> Vec<ParamView<'_>> {
+        let g = &self.geom;
+        vec![
+            ParamView { field: "w", data: &self.w, shape: vec![g.cout, g.cin, g.k, g.k] },
+            ParamView { field: "b", data: &self.b, shape: vec![g.cout] },
+        ]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Vec<f32>> {
+        vec![&mut self.w, &mut self.b]
+    }
+
+    fn load_param(&mut self, field: &str, vals: Vec<f32>) -> Result<()> {
+        let dst = match field {
+            "w" => &mut self.w,
+            "b" => &mut self.b,
+            other => bail!("unknown conv field {other:?}"),
+        };
+        if dst.len() != vals.len() {
+            bail!("shape mismatch: {} vs {}", vals.len(), dst.len());
+        }
+        *dst = vals;
+        Ok(())
+    }
+
+    fn conv_geom(&self) -> Option<Conv2d> {
+        Some(self.geom)
+    }
+
+    fn account_flops(&self, set: &mut LayerSet) {
+        let g = &self.geom;
+        set.convs.push(ConvLayer {
+            cin: g.cin,
+            cout: g.cout,
+            k: g.k,
+            hout: g.hout(),
+            wout: g.wout(),
+            counted_bn: false,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+
+    fn layer() -> Conv2dLayer {
+        let mut rng = Pcg::new(5, 1);
+        Conv2dLayer::init(&mut rng, 2, 5, 5, 3, 3, 2, 1)
+    }
+
+    #[test]
+    fn geometry_and_describe() {
+        let l = layer();
+        assert_eq!(l.describe(), "conv3x3/s2 2->3");
+        let out = l.out_shape(&Shape::Spatial { c: 2, h: 5, w: 5 }).unwrap();
+        assert_eq!(out, Shape::Spatial { c: 3, h: 3, w: 3 });
+        assert!(l.out_shape(&Shape::Spatial { c: 2, h: 4, w: 5 }).is_err());
+        assert!(l.out_shape(&Shape::Flat { features: 50 }).is_err());
+        assert_eq!(l.conv_geom().unwrap().cout, 3);
+    }
+
+    #[test]
+    fn forward_matches_op_level_backend_call() {
+        let be = NativeBackend::new();
+        let l = layer();
+        let cfg = l.cfg_at(2);
+        let x: Vec<f32> = (0..cfg.in_len()).map(|i| (i % 7) as f32 * 0.1 - 0.3).collect();
+        let mut ws = LayerWs::default();
+        let ctx = FwdCtx { train: true, step: 0, example_offset: 0 };
+        let y = l.forward(&be, &x, 2, &mut ws, &ctx);
+        let want = be.conv2d_fwd(&cfg, &x, &l.w, Some(&l.b));
+        assert_eq!(y, want);
+        assert_eq!(ws.plan_cols_builds(), 1);
+    }
+
+    #[test]
+    fn backward_local_and_keep_selections_agree() {
+        use crate::backend::sparse::select_channels;
+        let be = NativeBackend::new();
+        let l = layer();
+        let cfg = l.cfg_at(2);
+        let x: Vec<f32> = (0..cfg.in_len()).map(|i| (i % 5) as f32 * 0.2 - 0.4).collect();
+        let g: Vec<f32> = (0..cfg.out_len()).map(|i| (i % 9) as f32 - 4.0).collect();
+        let ctx = FwdCtx { train: true, step: 0, example_offset: 0 };
+
+        let mut ws_a = LayerWs::default();
+        l.forward(&be, &x, 2, &mut ws_a, &ctx);
+        let a = l.backward(&be, &x, &g, 2, &mut ws_a, Selection::Local(0.5), true);
+
+        let keep = select_channels(&cfg, &g, 0.5);
+        let mut ws_b = LayerWs::default();
+        l.forward(&be, &x, 2, &mut ws_b, &ctx);
+        let b = l.backward(&be, &x, &g, 2, &mut ws_b, Selection::Keep(&keep), true);
+
+        assert_eq!(a.kept, b.kept);
+        assert_eq!(a.dx, b.dx);
+        assert_eq!(a.grads, b.grads);
+        assert_eq!(a.kept, keep.len());
+    }
+
+    #[test]
+    fn param_roundtrip() {
+        let mut l = layer();
+        let ps = l.params();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].shape, vec![3, 2, 3, 3]);
+        assert_eq!(ps[1].shape, vec![3]);
+        let w2: Vec<f32> = vec![0.5; 3 * 2 * 9];
+        l.load_param("w", w2.clone()).unwrap();
+        assert_eq!(l.params()[0].data, &w2[..]);
+        assert!(l.load_param("w", vec![1.0]).is_err(), "wrong length must fail");
+        assert!(l.load_param("nope", vec![1.0]).is_err());
+    }
+}

@@ -1,0 +1,271 @@
+//! Dense layers: `Flatten` (NCHW is already contiguous per example, so it
+//! is a pure relabeling) and `Linear`, the classifier head. `Linear`'s
+//! forward GEMM + bias and its backward loops are the historical
+//! SimpleCNN head computation, loop-for-loop, so a `Sequential`-built
+//! SimpleCNN replays the legacy model bitwise.
+
+use anyhow::{bail, Result};
+
+use super::{BwdOut, FwdCtx, Layer, LayerWs, ParamView, Selection, Shape};
+use crate::backend::Backend;
+use crate::util::rng::Pcg;
+
+/// Reshape a (C, H, W) feature map to a flat C·H·W vector. NCHW batches
+/// are row-major per example, so the data is copied unchanged.
+#[derive(Debug, Clone, Copy)]
+pub struct Flatten {
+    c: usize,
+    h: usize,
+    w: usize,
+}
+
+impl Flatten {
+    /// A flatten over `(c, h, w)` feature maps.
+    pub fn new(c: usize, h: usize, w: usize) -> Flatten {
+        Flatten { c, h, w }
+    }
+}
+
+impl Layer for Flatten {
+    fn describe(&self) -> String {
+        "flatten".to_string()
+    }
+
+    fn out_shape(&self, input: &Shape) -> Result<Shape> {
+        match *input {
+            Shape::Spatial { c, h, w } if (c, h, w) == (self.c, self.h, self.w) => {
+                Ok(Shape::Flat { features: self.c * self.h * self.w })
+            }
+            other => {
+                let want = (self.c, self.h, self.w);
+                bail!("flatten built for {want:?} input, got {other:?}")
+            }
+        }
+    }
+
+    fn forward(
+        &self,
+        _be: &dyn Backend,
+        x: &[f32],
+        _bt: usize,
+        _ws: &mut LayerWs,
+        _ctx: &FwdCtx,
+    ) -> Vec<f32> {
+        x.to_vec()
+    }
+
+    fn backward(
+        &self,
+        _be: &dyn Backend,
+        _x: &[f32],
+        g: &[f32],
+        _bt: usize,
+        _ws: &mut LayerWs,
+        _sel: Selection<'_>,
+        need_dx: bool,
+    ) -> BwdOut {
+        if !need_dx {
+            return BwdOut::default();
+        }
+        BwdOut { dx: g.to_vec(), ..BwdOut::default() }
+    }
+}
+
+/// Fully-connected layer `y = x · W + b` with `W` stored `(in, out)`
+/// row-major — the layout the historical `fc_w` used.
+#[derive(Debug, Clone)]
+pub struct Linear {
+    in_f: usize,
+    out_f: usize,
+    w: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl Linear {
+    /// He-initialize an `in_f -> out_f` linear layer from the shared model
+    /// RNG (same scale and draw order as the historical classifier head).
+    pub fn init(rng: &mut Pcg, in_f: usize, out_f: usize) -> Linear {
+        assert!(in_f >= 1 && out_f >= 1, "degenerate linear geometry");
+        let scale = (2.0 / in_f as f32).sqrt();
+        Linear {
+            in_f,
+            out_f,
+            w: (0..in_f * out_f).map(|_| rng.normal() * scale).collect(),
+            b: vec![0f32; out_f],
+        }
+    }
+}
+
+impl Layer for Linear {
+    fn describe(&self) -> String {
+        format!("fc {}->{}", self.in_f, self.out_f)
+    }
+
+    fn out_shape(&self, input: &Shape) -> Result<Shape> {
+        match *input {
+            Shape::Flat { features } if features == self.in_f => {
+                Ok(Shape::Flat { features: self.out_f })
+            }
+            other => bail!("fc built for {} flat features, got {other:?}", self.in_f),
+        }
+    }
+
+    fn forward(
+        &self,
+        be: &dyn Backend,
+        x: &[f32],
+        bt: usize,
+        _ws: &mut LayerWs,
+        _ctx: &FwdCtx,
+    ) -> Vec<f32> {
+        assert_eq!(x.len(), bt * self.in_f, "linear input length");
+        let mut y = be.gemm(bt, self.in_f, self.out_f, x, &self.w);
+        for bi in 0..bt {
+            for (c, &bias) in self.b.iter().enumerate() {
+                y[bi * self.out_f + c] += bias;
+            }
+        }
+        y
+    }
+
+    fn backward(
+        &self,
+        _be: &dyn Backend,
+        x: &[f32],
+        g: &[f32],
+        bt: usize,
+        _ws: &mut LayerWs,
+        _sel: Selection<'_>,
+        need_dx: bool,
+    ) -> BwdOut {
+        let (inf, outf) = (self.in_f, self.out_f);
+        // dx = g · Wᵀ, the historical head_backward's first loop
+        let dx = if need_dx {
+            let mut dx = vec![0f32; bt * inf];
+            for b in 0..bt {
+                let drow = &g[b * outf..][..outf];
+                for f in 0..inf {
+                    let wrow = &self.w[f * outf..][..outf];
+                    let mut acc = 0f32;
+                    for (dv, wv) in drow.iter().zip(wrow) {
+                        acc += dv * wv;
+                    }
+                    dx[b * inf + f] = acc;
+                }
+            }
+            dx
+        } else {
+            Vec::new()
+        };
+        // dW = xᵀ · g, db = column sums — the historical second loop
+        let mut dw = vec![0f32; inf * outf];
+        let mut db = vec![0f32; outf];
+        for b in 0..bt {
+            let drow = &g[b * outf..][..outf];
+            let prow = &x[b * inf..][..inf];
+            for (f, &pv) in prow.iter().enumerate() {
+                let dst = &mut dw[f * outf..][..outf];
+                for (dwv, &dv) in dst.iter_mut().zip(drow) {
+                    *dwv += pv * dv;
+                }
+            }
+            for (dbv, &dv) in db.iter_mut().zip(drow) {
+                *dbv += dv;
+            }
+        }
+        BwdOut { dx, grads: vec![dw, db], kept: 0 }
+    }
+
+    fn params(&self) -> Vec<ParamView<'_>> {
+        vec![
+            ParamView { field: "w", data: &self.w, shape: vec![self.in_f, self.out_f] },
+            ParamView { field: "b", data: &self.b, shape: vec![self.out_f] },
+        ]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Vec<f32>> {
+        vec![&mut self.w, &mut self.b]
+    }
+
+    fn load_param(&mut self, field: &str, vals: Vec<f32>) -> Result<()> {
+        let dst = match field {
+            "w" => &mut self.w,
+            "b" => &mut self.b,
+            other => bail!("unknown fc field {other:?}"),
+        };
+        if dst.len() != vals.len() {
+            bail!("shape mismatch: {} vs {}", vals.len(), dst.len());
+        }
+        *dst = vals;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+
+    fn ctx() -> FwdCtx {
+        FwdCtx { train: true, step: 0, example_offset: 0 }
+    }
+
+    #[test]
+    fn flatten_is_identity_data() {
+        let be = NativeBackend::new();
+        let f = Flatten::new(2, 2, 2);
+        let out = f.out_shape(&Shape::Spatial { c: 2, h: 2, w: 2 }).unwrap();
+        assert_eq!(out, Shape::Flat { features: 8 });
+        assert!(f.out_shape(&Shape::Flat { features: 8 }).is_err());
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut ws = LayerWs::default();
+        assert_eq!(f.forward(&be, &x, 2, &mut ws, &ctx()), x);
+        let back = f.backward(&be, &x, &x, 2, &mut ws, Selection::Local(0.0), true);
+        assert_eq!(back.dx, x);
+    }
+
+    #[test]
+    fn linear_forward_hand_checked() {
+        let be = NativeBackend::new();
+        let mut rng = Pcg::new(1, 1);
+        let mut l = Linear::init(&mut rng, 3, 2);
+        l.load_param("w", vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]).unwrap();
+        l.load_param("b", vec![0.5, -0.5]).unwrap();
+        let mut ws = LayerWs::default();
+        let y = l.forward(&be, &[1.0, 2.0, 3.0], 1, &mut ws, &ctx());
+        assert_eq!(y, vec![14.5, 31.5]);
+    }
+
+    #[test]
+    fn linear_backward_gradients() {
+        let be = NativeBackend::new();
+        let mut rng = Pcg::new(2, 1);
+        let l = Linear::init(&mut rng, 2, 2);
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // bt 2
+        let g = vec![0.5, -0.5, 1.0, 1.0];
+        let mut ws = LayerWs::default();
+        let out = l.backward(&be, &x, &g, 2, &mut ws, Selection::Local(0.0), true);
+        // db = column sums of g
+        assert_eq!(out.grads[1], vec![1.5, 0.5]);
+        // dw[f][c] = sum_b x[b][f] * g[b][c]
+        assert_eq!(out.grads[0], vec![0.5 + 3.0, -0.5 + 3.0, 1.0 + 4.0, -1.0 + 4.0]);
+        // dx[b][f] = sum_c g[b][c] * w[f][c]
+        let ps = l.params();
+        let w = &ps[0];
+        let want00 = 0.5 * w.data[0] - 0.5 * w.data[1];
+        assert!((out.dx[0] - want00).abs() < 1e-6);
+        let skipped = l.backward(&be, &x, &g, 2, &mut ws, Selection::Local(0.0), false);
+        assert!(skipped.dx.is_empty());
+        assert_eq!(skipped.grads, out.grads);
+    }
+
+    #[test]
+    fn linear_param_errors() {
+        let mut rng = Pcg::new(3, 1);
+        let mut l = Linear::init(&mut rng, 4, 2);
+        assert!(l.load_param("w", vec![0.0; 3]).is_err());
+        assert!(l.load_param("nope", vec![0.0]).is_err());
+        assert_eq!(l.params()[0].shape, vec![4, 2]);
+        assert_eq!(l.describe(), "fc 4->2");
+    }
+}

@@ -1,0 +1,736 @@
+//! Composable layer-graph model API: the [`Layer`] trait, its concrete
+//! building blocks, and the [`Sequential`] container that trains any stack
+//! of them through the [`Backend`] trait with ssProp sparsification.
+//!
+//! The paper's central claim is that scheduled sparse BP is a *module* that
+//! drops into any architecture; this subsystem is that claim made concrete
+//! on the native path. A [`Layer`] owns its parameters and computes
+//! forward/backward over a borrowed per-layer workspace ([`LayerWs`] — the
+//! conv plan, pool argmax, dropout mask); [`Sequential`] owns the layer
+//! list plus one workspace per layer, drives the drop-rate schedule across
+//! every conv layer, applies SGD updates, and reports [`StepStats`] exactly
+//! as the historical hand-rolled `SimpleCnn` did. The data-parallel
+//! executor ([`crate::backend::parallel`]) runs the same layers over
+//! per-worker workspaces with *global* cross-shard channel selection.
+//!
+//! Numerics contract: a `Sequential` built by
+//! [`crate::backend::simple_cnn`] replays the legacy model **bitwise** —
+//! each layer's loops are the exact FP operations of the old fused path in
+//! the same order (pinned by `rust/tests/layer_graph_equivalence.rs`).
+
+mod act;
+mod conv;
+mod linear;
+mod pool;
+
+pub use act::{Dropout, ReLU};
+pub use conv::Conv2dLayer;
+pub use linear::{Flatten, Linear};
+pub use pool::{AvgPool2d, GlobalAvgPool, MaxPool2d};
+
+use anyhow::{bail, Context, Result};
+
+use super::plan::Conv2dPlan;
+use super::{Backend, Conv2d};
+use crate::flops::LayerSet;
+use crate::tensorstore::Tensor;
+
+/// Per-example activation geometry flowing between layers: NCHW feature
+/// maps ([`Shape::Spatial`]) or flattened feature vectors ([`Shape::Flat`]).
+/// The batch dimension is carried separately, so one `Shape` describes a
+/// layer at any batch size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    /// A (C, H, W) feature map (NCHW with the batch dimension stripped).
+    Spatial {
+        /// Channels.
+        c: usize,
+        /// Height.
+        h: usize,
+        /// Width.
+        w: usize,
+    },
+    /// A flat feature vector (classifier head territory).
+    Flat {
+        /// Feature count.
+        features: usize,
+    },
+}
+
+impl Shape {
+    /// Scalar count per example.
+    pub fn volume(&self) -> usize {
+        match *self {
+            Shape::Spatial { c, h, w } => c * h * w,
+            Shape::Flat { features } => features,
+        }
+    }
+}
+
+/// Forward-pass context: train/eval mode plus the deterministic stream
+/// coordinates stochastic layers (Dropout) key their masks on. Keying on
+/// the *global* example index makes a sharded forward reproduce the serial
+/// masks exactly, whatever the thread count.
+#[derive(Debug, Clone, Copy)]
+pub struct FwdCtx {
+    /// Training mode (Dropout masks; eval is deterministic identity).
+    pub train: bool,
+    /// Monotone step counter (one dropout mask stream per step).
+    pub step: u64,
+    /// Global index of this (sub-)batch's first example.
+    pub example_offset: usize,
+}
+
+/// How a conv layer's backward chooses its ssProp channels.
+#[derive(Debug, Clone, Copy)]
+pub enum Selection<'a> {
+    /// Select locally from this (sub-)batch's gradient at the given drop
+    /// rate — the serial path.
+    Local(f64),
+    /// Back-propagate exactly these output channels (ascending) — the
+    /// data-parallel path, where selection is reduced globally across
+    /// shards before any shard runs its backward.
+    Keep(&'a [usize]),
+}
+
+/// One layer's reusable per-(worker, batch) scratch. A plain struct rather
+/// than a per-layer associated type so the executor can own a uniform
+/// `Vec<LayerWs>` per worker; unused fields stay empty and cost nothing.
+#[derive(Debug, Default)]
+pub struct LayerWs {
+    /// Conv layers: the plan (im2col cache + backward scratch).
+    pub(crate) plan: Option<Conv2dPlan>,
+    /// MaxPool: flat input index of each output's argmax, recorded by the
+    /// forward and consumed by the backward scatter.
+    pub(crate) argmax: Vec<usize>,
+    /// Dropout: the scaled keep mask of the current training forward
+    /// (empty in eval mode or at rate 0).
+    pub(crate) mask: Vec<f32>,
+}
+
+impl LayerWs {
+    /// Capacity fingerprint of the conv plan, if this workspace holds one
+    /// (workspace-reuse tests pin these flat across steps).
+    pub fn plan_caps(&self) -> Option<[usize; 7]> {
+        self.plan.as_ref().map(|p| p.buffer_caps())
+    }
+
+    /// im2col builds of the conv plan, if any.
+    pub fn plan_cols_builds(&self) -> u64 {
+        self.plan.as_ref().map_or(0, |p| p.cols_builds())
+    }
+}
+
+/// A named view of one parameter tensor (checkpoint export).
+#[derive(Debug)]
+pub struct ParamView<'a> {
+    /// Field name within the layer ("w", "b").
+    pub field: &'static str,
+    /// Flattened values.
+    pub data: &'a [f32],
+    /// Tensor shape.
+    pub shape: Vec<usize>,
+}
+
+/// What one layer's backward hands back to its container.
+#[derive(Debug, Default)]
+pub struct BwdOut {
+    /// d loss / d input — empty when the caller passed `need_dx = false`.
+    pub dx: Vec<f32>,
+    /// Parameter gradients, aligned with [`Layer::params_mut`] order
+    /// (empty for stateless layers).
+    pub grads: Vec<Vec<f32>>,
+    /// Output channels actually back-propagated (conv layers; 0 elsewhere).
+    pub kept: usize,
+}
+
+/// One node of a layer graph: owns its parameters, computes forward and
+/// backward over a borrowed [`LayerWs`], and describes its geometry and
+/// FLOPs contribution. Implementations must be `Send + Sync` so the
+/// data-parallel executor can share the (read-only) layer list across
+/// worker threads — all mutable per-step state lives in the workspace.
+pub trait Layer: std::fmt::Debug + Send + Sync {
+    /// Short human-readable description ("conv3x3/s2 1->8").
+    fn describe(&self) -> String;
+
+    /// Output shape for `input`, or an error when the geometry mismatches
+    /// what the layer was built for.
+    fn out_shape(&self, input: &Shape) -> Result<Shape>;
+
+    /// Key the workspace to batch size `bt` (conv plans re-key in place,
+    /// preserving capacity). Default: stateless layers need nothing.
+    fn ensure_ws(&self, _ws: &mut LayerWs, _bt: usize) {}
+
+    /// Forward over a batch of `bt` examples; may cache into `ws` whatever
+    /// the matching backward needs (im2col columns, argmax, masks).
+    fn forward(
+        &self,
+        be: &dyn Backend,
+        x: &[f32],
+        bt: usize,
+        ws: &mut LayerWs,
+        ctx: &FwdCtx,
+    ) -> Vec<f32>;
+
+    /// Backward: `x` is the same input the last forward saw, `g` is
+    /// d loss / d output. `need_dx = false` skips the input-gradient
+    /// computation (the first layer of a network never consumes it).
+    fn backward(
+        &self,
+        be: &dyn Backend,
+        x: &[f32],
+        g: &[f32],
+        bt: usize,
+        ws: &mut LayerWs,
+        sel: Selection<'_>,
+        need_dx: bool,
+    ) -> BwdOut;
+
+    /// Parameter tensors for checkpointing, in update order.
+    fn params(&self) -> Vec<ParamView<'_>> {
+        Vec::new()
+    }
+
+    /// Mutable parameter arrays, aligned with [`BwdOut::grads`].
+    fn params_mut(&mut self) -> Vec<&mut Vec<f32>> {
+        Vec::new()
+    }
+
+    /// Restore one parameter field saved via [`Layer::params`].
+    fn load_param(&mut self, field: &str, _vals: Vec<f32>) -> Result<()> {
+        bail!("layer {:?} has no parameter field {field:?}", self.describe())
+    }
+
+    /// Conv layers: the batch-1 geometry (the ssProp selection unit).
+    /// `None` for every layer that does not participate in channel
+    /// selection.
+    fn conv_geom(&self) -> Option<Conv2d> {
+        None
+    }
+
+    /// Contribute this layer to the Eq. 6–9 FLOPs inventory.
+    fn account_flops(&self, _set: &mut LayerSet) {}
+}
+
+/// Per-step statistics returned by [`Sequential::train_step`].
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    /// Mean softmax cross-entropy over the batch.
+    pub loss: f64,
+    /// Fraction of the batch classified correctly.
+    pub acc: f64,
+    /// Output channels actually back-propagated, summed over conv layers.
+    pub kept_channels: usize,
+    /// Total output channels over conv layers (kept == total when dense).
+    pub total_channels: usize,
+}
+
+/// A feed-forward layer graph trained end-to-end through the [`Backend`]
+/// trait: owns the layers, one [`LayerWs`] per layer, and the step counter
+/// that seeds stochastic layers. The final layer must produce a
+/// [`Shape::Flat`] logits vector; the softmax cross-entropy loss lives in
+/// the container, not in a layer, exactly as in the historical model.
+#[derive(Debug)]
+pub struct Sequential {
+    /// Resolved model-spec string ("simple-cnn-d2-w8") — display and
+    /// checkpoint identity.
+    spec: String,
+    /// Checkpoint name per layer ("conv0", "fc"; empty = stateless).
+    names: Vec<String>,
+    layers: Vec<Box<dyn Layer>>,
+    /// `shapes[l]` is layer l's input shape; `shapes[len]` the output.
+    shapes: Vec<Shape>,
+    /// Logit count of the final [`Shape::Flat`] output.
+    classes: usize,
+    /// Per-layer workspaces for the serial path (the executor owns
+    /// per-worker sets instead).
+    ws: Vec<LayerWs>,
+    /// Monotone train-step counter (dropout mask streams).
+    step: u64,
+}
+
+impl Sequential {
+    /// Build a graph from `(checkpoint name, layer)` pairs, propagating and
+    /// validating shapes front to back. The final shape must be flat (the
+    /// logits); stateless layers pass an empty name.
+    pub fn new(
+        spec: impl Into<String>,
+        in_shape: Shape,
+        parts: Vec<(String, Box<dyn Layer>)>,
+    ) -> Result<Sequential> {
+        if parts.is_empty() {
+            bail!("a model needs at least one layer");
+        }
+        let mut names = Vec::with_capacity(parts.len());
+        let mut layers: Vec<Box<dyn Layer>> = Vec::with_capacity(parts.len());
+        let mut shapes = vec![in_shape];
+        for (name, layer) in parts {
+            let cur = *shapes.last().expect("shapes is never empty");
+            let next = layer
+                .out_shape(&cur)
+                .with_context(|| format!("layer {:?} rejects its input", layer.describe()))?;
+            shapes.push(next);
+            names.push(name);
+            layers.push(layer);
+        }
+        let classes = match *shapes.last().expect("shapes is never empty") {
+            Shape::Flat { features } => features,
+            Shape::Spatial { .. } => bail!("the final layer must produce flat logits"),
+        };
+        let ws = (0..layers.len()).map(|_| LayerWs::default()).collect();
+        Ok(Sequential { spec: spec.into(), names, layers, shapes, classes, ws, step: 0 })
+    }
+
+    /// The resolved model-spec string this graph was built from.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// One-line architecture summary (layer descriptions joined).
+    pub fn describe(&self) -> String {
+        self.layers.iter().map(|l| l.describe()).collect::<Vec<_>>().join(" > ")
+    }
+
+    /// Per-example input shape.
+    pub fn in_shape(&self) -> Shape {
+        self.shapes[0]
+    }
+
+    /// Logit count of the classifier head.
+    pub fn out_features(&self) -> usize {
+        self.classes
+    }
+
+    /// Number of layers in the graph.
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Read access to layer `l` (the executor walks the graph this way).
+    pub fn layer(&self, l: usize) -> &dyn Layer {
+        self.layers[l].as_ref()
+    }
+
+    /// Mutable access to layer `l` (the executor applies reduced updates).
+    pub fn layer_mut(&mut self, l: usize) -> &mut dyn Layer {
+        self.layers[l].as_mut()
+    }
+
+    /// Number of conv layers (ssProp-selectable units).
+    pub fn conv_count(&self) -> usize {
+        self.layers.iter().filter(|l| l.conv_geom().is_some()).count()
+    }
+
+    /// Total conv output channels — [`StepStats::total_channels`].
+    pub fn total_channels(&self) -> usize {
+        self.layers.iter().filter_map(|l| l.conv_geom()).map(|g| g.cout).sum()
+    }
+
+    /// Key every layer workspace to batch size `bt` (conv plans re-key in
+    /// place, preserving capacity). Called by `train_step`; also useful to
+    /// prewarm before a timed loop — and, with the epoch-tail batch size,
+    /// to prewarm the tail re-key.
+    pub fn ensure_ws(&mut self, bt: usize) {
+        for (layer, ws) in self.layers.iter().zip(self.ws.iter_mut()) {
+            layer.ensure_ws(ws, bt);
+        }
+    }
+
+    /// A fresh throwaway workspace set keyed to `bt` (eval has no backward
+    /// to reuse caches for, and `&self` keeps eval shareable).
+    fn fresh_ws(&self, bt: usize) -> Vec<LayerWs> {
+        let mut ws: Vec<LayerWs> = (0..self.layers.len()).map(|_| LayerWs::default()).collect();
+        for (layer, w) in self.layers.iter().zip(ws.iter_mut()) {
+            layer.ensure_ws(w, bt);
+        }
+        ws
+    }
+
+    /// Advance and return the step counter seeding this step's stochastic
+    /// layers. The serial and data-parallel paths both draw from here, so
+    /// a sharded step reproduces the serial dropout masks.
+    pub(crate) fn begin_step(&mut self) -> u64 {
+        let step = self.step;
+        self.step += 1;
+        step
+    }
+
+    /// Forward pass keeping every layer input: `acts[l]` is layer l's
+    /// input (`acts[0] = x`), `acts[len]` the logits. Runs through the
+    /// workspaces in `ws` — the executor passes per-worker sets so the
+    /// identical forward runs per shard without locks.
+    pub(crate) fn forward_collect(
+        &self,
+        be: &dyn Backend,
+        x: &[f32],
+        bt: usize,
+        ws: &mut [LayerWs],
+        ctx: &FwdCtx,
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(ws.len(), self.layers.len(), "workspace count");
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.layers.len() + 1);
+        acts.push(x.to_vec());
+        for (layer, w) in self.layers.iter().zip(ws.iter_mut()) {
+            let cur = acts.last().expect("acts is never empty");
+            let next = layer.forward(be, cur, bt, w, ctx);
+            acts.push(next);
+        }
+        acts
+    }
+
+    /// One SGD training step at `drop_rate`; returns loss/acc/kept-channel
+    /// stats. `x` is `(bt, in_shape)` flattened, `y` integer labels. Every
+    /// conv layer selects its ssProp channels locally from the batch
+    /// gradient (the data-parallel executor substitutes global selection).
+    pub fn train_step(
+        &mut self,
+        be: &dyn Backend,
+        x: &[f32],
+        y: &[i32],
+        drop_rate: f64,
+        lr: f32,
+    ) -> Result<StepStats> {
+        let bt = y.len();
+        if bt == 0 || x.len() != bt * self.in_shape().volume() {
+            bail!("bad batch geometry: {} inputs for {bt} labels", x.len());
+        }
+        self.ensure_ws(bt);
+        let step = self.begin_step();
+        let ctx = FwdCtx { train: true, step, example_offset: 0 };
+        // Take the workspaces out so the forward can borrow them alongside
+        // `self` (same dance the legacy model did with its plans).
+        let mut ws = std::mem::take(&mut self.ws);
+        let acts = self.forward_collect(be, x, bt, &mut ws, &ctx);
+        let logits = acts.last().expect("acts is never empty");
+        let (loss_sum, correct, dlogits) = softmax_ce_core(logits, y, self.classes, bt);
+        let loss = loss_sum / bt as f64;
+        let acc = correct as f64 / bt as f64;
+        if !loss.is_finite() {
+            self.ws = ws;
+            bail!("non-finite loss at drop rate {drop_rate}");
+        }
+
+        // Backward top-down: each layer computes its gradients on
+        // pre-update parameters, then takes its SGD update immediately —
+        // updates never feed another layer's backward, so the order only
+        // has to be fixed, not clever.
+        let mut kept = 0usize;
+        let mut g = dlogits;
+        for l in (0..self.layers.len()).rev() {
+            let out = self.layers[l].backward(
+                be,
+                &acts[l],
+                &g,
+                bt,
+                &mut ws[l],
+                Selection::Local(drop_rate),
+                l > 0,
+            );
+            kept += out.kept;
+            for (param, grad) in self.layers[l].params_mut().into_iter().zip(&out.grads) {
+                for (pv, &gv) in param.iter_mut().zip(grad) {
+                    *pv -= lr * gv;
+                }
+            }
+            if l > 0 {
+                g = out.dx;
+            }
+        }
+        self.ws = ws;
+
+        Ok(StepStats { loss, acc, kept_channels: kept, total_channels: self.total_channels() })
+    }
+
+    /// Forward-only mean (loss, accuracy) on a batch. Stochastic layers run
+    /// in eval mode (Dropout is the identity); workspaces are throwaway.
+    pub fn eval_batch(&self, be: &dyn Backend, x: &[f32], y: &[i32]) -> (f64, f64) {
+        let bt = y.len();
+        let mut ws = self.fresh_ws(bt);
+        let ctx = FwdCtx { train: false, step: self.step, example_offset: 0 };
+        let acts = self.forward_collect(be, x, bt, &mut ws, &ctx);
+        let (losses, correct) = softmax_ce_examples(acts.last().unwrap(), y, self.classes);
+        let mut loss_sum = 0f64;
+        for &l in &losses {
+            loss_sum += l;
+        }
+        (loss_sum / bt as f64, correct as f64 / bt as f64)
+    }
+
+    /// Parameters as named tensors — `param['{name}.{field}']`, the
+    /// checkpoint format shared with the AOT path (and bit-compatible with
+    /// the legacy SimpleCNN's `conv{l}`/`fc` naming).
+    pub fn state_tensors(&self) -> Vec<(String, Tensor)> {
+        let mut out = Vec::new();
+        for (name, layer) in self.names.iter().zip(&self.layers) {
+            if name.is_empty() {
+                continue;
+            }
+            for p in layer.params() {
+                let key = format!("param['{name}.{}']", p.field);
+                out.push((key, Tensor::from_f32(p.shape.clone(), p.data)));
+            }
+        }
+        out
+    }
+
+    /// Restore parameters saved by [`Sequential::state_tensors`].
+    pub fn load_state_tensors(&mut self, tensors: &[(String, Tensor)]) -> Result<()> {
+        for (name, t) in tensors {
+            let inner = name
+                .strip_prefix("param['")
+                .and_then(|r| r.strip_suffix("']"))
+                .ok_or_else(|| anyhow::anyhow!("unknown state leaf {name:?}"))?;
+            let (lname, field) = inner
+                .split_once('.')
+                .ok_or_else(|| anyhow::anyhow!("unknown state leaf {name:?}"))?;
+            let l = self
+                .names
+                .iter()
+                .position(|n| n == lname)
+                .ok_or_else(|| anyhow::anyhow!("unknown state leaf {name:?}"))?;
+            self.layers[l]
+                .load_param(field, t.to_f32())
+                .with_context(|| format!("loading {name:?}"))?;
+        }
+        Ok(())
+    }
+
+    /// Every parameter flattened in checkpoint order (bitwise-comparison
+    /// target for the determinism suites).
+    pub fn flat_params(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for layer in &self.layers {
+            for p in layer.params() {
+                out.extend_from_slice(p.data);
+            }
+        }
+        out
+    }
+
+    /// Conv + dropout inventory for Eq. 6/9 FLOPs accounting.
+    pub fn layer_set(&self) -> LayerSet {
+        let mut set = LayerSet::default();
+        for layer in &self.layers {
+            layer.account_flops(&mut set);
+        }
+        set
+    }
+
+    /// Total im2col materializations across this graph's own workspaces —
+    /// advances by exactly [`Sequential::conv_count`] per serial
+    /// `train_step` when the fused path is healthy.
+    pub fn plan_cols_builds(&self) -> u64 {
+        self.ws.iter().map(|w| w.plan_cols_builds()).sum()
+    }
+
+    /// Capacity fingerprints of every conv plan, conv order (regression
+    /// tests pin these flat across steps).
+    pub fn plan_caps(&self) -> Vec<[usize; 7]> {
+        self.ws.iter().filter_map(|w| w.plan_caps()).collect()
+    }
+}
+
+/// Softmax cross-entropy core over integer labels for a (sub-)batch:
+/// returns (sum of per-example losses, correct count, d loss / d logits)
+/// with `1 / grad_denom` folded into the gradient. The serial step passes
+/// `grad_denom = bt`; the data-parallel executor passes the *full* batch
+/// size from every shard, so per-shard gradients are already in full-batch
+/// units and reduce by plain summation.
+pub(crate) fn softmax_ce_core(
+    logits: &[f32],
+    y: &[i32],
+    classes: usize,
+    grad_denom: usize,
+) -> (f64, usize, Vec<f32>) {
+    let bt = y.len();
+    // The loss/argmax forward is the per-example routine; summing its
+    // losses in example order reproduces the historical accumulation
+    // bit-for-bit, and the softmax terms below recompute deterministically.
+    let (losses, correct) = softmax_ce_examples(logits, y, classes);
+    let mut loss = 0f64;
+    for &l in &losses {
+        loss += l;
+    }
+    let mut dlogits = vec![0f32; bt * classes];
+    for b in 0..bt {
+        let row = &logits[b * classes..][..classes];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut denom = 0f32;
+        for &v in row {
+            denom += (v - max).exp();
+        }
+        let label = y[b] as usize;
+        let drow = &mut dlogits[b * classes..][..classes];
+        for (c, &v) in row.iter().enumerate() {
+            let p = (v - max).exp() / denom;
+            drow[c] = (p - if c == label { 1.0 } else { 0.0 }) / grad_denom as f32;
+        }
+    }
+    (loss, correct, dlogits)
+}
+
+/// Per-example softmax cross-entropy (no gradient): returns each example's
+/// loss plus the correct count. Shard workers hand these back so the
+/// reducer can sum losses in *global example order* — which makes sharded
+/// evaluation bit-identical to serial evaluation at any thread count.
+pub(crate) fn softmax_ce_examples(logits: &[f32], y: &[i32], classes: usize) -> (Vec<f64>, usize) {
+    let bt = y.len();
+    let mut losses = Vec::with_capacity(bt);
+    let mut correct = 0usize;
+    for b in 0..bt {
+        let row = &logits[b * classes..][..classes];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut denom = 0f32;
+        for &v in row {
+            denom += (v - max).exp();
+        }
+        let label = y[b] as usize;
+        losses.push((denom.ln() - (row[label] - max)) as f64);
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if argmax == label {
+            correct += 1;
+        }
+    }
+    (losses, correct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::util::rng::Pcg;
+
+    fn tiny() -> Sequential {
+        let mut rng = Pcg::new(3, 1);
+        let parts: Vec<(String, Box<dyn Layer>)> = vec![
+            ("conv0".into(), Box::new(Conv2dLayer::init(&mut rng, 1, 6, 6, 4, 3, 1, 1))),
+            (String::new(), Box::new(ReLU)),
+            (String::new(), Box::new(GlobalAvgPool::new(4, 6, 6))),
+            ("fc".into(), Box::new(Linear::init(&mut rng, 4, 3))),
+        ];
+        Sequential::new("tiny", Shape::Spatial { c: 1, h: 6, w: 6 }, parts).unwrap()
+    }
+
+    #[test]
+    fn shape_propagation_and_metadata() {
+        let m = tiny();
+        assert_eq!(m.in_shape(), Shape::Spatial { c: 1, h: 6, w: 6 });
+        assert_eq!(m.out_features(), 3);
+        assert_eq!(m.num_layers(), 4);
+        assert_eq!(m.conv_count(), 1);
+        assert_eq!(m.total_channels(), 4);
+        assert!(m.describe().contains("conv3x3"));
+        assert_eq!(m.spec(), "tiny");
+    }
+
+    #[test]
+    fn rejects_spatial_output_and_geometry_mismatch() {
+        let mut rng = Pcg::new(3, 1);
+        let spatial_end: Vec<(String, Box<dyn Layer>)> =
+            vec![("conv0".into(), Box::new(Conv2dLayer::init(&mut rng, 1, 6, 6, 4, 3, 1, 1)))];
+        assert!(Sequential::new("bad", Shape::Spatial { c: 1, h: 6, w: 6 }, spatial_end).is_err());
+
+        let mut rng = Pcg::new(3, 1);
+        let wrong_in: Vec<(String, Box<dyn Layer>)> =
+            vec![("conv0".into(), Box::new(Conv2dLayer::init(&mut rng, 2, 6, 6, 4, 3, 1, 1)))];
+        assert!(Sequential::new("bad", Shape::Spatial { c: 1, h: 6, w: 6 }, wrong_in).is_err());
+
+        assert!(Sequential::new("empty", Shape::Flat { features: 3 }, Vec::new()).is_err());
+    }
+
+    #[test]
+    fn train_step_reduces_loss_and_counts_channels() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        let mut rng = Pcg::new(9, 2);
+        let x: Vec<f32> = (0..6 * 36).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..6).map(|i| (i % 3) as i32).collect();
+        let first = m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        assert_eq!(first.kept_channels, first.total_channels);
+        for _ in 0..20 {
+            m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        }
+        let last = m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        assert!(last.loss < first.loss, "{} -> {}", first.loss, last.loss);
+        // sparse step keeps round((1-0.8)*4) = 1 of 4 channels
+        let sparse = m.train_step(&be, &x, &y, 0.8, 0.05).unwrap();
+        assert_eq!(sparse.kept_channels, 1);
+        assert_eq!(sparse.total_channels, 4);
+    }
+
+    #[test]
+    fn train_step_rejects_bad_geometry() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        assert!(m.train_step(&be, &[0.0; 5], &[0, 1], 0.0, 0.05).is_err());
+        assert!(m.train_step(&be, &[], &[], 0.0, 0.05).is_err());
+    }
+
+    #[test]
+    fn state_tensor_roundtrip_and_errors() {
+        let be = NativeBackend::new();
+        let mut a = tiny();
+        let mut rng = Pcg::new(11, 4);
+        let x: Vec<f32> = (0..4 * 36).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = vec![0, 1, 2, 0];
+        a.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        let saved = a.state_tensors();
+        assert_eq!(saved.len(), 4, "conv w/b + fc w/b");
+        assert!(saved.iter().any(|(n, _)| n == "param['conv0.w']"));
+        assert!(saved.iter().any(|(n, _)| n == "param['fc.b']"));
+
+        let mut b = tiny();
+        assert_ne!(a.flat_params(), b.flat_params());
+        b.load_state_tensors(&saved).unwrap();
+        assert_eq!(a.flat_params(), b.flat_params());
+        let (la, _) = a.eval_batch(&be, &x, &y);
+        let (lb, _) = b.eval_batch(&be, &x, &y);
+        assert_eq!(la, lb);
+
+        let bad = vec![("param['fc.b']".to_string(), Tensor::from_f32(vec![2], &[0.0, 1.0]))];
+        assert!(b.load_state_tensors(&bad).is_err(), "shape mismatch must fail");
+        let unknown = vec![("param['nope.w']".to_string(), Tensor::from_f32(vec![1], &[0.0]))];
+        assert!(b.load_state_tensors(&unknown).is_err(), "unknown layer must fail");
+        let mangled = vec![("weights".to_string(), Tensor::from_f32(vec![1], &[0.0]))];
+        assert!(b.load_state_tensors(&mangled).is_err(), "malformed key must fail");
+    }
+
+    #[test]
+    fn flops_inventory_lists_convs() {
+        let m = tiny();
+        let set = m.layer_set();
+        assert_eq!(set.convs.len(), 1);
+        assert_eq!((set.convs[0].cin, set.convs[0].cout, set.convs[0].k), (1, 4, 3));
+        assert!(set.dropouts.is_empty());
+    }
+
+    #[test]
+    fn softmax_ce_examples_matches_core() {
+        let logits = vec![0.3, -0.2, 0.9, 0.1, 0.0, -0.5];
+        let y = vec![2, 0];
+        let (sum, correct, _) = softmax_ce_core(&logits, &y, 3, 2);
+        let (each, correct2) = softmax_ce_examples(&logits, &y, 3);
+        assert_eq!(correct, correct2);
+        let mut acc = 0f64;
+        for &l in &each {
+            acc += l;
+        }
+        assert_eq!(acc, sum, "per-example losses must sum to the core's loss");
+    }
+
+    #[test]
+    fn softmax_ce_uniform_logits() {
+        let (losses, _) = softmax_ce_examples(&[0.0, 0.0, 0.0, 0.0], &[1, 0], 2);
+        for l in losses {
+            assert!((l - (2f64).ln()).abs() < 1e-6);
+        }
+        let (_, _, d) = softmax_ce_core(&[0.0, 0.0, 0.0, 0.0], &[1, 0], 2, 2);
+        assert!((d[0] + d[1]).abs() < 1e-6, "gradient rows sum to zero");
+        assert!((d[2] + d[3]).abs() < 1e-6);
+    }
+}

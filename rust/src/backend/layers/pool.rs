@@ -1,0 +1,398 @@
+//! Pooling layers: windowed max/average pooling plus the global average
+//! pool the classifier heads sit on. `GlobalAvgPool` reproduces the
+//! historical SimpleCNN head loops bit-for-bit (its forward mean and
+//! backward spread are the exact FP operations of the legacy model).
+
+use anyhow::{bail, Result};
+
+use super::{BwdOut, FwdCtx, Layer, LayerWs, Selection, Shape};
+use crate::backend::im2col::out_size;
+use crate::backend::Backend;
+
+/// Shared geometry for the windowed pools: `(c, h, w)` input, `k`×`k`
+/// window at `stride` (no padding).
+#[derive(Debug, Clone, Copy)]
+struct PoolGeom {
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+}
+
+impl PoolGeom {
+    fn new(c: usize, h: usize, w: usize, k: usize, stride: usize) -> PoolGeom {
+        assert!(c >= 1 && k >= 1 && stride >= 1, "degenerate pool geometry");
+        assert!(h >= k && w >= k, "pool window {k} exceeds the {h}x{w} input");
+        PoolGeom { c, h, w, k, stride }
+    }
+
+    fn hout(&self) -> usize {
+        out_size(self.h, self.k, self.stride, 0)
+    }
+
+    fn wout(&self) -> usize {
+        out_size(self.w, self.k, self.stride, 0)
+    }
+
+    fn check(&self, input: &Shape, what: &str) -> Result<Shape> {
+        match *input {
+            Shape::Spatial { c, h, w } if (c, h, w) == (self.c, self.h, self.w) => {
+                Ok(Shape::Spatial { c: self.c, h: self.hout(), w: self.wout() })
+            }
+            other => {
+                let want = (self.c, self.h, self.w);
+                bail!("{what} built for {want:?} input, got {other:?}")
+            }
+        }
+    }
+}
+
+/// Windowed max pooling. The forward records each output's argmax (flat
+/// input index) in the workspace; the backward scatters the gradient back
+/// to exactly those positions (accumulating where windows overlap).
+#[derive(Debug, Clone, Copy)]
+pub struct MaxPool2d {
+    geom: PoolGeom,
+}
+
+impl MaxPool2d {
+    /// A `k`×`k`/`stride` max pool over `(c, h, w)` feature maps.
+    pub fn new(c: usize, h: usize, w: usize, k: usize, stride: usize) -> MaxPool2d {
+        MaxPool2d { geom: PoolGeom::new(c, h, w, k, stride) }
+    }
+}
+
+impl Layer for MaxPool2d {
+    fn describe(&self) -> String {
+        format!("maxpool{}x{}/s{}", self.geom.k, self.geom.k, self.geom.stride)
+    }
+
+    fn out_shape(&self, input: &Shape) -> Result<Shape> {
+        self.geom.check(input, "maxpool")
+    }
+
+    fn forward(
+        &self,
+        _be: &dyn Backend,
+        x: &[f32],
+        bt: usize,
+        ws: &mut LayerWs,
+        _ctx: &FwdCtx,
+    ) -> Vec<f32> {
+        let g = &self.geom;
+        let (ho, wo) = (g.hout(), g.wout());
+        assert_eq!(x.len(), bt * g.c * g.h * g.w, "maxpool input length");
+        let mut y = vec![0f32; bt * g.c * ho * wo];
+        ws.argmax.clear();
+        ws.argmax.resize(y.len(), 0);
+        for b in 0..bt {
+            for c in 0..g.c {
+                let plane = (b * g.c + c) * g.h * g.w;
+                for oh in 0..ho {
+                    for ow in 0..wo {
+                        let (mut best, mut best_idx) = (f32::NEG_INFINITY, 0usize);
+                        for kh in 0..g.k {
+                            for kw in 0..g.k {
+                                let idx = plane + (oh * g.stride + kh) * g.w + ow * g.stride + kw;
+                                if x[idx] > best {
+                                    best = x[idx];
+                                    best_idx = idx;
+                                }
+                            }
+                        }
+                        let out_idx = ((b * g.c + c) * ho + oh) * wo + ow;
+                        y[out_idx] = best;
+                        ws.argmax[out_idx] = best_idx;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    fn backward(
+        &self,
+        _be: &dyn Backend,
+        x: &[f32],
+        g: &[f32],
+        _bt: usize,
+        ws: &mut LayerWs,
+        _sel: Selection<'_>,
+        need_dx: bool,
+    ) -> BwdOut {
+        if !need_dx {
+            return BwdOut::default();
+        }
+        assert_eq!(ws.argmax.len(), g.len(), "maxpool backward without a matching forward");
+        let mut dx = vec![0f32; x.len()];
+        for (&src, &gv) in ws.argmax.iter().zip(g) {
+            dx[src] += gv;
+        }
+        BwdOut { dx, ..BwdOut::default() }
+    }
+}
+
+/// Windowed average pooling.
+#[derive(Debug, Clone, Copy)]
+pub struct AvgPool2d {
+    geom: PoolGeom,
+}
+
+impl AvgPool2d {
+    /// A `k`×`k`/`stride` average pool over `(c, h, w)` feature maps.
+    pub fn new(c: usize, h: usize, w: usize, k: usize, stride: usize) -> AvgPool2d {
+        AvgPool2d { geom: PoolGeom::new(c, h, w, k, stride) }
+    }
+}
+
+impl Layer for AvgPool2d {
+    fn describe(&self) -> String {
+        format!("avgpool{}x{}/s{}", self.geom.k, self.geom.k, self.geom.stride)
+    }
+
+    fn out_shape(&self, input: &Shape) -> Result<Shape> {
+        self.geom.check(input, "avgpool")
+    }
+
+    fn forward(
+        &self,
+        _be: &dyn Backend,
+        x: &[f32],
+        bt: usize,
+        _ws: &mut LayerWs,
+        _ctx: &FwdCtx,
+    ) -> Vec<f32> {
+        let g = &self.geom;
+        let (ho, wo) = (g.hout(), g.wout());
+        assert_eq!(x.len(), bt * g.c * g.h * g.w, "avgpool input length");
+        let inv_kk = 1.0 / (g.k * g.k) as f32;
+        let mut y = vec![0f32; bt * g.c * ho * wo];
+        for b in 0..bt {
+            for c in 0..g.c {
+                let plane = (b * g.c + c) * g.h * g.w;
+                for oh in 0..ho {
+                    for ow in 0..wo {
+                        let mut acc = 0f32;
+                        for kh in 0..g.k {
+                            for kw in 0..g.k {
+                                acc += x[plane + (oh * g.stride + kh) * g.w + ow * g.stride + kw];
+                            }
+                        }
+                        y[((b * g.c + c) * ho + oh) * wo + ow] = acc * inv_kk;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    fn backward(
+        &self,
+        _be: &dyn Backend,
+        x: &[f32],
+        g: &[f32],
+        bt: usize,
+        _ws: &mut LayerWs,
+        _sel: Selection<'_>,
+        need_dx: bool,
+    ) -> BwdOut {
+        if !need_dx {
+            return BwdOut::default();
+        }
+        let gm = &self.geom;
+        let (ho, wo) = (gm.hout(), gm.wout());
+        let inv_kk = 1.0 / (gm.k * gm.k) as f32;
+        let mut dx = vec![0f32; x.len()];
+        for b in 0..bt {
+            for c in 0..gm.c {
+                let plane = (b * gm.c + c) * gm.h * gm.w;
+                for oh in 0..ho {
+                    for ow in 0..wo {
+                        let gv = g[((b * gm.c + c) * ho + oh) * wo + ow] * inv_kk;
+                        for kh in 0..gm.k {
+                            for kw in 0..gm.k {
+                                let idx =
+                                    plane + (oh * gm.stride + kh) * gm.w + ow * gm.stride + kw;
+                                dx[idx] += gv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        BwdOut { dx, ..BwdOut::default() }
+    }
+}
+
+/// Global average pool: each (C, H, W) feature map collapses to a flat
+/// C-vector of plane means — the classifier-head reduction of the
+/// historical SimpleCNN, loop-for-loop.
+#[derive(Debug, Clone, Copy)]
+pub struct GlobalAvgPool {
+    c: usize,
+    h: usize,
+    w: usize,
+}
+
+impl GlobalAvgPool {
+    /// A global average pool over `(c, h, w)` feature maps.
+    pub fn new(c: usize, h: usize, w: usize) -> GlobalAvgPool {
+        assert!(c >= 1 && h >= 1 && w >= 1, "degenerate pool geometry");
+        GlobalAvgPool { c, h, w }
+    }
+}
+
+impl Layer for GlobalAvgPool {
+    fn describe(&self) -> String {
+        "gap".to_string()
+    }
+
+    fn out_shape(&self, input: &Shape) -> Result<Shape> {
+        match *input {
+            Shape::Spatial { c, h, w } if (c, h, w) == (self.c, self.h, self.w) => {
+                Ok(Shape::Flat { features: self.c })
+            }
+            other => {
+                let want = (self.c, self.h, self.w);
+                bail!("gap built for {want:?} input, got {other:?}")
+            }
+        }
+    }
+
+    fn forward(
+        &self,
+        _be: &dyn Backend,
+        x: &[f32],
+        bt: usize,
+        _ws: &mut LayerWs,
+        _ctx: &FwdCtx,
+    ) -> Vec<f32> {
+        let hw = self.h * self.w;
+        assert_eq!(x.len(), bt * self.c * hw, "gap input length");
+        let mut pooled = vec![0f32; bt * self.c];
+        for b in 0..bt {
+            for f in 0..self.c {
+                let plane = &x[(b * self.c + f) * hw..][..hw];
+                pooled[b * self.c + f] = plane.iter().sum::<f32>() / hw as f32;
+            }
+        }
+        pooled
+    }
+
+    fn backward(
+        &self,
+        _be: &dyn Backend,
+        x: &[f32],
+        g: &[f32],
+        bt: usize,
+        _ws: &mut LayerWs,
+        _sel: Selection<'_>,
+        need_dx: bool,
+    ) -> BwdOut {
+        if !need_dx {
+            return BwdOut::default();
+        }
+        let hw = self.h * self.w;
+        let inv_hw = 1.0 / hw as f32;
+        let mut dx = vec![0f32; x.len()];
+        for b in 0..bt {
+            for f in 0..self.c {
+                let gv = g[b * self.c + f] * inv_hw;
+                let base = (b * self.c + f) * hw;
+                for pix in 0..hw {
+                    dx[base + pix] = gv;
+                }
+            }
+        }
+        BwdOut { dx, ..BwdOut::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+
+    fn ctx() -> FwdCtx {
+        FwdCtx { train: true, step: 0, example_offset: 0 }
+    }
+
+    #[test]
+    fn maxpool_forward_backward_hand_checked() {
+        let be = NativeBackend::new();
+        // one 4x4 plane, 2x2/s2 pool
+        let p = MaxPool2d::new(1, 4, 4, 2, 2);
+        assert_eq!(
+            p.out_shape(&Shape::Spatial { c: 1, h: 4, w: 4 }).unwrap(),
+            Shape::Spatial { c: 1, h: 2, w: 2 }
+        );
+        #[rustfmt::skip]
+        let x = vec![
+            1.0, 2.0,   0.0, 0.0,
+            3.0, 4.0,   0.0, 5.0,
+            -1.0, -2.0, 7.0, 6.0,
+            -3.0, -4.0, 8.0, 9.0,
+        ];
+        let mut ws = LayerWs::default();
+        let y = p.forward(&be, &x, 1, &mut ws, &ctx());
+        assert_eq!(y, vec![4.0, 5.0, -1.0, 9.0]);
+        let g = vec![1.0, 2.0, 3.0, 4.0];
+        let out = p.backward(&be, &x, &g, 1, &mut ws, Selection::Local(0.0), true);
+        let mut want = vec![0f32; 16];
+        want[5] = 1.0; // 4.0
+        want[7] = 2.0; // 5.0
+        want[8] = 3.0; // -1.0
+        want[15] = 4.0; // 9.0
+        assert_eq!(out.dx, want);
+    }
+
+    #[test]
+    fn maxpool_overlapping_windows_accumulate() {
+        let be = NativeBackend::new();
+        // 3x3 input, 2x2/s1 pool -> 2x2 output; the center max wins all
+        let p = MaxPool2d::new(1, 3, 3, 2, 1);
+        let x = vec![0.0, 0.0, 0.0, 0.0, 9.0, 0.0, 0.0, 0.0, 0.0];
+        let mut ws = LayerWs::default();
+        let y = p.forward(&be, &x, 1, &mut ws, &ctx());
+        assert_eq!(y, vec![9.0; 4]);
+        let out = p.backward(&be, &x, &[1.0; 4], 1, &mut ws, Selection::Local(0.0), true);
+        assert_eq!(out.dx[4], 4.0, "all four windows route their gradient to the max");
+    }
+
+    #[test]
+    fn avgpool_forward_backward() {
+        let be = NativeBackend::new();
+        let p = AvgPool2d::new(1, 4, 4, 2, 2);
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut ws = LayerWs::default();
+        let y = p.forward(&be, &x, 1, &mut ws, &ctx());
+        assert_eq!(y, vec![2.5, 4.5, 10.5, 12.5]);
+        let g = vec![4.0, 8.0, 12.0, 16.0];
+        let out = p.backward(&be, &x, &g, 1, &mut ws, Selection::Local(0.0), true);
+        assert_eq!(out.dx[0], 1.0);
+        assert_eq!(out.dx[3], 2.0);
+        assert_eq!(out.dx[15], 4.0);
+    }
+
+    #[test]
+    fn gap_is_plane_mean() {
+        let be = NativeBackend::new();
+        let p = GlobalAvgPool::new(2, 2, 2);
+        let x = vec![1.0, 2.0, 3.0, 4.0, 10.0, 10.0, 10.0, 10.0];
+        let mut ws = LayerWs::default();
+        let y = p.forward(&be, &x, 1, &mut ws, &ctx());
+        assert_eq!(y, vec![2.5, 10.0]);
+        let out = p.backward(&be, &x, &[4.0, 8.0], 1, &mut ws, Selection::Local(0.0), true);
+        assert_eq!(out.dx, vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0]);
+        let flat = p.out_shape(&Shape::Spatial { c: 2, h: 2, w: 2 }).unwrap();
+        assert_eq!(flat, Shape::Flat { features: 2 });
+        assert!(p.out_shape(&Shape::Flat { features: 8 }).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "pool window")]
+    fn pool_rejects_window_larger_than_input() {
+        MaxPool2d::new(1, 2, 2, 3, 1);
+    }
+}

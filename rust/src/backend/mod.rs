@@ -15,27 +15,36 @@
 //! whole-graph path (`runtime/`, behind the `pjrt` feature) remains the
 //! fast AOT route when compiled artifacts exist.
 //!
-//! Above the trait sits the execution layer ([`parallel`]): a
-//! [`ParallelExecutor`] shards each training batch over a fixed worker
-//! count, runs the fused plan path per shard on per-worker plans (no
-//! locking on the hot path), and tree-reduces gradients in a fixed order
-//! so runs are bit-reproducible. See `docs/ARCHITECTURE.md` for the layer
-//! map and the sharding/reduction design.
+//! Above the trait sit the model and execution layers: [`layers`] is the
+//! composable layer-graph API (a [`Layer`] trait plus conv / activation /
+//! pool / linear building blocks under a [`Sequential`] container; [`zoo`]
+//! parses `--model` specs into presets, and [`simple_cnn`] is the paper's
+//! Fig. 4 model as a thin constructor over it), and [`parallel`] is the
+//! execution layer: a [`ParallelExecutor`] shards each training batch over
+//! a fixed worker count, runs the fused plan path per shard on per-worker
+//! layer workspaces (no locking on the hot path), and tree-reduces
+//! gradients in a fixed order so runs are bit-reproducible. See
+//! `docs/ARCHITECTURE.md` for the layer map and the sharding/reduction
+//! design.
 //!
 //! Layout conventions follow the paper throughout: activations NCHW,
 //! weights OIHW, row-major flattened `Vec<f32>`.
 
 pub mod im2col;
+pub mod layers;
 pub mod native;
 pub mod parallel;
 pub mod plan;
 pub mod simple_cnn;
 pub mod sparse;
+pub mod zoo;
 
+pub use layers::{Layer, LayerWs, Sequential, Shape, StepStats};
 pub use native::NativeBackend;
 pub use parallel::{ExecConfig, ParallelExecutor};
 pub use plan::Conv2dPlan;
-pub use simple_cnn::{SimpleCnn, SimpleCnnCfg, StepStats};
+pub use simple_cnn::{simple_cnn, SimpleCnnCfg};
+pub use zoo::{build_model, parse_model_spec, ModelSpec, ModelSpecError};
 
 /// Geometry of one conv2d call (square kernel/stride/padding, as in the
 /// paper's Eq. 1 and the AOT manifests).
@@ -185,7 +194,7 @@ pub trait Backend: Send + Sync {
     }
 
     /// Fused forward+backward: one im2col build shared by both passes —
-    /// the layer-step primitive `SimpleCnn::train_step` is built on.
+    /// the layer-step primitive `Sequential::train_step` is built on.
     fn conv2d_fwd_bwd(
         &self,
         plan: &mut Conv2dPlan,

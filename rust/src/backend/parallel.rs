@@ -1,34 +1,41 @@
-//! Data-parallel execution layer: shard each training batch over a fixed
-//! worker count, run the fused plan path per shard, reduce gradients
+//! Data-parallel execution layer: shard each batch over a fixed worker
+//! count, run any [`Sequential`] layer graph per shard, reduce gradients
 //! deterministically.
 //!
 //! Design (see `docs/ARCHITECTURE.md` for the full write-up):
 //!
 //! * **Sharding.** The batch splits into contiguous sub-batches via
 //!   [`shard_ranges`] (non-divisible sizes allowed — leading shards take
-//!   the remainder). Each worker owns one [`Conv2dPlan`] per layer, forked
-//!   from the model's plans with [`Conv2dPlan::for_batch`], so the hot
-//!   path takes **no locks**: forward im2col columns are cached per worker
-//!   and consumed by that worker's backward, exactly like the serial path.
+//!   the remainder). Each worker owns one [`LayerWs`] per layer, keyed to
+//!   its shard size, so the hot path takes **no locks**: conv im2col
+//!   columns are cached per worker and consumed by that worker's backward,
+//!   exactly like the serial path; dropout masks are keyed on the *global*
+//!   example index, so shard boundaries never change them.
 //! * **Global selection.** ssProp's channel top-k is defined over the
-//!   *whole* batch, so per-layer the workers publish unnormalized
+//!   *whole* batch, so per conv layer the workers publish unnormalized
 //!   importance partials ([`channel_abs_sums`]), synchronize on a barrier,
 //!   worker 0 reduces them in fixed shard order and broadcasts the keep
 //!   set, and every shard runs the identical compacted backward
-//!   ([`Backend::conv2d_bwd_planned_with`]). Dense layers (keep == Cout)
-//!   skip the rendezvous entirely. This keeps parallel selection
+//!   ([`Selection::Keep`]). Dense layers (keep == Cout) and non-conv
+//!   layers skip the rendezvous entirely. This keeps parallel selection
 //!   *semantically identical* to serial selection.
-//! * **Deterministic reduction.** Weight/bias gradients reduce through a
-//!   fixed-shape pairwise tree (`tree_reduce`) in shard-index order —
+//! * **Deterministic reduction.** Every parameter gradient reduces through
+//!   a fixed-shape pairwise tree (`tree_reduce`) in shard-index order —
 //!   never in thread-completion order — so repeated runs at the same
 //!   thread count are bit-identical, and a single-worker run reproduces
-//!   [`SimpleCnn::train_step`] exactly. Against other thread counts only
+//!   [`Sequential::train_step`] exactly. Against other thread counts only
 //!   float re-association differs (≪ 1e-5 on the loss trajectory; pinned
 //!   by `rust/tests/determinism.rs`).
+//! * **Sharded evaluation.** [`ParallelExecutor::eval_batch`] forwards the
+//!   shards in eval mode and hands back *per-example* losses; the reducer
+//!   sums them in global example order, which makes sharded evaluation
+//!   **bit-identical** to serial evaluation at every thread count (the
+//!   per-example forward is batch-independent: every GEMM row is computed
+//!   independently).
 //!
 //! Worker threads are scoped to each step (`std::thread::scope`), which
 //! keeps the borrows safe without `unsafe`; the persistent state a "pool"
-//! would carry — the per-worker plan workspaces — lives in the executor
+//! would carry — the per-worker layer workspaces — lives in the executor
 //! and is reused across steps, so steady-state steps allocate only the
 //! gradients themselves. A panicking worker (a backend invariant
 //! violation) aborts the step *loudly*: every worker owes a fixed number
@@ -41,10 +48,9 @@ use std::sync::{Barrier, Mutex};
 
 use anyhow::{bail, Result};
 
-use super::plan::Conv2dPlan;
-use super::simple_cnn::softmax_ce_core;
+use super::layers::{softmax_ce_core, softmax_ce_examples, FwdCtx, LayerWs, Selection};
 use super::sparse::{channel_abs_sums, topk_channels};
-use super::{Backend, SimpleCnn, StepStats};
+use super::{Backend, Sequential, StepStats};
 use crate::flops::keep_channels;
 use crate::util::shard::shard_ranges;
 
@@ -68,30 +74,29 @@ impl ExecConfig {
     }
 }
 
-/// Everything one shard worker hands back to the reducer.
+/// Everything one shard worker hands back to the reducer after a train
+/// step.
 #[derive(Debug, Default)]
 struct ShardOut {
     /// Σ per-example losses over the shard (full-batch mean = Σ/Bt).
     loss_sum: f64,
     /// Correct predictions in the shard.
     correct: usize,
-    /// Head gradients, already in full-batch (1/Bt) units.
-    dfc_w: Vec<f32>,
-    dfc_b: Vec<f32>,
-    /// Per conv layer (dw, db), full-batch units.
-    conv: Vec<(Vec<f32>, Vec<f32>)>,
-    /// Kept channels summed over layers (filled by worker 0 only).
+    /// Per layer: the parameter gradients ([`super::layers::BwdOut`]
+    /// order), already in full-batch (1/Bt) units.
+    grads: Vec<Vec<Vec<f32>>>,
+    /// Kept channels summed over conv layers (filled by worker 0 only).
     kept: usize,
 }
 
 /// Unwind insurance for the barrier protocol. Every worker owes the same
-/// fixed number of rendezvous per step (two per sparse layer); a worker
-/// that panics mid-step would otherwise leave its peers blocked forever
-/// on a `std::sync::Barrier` that cannot complete (std barriers have no
-/// poisoning). The guard tracks the waits still owed and pays them during
-/// unwinding, so peers proceed — at worst briefly computing on a stale or
-/// empty keep set, whose validity asserts make *them* panic and drain the
-/// same way — and the original panic then propagates out of
+/// fixed number of rendezvous per step (two per sparse conv layer); a
+/// worker that panics mid-step would otherwise leave its peers blocked
+/// forever on a `std::sync::Barrier` that cannot complete (std barriers
+/// have no poisoning). The guard tracks the waits still owed and pays them
+/// during unwinding, so peers proceed — at worst briefly computing on a
+/// stale or empty keep set, whose validity asserts make *them* panic and
+/// drain the same way — and the original panic then propagates out of
 /// `std::thread::scope`, aborting the step instead of deadlocking it.
 struct BarrierAttendance<'a> {
     barrier: &'a Barrier,
@@ -164,23 +169,24 @@ fn reduce_select(
     topk_channels(&imp, keep)
 }
 
-/// Data-parallel trainer over a [`SimpleCnn`]: owns the per-worker plan
-/// workspaces and runs [`ParallelExecutor::train_step`] as described in
-/// the module docs. Construct once and reuse — worker plans keep their
-/// buffer capacity across steps (and re-key in place when the batch size
-/// or shard sizes change, mirroring [`SimpleCnn::ensure_plans`]).
+/// Data-parallel trainer over any [`Sequential`]: owns the per-worker
+/// layer workspaces and runs [`ParallelExecutor::train_step`] /
+/// [`ParallelExecutor::eval_batch`] as described in the module docs.
+/// Construct once and reuse — worker workspaces keep their buffer capacity
+/// across steps (and re-key in place when the batch size or shard sizes
+/// change, mirroring [`Sequential::ensure_ws`]).
 #[derive(Debug)]
 pub struct ParallelExecutor {
     cfg: ExecConfig,
-    /// `worker_plans[w][l]`: worker w's plan for conv layer l.
-    worker_plans: Vec<Vec<Conv2dPlan>>,
+    /// `worker_ws[w][l]`: worker w's workspace for layer l.
+    worker_ws: Vec<Vec<LayerWs>>,
 }
 
 impl ParallelExecutor {
     /// An executor with no allocated workspaces yet (they grow on first
     /// step and are reused afterwards).
     pub fn new(cfg: ExecConfig) -> ParallelExecutor {
-        ParallelExecutor { cfg, worker_plans: Vec::new() }
+        ParallelExecutor { cfg, worker_ws: Vec::new() }
     }
 
     /// Configured worker count (shards per step; capped by the batch size
@@ -189,42 +195,43 @@ impl ParallelExecutor {
         self.cfg.threads
     }
 
-    /// Total im2col materializations across all worker plans — advances by
-    /// `depth × workers` per step when the fused path is healthy (each
-    /// worker builds each layer's columns once, in its forward).
+    /// Total im2col materializations across all worker workspaces —
+    /// advances by `conv_count × workers` per train step when the fused
+    /// path is healthy (each worker builds each conv layer's columns once,
+    /// in its forward).
     pub fn plan_cols_builds(&self) -> u64 {
-        self.worker_plans.iter().flatten().map(|p| p.cols_builds()).sum()
+        self.worker_ws.iter().flatten().map(|w| w.plan_cols_builds()).sum()
     }
 
-    /// Key the per-worker plans to the given shard sizes, forking from the
-    /// model's (already ensured) full-batch plans. Capacity is preserved
-    /// on re-key, so steady-state steps allocate nothing here.
-    fn ensure_worker_plans(&mut self, model: &SimpleCnn, shards: &[std::ops::Range<usize>]) {
-        let depth = model.cfg.depth;
-        if self.worker_plans.len() != shards.len() {
-            self.worker_plans.resize_with(shards.len(), Vec::new);
+    /// Key the per-worker workspaces to the given shard sizes. Conv plans
+    /// re-key in place, and the worker axis never shrinks — a small step
+    /// (e.g. the epoch-tail batch over fewer shards) parks the extra
+    /// workers' workspaces instead of dropping their grown buffers, so
+    /// steady-state steps allocate nothing here even when the shard count
+    /// varies.
+    fn ensure_worker_ws(&mut self, model: &Sequential, shards: &[std::ops::Range<usize>]) {
+        let nlayers = model.num_layers();
+        if self.worker_ws.len() < shards.len() {
+            self.worker_ws.resize_with(shards.len(), Vec::new);
         }
-        for (wp, r) in self.worker_plans.iter_mut().zip(shards) {
+        for (wws, r) in self.worker_ws.iter_mut().zip(shards) {
             let sbt = r.end - r.start;
-            wp.truncate(depth);
-            for (l, mp) in model.plans().iter().enumerate() {
-                if l < wp.len() {
-                    wp[l].ensure(mp.cfg().with_batch(sbt));
-                } else {
-                    wp.push(mp.for_batch(sbt));
-                }
+            wws.resize_with(nlayers, LayerWs::default);
+            for (l, ws) in wws.iter_mut().enumerate() {
+                model.layer(l).ensure_ws(ws, sbt);
             }
         }
     }
 
     /// One data-parallel SGD training step at `drop_rate`; the parallel
-    /// counterpart of [`SimpleCnn::train_step`] with identical semantics:
-    /// same loss/accuracy, same global channel selection, gradients equal
-    /// up to float re-association (bit-identical with one worker, and
-    /// bit-identical run-to-run at any fixed worker count).
+    /// counterpart of [`Sequential::train_step`] with identical semantics:
+    /// same loss/accuracy, same global channel selection, same dropout
+    /// masks, gradients equal up to float re-association (bit-identical
+    /// with one worker, and bit-identical run-to-run at any fixed worker
+    /// count).
     pub fn train_step(
         &mut self,
-        model: &mut SimpleCnn,
+        model: &mut Sequential,
         backend: &dyn Backend,
         x: &[f32],
         y: &[i32],
@@ -232,25 +239,28 @@ impl ParallelExecutor {
         lr: f32,
     ) -> Result<StepStats> {
         let bt = y.len();
-        let n_in = model.cfg.in_ch * model.cfg.img * model.cfg.img;
+        let n_in = model.in_shape().volume();
         if bt == 0 || x.len() != bt * n_in {
             bail!("bad batch geometry: {} inputs for {bt} labels", x.len());
         }
-        let depth = model.cfg.depth;
+        let nlayers = model.num_layers();
+        let classes = model.out_features();
         let shards = shard_ranges(bt, self.cfg.threads);
         let nw = shards.len();
-        model.ensure_plans(bt);
-        self.ensure_worker_plans(model, &shards);
+        // Only the per-worker workspaces are touched here — the model's
+        // own (serial-path) workspaces stay untouched and unallocated.
+        self.ensure_worker_ws(model, &shards);
+        let step = model.begin_step();
 
         let mut outs: Vec<ShardOut> = (0..nw).map(|_| ShardOut::default()).collect();
         let barrier = Barrier::new(nw);
         let imp_slots: Vec<Mutex<Vec<f32>>> = (0..nw).map(|_| Mutex::new(Vec::new())).collect();
         let keep_slot: Mutex<Vec<usize>> = Mutex::new(Vec::new());
-        let m: &SimpleCnn = model;
+        let m: &Sequential = model;
 
         std::thread::scope(|s| {
-            let worker_iter = shards.iter().zip(self.worker_plans.iter_mut()).zip(outs.iter_mut());
-            for (w, ((range, plans), out)) in worker_iter.enumerate() {
+            let worker_iter = shards.iter().zip(self.worker_ws.iter_mut()).zip(outs.iter_mut());
+            for (w, ((range, wws), out)) in worker_iter.enumerate() {
                 let (barrier, imp_slots, keep_slot) = (&barrier, &imp_slots, &keep_slot);
                 let range = range.clone();
                 s.spawn(move || {
@@ -258,70 +268,66 @@ impl ParallelExecutor {
                     let xs = &x[range.start * n_in..range.end * n_in];
                     let ys = &y[range.start..range.end];
 
-                    // Fixed rendezvous budget (two per sparse layer); the
-                    // guard pays any outstanding waits if we unwind, so a
-                    // panic here can never strand the other workers.
-                    let sparse_layers = (0..depth)
+                    // Fixed rendezvous budget (two per sparse conv layer);
+                    // the guard pays any outstanding waits if we unwind, so
+                    // a panic here can never strand the other workers.
+                    let sparse_layers = (0..nlayers)
                         .filter(|&l| {
-                            let c = m.conv_cfg(l, sbt);
-                            keep_channels(c.cout, drop_rate) < c.cout
+                            m.layer(l)
+                                .conv_geom()
+                                .is_some_and(|g| keep_channels(g.cout, drop_rate) < g.cout)
                         })
                         .count();
                     let attendance = BarrierAttendance::new(barrier, 2 * sparse_layers);
 
-                    // Shard-local forward + head/pool backward, all in
-                    // full-batch gradient units (grad_denom = bt).
-                    let (acts, zs, pooled, logits) = m.forward(backend, xs, sbt, plans);
+                    // Shard-local forward + loss, in full-batch gradient
+                    // units (grad_denom = bt). Dropout masks key on the
+                    // global example offset, so they match serial exactly.
+                    let ctx = FwdCtx { train: true, step, example_offset: range.start };
+                    let acts = m.forward_collect(backend, xs, sbt, wws, &ctx);
                     let (loss_sum, correct, dlogits) =
-                        softmax_ce_core(&logits, ys, m.cfg.classes, bt);
-                    let (dfc_w, dfc_b, dpooled) = m.head_backward(&pooled, &dlogits, sbt);
-                    let mut g = m.pool_backward(&dpooled, &zs[depth - 1], sbt);
+                        softmax_ce_core(&acts[nlayers], ys, classes, bt);
                     out.loss_sum = loss_sum;
                     out.correct = correct;
-                    out.dfc_w = dfc_w;
-                    out.dfc_b = dfc_b;
-                    out.conv = (0..depth).map(|_| (Vec::new(), Vec::new())).collect();
+                    out.grads = (0..nlayers).map(|_| Vec::new()).collect();
 
-                    // Conv stack backward, top-down. Selection is global:
-                    // publish importance partials, rendezvous, worker 0
-                    // reduces + broadcasts; dense layers skip the sync.
-                    for l in (0..depth).rev() {
-                        let cfg = *plans[l].cfg();
-                        let keep_count = keep_channels(cfg.cout, drop_rate);
-                        let keep = if keep_count == cfg.cout {
-                            (0..cfg.cout).collect::<Vec<_>>()
-                        } else {
+                    // Backward, top-down. Conv selection is global: publish
+                    // importance partials, rendezvous, worker 0 reduces +
+                    // broadcasts; dense conv layers skip the sync and keep
+                    // everything; non-conv layers run locally.
+                    let mut g = dlogits;
+                    for l in (0..nlayers).rev() {
+                        let layer = m.layer(l);
+                        let keep: Option<Vec<usize>> = layer.conv_geom().map(|geom| {
+                            let keep_count = keep_channels(geom.cout, drop_rate);
+                            if keep_count == geom.cout {
+                                return (0..geom.cout).collect();
+                            }
+                            let cfg = geom.with_batch(sbt);
                             *imp_slots[w].lock().expect("importance slot poisoned") =
                                 channel_abs_sums(&cfg, &g);
                             attendance.wait();
                             if w == 0 {
-                                let hw = cfg.hout() * cfg.wout();
-                                let sel = reduce_select(imp_slots, bt, hw, cfg.cout, keep_count);
+                                let hw = geom.hout() * geom.wout();
+                                let sel = reduce_select(imp_slots, bt, hw, geom.cout, keep_count);
                                 *keep_slot.lock().expect("keep slot poisoned") = sel;
                             }
                             attendance.wait();
                             keep_slot.lock().expect("keep slot poisoned").clone()
-                        };
+                        });
                         if w == 0 {
-                            out.kept += keep.len();
+                            out.kept += keep.as_ref().map_or(0, |k| k.len());
                         }
-                        let grads = backend.conv2d_bwd_planned_with(
-                            &mut plans[l],
-                            &acts[l],
-                            &m.convs[l].w,
-                            &g,
-                            &keep,
-                            l > 0,
-                        );
+                        let sel = match &keep {
+                            Some(k) => Selection::Keep(k),
+                            None => Selection::Local(drop_rate),
+                        };
+                        let bwd =
+                            layer.backward(backend, &acts[l], &g, sbt, &mut wws[l], sel, l > 0);
+                        out.grads[l] = bwd.grads;
                         if l > 0 {
-                            g = grads.dx;
-                            for (gv, &zv) in g.iter_mut().zip(&zs[l - 1]) {
-                                if zv <= 0.0 {
-                                    *gv = 0.0;
-                                }
-                            }
+                            g = bwd.dx;
                         }
-                        out.conv[l] = (grads.dw, grads.db);
                     }
                 });
             }
@@ -339,35 +345,29 @@ impl ParallelExecutor {
         }
         let kept = outs[0].kept;
 
-        // Gradient tree-reduction (fixed shard order) + SGD updates.
-        let mut dfc_w_parts = Vec::with_capacity(nw);
-        let mut dfc_b_parts = Vec::with_capacity(nw);
-        let mut conv_dw: Vec<Vec<Vec<f32>>> = (0..depth).map(|_| Vec::with_capacity(nw)).collect();
-        let mut conv_db: Vec<Vec<Vec<f32>>> = (0..depth).map(|_| Vec::with_capacity(nw)).collect();
+        // Gradient tree-reduction (fixed shard order) + SGD updates: for
+        // each layer, each parameter's shard parts reduce through the same
+        // pairwise tree the legacy executor used, then apply.
+        let mut parts: Vec<Vec<Vec<Vec<f32>>>> = (0..nlayers).map(|_| Vec::new()).collect();
         for o in outs {
-            dfc_w_parts.push(o.dfc_w);
-            dfc_b_parts.push(o.dfc_b);
-            for (l, (dw, db)) in o.conv.into_iter().enumerate() {
-                conv_dw[l].push(dw);
-                conv_db[l].push(db);
+            for (l, grads) in o.grads.into_iter().enumerate() {
+                for (p, gvec) in grads.into_iter().enumerate() {
+                    if parts[l].len() <= p {
+                        parts[l].push(Vec::with_capacity(nw));
+                    }
+                    parts[l][p].push(gvec);
+                }
             }
         }
-        let dfc_w = tree_reduce(dfc_w_parts);
-        let dfc_b = tree_reduce(dfc_b_parts);
-        for (wv, &dv) in model.fc_w.iter_mut().zip(&dfc_w) {
-            *wv -= lr * dv;
-        }
-        for (bv, &dv) in model.fc_b.iter_mut().zip(&dfc_b) {
-            *bv -= lr * dv;
-        }
-        for (l, (dw_parts, db_parts)) in conv_dw.into_iter().zip(conv_db).enumerate() {
-            let dw = tree_reduce(dw_parts);
-            let db = tree_reduce(db_parts);
-            for (wv, &dv) in model.convs[l].w.iter_mut().zip(&dw) {
-                *wv -= lr * dv;
+        for (l, pgrads) in parts.into_iter().enumerate() {
+            if pgrads.is_empty() {
+                continue;
             }
-            for (bv, &dv) in model.convs[l].b.iter_mut().zip(&db) {
-                *bv -= lr * dv;
+            let reduced: Vec<Vec<f32>> = pgrads.into_iter().map(tree_reduce).collect();
+            for (param, grad) in model.layer_mut(l).params_mut().into_iter().zip(&reduced) {
+                for (pv, &gv) in param.iter_mut().zip(grad) {
+                    *pv -= lr * gv;
+                }
             }
         }
 
@@ -375,26 +375,71 @@ impl ParallelExecutor {
             loss,
             acc: correct as f64 / bt as f64,
             kept_channels: kept,
-            total_channels: depth * model.cfg.width,
+            total_channels: model.total_channels(),
         })
+    }
+
+    /// Sharded forward-only evaluation: mean (loss, accuracy) over the
+    /// batch, **bit-identical** to [`Sequential::eval_batch`] at every
+    /// thread count — workers hand back per-example losses and the reducer
+    /// sums them in global example order. Panics on malformed batch
+    /// geometry (the loaders only produce well-formed batches).
+    pub fn eval_batch(
+        &mut self,
+        model: &Sequential,
+        backend: &dyn Backend,
+        x: &[f32],
+        y: &[i32],
+    ) -> (f64, f64) {
+        let bt = y.len();
+        let n_in = model.in_shape().volume();
+        assert!(bt > 0 && x.len() == bt * n_in, "bad eval batch geometry");
+        let nlayers = model.num_layers();
+        let classes = model.out_features();
+        let shards = shard_ranges(bt, self.cfg.threads);
+        self.ensure_worker_ws(model, &shards);
+
+        let mut outs: Vec<(Vec<f64>, usize)> = shards.iter().map(|_| (Vec::new(), 0)).collect();
+        std::thread::scope(|s| {
+            let worker_iter = shards.iter().zip(self.worker_ws.iter_mut()).zip(outs.iter_mut());
+            for ((range, wws), out) in worker_iter {
+                let range = range.clone();
+                s.spawn(move || {
+                    let sbt = range.end - range.start;
+                    let xs = &x[range.start * n_in..range.end * n_in];
+                    let ys = &y[range.start..range.end];
+                    let ctx = FwdCtx { train: false, step: 0, example_offset: range.start };
+                    let acts = model.forward_collect(backend, xs, sbt, wws, &ctx);
+                    *out = softmax_ce_examples(&acts[nlayers], ys, classes);
+                });
+            }
+        });
+
+        let (mut loss_sum, mut correct) = (0f64, 0usize);
+        for (losses, c) in &outs {
+            for &l in losses {
+                loss_sum += l;
+            }
+            correct += c;
+        }
+        (loss_sum / bt as f64, correct as f64 / bt as f64)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::{NativeBackend, SimpleCnnCfg};
+    use crate::backend::{simple_cnn, NativeBackend, SimpleCnnCfg};
     use crate::util::rng::Pcg;
 
-    fn tiny() -> SimpleCnn {
-        SimpleCnn::new(SimpleCnnCfg { in_ch: 1, img: 8, classes: 3, depth: 2, width: 4, seed: 7 })
+    fn tiny() -> Sequential {
+        simple_cnn(SimpleCnnCfg { in_ch: 1, img: 8, classes: 3, depth: 2, width: 4, seed: 7 })
     }
 
-    fn batch(m: &SimpleCnn, bt: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    fn batch(bt: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
         let mut rng = Pcg::new(seed, 1);
-        let n = m.cfg.in_ch * m.cfg.img * m.cfg.img;
-        let x = (0..bt * n).map(|_| rng.normal()).collect();
-        let y = (0..bt).map(|i| (i % m.cfg.classes) as i32).collect();
+        let x = (0..bt * 64).map(|_| rng.normal()).collect();
+        let y = (0..bt).map(|i| (i % 3) as i32).collect();
         (x, y)
     }
 
@@ -427,14 +472,14 @@ mod tests {
     }
 
     #[test]
-    fn worker_plans_build_cols_once_per_layer_per_step() {
+    fn worker_plans_build_cols_once_per_conv_per_step() {
         let be = NativeBackend::new();
         let mut m = tiny();
-        let (x, y) = batch(&m, 6, 13);
+        let (x, y) = batch(6, 13);
         let mut exec = ParallelExecutor::new(ExecConfig::with_threads(3));
         exec.train_step(&mut m, &be, &x, &y, 0.5, 0.05).unwrap();
-        let per_step = (m.cfg.depth * 3) as u64;
-        assert_eq!(exec.plan_cols_builds(), per_step, "one build per layer per worker");
+        let per_step = (m.conv_count() * 3) as u64;
+        assert_eq!(exec.plan_cols_builds(), per_step, "one build per conv per worker");
         exec.train_step(&mut m, &be, &x, &y, 0.5, 0.05).unwrap();
         assert_eq!(exec.plan_cols_builds(), 2 * per_step);
     }
@@ -443,12 +488,12 @@ mod tests {
     fn more_threads_than_examples_still_trains() {
         let be = NativeBackend::new();
         let mut m = tiny();
-        let (x, y) = batch(&m, 2, 5);
+        let (x, y) = batch(2, 5);
         let mut exec = ParallelExecutor::new(ExecConfig::with_threads(8));
         let stats = exec.train_step(&mut m, &be, &x, &y, 0.8, 0.05).unwrap();
         assert!(stats.loss.is_finite());
         assert_eq!(stats.kept_channels, 2, "D=0.8 at width 4 keeps 1 channel per layer");
-        assert_eq!(exec.worker_plans.len(), 2, "shards are capped at the batch size");
+        assert_eq!(exec.worker_ws.len(), 2, "shards are capped at the batch size");
     }
 
     #[test]
@@ -456,21 +501,35 @@ mod tests {
         let be = NativeBackend::new();
         let mut m = tiny();
         let mut exec = ParallelExecutor::new(ExecConfig::with_threads(2));
-        let (x8, y8) = batch(&m, 8, 3);
-        let (x4, y4) = batch(&m, 4, 4);
+        let (x8, y8) = batch(8, 3);
+        let (x4, y4) = batch(4, 4);
         exec.train_step(&mut m, &be, &x8, &y8, 0.0, 0.05).unwrap();
         let caps: Vec<Vec<[usize; 7]>> = exec
-            .worker_plans
+            .worker_ws
             .iter()
-            .map(|wp| wp.iter().map(|p| p.buffer_caps()).collect())
+            .map(|wws| wws.iter().filter_map(|w| w.plan_caps()).collect())
             .collect();
         exec.train_step(&mut m, &be, &x4, &y4, 0.0, 0.05).unwrap();
         exec.train_step(&mut m, &be, &x8, &y8, 0.0, 0.05).unwrap();
         let caps2: Vec<Vec<[usize; 7]>> = exec
-            .worker_plans
+            .worker_ws
             .iter()
-            .map(|wp| wp.iter().map(|p| p.buffer_caps()).collect())
+            .map(|wws| wws.iter().filter_map(|w| w.plan_caps()).collect())
             .collect();
         assert_eq!(caps, caps2, "shrinking then regrowing the batch must reuse capacity");
+    }
+
+    #[test]
+    fn sharded_eval_matches_serial_bitwise() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        let (x, y) = batch(10, 21);
+        m.train_step(&be, &x, &y, 0.5, 0.05).unwrap();
+        let want = m.eval_batch(&be, &x, &y);
+        for threads in [1usize, 2, 3, 8] {
+            let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+            let got = exec.eval_batch(&m, &be, &x, &y);
+            assert_eq!(got, want, "t{threads} eval must be bit-identical to serial");
+        }
     }
 }

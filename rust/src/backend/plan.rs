@@ -74,16 +74,6 @@ impl Conv2dPlan {
         self.cols_valid = false;
     }
 
-    /// A fresh plan for the same layer at sub-batch size `bt` — the
-    /// sharding primitive: the data-parallel executor forks one per-worker
-    /// plan per layer from the model's full-batch plans, so each worker
-    /// owns its buffers and the hot path takes no locks. Buffers start
-    /// empty (a shard never needs the full-batch capacity) and the fork
-    /// carries no cached columns or build counts.
-    pub fn for_batch(&self, bt: usize) -> Conv2dPlan {
-        Conv2dPlan::new(self.cfg.with_batch(bt))
-    }
-
     /// Drop the cached columns (call when `x` changed since the forward).
     pub fn invalidate_cols(&mut self) {
         self.cols_valid = false;
@@ -178,16 +168,4 @@ mod tests {
         assert_eq!(plan.buffer_caps()[0], caps[0], "capacity survives re-keying");
     }
 
-    #[test]
-    fn for_batch_forks_a_clean_sub_batch_plan() {
-        let c = cfg();
-        let mut plan = Conv2dPlan::new(c);
-        plan.build_cols(&vec![1f32; c.in_len()]);
-        let sub = plan.for_batch(3);
-        assert_eq!(sub.cfg().bt, 3);
-        assert_eq!((sub.cfg().cin, sub.cfg().h, sub.cfg().w), (c.cin, c.h, c.w));
-        assert_eq!(sub.cols_builds(), 0, "fork must not inherit build counts");
-        assert!(!sub.cols_valid, "fork must not inherit the cols cache");
-        assert_eq!(plan.cols_builds(), 1, "the source plan is untouched");
-    }
 }

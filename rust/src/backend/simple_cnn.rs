@@ -1,21 +1,18 @@
-//! Native SimpleCNN: the paper's Fig. 4 workhorse, trained entirely through
-//! the [`Backend`] trait — conv stack (3×3, first layer stride 2) + ReLU,
-//! global average pool, linear classifier, softmax cross-entropy, SGD.
+//! The paper's Fig. 4 workhorse model as a *thin constructor* over the
+//! layer graph: a stack of 3×3 convs (stride-2 stem) with ReLU, global
+//! average pool, and a linear classifier, assembled from
+//! [`crate::backend::layers`] building blocks.
 //!
-//! The model owns one [`Conv2dPlan`] per conv layer, so `train_step` runs
-//! the planned path: the forward caches each layer's im2col columns in its
-//! plan and the ssProp backward ([`Backend::conv2d_bwd_planned`]) consumes
-//! them — exactly one patch gather per layer per step, zero steady-state
-//! allocation in the plan buffers. A drop-rate schedule sparsifies
-//! training exactly as the AOT/PJRT path does; FLOPs accounting reuses the
-//! same Eq. 6/9 [`LayerSet`] machinery.
+//! Historically this module carried a hand-rolled model with its own
+//! forward/backward; the layer-graph refactor moved every loop into the
+//! layers verbatim, so [`simple_cnn`] builds a [`Sequential`] that replays
+//! the legacy model **bit-for-bit** — same parameter-init stream, same
+//! per-step loss bits, same checkpoint tensor names
+//! (`param['conv{l}.w']`, `param['fc.w']`, ...). The bit-identity suite
+//! `rust/tests/layer_graph_equivalence.rs` pins this against an embedded
+//! copy of the legacy implementation.
 
-use anyhow::{bail, Result};
-
-use super::plan::Conv2dPlan;
-use super::{Backend, Conv2d};
-use crate::flops::{ConvLayer, LayerSet};
-use crate::tensorstore::Tensor;
+use super::layers::{Conv2dLayer, GlobalAvgPool, Layer, Linear, ReLU, Sequential, Shape};
 use crate::util::rng::Pcg;
 
 /// Geometry/init knobs for a native SimpleCNN.
@@ -35,483 +32,79 @@ pub struct SimpleCnnCfg {
     pub seed: u64,
 }
 
-/// One conv layer's parameters.
-#[derive(Debug, Clone)]
-pub struct ConvBlock {
-    /// Weights, (width, cin, 3, 3) flattened OIHW.
-    pub w: Vec<f32>,
-    /// Bias, (width,).
-    pub b: Vec<f32>,
-    /// Input channels of this layer.
-    pub cin: usize,
-    /// Stride (2 on the stem layer, 1 elsewhere).
-    pub stride: usize,
-}
-
-/// Per-step statistics returned by [`SimpleCnn::train_step`].
-#[derive(Debug, Clone, Copy)]
-pub struct StepStats {
-    /// Mean softmax cross-entropy over the batch.
-    pub loss: f64,
-    /// Fraction of the batch classified correctly.
-    pub acc: f64,
-    /// Output channels actually back-propagated, summed over conv layers.
-    pub kept_channels: usize,
-    /// Total output channels over conv layers (kept == total when dense).
-    pub total_channels: usize,
-}
-
-/// The paper's Fig. 4 workhorse model (see module docs), trained entirely
-/// through the [`Backend`] trait.
-#[derive(Debug, Clone)]
-pub struct SimpleCnn {
-    /// Geometry/init knobs the model was built from.
-    pub cfg: SimpleCnnCfg,
-    /// Conv stack parameters, index 0 = the stride-2 stem.
-    pub convs: Vec<ConvBlock>,
-    /// Classifier weights, (width, classes) row-major.
-    pub fc_w: Vec<f32>,
-    /// Classifier bias, (classes,).
-    pub fc_b: Vec<f32>,
-    /// Per-layer conv plans (im2col cache + backward scratch), re-keyed by
-    /// [`SimpleCnn::ensure_plans`] when the batch size changes.
-    plans: Vec<Conv2dPlan>,
-}
-
-impl SimpleCnn {
-    /// Build and He-initialize a model from `cfg` (deterministic per seed).
-    pub fn new(cfg: SimpleCnnCfg) -> SimpleCnn {
-        assert!(cfg.depth >= 1 && cfg.width >= 1 && cfg.classes >= 1);
-        let mut rng = Pcg::new(cfg.seed ^ 0xC44, 29);
-        let mut convs = Vec::with_capacity(cfg.depth);
-        for l in 0..cfg.depth {
-            let cin = if l == 0 { cfg.in_ch } else { cfg.width };
-            let fan_in = (cin * 9) as f32;
-            let scale = (2.0 / fan_in).sqrt();
-            convs.push(ConvBlock {
-                w: (0..cfg.width * cin * 9).map(|_| rng.normal() * scale).collect(),
-                b: vec![0f32; cfg.width],
-                cin,
-                stride: if l == 0 { 2 } else { 1 },
-            });
-        }
-        let fc_scale = (2.0 / cfg.width as f32).sqrt();
-        SimpleCnn {
-            cfg,
-            convs,
-            fc_w: (0..cfg.width * cfg.classes).map(|_| rng.normal() * fc_scale).collect(),
-            fc_b: vec![0f32; cfg.classes],
-            plans: Vec::new(),
-        }
+/// Build and He-initialize a SimpleCNN layer graph from `cfg`
+/// (deterministic per seed; bit-identical to the historical model).
+pub fn simple_cnn(cfg: SimpleCnnCfg) -> Sequential {
+    assert!(cfg.depth >= 1 && cfg.width >= 1 && cfg.classes >= 1);
+    // One shared parameter stream, drawn in layer order — the exact stream
+    // the legacy constructor used.
+    let mut rng = Pcg::new(cfg.seed ^ 0xC44, 29);
+    let mut parts: Vec<(String, Box<dyn Layer>)> = Vec::new();
+    let mut side = cfg.img;
+    for l in 0..cfg.depth {
+        let cin = if l == 0 { cfg.in_ch } else { cfg.width };
+        let stride = if l == 0 { 2 } else { 1 };
+        let conv = Conv2dLayer::init(&mut rng, cin, side, side, cfg.width, 3, stride, 1);
+        side = conv.cfg_at(1).hout();
+        parts.push((format!("conv{l}"), Box::new(conv)));
+        parts.push((String::new(), Box::new(ReLU)));
     }
-
-    /// Key the per-layer plans to batch size `bt`, preserving every
-    /// buffer's capacity. Called by `train_step`; also useful to prewarm
-    /// before a timed loop.
-    pub fn ensure_plans(&mut self, bt: usize) {
-        for l in 0..self.cfg.depth {
-            let cfg = self.conv_cfg(l, bt);
-            if l < self.plans.len() {
-                self.plans[l].ensure(cfg);
-            } else {
-                self.plans.push(Conv2dPlan::new(cfg));
-            }
-        }
-    }
-
-    /// Read-only view of the per-layer plans (workspace-reuse tests).
-    pub fn plans(&self) -> &[Conv2dPlan] {
-        &self.plans
-    }
-
-    /// Total im2col materializations across layers since construction —
-    /// advances by exactly `depth` per `train_step` on the fused path.
-    pub fn plan_cols_builds(&self) -> u64 {
-        self.plans.iter().map(|p| p.cols_builds()).sum()
-    }
-
-    /// Spatial size of layer `l`'s input feature map.
-    fn in_size(&self, l: usize) -> usize {
-        if l == 0 {
-            self.cfg.img
-        } else {
-            super::im2col::out_size(self.cfg.img, 3, 2, 1)
-        }
-    }
-
-    /// Conv geometry for layer `l` at batch size `bt`.
-    pub fn conv_cfg(&self, l: usize, bt: usize) -> Conv2d {
-        let s = self.in_size(l);
-        Conv2d {
-            bt,
-            cin: self.convs[l].cin,
-            h: s,
-            w: s,
-            cout: self.cfg.width,
-            k: 3,
-            stride: self.convs[l].stride,
-            padding: 1,
-        }
-    }
-
-    /// Conv inventory for Eq. 6/9 FLOPs accounting (no BN in this model).
-    pub fn layer_set(&self) -> LayerSet {
-        let mut set = LayerSet::default();
-        for l in 0..self.cfg.depth {
-            let c = self.conv_cfg(l, 1);
-            set.convs.push(ConvLayer {
-                cin: c.cin,
-                cout: c.cout,
-                k: c.k,
-                hout: c.hout(),
-                wout: c.wout(),
-                counted_bn: false,
-            });
-        }
-        set
-    }
-
-    /// Forward pass keeping every intermediate needed for backward:
-    /// `acts[l]` is layer l's input (acts[0] = x), `zs[l]` its pre-ReLU
-    /// output; returns (acts, zs, pooled, logits). Runs through the
-    /// planned path, leaving each layer's im2col columns cached in its
-    /// plan for the backward. Crate-visible so the data-parallel executor
-    /// can run the identical forward per shard on per-worker plans.
-    #[allow(clippy::type_complexity)]
-    pub(crate) fn forward(
-        &self,
-        backend: &dyn Backend,
-        x: &[f32],
-        bt: usize,
-        plans: &mut [Conv2dPlan],
-    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<f32>, Vec<f32>) {
-        let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
-        let mut zs: Vec<Vec<f32>> = Vec::with_capacity(self.cfg.depth);
-        for l in 0..self.cfg.depth {
-            let cb = &self.convs[l];
-            let z = backend.conv2d_fwd_planned(&mut plans[l], &acts[l], &cb.w, Some(&cb.b));
-            let a: Vec<f32> = z.iter().map(|&v| v.max(0.0)).collect();
-            zs.push(z);
-            acts.push(a);
-        }
-        // global average pool over the last feature map -> (bt, width)
-        let last = self.conv_cfg(self.cfg.depth - 1, bt);
-        let hw = last.hout() * last.wout();
-        let width = self.cfg.width;
-        let mut pooled = vec![0f32; bt * width];
-        let top = &acts[self.cfg.depth];
-        for b in 0..bt {
-            for f in 0..width {
-                let plane = &top[(b * width + f) * hw..][..hw];
-                pooled[b * width + f] = plane.iter().sum::<f32>() / hw as f32;
-            }
-        }
-        // logits = pooled . fc_w + fc_b
-        let classes = self.cfg.classes;
-        let mut logits = backend.gemm(bt, width, classes, &pooled, &self.fc_w);
-        for b in 0..bt {
-            for (c, &bias) in self.fc_b.iter().enumerate() {
-                logits[b * classes + c] += bias;
-            }
-        }
-        (acts, zs, pooled, logits)
-    }
-
-    /// Classifier-head backward for a (sub-)batch: given the pooled
-    /// features and `dlogits`, returns (d fc_w, d fc_b, d pooled). Pure
-    /// gradient computation (no update), so the serial step and the
-    /// data-parallel executor's shard workers share it verbatim — the
-    /// executor tree-reduces the returned pieces across shards.
-    #[allow(clippy::type_complexity)]
-    pub(crate) fn head_backward(
-        &self,
-        pooled: &[f32],
-        dlogits: &[f32],
-        bt: usize,
-    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let (width, classes) = (self.cfg.width, self.cfg.classes);
-        let mut dpooled = vec![0f32; bt * width];
-        for b in 0..bt {
-            let drow = &dlogits[b * classes..][..classes];
-            for f in 0..width {
-                let wrow = &self.fc_w[f * classes..][..classes];
-                let mut acc_dp = 0f32;
-                for (dv, wv) in drow.iter().zip(wrow) {
-                    acc_dp += dv * wv;
-                }
-                dpooled[b * width + f] = acc_dp;
-            }
-        }
-        let mut dfc_w = vec![0f32; width * classes];
-        let mut dfc_b = vec![0f32; classes];
-        for b in 0..bt {
-            let drow = &dlogits[b * classes..][..classes];
-            let prow = &pooled[b * width..][..width];
-            for (f, &pv) in prow.iter().enumerate() {
-                let dst = &mut dfc_w[f * classes..][..classes];
-                for (dw, &dv) in dst.iter_mut().zip(drow) {
-                    *dw += pv * dv;
-                }
-            }
-            for (db, &dv) in dfc_b.iter_mut().zip(drow) {
-                *db += dv;
-            }
-        }
-        (dfc_w, dfc_b, dpooled)
-    }
-
-    /// Global-average-pool backward through the top ReLU: spread `dpooled`
-    /// uniformly over each feature plane, zeroing pixels whose pre-ReLU
-    /// activation `ztop` was non-positive. Shared by the serial step and
-    /// the shard workers (each passes its own sub-batch slices).
-    pub(crate) fn pool_backward(&self, dpooled: &[f32], ztop: &[f32], bt: usize) -> Vec<f32> {
-        let width = self.cfg.width;
-        let last = self.conv_cfg(self.cfg.depth - 1, bt);
-        let hw = last.hout() * last.wout();
-        let inv_hw = 1.0 / hw as f32;
-        let mut g = vec![0f32; bt * width * hw];
-        for b in 0..bt {
-            for f in 0..width {
-                let gv = dpooled[b * width + f] * inv_hw;
-                let base = (b * width + f) * hw;
-                for pix in 0..hw {
-                    if ztop[base + pix] > 0.0 {
-                        g[base + pix] = gv;
-                    }
-                }
-            }
-        }
-        g
-    }
-
-    /// One SGD training step at `drop_rate`; returns loss/acc/kept-channel
-    /// stats. `x` is (bt, in_ch, img, img) flattened, `y` integer labels.
-    pub fn train_step(
-        &mut self,
-        backend: &dyn Backend,
-        x: &[f32],
-        y: &[i32],
-        drop_rate: f64,
-        lr: f32,
-    ) -> Result<StepStats> {
-        let bt = y.len();
-        if bt == 0 || x.len() != bt * self.cfg.in_ch * self.cfg.img * self.cfg.img {
-            bail!("bad batch geometry: {} inputs for {bt} labels", x.len());
-        }
-        // Planned path: take the plans out so the forward can borrow them
-        // alongside `self`; the forward caches each layer's cols in its
-        // plan and the backward below consumes them — one im2col per
-        // layer per step.
-        self.ensure_plans(bt);
-        let mut plans = std::mem::take(&mut self.plans);
-        let (acts, zs, pooled, logits) = self.forward(backend, x, bt, &mut plans);
-        self.plans = plans;
-        let (loss_sum, correct, dlogits) = softmax_ce_core(&logits, y, self.cfg.classes, bt);
-        let loss = loss_sum / bt as f64;
-        let acc = correct as f64 / bt as f64;
-        if !loss.is_finite() {
-            bail!("non-finite loss at drop rate {drop_rate}");
-        }
-
-        // FC backward + update, then pool backward -> gradient on the top
-        // feature map through its ReLU
-        let (dfc_w, dfc_b, dpooled) = self.head_backward(&pooled, &dlogits, bt);
-        let mut g = self.pool_backward(&dpooled, &zs[self.cfg.depth - 1], bt);
-        for (wv, &dv) in self.fc_w.iter_mut().zip(&dfc_w) {
-            *wv -= lr * dv;
-        }
-        for (bv, &dv) in self.fc_b.iter_mut().zip(&dfc_b) {
-            *bv -= lr * dv;
-        }
-
-        // conv stack backward (ssProp-selected) + SGD updates, consuming
-        // the im2col columns the forward cached in each layer's plan — no
-        // patch re-gather (this was the ROADMAP "cols built twice" item).
-        let mut kept = 0usize;
-        for l in (0..self.cfg.depth).rev() {
-            // layer 0 never consumes dx — let the backend skip that GEMM
-            let grads = backend.conv2d_bwd_planned(
-                &mut self.plans[l],
-                &acts[l],
-                &self.convs[l].w,
-                &g,
-                drop_rate,
-                l > 0,
-            );
-            kept += grads.keep_idx.len();
-            for (wv, &dv) in self.convs[l].w.iter_mut().zip(&grads.dw) {
-                *wv -= lr * dv;
-            }
-            for (bv, &dv) in self.convs[l].b.iter_mut().zip(&grads.db) {
-                *bv -= lr * dv;
-            }
-            if l > 0 {
-                let zprev = &zs[l - 1];
-                g = grads.dx;
-                for (gv, &zv) in g.iter_mut().zip(zprev) {
-                    if zv <= 0.0 {
-                        *gv = 0.0;
-                    }
-                }
-            }
-        }
-
-        Ok(StepStats {
-            loss,
-            acc,
-            kept_channels: kept,
-            total_channels: self.cfg.depth * self.cfg.width,
-        })
-    }
-
-    /// Forward-only loss/accuracy on a batch (throwaway plans: eval has no
-    /// backward to reuse the columns, and `&self` keeps it shareable).
-    pub fn eval_batch(&self, backend: &dyn Backend, x: &[f32], y: &[i32]) -> (f64, f64) {
-        let bt = y.len();
-        let mut plans: Vec<Conv2dPlan> =
-            (0..self.cfg.depth).map(|l| Conv2dPlan::new(self.conv_cfg(l, bt))).collect();
-        let (_, _, _, logits) = self.forward(backend, x, bt, &mut plans);
-        let (loss, acc, _) = softmax_ce(&logits, y, self.cfg.classes);
-        (loss, acc)
-    }
-
-    /// Parameters as named tensors (checkpoint format shared with the AOT
-    /// path's `*.init.tstore`).
-    pub fn state_tensors(&self) -> Vec<(String, Tensor)> {
-        let mut out = Vec::new();
-        for (l, cb) in self.convs.iter().enumerate() {
-            let shape = vec![self.cfg.width, cb.cin, 3, 3];
-            out.push((format!("param['conv{l}.w']"), Tensor::from_f32(shape, &cb.w)));
-            let bias = Tensor::from_f32(vec![self.cfg.width], &cb.b);
-            out.push((format!("param['conv{l}.b']"), bias));
-        }
-        out.push((
-            "param['fc.w']".to_string(),
-            Tensor::from_f32(vec![self.cfg.width, self.cfg.classes], &self.fc_w),
-        ));
-        out.push((
-            "param['fc.b']".to_string(),
-            Tensor::from_f32(vec![self.cfg.classes], &self.fc_b),
-        ));
-        out
-    }
-
-    /// Restore parameters saved by [`SimpleCnn::state_tensors`].
-    pub fn load_state_tensors(&mut self, tensors: &[(String, Tensor)]) -> Result<()> {
-        for (name, t) in tensors {
-            let vals = t.to_f32();
-            let dst: &mut Vec<f32> = if let Some(rest) = name.strip_prefix("param['conv") {
-                let (idx, field) = rest
-                    .split_once('.')
-                    .map(|(i, f)| (i, f.trim_end_matches("']")))
-                    .unwrap_or(("", ""));
-                let l: usize = idx.parse().map_err(|_| anyhow::anyhow!("bad layer in {name:?}"))?;
-                if l >= self.convs.len() {
-                    bail!("checkpoint layer {l} out of range");
-                }
-                match field {
-                    "w" => &mut self.convs[l].w,
-                    "b" => &mut self.convs[l].b,
-                    other => bail!("unknown conv field {other:?} in {name:?}"),
-                }
-            } else {
-                match name.as_str() {
-                    "param['fc.w']" => &mut self.fc_w,
-                    "param['fc.b']" => &mut self.fc_b,
-                    other => bail!("unknown state leaf {other:?}"),
-                }
-            };
-            if dst.len() != vals.len() {
-                bail!("shape mismatch for {name:?}: {} vs {}", vals.len(), dst.len());
-            }
-            *dst = vals;
-        }
-        Ok(())
-    }
-}
-
-/// Softmax cross-entropy core over integer labels for a (sub-)batch:
-/// returns (sum of per-example losses, correct count, d loss / d logits)
-/// with `1 / grad_denom` folded into the gradient. The serial step passes
-/// `grad_denom = bt`; the data-parallel executor passes the *full* batch
-/// size from every shard, so per-shard gradients are already in full-batch
-/// units and reduce by plain summation.
-pub(crate) fn softmax_ce_core(
-    logits: &[f32],
-    y: &[i32],
-    classes: usize,
-    grad_denom: usize,
-) -> (f64, usize, Vec<f32>) {
-    let bt = y.len();
-    let mut dlogits = vec![0f32; bt * classes];
-    let (mut loss, mut correct) = (0f64, 0usize);
-    for b in 0..bt {
-        let row = &logits[b * classes..][..classes];
-        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-        let mut denom = 0f32;
-        for &v in row {
-            denom += (v - max).exp();
-        }
-        let label = y[b] as usize;
-        loss += (denom.ln() - (row[label] - max)) as f64;
-        let argmax = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .map(|(i, _)| i)
-            .unwrap_or(0);
-        if argmax == label {
-            correct += 1;
-        }
-        let drow = &mut dlogits[b * classes..][..classes];
-        for (c, &v) in row.iter().enumerate() {
-            let p = (v - max).exp() / denom;
-            drow[c] = (p - if c == label { 1.0 } else { 0.0 }) / grad_denom as f32;
-        }
-    }
-    (loss, correct, dlogits)
-}
-
-/// Softmax cross-entropy over integer labels: returns (mean loss, accuracy,
-/// d loss / d logits) with the 1/Bt factor folded into the gradient.
-fn softmax_ce(logits: &[f32], y: &[i32], classes: usize) -> (f64, f64, Vec<f32>) {
-    let bt = y.len();
-    let (loss_sum, correct, dlogits) = softmax_ce_core(logits, y, classes, bt);
-    (loss_sum / bt as f64, correct as f64 / bt as f64, dlogits)
+    parts.push((String::new(), Box::new(GlobalAvgPool::new(cfg.width, side, side))));
+    parts.push(("fc".to_string(), Box::new(Linear::init(&mut rng, cfg.width, cfg.classes))));
+    let in_shape = Shape::Spatial { c: cfg.in_ch, h: cfg.img, w: cfg.img };
+    Sequential::new(format!("simple-cnn-d{}-w{}", cfg.depth, cfg.width), in_shape, parts)
+        .expect("simple-cnn geometry is always valid")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::backend::NativeBackend;
+    use crate::tensorstore::Tensor;
 
-    fn tiny() -> SimpleCnn {
-        SimpleCnn::new(SimpleCnnCfg { in_ch: 1, img: 8, classes: 3, depth: 2, width: 4, seed: 7 })
+    fn tiny() -> Sequential {
+        simple_cnn(SimpleCnnCfg { in_ch: 1, img: 8, classes: 3, depth: 2, width: 4, seed: 7 })
     }
 
-    fn batch(model: &SimpleCnn, bt: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    fn batch(bt: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
         let mut rng = Pcg::new(seed, 1);
-        let n = model.cfg.in_ch * model.cfg.img * model.cfg.img;
-        let x = (0..bt * n).map(|_| rng.normal()).collect();
-        let y = (0..bt).map(|i| (i % model.cfg.classes) as i32).collect();
+        let x = (0..bt * 64).map(|_| rng.normal()).collect();
+        let y = (0..bt).map(|i| (i % 3) as i32).collect();
         (x, y)
     }
 
     #[test]
-    fn softmax_ce_uniform_logits() {
-        let (loss, acc, d) = softmax_ce(&[0.0, 0.0, 0.0, 0.0], &[1, 0], 2);
-        assert!((loss - (2f64).ln()).abs() < 1e-6);
-        assert!((0.0..=1.0).contains(&acc));
-        // gradient rows sum to zero (softmax minus one-hot)
-        assert!((d[0] + d[1]).abs() < 1e-6);
-        assert!((d[2] + d[3]).abs() < 1e-6);
+    fn graph_shape_matches_legacy_model() {
+        let m = tiny();
+        // conv+relu per depth, then gap + fc
+        assert_eq!(m.num_layers(), 2 * 2 + 2);
+        assert_eq!(m.conv_count(), 2);
+        assert_eq!(m.total_channels(), 8);
+        assert_eq!(m.out_features(), 3);
+        assert_eq!(m.spec(), "simple-cnn-d2-w4");
+        // stride-2 stem halves the 8px input; later convs preserve it
+        let set = m.layer_set();
+        assert_eq!(set.convs.len(), 2);
+        assert_eq!((set.convs[0].hout, set.convs[1].hout), (4, 4));
+        assert_eq!(set.convs[0].cin, 1);
+        assert_eq!(set.convs[1].cin, 4);
+    }
+
+    #[test]
+    fn construction_is_deterministic_per_seed() {
+        let a = tiny();
+        let b = tiny();
+        assert_eq!(a.flat_params(), b.flat_params());
+        let c =
+            simple_cnn(SimpleCnnCfg { in_ch: 1, img: 8, classes: 3, depth: 2, width: 4, seed: 8 });
+        assert_ne!(a.flat_params(), c.flat_params());
     }
 
     #[test]
     fn train_step_reduces_loss_on_fixed_batch() {
         let be = NativeBackend::new();
         let mut m = tiny();
-        let (x, y) = batch(&m, 6, 3);
+        let (x, y) = batch(6, 3);
         let first = m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
         for _ in 0..20 {
             m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
@@ -526,41 +119,52 @@ mod tests {
         let be = NativeBackend::new();
         let mut dense = tiny();
         let mut sparse = tiny();
-        let (x, y) = batch(&dense, 4, 9);
+        let (x, y) = batch(4, 9);
         dense.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
         let stats = sparse.train_step(&be, &x, &y, 0.8, 0.05).unwrap();
         // width 4 at D=0.8: keep round(0.8) = 1 channel per layer
         assert_eq!(stats.kept_channels, 2);
         assert_eq!(stats.total_channels, 8);
-        assert_ne!(dense.convs[0].w, sparse.convs[0].w);
+        assert_ne!(dense.flat_params(), sparse.flat_params());
     }
 
     #[test]
     fn train_step_builds_cols_once_per_layer() {
         let be = NativeBackend::new();
         let mut m = tiny();
-        let (x, y) = batch(&m, 4, 13);
+        let (x, y) = batch(4, 13);
         assert_eq!(m.plan_cols_builds(), 0);
         m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
-        assert_eq!(m.plan_cols_builds(), m.cfg.depth as u64, "fwd cols reused by bwd");
+        assert_eq!(m.plan_cols_builds(), 2, "fwd cols reused by bwd");
         m.train_step(&be, &x, &y, 0.8, 0.05).unwrap();
-        assert_eq!(m.plan_cols_builds(), 2 * m.cfg.depth as u64);
+        assert_eq!(m.plan_cols_builds(), 4);
     }
 
     #[test]
-    fn state_tensor_roundtrip() {
+    fn state_tensors_keep_the_legacy_names() {
         let mut a = tiny();
         let be = NativeBackend::new();
-        let (x, y) = batch(&a, 4, 5);
+        let (x, y) = batch(4, 5);
         a.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
         let saved = a.state_tensors();
         assert_eq!(saved.len(), 2 * 2 + 2);
+        let names: Vec<&str> = saved.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "param['conv0.w']",
+                "param['conv0.b']",
+                "param['conv1.w']",
+                "param['conv1.b']",
+                "param['fc.w']",
+                "param['fc.b']"
+            ]
+        );
 
         let mut b = tiny();
-        assert_ne!(a.convs[0].w, b.convs[0].w);
+        assert_ne!(a.flat_params(), b.flat_params());
         b.load_state_tensors(&saved).unwrap();
-        assert_eq!(a.convs[0].w, b.convs[0].w);
-        assert_eq!(a.fc_w, b.fc_w);
+        assert_eq!(a.flat_params(), b.flat_params());
         let (la, _) = a.eval_batch(&be, &x, &y);
         let (lb, _) = b.eval_batch(&be, &x, &y);
         assert_eq!(la, lb);

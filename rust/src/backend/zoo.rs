@@ -1,0 +1,368 @@
+//! Model zoo: the `--model` spec language and its presets. A spec is a
+//! preset name plus optional dash-separated parameters —
+//! `simple-cnn-d4-w16`, `vgg-tiny-w12`, `dropout-cnn-w8-p25` — parsed into
+//! a typed [`ModelSpec`] (malformed specs produce the typed
+//! [`ModelSpecError`], not a stringly error) and built into a
+//! [`Sequential`] for any dataset geometry.
+//!
+//! Presets:
+//!
+//! | spec | stack | exercises |
+//! |---|---|---|
+//! | `simple-cnn[-dD-wW]` | D× (3×3 conv + ReLU), stride-2 stem; GAP; fc | the paper's Fig. 4 model (legacy-bitwise) |
+//! | `vgg-tiny[-wW]` | 2× (conv W + ReLU), maxpool; conv 2W + ReLU, maxpool; GAP; fc | MaxPool in the backward path |
+//! | `dropout-cnn[-wW-pP]` | stride-2 conv W, ReLU, Dropout P%; conv W, ReLU, Dropout P%; GAP; fc | the paper's ssProp+Dropout compatibility claim |
+
+use std::fmt;
+
+use anyhow::Result;
+
+use super::im2col::out_size;
+use super::layers::{
+    Conv2dLayer, Dropout, GlobalAvgPool, Layer, Linear, MaxPool2d, ReLU, Sequential, Shape,
+};
+use super::simple_cnn::{simple_cnn, SimpleCnnCfg};
+use crate::util::rng::Pcg;
+
+/// A parsed `--model` spec: preset plus its resolved parameters.
+/// `simple-cnn` leaves depth/width `None` until
+/// [`ModelSpec::with_defaults`] fills them (the trainer supplies its
+/// `--depth`/`--width` knobs), so `--model simple-cnn --depth 4` composes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelSpec {
+    /// The paper's Fig. 4 stack (see [`simple_cnn`]).
+    SimpleCnn {
+        /// Conv layers (None = trainer default).
+        depth: Option<usize>,
+        /// Channels per conv layer (None = trainer default).
+        width: Option<usize>,
+    },
+    /// A tiny VGG-style stack with two max pools.
+    VggTiny {
+        /// Base channel count (the last conv block doubles it).
+        width: usize,
+    },
+    /// SimpleCNN-like stack with Dropout after each ReLU.
+    DropoutCnn {
+        /// Channels per conv layer.
+        width: usize,
+        /// Drop probability in percent (1..=99).
+        rate_pct: usize,
+    },
+}
+
+/// Typed parse error for `--model` specs — the CLI error path matches on
+/// these variants instead of scraping strings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ModelSpecError {
+    /// The spec names no known preset.
+    UnknownPreset {
+        /// The offending spec string.
+        spec: String,
+    },
+    /// A parameter token is malformed (unknown key, missing digits, or a
+    /// key the preset does not take).
+    BadParam {
+        /// The offending spec string.
+        spec: String,
+        /// The token that failed to parse.
+        token: String,
+    },
+    /// A parameter parsed but its value is out of range (zero dimensions,
+    /// dropout percentage outside 1..=99).
+    OutOfRange {
+        /// The offending spec string.
+        spec: String,
+        /// The token whose value is out of range.
+        token: String,
+    },
+}
+
+impl fmt::Display for ModelSpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ModelSpecError::UnknownPreset { spec } => {
+                write!(f, "unknown model preset {spec:?} (known: {})", PRESETS.join(", "))
+            }
+            ModelSpecError::BadParam { spec, token } => {
+                write!(f, "bad parameter {token:?} in model spec {spec:?}")
+            }
+            ModelSpecError::OutOfRange { spec, token } => {
+                write!(f, "parameter {token:?} out of range in model spec {spec:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ModelSpecError {}
+
+/// Preset names the spec parser recognizes (longest-match first).
+pub const PRESETS: &[&str] = &["simple-cnn", "vgg-tiny", "dropout-cnn"];
+
+/// Parse a `--model` spec string into a typed [`ModelSpec`].
+pub fn parse_model_spec(spec: &str) -> Result<ModelSpec, ModelSpecError> {
+    let (preset, rest) = PRESETS
+        .iter()
+        .find_map(|p| spec.strip_prefix(p).map(|rest| (*p, rest)))
+        .ok_or_else(|| ModelSpecError::UnknownPreset { spec: spec.to_string() })?;
+    let tokens: Vec<&str> = if rest.is_empty() {
+        Vec::new()
+    } else {
+        match rest.strip_prefix('-') {
+            // "simple-cnnx" must not parse as simple-cnn + garbage
+            None => return Err(ModelSpecError::UnknownPreset { spec: spec.to_string() }),
+            Some(tail) => tail.split('-').collect(),
+        }
+    };
+
+    let (mut depth, mut width, mut rate_pct) = (None, None, None);
+    for token in tokens {
+        let bad = || ModelSpecError::BadParam { spec: spec.to_string(), token: token.to_string() };
+        let (key, digits) = token.split_at(1.min(token.len()));
+        let value: usize = digits.parse().map_err(|_| bad())?;
+        let slot = match key {
+            "d" if preset == "simple-cnn" => &mut depth,
+            "w" => &mut width,
+            "p" if preset == "dropout-cnn" => &mut rate_pct,
+            _ => return Err(bad()),
+        };
+        if slot.is_some() {
+            return Err(bad());
+        }
+        if value == 0 {
+            return Err(ModelSpecError::OutOfRange {
+                spec: spec.to_string(),
+                token: token.to_string(),
+            });
+        }
+        *slot = Some(value);
+    }
+
+    match preset {
+        "simple-cnn" => Ok(ModelSpec::SimpleCnn { depth, width }),
+        "vgg-tiny" => Ok(ModelSpec::VggTiny { width: width.unwrap_or(8) }),
+        "dropout-cnn" => {
+            let rate_pct = rate_pct.unwrap_or(25);
+            if rate_pct >= 100 {
+                return Err(ModelSpecError::OutOfRange {
+                    spec: spec.to_string(),
+                    token: format!("p{rate_pct}"),
+                });
+            }
+            Ok(ModelSpec::DropoutCnn { width: width.unwrap_or(8), rate_pct })
+        }
+        other => unreachable!("preset {other:?} is listed in PRESETS but not parsed"),
+    }
+}
+
+impl ModelSpec {
+    /// Fill `simple-cnn`'s unset depth/width from the trainer's knobs
+    /// (no-op for fully-specified specs and other presets).
+    pub fn with_defaults(self, depth: usize, width: usize) -> ModelSpec {
+        match self {
+            ModelSpec::SimpleCnn { depth: d, width: w } => ModelSpec::SimpleCnn {
+                depth: Some(d.unwrap_or(depth)),
+                width: Some(w.unwrap_or(width)),
+            },
+            other => other,
+        }
+    }
+
+    /// The fully-resolved spec string (parse → resolve → canonical is
+    /// idempotent); checkpoint sidecars record this.
+    pub fn canonical(&self) -> String {
+        match *self {
+            ModelSpec::SimpleCnn { depth, width } => {
+                format!("simple-cnn-d{}-w{}", depth.unwrap_or(2), width.unwrap_or(8))
+            }
+            ModelSpec::VggTiny { width } => format!("vgg-tiny-w{width}"),
+            ModelSpec::DropoutCnn { width, rate_pct } => {
+                format!("dropout-cnn-w{width}-p{rate_pct}")
+            }
+        }
+    }
+}
+
+/// Build a [`Sequential`] for `spec` over a `(in_ch, img, img)` input with
+/// `classes` logits. Fails when the preset's pools cannot fit the image.
+pub fn build_model(
+    spec: &ModelSpec,
+    in_ch: usize,
+    img: usize,
+    classes: usize,
+    seed: u64,
+) -> Result<Sequential> {
+    match *spec {
+        ModelSpec::SimpleCnn { depth, width } => Ok(simple_cnn(SimpleCnnCfg {
+            in_ch,
+            img,
+            classes,
+            depth: depth.unwrap_or(2),
+            width: width.unwrap_or(8),
+            seed,
+        })),
+        ModelSpec::VggTiny { width } => build_vgg_tiny(spec, in_ch, img, classes, seed, width),
+        ModelSpec::DropoutCnn { width, rate_pct } => {
+            build_dropout_cnn(spec, in_ch, img, classes, seed, width, rate_pct)
+        }
+    }
+}
+
+/// conv W + ReLU ×2, maxpool2; conv 2W + ReLU, maxpool2; GAP; fc.
+fn build_vgg_tiny(
+    spec: &ModelSpec,
+    in_ch: usize,
+    img: usize,
+    classes: usize,
+    seed: u64,
+    width: usize,
+) -> Result<Sequential> {
+    if img < 4 {
+        anyhow::bail!("vgg-tiny needs at least a 4x4 input (got {img}x{img})");
+    }
+    let mut rng = Pcg::new(seed ^ 0xC44, 29);
+    let mut parts: Vec<(String, Box<dyn Layer>)> = Vec::new();
+    let mut side = img;
+    let conv0 = Conv2dLayer::init(&mut rng, in_ch, side, side, width, 3, 1, 1);
+    parts.push(("conv0".to_string(), Box::new(conv0)));
+    parts.push((String::new(), Box::new(ReLU)));
+    let conv1 = Conv2dLayer::init(&mut rng, width, side, side, width, 3, 1, 1);
+    parts.push(("conv1".to_string(), Box::new(conv1)));
+    parts.push((String::new(), Box::new(ReLU)));
+    parts.push((String::new(), Box::new(MaxPool2d::new(width, side, side, 2, 2))));
+    side = out_size(side, 2, 2, 0);
+    let conv2 = Conv2dLayer::init(&mut rng, width, side, side, 2 * width, 3, 1, 1);
+    parts.push(("conv2".to_string(), Box::new(conv2)));
+    parts.push((String::new(), Box::new(ReLU)));
+    parts.push((String::new(), Box::new(MaxPool2d::new(2 * width, side, side, 2, 2))));
+    side = out_size(side, 2, 2, 0);
+    parts.push((String::new(), Box::new(GlobalAvgPool::new(2 * width, side, side))));
+    parts.push(("fc".to_string(), Box::new(Linear::init(&mut rng, 2 * width, classes))));
+    Sequential::new(spec.canonical(), Shape::Spatial { c: in_ch, h: img, w: img }, parts)
+}
+
+/// stride-2 conv W, ReLU, Dropout; conv W, ReLU, Dropout; GAP; fc.
+fn build_dropout_cnn(
+    spec: &ModelSpec,
+    in_ch: usize,
+    img: usize,
+    classes: usize,
+    seed: u64,
+    width: usize,
+    rate_pct: usize,
+) -> Result<Sequential> {
+    let rate = rate_pct as f64 / 100.0;
+    let mut rng = Pcg::new(seed ^ 0xC44, 29);
+    let mut parts: Vec<(String, Box<dyn Layer>)> = Vec::new();
+    let conv0 = Conv2dLayer::init(&mut rng, in_ch, img, img, width, 3, 2, 1);
+    let side = conv0.cfg_at(1).hout();
+    let shape = Shape::Spatial { c: width, h: side, w: side };
+    parts.push(("conv0".to_string(), Box::new(conv0)));
+    parts.push((String::new(), Box::new(ReLU)));
+    parts.push((String::new(), Box::new(Dropout::new(rate, shape, seed ^ 0xD0_0))));
+    let conv1 = Conv2dLayer::init(&mut rng, width, side, side, width, 3, 1, 1);
+    parts.push(("conv1".to_string(), Box::new(conv1)));
+    parts.push((String::new(), Box::new(ReLU)));
+    parts.push((String::new(), Box::new(Dropout::new(rate, shape, seed ^ 0xD0_1))));
+    parts.push((String::new(), Box::new(GlobalAvgPool::new(width, side, side))));
+    parts.push(("fc".to_string(), Box::new(Linear::init(&mut rng, width, classes))));
+    Sequential::new(spec.canonical(), Shape::Spatial { c: in_ch, h: img, w: img }, parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::flops::keep_channels;
+
+    #[test]
+    fn parse_presets_and_params() {
+        assert_eq!(
+            parse_model_spec("simple-cnn").unwrap(),
+            ModelSpec::SimpleCnn { depth: None, width: None }
+        );
+        assert_eq!(
+            parse_model_spec("simple-cnn-d4-w16").unwrap(),
+            ModelSpec::SimpleCnn { depth: Some(4), width: Some(16) }
+        );
+        assert_eq!(parse_model_spec("vgg-tiny").unwrap(), ModelSpec::VggTiny { width: 8 });
+        assert_eq!(parse_model_spec("vgg-tiny-w12").unwrap(), ModelSpec::VggTiny { width: 12 });
+        assert_eq!(
+            parse_model_spec("dropout-cnn-w6-p40").unwrap(),
+            ModelSpec::DropoutCnn { width: 6, rate_pct: 40 }
+        );
+    }
+
+    #[test]
+    fn parse_errors_are_typed() {
+        use ModelSpecError::{BadParam, OutOfRange, UnknownPreset};
+        let err = |s: &str| parse_model_spec(s).unwrap_err();
+        assert!(matches!(err("resnet18"), UnknownPreset { .. }));
+        assert!(matches!(err("simple-cnnx"), UnknownPreset { .. }));
+        // unknown key, missing digits, key not valid for the preset
+        assert!(matches!(err("simple-cnn-q4"), BadParam { .. }));
+        assert!(matches!(err("vgg-tiny-w"), BadParam { .. }));
+        assert!(matches!(err("vgg-tiny-d4"), BadParam { .. }));
+        assert!(matches!(err("simple-cnn-p25"), BadParam { .. }));
+        // zero / repeated / oversized values
+        assert!(matches!(err("simple-cnn-d0"), OutOfRange { .. }));
+        assert!(matches!(err("simple-cnn-w4-w8"), BadParam { .. }));
+        assert!(matches!(err("dropout-cnn-p100"), OutOfRange { .. }));
+        // the error displays the offending spec
+        let shown = err("nope");
+        assert!(shown.to_string().contains("nope"), "{shown}");
+    }
+
+    #[test]
+    fn canonical_roundtrips_through_parse() {
+        for spec in ["simple-cnn-d3-w6", "vgg-tiny-w8", "dropout-cnn-w8-p25"] {
+            let parsed = parse_model_spec(spec).unwrap();
+            assert_eq!(parsed.canonical(), spec);
+            assert_eq!(parse_model_spec(&parsed.canonical()).unwrap(), parsed);
+        }
+        let resolved = parse_model_spec("simple-cnn").unwrap().with_defaults(4, 16);
+        assert_eq!(resolved.canonical(), "simple-cnn-d4-w16");
+        // explicit spec parameters beat the trainer defaults
+        let explicit = parse_model_spec("simple-cnn-d3-w6").unwrap().with_defaults(4, 16);
+        assert_eq!(explicit.canonical(), "simple-cnn-d3-w6");
+    }
+
+    #[test]
+    fn vgg_tiny_builds_and_trains_sparse() {
+        let be = NativeBackend::new();
+        let spec = parse_model_spec("vgg-tiny-w4").unwrap();
+        let mut m = build_model(&spec, 1, 8, 3, 5).unwrap();
+        assert_eq!(m.conv_count(), 3);
+        assert_eq!(m.total_channels(), 4 + 4 + 8);
+        let mut rng = Pcg::new(2, 2);
+        let x: Vec<f32> = (0..6 * 64).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..6).map(|i| (i % 3) as i32).collect();
+        let stats = m.train_step(&be, &x, &y, 0.8, 0.05).unwrap();
+        assert!(stats.loss.is_finite());
+        let want: usize = [4, 4, 8].iter().map(|&c| keep_channels(c, 0.8)).sum();
+        assert_eq!(stats.kept_channels, want, "sparse backward engaged through the pools");
+        // too-small images are a clean error, not a panic
+        assert!(build_model(&spec, 1, 3, 3, 5).is_err());
+    }
+
+    #[test]
+    fn dropout_cnn_builds_with_flops_entries() {
+        let spec = parse_model_spec("dropout-cnn-w4-p50").unwrap();
+        let m = build_model(&spec, 1, 8, 3, 5).unwrap();
+        assert_eq!(m.conv_count(), 2);
+        let set = m.layer_set();
+        assert_eq!(set.convs.len(), 2);
+        assert_eq!(set.dropouts.len(), 2, "Eq. 8 entries for both dropout layers");
+        assert_eq!(set.dropouts[0], (4, 4, 4));
+    }
+
+    #[test]
+    fn simple_cnn_spec_builds_the_legacy_graph() {
+        let spec = parse_model_spec("simple-cnn-d2-w4").unwrap();
+        let via_zoo = build_model(&spec, 1, 8, 3, 7).unwrap();
+        let direct =
+            simple_cnn(SimpleCnnCfg { in_ch: 1, img: 8, classes: 3, depth: 2, width: 4, seed: 7 });
+        assert_eq!(via_zoo.flat_params(), direct.flat_params());
+        assert_eq!(via_zoo.spec(), direct.spec());
+    }
+}

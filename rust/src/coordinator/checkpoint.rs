@@ -77,6 +77,14 @@ fn sidecar(path: &Path) -> std::path::PathBuf {
     path.with_extension("meta.json")
 }
 
+/// Model spec recorded in a native checkpoint's artifact field
+/// (`native_{dataset}:{model_spec}`), or `None` for artifacts without one
+/// (PJRT checkpoints, pre-model-zoo native checkpoints — those stay
+/// loadable, shape checks still apply downstream).
+pub fn artifact_model_spec(artifact: &str) -> Option<&str> {
+    artifact.split_once(':').map(|(_, spec)| spec)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -98,6 +106,13 @@ mod tests {
         assert_eq!(epoch, 7);
         assert_eq!(back.len(), 2);
         assert_eq!(back["param['w']"].to_f32(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn artifact_model_spec_extraction() {
+        assert_eq!(artifact_model_spec("native_mnist:vgg-tiny-w8"), Some("vgg-tiny-w8"));
+        assert_eq!(artifact_model_spec("resnet18_cifar10"), None);
+        assert_eq!(artifact_model_spec("native_mnist"), None);
     }
 
     #[test]

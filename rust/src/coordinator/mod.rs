@@ -9,7 +9,8 @@
 //!
 //! Two interchangeable executors implement step 3:
 //!
-//! * [`NativeTrainer`] (always available) drives a SimpleCNN through the
+//! * [`NativeTrainer`] (always available) drives any model-zoo layer graph
+//!   (`--model`: SimpleCNN, vgg-tiny, dropout-cnn, ...) through the
 //!   [`Backend`](crate::backend::Backend) op trait — pure Rust, no
 //!   artifacts, no FFI;
 //! * `Trainer` (feature `pjrt`) assembles the AOT step's inputs in

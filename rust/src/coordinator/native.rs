@@ -1,8 +1,10 @@
-//! Native training loop: the scheduler-driven coordinator running a
-//! [`SimpleCnn`] through the [`Backend`] op trait — no artifacts, no FFI,
-//! works on any machine. Shares the data plane, scheduler, FLOPs ledger and
-//! checkpoint format with the PJRT path, so dense-vs-ssProp comparisons and
-//! energy accounting read identically across executors.
+//! Native training loop: the scheduler-driven coordinator running any
+//! model-zoo [`Sequential`] through the [`Backend`] trait — no artifacts,
+//! no FFI, works on any machine. Shares the data plane, scheduler, FLOPs
+//! ledger and checkpoint format with the PJRT path, so dense-vs-ssProp
+//! comparisons and energy accounting read identically across executors
+//! *and* across architectures (`--model simple-cnn-d4-w16`, `vgg-tiny`,
+//! `dropout-cnn`, ...).
 
 use std::path::Path;
 use std::time::Instant;
@@ -11,7 +13,8 @@ use anyhow::{bail, Context, Result};
 
 use super::{checkpoint, TrainMetrics};
 use crate::backend::{
-    default_backend, Backend, ExecConfig, ParallelExecutor, SimpleCnn, SimpleCnnCfg,
+    build_model, default_backend, parse_model_spec, Backend, ExecConfig, ParallelExecutor,
+    Sequential,
 };
 use crate::data::{Loader, Loss, Split, SynthDataset};
 use crate::flops::LayerSet;
@@ -22,9 +25,14 @@ use crate::schedule::DropScheduler;
 pub struct NativeTrainConfig {
     /// Synthetic dataset name (CE datasets: mnist, fashion, cifar10, ...).
     pub dataset: String,
-    /// SimpleCNN depth (number of 3×3 conv layers).
+    /// Model-zoo spec (`simple-cnn`, `simple-cnn-d4-w16`, `vgg-tiny`,
+    /// `dropout-cnn-w8-p25`, ...). A bare `simple-cnn` takes its geometry
+    /// from [`NativeTrainConfig::depth`]/[`NativeTrainConfig::width`].
+    pub model: String,
+    /// SimpleCNN depth (used when the model spec leaves it unset).
     pub depth: usize,
-    /// Channels per conv layer.
+    /// SimpleCNN channels per conv layer (used when the spec leaves it
+    /// unset).
     pub width: usize,
     /// Training batch size (must fit both splits).
     pub batch: usize,
@@ -41,6 +49,11 @@ pub struct NativeTrainConfig {
     /// Worker threads for data-parallel train steps (1 = single-threaded;
     /// batches shard across a [`ParallelExecutor`] when > 1).
     pub threads: usize,
+    /// Also train on each epoch's tail partial batch (the `train_n %
+    /// batch` leftover the fixed-geometry loaders otherwise drop). Plans
+    /// are prewarmed for both batch sizes, so the tail step re-keys
+    /// without reallocating.
+    pub include_tail: bool,
     /// Print per-epoch progress lines.
     pub verbose: bool,
 }
@@ -52,6 +65,7 @@ impl NativeTrainConfig {
     pub fn quick(dataset: &str, epochs: usize, iters_per_epoch: usize) -> NativeTrainConfig {
         NativeTrainConfig {
             dataset: dataset.to_string(),
+            model: "simple-cnn".to_string(),
             depth: 2,
             width: 8,
             batch: 16,
@@ -61,6 +75,7 @@ impl NativeTrainConfig {
             scheduler: DropScheduler::paper_default(epochs, iters_per_epoch),
             seed: 0,
             threads: 1,
+            include_tail: false,
             verbose: false,
         }
     }
@@ -70,8 +85,11 @@ impl NativeTrainConfig {
 pub struct NativeTrainer {
     /// The configuration this job was built from.
     pub cfg: NativeTrainConfig,
-    /// The model being trained.
-    pub model: SimpleCnn,
+    /// The model being trained (any zoo-built layer graph).
+    pub model: Sequential,
+    /// The fully-resolved model spec ("simple-cnn-d2-w8"); recorded in
+    /// checkpoint sidecars and verified on restore.
+    pub model_spec: String,
     /// Train-split batch loader.
     pub loader: Loader,
     /// Test-split batch loader (evaluation).
@@ -81,7 +99,8 @@ pub struct NativeTrainer {
     /// Loss/acc curves, FLOPs ledger, wall-clock.
     pub metrics: TrainMetrics,
     backend: Box<dyn Backend>,
-    /// Data-parallel executor; drives `step` when `cfg.threads > 1`.
+    /// Data-parallel executor; drives `step` (and sharded evaluation)
+    /// when `cfg.threads > 1`.
     executor: ParallelExecutor,
 }
 
@@ -91,8 +110,9 @@ impl NativeTrainer {
         NativeTrainer::with_backend(cfg, default_backend())
     }
 
-    /// A trainer over an explicit backend (validates config and dataset,
-    /// prewarms the model's conv plans at the configured batch size).
+    /// A trainer over an explicit backend (validates config, dataset and
+    /// model spec; prewarms the model's layer workspaces at the configured
+    /// batch size — and at the epoch-tail size when tail training is on).
     pub fn with_backend(
         cfg: NativeTrainConfig,
         backend: Box<dyn Backend>,
@@ -104,6 +124,9 @@ impl NativeTrainer {
         }
         if cfg.batch == 0 || cfg.epochs == 0 || cfg.iters_per_epoch == 0 {
             bail!("batch/epochs/iters must be positive");
+        }
+        if cfg.depth == 0 || cfg.width == 0 {
+            bail!("depth/width must be positive");
         }
         if cfg.threads == 0 {
             bail!("threads must be positive (1 = single-threaded)");
@@ -117,17 +140,21 @@ impl NativeTrainer {
                 spec.test_n
             );
         }
-        let mut model = SimpleCnn::new(SimpleCnnCfg {
-            in_ch: spec.channels,
-            img: spec.img,
-            classes: spec.classes,
-            depth: cfg.depth,
-            width: cfg.width,
-            seed: cfg.seed,
-        });
-        // Prewarm the per-layer conv plans at the configured batch size so
-        // the first timed step pays no workspace allocation.
-        model.ensure_plans(cfg.batch);
+        let parsed = parse_model_spec(&cfg.model)
+            .with_context(|| format!("invalid --model {:?}", cfg.model))?
+            .with_defaults(cfg.depth, cfg.width);
+        let model_spec = parsed.canonical();
+        let mut model = build_model(&parsed, spec.channels, spec.img, spec.classes, cfg.seed)
+            .with_context(|| format!("model {model_spec:?} cannot fit {:?}", cfg.dataset))?;
+        // Prewarm the layer workspaces at every batch size the run will
+        // see: the epoch-tail size first (when tail training is on), then
+        // the full size — re-keying keeps capacity, so the tail step of an
+        // epoch reallocates nothing.
+        let tail = spec.train_n % cfg.batch;
+        if cfg.include_tail && tail > 0 {
+            model.ensure_ws(tail);
+        }
+        model.ensure_ws(cfg.batch);
         let layers = model.layer_set();
         let ds = SynthDataset::new(spec.clone(), cfg.seed);
         let loader = Loader::new(ds.clone(), Split::Train, cfg.batch);
@@ -136,6 +163,7 @@ impl NativeTrainer {
         Ok(NativeTrainer {
             cfg,
             model,
+            model_spec,
             loader,
             test_loader,
             layers,
@@ -151,21 +179,31 @@ impl NativeTrainer {
     }
 
     /// Total im2col builds across the model's and the executor's conv
-    /// plans — advances by exactly `depth` per training step single-thread
-    /// (or `depth × workers` data-parallel) when the fused path is healthy.
+    /// plans — advances by exactly `conv_count` per training step
+    /// single-thread (or `conv_count × workers` data-parallel) when the
+    /// fused path is healthy.
     pub fn plan_cols_builds(&self) -> u64 {
         self.model.plan_cols_builds() + self.executor.plan_cols_builds()
     }
 
-    /// Iterations per epoch after capping to the dataset size.
-    pub fn iters_per_epoch(&self) -> usize {
+    /// Full-batch iterations per epoch after capping to the dataset size.
+    fn full_iters_per_epoch(&self) -> usize {
         self.cfg.iters_per_epoch.min(self.loader.batches_per_epoch()).max(1)
+    }
+
+    /// Steps per epoch actually trained: the capped full batches, plus the
+    /// epoch-tail partial batch when tail training is on. The tail is the
+    /// *point* of `include_tail`, so it is trained every epoch regardless
+    /// of where the `--iters` cap lands.
+    pub fn iters_per_epoch(&self) -> usize {
+        let tail = usize::from(self.cfg.include_tail && self.loader.tail_len() > 0);
+        self.full_iters_per_epoch() + tail
     }
 
     /// One training step at drop rate `d`; returns (loss, acc). Routes
     /// through the data-parallel executor when `cfg.threads > 1` (sharded
     /// batch, globally-selected channels, tree-reduced gradients) and
-    /// through the serial [`SimpleCnn::train_step`] otherwise.
+    /// through the serial [`Sequential::train_step`] otherwise.
     pub fn step(&mut self, batch: &crate::data::Batch, d: f64) -> Result<(f64, f64)> {
         let lr = self.cfg.lr as f32;
         let stats = if self.executor.threads() > 1 {
@@ -185,19 +223,33 @@ impl NativeTrainer {
 
     /// Run the configured number of epochs. Returns final test (loss, acc).
     pub fn run(&mut self) -> Result<(f64, f64)> {
+        let ipe_full = self.full_iters_per_epoch();
         let ipe = self.iters_per_epoch();
         let mut it = 0usize;
         for epoch in 0..self.cfg.epochs {
             let rx = self.loader.prefetch_epoch(epoch, 4);
             let t0 = Instant::now();
             for (b, batch) in rx.iter().enumerate() {
-                if b >= ipe {
+                if b >= ipe_full {
                     break;
                 }
                 let d = self.cfg.scheduler.rate_at(it);
                 let (loss, acc) = self.step(&batch, d)?;
-                self.metrics.record_iter(loss, acc, d, &self.layers, self.cfg.batch);
+                self.metrics.record_iter(loss, acc, d, &self.layers, batch.batch_size);
                 it += 1;
+            }
+            if self.cfg.include_tail {
+                let order = self.loader.epoch_order(epoch);
+                if let Some(tail) = self.loader.tail_batch(&order) {
+                    // The tail belongs to this epoch: train it at the
+                    // epoch's current scheduled rate *without* advancing
+                    // the schedule counter — the scheduler's horizon was
+                    // built from iters_per_epoch full batches, so epoch-
+                    // keyed schedules (the paper's bar) keep their phase.
+                    let d = self.cfg.scheduler.rate_at(it.saturating_sub(1));
+                    let (loss, acc) = self.step(&tail, d)?;
+                    self.metrics.record_iter(loss, acc, d, &self.layers, tail.batch_size);
+                }
             }
             self.metrics.record_epoch(t0.elapsed());
             if self.cfg.verbose {
@@ -216,30 +268,50 @@ impl NativeTrainer {
         Ok(fin)
     }
 
-    /// Mean (loss, acc) over the test split (forward only).
+    /// Mean (loss, acc) over the test split (forward only). Shards each
+    /// eval batch across the executor's workers when `cfg.threads > 1` —
+    /// bit-identical to the serial evaluation at any thread count (the
+    /// reducer sums per-example losses in global example order).
     pub fn evaluate(&mut self) -> (f64, f64) {
         let order = self.test_loader.epoch_order(0);
         let nb = self.test_loader.batches_per_epoch().max(1);
         let (mut sl, mut sa) = (0.0, 0.0);
         for b in 0..nb {
             let batch = self.test_loader.batch(&order, b);
-            let (l, a) = self.model.eval_batch(self.backend.as_ref(), &batch.x, &batch.y_class);
+            let (l, a) = if self.executor.threads() > 1 {
+                let be = self.backend.as_ref();
+                self.executor.eval_batch(&self.model, be, &batch.x, &batch.y_class)
+            } else {
+                self.model.eval_batch(self.backend.as_ref(), &batch.x, &batch.y_class)
+            };
             sl += l;
             sa += a;
         }
         (sl / nb as f64, sa / nb as f64)
     }
 
-    /// Persist model parameters in the shared checkpoint format.
+    /// Persist model parameters in the shared checkpoint format. The
+    /// sidecar's artifact field records `native_{dataset}:{model_spec}` so
+    /// a restore into a different architecture fails early.
     pub fn save_checkpoint<P: AsRef<Path>>(&self, path: P, epoch: usize) -> Result<()> {
         let state: std::collections::HashMap<_, _> =
             self.model.state_tensors().into_iter().collect();
-        checkpoint::save_tensors(path, &state, &format!("native_{}", self.cfg.dataset), epoch)
+        let artifact = format!("native_{}:{}", self.cfg.dataset, self.model_spec);
+        checkpoint::save_tensors(path, &state, &artifact, epoch)
     }
 
-    /// Restore model parameters from [`NativeTrainer::save_checkpoint`].
+    /// Restore model parameters from [`NativeTrainer::save_checkpoint`],
+    /// rejecting checkpoints recorded for a different model spec.
     pub fn load_checkpoint<P: AsRef<Path>>(&mut self, path: P) -> Result<usize> {
-        let (state, _artifact, epoch) = checkpoint::load_tensors(path)?;
+        let (state, artifact, epoch) = checkpoint::load_tensors(path)?;
+        if let Some(saved_spec) = checkpoint::artifact_model_spec(&artifact) {
+            if saved_spec != self.model_spec {
+                bail!(
+                    "checkpoint was saved for model {saved_spec:?}, this trainer runs {:?}",
+                    self.model_spec
+                );
+            }
+        }
         let tensors: Vec<(String, crate::tensorstore::Tensor)> = state.into_iter().collect();
         self.model.load_state_tensors(&tensors)?;
         Ok(epoch)
@@ -273,6 +345,39 @@ mod tests {
     }
 
     #[test]
+    fn rejects_bad_model_specs() {
+        let mut cfg = quick_cfg();
+        cfg.model = "resnet9000".to_string();
+        let err = NativeTrainer::new(cfg).err().expect("must reject");
+        assert!(
+            err.downcast_ref::<crate::backend::ModelSpecError>().is_some(),
+            "the spec error must stay typed through the trainer: {err}"
+        );
+    }
+
+    #[test]
+    fn model_spec_resolves_from_depth_width_knobs() {
+        let mut cfg = quick_cfg();
+        cfg.depth = 3;
+        let t = NativeTrainer::new(cfg).unwrap();
+        assert_eq!(t.model_spec, "simple-cnn-d3-w6");
+        assert_eq!(t.model.conv_count(), 3);
+    }
+
+    #[test]
+    fn zoo_models_train_through_the_coordinator() {
+        for model in ["vgg-tiny-w4", "dropout-cnn-w6-p25"] {
+            let mut cfg = quick_cfg();
+            cfg.model = model.to_string();
+            let mut t = NativeTrainer::new(cfg).unwrap();
+            let (loss, acc) = t.run().unwrap();
+            assert!(loss.is_finite(), "{model}: loss {loss}");
+            assert!((0.0..=1.0).contains(&acc), "{model}: acc {acc}");
+            assert!(t.metrics.flops_actual < t.metrics.flops_dense, "{model}: schedule engaged");
+        }
+    }
+
+    #[test]
     fn multithreaded_run_matches_single_thread_loss() {
         let t1_cfg = quick_cfg();
         let mut t4_cfg = quick_cfg();
@@ -287,6 +392,16 @@ mod tests {
         assert_eq!(t1.metrics.flops_actual, t4.metrics.flops_actual, "same FLOPs ledger");
         // the parallel path builds its cols in the executor's worker plans
         assert!(t4.plan_cols_builds() > 0);
+    }
+
+    #[test]
+    fn sharded_evaluate_is_bit_identical_to_serial() {
+        let mut serial = NativeTrainer::new(quick_cfg()).unwrap();
+        let mut t4_cfg = quick_cfg();
+        t4_cfg.threads = 4;
+        let mut sharded = NativeTrainer::new(t4_cfg).unwrap();
+        // identical init — evaluate before any training so params match
+        assert_eq!(serial.evaluate(), sharded.evaluate());
     }
 
     #[test]
@@ -323,12 +438,56 @@ mod tests {
         let order = t.loader.epoch_order(0);
         let batch = t.loader.batch(&order, 0);
         t.step(&batch, 0.5).unwrap();
-        let caps: Vec<_> = t.model.plans().iter().map(|p| p.buffer_caps()).collect();
+        let caps = t.model.plan_caps();
         assert_eq!(t.plan_cols_builds(), t.cfg.depth as u64, "one im2col per layer per step");
         t.step(&batch, 0.5).unwrap();
         assert_eq!(t.plan_cols_builds(), 2 * t.cfg.depth as u64);
-        let caps2: Vec<_> = t.model.plans().iter().map(|p| p.buffer_caps()).collect();
-        assert_eq!(caps, caps2, "second step must not grow any plan buffer");
+        assert_eq!(caps, t.model.plan_caps(), "second step must not grow any plan buffer");
+    }
+
+    #[test]
+    fn epoch_tail_trains_without_reallocation() {
+        // mnist train_n = 2048; batch 30 -> 68 full batches + an 8-example
+        // tail. With include_tail the epoch runs 69 steps and the tail
+        // re-key must neither rebuild extra cols nor grow any buffer.
+        let mut cfg = NativeTrainConfig::quick("mnist", 1, 1000);
+        cfg.batch = 30;
+        cfg.include_tail = true;
+        let mut t = NativeTrainer::new(cfg).unwrap();
+        assert_eq!(t.loader.batches_per_epoch(), 68);
+        assert_eq!(t.loader.batches_per_epoch_with_tail(), 69);
+        assert_eq!(t.iters_per_epoch(), 69);
+        t.run().unwrap();
+        assert_eq!(t.metrics.losses.len(), 69, "the tail step must be trained on");
+        let per_step = t.model.conv_count() as u64;
+        assert_eq!(t.plan_cols_builds(), 69 * per_step, "tail re-key must not rebuild cols");
+        let caps = t.model.plan_caps();
+        // stepping a full batch again after the tail re-keys back without
+        // allocating
+        let order = t.loader.epoch_order(1);
+        let batch = t.loader.batch(&order, 0);
+        t.step(&batch, 0.0).unwrap();
+        assert_eq!(caps, t.model.plan_caps(), "full-size re-key must reuse capacity");
+    }
+
+    #[test]
+    fn tail_trains_even_when_iters_caps_the_epoch_and_keeps_schedule_phase() {
+        // --iters 4 caps the full batches, but --include-tail's whole point
+        // is the leftover examples — the tail step still runs each epoch.
+        // It must not advance the schedule counter: epoch-keyed schedules
+        // keep the exact phase a tail-free run would have.
+        let mut cfg = NativeTrainConfig::quick("mnist", 2, 4);
+        cfg.batch = 30;
+        cfg.include_tail = true;
+        cfg.scheduler = DropScheduler::new(Schedule::EpochBar { period_epochs: 2 }, 0.8, 2, 4);
+        let mut t = NativeTrainer::new(cfg).unwrap();
+        assert_eq!(t.iters_per_epoch(), 5);
+        t.run().unwrap();
+        assert_eq!(t.metrics.losses.len(), 10, "(4 capped full batches + tail) x 2 epochs");
+        assert_eq!(t.plan_cols_builds(), 10 * t.model.conv_count() as u64);
+        let rates = &t.metrics.drop_rates;
+        assert!(rates[..5].iter().all(|&d| d == 0.0), "epoch 0 (incl. tail) is dense: {rates:?}");
+        assert!(rates[5..].iter().all(|&d| d == 0.8), "epoch 1 (incl. tail) is sparse: {rates:?}");
     }
 
     #[test]
@@ -345,5 +504,21 @@ mod tests {
         let epoch = b.load_checkpoint(&path).unwrap();
         assert_eq!(epoch, 2);
         assert_eq!(a.evaluate(), b.evaluate());
+    }
+
+    #[test]
+    fn checkpoint_rejects_model_spec_mismatch() {
+        let dir = std::env::temp_dir().join("ssprop_native_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("native_vgg.tstore");
+
+        let mut vgg_cfg = quick_cfg();
+        vgg_cfg.model = "vgg-tiny-w4".to_string();
+        let vgg = NativeTrainer::new(vgg_cfg).unwrap();
+        vgg.save_checkpoint(&path, 1).unwrap();
+
+        let mut simple = NativeTrainer::new(quick_cfg()).unwrap();
+        let err = simple.load_checkpoint(&path).err().expect("must reject").to_string();
+        assert!(err.contains("vgg-tiny-w4"), "{err}");
     }
 }

@@ -71,10 +71,32 @@ impl Loader {
     /// partial batch is dropped** — an epoch visits `len − len %
     /// batch_size` examples, matching the AOT step's fixed batch geometry.
     /// (The shuffled order changes per epoch, so over a run every example
-    /// is still seen.) Sub-batch slicing, by contrast, handles
-    /// non-divisible sizes: see [`Batch::shard`].
+    /// is still seen.) The native path can opt back in via
+    /// [`Loader::tail_batch`]; sub-batch slicing likewise handles
+    /// non-divisible sizes — see [`Batch::shard`].
     pub fn batches_per_epoch(&self) -> usize {
         self.ds.len(self.split) / self.batch_size
+    }
+
+    /// Size of the epoch-tail partial batch (`len % batch_size`; 0 when
+    /// the split divides evenly).
+    pub fn tail_len(&self) -> usize {
+        self.ds.len(self.split) % self.batch_size
+    }
+
+    /// Batches per epoch counting the tail partial batch when one exists.
+    pub fn batches_per_epoch_with_tail(&self) -> usize {
+        self.batches_per_epoch() + usize::from(self.tail_len() > 0)
+    }
+
+    /// Materialize the epoch-tail batch — the last [`Loader::tail_len`]
+    /// examples of `order` — or `None` when the split divides evenly.
+    pub fn tail_batch(&self, order: &[usize]) -> Option<Batch> {
+        let tail = self.tail_len();
+        if tail == 0 {
+            return None;
+        }
+        Some(self.batch_ids(&order[order.len() - tail..]))
     }
 
     /// Shuffled example order for `epoch` (bit-reproducible).
@@ -90,9 +112,14 @@ impl Loader {
     /// Materialize batch `b` of `order` (normalized images + labels).
     pub fn batch(&self, order: &[usize], b: usize) -> Batch {
         let lo = b * self.batch_size;
-        let ids = &order[lo..lo + self.batch_size];
+        self.batch_ids(&order[lo..lo + self.batch_size])
+    }
+
+    /// Materialize the batch holding exactly `ids` (normalized images +
+    /// labels); full batches and the epoch tail share this path.
+    fn batch_ids(&self, ids: &[usize]) -> Batch {
         let n = self.ds.spec.channels * self.ds.spec.img * self.ds.spec.img;
-        let mut x = Vec::with_capacity(self.batch_size * n);
+        let mut x = Vec::with_capacity(ids.len() * n);
         let mut y_class = Vec::new();
         let mut y_multi = Vec::new();
         for &i in ids {
@@ -103,11 +130,14 @@ impl Loader {
                 Label::Multi(bits) => y_multi.extend(bits),
             }
         }
-        Batch { x, y_class, y_multi, batch_size: self.batch_size }
+        Batch { x, y_class, y_multi, batch_size: ids.len() }
     }
 
-    /// Spawn a prefetch thread producing the epoch's batches with bounded
-    /// lookahead (backpressure: the channel holds at most `depth` batches).
+    /// Spawn a prefetch thread producing the epoch's full batches with
+    /// bounded lookahead (backpressure: the channel holds at most `depth`
+    /// batches). The epoch-tail partial batch is not part of the stream —
+    /// callers that train it fetch it synchronously via
+    /// [`Loader::tail_batch`].
     pub fn prefetch_epoch(&self, epoch: usize, depth: usize) -> mpsc::Receiver<Batch> {
         let (tx, rx) = mpsc::sync_channel(depth);
         let loader = Loader {
@@ -232,6 +262,41 @@ mod tests {
         assert_eq!(shards[1].y_multi.len(), 2 * 40);
         let cat: Vec<f32> = shards.iter().flat_map(|s| s.y_multi.clone()).collect();
         assert_eq!(cat, b.y_multi);
+    }
+
+    #[test]
+    fn tail_batch_holds_the_leftover_examples() {
+        // mnist train is 2048 examples; batch 30 leaves an 8-example tail
+        let l = loader("mnist", 30);
+        assert_eq!(l.batches_per_epoch(), 68);
+        assert_eq!(l.tail_len(), 8);
+        assert_eq!(l.batches_per_epoch_with_tail(), 69);
+        let order = l.epoch_order(0);
+        let tail = l.tail_batch(&order).expect("tail exists");
+        assert_eq!(tail.batch_size, 8);
+        assert_eq!(tail.y_class.len(), 8);
+        // an evenly-dividing batch size has no tail
+        let even = loader("mnist", 32);
+        assert_eq!(even.tail_len(), 0);
+        assert!(even.tail_batch(&even.epoch_order(0)).is_none());
+        assert_eq!(even.batches_per_epoch_with_tail(), even.batches_per_epoch());
+    }
+
+    #[test]
+    fn prefetch_stream_excludes_the_tail() {
+        let l = loader("mnist", 30);
+        let rx = l.prefetch_epoch(1, 2);
+        let batches: Vec<Batch> = rx.iter().collect();
+        assert_eq!(batches.len(), 68, "the stream carries full batches only");
+        assert!(batches.iter().all(|b| b.batch_size == 30));
+        // the tail examples are exactly the order's last tail_len entries,
+        // disjoint from what the stream delivered
+        let order = l.epoch_order(1);
+        let tail = l.tail_batch(&order).unwrap();
+        assert_eq!(tail.batch_size, 8);
+        let streamed: Vec<f32> = batches.iter().flat_map(|b| b.x.clone()).collect();
+        let sync: Vec<f32> = (0..68).flat_map(|b| l.batch(&order, b).x).collect();
+        assert_eq!(streamed, sync, "stream matches the sync slices the tail excludes");
     }
 
     #[test]

@@ -25,9 +25,10 @@
 //! * [`backend`] — the default, dependency-free route: a [`backend::Backend`]
 //!   op trait with a pure-Rust [`backend::NativeBackend`] (img2col GEMM
 //!   forward, channel top-k compacted sparse backward mirroring
-//!   `python/compile/kernels/ref.py`), driven by
-//!   [`coordinator::NativeTrainer`]. `cargo run -- quickstart` trains a
-//!   SimpleCNN on the synthetic data plane with zero setup.
+//!   `python/compile/kernels/ref.py`), a composable layer-graph model API
+//!   ([`backend::layers`] + the [`backend::zoo`] `--model` presets), all
+//!   driven by [`coordinator::NativeTrainer`]. `cargo run -- quickstart`
+//!   trains a zoo CNN on the synthetic data plane with zero setup.
 //! * [`runtime`] — the AOT/PJRT route (cargo feature `pjrt`): loads
 //!   `artifacts/*.hlo.txt` compiled by the Python side and executes whole
 //!   training-step graphs. Gated so the default build has no FFI deps;

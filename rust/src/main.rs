@@ -19,16 +19,21 @@ ssprop — scheduled sparse back-propagation coordinator (paper reproduction)
 USAGE: ssprop <command> [--flags]
 
 native commands (no artifacts needed; pure-Rust backend):
-  quickstart   train a SimpleCNN with the paper's scheduler and print the
-               FLOPs/energy ledger   [--dataset cifar10] [--epochs 4]
-               [--iters 24] [--target-drop 0.8] [--seed 0] [--threads 1]
-  train-native full native training  --dataset cifar10 [--depth 2] [--width 8]
-               [--batch 16] [--epochs 3] [--iters 16] [--lr 0.3]
+  quickstart   train a zoo model with the paper's scheduler and print the
+               FLOPs/energy ledger   [--dataset cifar10] [--model simple-cnn]
+               [--epochs 4] [--iters 24] [--target-drop 0.8] [--seed 0]
+               [--threads 1]
+  train-native full native training  --dataset cifar10 [--model simple-cnn]
+               [--depth 2] [--width 8] [--batch 16] [--epochs 3] [--iters 16]
+               [--lr 0.3]
                [--schedule epoch-bar|constant|linear|cosine|bar|iter-bar|warmup-bar]
                [--target-drop 0.8] [--period 2] [--seed 0] [--threads 1]
-               [--save ck.tstore] [--verbose]
-               (--threads N shards each batch across N workers with
-               deterministic gradient reduction)
+               [--include-tail] [--save ck.tstore] [--verbose]
+               (--model picks a zoo preset: simple-cnn[-dD-wW], vgg-tiny[-wW],
+               dropout-cnn[-wW-pP]; bare simple-cnn takes --depth/--width.
+               --threads N shards each batch across N workers with
+               deterministic gradient reduction; --include-tail also trains
+               each epoch's leftover partial batch)
   datasets     print Table 1 (dataset geometry)
   presets      print Tables 2/3 (hyperparameters)
   flops        print FLOPs parity + Eq.10/11 lower-bound tables
@@ -67,32 +72,40 @@ fn parse_schedule(args: &Args) -> Result<Schedule> {
 }
 
 /// Validate the flags that would otherwise trip constructor asserts, so the
-/// CLI fails with a clean error instead of a panic.
+/// CLI fails with a clean error instead of a panic (and errors on
+/// unparsable values instead of silently training with defaults).
 fn parse_horizon_and_target(
     args: &Args,
     def_epochs: usize,
     def_iters: usize,
 ) -> Result<(usize, usize, f64)> {
-    let epochs = args.get_usize("epochs", def_epochs);
-    let iters = args.get_usize("iters", def_iters);
+    let epochs = parsed_flag(args, "epochs", def_epochs)?;
+    let iters = parsed_flag(args, "iters", def_iters)?;
     if epochs == 0 || iters == 0 {
         bail!("--epochs and --iters must be positive");
     }
-    let target = args.get_f64("target-drop", 0.8);
+    let target = parsed_flag(args, "target-drop", 0.8)?;
     if !(0.0..1.0).contains(&target) {
         bail!("--target-drop must be in [0, 1) (got {target})");
     }
     Ok((epochs, iters, target))
 }
 
-/// Parse `--threads` (default 1 = single-threaded), rejecting 0 here so
-/// the CLI fails with a clean message instead of a constructor error.
+/// Parse `--threads` (default 1 = single-threaded), rejecting 0 and
+/// non-numeric values here so the CLI fails with a clean message instead
+/// of a constructor error or a silent fallback.
 fn parse_threads(args: &Args) -> Result<usize> {
-    let threads = args.get_usize("threads", 1);
+    let threads = parsed_flag(args, "threads", 1usize)?;
     if threads == 0 {
         bail!("--threads must be positive (1 = single-threaded)");
     }
     Ok(threads)
+}
+
+/// Parse an optional flag strictly: absent uses the default, garbage is an
+/// error — never a silent fallback.
+fn parsed_flag<T: std::str::FromStr>(args: &Args, key: &str, default: T) -> Result<T> {
+    Ok(args.try_parse(key).map_err(anyhow::Error::msg)?.unwrap_or(default))
 }
 
 fn main() -> Result<()> {
@@ -127,13 +140,14 @@ fn cmd_quickstart(args: &Args) -> Result<()> {
     let dataset = args.get_or("dataset", "cifar10").to_string();
     let (epochs, iters, target) = parse_horizon_and_target(args, 4, 24)?;
     let mut cfg = NativeTrainConfig::quick(&dataset, epochs, iters);
-    cfg.seed = args.get_u64("seed", 0);
+    cfg.model = args.get_or("model", "simple-cnn").to_string();
+    cfg.seed = parsed_flag(args, "seed", 0u64)?;
     cfg.threads = parse_threads(args)?;
     cfg.scheduler =
         DropScheduler::new(Schedule::EpochBar { period_epochs: 2 }, target, epochs, iters);
     cfg.verbose = true;
 
-    println!("== ssProp quickstart: SimpleCNN on synth-{dataset} (native backend) ==\n");
+    println!("== ssProp quickstart: {} on synth-{dataset} (native backend) ==\n", cfg.model);
     let mut t = NativeTrainer::new(cfg)?;
     let (loss, acc) = t.run()?;
     print_native_summary(&t, loss, acc);
@@ -145,16 +159,18 @@ fn cmd_train_native(args: &Args) -> Result<()> {
     let dataset = args.get_or("dataset", "cifar10").to_string();
     let (epochs, iters, target) = parse_horizon_and_target(args, 3, 16)?;
     let schedule = parse_schedule(args)?;
-    if args.get_usize("depth", 1) == 0 || args.get_usize("width", 1) == 0 {
+    let mut cfg = NativeTrainConfig::quick(&dataset, epochs, iters);
+    cfg.model = args.get_or("model", "simple-cnn").to_string();
+    cfg.depth = parsed_flag(args, "depth", cfg.depth)?;
+    cfg.width = parsed_flag(args, "width", cfg.width)?;
+    cfg.batch = parsed_flag(args, "batch", cfg.batch)?;
+    if cfg.depth == 0 || cfg.width == 0 {
         bail!("--depth and --width must be positive");
     }
-    let mut cfg = NativeTrainConfig::quick(&dataset, epochs, iters);
-    cfg.depth = args.get_usize("depth", cfg.depth);
-    cfg.width = args.get_usize("width", cfg.width);
-    cfg.batch = args.get_usize("batch", cfg.batch);
-    cfg.lr = args.get_f64("lr", cfg.lr);
-    cfg.seed = args.get_u64("seed", 0);
+    cfg.lr = parsed_flag(args, "lr", cfg.lr)?;
+    cfg.seed = parsed_flag(args, "seed", 0u64)?;
     cfg.threads = parse_threads(args)?;
+    cfg.include_tail = args.has_flag("include-tail") || args.get("include-tail").is_some();
     cfg.scheduler = DropScheduler::new(schedule, target, epochs, iters);
     cfg.verbose = args.has_flag("verbose") || args.get("verbose").is_some();
 
@@ -172,7 +188,8 @@ fn print_native_summary(t: &NativeTrainer, loss: f64, acc: f64) {
     let m = &t.metrics;
     println!("\nbackend          {}", t.backend_name());
     println!("threads          {}", t.cfg.threads);
-    println!("dataset          {} (SimpleCNN d{} w{})", t.cfg.dataset, t.cfg.depth, t.cfg.width);
+    println!("dataset          {}", t.cfg.dataset);
+    println!("model            {} ({})", t.model_spec, t.model.describe());
     println!("final test loss  {loss:.4}");
     println!("final test acc   {acc:.4}");
     println!("mean drop rate   {:.3}", m.mean_drop_rate());

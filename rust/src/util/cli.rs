@@ -70,6 +70,18 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `key` parsed as `T`, *erroring* on an unparsable value instead of
+    /// silently falling back (the `get_*` behaviour): `Ok(None)` when
+    /// absent, `Err` with a usable message when malformed.
+    pub fn try_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                v.parse().map(Some).map_err(|_| format!("--{key} got unparsable value {v:?}"))
+            }
+        }
+    }
+
     /// Was the bare flag `--name` passed (with no value attached)?
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
@@ -98,6 +110,18 @@ mod tests {
         let a = Args::parse(&sv(&["x"]));
         assert_eq!(a.get_usize("epochs", 5), 5);
         assert_eq!(a.get_or("model", "resnet18"), "resnet18");
+    }
+
+    #[test]
+    fn try_parse_surfaces_parse_errors() {
+        let a = Args::parse(&sv(&["--threads", "4", "--lr", "0.O3", "--target-drop", "0.8"]));
+        assert_eq!(a.try_parse::<usize>("threads"), Ok(Some(4)));
+        assert_eq!(a.try_parse::<f64>("target-drop"), Ok(Some(0.8)));
+        assert_eq!(a.try_parse::<u64>("missing"), Ok(None));
+        let err = a.try_parse::<f64>("lr").unwrap_err();
+        assert!(err.contains("0.O3") && err.contains("lr"), "{err}");
+        let err = a.try_parse::<usize>("lr").unwrap_err();
+        assert!(err.contains("lr"), "{err}");
     }
 
     #[test]

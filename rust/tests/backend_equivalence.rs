@@ -7,7 +7,7 @@
 //! every plan buffer without changing the loss trajectory.
 
 use ssprop::backend::sparse::{select_channels, sparse_bwd_compact};
-use ssprop::backend::{Backend, Conv2d, Conv2dPlan, NativeBackend, SimpleCnn, SimpleCnnCfg};
+use ssprop::backend::{simple_cnn, Backend, Conv2d, Conv2dPlan, NativeBackend, SimpleCnnCfg};
 use ssprop::util::prop::check_no_shrink;
 use ssprop::util::rng::Pcg;
 
@@ -149,22 +149,21 @@ fn skipping_dx_is_bit_identical_on_fused_and_unfused_routes() {
 fn consecutive_train_steps_reuse_workspaces_and_match_fresh_model() {
     let be = NativeBackend::new();
     let mk = || {
-        SimpleCnn::new(SimpleCnnCfg { in_ch: 2, img: 8, classes: 3, depth: 2, width: 4, seed: 21 })
+        simple_cnn(SimpleCnnCfg { in_ch: 2, img: 8, classes: 3, depth: 2, width: 4, seed: 21 })
     };
-    let model = mk();
     let mut rng = Pcg::new(77, 2);
-    let n = model.cfg.in_ch * model.cfg.img * model.cfg.img;
+    let n = 2 * 8 * 8;
     let bt = 6;
     let x: Vec<f32> = (0..bt * n).map(|_| rng.normal()).collect();
-    let y: Vec<i32> = (0..bt).map(|i| (i % model.cfg.classes) as i32).collect();
+    let y: Vec<i32> = (0..bt).map(|i| (i % 3) as i32).collect();
 
-    let mut m = model;
+    let mut m = mk();
     let s1 = m.train_step(&be, &x, &y, 0.5, 0.05).unwrap();
-    let caps: Vec<[usize; 7]> = m.plans().iter().map(|p| p.buffer_caps()).collect();
+    let caps = m.plan_caps();
     assert_eq!(m.plan_cols_builds(), 2, "step 1: one im2col per layer");
 
     let s2 = m.train_step(&be, &x, &y, 0.5, 0.05).unwrap();
-    let caps2: Vec<[usize; 7]> = m.plans().iter().map(|p| p.buffer_caps()).collect();
+    let caps2 = m.plan_caps();
     assert_eq!(caps, caps2, "step 2 must allocate no new plan buffers");
     assert_eq!(m.plan_cols_builds(), 4, "step 2: one im2col per layer");
 
@@ -184,9 +183,9 @@ fn plans_rekey_across_batch_sizes_without_losing_capacity() {
     // large-batch capacity (no shrink) and still be numerically exact.
     let be = NativeBackend::new();
     let mut m =
-        SimpleCnn::new(SimpleCnnCfg { in_ch: 1, img: 8, classes: 2, depth: 2, width: 3, seed: 9 });
+        simple_cnn(SimpleCnnCfg { in_ch: 1, img: 8, classes: 2, depth: 2, width: 3, seed: 9 });
     let mut rng = Pcg::new(5, 8);
-    let n = m.cfg.in_ch * m.cfg.img * m.cfg.img;
+    let n = 8 * 8;
     let mk_batch = |bt: usize, rng: &mut Pcg| {
         let x: Vec<f32> = (0..bt * n).map(|_| rng.normal()).collect();
         let y: Vec<i32> = (0..bt).map(|i| (i % 2) as i32).collect();
@@ -195,11 +194,11 @@ fn plans_rekey_across_batch_sizes_without_losing_capacity() {
     let (x8, y8) = mk_batch(8, &mut rng);
     let (x2, y2) = mk_batch(2, &mut rng);
     m.train_step(&be, &x8, &y8, 0.0, 0.05).unwrap();
-    let caps_big: Vec<[usize; 7]> = m.plans().iter().map(|p| p.buffer_caps()).collect();
+    let caps_big = m.plan_caps();
     m.train_step(&be, &x2, &y2, 0.0, 0.05).unwrap();
-    let caps_small: Vec<[usize; 7]> = m.plans().iter().map(|p| p.buffer_caps()).collect();
+    let caps_small = m.plan_caps();
     assert_eq!(caps_big, caps_small, "shrinking the batch must not reallocate");
     m.train_step(&be, &x8, &y8, 0.0, 0.05).unwrap();
-    let caps_again: Vec<[usize; 7]> = m.plans().iter().map(|p| p.buffer_caps()).collect();
+    let caps_again = m.plan_caps();
     assert_eq!(caps_big, caps_again, "growing back to the old batch must reuse capacity");
 }

@@ -1,44 +1,38 @@
 //! Determinism suite for the data-parallel executor (run in release mode
 //! by CI): repeated parallel runs must be **bit-identical** at any fixed
 //! worker count, a single-worker run must reproduce the serial
-//! `SimpleCnn::train_step` exactly, and multi-worker loss trajectories
-//! must track the serial one within accumulation tolerance (1e-5 over 10
+//! `Sequential::train_step` exactly, multi-worker loss trajectories must
+//! track the serial one within accumulation tolerance (1e-5 over 10
 //! steps) — gradients differ only by float re-association, never by
-//! selection semantics (channel top-k is reduced globally across shards).
+//! selection semantics (channel top-k is reduced globally across shards) —
+//! and sharded evaluation must be bit-identical to serial evaluation at
+//! every thread count (per-example losses reduce in global example
+//! order).
 
 use ssprop::backend::{
-    ExecConfig, NativeBackend, ParallelExecutor, SimpleCnn, SimpleCnnCfg, StepStats,
+    simple_cnn, ExecConfig, NativeBackend, ParallelExecutor, Sequential, SimpleCnnCfg, StepStats,
 };
 use ssprop::util::rng::Pcg;
 
-fn model() -> SimpleCnn {
-    SimpleCnn::new(SimpleCnnCfg { in_ch: 2, img: 12, classes: 4, depth: 3, width: 8, seed: 33 })
+const CLASSES: usize = 4;
+/// Examples are (2, 12, 12) images.
+const N_IN: usize = 2 * 12 * 12;
+
+fn model() -> Sequential {
+    simple_cnn(SimpleCnnCfg { in_ch: 2, img: 12, classes: CLASSES, depth: 3, width: 8, seed: 33 })
 }
 
 /// Ten fixed batches of `bt` examples (bt = 12 shards evenly over 1/2/4
 /// workers; the uneven 3/3/2/2 case uses bt = 10 over 4).
-fn batches(m: &SimpleCnn, bt: usize) -> Vec<(Vec<f32>, Vec<i32>)> {
-    let n = m.cfg.in_ch * m.cfg.img * m.cfg.img;
+fn batches(bt: usize) -> Vec<(Vec<f32>, Vec<i32>)> {
     (0..10)
         .map(|i| {
             let mut rng = Pcg::new(0xD0_0D + i, 2);
-            let x = (0..bt * n).map(|_| rng.normal()).collect();
-            let y = (0..bt).map(|j| ((i as usize + j) % m.cfg.classes) as i32).collect();
+            let x = (0..bt * N_IN).map(|_| rng.normal()).collect();
+            let y = (0..bt).map(|j| ((i as usize + j) % CLASSES) as i32).collect();
             (x, y)
         })
         .collect()
-}
-
-/// Every parameter of the model, flattened (bitwise comparison target).
-fn params(m: &SimpleCnn) -> Vec<f32> {
-    let mut out = Vec::new();
-    for cb in &m.convs {
-        out.extend_from_slice(&cb.w);
-        out.extend_from_slice(&cb.b);
-    }
-    out.extend_from_slice(&m.fc_w);
-    out.extend_from_slice(&m.fc_b);
-    out
 }
 
 /// The alternating dense/sparse schedule the trajectory tests use.
@@ -54,7 +48,7 @@ fn drop_at(step: usize) -> f64 {
 fn parallel_loss_trajectory_matches_serial_within_1e5() {
     let be = NativeBackend::new();
     let bt = 12;
-    let data = batches(&model(), bt);
+    let data = batches(bt);
 
     let mut serial = model();
     let mut want: Vec<StepStats> = Vec::new();
@@ -81,7 +75,7 @@ fn parallel_loss_trajectory_matches_serial_within_1e5() {
 fn parallel_runs_are_bit_identical_at_every_thread_count() {
     let be = NativeBackend::new();
     let bt = 12;
-    let data = batches(&model(), bt);
+    let data = batches(bt);
     for threads in [1usize, 2, 4] {
         let run = || {
             let mut m = model();
@@ -89,7 +83,7 @@ fn parallel_runs_are_bit_identical_at_every_thread_count() {
             for (step, (x, y)) in data.iter().take(4).enumerate() {
                 exec.train_step(&mut m, &be, x, y, drop_at(step + 1), 0.05).unwrap();
             }
-            params(&m)
+            m.flat_params()
         };
         let (a, b) = (run(), run());
         assert_eq!(a, b, "t{threads}: repeated runs must be bit-identical");
@@ -99,10 +93,10 @@ fn parallel_runs_are_bit_identical_at_every_thread_count() {
 #[test]
 fn single_worker_executor_reproduces_serial_bitwise() {
     // With one shard the executor runs the exact serial computation (the
-    // helpers are shared code), so even the weights are bit-identical.
+    // layers are shared code), so even the weights are bit-identical.
     let be = NativeBackend::new();
     let bt = 6;
-    let data = batches(&model(), bt);
+    let data = batches(bt);
     let mut serial = model();
     let mut parallel = model();
     let mut exec = ParallelExecutor::new(ExecConfig::with_threads(1));
@@ -112,7 +106,7 @@ fn single_worker_executor_reproduces_serial_bitwise() {
         let b = exec.train_step(&mut parallel, &be, x, y, d, 0.05).unwrap();
         assert_eq!(a.loss, b.loss, "step {step} loss");
         assert_eq!(a.kept_channels, b.kept_channels, "step {step} selection");
-        assert_eq!(params(&serial), params(&parallel), "step {step} weights");
+        assert_eq!(serial.flat_params(), parallel.flat_params(), "step {step} weights");
     }
 }
 
@@ -121,7 +115,7 @@ fn uneven_shards_stay_deterministic_and_close_to_serial() {
     // bt = 10 over 4 workers shards as 3/3/2/2 — the non-divisible path.
     let be = NativeBackend::new();
     let bt = 10;
-    let data = batches(&model(), bt);
+    let data = batches(bt);
     let mut serial = model();
     let mut m = model();
     let mut exec = ParallelExecutor::new(ExecConfig::with_threads(4));
@@ -137,5 +131,31 @@ fn uneven_shards_stay_deterministic_and_close_to_serial() {
     for (step, (x, y)) in data.iter().enumerate() {
         exec2.train_step(&mut m2, &be, x, y, drop_at(step), 0.05).unwrap();
     }
-    assert_eq!(params(&m), params(&m2), "uneven sharding must be bit-reproducible");
+    assert_eq!(m.flat_params(), m2.flat_params(), "uneven sharding must be bit-reproducible");
+}
+
+#[test]
+fn sharded_eval_is_bit_identical_across_thread_counts() {
+    // Evaluation reduces per-example losses in global example order, so
+    // any worker count must reproduce the serial loss *bitwise* — no
+    // accumulation tolerance here.
+    let be = NativeBackend::new();
+    let bt = 10;
+    let data = batches(bt);
+    let mut m = model();
+    for (step, (x, y)) in data.iter().take(3).enumerate() {
+        m.train_step(&be, x, y, drop_at(step), 0.05).unwrap();
+    }
+    let (x, y) = &data[5];
+    let want = m.eval_batch(&be, x, y);
+    for threads in [1usize, 2, 3, 4, 8] {
+        let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+        let got = exec.eval_batch(&m, &be, x, y);
+        assert_eq!(
+            got.0.to_bits(),
+            want.0.to_bits(),
+            "t{threads}: eval loss must be bit-identical to serial"
+        );
+        assert_eq!(got.1, want.1, "t{threads}: eval accuracy");
+    }
 }

@@ -1,0 +1,660 @@
+//! Bit-identity suite for the layer-graph refactor: a `Sequential` built
+//! by `simple_cnn()` must reproduce the **pre-refactor** hand-rolled
+//! SimpleCNN exactly — same per-step loss bits, same kept-channel counts,
+//! same parameter bits — on the serial path and through the generalized
+//! `ParallelExecutor` at t ∈ {1, 2, 4}.
+//!
+//! The oracle is an embedded, line-faithful copy of the legacy
+//! implementation (`legacy` module below: the old `SimpleCnn::train_step`
+//! and the old conv-stack-specific executor), kept on the *public*
+//! plan-path Backend API so it stays executable forever. If a future
+//! change to the layer graph re-associates a single f32 addition, these
+//! tests catch it at the bit level.
+
+use ssprop::backend::{
+    simple_cnn, ExecConfig, NativeBackend, ParallelExecutor, Sequential, SimpleCnnCfg,
+};
+use ssprop::util::rng::Pcg;
+
+/// The legacy implementation, frozen. Copied from the pre-refactor
+/// `backend/simple_cnn.rs` + `backend/parallel.rs` with only visibility
+/// adjustments (crate-private helpers inlined).
+mod legacy {
+    use std::sync::{Barrier, Mutex};
+
+    use ssprop::backend::sparse::{channel_abs_sums, topk_channels};
+    use ssprop::backend::{Backend, Conv2d, Conv2dPlan};
+    use ssprop::flops::keep_channels;
+    use ssprop::util::rng::Pcg;
+    use ssprop::util::shard::shard_ranges;
+
+    #[derive(Debug, Clone, Copy)]
+    pub struct Cfg {
+        pub in_ch: usize,
+        pub img: usize,
+        pub classes: usize,
+        pub depth: usize,
+        pub width: usize,
+        pub seed: u64,
+    }
+
+    pub struct ConvBlock {
+        pub w: Vec<f32>,
+        pub b: Vec<f32>,
+        pub cin: usize,
+        pub stride: usize,
+    }
+
+    pub struct LegacyCnn {
+        pub cfg: Cfg,
+        pub convs: Vec<ConvBlock>,
+        pub fc_w: Vec<f32>,
+        pub fc_b: Vec<f32>,
+        plans: Vec<Conv2dPlan>,
+    }
+
+    fn out_size(n: usize, k: usize, s: usize, p: usize) -> usize {
+        (n + 2 * p - k) / s + 1
+    }
+
+    impl LegacyCnn {
+        pub fn new(cfg: Cfg) -> LegacyCnn {
+            let mut rng = Pcg::new(cfg.seed ^ 0xC44, 29);
+            let mut convs = Vec::with_capacity(cfg.depth);
+            for l in 0..cfg.depth {
+                let cin = if l == 0 { cfg.in_ch } else { cfg.width };
+                let fan_in = (cin * 9) as f32;
+                let scale = (2.0 / fan_in).sqrt();
+                convs.push(ConvBlock {
+                    w: (0..cfg.width * cin * 9).map(|_| rng.normal() * scale).collect(),
+                    b: vec![0f32; cfg.width],
+                    cin,
+                    stride: if l == 0 { 2 } else { 1 },
+                });
+            }
+            let fc_scale = (2.0 / cfg.width as f32).sqrt();
+            LegacyCnn {
+                cfg,
+                convs,
+                fc_w: (0..cfg.width * cfg.classes).map(|_| rng.normal() * fc_scale).collect(),
+                fc_b: vec![0f32; cfg.classes],
+                plans: Vec::new(),
+            }
+        }
+
+        pub fn ensure_plans(&mut self, bt: usize) {
+            for l in 0..self.cfg.depth {
+                let cfg = self.conv_cfg(l, bt);
+                if l < self.plans.len() {
+                    self.plans[l].ensure(cfg);
+                } else {
+                    self.plans.push(Conv2dPlan::new(cfg));
+                }
+            }
+        }
+
+        fn in_size(&self, l: usize) -> usize {
+            if l == 0 {
+                self.cfg.img
+            } else {
+                out_size(self.cfg.img, 3, 2, 1)
+            }
+        }
+
+        pub fn conv_cfg(&self, l: usize, bt: usize) -> Conv2d {
+            let s = self.in_size(l);
+            Conv2d {
+                bt,
+                cin: self.convs[l].cin,
+                h: s,
+                w: s,
+                cout: self.cfg.width,
+                k: 3,
+                stride: self.convs[l].stride,
+                padding: 1,
+            }
+        }
+
+        #[allow(clippy::type_complexity)]
+        pub fn forward(
+            &self,
+            backend: &dyn Backend,
+            x: &[f32],
+            bt: usize,
+            plans: &mut [Conv2dPlan],
+        ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<f32>, Vec<f32>) {
+            let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+            let mut zs: Vec<Vec<f32>> = Vec::with_capacity(self.cfg.depth);
+            for l in 0..self.cfg.depth {
+                let cb = &self.convs[l];
+                let z = backend.conv2d_fwd_planned(&mut plans[l], &acts[l], &cb.w, Some(&cb.b));
+                let a: Vec<f32> = z.iter().map(|&v| v.max(0.0)).collect();
+                zs.push(z);
+                acts.push(a);
+            }
+            let last = self.conv_cfg(self.cfg.depth - 1, bt);
+            let hw = last.hout() * last.wout();
+            let width = self.cfg.width;
+            let mut pooled = vec![0f32; bt * width];
+            let top = &acts[self.cfg.depth];
+            for b in 0..bt {
+                for f in 0..width {
+                    let plane = &top[(b * width + f) * hw..][..hw];
+                    pooled[b * width + f] = plane.iter().sum::<f32>() / hw as f32;
+                }
+            }
+            let classes = self.cfg.classes;
+            let mut logits = backend.gemm(bt, width, classes, &pooled, &self.fc_w);
+            for b in 0..bt {
+                for (c, &bias) in self.fc_b.iter().enumerate() {
+                    logits[b * classes + c] += bias;
+                }
+            }
+            (acts, zs, pooled, logits)
+        }
+
+        #[allow(clippy::type_complexity)]
+        pub fn head_backward(
+            &self,
+            pooled: &[f32],
+            dlogits: &[f32],
+            bt: usize,
+        ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            let (width, classes) = (self.cfg.width, self.cfg.classes);
+            let mut dpooled = vec![0f32; bt * width];
+            for b in 0..bt {
+                let drow = &dlogits[b * classes..][..classes];
+                for f in 0..width {
+                    let wrow = &self.fc_w[f * classes..][..classes];
+                    let mut acc_dp = 0f32;
+                    for (dv, wv) in drow.iter().zip(wrow) {
+                        acc_dp += dv * wv;
+                    }
+                    dpooled[b * width + f] = acc_dp;
+                }
+            }
+            let mut dfc_w = vec![0f32; width * classes];
+            let mut dfc_b = vec![0f32; classes];
+            for b in 0..bt {
+                let drow = &dlogits[b * classes..][..classes];
+                let prow = &pooled[b * width..][..width];
+                for (f, &pv) in prow.iter().enumerate() {
+                    let dst = &mut dfc_w[f * classes..][..classes];
+                    for (dw, &dv) in dst.iter_mut().zip(drow) {
+                        *dw += pv * dv;
+                    }
+                }
+                for (db, &dv) in dfc_b.iter_mut().zip(drow) {
+                    *db += dv;
+                }
+            }
+            (dfc_w, dfc_b, dpooled)
+        }
+
+        pub fn pool_backward(&self, dpooled: &[f32], ztop: &[f32], bt: usize) -> Vec<f32> {
+            let width = self.cfg.width;
+            let last = self.conv_cfg(self.cfg.depth - 1, bt);
+            let hw = last.hout() * last.wout();
+            let inv_hw = 1.0 / hw as f32;
+            let mut g = vec![0f32; bt * width * hw];
+            for b in 0..bt {
+                for f in 0..width {
+                    let gv = dpooled[b * width + f] * inv_hw;
+                    let base = (b * width + f) * hw;
+                    for pix in 0..hw {
+                        if ztop[base + pix] > 0.0 {
+                            g[base + pix] = gv;
+                        }
+                    }
+                }
+            }
+            g
+        }
+
+        /// One legacy SGD step; returns (loss, kept_channels).
+        pub fn train_step(
+            &mut self,
+            backend: &dyn Backend,
+            x: &[f32],
+            y: &[i32],
+            drop_rate: f64,
+            lr: f32,
+        ) -> (f64, usize) {
+            let bt = y.len();
+            self.ensure_plans(bt);
+            let mut plans = std::mem::take(&mut self.plans);
+            let (acts, zs, pooled, logits) = self.forward(backend, x, bt, &mut plans);
+            self.plans = plans;
+            let (loss_sum, _correct, dlogits) = softmax_ce_core(&logits, y, self.cfg.classes, bt);
+            let loss = loss_sum / bt as f64;
+
+            let (dfc_w, dfc_b, dpooled) = self.head_backward(&pooled, &dlogits, bt);
+            let mut g = self.pool_backward(&dpooled, &zs[self.cfg.depth - 1], bt);
+            for (wv, &dv) in self.fc_w.iter_mut().zip(&dfc_w) {
+                *wv -= lr * dv;
+            }
+            for (bv, &dv) in self.fc_b.iter_mut().zip(&dfc_b) {
+                *bv -= lr * dv;
+            }
+
+            let mut kept = 0usize;
+            for l in (0..self.cfg.depth).rev() {
+                let grads = backend.conv2d_bwd_planned(
+                    &mut self.plans[l],
+                    &acts[l],
+                    &self.convs[l].w,
+                    &g,
+                    drop_rate,
+                    l > 0,
+                );
+                kept += grads.keep_idx.len();
+                for (wv, &dv) in self.convs[l].w.iter_mut().zip(&grads.dw) {
+                    *wv -= lr * dv;
+                }
+                for (bv, &dv) in self.convs[l].b.iter_mut().zip(&grads.db) {
+                    *bv -= lr * dv;
+                }
+                if l > 0 {
+                    let zprev = &zs[l - 1];
+                    g = grads.dx;
+                    for (gv, &zv) in g.iter_mut().zip(zprev) {
+                        if zv <= 0.0 {
+                            *gv = 0.0;
+                        }
+                    }
+                }
+            }
+            (loss, kept)
+        }
+
+        pub fn params(&self) -> Vec<f32> {
+            let mut out = Vec::new();
+            for cb in &self.convs {
+                out.extend_from_slice(&cb.w);
+                out.extend_from_slice(&cb.b);
+            }
+            out.extend_from_slice(&self.fc_w);
+            out.extend_from_slice(&self.fc_b);
+            out
+        }
+    }
+
+    pub fn softmax_ce_core(
+        logits: &[f32],
+        y: &[i32],
+        classes: usize,
+        grad_denom: usize,
+    ) -> (f64, usize, Vec<f32>) {
+        let bt = y.len();
+        let mut dlogits = vec![0f32; bt * classes];
+        let (mut loss, mut correct) = (0f64, 0usize);
+        for b in 0..bt {
+            let row = &logits[b * classes..][..classes];
+            let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mut denom = 0f32;
+            for &v in row {
+                denom += (v - max).exp();
+            }
+            let label = y[b] as usize;
+            loss += (denom.ln() - (row[label] - max)) as f64;
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            if argmax == label {
+                correct += 1;
+            }
+            let drow = &mut dlogits[b * classes..][..classes];
+            for (c, &v) in row.iter().enumerate() {
+                let p = (v - max).exp() / denom;
+                drow[c] = (p - if c == label { 1.0 } else { 0.0 }) / grad_denom as f32;
+            }
+        }
+        (loss, correct, dlogits)
+    }
+
+    fn tree_reduce(mut parts: Vec<Vec<f32>>) -> Vec<f32> {
+        while parts.len() > 1 {
+            let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+            let mut it = parts.into_iter();
+            while let Some(mut a) = it.next() {
+                if let Some(b) = it.next() {
+                    for (av, bv) in a.iter_mut().zip(&b) {
+                        *av += bv;
+                    }
+                }
+                next.push(a);
+            }
+            parts = next;
+        }
+        parts.pop().unwrap_or_default()
+    }
+
+    fn reduce_select(
+        imp_slots: &[Mutex<Vec<f32>>],
+        bt: usize,
+        hw: usize,
+        cout: usize,
+        keep: usize,
+    ) -> Vec<usize> {
+        let mut imp = vec![0f32; cout];
+        for slot in imp_slots {
+            let part = slot.lock().expect("importance slot poisoned");
+            for (tot, &v) in imp.iter_mut().zip(part.iter()) {
+                *tot += v;
+            }
+        }
+        let denom = (bt * hw) as f32;
+        for v in &mut imp {
+            *v /= denom;
+        }
+        topk_channels(&imp, keep)
+    }
+
+    struct BarrierAttendance<'a> {
+        barrier: &'a Barrier,
+        remaining: std::cell::Cell<usize>,
+    }
+
+    impl<'a> BarrierAttendance<'a> {
+        fn new(barrier: &'a Barrier, total: usize) -> BarrierAttendance<'a> {
+            BarrierAttendance { barrier, remaining: std::cell::Cell::new(total) }
+        }
+
+        fn wait(&self) {
+            self.barrier.wait();
+            self.remaining.set(self.remaining.get() - 1);
+        }
+    }
+
+    impl Drop for BarrierAttendance<'_> {
+        fn drop(&mut self) {
+            for _ in 0..self.remaining.get() {
+                self.barrier.wait();
+            }
+        }
+    }
+
+    #[derive(Default)]
+    struct ShardOut {
+        loss_sum: f64,
+        dfc_w: Vec<f32>,
+        dfc_b: Vec<f32>,
+        conv: Vec<(Vec<f32>, Vec<f32>)>,
+        kept: usize,
+    }
+
+    /// The legacy conv-stack-specific data-parallel executor.
+    pub struct LegacyExec {
+        threads: usize,
+        worker_plans: Vec<Vec<Conv2dPlan>>,
+    }
+
+    impl LegacyExec {
+        pub fn new(threads: usize) -> LegacyExec {
+            LegacyExec { threads: threads.max(1), worker_plans: Vec::new() }
+        }
+
+        fn ensure_worker_plans(&mut self, model: &LegacyCnn, shards: &[std::ops::Range<usize>]) {
+            let depth = model.cfg.depth;
+            if self.worker_plans.len() != shards.len() {
+                self.worker_plans.resize_with(shards.len(), Vec::new);
+            }
+            for (wp, r) in self.worker_plans.iter_mut().zip(shards) {
+                let sbt = r.end - r.start;
+                wp.truncate(depth);
+                for l in 0..depth {
+                    let cfg = model.conv_cfg(l, sbt);
+                    if l < wp.len() {
+                        wp[l].ensure(cfg);
+                    } else {
+                        wp.push(Conv2dPlan::new(cfg));
+                    }
+                }
+            }
+        }
+
+        /// One legacy data-parallel step; returns (loss, kept_channels).
+        pub fn train_step(
+            &mut self,
+            model: &mut LegacyCnn,
+            backend: &dyn Backend,
+            x: &[f32],
+            y: &[i32],
+            drop_rate: f64,
+            lr: f32,
+        ) -> (f64, usize) {
+            let bt = y.len();
+            let n_in = model.cfg.in_ch * model.cfg.img * model.cfg.img;
+            let depth = model.cfg.depth;
+            let shards = shard_ranges(bt, self.threads);
+            let nw = shards.len();
+            model.ensure_plans(bt);
+            self.ensure_worker_plans(model, &shards);
+
+            let mut outs: Vec<ShardOut> = (0..nw).map(|_| ShardOut::default()).collect();
+            let barrier = Barrier::new(nw);
+            let imp_slots: Vec<Mutex<Vec<f32>>> =
+                (0..nw).map(|_| Mutex::new(Vec::new())).collect();
+            let keep_slot: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+            let m: &LegacyCnn = model;
+
+            std::thread::scope(|s| {
+                let iter = shards.iter().zip(self.worker_plans.iter_mut()).zip(outs.iter_mut());
+                for (w, ((range, plans), out)) in iter.enumerate() {
+                    let (barrier, imp_slots, keep_slot) = (&barrier, &imp_slots, &keep_slot);
+                    let range = range.clone();
+                    s.spawn(move || {
+                        let sbt = range.end - range.start;
+                        let xs = &x[range.start * n_in..range.end * n_in];
+                        let ys = &y[range.start..range.end];
+
+                        let sparse_layers = (0..depth)
+                            .filter(|&l| {
+                                let c = m.conv_cfg(l, sbt);
+                                keep_channels(c.cout, drop_rate) < c.cout
+                            })
+                            .count();
+                        let attendance = BarrierAttendance::new(barrier, 2 * sparse_layers);
+
+                        let (acts, zs, pooled, logits) = m.forward(backend, xs, sbt, plans);
+                        let (loss_sum, _corr, dlogits) =
+                            softmax_ce_core(&logits, ys, m.cfg.classes, bt);
+                        let (dfc_w, dfc_b, dpooled) = m.head_backward(&pooled, &dlogits, sbt);
+                        let mut g = m.pool_backward(&dpooled, &zs[depth - 1], sbt);
+                        out.loss_sum = loss_sum;
+                        out.dfc_w = dfc_w;
+                        out.dfc_b = dfc_b;
+                        out.conv = (0..depth).map(|_| (Vec::new(), Vec::new())).collect();
+
+                        for l in (0..depth).rev() {
+                            let cfg = *plans[l].cfg();
+                            let keep_count = keep_channels(cfg.cout, drop_rate);
+                            let keep = if keep_count == cfg.cout {
+                                (0..cfg.cout).collect::<Vec<_>>()
+                            } else {
+                                *imp_slots[w].lock().expect("importance slot poisoned") =
+                                    channel_abs_sums(&cfg, &g);
+                                attendance.wait();
+                                if w == 0 {
+                                    let hw = cfg.hout() * cfg.wout();
+                                    let sel =
+                                        reduce_select(imp_slots, bt, hw, cfg.cout, keep_count);
+                                    *keep_slot.lock().expect("keep slot poisoned") = sel;
+                                }
+                                attendance.wait();
+                                keep_slot.lock().expect("keep slot poisoned").clone()
+                            };
+                            if w == 0 {
+                                out.kept += keep.len();
+                            }
+                            let grads = backend.conv2d_bwd_planned_with(
+                                &mut plans[l],
+                                &acts[l],
+                                &m.convs[l].w,
+                                &g,
+                                &keep,
+                                l > 0,
+                            );
+                            if l > 0 {
+                                g = grads.dx;
+                                for (gv, &zv) in g.iter_mut().zip(&zs[l - 1]) {
+                                    if zv <= 0.0 {
+                                        *gv = 0.0;
+                                    }
+                                }
+                            }
+                            out.conv[l] = (grads.dw, grads.db);
+                        }
+                    });
+                }
+            });
+
+            let mut loss_sum = 0f64;
+            for o in &outs {
+                loss_sum += o.loss_sum;
+            }
+            let loss = loss_sum / bt as f64;
+            let kept = outs[0].kept;
+
+            let mut dfc_w_parts = Vec::with_capacity(nw);
+            let mut dfc_b_parts = Vec::with_capacity(nw);
+            let mut conv_dw: Vec<Vec<Vec<f32>>> =
+                (0..depth).map(|_| Vec::with_capacity(nw)).collect();
+            let mut conv_db: Vec<Vec<Vec<f32>>> =
+                (0..depth).map(|_| Vec::with_capacity(nw)).collect();
+            for o in outs {
+                dfc_w_parts.push(o.dfc_w);
+                dfc_b_parts.push(o.dfc_b);
+                for (l, (dw, db)) in o.conv.into_iter().enumerate() {
+                    conv_dw[l].push(dw);
+                    conv_db[l].push(db);
+                }
+            }
+            let dfc_w = tree_reduce(dfc_w_parts);
+            let dfc_b = tree_reduce(dfc_b_parts);
+            for (wv, &dv) in model.fc_w.iter_mut().zip(&dfc_w) {
+                *wv -= lr * dv;
+            }
+            for (bv, &dv) in model.fc_b.iter_mut().zip(&dfc_b) {
+                *bv -= lr * dv;
+            }
+            for (l, (dw_parts, db_parts)) in conv_dw.into_iter().zip(conv_db).enumerate() {
+                let dw = tree_reduce(dw_parts);
+                let db = tree_reduce(db_parts);
+                for (wv, &dv) in model.convs[l].w.iter_mut().zip(&dw) {
+                    *wv -= lr * dv;
+                }
+                for (bv, &dv) in model.convs[l].b.iter_mut().zip(&db) {
+                    *bv -= lr * dv;
+                }
+            }
+
+            (loss, kept)
+        }
+    }
+}
+
+const CFG: legacy::Cfg =
+    legacy::Cfg { in_ch: 2, img: 12, classes: 4, depth: 3, width: 8, seed: 33 };
+
+fn seq_model() -> Sequential {
+    simple_cnn(SimpleCnnCfg {
+        in_ch: CFG.in_ch,
+        img: CFG.img,
+        classes: CFG.classes,
+        depth: CFG.depth,
+        width: CFG.width,
+        seed: CFG.seed,
+    })
+}
+
+fn batches(bt: usize) -> Vec<(Vec<f32>, Vec<i32>)> {
+    let n = CFG.in_ch * CFG.img * CFG.img;
+    (0..8)
+        .map(|i| {
+            let mut rng = Pcg::new(0xB17 + i, 2);
+            let x = (0..bt * n).map(|_| rng.normal()).collect();
+            let y = (0..bt).map(|j| ((i as usize + j) % CFG.classes) as i32).collect();
+            (x, y)
+        })
+        .collect()
+}
+
+/// Dense / sparse / mid-rate rotation so every selection path is hit.
+fn drop_at(step: usize) -> f64 {
+    match step % 3 {
+        0 => 0.0,
+        1 => 0.8,
+        _ => 0.5,
+    }
+}
+
+#[test]
+fn construction_matches_legacy_parameter_stream_bitwise() {
+    let old = legacy::LegacyCnn::new(CFG);
+    let new = seq_model();
+    assert_eq!(old.params(), new.flat_params(), "He-init streams must be identical");
+}
+
+#[test]
+fn serial_train_steps_match_legacy_bitwise() {
+    let be = NativeBackend::new();
+    let mut old = legacy::LegacyCnn::new(CFG);
+    let mut new = seq_model();
+    for (step, (x, y)) in batches(12).iter().enumerate() {
+        let d = drop_at(step);
+        let (old_loss, old_kept) = old.train_step(&be, x, y, d, 0.05);
+        let stats = new.train_step(&be, x, y, d, 0.05).unwrap();
+        assert_eq!(stats.loss.to_bits(), old_loss.to_bits(), "step {step} loss bits");
+        assert_eq!(stats.kept_channels, old_kept, "step {step} selection");
+        assert_eq!(new.flat_params(), old.params(), "step {step} parameter bits");
+    }
+}
+
+#[test]
+fn generalized_executor_matches_legacy_executor_bitwise() {
+    let be = NativeBackend::new();
+    // bt 12 shards evenly over 1/2/4 workers; bt 10 over 4 covers the
+    // uneven 3/3/2/2 path.
+    for (bt, threads) in [(12usize, 1usize), (12, 2), (12, 4), (10, 4)] {
+        let mut old = legacy::LegacyCnn::new(CFG);
+        let mut old_exec = legacy::LegacyExec::new(threads);
+        let mut new = seq_model();
+        let mut new_exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+        for (step, (x, y)) in batches(bt).iter().enumerate() {
+            let d = drop_at(step + 1); // start sparse: selection must agree too
+            let (old_loss, old_kept) = old_exec.train_step(&mut old, &be, x, y, d, 0.05);
+            let stats = new_exec.train_step(&mut new, &be, x, y, d, 0.05).unwrap();
+            assert_eq!(
+                stats.loss.to_bits(),
+                old_loss.to_bits(),
+                "bt {bt} t{threads} step {step} loss bits"
+            );
+            assert_eq!(stats.kept_channels, old_kept, "bt {bt} t{threads} step {step} selection");
+            assert_eq!(
+                new.flat_params(),
+                old.params(),
+                "bt {bt} t{threads} step {step} parameter bits"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_worker_executor_reproduces_serial_bitwise() {
+    let be = NativeBackend::new();
+    let mut serial = seq_model();
+    let mut sharded = seq_model();
+    let mut exec = ParallelExecutor::new(ExecConfig::with_threads(1));
+    for (step, (x, y)) in batches(6).iter().enumerate() {
+        let d = drop_at(step + 1);
+        let a = serial.train_step(&be, x, y, d, 0.05).unwrap();
+        let b = exec.train_step(&mut sharded, &be, x, y, d, 0.05).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step} loss");
+        assert_eq!(a.kept_channels, b.kept_channels, "step {step} selection");
+        assert_eq!(serial.flat_params(), sharded.flat_params(), "step {step} weights");
+    }
+}

@@ -1,0 +1,170 @@
+//! Model-zoo regression suite: non-SimpleCNN presets must train end-to-end
+//! through the coordinator with the sparse backward engaged, the paper's
+//! ssProp+Dropout compatibility claim must hold (finite losses, kept
+//! channels exactly matching the schedule), and the data-parallel executor
+//! must drive any layer graph (MaxPool scatter, Dropout masks) with the
+//! same determinism contract the SimpleCNN path has.
+
+use ssprop::backend::{
+    build_model, parse_model_spec, ExecConfig, NativeBackend, ParallelExecutor, Sequential,
+};
+use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
+use ssprop::flops::keep_channels;
+use ssprop::schedule::{DropScheduler, Schedule};
+use ssprop::util::rng::Pcg;
+
+fn build(spec: &str) -> Sequential {
+    let parsed = parse_model_spec(spec).unwrap();
+    build_model(&parsed, 1, 12, 4, 33).unwrap()
+}
+
+fn batch(bt: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Pcg::new(seed, 2);
+    let x = (0..bt * 144).map(|_| rng.normal()).collect();
+    let y = (0..bt).map(|i| (i % 4) as i32).collect();
+    (x, y)
+}
+
+/// Expected kept-channel count at drop rate `d` for a model's conv stack.
+fn expected_kept(m: &Sequential, d: f64) -> usize {
+    let set = m.layer_set();
+    set.convs.iter().map(|c| keep_channels(c.cout, d)).sum()
+}
+
+#[test]
+fn zoo_presets_train_end_to_end_with_sparse_backward() {
+    // one preset with MaxPool, one with Dropout — the acceptance pair
+    for model in ["vgg-tiny-w4", "dropout-cnn-w6-p25"] {
+        let mut cfg = NativeTrainConfig::quick("mnist", 2, 6);
+        cfg.batch = 8;
+        cfg.model = model.to_string();
+        cfg.scheduler = DropScheduler::new(Schedule::EpochBar { period_epochs: 2 }, 0.8, 2, 6);
+        let mut t = NativeTrainer::new(cfg).unwrap();
+        let (loss, acc) = t.run().unwrap();
+        assert!(loss.is_finite(), "{model}: final loss {loss}");
+        assert!((0.0..=1.0).contains(&acc), "{model}: acc {acc}");
+        assert!(t.metrics.losses.iter().all(|l| l.is_finite()), "{model}: training losses");
+        assert!(
+            t.metrics.flops_actual < t.metrics.flops_dense,
+            "{model}: the sparse epochs must show up in the ledger"
+        );
+        assert_eq!(t.model_spec, model, "{model}: resolved spec is recorded");
+    }
+}
+
+#[test]
+fn dropout_composes_with_ssprop_and_kept_channels_match_schedule() {
+    let be = NativeBackend::new();
+    let mut m = build("dropout-cnn-w6-p40");
+    let (x, y) = batch(8, 11);
+    for (step, d) in [0.0f64, 0.5, 0.8, 0.8, 0.0].iter().enumerate() {
+        let stats = m.train_step(&be, &x, &y, *d, 0.05).unwrap();
+        assert!(stats.loss.is_finite(), "step {step} at d={d}");
+        assert_eq!(
+            stats.kept_channels,
+            expected_kept(&m, *d),
+            "step {step}: selection must follow the schedule exactly at d={d}"
+        );
+        assert_eq!(stats.total_channels, 12, "two conv layers of width 6");
+    }
+    // eval runs dropout as the identity, so it is deterministic
+    let e1 = m.eval_batch(&be, &x, &y);
+    let e2 = m.eval_batch(&be, &x, &y);
+    assert_eq!(e1, e2, "eval must not draw dropout masks");
+}
+
+#[test]
+fn dropout_masks_make_sharded_training_match_serial() {
+    // Dropout masks key on the global example index, so a 1-worker
+    // executor run is bit-identical to serial even though masks are drawn
+    // per step; multi-worker runs agree within float re-association.
+    let be = NativeBackend::new();
+    let data: Vec<_> = (0..6).map(|i| batch(8, 100 + i)).collect();
+
+    let mut serial = build("dropout-cnn-w6-p25");
+    let mut one = build("dropout-cnn-w6-p25");
+    let mut exec1 = ParallelExecutor::new(ExecConfig::with_threads(1));
+    for (step, (x, y)) in data.iter().enumerate() {
+        let d = if step % 2 == 0 { 0.8 } else { 0.0 };
+        let a = serial.train_step(&be, x, y, d, 0.05).unwrap();
+        let b = exec1.train_step(&mut one, &be, x, y, d, 0.05).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step}: t1 loss bits");
+        assert_eq!(serial.flat_params(), one.flat_params(), "step {step}: t1 params");
+    }
+
+    for threads in [2usize, 4] {
+        let mut m = build("dropout-cnn-w6-p25");
+        let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+        let mut reference = build("dropout-cnn-w6-p25");
+        for (step, (x, y)) in data.iter().enumerate() {
+            let d = if step % 2 == 0 { 0.8 } else { 0.0 };
+            let a = reference.train_step(&be, x, y, d, 0.05).unwrap();
+            let b = exec.train_step(&mut m, &be, x, y, d, 0.05).unwrap();
+            assert!(
+                (a.loss - b.loss).abs() < 1e-5,
+                "t{threads} step {step}: {} vs {}",
+                a.loss,
+                b.loss
+            );
+            assert_eq!(a.kept_channels, b.kept_channels, "t{threads} step {step}: selection");
+        }
+    }
+}
+
+#[test]
+fn maxpool_graph_is_deterministic_across_thread_counts() {
+    let be = NativeBackend::new();
+    let data: Vec<_> = (0..6).map(|i| batch(12, 200 + i)).collect();
+
+    let mut serial = build("vgg-tiny-w4");
+    let mut stats_serial = Vec::new();
+    for (step, (x, y)) in data.iter().enumerate() {
+        let d = if step % 2 == 0 { 0.0 } else { 0.8 };
+        stats_serial.push(serial.train_step(&be, x, y, d, 0.05).unwrap());
+    }
+
+    for threads in [1usize, 2, 4] {
+        let mut m = build("vgg-tiny-w4");
+        let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+        for (step, (x, y)) in data.iter().enumerate() {
+            let d = if step % 2 == 0 { 0.0 } else { 0.8 };
+            let got = exec.train_step(&mut m, &be, x, y, d, 0.05).unwrap();
+            let want = &stats_serial[step];
+            assert!(
+                (got.loss - want.loss).abs() < 1e-5,
+                "t{threads} step {step}: {} vs {}",
+                got.loss,
+                want.loss
+            );
+            assert_eq!(got.kept_channels, want.kept_channels, "t{threads} step {step}");
+        }
+        // sharded eval through the pooled graph is bitwise too
+        let (x, y) = &data[0];
+        let want = serial.eval_batch(&be, x, y);
+        let got = exec.eval_batch(&m, &be, x, y);
+        // models differ (training re-association), so compare m's own eval
+        let own = m.eval_batch(&be, x, y);
+        assert_eq!(got.0.to_bits(), own.0.to_bits(), "t{threads}: eval bits");
+        assert!((got.0 - want.0).abs() < 1e-3, "t{threads}: eval near serial");
+    }
+}
+
+#[test]
+fn checkpoints_roundtrip_for_zoo_models() {
+    let dir = std::env::temp_dir().join("ssprop_zoo_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    for model in ["vgg-tiny-w4", "dropout-cnn-w6-p25"] {
+        let path = dir.join(format!("{model}.tstore"));
+        let mut cfg = NativeTrainConfig::quick("mnist", 1, 2);
+        cfg.batch = 8;
+        cfg.model = model.to_string();
+        let mut a = NativeTrainer::new(cfg.clone()).unwrap();
+        a.run().unwrap();
+        a.save_checkpoint(&path, 1).unwrap();
+
+        let mut b = NativeTrainer::new(cfg).unwrap();
+        assert_eq!(b.load_checkpoint(&path).unwrap(), 1);
+        assert_eq!(a.model.flat_params(), b.model.flat_params(), "{model}: params restored");
+        assert_eq!(a.evaluate(), b.evaluate(), "{model}: eval restored");
+    }
+}
