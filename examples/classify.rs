@@ -1,8 +1,18 @@
-//! End-to-end driver (DESIGN.md §7): ResNet-18 on synth-CIFAR-10, dense vs
-//! ssProp, several hundred steps each; logs both loss curves to
-//! results/classify_loss.csv and reports the Table 4-style comparison.
+//! End-to-end driver (DESIGN.md §7): dense vs ssProp on the synthetic
+//! CIFAR-10 substitute, logging both loss curves to
+//! results/classify_loss.csv and reporting the Table 4-style comparison.
 //!
-//! Requires `--features pjrt` + artifacts (`make artifacts`):
+//! On the default build this drives the **native** backend over any zoo
+//! `--model` spec (default: the residual/BatchNorm `resnet-tiny` preset,
+//! the native counterpart of the paper's ResNet rows):
+//!
+//! ```bash
+//! cargo run --release --example classify -- --model resnet-tiny-w8-b2 \
+//!     --epochs 4 --iters 16
+//! ```
+//!
+//! With `--features pjrt` + artifacts (`make artifacts`) it drives the
+//! AOT-compiled ResNet-18 instead:
 //!
 //! ```bash
 //! cargo run --release --features pjrt --example classify -- --epochs 6 --iters 50
@@ -88,6 +98,70 @@ mod pjrt_example {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+mod native_example {
+    use std::io::Write as _;
+
+    use anyhow::Result;
+    use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
+    use ssprop::schedule::{DropScheduler, Schedule};
+    use ssprop::util::cli::Args;
+
+    fn train(
+        model: &str,
+        label: &str,
+        schedule: Schedule,
+        target: f64,
+        epochs: usize,
+        ipe: usize,
+    ) -> Result<NativeTrainer> {
+        let mut cfg = NativeTrainConfig::quick("cifar10", epochs, ipe);
+        cfg.model = model.to_string();
+        cfg.lr = 0.05;
+        cfg.scheduler = DropScheduler::new(schedule, target, epochs, ipe);
+        let mut t = NativeTrainer::new(cfg)?;
+        let (loss, acc) = t.run()?;
+        let m = &t.metrics;
+        println!(
+            "{label:<10} test loss {loss:.4}  test acc {acc:.3}  bwd FLOPs {:.3e} \
+             ({:.1}% saved)  wall {:.1}s",
+            m.flops_actual,
+            m.flops_saving() * 100.0,
+            m.total_wall_secs()
+        );
+        Ok(t)
+    }
+
+    pub fn run() -> Result<()> {
+        let args = Args::from_env();
+        let model = args.get_or("model", "resnet-tiny").to_string();
+        let epochs = args.get_usize("epochs", 4);
+        let ipe = args.get_usize("iters", 12);
+
+        println!(
+            "== e2e (native): --model {model} on synth-CIFAR-10, {epochs} epochs x {ipe} iters ==\n"
+        );
+        let probe = train(&model, "dense", Schedule::Constant, 0.0, epochs, ipe)?;
+        let ssprop =
+            train(&model, "ssProp", Schedule::EpochBar { period_epochs: 2 }, 0.8, epochs, ipe)?;
+        println!("\nmodel {} ({})", probe.model_spec, probe.model.describe());
+
+        std::fs::create_dir_all("results")?;
+        let mut f = std::fs::File::create("results/classify_loss.csv")?;
+        writeln!(f, "iter,dense_loss,ssprop_loss,ssprop_drop_rate")?;
+        for i in 0..probe.metrics.losses.len().min(ssprop.metrics.losses.len()) {
+            writeln!(
+                f,
+                "{i},{:.6},{:.6},{:.2}",
+                probe.metrics.losses[i], ssprop.metrics.losses[i], ssprop.metrics.drop_rates[i]
+            )?;
+        }
+        println!("\nloss curves -> results/classify_loss.csv");
+        println!("(with --features pjrt + artifacts, this example drives the AOT ResNet-18)");
+        Ok(())
+    }
+}
+
 #[cfg(feature = "pjrt")]
 fn run() -> Result<()> {
     pjrt_example::run()
@@ -95,9 +169,7 @@ fn run() -> Result<()> {
 
 #[cfg(not(feature = "pjrt"))]
 fn run() -> Result<()> {
-    println!("classify drives PJRT artifacts; rebuild with --features pjrt");
-    println!("(for a no-setup demo, try: cargo run --release --example quickstart)");
-    Ok(())
+    native_example::run()
 }
 
 fn main() -> Result<()> {

@@ -1,32 +1,40 @@
-//! Quickstart: train a small CNN with scheduled sparse back-propagation —
-//! pure Rust, no artifacts, no FFI, runs on any machine:
+//! Quickstart: train a model-zoo CNN with scheduled sparse
+//! back-propagation — pure Rust, no artifacts, no FFI, runs on any
+//! machine:
 //!
 //! ```bash
 //! cargo run --release --example quickstart
+//! # any zoo preset works, e.g. the residual/BatchNorm family:
+//! cargo run --release --example quickstart -- --model resnet-tiny-w8-b1
 //! ```
 //!
-//! Trains a SimpleCNN on the synthetic CIFAR-10 substitute with the paper's
-//! bar-2-epoch scheduler at D*=0.8 through the NativeBackend (img2col GEMM
-//! forward, channel top-k compacted sparse backward), and prints the loss
-//! curve plus the FLOPs/energy ledger.
+//! Trains the selected `--model` (default: the paper's SimpleCNN) on the
+//! synthetic CIFAR-10 substitute with the paper's bar-2-epoch scheduler at
+//! D*=0.8 through the NativeBackend (img2col GEMM forward, channel top-k
+//! compacted sparse backward), and prints the resolved canonical spec, the
+//! loss curve, and the FLOPs/energy ledger.
 
 use anyhow::Result;
 use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
 use ssprop::energy::RTX_A5000;
 use ssprop::schedule::DropScheduler;
+use ssprop::util::cli::Args;
 
 fn main() -> Result<()> {
+    let args = Args::from_env();
     let (epochs, ipe) = (4, 24);
-    let mut cfg = NativeTrainConfig::quick("cifar10", epochs, ipe);
+    let mut cfg = NativeTrainConfig::quick(args.get_or("dataset", "cifar10"), epochs, ipe);
+    cfg.model = args.get_or("model", "simple-cnn").to_string();
     cfg.scheduler = DropScheduler::paper_default(epochs, ipe); // bar, 2-epoch, D*=0.8
     cfg.verbose = true;
 
-    println!("== ssProp quickstart: SimpleCNN on synth-CIFAR-10 (native backend) ==\n");
+    println!("== ssProp quickstart: {} on synth-{} (native backend) ==\n", cfg.model, cfg.dataset);
     let mut trainer = NativeTrainer::new(cfg)?;
     let (test_loss, test_acc) = trainer.run()?;
 
     let m = &trainer.metrics;
-    println!("\nfinal test loss {test_loss:.4}, acc {test_acc:.3}");
+    println!("\nmodel           {} ({})", trainer.model_spec, trainer.model.describe());
+    println!("final test loss {test_loss:.4}, acc {test_acc:.3}");
     println!(
         "loss curve (every 8 iters): {:?}",
         m.losses.iter().step_by(8).map(|l| (l * 100.0).round() / 100.0).collect::<Vec<_>>()

@@ -10,10 +10,13 @@
 //! `--smoke` shrinks warmup/iterations/budget to a CI-sized run that still
 //! exercises every path (used by the CI release job). `--model SPEC`
 //! restricts the run to the data-parallel executor section for that model
-//! zoo preset (`simple-cnn-d4-w16`, `vgg-tiny`, `dropout-cnn-w8-p25`, ...)
-//! and tags the `native/{serial,parallel}_step_*` /
-//! `native/parallel_speedup_*` lines with the spec, so CI can compare the
-//! sharding win across architectures.
+//! zoo preset (`simple-cnn-d4-w16`, `vgg-tiny`, `dropout-cnn-w8-p25`,
+//! `resnet-tiny-w8-b1`, ...) and tags the `native/{serial,parallel}_step_*`
+//! / `native/parallel_speedup_*` lines with the spec, so CI can compare the
+//! sharding win across architectures; each per-model run closes with a
+//! `native/bwd_speedup_{spec}_d80` line (serial dense step / serial sparse
+//! step at the paper's D* = 0.8 — the model-level sparse-backward saving,
+//! including through residual graphs and BatchNorm).
 
 use std::time::Duration;
 
@@ -145,9 +148,14 @@ fn main() {
 /// Data-parallel executor vs the serial step for one zoo preset on a
 /// cifar10-sized input (3x32x32, bt 32). Each parallel step shards the
 /// batch over the worker count, runs the layer graph per shard with
-/// globally-reduced channel selection, and tree-reduces gradients;
+/// globally-reduced channel selection (and, for presets with BatchNorm,
+/// globally-reduced batch statistics), and tree-reduces gradients;
 /// `native/parallel_speedup_{spec}_*` is the serial/parallel median ratio
-/// (> 1 = the sharded step is faster on this machine).
+/// (> 1 = the sharded step is faster on this machine). The closing
+/// `native/bwd_speedup_{spec}_d80` line is the whole-model sparse-backward
+/// saving at the paper's D* = 0.8: serial dense step / serial d80 step —
+/// tracked per preset so the residual-graph saving is visible next to the
+/// plain conv stacks.
 fn parallel_section(spec: &str, warm: usize, iters: usize, budget: Duration) {
     let be = NativeBackend::new();
     let parsed = parse_model_spec(spec).expect("--model spec");
@@ -159,13 +167,15 @@ fn parallel_section(spec: &str, warm: usize, iters: usize, budget: Duration) {
     let mut prng = Pcg::new(17, 9);
     let px: Vec<f32> = (0..bt * n_in).map(|_| prng.normal()).collect();
     let py: Vec<i32> = (0..bt).map(|i| (i % 10) as i32).collect();
-    for (label, d) in [("dense", 0.0f64), ("d80", 0.8)] {
+    let mut serial_medians = [0f64; 2];
+    for (idx, (label, d)) in [("dense", 0.0f64), ("d80", 0.8)].into_iter().enumerate() {
         let mut serial = build();
         let name = format!("native/serial_step_{slug}_{label}");
         let base = bench(&name, warm, iters, budget, || {
             serial.train_step(&be, &px, &py, d, 0.01).unwrap();
         });
         report(&base);
+        serial_medians[idx] = base.median_ns;
         for threads in [2usize, 4] {
             let mut model = build();
             let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
@@ -181,4 +191,9 @@ fn parallel_section(spec: &str, warm: usize, iters: usize, budget: Duration) {
             );
         }
     }
+    println!(
+        "{:<48} {:>11.2}x (serial dense / serial d80 median)",
+        format!("native/bwd_speedup_{slug}_d80"),
+        serial_medians[0] / serial_medians[1]
+    );
 }

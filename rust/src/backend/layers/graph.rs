@@ -1,0 +1,793 @@
+//! The layer-graph container: topologically-ordered nodes over named
+//! activation *slots*, supporting residual (skip) connections through an
+//! `Add` merge node — the structure the paper's ResNet experiments need
+//! that a linear `Sequential` cannot express.
+//!
+//! Slot model: slot 0 is the graph input; node `i`'s output is slot
+//! `i + 1`. Every node consumes one or two earlier slots ([`NodeOp`]), so
+//! construction order *is* a topological order and one forward walk /
+//! one reverse backward walk visits every node exactly once. The backward
+//! accumulates gradients per slot: a slot consumed by several nodes (the
+//! residual trunk feeding both a conv branch and its skip) receives each
+//! consumer's contribution in fixed reverse-node order, and an `Add`
+//! node fans the incoming gradient to both operands unchanged — which is
+//! exactly the calculus of `y = a + b`.
+//!
+//! A chain-shaped graph ([`Graph::new`], the [`super::Sequential`]
+//! constructor) degenerates to the historical container: every slot has
+//! one consumer, gradient accumulation is a move, and the walk replays
+//! the legacy SimpleCNN **bitwise** (pinned by
+//! `rust/tests/layer_graph_equivalence.rs`).
+
+use anyhow::{bail, Context, Result};
+
+use super::{
+    softmax_ce_core, softmax_ce_examples, FwdCtx, Layer, LayerWs, Selection, Shape, StepStats,
+    INPUT_SLOT,
+};
+use crate::backend::Backend;
+use crate::flops::LayerSet;
+use crate::tensorstore::Tensor;
+
+/// What one graph node computes.
+#[derive(Debug)]
+pub(crate) enum NodeOp {
+    /// A [`Layer`] applied to one predecessor slot.
+    Layer {
+        /// The layer (owns its parameters).
+        layer: Box<dyn Layer>,
+        /// Input slot id (0 = graph input, `i + 1` = node i's output).
+        input: usize,
+    },
+    /// Residual merge: elementwise sum of two predecessor slots. Its
+    /// backward fans the incoming gradient to both operands unchanged.
+    Add {
+        /// Left operand slot.
+        a: usize,
+        /// Right operand slot.
+        b: usize,
+    },
+}
+
+/// One node of a [`Graph`]: a checkpoint name (empty = stateless, not
+/// checkpointed) plus its operation.
+#[derive(Debug)]
+pub(crate) struct Node {
+    pub(crate) name: String,
+    pub(crate) op: NodeOp,
+}
+
+/// Elementwise sum of two equal-length activation buffers (the `Add`
+/// node's forward).
+pub(crate) fn add_forward(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len(), "add operands must match");
+    a.iter().zip(b).map(|(&x, &y)| x + y).collect()
+}
+
+/// Accumulate a gradient contribution into a slot: the first contribution
+/// moves in (bitwise — this is what keeps chain graphs identical to the
+/// legacy walk), later ones add elementwise in the caller's fixed order.
+pub(crate) fn accumulate(slot: &mut Option<Vec<f32>>, g: Vec<f32>) {
+    match slot {
+        None => *slot = Some(g),
+        Some(acc) => {
+            debug_assert_eq!(acc.len(), g.len(), "gradient fan-in length mismatch");
+            for (av, gv) in acc.iter_mut().zip(&g) {
+                *av += gv;
+            }
+        }
+    }
+}
+
+/// Incremental constructor for residual [`Graph`]s: append nodes against
+/// already-created slots, then [`GraphBuilder::finish`]. Shapes are
+/// propagated and validated per node, so a malformed wiring fails at
+/// build time, not mid-training.
+#[derive(Debug)]
+pub struct GraphBuilder {
+    spec: String,
+    nodes: Vec<Node>,
+    /// `shapes[s]` is slot s's per-example shape.
+    shapes: Vec<Shape>,
+}
+
+impl GraphBuilder {
+    /// Start a graph over per-example inputs of `in_shape` (slot
+    /// [`INPUT_SLOT`]).
+    pub fn new(spec: impl Into<String>, in_shape: Shape) -> GraphBuilder {
+        GraphBuilder { spec: spec.into(), nodes: Vec::new(), shapes: vec![in_shape] }
+    }
+
+    /// Shape of an existing slot (useful while wiring skip connections).
+    pub fn slot_shape(&self, slot: usize) -> Option<Shape> {
+        self.shapes.get(slot).copied()
+    }
+
+    /// Append `layer` consuming slot `input`; returns the new node's
+    /// output slot. Stateless layers pass an empty `name`.
+    pub fn layer(
+        &mut self,
+        name: impl Into<String>,
+        input: usize,
+        layer: Box<dyn Layer>,
+    ) -> Result<usize> {
+        let Some(in_shape) = self.shapes.get(input) else {
+            bail!("layer {:?} wired to unknown slot {input}", layer.describe());
+        };
+        let out = layer
+            .out_shape(in_shape)
+            .with_context(|| format!("layer {:?} rejects its input", layer.describe()))?;
+        self.nodes.push(Node { name: name.into(), op: NodeOp::Layer { layer, input } });
+        self.shapes.push(out);
+        Ok(self.shapes.len() - 1)
+    }
+
+    /// Append a residual merge of slots `a` and `b` (shapes must match);
+    /// returns the merge's output slot.
+    pub fn add(&mut self, a: usize, b: usize) -> Result<usize> {
+        let (Some(&sa), Some(&sb)) = (self.shapes.get(a), self.shapes.get(b)) else {
+            bail!("add wired to unknown slot ({a}, {b})");
+        };
+        if sa != sb {
+            bail!("add operands disagree: slot {a} is {sa:?}, slot {b} is {sb:?}");
+        }
+        self.nodes.push(Node { name: String::new(), op: NodeOp::Add { a, b } });
+        self.shapes.push(sa);
+        Ok(self.shapes.len() - 1)
+    }
+
+    /// Validate and seal the graph. The final node must produce flat
+    /// logits, and every intermediate node output must be consumed by a
+    /// later node (a dangling branch would silently drop its gradient).
+    pub fn finish(self) -> Result<Graph> {
+        let GraphBuilder { spec, nodes, shapes } = self;
+        if nodes.is_empty() {
+            bail!("a model needs at least one layer");
+        }
+        let classes = match *shapes.last().expect("shapes is never empty") {
+            Shape::Flat { features } => features,
+            Shape::Spatial { .. } => bail!("the final layer must produce flat logits"),
+        };
+        let mut consumed = vec![false; shapes.len()];
+        for node in &nodes {
+            match node.op {
+                NodeOp::Layer { input, .. } => consumed[input] = true,
+                NodeOp::Add { a, b } => {
+                    consumed[a] = true;
+                    consumed[b] = true;
+                }
+            }
+        }
+        for (slot, used) in consumed.iter().enumerate().take(shapes.len() - 1).skip(1) {
+            if !used {
+                bail!("node {} output (slot {slot}) is never consumed", slot - 1);
+            }
+        }
+        let ws = (0..nodes.len()).map(|_| LayerWs::default()).collect();
+        Ok(Graph { spec, nodes, shapes, classes, ws, step: 0 })
+    }
+}
+
+/// A feed-forward layer graph — residual connections allowed — trained
+/// end-to-end through the [`Backend`] trait: owns the nodes, one
+/// [`LayerWs`] per node, and the step counter that seeds stochastic
+/// layers. The final node must produce a [`Shape::Flat`] logits vector;
+/// the softmax cross-entropy loss lives in the container, not in a
+/// layer, exactly as in the historical model.
+#[derive(Debug)]
+pub struct Graph {
+    /// Resolved model-spec string ("simple-cnn-d2-w8") — display and
+    /// checkpoint identity.
+    spec: String,
+    nodes: Vec<Node>,
+    /// `shapes[s]` is slot s's shape (`shapes[0]` the input, `shapes[i+1]`
+    /// node i's output).
+    shapes: Vec<Shape>,
+    /// Logit count of the final [`Shape::Flat`] output.
+    classes: usize,
+    /// Per-node workspaces for the serial path (the executor owns
+    /// per-worker sets instead).
+    ws: Vec<LayerWs>,
+    /// Monotone train-step counter (dropout mask streams).
+    step: u64,
+}
+
+impl Graph {
+    /// Build a *chain-shaped* graph from `(checkpoint name, layer)` pairs,
+    /// each consuming its predecessor's output — the [`super::Sequential`]
+    /// constructor, bitwise-compatible with the historical container. The
+    /// final shape must be flat (the logits); stateless layers pass an
+    /// empty name.
+    pub fn new(
+        spec: impl Into<String>,
+        in_shape: Shape,
+        parts: Vec<(String, Box<dyn Layer>)>,
+    ) -> Result<Graph> {
+        let mut b = GraphBuilder::new(spec, in_shape);
+        let mut cur = INPUT_SLOT;
+        for (name, layer) in parts {
+            cur = b.layer(name, cur, layer)?;
+        }
+        b.finish()
+    }
+
+    /// Start an explicit [`GraphBuilder`] (residual wiring).
+    pub fn builder(spec: impl Into<String>, in_shape: Shape) -> GraphBuilder {
+        GraphBuilder::new(spec, in_shape)
+    }
+
+    /// The resolved model-spec string this graph was built from.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// One-line architecture summary (node descriptions joined in
+    /// topological order; residual merges print as "add").
+    pub fn describe(&self) -> String {
+        self.nodes
+            .iter()
+            .map(|n| match &n.op {
+                NodeOp::Layer { layer, .. } => layer.describe(),
+                NodeOp::Add { .. } => "add".to_string(),
+            })
+            .collect::<Vec<_>>()
+            .join(" > ")
+    }
+
+    /// Per-example input shape.
+    pub fn in_shape(&self) -> Shape {
+        self.shapes[0]
+    }
+
+    /// Logit count of the classifier head.
+    pub fn out_features(&self) -> usize {
+        self.classes
+    }
+
+    /// Number of nodes in the graph (kept under the historical name; Add
+    /// merges count as nodes).
+    pub fn num_layers(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Read access to node `i` (the executor walks the graph this way).
+    pub(crate) fn node(&self, i: usize) -> &Node {
+        &self.nodes[i]
+    }
+
+    /// Node `i`'s layer, or `None` for an Add merge.
+    pub(crate) fn node_layer(&self, i: usize) -> Option<&dyn Layer> {
+        match &self.nodes[i].op {
+            NodeOp::Layer { layer, .. } => Some(layer.as_ref()),
+            NodeOp::Add { .. } => None,
+        }
+    }
+
+    /// Mutable parameter arrays of node `i` (empty for stateless nodes and
+    /// Add merges) — the executor applies reduced updates through this.
+    pub(crate) fn node_params_mut(&mut self, i: usize) -> Vec<&mut Vec<f32>> {
+        match &mut self.nodes[i].op {
+            NodeOp::Layer { layer, .. } => layer.params_mut(),
+            NodeOp::Add { .. } => Vec::new(),
+        }
+    }
+
+    /// Key node `i`'s workspace to batch size `bt` (no-op for Add merges).
+    pub(crate) fn node_ensure_ws(&self, i: usize, ws: &mut LayerWs, bt: usize) {
+        if let NodeOp::Layer { layer, .. } = &self.nodes[i].op {
+            layer.ensure_ws(ws, bt);
+        }
+    }
+
+    /// Fold the batch statistics node `i`'s last training forward left in
+    /// `ws` into persistent layer state (BatchNorm running stats); no-op
+    /// for every other node.
+    pub(crate) fn node_commit_stats(&mut self, i: usize, ws: &LayerWs) {
+        if let NodeOp::Layer { layer, .. } = &mut self.nodes[i].op {
+            layer.commit_stats(ws);
+        }
+    }
+
+    /// Number of conv layers (ssProp-selectable units), including convs on
+    /// residual projection shortcuts.
+    pub fn conv_count(&self) -> usize {
+        (0..self.nodes.len())
+            .filter(|&i| self.node_layer(i).is_some_and(|l| l.conv_geom().is_some()))
+            .count()
+    }
+
+    /// Total conv output channels — [`StepStats::total_channels`].
+    pub fn total_channels(&self) -> usize {
+        (0..self.nodes.len())
+            .filter_map(|i| self.node_layer(i).and_then(|l| l.conv_geom()))
+            .map(|g| g.cout)
+            .sum()
+    }
+
+    /// Key every node workspace to batch size `bt` (conv plans re-key in
+    /// place, preserving capacity). Called by `train_step`; also useful to
+    /// prewarm before a timed loop — and, with the epoch-tail batch size,
+    /// to prewarm the tail re-key.
+    pub fn ensure_ws(&mut self, bt: usize) {
+        let mut ws = std::mem::take(&mut self.ws);
+        for (i, w) in ws.iter_mut().enumerate() {
+            self.node_ensure_ws(i, w, bt);
+        }
+        self.ws = ws;
+    }
+
+    /// A fresh throwaway workspace set keyed to `bt` (eval has no backward
+    /// to reuse caches for, and `&self` keeps eval shareable).
+    fn fresh_ws(&self, bt: usize) -> Vec<LayerWs> {
+        let mut ws: Vec<LayerWs> = (0..self.nodes.len()).map(|_| LayerWs::default()).collect();
+        for (i, w) in ws.iter_mut().enumerate() {
+            self.node_ensure_ws(i, w, bt);
+        }
+        ws
+    }
+
+    /// Advance and return the step counter seeding this step's stochastic
+    /// layers. The serial and data-parallel paths both draw from here, so
+    /// a sharded step reproduces the serial dropout masks.
+    pub(crate) fn begin_step(&mut self) -> u64 {
+        let step = self.step;
+        self.step += 1;
+        step
+    }
+
+    /// Forward pass keeping every slot: `acts[0] = x`, `acts[i + 1]` is
+    /// node i's output, `acts[num_layers()]` the logits. Runs through the
+    /// workspaces in `ws` — the executor passes per-worker sets so the
+    /// identical forward runs per shard without locks. Batch-normalizing
+    /// layers compute their statistics locally over `bt` (the serial and
+    /// eval semantics; the executor substitutes globally-reduced
+    /// statistics via [`Layer::forward_with_stats`]).
+    pub(crate) fn forward_collect(
+        &self,
+        be: &dyn Backend,
+        x: &[f32],
+        bt: usize,
+        ws: &mut [LayerWs],
+        ctx: &FwdCtx,
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(ws.len(), self.nodes.len(), "workspace count");
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.nodes.len() + 1);
+        acts.push(x.to_vec());
+        for (i, node) in self.nodes.iter().enumerate() {
+            let out = match &node.op {
+                NodeOp::Layer { layer, input } => {
+                    layer.forward(be, &acts[*input], bt, &mut ws[i], ctx)
+                }
+                NodeOp::Add { a, b } => add_forward(&acts[*a], &acts[*b]),
+            };
+            acts.push(out);
+        }
+        acts
+    }
+
+    /// One SGD training step at `drop_rate`; returns loss/acc/kept-channel
+    /// stats. `x` is `(bt, in_shape)` flattened, `y` integer labels. Every
+    /// conv layer selects its ssProp channels locally from the batch
+    /// gradient (the data-parallel executor substitutes global selection);
+    /// batch-normalizing layers use this batch's statistics and fold them
+    /// into their running state.
+    pub fn train_step(
+        &mut self,
+        be: &dyn Backend,
+        x: &[f32],
+        y: &[i32],
+        drop_rate: f64,
+        lr: f32,
+    ) -> Result<StepStats> {
+        let bt = y.len();
+        if bt == 0 || x.len() != bt * self.in_shape().volume() {
+            bail!("bad batch geometry: {} inputs for {bt} labels", x.len());
+        }
+        self.ensure_ws(bt);
+        let step = self.begin_step();
+        let ctx = FwdCtx { train: true, step, example_offset: 0 };
+        // Take the workspaces out so the forward can borrow them alongside
+        // `self` (same dance the legacy model did with its plans).
+        let mut ws = std::mem::take(&mut self.ws);
+        let acts = self.forward_collect(be, x, bt, &mut ws, &ctx);
+        let n = self.nodes.len();
+        let logits = &acts[n];
+        let (loss_sum, correct, dlogits) = softmax_ce_core(logits, y, self.classes, bt);
+        let loss = loss_sum / bt as f64;
+        let acc = correct as f64 / bt as f64;
+        if !loss.is_finite() {
+            self.ws = ws;
+            bail!("non-finite loss at drop rate {drop_rate}");
+        }
+
+        // Backward in reverse topological order over per-slot gradient
+        // accumulators: each node takes its output slot's (fully
+        // accumulated) gradient, computes its own gradients on pre-update
+        // parameters, takes its SGD update immediately — updates never
+        // feed another node's backward, so the order only has to be
+        // fixed, not clever — and accumulates d loss / d input into its
+        // input slot(s). An Add merge fans the gradient to both operands.
+        let mut slot_grads: Vec<Option<Vec<f32>>> = (0..n + 1).map(|_| None).collect();
+        slot_grads[n] = Some(dlogits);
+        let mut kept = 0usize;
+        for i in (0..n).rev() {
+            let g = slot_grads[i + 1].take().expect("every node output feeds a later node");
+            let (layer, input) = match &self.nodes[i].op {
+                NodeOp::Add { a, b } => {
+                    accumulate(&mut slot_grads[*a], g.clone());
+                    accumulate(&mut slot_grads[*b], g);
+                    continue;
+                }
+                NodeOp::Layer { layer, input } => (layer, *input),
+            };
+            let need_dx = input != INPUT_SLOT;
+            let out = layer.backward(
+                be,
+                &acts[input],
+                &g,
+                bt,
+                &mut ws[i],
+                Selection::Local(drop_rate),
+                need_dx,
+            );
+            kept += out.kept;
+            for (param, grad) in self.node_params_mut(i).into_iter().zip(&out.grads) {
+                for (pv, &gv) in param.iter_mut().zip(grad) {
+                    *pv -= lr * gv;
+                }
+            }
+            if need_dx {
+                accumulate(&mut slot_grads[input], out.dx);
+            }
+        }
+        // Fold this batch's statistics into persistent state (BN running
+        // stats) exactly once per training step.
+        for (i, w) in ws.iter().enumerate() {
+            self.node_commit_stats(i, w);
+        }
+        self.ws = ws;
+
+        Ok(StepStats { loss, acc, kept_channels: kept, total_channels: self.total_channels() })
+    }
+
+    /// Forward-only mean (loss, accuracy) on a batch. Stochastic layers run
+    /// in eval mode (Dropout is the identity, BatchNorm normalizes with its
+    /// running statistics); workspaces are throwaway.
+    pub fn eval_batch(&self, be: &dyn Backend, x: &[f32], y: &[i32]) -> (f64, f64) {
+        let bt = y.len();
+        let mut ws = self.fresh_ws(bt);
+        let ctx = FwdCtx { train: false, step: self.step, example_offset: 0 };
+        let acts = self.forward_collect(be, x, bt, &mut ws, &ctx);
+        let (losses, correct) = softmax_ce_examples(acts.last().unwrap(), y, self.classes);
+        let mut loss_sum = 0f64;
+        for &l in &losses {
+            loss_sum += l;
+        }
+        (loss_sum / bt as f64, correct as f64 / bt as f64)
+    }
+
+    /// Parameters as named tensors — `param['{name}.{field}']`, the
+    /// checkpoint format shared with the AOT path (and bit-compatible with
+    /// the legacy SimpleCNN's `conv{l}`/`fc` naming). Node names may
+    /// themselves contain dots (`s1b0.bn1`); the field is everything after
+    /// the *last* dot, so BatchNorm running stats land under stable names
+    /// like `param['s1b0.bn1.rm']`.
+    pub fn state_tensors(&self) -> Vec<(String, Tensor)> {
+        let mut out = Vec::new();
+        for node in &self.nodes {
+            if node.name.is_empty() {
+                continue;
+            }
+            let NodeOp::Layer { layer, .. } = &node.op else { continue };
+            for p in layer.params() {
+                let key = format!("param['{}.{}']", node.name, p.field);
+                out.push((key, Tensor::from_f32(p.shape.clone(), p.data)));
+            }
+        }
+        out
+    }
+
+    /// Restore parameters saved by [`Graph::state_tensors`].
+    pub fn load_state_tensors(&mut self, tensors: &[(String, Tensor)]) -> Result<()> {
+        for (name, t) in tensors {
+            let inner = name
+                .strip_prefix("param['")
+                .and_then(|r| r.strip_suffix("']"))
+                .ok_or_else(|| anyhow::anyhow!("unknown state leaf {name:?}"))?;
+            let (lname, field) = inner
+                .rsplit_once('.')
+                .ok_or_else(|| anyhow::anyhow!("unknown state leaf {name:?}"))?;
+            let node = self
+                .nodes
+                .iter_mut()
+                .find(|n| n.name == lname)
+                .ok_or_else(|| anyhow::anyhow!("unknown state leaf {name:?}"))?;
+            let NodeOp::Layer { layer, .. } = &mut node.op else {
+                bail!("state leaf {name:?} names a parameterless node");
+            };
+            layer.load_param(field, t.to_f32()).with_context(|| format!("loading {name:?}"))?;
+        }
+        Ok(())
+    }
+
+    /// Every parameter flattened in checkpoint order — including BatchNorm
+    /// running statistics — the bitwise-comparison target for the
+    /// determinism suites.
+    pub fn flat_params(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for i in 0..self.nodes.len() {
+            if let Some(layer) = self.node_layer(i) {
+                for p in layer.params() {
+                    out.extend_from_slice(p.data);
+                }
+            }
+        }
+        out
+    }
+
+    /// Conv + BN + dropout inventory for Eq. 6–9 FLOPs accounting, in node
+    /// order. A batch-normalizing node marks `counted_bn` on the conv that
+    /// *produces its input slot* — resolved through the graph wiring, not
+    /// node append order — so the Eq. 7 ledger stays correct however a
+    /// builder interleaves projection shortcuts with the main-path BNs.
+    pub fn layer_set(&self) -> LayerSet {
+        let mut set = LayerSet::default();
+        // conv_at_slot[s]: index into set.convs of the conv producing slot s.
+        let mut conv_at_slot: Vec<Option<usize>> = vec![None; self.nodes.len() + 1];
+        for (i, node) in self.nodes.iter().enumerate() {
+            let NodeOp::Layer { layer, input } = &node.op else { continue };
+            if layer.needs_batch_stats() {
+                if let Some(ci) = conv_at_slot[*input] {
+                    set.convs[ci].counted_bn = true;
+                }
+                continue;
+            }
+            layer.account_flops(&mut set);
+            if layer.conv_geom().is_some() {
+                conv_at_slot[i + 1] = Some(set.convs.len() - 1);
+            }
+        }
+        set
+    }
+
+    /// Total im2col materializations across this graph's own workspaces —
+    /// advances by exactly [`Graph::conv_count`] per serial `train_step`
+    /// when the fused path is healthy.
+    pub fn plan_cols_builds(&self) -> u64 {
+        self.ws.iter().map(|w| w.plan_cols_builds()).sum()
+    }
+
+    /// Capacity fingerprints of every conv plan, conv order (regression
+    /// tests pin these flat across steps).
+    pub fn plan_caps(&self) -> Vec<[usize; 7]> {
+        self.ws.iter().filter_map(|w| w.plan_caps()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{
+        BatchNorm2d, Conv2dLayer, Dropout, GlobalAvgPool, Linear, ReLU, Sequential,
+    };
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::util::rng::Pcg;
+
+    fn tiny() -> Sequential {
+        let mut rng = Pcg::new(3, 1);
+        let parts: Vec<(String, Box<dyn Layer>)> = vec![
+            ("conv0".into(), Box::new(Conv2dLayer::init(&mut rng, 1, 6, 6, 4, 3, 1, 1))),
+            (String::new(), Box::new(ReLU)),
+            (String::new(), Box::new(GlobalAvgPool::new(4, 6, 6))),
+            ("fc".into(), Box::new(Linear::init(&mut rng, 4, 3))),
+        ];
+        Sequential::new("tiny", Shape::Spatial { c: 1, h: 6, w: 6 }, parts).unwrap()
+    }
+
+    #[test]
+    fn shape_propagation_and_metadata() {
+        let m = tiny();
+        assert_eq!(m.in_shape(), Shape::Spatial { c: 1, h: 6, w: 6 });
+        assert_eq!(m.out_features(), 3);
+        assert_eq!(m.num_layers(), 4);
+        assert_eq!(m.conv_count(), 1);
+        assert_eq!(m.total_channels(), 4);
+        assert!(m.describe().contains("conv3x3"));
+        assert_eq!(m.spec(), "tiny");
+    }
+
+    #[test]
+    fn rejects_spatial_output_and_geometry_mismatch() {
+        let mut rng = Pcg::new(3, 1);
+        let spatial_end: Vec<(String, Box<dyn Layer>)> =
+            vec![("conv0".into(), Box::new(Conv2dLayer::init(&mut rng, 1, 6, 6, 4, 3, 1, 1)))];
+        assert!(Sequential::new("bad", Shape::Spatial { c: 1, h: 6, w: 6 }, spatial_end).is_err());
+
+        let mut rng = Pcg::new(3, 1);
+        let wrong_in: Vec<(String, Box<dyn Layer>)> =
+            vec![("conv0".into(), Box::new(Conv2dLayer::init(&mut rng, 2, 6, 6, 4, 3, 1, 1)))];
+        assert!(Sequential::new("bad", Shape::Spatial { c: 1, h: 6, w: 6 }, wrong_in).is_err());
+
+        assert!(Sequential::new("empty", Shape::Flat { features: 3 }, Vec::new()).is_err());
+    }
+
+    #[test]
+    fn builder_rejects_bad_wiring() {
+        let shape = Shape::Spatial { c: 2, h: 4, w: 4 };
+        // unknown slot
+        let mut b = Graph::builder("bad", shape);
+        assert!(b.layer("", 7, Box::new(ReLU)).is_err());
+        // add of mismatched shapes
+        let mut b = Graph::builder("bad", shape);
+        let r = b.layer("", INPUT_SLOT, Box::new(GlobalAvgPool::new(2, 4, 4))).unwrap();
+        assert!(b.add(INPUT_SLOT, r).is_err(), "spatial + flat must not merge");
+        // dangling node output
+        let mut b = Graph::builder("bad", shape);
+        b.layer("", INPUT_SLOT, Box::new(ReLU)).unwrap();
+        let g = b.layer("", INPUT_SLOT, Box::new(GlobalAvgPool::new(2, 4, 4))).unwrap();
+        let mut rng = Pcg::new(1, 1);
+        b.layer("fc", g, Box::new(Linear::init(&mut rng, 2, 3))).unwrap();
+        let err = b.finish().err().expect("dangling relu must fail").to_string();
+        assert!(err.contains("never consumed"), "{err}");
+        // slot_shape reads back what was wired
+        let b = Graph::builder("ok", shape);
+        assert_eq!(b.slot_shape(INPUT_SLOT), Some(shape));
+        assert_eq!(b.slot_shape(9), None);
+    }
+
+    #[test]
+    fn add_merge_forwards_sum_and_fans_gradient() {
+        // Residual identity: y = dropout0(x) + x = 2x on positive input
+        // (rate-0 dropout is the identity). Training this graph on x must
+        // match training the plain gap->fc chain on 2x bit-for-bit: the
+        // forward sums, and the trunk slot accumulates both consumers'
+        // gradients without disturbing the head's own gradient flow.
+        let be = NativeBackend::new();
+        let shape = Shape::Spatial { c: 2, h: 2, w: 2 };
+        let head = |rng: &mut Pcg| Linear::init(rng, 2, 3);
+
+        let mut b = Graph::builder("res", shape);
+        let branch = b.layer("", INPUT_SLOT, Box::new(Dropout::new(0.0, shape, 1))).unwrap();
+        let sum = b.add(branch, INPUT_SLOT).unwrap();
+        let gap = b.layer("", sum, Box::new(GlobalAvgPool::new(2, 2, 2))).unwrap();
+        let mut rng = Pcg::new(5, 1);
+        b.layer("fc", gap, Box::new(head(&mut rng))).unwrap();
+        let mut res = b.finish().unwrap();
+        assert!(res.describe().contains("add"), "{}", res.describe());
+
+        let mut rng = Pcg::new(5, 1);
+        let chain: Vec<(String, Box<dyn Layer>)> = vec![
+            (String::new(), Box::new(GlobalAvgPool::new(2, 2, 2))),
+            ("fc".into(), Box::new(head(&mut rng))),
+        ];
+        let mut plain = Sequential::new("chain", shape, chain).unwrap();
+
+        let mut drng = Pcg::new(9, 9);
+        let x: Vec<f32> = (0..4 * 8).map(|_| drng.uniform() + 0.1).collect();
+        let x2: Vec<f32> = x.iter().map(|&v| v + v).collect();
+        let y = vec![0, 1, 2, 0];
+        for step in 0..3 {
+            let a = res.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+            let b = plain.train_step(&be, &x2, &y, 0.0, 0.05).unwrap();
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step} loss bits");
+            assert_eq!(res.flat_params(), plain.flat_params(), "step {step} params");
+        }
+    }
+
+    #[test]
+    fn train_step_reduces_loss_and_counts_channels() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        let mut rng = Pcg::new(9, 2);
+        let x: Vec<f32> = (0..6 * 36).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..6).map(|i| (i % 3) as i32).collect();
+        let first = m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        assert_eq!(first.kept_channels, first.total_channels);
+        for _ in 0..20 {
+            m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        }
+        let last = m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        assert!(last.loss < first.loss, "{} -> {}", first.loss, last.loss);
+        // sparse step keeps round((1-0.8)*4) = 1 of 4 channels
+        let sparse = m.train_step(&be, &x, &y, 0.8, 0.05).unwrap();
+        assert_eq!(sparse.kept_channels, 1);
+        assert_eq!(sparse.total_channels, 4);
+    }
+
+    #[test]
+    fn train_step_rejects_bad_geometry() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        assert!(m.train_step(&be, &[0.0; 5], &[0, 1], 0.0, 0.05).is_err());
+        assert!(m.train_step(&be, &[], &[], 0.0, 0.05).is_err());
+    }
+
+    #[test]
+    fn state_tensor_roundtrip_and_errors() {
+        let be = NativeBackend::new();
+        let mut a = tiny();
+        let mut rng = Pcg::new(11, 4);
+        let x: Vec<f32> = (0..4 * 36).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = vec![0, 1, 2, 0];
+        a.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        let saved = a.state_tensors();
+        assert_eq!(saved.len(), 4, "conv w/b + fc w/b");
+        assert!(saved.iter().any(|(n, _)| n == "param['conv0.w']"));
+        assert!(saved.iter().any(|(n, _)| n == "param['fc.b']"));
+
+        let mut b = tiny();
+        assert_ne!(a.flat_params(), b.flat_params());
+        b.load_state_tensors(&saved).unwrap();
+        assert_eq!(a.flat_params(), b.flat_params());
+        let (la, _) = a.eval_batch(&be, &x, &y);
+        let (lb, _) = b.eval_batch(&be, &x, &y);
+        assert_eq!(la, lb);
+
+        let bad = vec![("param['fc.b']".to_string(), Tensor::from_f32(vec![2], &[0.0, 1.0]))];
+        assert!(b.load_state_tensors(&bad).is_err(), "shape mismatch must fail");
+        let unknown = vec![("param['nope.w']".to_string(), Tensor::from_f32(vec![1], &[0.0]))];
+        assert!(b.load_state_tensors(&unknown).is_err(), "unknown layer must fail");
+        let mangled = vec![("weights".to_string(), Tensor::from_f32(vec![1], &[0.0]))];
+        assert!(b.load_state_tensors(&mangled).is_err(), "malformed key must fail");
+    }
+
+    #[test]
+    fn dotted_node_names_checkpoint_on_the_last_dot() {
+        let be = NativeBackend::new();
+        let shape = Shape::Spatial { c: 1, h: 4, w: 4 };
+        let mut b = Graph::builder("dotted", shape);
+        let bn = b.layer("s0b0.bn1", INPUT_SLOT, Box::new(BatchNorm2d::new(1, 4, 4))).unwrap();
+        let gap = b.layer("", bn, Box::new(GlobalAvgPool::new(1, 4, 4))).unwrap();
+        let mut rng = Pcg::new(2, 1);
+        b.layer("fc", gap, Box::new(Linear::init(&mut rng, 1, 2))).unwrap();
+        let mut m = b.finish().unwrap();
+        let x: Vec<f32> = (0..2 * 16).map(|i| i as f32 * 0.1).collect();
+        m.train_step(&be, &x, &[0, 1], 0.0, 0.05).unwrap();
+        let saved = m.state_tensors();
+        let names: Vec<&str> = saved.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.contains(&"param['s0b0.bn1.rm']"), "{names:?}");
+        let mut fresh = {
+            let mut b = Graph::builder("dotted", shape);
+            let bn = b.layer("s0b0.bn1", INPUT_SLOT, Box::new(BatchNorm2d::new(1, 4, 4))).unwrap();
+            let gap = b.layer("", bn, Box::new(GlobalAvgPool::new(1, 4, 4))).unwrap();
+            let mut rng = Pcg::new(7, 1);
+            b.layer("fc", gap, Box::new(Linear::init(&mut rng, 1, 2))).unwrap();
+            b.finish().unwrap()
+        };
+        fresh.load_state_tensors(&saved).unwrap();
+        assert_eq!(m.flat_params(), fresh.flat_params(), "dotted names must roundtrip");
+    }
+
+    #[test]
+    fn flops_inventory_lists_convs() {
+        let m = tiny();
+        let set = m.layer_set();
+        assert_eq!(set.convs.len(), 1);
+        assert_eq!((set.convs[0].cin, set.convs[0].cout, set.convs[0].k), (1, 4, 3));
+        assert!(set.dropouts.is_empty());
+        assert!(!set.convs[0].counted_bn, "no BN in this graph");
+    }
+
+    #[test]
+    fn layer_set_marks_bn_on_its_own_conv_regardless_of_node_order() {
+        // The projection conv is appended BETWEEN the main conv and its BN
+        // in node order; the BN must still mark the conv that produces its
+        // input slot — never "whichever conv was inventoried last".
+        let shape = Shape::Spatial { c: 1, h: 4, w: 4 };
+        let mut rng = Pcg::new(3, 1);
+        let mut b = Graph::builder("order", shape);
+        let main = Conv2dLayer::init(&mut rng, 1, 4, 4, 2, 3, 1, 1);
+        let c1 = b.layer("c1", INPUT_SLOT, Box::new(main)).unwrap();
+        let proj = Conv2dLayer::init(&mut rng, 1, 4, 4, 2, 1, 1, 0);
+        let pr = b.layer("proj", INPUT_SLOT, Box::new(proj)).unwrap();
+        let bn = b.layer("bn", c1, Box::new(BatchNorm2d::new(2, 4, 4))).unwrap();
+        let sum = b.add(bn, pr).unwrap();
+        let gap = b.layer("", sum, Box::new(GlobalAvgPool::new(2, 4, 4))).unwrap();
+        b.layer("fc", gap, Box::new(Linear::init(&mut rng, 2, 2))).unwrap();
+        let m = b.finish().unwrap();
+        let set = m.layer_set();
+        assert_eq!(set.convs.len(), 2);
+        assert!(set.convs[0].counted_bn, "bn marks the conv feeding it");
+        assert!(!set.convs[1].counted_bn, "the projection stays uncounted");
+    }
+}

@@ -1,39 +1,57 @@
 //! Composable layer-graph model API: the [`Layer`] trait, its concrete
-//! building blocks, and the [`Sequential`] container that trains any stack
-//! of them through the [`Backend`] trait with ssProp sparsification.
+//! building blocks, and the [`Graph`] container — topologically-ordered
+//! nodes with residual (skip) connections — that trains any wiring of
+//! them through the [`Backend`] trait with ssProp sparsification.
+//! [`Sequential`] is the chain-shaped special case, kept as a thin
+//! constructor ([`Graph::new`]) over the graph.
 //!
-//! The paper's central claim is that scheduled sparse BP is a *module* that
-//! drops into any architecture; this subsystem is that claim made concrete
-//! on the native path. A [`Layer`] owns its parameters and computes
-//! forward/backward over a borrowed per-layer workspace ([`LayerWs`] — the
-//! conv plan, pool argmax, dropout mask); [`Sequential`] owns the layer
-//! list plus one workspace per layer, drives the drop-rate schedule across
-//! every conv layer, applies SGD updates, and reports [`StepStats`] exactly
-//! as the historical hand-rolled `SimpleCnn` did. The data-parallel
-//! executor ([`crate::backend::parallel`]) runs the same layers over
-//! per-worker workspaces with *global* cross-shard channel selection.
+//! The paper's central claim is that scheduled sparse BP is a *module*
+//! that drops into any architecture; this subsystem is that claim made
+//! concrete on the native path — including the residual/BatchNorm family
+//! its headline tables measure. A [`Layer`] owns its parameters and
+//! computes forward/backward over a borrowed per-node workspace
+//! ([`LayerWs`] — the conv plan, pool argmax, dropout mask, BN batch
+//! statistics); [`Graph`] owns the node list plus one workspace per node,
+//! drives the drop-rate schedule across every conv layer (residual
+//! branches and projection shortcuts included), applies SGD updates, and
+//! reports [`StepStats`] exactly as the historical hand-rolled
+//! `SimpleCnn` did. The data-parallel executor
+//! ([`crate::backend::parallel`]) runs the same nodes over per-worker
+//! workspaces with *global* cross-shard channel selection and
+//! cross-shard BatchNorm statistics.
 //!
-//! Numerics contract: a `Sequential` built by
-//! [`crate::backend::simple_cnn`] replays the legacy model **bitwise** —
-//! each layer's loops are the exact FP operations of the old fused path in
-//! the same order (pinned by `rust/tests/layer_graph_equivalence.rs`).
+//! Numerics contract: a chain built by [`crate::backend::simple_cnn`]
+//! replays the legacy model **bitwise** — each layer's loops are the
+//! exact FP operations of the old fused path in the same order (pinned
+//! by `rust/tests/layer_graph_equivalence.rs`).
 
 mod act;
 mod conv;
+pub(crate) mod graph;
 mod linear;
+mod norm;
 mod pool;
 
 pub use act::{Dropout, ReLU};
 pub use conv::Conv2dLayer;
+pub use graph::{Graph, GraphBuilder};
 pub use linear::{Flatten, Linear};
+pub use norm::BatchNorm2d;
 pub use pool::{AvgPool2d, GlobalAvgPool, MaxPool2d};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use super::plan::Conv2dPlan;
 use super::{Backend, Conv2d};
 use crate::flops::LayerSet;
-use crate::tensorstore::Tensor;
+
+/// The chain-shaped layer graph — the historical container name, now a
+/// thin constructor over [`Graph`] (see [`Graph::new`]). Every existing
+/// call site and checkpoint keeps working unchanged.
+pub type Sequential = Graph;
+
+/// The graph-input activation slot ([`GraphBuilder`] wiring anchor).
+pub const INPUT_SLOT: usize = 0;
 
 /// Per-example activation geometry flowing between layers: NCHW feature
 /// maps ([`Shape::Spatial`]) or flattened feature vectors ([`Shape::Flat`]).
@@ -73,7 +91,8 @@ impl Shape {
 /// masks exactly, whatever the thread count.
 #[derive(Debug, Clone, Copy)]
 pub struct FwdCtx {
-    /// Training mode (Dropout masks; eval is deterministic identity).
+    /// Training mode (Dropout masks, BatchNorm batch statistics; eval is
+    /// deterministic — identity dropout, running-stat normalization).
     pub train: bool,
     /// Monotone step counter (one dropout mask stream per step).
     pub step: u64,
@@ -93,7 +112,7 @@ pub enum Selection<'a> {
     Keep(&'a [usize]),
 }
 
-/// One layer's reusable per-(worker, batch) scratch. A plain struct rather
+/// One node's reusable per-(worker, batch) scratch. A plain struct rather
 /// than a per-layer associated type so the executor can own a uniform
 /// `Vec<LayerWs>` per worker; unused fields stay empty and cost nothing.
 #[derive(Debug, Default)]
@@ -106,6 +125,15 @@ pub struct LayerWs {
     /// Dropout: the scaled keep mask of the current training forward
     /// (empty in eval mode or at rate 0).
     pub(crate) mask: Vec<f32>,
+    /// BatchNorm: normalized activations of the last training forward
+    /// (this worker's shard), consumed by the backward.
+    pub(crate) xhat: Vec<f32>,
+    /// BatchNorm: finalized batch statistics `[mean(C) ‖ var(C)]` of the
+    /// last training forward — *global* across shards on the executor
+    /// path — consumed by the backward and by [`Layer::commit_stats`].
+    pub(crate) stats: Vec<f32>,
+    /// Per-channel element count behind `stats` (global batch · H · W).
+    pub(crate) stat_count: usize,
 }
 
 impl LayerWs {
@@ -124,7 +152,7 @@ impl LayerWs {
 /// A named view of one parameter tensor (checkpoint export).
 #[derive(Debug)]
 pub struct ParamView<'a> {
-    /// Field name within the layer ("w", "b").
+    /// Field name within the layer ("w", "b", BN "rm"/"rv").
     pub field: &'static str,
     /// Flattened values.
     pub data: &'a [f32],
@@ -148,7 +176,9 @@ pub struct BwdOut {
 /// backward over a borrowed [`LayerWs`], and describes its geometry and
 /// FLOPs contribution. Implementations must be `Send + Sync` so the
 /// data-parallel executor can share the (read-only) layer list across
-/// worker threads — all mutable per-step state lives in the workspace.
+/// worker threads — all mutable per-step state lives in the workspace
+/// (persistent state like BN running statistics folds in once per step
+/// via [`Layer::commit_stats`]).
 pub trait Layer: std::fmt::Debug + Send + Sync {
     /// Short human-readable description ("conv3x3/s2 1->8").
     fn describe(&self) -> String;
@@ -162,7 +192,8 @@ pub trait Layer: std::fmt::Debug + Send + Sync {
     fn ensure_ws(&self, _ws: &mut LayerWs, _bt: usize) {}
 
     /// Forward over a batch of `bt` examples; may cache into `ws` whatever
-    /// the matching backward needs (im2col columns, argmax, masks).
+    /// the matching backward needs (im2col columns, argmax, masks, BN
+    /// batch statistics).
     fn forward(
         &self,
         be: &dyn Backend,
@@ -174,7 +205,7 @@ pub trait Layer: std::fmt::Debug + Send + Sync {
 
     /// Backward: `x` is the same input the last forward saw, `g` is
     /// d loss / d output. `need_dx = false` skips the input-gradient
-    /// computation (the first layer of a network never consumes it).
+    /// computation (a node fed by the graph input never consumes it).
     fn backward(
         &self,
         be: &dyn Backend,
@@ -186,7 +217,9 @@ pub trait Layer: std::fmt::Debug + Send + Sync {
         need_dx: bool,
     ) -> BwdOut;
 
-    /// Parameter tensors for checkpointing, in update order.
+    /// Parameter tensors for checkpointing. Update-order parameters come
+    /// first, aligned with [`Layer::params_mut`]; non-learned state
+    /// (BN running statistics) follows.
     fn params(&self) -> Vec<ParamView<'_>> {
         Vec::new()
     }
@@ -210,9 +243,80 @@ pub trait Layer: std::fmt::Debug + Send + Sync {
 
     /// Contribute this layer to the Eq. 6–9 FLOPs inventory.
     fn account_flops(&self, _set: &mut LayerSet) {}
+
+    /// `true` when the training forward normalizes over the *batch*
+    /// dimension (BatchNorm): the data-parallel executor must reduce this
+    /// layer's statistics partials across shards — at a barrier, in fixed
+    /// shard order — before any shard normalizes or back-propagates.
+    fn needs_batch_stats(&self) -> bool {
+        false
+    }
+
+    /// Forward-pass statistics partials over this (sub-)batch — for
+    /// BatchNorm, per-channel `[Σx ‖ Σx²]` — summed across shards by the
+    /// executor and handed to [`Layer::forward_with_stats`]. Layers
+    /// without batch statistics return an empty vector.
+    fn fwd_stat_partials(&self, _x: &[f32], _bt: usize) -> Vec<f32> {
+        Vec::new()
+    }
+
+    /// Training forward with externally reduced statistics partials
+    /// (`examples` = the *global* example count behind them). The serial
+    /// path calls this with its own partials, so one shard reproduces the
+    /// serial arithmetic bitwise. Only meaningful when
+    /// [`Layer::needs_batch_stats`] is `true`.
+    fn forward_with_stats(
+        &self,
+        _be: &dyn Backend,
+        _x: &[f32],
+        _bt: usize,
+        _ws: &mut LayerWs,
+        _ctx: &FwdCtx,
+        _partials: &[f32],
+        _examples: usize,
+    ) -> Vec<f32> {
+        unreachable!("layer {:?} has no batch-statistics forward", self.describe())
+    }
+
+    /// Backward-pass statistics partials over this (sub-)batch — for
+    /// BatchNorm, per-channel `[Σg ‖ Σ(g·x̂)]` — summed across shards and
+    /// handed to [`Layer::backward_with_stats`]. Empty for layers whose
+    /// backward is shard-local.
+    fn bwd_stat_partials(&self, _g: &[f32], _bt: usize, _ws: &LayerWs) -> Vec<f32> {
+        Vec::new()
+    }
+
+    /// Backward with externally reduced gradient-statistics partials in
+    /// `partials` (the exact through-the-batch-statistics gradient needs
+    /// global sums) plus this shard's own `local_partials` — the caller
+    /// computed those via [`Layer::bwd_stat_partials`] to publish for
+    /// reduction, and they double as the returned parameter-gradient
+    /// partials, which the executor's fixed-order tree reduction sums to
+    /// the global gradient. The serial path passes the same slice twice.
+    /// Only meaningful when [`Layer::needs_batch_stats`] is `true`.
+    fn backward_with_stats(
+        &self,
+        _be: &dyn Backend,
+        _x: &[f32],
+        _g: &[f32],
+        _bt: usize,
+        _ws: &mut LayerWs,
+        _partials: &[f32],
+        _local_partials: &[f32],
+        _need_dx: bool,
+    ) -> BwdOut {
+        unreachable!("layer {:?} has no batch-statistics backward", self.describe())
+    }
+
+    /// Fold the batch statistics the last *training* forward left in `ws`
+    /// into persistent layer state (BatchNorm running statistics). Called
+    /// exactly once per training step by the container — after the
+    /// backward — and by the executor with worker 0's workspace (whose
+    /// statistics are the reduced global ones). Default: no-op.
+    fn commit_stats(&mut self, _ws: &LayerWs) {}
 }
 
-/// Per-step statistics returned by [`Sequential::train_step`].
+/// Per-step statistics returned by [`Graph::train_step`].
 #[derive(Debug, Clone, Copy)]
 pub struct StepStats {
     /// Mean softmax cross-entropy over the batch.
@@ -223,311 +327,6 @@ pub struct StepStats {
     pub kept_channels: usize,
     /// Total output channels over conv layers (kept == total when dense).
     pub total_channels: usize,
-}
-
-/// A feed-forward layer graph trained end-to-end through the [`Backend`]
-/// trait: owns the layers, one [`LayerWs`] per layer, and the step counter
-/// that seeds stochastic layers. The final layer must produce a
-/// [`Shape::Flat`] logits vector; the softmax cross-entropy loss lives in
-/// the container, not in a layer, exactly as in the historical model.
-#[derive(Debug)]
-pub struct Sequential {
-    /// Resolved model-spec string ("simple-cnn-d2-w8") — display and
-    /// checkpoint identity.
-    spec: String,
-    /// Checkpoint name per layer ("conv0", "fc"; empty = stateless).
-    names: Vec<String>,
-    layers: Vec<Box<dyn Layer>>,
-    /// `shapes[l]` is layer l's input shape; `shapes[len]` the output.
-    shapes: Vec<Shape>,
-    /// Logit count of the final [`Shape::Flat`] output.
-    classes: usize,
-    /// Per-layer workspaces for the serial path (the executor owns
-    /// per-worker sets instead).
-    ws: Vec<LayerWs>,
-    /// Monotone train-step counter (dropout mask streams).
-    step: u64,
-}
-
-impl Sequential {
-    /// Build a graph from `(checkpoint name, layer)` pairs, propagating and
-    /// validating shapes front to back. The final shape must be flat (the
-    /// logits); stateless layers pass an empty name.
-    pub fn new(
-        spec: impl Into<String>,
-        in_shape: Shape,
-        parts: Vec<(String, Box<dyn Layer>)>,
-    ) -> Result<Sequential> {
-        if parts.is_empty() {
-            bail!("a model needs at least one layer");
-        }
-        let mut names = Vec::with_capacity(parts.len());
-        let mut layers: Vec<Box<dyn Layer>> = Vec::with_capacity(parts.len());
-        let mut shapes = vec![in_shape];
-        for (name, layer) in parts {
-            let cur = *shapes.last().expect("shapes is never empty");
-            let next = layer
-                .out_shape(&cur)
-                .with_context(|| format!("layer {:?} rejects its input", layer.describe()))?;
-            shapes.push(next);
-            names.push(name);
-            layers.push(layer);
-        }
-        let classes = match *shapes.last().expect("shapes is never empty") {
-            Shape::Flat { features } => features,
-            Shape::Spatial { .. } => bail!("the final layer must produce flat logits"),
-        };
-        let ws = (0..layers.len()).map(|_| LayerWs::default()).collect();
-        Ok(Sequential { spec: spec.into(), names, layers, shapes, classes, ws, step: 0 })
-    }
-
-    /// The resolved model-spec string this graph was built from.
-    pub fn spec(&self) -> &str {
-        &self.spec
-    }
-
-    /// One-line architecture summary (layer descriptions joined).
-    pub fn describe(&self) -> String {
-        self.layers.iter().map(|l| l.describe()).collect::<Vec<_>>().join(" > ")
-    }
-
-    /// Per-example input shape.
-    pub fn in_shape(&self) -> Shape {
-        self.shapes[0]
-    }
-
-    /// Logit count of the classifier head.
-    pub fn out_features(&self) -> usize {
-        self.classes
-    }
-
-    /// Number of layers in the graph.
-    pub fn num_layers(&self) -> usize {
-        self.layers.len()
-    }
-
-    /// Read access to layer `l` (the executor walks the graph this way).
-    pub fn layer(&self, l: usize) -> &dyn Layer {
-        self.layers[l].as_ref()
-    }
-
-    /// Mutable access to layer `l` (the executor applies reduced updates).
-    pub fn layer_mut(&mut self, l: usize) -> &mut dyn Layer {
-        self.layers[l].as_mut()
-    }
-
-    /// Number of conv layers (ssProp-selectable units).
-    pub fn conv_count(&self) -> usize {
-        self.layers.iter().filter(|l| l.conv_geom().is_some()).count()
-    }
-
-    /// Total conv output channels — [`StepStats::total_channels`].
-    pub fn total_channels(&self) -> usize {
-        self.layers.iter().filter_map(|l| l.conv_geom()).map(|g| g.cout).sum()
-    }
-
-    /// Key every layer workspace to batch size `bt` (conv plans re-key in
-    /// place, preserving capacity). Called by `train_step`; also useful to
-    /// prewarm before a timed loop — and, with the epoch-tail batch size,
-    /// to prewarm the tail re-key.
-    pub fn ensure_ws(&mut self, bt: usize) {
-        for (layer, ws) in self.layers.iter().zip(self.ws.iter_mut()) {
-            layer.ensure_ws(ws, bt);
-        }
-    }
-
-    /// A fresh throwaway workspace set keyed to `bt` (eval has no backward
-    /// to reuse caches for, and `&self` keeps eval shareable).
-    fn fresh_ws(&self, bt: usize) -> Vec<LayerWs> {
-        let mut ws: Vec<LayerWs> = (0..self.layers.len()).map(|_| LayerWs::default()).collect();
-        for (layer, w) in self.layers.iter().zip(ws.iter_mut()) {
-            layer.ensure_ws(w, bt);
-        }
-        ws
-    }
-
-    /// Advance and return the step counter seeding this step's stochastic
-    /// layers. The serial and data-parallel paths both draw from here, so
-    /// a sharded step reproduces the serial dropout masks.
-    pub(crate) fn begin_step(&mut self) -> u64 {
-        let step = self.step;
-        self.step += 1;
-        step
-    }
-
-    /// Forward pass keeping every layer input: `acts[l]` is layer l's
-    /// input (`acts[0] = x`), `acts[len]` the logits. Runs through the
-    /// workspaces in `ws` — the executor passes per-worker sets so the
-    /// identical forward runs per shard without locks.
-    pub(crate) fn forward_collect(
-        &self,
-        be: &dyn Backend,
-        x: &[f32],
-        bt: usize,
-        ws: &mut [LayerWs],
-        ctx: &FwdCtx,
-    ) -> Vec<Vec<f32>> {
-        assert_eq!(ws.len(), self.layers.len(), "workspace count");
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(self.layers.len() + 1);
-        acts.push(x.to_vec());
-        for (layer, w) in self.layers.iter().zip(ws.iter_mut()) {
-            let cur = acts.last().expect("acts is never empty");
-            let next = layer.forward(be, cur, bt, w, ctx);
-            acts.push(next);
-        }
-        acts
-    }
-
-    /// One SGD training step at `drop_rate`; returns loss/acc/kept-channel
-    /// stats. `x` is `(bt, in_shape)` flattened, `y` integer labels. Every
-    /// conv layer selects its ssProp channels locally from the batch
-    /// gradient (the data-parallel executor substitutes global selection).
-    pub fn train_step(
-        &mut self,
-        be: &dyn Backend,
-        x: &[f32],
-        y: &[i32],
-        drop_rate: f64,
-        lr: f32,
-    ) -> Result<StepStats> {
-        let bt = y.len();
-        if bt == 0 || x.len() != bt * self.in_shape().volume() {
-            bail!("bad batch geometry: {} inputs for {bt} labels", x.len());
-        }
-        self.ensure_ws(bt);
-        let step = self.begin_step();
-        let ctx = FwdCtx { train: true, step, example_offset: 0 };
-        // Take the workspaces out so the forward can borrow them alongside
-        // `self` (same dance the legacy model did with its plans).
-        let mut ws = std::mem::take(&mut self.ws);
-        let acts = self.forward_collect(be, x, bt, &mut ws, &ctx);
-        let logits = acts.last().expect("acts is never empty");
-        let (loss_sum, correct, dlogits) = softmax_ce_core(logits, y, self.classes, bt);
-        let loss = loss_sum / bt as f64;
-        let acc = correct as f64 / bt as f64;
-        if !loss.is_finite() {
-            self.ws = ws;
-            bail!("non-finite loss at drop rate {drop_rate}");
-        }
-
-        // Backward top-down: each layer computes its gradients on
-        // pre-update parameters, then takes its SGD update immediately —
-        // updates never feed another layer's backward, so the order only
-        // has to be fixed, not clever.
-        let mut kept = 0usize;
-        let mut g = dlogits;
-        for l in (0..self.layers.len()).rev() {
-            let out = self.layers[l].backward(
-                be,
-                &acts[l],
-                &g,
-                bt,
-                &mut ws[l],
-                Selection::Local(drop_rate),
-                l > 0,
-            );
-            kept += out.kept;
-            for (param, grad) in self.layers[l].params_mut().into_iter().zip(&out.grads) {
-                for (pv, &gv) in param.iter_mut().zip(grad) {
-                    *pv -= lr * gv;
-                }
-            }
-            if l > 0 {
-                g = out.dx;
-            }
-        }
-        self.ws = ws;
-
-        Ok(StepStats { loss, acc, kept_channels: kept, total_channels: self.total_channels() })
-    }
-
-    /// Forward-only mean (loss, accuracy) on a batch. Stochastic layers run
-    /// in eval mode (Dropout is the identity); workspaces are throwaway.
-    pub fn eval_batch(&self, be: &dyn Backend, x: &[f32], y: &[i32]) -> (f64, f64) {
-        let bt = y.len();
-        let mut ws = self.fresh_ws(bt);
-        let ctx = FwdCtx { train: false, step: self.step, example_offset: 0 };
-        let acts = self.forward_collect(be, x, bt, &mut ws, &ctx);
-        let (losses, correct) = softmax_ce_examples(acts.last().unwrap(), y, self.classes);
-        let mut loss_sum = 0f64;
-        for &l in &losses {
-            loss_sum += l;
-        }
-        (loss_sum / bt as f64, correct as f64 / bt as f64)
-    }
-
-    /// Parameters as named tensors — `param['{name}.{field}']`, the
-    /// checkpoint format shared with the AOT path (and bit-compatible with
-    /// the legacy SimpleCNN's `conv{l}`/`fc` naming).
-    pub fn state_tensors(&self) -> Vec<(String, Tensor)> {
-        let mut out = Vec::new();
-        for (name, layer) in self.names.iter().zip(&self.layers) {
-            if name.is_empty() {
-                continue;
-            }
-            for p in layer.params() {
-                let key = format!("param['{name}.{}']", p.field);
-                out.push((key, Tensor::from_f32(p.shape.clone(), p.data)));
-            }
-        }
-        out
-    }
-
-    /// Restore parameters saved by [`Sequential::state_tensors`].
-    pub fn load_state_tensors(&mut self, tensors: &[(String, Tensor)]) -> Result<()> {
-        for (name, t) in tensors {
-            let inner = name
-                .strip_prefix("param['")
-                .and_then(|r| r.strip_suffix("']"))
-                .ok_or_else(|| anyhow::anyhow!("unknown state leaf {name:?}"))?;
-            let (lname, field) = inner
-                .split_once('.')
-                .ok_or_else(|| anyhow::anyhow!("unknown state leaf {name:?}"))?;
-            let l = self
-                .names
-                .iter()
-                .position(|n| n == lname)
-                .ok_or_else(|| anyhow::anyhow!("unknown state leaf {name:?}"))?;
-            self.layers[l]
-                .load_param(field, t.to_f32())
-                .with_context(|| format!("loading {name:?}"))?;
-        }
-        Ok(())
-    }
-
-    /// Every parameter flattened in checkpoint order (bitwise-comparison
-    /// target for the determinism suites).
-    pub fn flat_params(&self) -> Vec<f32> {
-        let mut out = Vec::new();
-        for layer in &self.layers {
-            for p in layer.params() {
-                out.extend_from_slice(p.data);
-            }
-        }
-        out
-    }
-
-    /// Conv + dropout inventory for Eq. 6/9 FLOPs accounting.
-    pub fn layer_set(&self) -> LayerSet {
-        let mut set = LayerSet::default();
-        for layer in &self.layers {
-            layer.account_flops(&mut set);
-        }
-        set
-    }
-
-    /// Total im2col materializations across this graph's own workspaces —
-    /// advances by exactly [`Sequential::conv_count`] per serial
-    /// `train_step` when the fused path is healthy.
-    pub fn plan_cols_builds(&self) -> u64 {
-        self.ws.iter().map(|w| w.plan_cols_builds()).sum()
-    }
-
-    /// Capacity fingerprints of every conv plan, conv order (regression
-    /// tests pin these flat across steps).
-    pub fn plan_caps(&self) -> Vec<[usize; 7]> {
-        self.ws.iter().filter_map(|w| w.plan_caps()).collect()
-    }
 }
 
 /// Softmax cross-entropy core over integer labels for a (sub-)batch:
@@ -602,112 +401,6 @@ pub(crate) fn softmax_ce_examples(logits: &[f32], y: &[i32], classes: usize) -> 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::NativeBackend;
-    use crate::util::rng::Pcg;
-
-    fn tiny() -> Sequential {
-        let mut rng = Pcg::new(3, 1);
-        let parts: Vec<(String, Box<dyn Layer>)> = vec![
-            ("conv0".into(), Box::new(Conv2dLayer::init(&mut rng, 1, 6, 6, 4, 3, 1, 1))),
-            (String::new(), Box::new(ReLU)),
-            (String::new(), Box::new(GlobalAvgPool::new(4, 6, 6))),
-            ("fc".into(), Box::new(Linear::init(&mut rng, 4, 3))),
-        ];
-        Sequential::new("tiny", Shape::Spatial { c: 1, h: 6, w: 6 }, parts).unwrap()
-    }
-
-    #[test]
-    fn shape_propagation_and_metadata() {
-        let m = tiny();
-        assert_eq!(m.in_shape(), Shape::Spatial { c: 1, h: 6, w: 6 });
-        assert_eq!(m.out_features(), 3);
-        assert_eq!(m.num_layers(), 4);
-        assert_eq!(m.conv_count(), 1);
-        assert_eq!(m.total_channels(), 4);
-        assert!(m.describe().contains("conv3x3"));
-        assert_eq!(m.spec(), "tiny");
-    }
-
-    #[test]
-    fn rejects_spatial_output_and_geometry_mismatch() {
-        let mut rng = Pcg::new(3, 1);
-        let spatial_end: Vec<(String, Box<dyn Layer>)> =
-            vec![("conv0".into(), Box::new(Conv2dLayer::init(&mut rng, 1, 6, 6, 4, 3, 1, 1)))];
-        assert!(Sequential::new("bad", Shape::Spatial { c: 1, h: 6, w: 6 }, spatial_end).is_err());
-
-        let mut rng = Pcg::new(3, 1);
-        let wrong_in: Vec<(String, Box<dyn Layer>)> =
-            vec![("conv0".into(), Box::new(Conv2dLayer::init(&mut rng, 2, 6, 6, 4, 3, 1, 1)))];
-        assert!(Sequential::new("bad", Shape::Spatial { c: 1, h: 6, w: 6 }, wrong_in).is_err());
-
-        assert!(Sequential::new("empty", Shape::Flat { features: 3 }, Vec::new()).is_err());
-    }
-
-    #[test]
-    fn train_step_reduces_loss_and_counts_channels() {
-        let be = NativeBackend::new();
-        let mut m = tiny();
-        let mut rng = Pcg::new(9, 2);
-        let x: Vec<f32> = (0..6 * 36).map(|_| rng.normal()).collect();
-        let y: Vec<i32> = (0..6).map(|i| (i % 3) as i32).collect();
-        let first = m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
-        assert_eq!(first.kept_channels, first.total_channels);
-        for _ in 0..20 {
-            m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
-        }
-        let last = m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
-        assert!(last.loss < first.loss, "{} -> {}", first.loss, last.loss);
-        // sparse step keeps round((1-0.8)*4) = 1 of 4 channels
-        let sparse = m.train_step(&be, &x, &y, 0.8, 0.05).unwrap();
-        assert_eq!(sparse.kept_channels, 1);
-        assert_eq!(sparse.total_channels, 4);
-    }
-
-    #[test]
-    fn train_step_rejects_bad_geometry() {
-        let be = NativeBackend::new();
-        let mut m = tiny();
-        assert!(m.train_step(&be, &[0.0; 5], &[0, 1], 0.0, 0.05).is_err());
-        assert!(m.train_step(&be, &[], &[], 0.0, 0.05).is_err());
-    }
-
-    #[test]
-    fn state_tensor_roundtrip_and_errors() {
-        let be = NativeBackend::new();
-        let mut a = tiny();
-        let mut rng = Pcg::new(11, 4);
-        let x: Vec<f32> = (0..4 * 36).map(|_| rng.normal()).collect();
-        let y: Vec<i32> = vec![0, 1, 2, 0];
-        a.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
-        let saved = a.state_tensors();
-        assert_eq!(saved.len(), 4, "conv w/b + fc w/b");
-        assert!(saved.iter().any(|(n, _)| n == "param['conv0.w']"));
-        assert!(saved.iter().any(|(n, _)| n == "param['fc.b']"));
-
-        let mut b = tiny();
-        assert_ne!(a.flat_params(), b.flat_params());
-        b.load_state_tensors(&saved).unwrap();
-        assert_eq!(a.flat_params(), b.flat_params());
-        let (la, _) = a.eval_batch(&be, &x, &y);
-        let (lb, _) = b.eval_batch(&be, &x, &y);
-        assert_eq!(la, lb);
-
-        let bad = vec![("param['fc.b']".to_string(), Tensor::from_f32(vec![2], &[0.0, 1.0]))];
-        assert!(b.load_state_tensors(&bad).is_err(), "shape mismatch must fail");
-        let unknown = vec![("param['nope.w']".to_string(), Tensor::from_f32(vec![1], &[0.0]))];
-        assert!(b.load_state_tensors(&unknown).is_err(), "unknown layer must fail");
-        let mangled = vec![("weights".to_string(), Tensor::from_f32(vec![1], &[0.0]))];
-        assert!(b.load_state_tensors(&mangled).is_err(), "malformed key must fail");
-    }
-
-    #[test]
-    fn flops_inventory_lists_convs() {
-        let m = tiny();
-        let set = m.layer_set();
-        assert_eq!(set.convs.len(), 1);
-        assert_eq!((set.convs[0].cin, set.convs[0].cout, set.convs[0].k), (1, 4, 3));
-        assert!(set.dropouts.is_empty());
-    }
 
     #[test]
     fn softmax_ce_examples_matches_core() {

@@ -1,0 +1,478 @@
+//! BatchNorm2d: per-channel batch normalization over NCHW feature maps —
+//! the layer the paper's ResNet tables train through (its Eq. 7 backward
+//! cost is what the ledger's `counted_bn` flag accounts).
+//!
+//! Training mode normalizes with *batch* statistics and folds them into
+//! running statistics (checkpointed under the stable field names `rm` /
+//! `rv`); eval mode normalizes with the running statistics, making
+//! evaluation per-example and therefore shardable bit-identically. The
+//! backward is the exact gradient *through* the batch statistics — which
+//! needs per-channel sums over the whole batch, so the layer exposes the
+//! [`Layer::fwd_stat_partials`] / [`Layer::bwd_stat_partials`] protocol:
+//! the data-parallel executor reduces the partials across shards (fixed
+//! shard order, at the same barrier rendezvous channel selection uses)
+//! and every shard normalizes/back-propagates with the identical global
+//! sums — one shard reproduces the serial arithmetic bitwise.
+
+use anyhow::{bail, Result};
+
+use super::{BwdOut, FwdCtx, Layer, LayerWs, ParamView, Selection, Shape};
+use crate::backend::Backend;
+
+/// Per-channel batch normalization over `(c, h, w)` feature maps:
+/// `y = γ·x̂ + β` with `x̂ = (x − μ)/√(σ² + ε)`. Learned scale/shift start
+/// at γ = 1, β = 0; running statistics at μ = 0, σ² = 1.
+#[derive(Debug, Clone)]
+pub struct BatchNorm2d {
+    c: usize,
+    h: usize,
+    w: usize,
+    /// Variance regularizer ε (1e-5, the standard default).
+    eps: f32,
+    /// Running-statistics update weight (0.1): `r ← (1−m)·r + m·batch`.
+    momentum: f32,
+    /// Learned per-channel scale γ.
+    gamma: Vec<f32>,
+    /// Learned per-channel shift β.
+    beta: Vec<f32>,
+    /// Running mean (eval-mode μ), updated once per training step.
+    running_mean: Vec<f32>,
+    /// Running variance (eval-mode σ², unbiased), updated once per step.
+    running_var: Vec<f32>,
+}
+
+impl BatchNorm2d {
+    /// A batch-norm layer over `(c, h, w)` feature maps with the standard
+    /// ε = 1e-5 and running-stat momentum 0.1.
+    pub fn new(c: usize, h: usize, w: usize) -> BatchNorm2d {
+        assert!(c >= 1 && h >= 1 && w >= 1, "degenerate batchnorm geometry");
+        BatchNorm2d {
+            c,
+            h,
+            w,
+            eps: 1e-5,
+            momentum: 0.1,
+            gamma: vec![1f32; c],
+            beta: vec![0f32; c],
+            running_mean: vec![0f32; c],
+            running_var: vec![1f32; c],
+        }
+    }
+
+    /// Channel count.
+    pub fn channels(&self) -> usize {
+        self.c
+    }
+
+    fn hw(&self) -> usize {
+        self.h * self.w
+    }
+}
+
+impl Layer for BatchNorm2d {
+    fn describe(&self) -> String {
+        format!("bn{}", self.c)
+    }
+
+    fn out_shape(&self, input: &Shape) -> Result<Shape> {
+        match *input {
+            Shape::Spatial { c, h, w } if (c, h, w) == (self.c, self.h, self.w) => Ok(*input),
+            other => {
+                let want = (self.c, self.h, self.w);
+                bail!("bn built for {want:?} input, got {other:?}")
+            }
+        }
+    }
+
+    fn forward(
+        &self,
+        be: &dyn Backend,
+        x: &[f32],
+        bt: usize,
+        ws: &mut LayerWs,
+        ctx: &FwdCtx,
+    ) -> Vec<f32> {
+        if ctx.train {
+            // Serial path: this batch *is* the global batch. Routing
+            // through the partials keeps one executor shard bitwise equal
+            // to the serial computation.
+            let partials = self.fwd_stat_partials(x, bt);
+            return self.forward_with_stats(be, x, bt, ws, ctx, &partials, bt);
+        }
+        // Eval: running-statistics normalization, per-example (shardable
+        // bit-identically). Clear the training caches so a stray commit
+        // after an eval forward is a no-op.
+        ws.stats.clear();
+        ws.xhat.clear();
+        let (c, hw) = (self.c, self.hw());
+        assert_eq!(x.len(), bt * c * hw, "bn input length");
+        let mut y = vec![0f32; x.len()];
+        for b in 0..bt {
+            for ch in 0..c {
+                let base = (b * c + ch) * hw;
+                let inv = 1.0 / (self.running_var[ch] + self.eps).sqrt();
+                let (mu, ga, be_) = (self.running_mean[ch], self.gamma[ch], self.beta[ch]);
+                for i in 0..hw {
+                    y[base + i] = ga * (x[base + i] - mu) * inv + be_;
+                }
+            }
+        }
+        y
+    }
+
+    fn backward(
+        &self,
+        be: &dyn Backend,
+        x: &[f32],
+        g: &[f32],
+        bt: usize,
+        ws: &mut LayerWs,
+        _sel: Selection<'_>,
+        need_dx: bool,
+    ) -> BwdOut {
+        // Serial path: local gradient sums are the global ones.
+        let partials = self.bwd_stat_partials(g, bt, ws);
+        self.backward_with_stats(be, x, g, bt, ws, &partials, &partials, need_dx)
+    }
+
+    fn params(&self) -> Vec<ParamView<'_>> {
+        vec![
+            ParamView { field: "w", data: &self.gamma, shape: vec![self.c] },
+            ParamView { field: "b", data: &self.beta, shape: vec![self.c] },
+            ParamView { field: "rm", data: &self.running_mean, shape: vec![self.c] },
+            ParamView { field: "rv", data: &self.running_var, shape: vec![self.c] },
+        ]
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Vec<f32>> {
+        // Learned parameters only — running statistics are not updated by
+        // SGD (they fold in through commit_stats).
+        vec![&mut self.gamma, &mut self.beta]
+    }
+
+    fn load_param(&mut self, field: &str, vals: Vec<f32>) -> Result<()> {
+        let dst = match field {
+            "w" => &mut self.gamma,
+            "b" => &mut self.beta,
+            "rm" => &mut self.running_mean,
+            "rv" => &mut self.running_var,
+            other => bail!("unknown bn field {other:?}"),
+        };
+        if dst.len() != vals.len() {
+            bail!("shape mismatch: {} vs {}", vals.len(), dst.len());
+        }
+        *dst = vals;
+        Ok(())
+    }
+
+    // No `account_flops` override: the Eq. 7 BN cost is keyed on the conv
+    // this layer normalizes, which only the graph knows — `Graph::layer_set`
+    // resolves the conv producing this node's input slot and marks its
+    // `counted_bn` (projection shortcuts stay uncounted, mirroring
+    // `flops::paper_resnet`).
+
+    fn needs_batch_stats(&self) -> bool {
+        true
+    }
+
+    fn fwd_stat_partials(&self, x: &[f32], bt: usize) -> Vec<f32> {
+        let (c, hw) = (self.c, self.hw());
+        assert_eq!(x.len(), bt * c * hw, "bn input length");
+        let mut p = vec![0f32; 2 * c];
+        for b in 0..bt {
+            for ch in 0..c {
+                let plane = &x[(b * c + ch) * hw..][..hw];
+                let (mut s, mut s2) = (0f32, 0f32);
+                for &v in plane {
+                    s += v;
+                    s2 += v * v;
+                }
+                p[ch] += s;
+                p[c + ch] += s2;
+            }
+        }
+        p
+    }
+
+    fn forward_with_stats(
+        &self,
+        _be: &dyn Backend,
+        x: &[f32],
+        bt: usize,
+        ws: &mut LayerWs,
+        _ctx: &FwdCtx,
+        partials: &[f32],
+        examples: usize,
+    ) -> Vec<f32> {
+        let (c, hw) = (self.c, self.hw());
+        assert_eq!(x.len(), bt * c * hw, "bn input length");
+        assert_eq!(partials.len(), 2 * c, "bn partials length");
+        let n = examples * hw;
+        let nf = n as f32;
+        ws.stats.clear();
+        ws.stats.resize(2 * c, 0.0);
+        ws.stat_count = n;
+        let mut invstd = vec![0f32; c];
+        for ch in 0..c {
+            let mean = partials[ch] / nf;
+            // E[x²] − E[x]² (clamped: cancellation can dip just below 0)
+            let var = (partials[c + ch] / nf - mean * mean).max(0.0);
+            ws.stats[ch] = mean;
+            ws.stats[c + ch] = var;
+            invstd[ch] = 1.0 / (var + self.eps).sqrt();
+        }
+        ws.xhat.clear();
+        ws.xhat.resize(x.len(), 0.0);
+        let mut y = vec![0f32; x.len()];
+        for b in 0..bt {
+            for ch in 0..c {
+                let base = (b * c + ch) * hw;
+                let (mu, inv) = (ws.stats[ch], invstd[ch]);
+                let (ga, be_) = (self.gamma[ch], self.beta[ch]);
+                for i in 0..hw {
+                    let xh = (x[base + i] - mu) * inv;
+                    ws.xhat[base + i] = xh;
+                    y[base + i] = ga * xh + be_;
+                }
+            }
+        }
+        y
+    }
+
+    fn bwd_stat_partials(&self, g: &[f32], bt: usize, ws: &LayerWs) -> Vec<f32> {
+        let (c, hw) = (self.c, self.hw());
+        assert_eq!(ws.xhat.len(), g.len(), "bn backward without a training forward");
+        assert_eq!(g.len(), bt * c * hw, "bn gradient length");
+        let mut p = vec![0f32; 2 * c];
+        for b in 0..bt {
+            for ch in 0..c {
+                let base = (b * c + ch) * hw;
+                let (mut sg, mut sgx) = (0f32, 0f32);
+                for i in 0..hw {
+                    sg += g[base + i];
+                    sgx += g[base + i] * ws.xhat[base + i];
+                }
+                p[ch] += sg;
+                p[c + ch] += sgx;
+            }
+        }
+        p
+    }
+
+    fn backward_with_stats(
+        &self,
+        _be: &dyn Backend,
+        x: &[f32],
+        g: &[f32],
+        bt: usize,
+        ws: &mut LayerWs,
+        partials: &[f32],
+        local_partials: &[f32],
+        need_dx: bool,
+    ) -> BwdOut {
+        let (c, hw) = (self.c, self.hw());
+        assert_eq!(x.len(), bt * c * hw, "bn input length");
+        assert_eq!(partials.len(), 2 * c, "bn gradient partials length");
+        assert_eq!(local_partials.len(), 2 * c, "bn local partials length");
+        assert!(ws.stat_count > 0, "bn backward without a training forward");
+        // This shard's own sums are the gradient *partials* of γ and β —
+        // dβ = Σg, dγ = Σ(g·x̂) — which the executor's fixed-order tree
+        // reduction sums to the global gradient (serial: local = global).
+        // The caller already computed them to publish for reduction, so
+        // they arrive as an argument instead of being recomputed here.
+        let dbeta = local_partials[..c].to_vec();
+        let dgamma = local_partials[c..].to_vec();
+        let dx = if need_dx {
+            // Exact gradient through the batch statistics:
+            //   dx = γ·σ̂⁻¹·(g − Σg/N − x̂·Σ(g·x̂)/N)
+            // with the Σ over the *global* batch (the reduced partials).
+            let nf = ws.stat_count as f32;
+            let mut dx = vec![0f32; g.len()];
+            for b in 0..bt {
+                for ch in 0..c {
+                    let base = (b * c + ch) * hw;
+                    let inv = 1.0 / (ws.stats[c + ch] + self.eps).sqrt();
+                    let scale = self.gamma[ch] * inv;
+                    let k1 = partials[ch] / nf;
+                    let k2 = partials[c + ch] / nf;
+                    for i in 0..hw {
+                        dx[base + i] = scale * (g[base + i] - k1 - ws.xhat[base + i] * k2);
+                    }
+                }
+            }
+            dx
+        } else {
+            Vec::new()
+        };
+        BwdOut { dx, grads: vec![dgamma, dbeta], kept: 0 }
+    }
+
+    fn commit_stats(&mut self, ws: &LayerWs) {
+        if ws.stats.is_empty() {
+            return;
+        }
+        let c = self.c;
+        debug_assert_eq!(ws.stats.len(), 2 * c, "bn stats length");
+        let m = self.momentum;
+        let n = ws.stat_count as f32;
+        for ch in 0..c {
+            let mean = ws.stats[ch];
+            // Running variance uses the unbiased estimator (PyTorch
+            // semantics); the normalization itself stays biased.
+            let var = ws.stats[c + ch];
+            let var_u = if ws.stat_count > 1 { var * n / (n - 1.0) } else { var };
+            self.running_mean[ch] = (1.0 - m) * self.running_mean[ch] + m * mean;
+            self.running_var[ch] = (1.0 - m) * self.running_var[ch] + m * var_u;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::util::rng::Pcg;
+
+    fn ctx(train: bool) -> FwdCtx {
+        FwdCtx { train, step: 0, example_offset: 0 }
+    }
+
+    fn data(bt: usize, c: usize, hw: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed, 1);
+        (0..bt * c * hw).map(|_| rng.normal() * 1.5 + 0.3).collect()
+    }
+
+    #[test]
+    fn training_forward_normalizes_per_channel() {
+        let be = NativeBackend::new();
+        let bn = BatchNorm2d::new(2, 3, 3);
+        let x = data(4, 2, 9, 7);
+        let mut ws = LayerWs::default();
+        let y = bn.forward(&be, &x, 4, &mut ws, &ctx(true));
+        // with γ=1, β=0 the output is x̂: per-channel mean ≈ 0, var ≈ 1
+        for ch in 0..2 {
+            let vals: Vec<f32> = (0..4).flat_map(|b| y[(b * 2 + ch) * 9..][..9].to_vec()).collect();
+            let mean: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+            let var: f32 = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+                / vals.len() as f32;
+            assert!(mean.abs() < 1e-5, "ch {ch} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "ch {ch} var {var}");
+        }
+        assert_eq!(ws.stat_count, 4 * 9);
+        assert_eq!(ws.xhat, y, "γ=1, β=0 ⇒ y = x̂");
+    }
+
+    #[test]
+    fn eval_forward_uses_running_stats_and_is_identityish_at_init() {
+        let be = NativeBackend::new();
+        let mut bn = BatchNorm2d::new(1, 2, 2);
+        let x = vec![1.0, -2.0, 0.5, 3.0];
+        let mut ws = LayerWs::default();
+        // init running stats: μ=0, σ²=1 → y ≈ x (ε-scaled)
+        let y = bn.forward(&be, &x, 1, &mut ws, &ctx(false));
+        for (a, b) in y.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        assert!(ws.stats.is_empty(), "eval must not record batch stats");
+        // loaded running stats change eval: μ=1, σ²=4 → y = (x−1)/2ish
+        bn.load_param("rm", vec![1.0]).unwrap();
+        bn.load_param("rv", vec![4.0]).unwrap();
+        let y = bn.forward(&be, &x, 1, &mut ws, &ctx(false));
+        assert!((y[0] - 0.0).abs() < 1e-4, "{}", y[0]);
+        assert!((y[3] - 1.0).abs() < 1e-4, "{}", y[3]);
+    }
+
+    #[test]
+    fn commit_folds_batch_stats_into_running_stats() {
+        let be = NativeBackend::new();
+        let mut bn = BatchNorm2d::new(1, 1, 2);
+        let x = vec![1.0, 3.0, 5.0, 7.0]; // bt 2: mean 4, biased var 5
+        let mut ws = LayerWs::default();
+        bn.forward(&be, &x, 2, &mut ws, &ctx(true));
+        assert!((ws.stats[0] - 4.0).abs() < 1e-6);
+        assert!((ws.stats[1] - 5.0).abs() < 1e-5);
+        bn.commit_stats(&ws);
+        // rm = 0.9·0 + 0.1·4; rv = 0.9·1 + 0.1·(5·4/3)
+        assert!((bn.running_mean[0] - 0.4).abs() < 1e-6, "{}", bn.running_mean[0]);
+        assert!((bn.running_var[0] - (0.9 + 0.1 * 5.0 * 4.0 / 3.0)).abs() < 1e-5);
+        // eval-cleared stats make a second commit a no-op
+        bn.forward(&be, &x, 2, &mut ws, &ctx(false));
+        let rm = bn.running_mean[0];
+        bn.commit_stats(&ws);
+        assert_eq!(bn.running_mean[0], rm);
+    }
+
+    #[test]
+    fn backward_matches_numeric_gradient_through_batch_stats() {
+        let be = NativeBackend::new();
+        let mut bn = BatchNorm2d::new(2, 2, 2);
+        bn.load_param("w", vec![1.3, 0.7]).unwrap();
+        bn.load_param("b", vec![0.2, -0.1]).unwrap();
+        let bt = 3;
+        let x = data(bt, 2, 4, 11);
+        let gw: Vec<f32> = data(bt, 2, 4, 13); // fixed upstream gradient
+        let loss = |bn: &BatchNorm2d, x: &[f32]| -> f64 {
+            let mut ws = LayerWs::default();
+            let y = bn.forward(&be, x, bt, &mut ws, &ctx(true));
+            y.iter().zip(&gw).map(|(&yv, &gv)| (yv as f64) * (gv as f64)).sum()
+        };
+        let mut ws = LayerWs::default();
+        bn.forward(&be, &x, bt, &mut ws, &ctx(true));
+        let out = bn.backward(&be, &x, &gw, bt, &mut ws, Selection::Local(0.0), true);
+        // numeric check on a spread of input coordinates
+        let eps = 1e-2f32;
+        for &i in &[0usize, 5, 11, 17, 23] {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[i] += eps;
+            xm[i] -= eps;
+            let num = (loss(&bn, &xp) - loss(&bn, &xm)) / (2.0 * eps as f64);
+            let ana = out.dx[i] as f64;
+            assert!(
+                (num - ana).abs() < 2e-2 * (1.0 + ana.abs()),
+                "dx[{i}]: numeric {num} vs analytic {ana}"
+            );
+        }
+        // parameter gradients: dβ = Σg, dγ = Σ(g·x̂)
+        let sums = bn.bwd_stat_partials(&gw, bt, &ws);
+        assert_eq!(out.grads[0], sums[2..].to_vec(), "dγ");
+        assert_eq!(out.grads[1], sums[..2].to_vec(), "dβ");
+        // need_dx = false skips dx but keeps the parameter gradients
+        let skipped = bn.backward(&be, &x, &gw, bt, &mut ws, Selection::Local(0.0), false);
+        assert!(skipped.dx.is_empty());
+        assert_eq!(skipped.grads, out.grads);
+    }
+
+    #[test]
+    fn param_roundtrip_and_metadata() {
+        let mut bn = BatchNorm2d::new(3, 2, 2);
+        assert_eq!(bn.describe(), "bn3");
+        assert_eq!(bn.channels(), 3);
+        let ps = bn.params();
+        assert_eq!(ps.len(), 4);
+        let fields: Vec<&str> = ps.iter().map(|p| p.field).collect();
+        assert_eq!(fields, vec!["w", "b", "rm", "rv"]);
+        assert!(bn.params_mut().len() == 2, "SGD updates γ/β only");
+        assert!(bn.load_param("w", vec![1.0]).is_err(), "wrong length must fail");
+        assert!(bn.load_param("nope", vec![1.0; 3]).is_err());
+        bn.load_param("rv", vec![2.0; 3]).unwrap();
+        assert_eq!(bn.params()[3].data, &[2.0, 2.0, 2.0][..]);
+        let out = bn.out_shape(&Shape::Spatial { c: 3, h: 2, w: 2 }).unwrap();
+        assert_eq!(out, Shape::Spatial { c: 3, h: 2, w: 2 });
+        assert!(bn.out_shape(&Shape::Spatial { c: 2, h: 2, w: 2 }).is_err());
+        assert!(bn.out_shape(&Shape::Flat { features: 12 }).is_err());
+        assert!(bn.needs_batch_stats());
+    }
+
+    #[test]
+    fn shard_partials_sum_to_full_batch_partials() {
+        let bn = BatchNorm2d::new(2, 2, 2);
+        let x = data(4, 2, 4, 19);
+        let full = bn.fwd_stat_partials(&x, 4);
+        let a = bn.fwd_stat_partials(&x[..2 * 8], 2);
+        let b = bn.fwd_stat_partials(&x[2 * 8..], 2);
+        for i in 0..full.len() {
+            assert!((full[i] - (a[i] + b[i])).abs() < 1e-4, "partial {i}");
+        }
+    }
+}

@@ -17,15 +17,18 @@
 //!
 //! Above the trait sit the model and execution layers: [`layers`] is the
 //! composable layer-graph API (a [`Layer`] trait plus conv / activation /
-//! pool / linear building blocks under a [`Sequential`] container; [`zoo`]
-//! parses `--model` specs into presets, and [`simple_cnn`] is the paper's
-//! Fig. 4 model as a thin constructor over it), and [`parallel`] is the
-//! execution layer: a [`ParallelExecutor`] shards each training batch over
-//! a fixed worker count, runs the fused plan path per shard on per-worker
-//! layer workspaces (no locking on the hot path), and tree-reduces
-//! gradients in a fixed order so runs are bit-reproducible. See
-//! `docs/ARCHITECTURE.md` for the layer map and the sharding/reduction
-//! design.
+//! norm / pool / linear building blocks under a residual-capable
+//! [`Graph`] container — [`Sequential`] is its chain-shaped constructor;
+//! [`zoo`] parses `--model` specs into presets, including the
+//! `resnet-tiny` residual/BatchNorm preset, and [`simple_cnn`] is the
+//! paper's Fig. 4 model as a thin constructor over it), and [`parallel`]
+//! is the execution layer: a [`ParallelExecutor`] shards each training
+//! batch over a fixed worker count, runs the fused plan path per shard on
+//! per-worker node workspaces (no locking on the hot path), reduces
+//! channel selection and BatchNorm batch statistics globally at barrier
+//! rendezvous, and tree-reduces gradients in a fixed order so runs are
+//! bit-reproducible. See `docs/ARCHITECTURE.md` for the layer map and the
+//! sharding/reduction design.
 //!
 //! Layout conventions follow the paper throughout: activations NCHW,
 //! weights OIHW, row-major flattened `Vec<f32>`.
@@ -39,7 +42,7 @@ pub mod simple_cnn;
 pub mod sparse;
 pub mod zoo;
 
-pub use layers::{Layer, LayerWs, Sequential, Shape, StepStats};
+pub use layers::{Graph, GraphBuilder, Layer, LayerWs, Sequential, Shape, StepStats};
 pub use native::NativeBackend;
 pub use parallel::{ExecConfig, ParallelExecutor};
 pub use plan::Conv2dPlan;

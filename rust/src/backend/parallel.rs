@@ -1,41 +1,50 @@
 //! Data-parallel execution layer: shard each batch over a fixed worker
-//! count, run any [`Sequential`] layer graph per shard, reduce gradients
-//! deterministically.
+//! count, run any [`Graph`] — residual connections and BatchNorm included
+//! — per shard, reduce gradients deterministically.
 //!
 //! Design (see `docs/ARCHITECTURE.md` for the full write-up):
 //!
 //! * **Sharding.** The batch splits into contiguous sub-batches via
 //!   [`shard_ranges`] (non-divisible sizes allowed — leading shards take
-//!   the remainder). Each worker owns one [`LayerWs`] per layer, keyed to
-//!   its shard size, so the hot path takes **no locks**: conv im2col
-//!   columns are cached per worker and consumed by that worker's backward,
-//!   exactly like the serial path; dropout masks are keyed on the *global*
-//!   example index, so shard boundaries never change them.
+//!   the remainder). Each worker owns one [`LayerWs`] per graph node,
+//!   keyed to its shard size, so the hot path takes **no locks**: conv
+//!   im2col columns are cached per worker and consumed by that worker's
+//!   backward, exactly like the serial path; dropout masks are keyed on
+//!   the *global* example index, so shard boundaries never change them.
 //! * **Global selection.** ssProp's channel top-k is defined over the
-//!   *whole* batch, so per conv layer the workers publish unnormalized
+//!   *whole* batch, so per conv node the workers publish unnormalized
 //!   importance partials ([`channel_abs_sums`]), synchronize on a barrier,
 //!   worker 0 reduces them in fixed shard order and broadcasts the keep
 //!   set, and every shard runs the identical compacted backward
 //!   ([`Selection::Keep`]). Dense layers (keep == Cout) and non-conv
-//!   layers skip the rendezvous entirely. This keeps parallel selection
+//!   nodes skip the rendezvous entirely. This keeps parallel selection
 //!   *semantically identical* to serial selection.
+//! * **Global batch statistics.** BatchNorm normalizes over the whole
+//!   batch, so batch-normalizing nodes rendezvous twice more: once in the
+//!   forward (per-channel `[Σx ‖ Σx²]` partials reduced in fixed shard
+//!   order, every shard normalizing with the identical global moments)
+//!   and once in the backward (`[Σg ‖ Σ(g·x̂)]` partials — the exact
+//!   through-the-statistics gradient needs the global sums). One shard
+//!   reproduces the serial arithmetic bitwise; the reduced statistics are
+//!   folded into the layer's running state once per step, after the
+//!   join, from worker 0's workspace.
 //! * **Deterministic reduction.** Every parameter gradient reduces through
 //!   a fixed-shape pairwise tree (`tree_reduce`) in shard-index order —
 //!   never in thread-completion order — so repeated runs at the same
 //!   thread count are bit-identical, and a single-worker run reproduces
-//!   [`Sequential::train_step`] exactly. Against other thread counts only
+//!   [`Graph::train_step`] exactly. Against other thread counts only
 //!   float re-association differs (≪ 1e-5 on the loss trajectory; pinned
 //!   by `rust/tests/determinism.rs`).
 //! * **Sharded evaluation.** [`ParallelExecutor::eval_batch`] forwards the
-//!   shards in eval mode and hands back *per-example* losses; the reducer
-//!   sums them in global example order, which makes sharded evaluation
-//!   **bit-identical** to serial evaluation at every thread count (the
-//!   per-example forward is batch-independent: every GEMM row is computed
-//!   independently).
+//!   shards in eval mode (BatchNorm normalizes per example with running
+//!   statistics — no rendezvous) and hands back *per-example* losses; the
+//!   reducer sums them in global example order, which makes sharded
+//!   evaluation **bit-identical** to serial evaluation at every thread
+//!   count.
 //!
 //! Worker threads are scoped to each step (`std::thread::scope`), which
 //! keeps the borrows safe without `unsafe`; the persistent state a "pool"
-//! would carry — the per-worker layer workspaces — lives in the executor
+//! would carry — the per-worker node workspaces — lives in the executor
 //! and is reused across steps, so steady-state steps allocate only the
 //! gradients themselves. A panicking worker (a backend invariant
 //! violation) aborts the step *loudly*: every worker owes a fixed number
@@ -48,9 +57,10 @@ use std::sync::{Barrier, Mutex};
 
 use anyhow::{bail, Result};
 
-use super::layers::{softmax_ce_core, softmax_ce_examples, FwdCtx, LayerWs, Selection};
+use super::layers::graph::{accumulate, add_forward, NodeOp};
+use super::layers::{softmax_ce_core, softmax_ce_examples, FwdCtx, LayerWs, Selection, INPUT_SLOT};
 use super::sparse::{channel_abs_sums, topk_channels};
-use super::{Backend, Sequential, StepStats};
+use super::{Backend, Graph, StepStats};
 use crate::flops::keep_channels;
 use crate::util::shard::shard_ranges;
 
@@ -82,22 +92,23 @@ struct ShardOut {
     loss_sum: f64,
     /// Correct predictions in the shard.
     correct: usize,
-    /// Per layer: the parameter gradients ([`super::layers::BwdOut`]
+    /// Per node: the parameter gradients ([`super::layers::BwdOut`]
     /// order), already in full-batch (1/Bt) units.
     grads: Vec<Vec<Vec<f32>>>,
-    /// Kept channels summed over conv layers (filled by worker 0 only).
+    /// Kept channels summed over conv nodes (filled by worker 0 only).
     kept: usize,
 }
 
 /// Unwind insurance for the barrier protocol. Every worker owes the same
-/// fixed number of rendezvous per step (two per sparse conv layer); a
-/// worker that panics mid-step would otherwise leave its peers blocked
-/// forever on a `std::sync::Barrier` that cannot complete (std barriers
-/// have no poisoning). The guard tracks the waits still owed and pays them
-/// during unwinding, so peers proceed — at worst briefly computing on a
-/// stale or empty keep set, whose validity asserts make *them* panic and
-/// drain the same way — and the original panic then propagates out of
-/// `std::thread::scope`, aborting the step instead of deadlocking it.
+/// fixed number of rendezvous per step (two per sparse conv node, four
+/// per batch-normalizing node); a worker that panics mid-step would
+/// otherwise leave its peers blocked forever on a `std::sync::Barrier`
+/// that cannot complete (std barriers have no poisoning). The guard
+/// tracks the waits still owed and pays them during unwinding, so peers
+/// proceed — at worst briefly computing on a stale or empty broadcast,
+/// whose validity asserts make *them* panic and drain the same way — and
+/// the original panic then propagates out of `std::thread::scope`,
+/// aborting the step instead of deadlocking it.
 struct BarrierAttendance<'a> {
     barrier: &'a Barrier,
     remaining: std::cell::Cell<usize>,
@@ -169,16 +180,35 @@ fn reduce_select(
     topk_channels(&imp, keep)
 }
 
-/// Data-parallel trainer over any [`Sequential`]: owns the per-worker
-/// layer workspaces and runs [`ParallelExecutor::train_step`] /
+/// Sum per-worker statistics partials in fixed shard order (BatchNorm
+/// moments and gradient sums). The first part seeds the accumulator
+/// bitwise, so a single shard's reduction is the identity — which keeps
+/// one executor worker bit-equal to the serial path.
+fn reduce_stat_partials(slots: &[Mutex<Vec<f32>>]) -> Vec<f32> {
+    let mut tot: Vec<f32> = Vec::new();
+    for slot in slots {
+        let part = slot.lock().expect("stat slot poisoned");
+        if tot.is_empty() {
+            tot = part.clone();
+        } else {
+            for (t, &v) in tot.iter_mut().zip(part.iter()) {
+                *t += v;
+            }
+        }
+    }
+    tot
+}
+
+/// Data-parallel trainer over any [`Graph`]: owns the per-worker node
+/// workspaces and runs [`ParallelExecutor::train_step`] /
 /// [`ParallelExecutor::eval_batch`] as described in the module docs.
 /// Construct once and reuse — worker workspaces keep their buffer capacity
 /// across steps (and re-key in place when the batch size or shard sizes
-/// change, mirroring [`Sequential::ensure_ws`]).
+/// change, mirroring [`Graph::ensure_ws`]).
 #[derive(Debug)]
 pub struct ParallelExecutor {
     cfg: ExecConfig,
-    /// `worker_ws[w][l]`: worker w's workspace for layer l.
+    /// `worker_ws[w][i]`: worker w's workspace for graph node i.
     worker_ws: Vec<Vec<LayerWs>>,
 }
 
@@ -197,7 +227,7 @@ impl ParallelExecutor {
 
     /// Total im2col materializations across all worker workspaces —
     /// advances by `conv_count × workers` per train step when the fused
-    /// path is healthy (each worker builds each conv layer's columns once,
+    /// path is healthy (each worker builds each conv node's columns once,
     /// in its forward).
     pub fn plan_cols_builds(&self) -> u64 {
         self.worker_ws.iter().flatten().map(|w| w.plan_cols_builds()).sum()
@@ -209,29 +239,29 @@ impl ParallelExecutor {
     /// workers' workspaces instead of dropping their grown buffers, so
     /// steady-state steps allocate nothing here even when the shard count
     /// varies.
-    fn ensure_worker_ws(&mut self, model: &Sequential, shards: &[std::ops::Range<usize>]) {
-        let nlayers = model.num_layers();
+    fn ensure_worker_ws(&mut self, model: &Graph, shards: &[std::ops::Range<usize>]) {
+        let nn = model.num_layers();
         if self.worker_ws.len() < shards.len() {
             self.worker_ws.resize_with(shards.len(), Vec::new);
         }
         for (wws, r) in self.worker_ws.iter_mut().zip(shards) {
             let sbt = r.end - r.start;
-            wws.resize_with(nlayers, LayerWs::default);
-            for (l, ws) in wws.iter_mut().enumerate() {
-                model.layer(l).ensure_ws(ws, sbt);
+            wws.resize_with(nn, LayerWs::default);
+            for (i, ws) in wws.iter_mut().enumerate() {
+                model.node_ensure_ws(i, ws, sbt);
             }
         }
     }
 
     /// One data-parallel SGD training step at `drop_rate`; the parallel
-    /// counterpart of [`Sequential::train_step`] with identical semantics:
+    /// counterpart of [`Graph::train_step`] with identical semantics:
     /// same loss/accuracy, same global channel selection, same dropout
-    /// masks, gradients equal up to float re-association (bit-identical
-    /// with one worker, and bit-identical run-to-run at any fixed worker
-    /// count).
+    /// masks, same global BatchNorm statistics, gradients equal up to
+    /// float re-association (bit-identical with one worker, and
+    /// bit-identical run-to-run at any fixed worker count).
     pub fn train_step(
         &mut self,
-        model: &mut Sequential,
+        model: &mut Graph,
         backend: &dyn Backend,
         x: &[f32],
         y: &[i32],
@@ -243,7 +273,7 @@ impl ParallelExecutor {
         if bt == 0 || x.len() != bt * n_in {
             bail!("bad batch geometry: {} inputs for {bt} labels", x.len());
         }
-        let nlayers = model.num_layers();
+        let nn = model.num_layers();
         let classes = model.out_features();
         let shards = shard_ranges(bt, self.cfg.threads);
         let nw = shards.len();
@@ -256,77 +286,155 @@ impl ParallelExecutor {
         let barrier = Barrier::new(nw);
         let imp_slots: Vec<Mutex<Vec<f32>>> = (0..nw).map(|_| Mutex::new(Vec::new())).collect();
         let keep_slot: Mutex<Vec<usize>> = Mutex::new(Vec::new());
-        let m: &Sequential = model;
+        let stat_slot: Mutex<Vec<f32>> = Mutex::new(Vec::new());
+        let m: &Graph = model;
 
         std::thread::scope(|s| {
             let worker_iter = shards.iter().zip(self.worker_ws.iter_mut()).zip(outs.iter_mut());
             for (w, ((range, wws), out)) in worker_iter.enumerate() {
-                let (barrier, imp_slots, keep_slot) = (&barrier, &imp_slots, &keep_slot);
+                let (barrier, imp_slots) = (&barrier, &imp_slots);
+                let (keep_slot, stat_slot) = (&keep_slot, &stat_slot);
                 let range = range.clone();
                 s.spawn(move || {
                     let sbt = range.end - range.start;
                     let xs = &x[range.start * n_in..range.end * n_in];
                     let ys = &y[range.start..range.end];
 
-                    // Fixed rendezvous budget (two per sparse conv layer);
-                    // the guard pays any outstanding waits if we unwind, so
-                    // a panic here can never strand the other workers.
-                    let sparse_layers = (0..nlayers)
-                        .filter(|&l| {
-                            m.layer(l)
-                                .conv_geom()
+                    // Fixed rendezvous budget — two per sparse conv node
+                    // (selection), four per batch-normalizing node (two in
+                    // the forward, two in the backward); the guard pays any
+                    // outstanding waits if we unwind, so a panic here can
+                    // never strand the other workers.
+                    let sparse_convs = (0..nn)
+                        .filter(|&i| {
+                            m.node_layer(i)
+                                .and_then(|l| l.conv_geom())
                                 .is_some_and(|g| keep_channels(g.cout, drop_rate) < g.cout)
                         })
                         .count();
-                    let attendance = BarrierAttendance::new(barrier, 2 * sparse_layers);
+                    let bn_nodes = (0..nn)
+                        .filter(|&i| m.node_layer(i).is_some_and(|l| l.needs_batch_stats()))
+                        .count();
+                    let attendance =
+                        BarrierAttendance::new(barrier, 2 * sparse_convs + 4 * bn_nodes);
 
-                    // Shard-local forward + loss, in full-batch gradient
-                    // units (grad_denom = bt). Dropout masks key on the
-                    // global example offset, so they match serial exactly.
+                    // Publish this worker's partials, rendezvous, let
+                    // worker 0 reduce them in fixed shard order, rendezvous
+                    // again, and read the broadcast back.
+                    let reduce_stats = |part: Vec<f32>| -> Vec<f32> {
+                        *imp_slots[w].lock().expect("stat slot poisoned") = part;
+                        attendance.wait();
+                        if w == 0 {
+                            *stat_slot.lock().expect("stat broadcast poisoned") =
+                                reduce_stat_partials(imp_slots);
+                        }
+                        attendance.wait();
+                        stat_slot.lock().expect("stat broadcast poisoned").clone()
+                    };
+
+                    // Shard-local forward over the graph slots, in
+                    // full-batch gradient units (grad_denom = bt). Dropout
+                    // masks key on the global example offset, so they
+                    // match serial exactly; batch-normalizing nodes reduce
+                    // their moments globally before normalizing.
                     let ctx = FwdCtx { train: true, step, example_offset: range.start };
-                    let acts = m.forward_collect(backend, xs, sbt, wws, &ctx);
-                    let (loss_sum, correct, dlogits) =
-                        softmax_ce_core(&acts[nlayers], ys, classes, bt);
+                    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nn + 1);
+                    acts.push(xs.to_vec());
+                    for i in 0..nn {
+                        let next = match &m.node(i).op {
+                            NodeOp::Add { a, b } => add_forward(&acts[*a], &acts[*b]),
+                            NodeOp::Layer { layer, input } => {
+                                if layer.needs_batch_stats() {
+                                    let global =
+                                        reduce_stats(layer.fwd_stat_partials(&acts[*input], sbt));
+                                    layer.forward_with_stats(
+                                        backend,
+                                        &acts[*input],
+                                        sbt,
+                                        &mut wws[i],
+                                        &ctx,
+                                        &global,
+                                        bt,
+                                    )
+                                } else {
+                                    layer.forward(backend, &acts[*input], sbt, &mut wws[i], &ctx)
+                                }
+                            }
+                        };
+                        acts.push(next);
+                    }
+                    let (loss_sum, correct, dlogits) = softmax_ce_core(&acts[nn], ys, classes, bt);
                     out.loss_sum = loss_sum;
                     out.correct = correct;
-                    out.grads = (0..nlayers).map(|_| Vec::new()).collect();
+                    out.grads = (0..nn).map(|_| Vec::new()).collect();
 
-                    // Backward, top-down. Conv selection is global: publish
-                    // importance partials, rendezvous, worker 0 reduces +
-                    // broadcasts; dense conv layers skip the sync and keep
-                    // everything; non-conv layers run locally.
-                    let mut g = dlogits;
-                    for l in (0..nlayers).rev() {
-                        let layer = m.layer(l);
-                        let keep: Option<Vec<usize>> = layer.conv_geom().map(|geom| {
-                            let keep_count = keep_channels(geom.cout, drop_rate);
-                            if keep_count == geom.cout {
-                                return (0..geom.cout).collect();
+                    // Backward in reverse topological order over per-slot
+                    // gradient accumulators (an Add merge fans the
+                    // gradient to both operands). Conv selection is
+                    // global: publish importance partials, rendezvous,
+                    // worker 0 reduces + broadcasts; dense conv nodes skip
+                    // the sync and keep everything. Batch-normalizing
+                    // nodes reduce their gradient sums the same way;
+                    // every other node runs locally.
+                    let mut slot_grads: Vec<Option<Vec<f32>>> = (0..nn + 1).map(|_| None).collect();
+                    slot_grads[nn] = Some(dlogits);
+                    for i in (0..nn).rev() {
+                        let g =
+                            slot_grads[i + 1].take().expect("every node output feeds a later node");
+                        let (layer, input) = match &m.node(i).op {
+                            NodeOp::Add { a, b } => {
+                                accumulate(&mut slot_grads[*a], g.clone());
+                                accumulate(&mut slot_grads[*b], g);
+                                continue;
                             }
-                            let cfg = geom.with_batch(sbt);
-                            *imp_slots[w].lock().expect("importance slot poisoned") =
-                                channel_abs_sums(&cfg, &g);
-                            attendance.wait();
-                            if w == 0 {
-                                let hw = geom.hout() * geom.wout();
-                                let sel = reduce_select(imp_slots, bt, hw, geom.cout, keep_count);
-                                *keep_slot.lock().expect("keep slot poisoned") = sel;
-                            }
-                            attendance.wait();
-                            keep_slot.lock().expect("keep slot poisoned").clone()
-                        });
-                        if w == 0 {
-                            out.kept += keep.as_ref().map_or(0, |k| k.len());
-                        }
-                        let sel = match &keep {
-                            Some(k) => Selection::Keep(k),
-                            None => Selection::Local(drop_rate),
+                            NodeOp::Layer { layer, input } => (layer, *input),
                         };
-                        let bwd =
-                            layer.backward(backend, &acts[l], &g, sbt, &mut wws[l], sel, l > 0);
-                        out.grads[l] = bwd.grads;
-                        if l > 0 {
-                            g = bwd.dx;
+                        let need_dx = input != INPUT_SLOT;
+                        let bwd = if layer.needs_batch_stats() {
+                            let local = layer.bwd_stat_partials(&g, sbt, &wws[i]);
+                            let global = reduce_stats(local.clone());
+                            layer.backward_with_stats(
+                                backend,
+                                &acts[input],
+                                &g,
+                                sbt,
+                                &mut wws[i],
+                                &global,
+                                &local,
+                                need_dx,
+                            )
+                        } else {
+                            let keep: Option<Vec<usize>> = layer.conv_geom().map(|geom| {
+                                let keep_count = keep_channels(geom.cout, drop_rate);
+                                if keep_count == geom.cout {
+                                    return (0..geom.cout).collect();
+                                }
+                                let cfg = geom.with_batch(sbt);
+                                *imp_slots[w].lock().expect("importance slot poisoned") =
+                                    channel_abs_sums(&cfg, &g);
+                                attendance.wait();
+                                if w == 0 {
+                                    let hw = geom.hout() * geom.wout();
+                                    let sel =
+                                        reduce_select(imp_slots, bt, hw, geom.cout, keep_count);
+                                    *keep_slot.lock().expect("keep slot poisoned") = sel;
+                                }
+                                attendance.wait();
+                                keep_slot.lock().expect("keep slot poisoned").clone()
+                            });
+                            let sel = match &keep {
+                                Some(k) => Selection::Keep(k),
+                                None => Selection::Local(drop_rate),
+                            };
+                            let ws_i = &mut wws[i];
+                            layer.backward(backend, &acts[input], &g, sbt, ws_i, sel, need_dx)
+                        };
+                        if w == 0 {
+                            out.kept += bwd.kept;
+                        }
+                        out.grads[i] = bwd.grads;
+                        if need_dx {
+                            accumulate(&mut slot_grads[input], bwd.dx);
                         }
                     }
                 });
@@ -346,9 +454,9 @@ impl ParallelExecutor {
         let kept = outs[0].kept;
 
         // Gradient tree-reduction (fixed shard order) + SGD updates: for
-        // each layer, each parameter's shard parts reduce through the same
+        // each node, each parameter's shard parts reduce through the same
         // pairwise tree the legacy executor used, then apply.
-        let mut parts: Vec<Vec<Vec<Vec<f32>>>> = (0..nlayers).map(|_| Vec::new()).collect();
+        let mut parts: Vec<Vec<Vec<Vec<f32>>>> = (0..nn).map(|_| Vec::new()).collect();
         for o in outs {
             for (l, grads) in o.grads.into_iter().enumerate() {
                 for (p, gvec) in grads.into_iter().enumerate() {
@@ -364,10 +472,20 @@ impl ParallelExecutor {
                 continue;
             }
             let reduced: Vec<Vec<f32>> = pgrads.into_iter().map(tree_reduce).collect();
-            for (param, grad) in model.layer_mut(l).params_mut().into_iter().zip(&reduced) {
+            for (param, grad) in model.node_params_mut(l).into_iter().zip(&reduced) {
                 for (pv, &gv) in param.iter_mut().zip(grad) {
                     *pv -= lr * gv;
                 }
+            }
+        }
+
+        // Fold the global batch statistics into persistent layer state
+        // (BN running stats) exactly once per step — every worker holds
+        // the identical reduced statistics, so worker 0's workspace is
+        // the canonical copy.
+        for i in 0..nn {
+            if let Some(ws0) = self.worker_ws.first().and_then(|wws| wws.get(i)) {
+                model.node_commit_stats(i, ws0);
             }
         }
 
@@ -380,13 +498,15 @@ impl ParallelExecutor {
     }
 
     /// Sharded forward-only evaluation: mean (loss, accuracy) over the
-    /// batch, **bit-identical** to [`Sequential::eval_batch`] at every
+    /// batch, **bit-identical** to [`Graph::eval_batch`] at every
     /// thread count — workers hand back per-example losses and the reducer
-    /// sums them in global example order. Panics on malformed batch
-    /// geometry (the loaders only produce well-formed batches).
+    /// sums them in global example order (eval-mode BatchNorm normalizes
+    /// per example with running statistics, so no rendezvous is needed).
+    /// Panics on malformed batch geometry (the loaders only produce
+    /// well-formed batches).
     pub fn eval_batch(
         &mut self,
-        model: &Sequential,
+        model: &Graph,
         backend: &dyn Backend,
         x: &[f32],
         y: &[i32],
@@ -429,7 +549,7 @@ impl ParallelExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::{simple_cnn, NativeBackend, SimpleCnnCfg};
+    use crate::backend::{simple_cnn, NativeBackend, Sequential, SimpleCnnCfg};
     use crate::util::rng::Pcg;
 
     fn tiny() -> Sequential {
@@ -453,6 +573,15 @@ mod tests {
             assert_eq!(got[1], nparts as f32);
         }
         assert!(tree_reduce(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn stat_reduce_is_identity_for_one_part_and_sums_in_order() {
+        let one = vec![Mutex::new(vec![1.5f32, -2.0])];
+        assert_eq!(reduce_stat_partials(&one), vec![1.5, -2.0]);
+        let two = vec![Mutex::new(vec![1.0f32, 2.0]), Mutex::new(vec![0.5f32, -1.0])];
+        assert_eq!(reduce_stat_partials(&two), vec![1.5, 1.0]);
+        assert!(reduce_stat_partials(&[]).is_empty());
     }
 
     #[test]

@@ -1,9 +1,9 @@
 //! Model zoo: the `--model` spec language and its presets. A spec is a
 //! preset name plus optional dash-separated parameters —
-//! `simple-cnn-d4-w16`, `vgg-tiny-w12`, `dropout-cnn-w8-p25` — parsed into
-//! a typed [`ModelSpec`] (malformed specs produce the typed
-//! [`ModelSpecError`], not a stringly error) and built into a
-//! [`Sequential`] for any dataset geometry.
+//! `simple-cnn-d4-w16`, `vgg-tiny-w12`, `dropout-cnn-w8-p25`,
+//! `resnet-tiny-w8-b2` — parsed into a typed [`ModelSpec`] (malformed
+//! specs produce the typed [`ModelSpecError`], not a stringly error) and
+//! built into a layer [`Graph`] for any dataset geometry.
 //!
 //! Presets:
 //!
@@ -12,6 +12,7 @@
 //! | `simple-cnn[-dD-wW]` | D× (3×3 conv + ReLU), stride-2 stem; GAP; fc | the paper's Fig. 4 model (legacy-bitwise) |
 //! | `vgg-tiny[-wW]` | 2× (conv W + ReLU), maxpool; conv 2W + ReLU, maxpool; GAP; fc | MaxPool in the backward path |
 //! | `dropout-cnn[-wW-pP]` | stride-2 conv W, ReLU, Dropout P%; conv W, ReLU, Dropout P%; GAP; fc | the paper's ssProp+Dropout compatibility claim |
+//! | `resnet-tiny[-wW-bB]` | CIFAR-stem conv W + BN + ReLU; 4 stages of B basic blocks (conv–BN–ReLU–conv–BN + identity/1×1-proj skip) at widths W,2W,4W,8W; GAP; fc | residual graphs + BatchNorm — the paper's ResNet family, stage geometry mirroring [`crate::flops::resnet_config`] |
 
 use std::fmt;
 
@@ -19,7 +20,8 @@ use anyhow::Result;
 
 use super::im2col::out_size;
 use super::layers::{
-    Conv2dLayer, Dropout, GlobalAvgPool, Layer, Linear, MaxPool2d, ReLU, Sequential, Shape,
+    BatchNorm2d, Conv2dLayer, Dropout, GlobalAvgPool, Graph, Layer, Linear, MaxPool2d, ReLU,
+    Sequential, Shape, INPUT_SLOT,
 };
 use super::simple_cnn::{simple_cnn, SimpleCnnCfg};
 use crate::util::rng::Pcg;
@@ -48,6 +50,17 @@ pub enum ModelSpec {
         width: usize,
         /// Drop probability in percent (1..=99).
         rate_pct: usize,
+    },
+    /// A scaled-down residual network (basic blocks + BatchNorm) whose
+    /// per-stage geometry mirrors [`crate::flops::resnet_config`]:
+    /// CIFAR-style 3×3/s1 stem, stage widths W, 2W, 4W, 8W, first block
+    /// of stages 2–4 at stride 2 with a 1×1 projection shortcut.
+    /// `resnet-tiny-w8-b2` is ResNet-18 at 1/8 width.
+    ResnetTiny {
+        /// Stage-1 channel count (later stages double it).
+        width: usize,
+        /// Basic blocks per stage.
+        blocks: usize,
     },
 }
 
@@ -97,7 +110,7 @@ impl fmt::Display for ModelSpecError {
 impl std::error::Error for ModelSpecError {}
 
 /// Preset names the spec parser recognizes (longest-match first).
-pub const PRESETS: &[&str] = &["simple-cnn", "vgg-tiny", "dropout-cnn"];
+pub const PRESETS: &[&str] = &["simple-cnn", "vgg-tiny", "dropout-cnn", "resnet-tiny"];
 
 /// Parse a `--model` spec string into a typed [`ModelSpec`].
 pub fn parse_model_spec(spec: &str) -> Result<ModelSpec, ModelSpecError> {
@@ -115,7 +128,7 @@ pub fn parse_model_spec(spec: &str) -> Result<ModelSpec, ModelSpecError> {
         }
     };
 
-    let (mut depth, mut width, mut rate_pct) = (None, None, None);
+    let (mut depth, mut width, mut rate_pct, mut blocks) = (None, None, None, None);
     for token in tokens {
         let bad = || ModelSpecError::BadParam { spec: spec.to_string(), token: token.to_string() };
         let (key, digits) = token.split_at(1.min(token.len()));
@@ -124,6 +137,7 @@ pub fn parse_model_spec(spec: &str) -> Result<ModelSpec, ModelSpecError> {
             "d" if preset == "simple-cnn" => &mut depth,
             "w" => &mut width,
             "p" if preset == "dropout-cnn" => &mut rate_pct,
+            "b" if preset == "resnet-tiny" => &mut blocks,
             _ => return Err(bad()),
         };
         if slot.is_some() {
@@ -150,6 +164,9 @@ pub fn parse_model_spec(spec: &str) -> Result<ModelSpec, ModelSpecError> {
                 });
             }
             Ok(ModelSpec::DropoutCnn { width: width.unwrap_or(8), rate_pct })
+        }
+        "resnet-tiny" => {
+            Ok(ModelSpec::ResnetTiny { width: width.unwrap_or(8), blocks: blocks.unwrap_or(1) })
         }
         other => unreachable!("preset {other:?} is listed in PRESETS but not parsed"),
     }
@@ -179,6 +196,7 @@ impl ModelSpec {
             ModelSpec::DropoutCnn { width, rate_pct } => {
                 format!("dropout-cnn-w{width}-p{rate_pct}")
             }
+            ModelSpec::ResnetTiny { width, blocks } => format!("resnet-tiny-w{width}-b{blocks}"),
         }
     }
 }
@@ -204,6 +222,9 @@ pub fn build_model(
         ModelSpec::VggTiny { width } => build_vgg_tiny(spec, in_ch, img, classes, seed, width),
         ModelSpec::DropoutCnn { width, rate_pct } => {
             build_dropout_cnn(spec, in_ch, img, classes, seed, width, rate_pct)
+        }
+        ModelSpec::ResnetTiny { width, blocks } => {
+            build_resnet_tiny(spec, in_ch, img, classes, seed, width, blocks)
         }
     }
 }
@@ -269,6 +290,76 @@ fn build_dropout_cnn(
     Sequential::new(spec.canonical(), Shape::Spatial { c: in_ch, h: img, w: img }, parts)
 }
 
+/// CIFAR-stem residual network of basic blocks — the paper's ResNet
+/// family scaled down. Stage geometry mirrors [`crate::flops::resnet_config`]:
+/// stem 3×3/s1/p1 into width W, four stages of `blocks` basic blocks at
+/// widths W, 2W, 4W, 8W, the first block of stages 2–4 at stride 2 with a
+/// 1×1/s2 projection shortcut (every other skip is the identity). Each
+/// block is conv–BN–ReLU–conv–BN, merged with its shortcut by an `Add`
+/// node and closed with a ReLU; the projection carries no BatchNorm, so
+/// the native ledger matches [`crate::flops::paper_resnet`]'s accounting
+/// (BN counted on main-path convs only).
+fn build_resnet_tiny(
+    spec: &ModelSpec,
+    in_ch: usize,
+    img: usize,
+    classes: usize,
+    seed: u64,
+    width: usize,
+    blocks: usize,
+) -> Result<Sequential> {
+    let mut rng = Pcg::new(seed ^ 0xC44, 29);
+    let mut b = Graph::builder(spec.canonical(), Shape::Spatial { c: in_ch, h: img, w: img });
+    // Stem: conv W + BN + ReLU (BN counted on the stem conv, as in the
+    // paper's tables).
+    let stem = Conv2dLayer::init(&mut rng, in_ch, img, img, width, 3, 1, 1);
+    let mut side = stem.cfg_at(1).hout();
+    let mut cur = b.layer("stem.conv", INPUT_SLOT, Box::new(stem))?;
+    cur = b.layer("stem.bn", cur, Box::new(BatchNorm2d::new(width, side, side)))?;
+    cur = b.layer("", cur, Box::new(ReLU))?;
+    let mut cin = width;
+    for si in 0..4usize {
+        let wout = width << si;
+        for bi in 0..blocks {
+            let stride = if bi == 0 && si > 0 { 2 } else { 1 };
+            let name = format!("s{si}b{bi}");
+            let (block_in, in_side) = (cur, side);
+            // Main path: conv–BN–ReLU–conv–BN.
+            let conv1 = Conv2dLayer::init(&mut rng, cin, in_side, in_side, wout, 3, stride, 1);
+            let out_side = conv1.cfg_at(1).hout();
+            cur = b.layer(format!("{name}.conv1"), cur, Box::new(conv1))?;
+            cur = b.layer(
+                format!("{name}.bn1"),
+                cur,
+                Box::new(BatchNorm2d::new(wout, out_side, out_side)),
+            )?;
+            cur = b.layer("", cur, Box::new(ReLU))?;
+            let conv2 = Conv2dLayer::init(&mut rng, wout, out_side, out_side, wout, 3, 1, 1);
+            cur = b.layer(format!("{name}.conv2"), cur, Box::new(conv2))?;
+            cur = b.layer(
+                format!("{name}.bn2"),
+                cur,
+                Box::new(BatchNorm2d::new(wout, out_side, out_side)),
+            )?;
+            // Shortcut: identity where the geometry allows, else a 1×1
+            // projection (ssProp-selectable like every conv).
+            let shortcut = if stride != 1 || cin != wout {
+                let proj = Conv2dLayer::init(&mut rng, cin, in_side, in_side, wout, 1, stride, 0);
+                b.layer(format!("{name}.proj"), block_in, Box::new(proj))?
+            } else {
+                block_in
+            };
+            cur = b.add(cur, shortcut)?;
+            cur = b.layer("", cur, Box::new(ReLU))?;
+            cin = wout;
+            side = out_side;
+        }
+    }
+    cur = b.layer("", cur, Box::new(GlobalAvgPool::new(cin, side, side)))?;
+    b.layer("fc", cur, Box::new(Linear::init(&mut rng, cin, classes)))?;
+    b.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -291,6 +382,14 @@ mod tests {
             parse_model_spec("dropout-cnn-w6-p40").unwrap(),
             ModelSpec::DropoutCnn { width: 6, rate_pct: 40 }
         );
+        assert_eq!(
+            parse_model_spec("resnet-tiny").unwrap(),
+            ModelSpec::ResnetTiny { width: 8, blocks: 1 }
+        );
+        assert_eq!(
+            parse_model_spec("resnet-tiny-w4-b2").unwrap(),
+            ModelSpec::ResnetTiny { width: 4, blocks: 2 }
+        );
     }
 
     #[test]
@@ -308,6 +407,11 @@ mod tests {
         assert!(matches!(err("simple-cnn-d0"), OutOfRange { .. }));
         assert!(matches!(err("simple-cnn-w4-w8"), BadParam { .. }));
         assert!(matches!(err("dropout-cnn-p100"), OutOfRange { .. }));
+        // resnet-tiny grammar: b is its key alone; zero blocks/width reject
+        assert!(matches!(err("vgg-tiny-b2"), BadParam { .. }));
+        assert!(matches!(err("resnet-tiny-p25"), BadParam { .. }));
+        assert!(matches!(err("resnet-tiny-b0"), OutOfRange { .. }));
+        assert!(matches!(err("resnet-tiny-w0"), OutOfRange { .. }));
         // the error displays the offending spec
         let shown = err("nope");
         assert!(shown.to_string().contains("nope"), "{shown}");
@@ -315,7 +419,8 @@ mod tests {
 
     #[test]
     fn canonical_roundtrips_through_parse() {
-        for spec in ["simple-cnn-d3-w6", "vgg-tiny-w8", "dropout-cnn-w8-p25"] {
+        for spec in ["simple-cnn-d3-w6", "vgg-tiny-w8", "dropout-cnn-w8-p25", "resnet-tiny-w4-b2"]
+        {
             let parsed = parse_model_spec(spec).unwrap();
             assert_eq!(parsed.canonical(), spec);
             assert_eq!(parse_model_spec(&parsed.canonical()).unwrap(), parsed);
@@ -354,6 +459,34 @@ mod tests {
         assert_eq!(set.convs.len(), 2);
         assert_eq!(set.dropouts.len(), 2, "Eq. 8 entries for both dropout layers");
         assert_eq!(set.dropouts[0], (4, 4, 4));
+    }
+
+    #[test]
+    fn resnet_tiny_builds_trains_and_accounts_bn() {
+        let be = NativeBackend::new();
+        let spec = parse_model_spec("resnet-tiny-w4").unwrap();
+        let mut m = build_model(&spec, 1, 8, 3, 5).unwrap();
+        // stem + stage0 (2 convs) + stages 1-3 (2 convs + 1x1 proj each)
+        assert_eq!(m.conv_count(), 1 + 2 + 3 * 3);
+        assert!(m.describe().contains("add"), "{}", m.describe());
+        let set = m.layer_set();
+        assert_eq!(set.convs.len(), 12);
+        let counted = set.convs.iter().filter(|c| c.counted_bn).count();
+        let proj = set.convs.iter().filter(|c| c.k == 1).count();
+        assert_eq!(proj, 3, "one projection per strided stage");
+        assert_eq!(counted, 9, "BN on main-path convs only, projections uncounted");
+
+        let mut rng = Pcg::new(2, 2);
+        let x: Vec<f32> = (0..6 * 64).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..6).map(|i| (i % 3) as i32).collect();
+        let stats = m.train_step(&be, &x, &y, 0.8, 0.05).unwrap();
+        assert!(stats.loss.is_finite());
+        let want: usize = set.convs.iter().map(|c| keep_channels(c.cout, 0.8)).sum();
+        assert_eq!(stats.kept_channels, want, "sparse backward engages every conv incl. proj");
+        // BN running stats moved off their init during the training step
+        let saved = m.state_tensors();
+        let rm = saved.iter().find(|(n, _)| n == "param['s1b0.bn1.rm']").expect("bn rm leaf");
+        assert!(rm.1.to_f32().iter().any(|&v| v != 0.0), "running mean must update");
     }
 
     #[test]

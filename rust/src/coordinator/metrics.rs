@@ -1,7 +1,10 @@
 //! Training metrics: loss/acc curves, FLOPs ledger (dense-equivalent vs
 //! actual under the schedule), wall-clock, and energy estimates. Keyed on
-//! the conv inventory ([`LayerSet`]) rather than any runtime's manifest, so
-//! native and PJRT trainers share one ledger.
+//! the conv/BN/dropout inventory ([`LayerSet`]) rather than any runtime's
+//! manifest, so native and PJRT trainers share one ledger — the native
+//! trainer derives the inventory from the *live* model graph
+//! (`Graph::layer_set`), which keeps the savings correct for every zoo
+//! preset, BatchNorm terms and residual projections included.
 
 use std::time::Duration;
 
@@ -114,18 +117,20 @@ fn mean_tail(v: &[f64], n: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::flops::ConvLayer;
+    use crate::backend::{build_model, parse_model_spec};
 
-    fn toy_layers() -> LayerSet {
-        LayerSet {
-            convs: vec![ConvLayer { cin: 3, cout: 16, k: 3, hout: 8, wout: 8, counted_bn: false }],
-            dropouts: Vec::new(),
-        }
+    /// The ledger inventory of a *live* zoo graph — the same derivation
+    /// the trainer uses (`Graph::layer_set`), not a hand-maintained conv
+    /// list that could drift from the model actually trained.
+    fn live_layers() -> LayerSet {
+        let spec = parse_model_spec("simple-cnn-d2-w16").unwrap();
+        build_model(&spec, 3, 8, 4, 1).unwrap().layer_set()
     }
 
     #[test]
     fn flops_ledger_tracks_schedule() {
-        let layers = toy_layers();
+        let layers = live_layers();
+        assert_eq!(layers.convs.len(), 2, "the live graph feeds the ledger");
         let mut m = TrainMetrics::default();
         m.record_iter(1.0, 0.1, 0.0, &layers, 8);
         m.record_iter(0.9, 0.2, 0.8, &layers, 8);
@@ -137,7 +142,7 @@ mod tests {
 
     #[test]
     fn dense_only_run_saves_nothing() {
-        let layers = toy_layers();
+        let layers = live_layers();
         let mut m = TrainMetrics::default();
         for _ in 0..4 {
             m.record_iter(1.0, 0.5, 0.0, &layers, 8);
@@ -148,7 +153,7 @@ mod tests {
     #[test]
     fn tail_means() {
         let mut m = TrainMetrics::default();
-        let layers = toy_layers();
+        let layers = live_layers();
         for (i, l) in [4.0, 3.0, 2.0, 1.0].iter().enumerate() {
             m.record_iter(*l, i as f64, 0.0, &layers, 8);
         }

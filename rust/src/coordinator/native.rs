@@ -1,10 +1,14 @@
 //! Native training loop: the scheduler-driven coordinator running any
-//! model-zoo [`Sequential`] through the [`Backend`] trait — no artifacts,
-//! no FFI, works on any machine. Shares the data plane, scheduler, FLOPs
-//! ledger and checkpoint format with the PJRT path, so dense-vs-ssProp
-//! comparisons and energy accounting read identically across executors
-//! *and* across architectures (`--model simple-cnn-d4-w16`, `vgg-tiny`,
-//! `dropout-cnn`, ...).
+//! model-zoo layer graph ([`Sequential`] chains and residual graphs
+//! alike) through the [`Backend`] trait — no artifacts, no FFI, works on
+//! any machine. Shares the data plane, scheduler, FLOPs ledger and
+//! checkpoint format with the PJRT path, so dense-vs-ssProp comparisons
+//! and energy accounting read identically across executors *and* across
+//! architectures (`--model simple-cnn-d4-w16`, `vgg-tiny`, `dropout-cnn`,
+//! `resnet-tiny-w8-b2`, ...). The ledger's [`LayerSet`] is derived from
+//! the *live* model graph at construction, so BatchNorm terms
+//! (`counted_bn`) and residual projection convs are accounted for every
+//! preset automatically.
 
 use std::path::Path;
 use std::time::Instant;
@@ -26,8 +30,9 @@ pub struct NativeTrainConfig {
     /// Synthetic dataset name (CE datasets: mnist, fashion, cifar10, ...).
     pub dataset: String,
     /// Model-zoo spec (`simple-cnn`, `simple-cnn-d4-w16`, `vgg-tiny`,
-    /// `dropout-cnn-w8-p25`, ...). A bare `simple-cnn` takes its geometry
-    /// from [`NativeTrainConfig::depth`]/[`NativeTrainConfig::width`].
+    /// `dropout-cnn-w8-p25`, `resnet-tiny-w8-b2`, ...). A bare
+    /// `simple-cnn` takes its geometry from
+    /// [`NativeTrainConfig::depth`]/[`NativeTrainConfig::width`].
     pub model: String,
     /// SimpleCNN depth (used when the model spec leaves it unset).
     pub depth: usize,
@@ -366,7 +371,7 @@ mod tests {
 
     #[test]
     fn zoo_models_train_through_the_coordinator() {
-        for model in ["vgg-tiny-w4", "dropout-cnn-w6-p25"] {
+        for model in ["vgg-tiny-w4", "dropout-cnn-w6-p25", "resnet-tiny-w4"] {
             let mut cfg = quick_cfg();
             cfg.model = model.to_string();
             let mut t = NativeTrainer::new(cfg).unwrap();

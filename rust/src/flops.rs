@@ -196,6 +196,40 @@ pub fn paper_resnet(arch: &str, img: usize, in_ch: usize, width_mult: f64) -> La
     set
 }
 
+/// Analytic conv/BN inventory of the native `resnet-tiny-wW-bB` preset —
+/// the paper-style hand count the native ledger is cross-checked against
+/// (`rust/tests/model_zoo.rs`). Same construction as [`paper_resnet`]'s
+/// basic-block branch with stage widths `w, 2w, 4w, 8w` and `blocks`
+/// blocks per stage: CIFAR-style 3×3/s1 stem, first block of stages 2–4
+/// at stride 2 with a 1×1 downsample projection, BN counted on main-path
+/// convs only. `tiny_resnet(8, 2, img, in_ch)` is exactly
+/// `paper_resnet("resnet18", img, in_ch, 0.125)`.
+pub fn tiny_resnet(width: usize, blocks: usize, img: usize, in_ch: usize) -> LayerSet {
+    assert!(width >= 1 && blocks >= 1, "degenerate resnet-tiny geometry");
+    let mut set = LayerSet::default();
+    let mut add = |cin: usize, cout: usize, k: usize, s: usize, p: usize, h: usize, bn: bool| {
+        let ho = conv_out(h, k, s, p);
+        set.convs.push(ConvLayer { cin, cout, k, hout: ho, wout: ho, counted_bn: bn });
+        ho
+    };
+    let mut h = add(in_ch, width, 3, 1, 1, img, true);
+    let mut cin = width;
+    for si in 0..4usize {
+        let w = width << si;
+        for bi in 0..blocks {
+            let s = if bi == 0 && si > 0 { 2 } else { 1 };
+            let h2 = add(cin, w, 3, s, 1, h, true);
+            add(w, w, 3, 1, 1, h2, true);
+            if s != 1 || cin != w {
+                add(cin, w, 1, s, 0, h, false); // downsample: BN uncounted
+            }
+            h = h2;
+            cin = w;
+        }
+    }
+    set
+}
+
 /// Paper Table 4 "Est. FLOPs (B/Iter.)" dense reference values used by the
 /// parity tests and the table harness.
 pub const TABLE4_DENSE_BILLIONS: &[(&str, &str, usize, usize, usize, f64)] = &[
@@ -304,6 +338,22 @@ mod tests {
         let avg = set.bwd_flops_scheduled(128, &[0.0, 0.8]);
         let saving = 1.0 - avg / dense;
         assert!((0.38..0.42).contains(&saving), "saving {saving}");
+    }
+
+    #[test]
+    fn tiny_resnet_at_w8_b2_is_resnet18_at_eighth_width() {
+        // 64·0.125 = 8, …, 512·0.125 = 64 — the width_mult clamp never
+        // engages, so the two constructions must agree layer-for-layer.
+        let tiny = tiny_resnet(8, 2, 32, 3);
+        let full = paper_resnet("resnet18", 32, 3, 0.125);
+        assert_eq!(tiny.convs.len(), full.convs.len());
+        for (a, b) in tiny.convs.iter().zip(&full.convs) {
+            assert_eq!(a, b);
+        }
+        for d in [0.0, 0.8] {
+            let (ta, fa) = (tiny.bwd_flops_per_iter(128, d), full.bwd_flops_per_iter(128, d));
+            assert!((ta - fa).abs() <= f64::EPSILON * fa, "d={d}: {ta} vs {fa}");
+        }
     }
 
     #[test]

@@ -30,10 +30,11 @@ native commands (no artifacts needed; pure-Rust backend):
                [--target-drop 0.8] [--period 2] [--seed 0] [--threads 1]
                [--include-tail] [--save ck.tstore] [--verbose]
                (--model picks a zoo preset: simple-cnn[-dD-wW], vgg-tiny[-wW],
-               dropout-cnn[-wW-pP]; bare simple-cnn takes --depth/--width.
-               --threads N shards each batch across N workers with
-               deterministic gradient reduction; --include-tail also trains
-               each epoch's leftover partial batch)
+               dropout-cnn[-wW-pP], resnet-tiny[-wW-bB] (residual blocks +
+               BatchNorm, W channels x B blocks per stage); bare simple-cnn
+               takes --depth/--width. --threads N shards each batch across N
+               workers with deterministic gradient reduction; --include-tail
+               also trains each epoch's leftover partial batch)
   datasets     print Table 1 (dataset geometry)
   presets      print Tables 2/3 (hyperparameters)
   flops        print FLOPs parity + Eq.10/11 lower-bound tables

@@ -7,10 +7,15 @@
 //! selection semantics (channel top-k is reduced globally across shards) —
 //! and sharded evaluation must be bit-identical to serial evaluation at
 //! every thread count (per-example losses reduce in global example
-//! order).
+//! order). The residual `resnet-tiny` graph carries the same contract:
+//! its BatchNorm statistics are reduced in fixed shard order at the
+//! barrier rendezvous, so runs (parameters *and* running stats) are
+//! bit-identical run-to-run per thread count, and one worker reproduces
+//! the serial step bitwise.
 
 use ssprop::backend::{
-    simple_cnn, ExecConfig, NativeBackend, ParallelExecutor, Sequential, SimpleCnnCfg, StepStats,
+    build_model, parse_model_spec, simple_cnn, ExecConfig, NativeBackend, ParallelExecutor,
+    Sequential, SimpleCnnCfg, StepStats,
 };
 use ssprop::util::rng::Pcg;
 
@@ -132,6 +137,64 @@ fn uneven_shards_stay_deterministic_and_close_to_serial() {
         exec2.train_step(&mut m2, &be, x, y, drop_at(step), 0.05).unwrap();
     }
     assert_eq!(m.flat_params(), m2.flat_params(), "uneven sharding must be bit-reproducible");
+}
+
+fn resnet() -> Sequential {
+    // 2x12x12 inputs through the residual/BatchNorm preset at width 4.
+    build_model(&parse_model_spec("resnet-tiny-w4-b1").unwrap(), 2, 12, CLASSES, 33).unwrap()
+}
+
+#[test]
+fn resnet_tiny_runs_are_bit_identical_at_every_thread_count() {
+    // BatchNorm moments and gradient sums reduce in fixed shard order at
+    // the barrier rendezvous, so a fixed worker count must reproduce its
+    // own parameters — BN running statistics included (flat_params carries
+    // them) — bit-for-bit.
+    let be = NativeBackend::new();
+    let bt = 12;
+    let data = batches(bt);
+    for threads in [1usize, 2, 4] {
+        let run = || {
+            let mut m = resnet();
+            let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+            for (step, (x, y)) in data.iter().take(3).enumerate() {
+                exec.train_step(&mut m, &be, x, y, drop_at(step + 1), 0.05).unwrap();
+            }
+            m.flat_params()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "t{threads}: repeated resnet-tiny runs must be bit-identical");
+    }
+}
+
+#[test]
+fn resnet_tiny_single_worker_reproduces_serial_bitwise() {
+    // One shard's statistics reduction is the identity (the first partial
+    // seeds the accumulator bitwise), so the executor at t=1 replays the
+    // serial residual step exactly — loss bits, selection, parameters,
+    // and BN running statistics.
+    let be = NativeBackend::new();
+    let bt = 6;
+    let data = batches(bt);
+    let mut serial = resnet();
+    let mut parallel = resnet();
+    let mut exec = ParallelExecutor::new(ExecConfig::with_threads(1));
+    for (step, (x, y)) in data.iter().take(4).enumerate() {
+        let d = drop_at(step + 1); // start sparse: selection must agree too
+        let a = serial.train_step(&be, x, y, d, 0.05).unwrap();
+        let b = exec.train_step(&mut parallel, &be, x, y, d, 0.05).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step} loss");
+        assert_eq!(a.kept_channels, b.kept_channels, "step {step} selection");
+        assert_eq!(serial.flat_params(), parallel.flat_params(), "step {step} weights+stats");
+    }
+    // and eval (running-stat BN, per-example) is bitwise at any count
+    let (x, y) = &data[5];
+    let want = serial.eval_batch(&be, x, y);
+    for threads in [1usize, 2, 3] {
+        let mut e = ParallelExecutor::new(ExecConfig::with_threads(threads));
+        let got = e.eval_batch(&serial, &be, x, y);
+        assert_eq!(got.0.to_bits(), want.0.to_bits(), "t{threads} resnet eval bits");
+    }
 }
 
 #[test]

@@ -1,0 +1,118 @@
+//! Exhaustive `--model` spec failure-path suite: every [`ModelSpecError`]
+//! variant is produced by the parser with the offending spec/token in the
+//! user-facing message, the error stays *typed* through the trainer
+//! constructor, and a checkpoint restored into a different architecture
+//! is rejected with an error naming **both** specs.
+
+use ssprop::backend::{parse_model_spec, ModelSpecError};
+use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
+
+fn err(spec: &str) -> ModelSpecError {
+    parse_model_spec(spec).expect_err(&format!("{spec:?} must not parse"))
+}
+
+#[test]
+fn unknown_presets_are_typed_and_list_the_known_ones() {
+    for spec in ["resnet18", "resnet-tinyx", "simple-cnnx", "", "w8", "-w8", "simple_cnn"] {
+        let e = err(spec);
+        assert!(matches!(e, ModelSpecError::UnknownPreset { .. }), "{spec:?} -> {e:?}");
+        let shown = e.to_string();
+        assert!(shown.contains(&format!("{spec:?}")), "{spec:?} missing from {shown:?}");
+        for preset in ["simple-cnn", "vgg-tiny", "dropout-cnn", "resnet-tiny"] {
+            assert!(shown.contains(preset), "{shown:?} must list {preset}");
+        }
+    }
+}
+
+#[test]
+fn bad_param_tokens_are_typed_and_name_the_token() {
+    let cases = [
+        ("simple-cnn-q4", "q4"),       // unknown key
+        ("vgg-tiny-w", "w"),           // missing digits
+        ("vgg-tiny-d4", "d4"),         // key not valid for the preset
+        ("vgg-tiny-b2", "b2"),         // blocks belong to resnet-tiny only
+        ("resnet-tiny-p25", "p25"),    // dropout rate belongs to dropout-cnn
+        ("resnet-tiny-d3", "d3"),      // depth belongs to simple-cnn
+        ("simple-cnn-p25", "p25"),
+        ("simple-cnn-w4-w8", "w8"),    // repeated key
+        ("resnet-tiny-b1-b2", "b2"),
+        ("resnet-tiny-w8-", ""),       // empty trailing token
+        ("dropout-cnn-pxx", "pxx"),    // non-numeric digits
+    ];
+    for (spec, token) in cases {
+        let e = err(spec);
+        let ModelSpecError::BadParam { spec: s, token: t } = &e else {
+            panic!("{spec:?} -> {e:?}, want BadParam");
+        };
+        assert_eq!(s, spec);
+        assert_eq!(t, token, "{spec:?}");
+        let shown = e.to_string();
+        assert!(shown.contains(&format!("{token:?}")), "{shown:?}");
+        assert!(shown.contains(&format!("{spec:?}")), "{shown:?}");
+    }
+}
+
+#[test]
+fn out_of_range_values_are_typed_and_name_the_token() {
+    let cases = [
+        ("simple-cnn-d0", "d0"),
+        ("simple-cnn-w0", "w0"),
+        ("vgg-tiny-w0", "w0"),
+        ("dropout-cnn-p0", "p0"),
+        ("dropout-cnn-p100", "p100"),
+        ("dropout-cnn-p250", "p250"),
+        ("resnet-tiny-w0", "w0"),
+        ("resnet-tiny-b0", "b0"),
+    ];
+    for (spec, token) in cases {
+        let e = err(spec);
+        let ModelSpecError::OutOfRange { spec: s, token: t } = &e else {
+            panic!("{spec:?} -> {e:?}, want OutOfRange");
+        };
+        assert_eq!(s, spec);
+        assert_eq!(t, token, "{spec:?}");
+        let shown = e.to_string();
+        assert!(shown.contains("out of range"), "{shown:?}");
+        assert!(shown.contains(&format!("{token:?}")), "{shown:?}");
+    }
+}
+
+#[test]
+fn trainer_surfaces_the_typed_error() {
+    let mut cfg = NativeTrainConfig::quick("mnist", 1, 1);
+    cfg.model = "resnet-tiny-b0".to_string();
+    let e = NativeTrainer::new(cfg).expect_err("must reject");
+    let typed = e.downcast_ref::<ModelSpecError>().expect("typed through the trainer");
+    assert!(matches!(typed, ModelSpecError::OutOfRange { .. }), "{typed:?}");
+}
+
+#[test]
+fn checkpoint_spec_mismatch_names_both_specs() {
+    let dir = std::env::temp_dir().join("ssprop_spec_mismatch");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resnet_tiny.tstore");
+
+    let mut cfg = NativeTrainConfig::quick("mnist", 1, 2);
+    cfg.batch = 8;
+    cfg.model = "resnet-tiny-w4".to_string();
+    let mut a = NativeTrainer::new(cfg).unwrap();
+    a.run().unwrap();
+    a.save_checkpoint(&path, 1).unwrap();
+
+    // same architecture restores fine (BN running stats included)
+    let mut same_cfg = NativeTrainConfig::quick("mnist", 1, 2);
+    same_cfg.batch = 8;
+    same_cfg.model = "resnet-tiny-w4".to_string();
+    let mut same = NativeTrainer::new(same_cfg).unwrap();
+    assert_eq!(same.load_checkpoint(&path).unwrap(), 1);
+    assert_eq!(a.model.flat_params(), same.model.flat_params());
+
+    // a different spec is rejected, naming the saved AND the running spec
+    let mut other_cfg = NativeTrainConfig::quick("mnist", 1, 2);
+    other_cfg.batch = 8;
+    other_cfg.model = "vgg-tiny-w4".to_string();
+    let mut other = NativeTrainer::new(other_cfg).unwrap();
+    let msg = other.load_checkpoint(&path).expect_err("must reject").to_string();
+    assert!(msg.contains("resnet-tiny-w4-b1"), "saved spec missing: {msg}");
+    assert!(msg.contains("vgg-tiny-w4"), "running spec missing: {msg}");
+}

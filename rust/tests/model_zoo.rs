@@ -1,15 +1,17 @@
 //! Model-zoo regression suite: non-SimpleCNN presets must train end-to-end
 //! through the coordinator with the sparse backward engaged, the paper's
 //! ssProp+Dropout compatibility claim must hold (finite losses, kept
-//! channels exactly matching the schedule), and the data-parallel executor
-//! must drive any layer graph (MaxPool scatter, Dropout masks) with the
-//! same determinism contract the SimpleCNN path has.
+//! channels exactly matching the schedule), the data-parallel executor
+//! must drive any layer graph (MaxPool scatter, Dropout masks, residual
+//! Add merges, BatchNorm statistics) with the same determinism contract
+//! the SimpleCNN path has, and the native `resnet-tiny` ledger must match
+//! the paper-style analytic hand count.
 
 use ssprop::backend::{
     build_model, parse_model_spec, ExecConfig, NativeBackend, ParallelExecutor, Sequential,
 };
 use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
-use ssprop::flops::keep_channels;
+use ssprop::flops::{keep_channels, paper_resnet, tiny_resnet};
 use ssprop::schedule::{DropScheduler, Schedule};
 use ssprop::util::rng::Pcg;
 
@@ -33,8 +35,9 @@ fn expected_kept(m: &Sequential, d: f64) -> usize {
 
 #[test]
 fn zoo_presets_train_end_to_end_with_sparse_backward() {
-    // one preset with MaxPool, one with Dropout — the acceptance pair
-    for model in ["vgg-tiny-w4", "dropout-cnn-w6-p25"] {
+    // MaxPool, Dropout, and the residual/BatchNorm family — the
+    // acceptance trio
+    for model in ["vgg-tiny-w4", "dropout-cnn-w6-p25", "resnet-tiny-w4-b1"] {
         let mut cfg = NativeTrainConfig::quick("mnist", 2, 6);
         cfg.batch = 8;
         cfg.model = model.to_string();
@@ -147,6 +150,99 @@ fn maxpool_graph_is_deterministic_across_thread_counts() {
         assert_eq!(got.0.to_bits(), own.0.to_bits(), "t{threads}: eval bits");
         assert!((got.0 - want.0).abs() < 1e-3, "t{threads}: eval near serial");
     }
+}
+
+#[test]
+fn resnet_tiny_ledger_matches_paper_style_hand_count() {
+    // The native graph's self-reported inventory (`Graph::layer_set`,
+    // which is exactly what the trainer's TrainMetrics ledger consumes)
+    // vs the analytic construction — and, at w8-b2, vs paper_resnet's
+    // ResNet-18 at 1/8 width. Satellite acceptance: within 0.1%.
+    for (spec, w, b) in [("resnet-tiny-w8-b2", 8usize, 2usize), ("resnet-tiny-w4-b1", 4, 1)] {
+        let parsed = parse_model_spec(spec).unwrap();
+        let native = build_model(&parsed, 3, 32, 10, 7).unwrap().layer_set();
+        let hand = tiny_resnet(w, b, 32, 3);
+        assert_eq!(native.convs.len(), hand.convs.len(), "{spec}: conv inventory size");
+        let counted = |s: &ssprop::flops::LayerSet| s.convs.iter().filter(|c| c.counted_bn).count();
+        assert_eq!(counted(&native), counted(&hand), "{spec}: BN accounting");
+        for (bt, d) in [(128usize, 0.0f64), (128, 0.8), (16, 0.5)] {
+            let (a, h) = (native.bwd_flops_per_iter(bt, d), hand.bwd_flops_per_iter(bt, d));
+            let rel = (a - h).abs() / h;
+            assert!(rel < 1e-3, "{spec} bt{bt} d{d}: native {a} vs hand {h} (rel {rel})");
+        }
+    }
+    // chain the check through to the paper tables: w8-b2 == resnet18/8
+    let native = build_model(&parse_model_spec("resnet-tiny-w8-b2").unwrap(), 3, 32, 10, 7)
+        .unwrap()
+        .layer_set();
+    let paper = paper_resnet("resnet18", 32, 3, 0.125);
+    let rel = (native.bwd_flops_per_iter(128, 0.0) - paper.bwd_flops_per_iter(128, 0.0)).abs()
+        / paper.bwd_flops_per_iter(128, 0.0);
+    assert!(rel < 1e-3, "native vs paper_resnet: rel {rel}");
+}
+
+#[test]
+fn resnet_tiny_trains_serially_and_sharded_with_matching_selection() {
+    let be = NativeBackend::new();
+    let data: Vec<_> = (0..4).map(|i| batch(8, 300 + i)).collect();
+
+    let mut serial = build("resnet-tiny-w4-b1");
+    let mut stats_serial = Vec::new();
+    for (step, (x, y)) in data.iter().enumerate() {
+        let d = if step % 2 == 0 { 0.0 } else { 0.8 };
+        stats_serial.push(serial.train_step(&be, x, y, d, 0.05).unwrap());
+    }
+    assert!(stats_serial.iter().all(|s| s.loss.is_finite()));
+    let expected_sparse = expected_kept(&serial, 0.8);
+    assert_eq!(stats_serial[1].kept_channels, expected_sparse, "proj convs select too");
+
+    for threads in [2usize, 4] {
+        let mut m = build("resnet-tiny-w4-b1");
+        let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+        for (step, (x, y)) in data.iter().enumerate() {
+            let d = if step % 2 == 0 { 0.0 } else { 0.8 };
+            let got = exec.train_step(&mut m, &be, x, y, d, 0.05).unwrap();
+            let want = &stats_serial[step];
+            assert!(
+                (got.loss - want.loss).abs() < 1e-4,
+                "t{threads} step {step}: {} vs {}",
+                got.loss,
+                want.loss
+            );
+            assert_eq!(got.kept_channels, want.kept_channels, "t{threads} step {step}");
+        }
+        // sharded eval through the residual graph stays bitwise vs its
+        // own serial eval (running-stat BN is per-example)
+        let (x, y) = &data[0];
+        let own = m.eval_batch(&be, x, y);
+        let got = exec.eval_batch(&m, &be, x, y);
+        assert_eq!(got.0.to_bits(), own.0.to_bits(), "t{threads}: eval bits");
+    }
+}
+
+#[test]
+fn resnet_tiny_checkpoint_roundtrips_bn_running_stats() {
+    let dir = std::env::temp_dir().join("ssprop_zoo_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resnet-tiny-w4-b1.tstore");
+    let mut cfg = NativeTrainConfig::quick("mnist", 1, 2);
+    cfg.batch = 8;
+    cfg.model = "resnet-tiny-w4-b1".to_string();
+    let mut a = NativeTrainer::new(cfg.clone()).unwrap();
+    a.run().unwrap();
+    a.save_checkpoint(&path, 1).unwrap();
+
+    // the checkpoint carries the BN running statistics under stable names
+    let names: Vec<String> = a.model.state_tensors().into_iter().map(|(n, _)| n).collect();
+    for leaf in ["param['stem.bn.rm']", "param['stem.bn.rv']", "param['s1b0.bn2.w']"] {
+        assert!(names.iter().any(|n| n == leaf), "{leaf} missing from {names:?}");
+    }
+
+    let mut b = NativeTrainer::new(cfg).unwrap();
+    assert_ne!(a.model.flat_params(), b.model.flat_params(), "training moved the state");
+    assert_eq!(b.load_checkpoint(&path).unwrap(), 1);
+    assert_eq!(a.model.flat_params(), b.model.flat_params(), "params + running stats restored");
+    assert_eq!(a.evaluate(), b.evaluate(), "eval (running-stat BN) restored");
 }
 
 #[test]
