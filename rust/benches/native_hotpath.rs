@@ -17,7 +17,17 @@
 //! `native/bwd_speedup_{spec}_d80` line (serial dense step / serial sparse
 //! step at the paper's D* = 0.8 — the model-level sparse-backward saving,
 //! including through residual graphs and BatchNorm).
+//!
+//! `--json PATH` additionally serializes the run as a versioned
+//! `bench_report::BenchReport` (`BENCH_native.json` schema — see
+//! `docs/BENCHMARKS.md`): the fused/bwd conv ratios plus, when no
+//! `--model` narrows the run, an executor section for **every**
+//! `BASELINE_PRESETS` zoo preset with step times, speedup ratios, and the
+//! deterministic Eq. 6/9 FLOPs + joules ledger. `ssprop bench-check` gates
+//! that file against the committed baseline at the repo root.
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::Duration;
 
 use ssprop::backend::im2col::im2col;
@@ -25,6 +35,10 @@ use ssprop::backend::sparse::{select_channels, sparse_bwd_with_cols, SparseBwdWo
 use ssprop::backend::{
     build_model, parse_model_spec, Backend, Conv2d, Conv2dPlan, ExecConfig, NativeBackend,
     ParallelExecutor, Sequential,
+};
+use ssprop::bench_report::{
+    preset_ledger, BenchReport, PresetReport, BASELINE_PRESETS, BENCH_BATCH, BENCH_CLASSES,
+    BENCH_IMG, BENCH_IN_CH,
 };
 use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
 use ssprop::util::bench::{bench, report};
@@ -38,14 +52,22 @@ fn main() {
         .position(|a| a == "--model")
         .and_then(|i| argv.get(i + 1))
         .map(String::as_str);
+    let json_path =
+        argv.iter().position(|a| a == "--json").and_then(|i| argv.get(i + 1)).cloned();
     let (warm, iters, secs) = if smoke { (1, 3, 1) } else { (2, 20, 6) };
     let budget = Duration::from_secs(secs);
+    let mode = if smoke { "smoke" } else { "full" };
 
     // With an explicit --model, run only the data-parallel executor
     // section for that preset (CI invokes this once per zoo model).
     if let Some(spec) = model_arg {
         println!("== native backend hot path{} ==", if smoke { " (smoke)" } else { "" });
-        parallel_section(spec, warm, iters, budget);
+        let preset = parallel_section(spec, warm, iters, budget);
+        if let Some(path) = json_path {
+            let mut rep = BenchReport::new("native_hotpath", mode);
+            rep.presets.push(preset);
+            write_report(&rep, &path);
+        }
         return;
     }
 
@@ -77,50 +99,7 @@ fn main() {
         report(&r);
     }
 
-    // The tentpole comparison, two cuts:
-    //  * full layer step — unfused op calls (two im2col builds, fresh
-    //    buffers every call) vs the fused plan path (one build, workspace
-    //    reused across iterations);
-    //  * backward only — rebuild-the-cols (`conv2d_bwd_ssprop`) vs the
-    //    cached-cols workspace backward the fused path runs. At the
-    //    paper's drop rates the compacted GEMMs shrink, so the removed
-    //    patch gather dominates and this ratio is the headline saving.
-    println!("\n-- fused plan path vs unfused op calls --");
-    let pairs = [("dense", 0.0f64, true), ("d80", 0.8, true), ("d80_nodx", 0.8, false)];
-    for (label, d, need_dx) in pairs {
-        let un = bench(&format!("native/unfused_fwd_bwd_{label}"), warm, iters, budget, || {
-            std::hint::black_box(be.conv2d_fwd(&cfg, &x, &w, Some(&b)));
-            std::hint::black_box(be.conv2d_bwd_ssprop(&cfg, &x, &w, &g, d, need_dx));
-        });
-        report(&un);
-        let mut plan = Conv2dPlan::new(cfg);
-        let fu = bench(&format!("native/fused_fwd_bwd_{label}"), warm, iters, budget, || {
-            std::hint::black_box(be.conv2d_fwd_bwd(&mut plan, &x, &w, Some(&b), &g, d, need_dx));
-        });
-        report(&fu);
-        let bwd = bench(&format!("native/bwd_rebuild_cols_{label}"), warm, iters, budget, || {
-            std::hint::black_box(be.conv2d_bwd_ssprop(&cfg, &x, &w, &g, d, need_dx));
-        });
-        report(&bwd);
-        let cols = im2col(&cfg, &x);
-        let mut ws = SparseBwdWorkspace::default();
-        let cached = bench(&format!("native/bwd_cached_cols_{label}"), warm, iters, budget, || {
-            let keep = select_channels(&cfg, &g, d);
-            let out = sparse_bwd_with_cols(&cfg, &cols, &w, &g, &keep, need_dx, &mut ws);
-            std::hint::black_box(out);
-        });
-        report(&cached);
-        println!(
-            "{:<48} {:>11.2}x (unfused / fused median)",
-            format!("native/fused_speedup_{label}"),
-            un.median_ns / fu.median_ns
-        );
-        println!(
-            "{:<48} {:>11.2}x (rebuild / cached median)",
-            format!("native/bwd_speedup_{label}"),
-            bwd.median_ns / cached.median_ns
-        );
-    }
+    let conv_ratios = fused_section(&be, &cfg, &x, &w, &b, &g, warm, iters, budget);
 
     println!("\n-- raw GEMM (256x288 . 288x128) --");
     let (m, k, n) = (256, 288, 128);
@@ -142,7 +121,88 @@ fn main() {
         report(&r);
     }
 
-    parallel_section("simple-cnn-d4-w16", warm, iters, budget);
+    // A plain run benches the default preset's executor; a `--json` run
+    // covers every baseline preset so the artifact is gate-complete.
+    let specs: &[&str] =
+        if json_path.is_some() { BASELINE_PRESETS } else { &["simple-cnn-d4-w16"] };
+    let mut presets = Vec::new();
+    for spec in specs {
+        presets.push(parallel_section(spec, warm, iters, budget));
+    }
+
+    if let Some(path) = json_path {
+        let mut rep = BenchReport::new("native_hotpath", mode);
+        rep.conv_ratios = conv_ratios;
+        rep.presets = presets;
+        write_report(&rep, &path);
+    }
+}
+
+/// The tentpole comparison, two cuts:
+///  * full layer step — unfused op calls (two im2col builds, fresh
+///    buffers every call) vs the fused plan path (one build, workspace
+///    reused across iterations);
+///  * backward only — rebuild-the-cols (`conv2d_bwd_ssprop`) vs the
+///    cached-cols workspace backward the fused path runs. At the
+///    paper's drop rates the compacted GEMMs shrink, so the removed
+///    patch gather dominates and this ratio is the headline saving.
+///
+/// Returns the `fused_speedup_*` / `bwd_speedup_*` ratios keyed as the
+/// report schema's `conv_ratios`.
+#[allow(clippy::too_many_arguments)]
+fn fused_section(
+    be: &NativeBackend,
+    cfg: &Conv2d,
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    g: &[f32],
+    warm: usize,
+    iters: usize,
+    budget: Duration,
+) -> BTreeMap<String, f64> {
+    println!("\n-- fused plan path vs unfused op calls --");
+    let mut ratios = BTreeMap::new();
+    let pairs = [("dense", 0.0f64, true), ("d80", 0.8, true), ("d80_nodx", 0.8, false)];
+    for (label, d, need_dx) in pairs {
+        let un = bench(&format!("native/unfused_fwd_bwd_{label}"), warm, iters, budget, || {
+            std::hint::black_box(be.conv2d_fwd(cfg, x, w, Some(b)));
+            std::hint::black_box(be.conv2d_bwd_ssprop(cfg, x, w, g, d, need_dx));
+        });
+        report(&un);
+        let mut plan = Conv2dPlan::new(*cfg);
+        let fu = bench(&format!("native/fused_fwd_bwd_{label}"), warm, iters, budget, || {
+            std::hint::black_box(be.conv2d_fwd_bwd(&mut plan, x, w, Some(b), g, d, need_dx));
+        });
+        report(&fu);
+        let bwd = bench(&format!("native/bwd_rebuild_cols_{label}"), warm, iters, budget, || {
+            std::hint::black_box(be.conv2d_bwd_ssprop(cfg, x, w, g, d, need_dx));
+        });
+        report(&bwd);
+        let cols = im2col(cfg, x);
+        let mut ws = SparseBwdWorkspace::default();
+        let cached = bench(&format!("native/bwd_cached_cols_{label}"), warm, iters, budget, || {
+            let keep = select_channels(cfg, g, d);
+            let out = sparse_bwd_with_cols(cfg, &cols, w, g, &keep, need_dx, &mut ws);
+            std::hint::black_box(out);
+        });
+        report(&cached);
+        let fused_speedup = un.median_ns / fu.median_ns;
+        let bwd_speedup = bwd.median_ns / cached.median_ns;
+        println!(
+            "{:<48} {:>11.2}x (unfused / fused median)",
+            format!("native/fused_speedup_{label}"),
+            fused_speedup
+        );
+        println!(
+            "{:<48} {:>11.2}x (rebuild / cached median)",
+            format!("native/bwd_speedup_{label}"),
+            bwd_speedup
+        );
+        ratios.insert(format!("fused_speedup_{label}"), fused_speedup);
+        ratios.insert(format!("bwd_speedup_{label}"), bwd_speedup);
+    }
+    ratios
 }
 
 /// Data-parallel executor vs the serial step for one zoo preset on a
@@ -156,17 +216,24 @@ fn main() {
 /// saving at the paper's D* = 0.8: serial dense step / serial d80 step —
 /// tracked per preset so the residual-graph saving is visible next to the
 /// plain conv stacks.
-fn parallel_section(spec: &str, warm: usize, iters: usize, budget: Duration) {
+///
+/// Returns the section as a `PresetReport` (timings, ratios, and the
+/// deterministic FLOPs/joules ledger) for `--json` serialization.
+fn parallel_section(spec: &str, warm: usize, iters: usize, budget: Duration) -> PresetReport {
     let be = NativeBackend::new();
     let parsed = parse_model_spec(spec).expect("--model spec");
     let slug = parsed.canonical();
-    let build = || -> Sequential { build_model(&parsed, 3, 32, 10, 11).expect("zoo build") };
+    let build = || -> Sequential {
+        build_model(&parsed, BENCH_IN_CH, BENCH_IMG, BENCH_CLASSES, 11).expect("zoo build")
+    };
     println!("\n-- data-parallel executor ({slug}, 3x32x32, bt 32) --");
-    let n_in = 3 * 32 * 32;
-    let bt = 32;
+    let n_in = BENCH_IN_CH * BENCH_IMG * BENCH_IMG;
+    let bt = BENCH_BATCH;
     let mut prng = Pcg::new(17, 9);
     let px: Vec<f32> = (0..bt * n_in).map(|_| prng.normal()).collect();
-    let py: Vec<i32> = (0..bt).map(|i| (i % 10) as i32).collect();
+    let py: Vec<i32> = (0..bt).map(|i| (i % BENCH_CLASSES) as i32).collect();
+    let mut timings_ns = BTreeMap::new();
+    let mut ratios = BTreeMap::new();
     let mut serial_medians = [0f64; 2];
     for (idx, (label, d)) in [("dense", 0.0f64), ("d80", 0.8)].into_iter().enumerate() {
         let mut serial = build();
@@ -176,6 +243,7 @@ fn parallel_section(spec: &str, warm: usize, iters: usize, budget: Duration) {
         });
         report(&base);
         serial_medians[idx] = base.median_ns;
+        timings_ns.insert(format!("serial_step_{label}_ns"), base.median_ns);
         for threads in [2usize, 4] {
             let mut model = build();
             let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
@@ -184,16 +252,28 @@ fn parallel_section(spec: &str, warm: usize, iters: usize, budget: Duration) {
                 exec.train_step(&mut model, &be, &px, &py, d, 0.01).unwrap();
             });
             report(&r);
+            let speedup = base.median_ns / r.median_ns;
             println!(
                 "{:<48} {:>11.2}x (serial / t{threads} median)",
                 format!("native/parallel_speedup_{slug}_{label}_t{threads}"),
-                base.median_ns / r.median_ns
+                speedup
             );
+            timings_ns.insert(format!("parallel_step_{label}_t{threads}_ns"), r.median_ns);
+            ratios.insert(format!("parallel_speedup_{label}_t{threads}"), speedup);
         }
     }
+    let model_bwd_speedup = serial_medians[0] / serial_medians[1];
     println!(
         "{:<48} {:>11.2}x (serial dense / serial d80 median)",
         format!("native/bwd_speedup_{slug}_d80"),
-        serial_medians[0] / serial_medians[1]
+        model_bwd_speedup
     );
+    ratios.insert("bwd_speedup_d80".to_string(), model_bwd_speedup);
+    let (flops, energy) = preset_ledger(&slug, bt).expect("preset ledger");
+    PresetReport { spec: slug, timings_ns, ratios, flops, energy }
+}
+
+fn write_report(rep: &BenchReport, path: &str) {
+    rep.save(Path::new(path)).expect("write bench report");
+    println!("\nwrote {path}");
 }

@@ -1,0 +1,720 @@
+//! Committed bench artifacts + the regression gate (`BENCH_*.json`).
+//!
+//! The paper's whole pitch is making the energy cost of back-propagation
+//! *visible*; this module makes the repo's own perf/energy numbers visible
+//! the same way. `native_hotpath --json PATH` serializes one benchmark run
+//! as a versioned, machine-readable [`BenchReport`] — per-preset step
+//! times, speedup ratios, the Eq. 6/9 FLOPs ledger, and
+//! [`crate::energy`] joules — and `ssprop bench-check` diffs a fresh run
+//! against the committed baseline (`BENCH_native.json` at the repo root)
+//! with per-metric tolerances, exiting nonzero on regression. The full
+//! story (schema, tolerance policy, CI wiring) lives in
+//! `docs/BENCHMARKS.md`.
+//!
+//! Metric classes, per the tolerance policy:
+//!
+//! * **timings** (`*_ns`) — machine-dependent; recorded for the
+//!   trajectory, never gated.
+//! * **ratios** (`*_speedup_*`) — noisy but machine-comparable; gated
+//!   inside a wide multiplicative band ([`Tolerance::ratio_band`]).
+//! * **ledger values** (FLOPs, joules, batch) — analytic and
+//!   deterministic; gated exactly ([`Tolerance::exact_rel`]).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::backend::{build_model, parse_model_spec};
+use crate::energy::{estimate, RTX_A5000};
+use crate::experiments::report::Table;
+use crate::util::bench::fmt_ns;
+use crate::util::json::{num, obj, s, Json};
+
+/// Version stamped into every report; readers reject other versions with
+/// the typed [`ReportError::SchemaVersion`].
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// The ssProp drop rate the ledger columns are evaluated at (the paper's
+/// D* = 0.8, Eq. 9).
+pub const BENCH_DROP: f64 = 0.8;
+
+/// Input channels of the bench harness's synthetic batch (CIFAR-sized).
+pub const BENCH_IN_CH: usize = 3;
+/// Image side length of the bench harness's synthetic batch.
+pub const BENCH_IMG: usize = 32;
+/// Classifier outputs of the bench harness's models.
+pub const BENCH_CLASSES: usize = 10;
+/// Batch size of the bench harness's executor sections.
+pub const BENCH_BATCH: usize = 32;
+
+/// Zoo presets the committed `BENCH_native.json` baseline tracks (and the
+/// `--json` bench run measures), canonical spec form.
+pub const BASELINE_PRESETS: &[&str] = &["simple-cnn-d4-w16", "vgg-tiny-w8", "resnet-tiny-w8-b1"];
+
+/// Typed error for reading/validating a bench report.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReportError {
+    /// Reading the file failed.
+    Io {
+        /// Path that failed to read or write.
+        path: String,
+        /// The underlying I/O error, rendered.
+        error: String,
+    },
+    /// The file is not a valid JSON document.
+    Parse(String),
+    /// The document's `schema_version` is not the one this build reads.
+    SchemaVersion {
+        /// Version found in the document.
+        found: u64,
+        /// Version this build expects ([`SCHEMA_VERSION`]).
+        expected: u64,
+    },
+    /// The document parses as JSON but violates the report schema.
+    Malformed(String),
+}
+
+impl fmt::Display for ReportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReportError::Io { path, error } => write!(f, "bench report {path}: {error}"),
+            ReportError::Parse(e) => write!(f, "bench report is not valid JSON: {e}"),
+            ReportError::SchemaVersion { found, expected } => {
+                write!(f, "bench report schema_version {found} (this build reads {expected})")
+            }
+            ReportError::Malformed(e) => write!(f, "malformed bench report: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ReportError {}
+
+/// Eq. 6/9 backward-FLOPs ledger for one preset at the bench batch size —
+/// analytic (from [`crate::flops::LayerSet`]), so byte-deterministic
+/// across machines and gated exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlopsLedger {
+    /// Dense backward FLOPs per iteration (Eq. 6, drop rate 0).
+    pub bwd_dense: f64,
+    /// ssProp backward FLOPs per iteration at [`BENCH_DROP`] (Eq. 9).
+    pub bwd_d80: f64,
+    /// Fraction saved at [`BENCH_DROP`]: `1 - bwd_d80 / bwd_dense`.
+    pub saving_frac: f64,
+}
+
+/// Per-iteration energy ledger for one preset on the paper's testbed GPU
+/// ([`RTX_A5000`]) — joules via [`crate::energy::EnergyReport::joules`],
+/// deterministic and gated exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyLedger {
+    /// Device profile name the joules are computed against.
+    pub device: String,
+    /// Joules per dense backward iteration.
+    pub dense_j: f64,
+    /// Joules per ssProp backward iteration at [`BENCH_DROP`].
+    pub d80_j: f64,
+    /// Joules saved per iteration (`estimate(dense − d80)`).
+    pub saved_j: f64,
+}
+
+/// One zoo preset's measurements + ledger inside a [`BenchReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PresetReport {
+    /// Canonical model spec (`backend::zoo`), e.g. `resnet-tiny-w8-b1`.
+    pub spec: String,
+    /// Median step times in nanoseconds (`serial_step_{dense,d80}_ns`,
+    /// `parallel_step_{dense,d80}_t{2,4}_ns`). Machine-dependent — never
+    /// gated, recorded for the trajectory table.
+    pub timings_ns: BTreeMap<String, f64>,
+    /// Speedup ratios (`parallel_speedup_{dense,d80}_t{2,4}`,
+    /// `bwd_speedup_d80`). Gated within [`Tolerance::ratio_band`].
+    pub ratios: BTreeMap<String, f64>,
+    /// Eq. 6/9 FLOPs ledger (exact).
+    pub flops: FlopsLedger,
+    /// Joules ledger (exact).
+    pub energy: EnergyLedger,
+}
+
+/// One `native_hotpath` run, serializable to/from `BENCH_*.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    /// Schema version ([`SCHEMA_VERSION`]).
+    pub schema_version: u64,
+    /// Producing benchmark (`native_hotpath`).
+    pub bench: String,
+    /// `smoke` (CI-sized) or `full`.
+    pub mode: String,
+    /// Executor-section batch size ([`BENCH_BATCH`]); gated exactly.
+    pub batch: usize,
+    /// Conv-microbench ratios from the fixed-geometry fused section
+    /// (`fused_speedup_*`, `bwd_speedup_*`); gated within the ratio band.
+    pub conv_ratios: BTreeMap<String, f64>,
+    /// Per-preset sections, run order.
+    pub presets: Vec<PresetReport>,
+}
+
+/// Compute the deterministic ledger halves of a [`PresetReport`] for
+/// `spec` at batch size `bt`, on the bench harness geometry
+/// ([`BENCH_IN_CH`]×[`BENCH_IMG`]², [`BENCH_CLASSES`] classes): Eq. 6/9
+/// FLOPs from the live graph's [`crate::flops::LayerSet`] and joules on
+/// [`RTX_A5000`]. `bench-check` relies on these being bit-reproducible.
+pub fn preset_ledger(spec: &str, bt: usize) -> Result<(FlopsLedger, EnergyLedger)> {
+    let parsed = parse_model_spec(spec)?;
+    let set = build_model(&parsed, BENCH_IN_CH, BENCH_IMG, BENCH_CLASSES, 0)?.layer_set();
+    let dense = set.bwd_flops_per_iter(bt, 0.0);
+    let d80 = set.bwd_flops_per_iter(bt, BENCH_DROP);
+    let flops = FlopsLedger { bwd_dense: dense, bwd_d80: d80, saving_frac: 1.0 - d80 / dense };
+    let energy = EnergyLedger {
+        device: RTX_A5000.name.to_string(),
+        dense_j: estimate(dense, &RTX_A5000).joules(),
+        d80_j: estimate(d80, &RTX_A5000).joules(),
+        saved_j: estimate(dense - d80, &RTX_A5000).joules(),
+    };
+    Ok((flops, energy))
+}
+
+/// Two-space-indented writer (scalars reuse the compact `Json` writer, so
+/// numbers format identically to the wire form).
+fn pretty(j: &Json, pad: usize, out: &mut String) {
+    match j {
+        Json::Arr(a) if !a.is_empty() => {
+            out.push_str("[\n");
+            for (i, v) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&" ".repeat(pad + 2));
+                pretty(v, pad + 2, out);
+            }
+            out.push('\n');
+            out.push_str(&" ".repeat(pad));
+            out.push(']');
+        }
+        Json::Obj(m) if !m.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, v)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                out.push_str(&" ".repeat(pad + 2));
+                out.push_str(&Json::Str(k.clone()).to_string());
+                out.push_str(": ");
+                pretty(v, pad + 2, out);
+            }
+            out.push('\n');
+            out.push_str(&" ".repeat(pad));
+            out.push('}');
+        }
+        scalar => out.push_str(&scalar.to_string()),
+    }
+}
+
+fn map_json(m: &BTreeMap<String, f64>) -> Json {
+    Json::Obj(m.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect())
+}
+
+fn map_from_json(j: &Json, key: &str) -> Result<BTreeMap<String, f64>, ReportError> {
+    let o = j
+        .get(key)
+        .and_then(Json::as_obj)
+        .ok_or_else(|| ReportError::Malformed(format!("missing object field {key:?}")))?;
+    let mut out = BTreeMap::new();
+    for (k, v) in o {
+        let n = v
+            .as_f64()
+            .ok_or_else(|| ReportError::Malformed(format!("non-numeric metric {key}.{k}")))?;
+        out.insert(k.clone(), n);
+    }
+    Ok(out)
+}
+
+fn f64_of(j: &Json, key: &str) -> Result<f64, ReportError> {
+    j.f64_field(key).map_err(ReportError::Malformed)
+}
+
+fn str_of(j: &Json, key: &str) -> Result<String, ReportError> {
+    j.str_field(key).map(str::to_string).map_err(ReportError::Malformed)
+}
+
+impl FlopsLedger {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("bwd_d80", num(self.bwd_d80)),
+            ("bwd_dense", num(self.bwd_dense)),
+            ("saving_frac", num(self.saving_frac)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<FlopsLedger, ReportError> {
+        Ok(FlopsLedger {
+            bwd_dense: f64_of(j, "bwd_dense")?,
+            bwd_d80: f64_of(j, "bwd_d80")?,
+            saving_frac: f64_of(j, "saving_frac")?,
+        })
+    }
+}
+
+impl EnergyLedger {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("d80_j", num(self.d80_j)),
+            ("dense_j", num(self.dense_j)),
+            ("device", s(&self.device)),
+            ("saved_j", num(self.saved_j)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<EnergyLedger, ReportError> {
+        Ok(EnergyLedger {
+            device: str_of(j, "device")?,
+            dense_j: f64_of(j, "dense_j")?,
+            d80_j: f64_of(j, "d80_j")?,
+            saved_j: f64_of(j, "saved_j")?,
+        })
+    }
+}
+
+impl PresetReport {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("energy", self.energy.to_json()),
+            ("flops", self.flops.to_json()),
+            ("ratios", map_json(&self.ratios)),
+            ("spec", s(&self.spec)),
+            ("timings_ns", map_json(&self.timings_ns)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<PresetReport, ReportError> {
+        let flops = j
+            .get("flops")
+            .ok_or_else(|| ReportError::Malformed("preset missing \"flops\"".into()))?;
+        let energy = j
+            .get("energy")
+            .ok_or_else(|| ReportError::Malformed("preset missing \"energy\"".into()))?;
+        Ok(PresetReport {
+            spec: str_of(j, "spec")?,
+            timings_ns: map_from_json(j, "timings_ns")?,
+            ratios: map_from_json(j, "ratios")?,
+            flops: FlopsLedger::from_json(flops)?,
+            energy: EnergyLedger::from_json(energy)?,
+        })
+    }
+}
+
+impl BenchReport {
+    /// An empty report shell for `bench` in `mode` at the harness batch
+    /// size; the producer fills `conv_ratios`/`presets` as sections run.
+    pub fn new(bench: &str, mode: &str) -> BenchReport {
+        BenchReport {
+            schema_version: SCHEMA_VERSION,
+            bench: bench.to_string(),
+            mode: mode.to_string(),
+            batch: BENCH_BATCH,
+            conv_ratios: BTreeMap::new(),
+            presets: Vec::new(),
+        }
+    }
+
+    /// Serialize to the committed JSON shape (key-sorted objects).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("batch", num(self.batch as f64)),
+            ("bench", s(&self.bench)),
+            ("conv_ratios", map_json(&self.conv_ratios)),
+            ("mode", s(&self.mode)),
+            ("presets", Json::Arr(self.presets.iter().map(PresetReport::to_json).collect())),
+            ("schema_version", num(self.schema_version as f64)),
+        ])
+    }
+
+    /// Parse a report document, rejecting other schema versions with the
+    /// typed [`ReportError::SchemaVersion`].
+    pub fn parse(text: &str) -> Result<BenchReport, ReportError> {
+        let j = Json::parse(text).map_err(ReportError::Parse)?;
+        BenchReport::from_json(&j)
+    }
+
+    /// Build a report from parsed JSON (see [`BenchReport::parse`]).
+    pub fn from_json(j: &Json) -> Result<BenchReport, ReportError> {
+        let found = j
+            .get("schema_version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| ReportError::Malformed("missing \"schema_version\"".into()))?
+            as u64;
+        if found != SCHEMA_VERSION {
+            return Err(ReportError::SchemaVersion { found, expected: SCHEMA_VERSION });
+        }
+        let presets_json = j.arr_field("presets").map_err(ReportError::Malformed)?;
+        let presets =
+            presets_json.iter().map(PresetReport::from_json).collect::<Result<Vec<_>, _>>()?;
+        Ok(BenchReport {
+            schema_version: found,
+            bench: str_of(j, "bench")?,
+            mode: str_of(j, "mode")?,
+            batch: j.usize_field("batch").map_err(ReportError::Malformed)?,
+            conv_ratios: map_from_json(j, "conv_ratios")?,
+            presets,
+        })
+    }
+
+    /// Load a `BENCH_*.json` file.
+    pub fn load(path: &Path) -> Result<BenchReport, ReportError> {
+        let text = std::fs::read_to_string(path).map_err(|e| ReportError::Io {
+            path: path.display().to_string(),
+            error: e.to_string(),
+        })?;
+        BenchReport::parse(&text)
+    }
+
+    /// The report as indented, key-sorted JSON (the committed-baseline
+    /// format — reviewable diffs, stable across regeneration).
+    pub fn to_pretty_string(&self) -> String {
+        let mut out = String::new();
+        pretty(&self.to_json(), 0, &mut out);
+        out.push('\n');
+        out
+    }
+
+    /// Write the report to `path` (parent directories created) in the
+    /// [`BenchReport::to_pretty_string`] format.
+    pub fn save(&self, path: &Path) -> Result<(), ReportError> {
+        let io = |e: std::io::Error| ReportError::Io {
+            path: path.display().to_string(),
+            error: e.to_string(),
+        };
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(io)?;
+            }
+        }
+        std::fs::write(path, self.to_pretty_string()).map_err(io)
+    }
+
+    /// The preset section for `spec`, if recorded.
+    pub fn preset(&self, spec: &str) -> Option<&PresetReport> {
+        self.presets.iter().find(|p| p.spec == spec)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the regression gate
+// ---------------------------------------------------------------------------
+
+/// Per-class tolerances the gate applies (`docs/BENCHMARKS.md` policy).
+#[derive(Debug, Clone, Copy)]
+pub struct Tolerance {
+    /// Multiplicative band for ratio metrics: a fresh ratio must land in
+    /// `[baseline / band, baseline × band]`. Wide by design — smoke runs
+    /// on shared CI runners are noisy; the gate catches collapses, not
+    /// jitter.
+    pub ratio_band: f64,
+    /// Relative tolerance for deterministic ledger values (effectively
+    /// exact; the slack only absorbs decimal round-tripping).
+    pub exact_rel: f64,
+}
+
+impl Default for Tolerance {
+    fn default() -> Self {
+        Tolerance { ratio_band: 8.0, exact_rel: 1e-12 }
+    }
+}
+
+/// How a metric is compared (and displayed) by the gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricClass {
+    /// Machine-dependent timing — informational, never fails the gate.
+    Timing,
+    /// Speedup ratio — wide multiplicative band.
+    Ratio,
+    /// Deterministic ledger value — exact.
+    Exact,
+}
+
+impl fmt::Display for MetricClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            MetricClass::Timing => "timing",
+            MetricClass::Ratio => "ratio",
+            MetricClass::Exact => "exact",
+        })
+    }
+}
+
+/// One compared metric: baseline vs fresh value and the verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diff {
+    /// Dotted metric path, e.g. `resnet-tiny-w8-b1.ratios.bwd_speedup_d80`.
+    pub metric: String,
+    /// Comparison class applied.
+    pub class: MetricClass,
+    /// Value in the baseline report.
+    pub baseline: f64,
+    /// Value in the fresh report.
+    pub fresh: f64,
+    /// Whether the metric is within tolerance.
+    pub ok: bool,
+}
+
+/// Outcome of gating a fresh report against a baseline.
+#[derive(Debug, Clone, Default)]
+pub struct GateResult {
+    /// Every compared metric (timings included, informational).
+    pub diffs: Vec<Diff>,
+    /// Structural failures: presets or metrics the fresh report lacks,
+    /// device mismatches.
+    pub problems: Vec<String>,
+}
+
+impl GateResult {
+    /// True when no structural problems and every gated metric passed.
+    pub fn passed(&self) -> bool {
+        self.problems.is_empty() && self.diffs.iter().all(|d| d.ok)
+    }
+
+    /// Human-readable failure lines (empty when [`GateResult::passed`]).
+    pub fn failures(&self) -> Vec<String> {
+        let mut out = self.problems.clone();
+        for d in self.diffs.iter().filter(|d| !d.ok) {
+            out.push(format!(
+                "{} ({}): baseline {} vs fresh {}",
+                d.metric, d.class, d.baseline, d.fresh
+            ));
+        }
+        out
+    }
+}
+
+fn ratio_ok(baseline: f64, fresh: f64, band: f64) -> bool {
+    baseline.is_finite()
+        && fresh.is_finite()
+        && baseline > 0.0
+        && fresh > 0.0
+        && fresh <= baseline * band
+        && fresh >= baseline / band
+}
+
+fn exact_ok(baseline: f64, fresh: f64, rel: f64) -> bool {
+    let scale = baseline.abs().max(fresh.abs()).max(1.0);
+    (fresh - baseline).abs() <= rel * scale
+}
+
+fn diff_maps(
+    out: &mut GateResult,
+    prefix: &str,
+    class: MetricClass,
+    baseline: &BTreeMap<String, f64>,
+    fresh: &BTreeMap<String, f64>,
+    tol: &Tolerance,
+) {
+    for (k, &b) in baseline {
+        let metric = format!("{prefix}.{k}");
+        match fresh.get(k) {
+            None if class == MetricClass::Timing => {} // informational anyway
+            None => out.problems.push(format!("{metric}: missing from fresh report")),
+            Some(&f) => {
+                let ok = match class {
+                    MetricClass::Timing => true,
+                    MetricClass::Ratio => ratio_ok(b, f, tol.ratio_band),
+                    MetricClass::Exact => exact_ok(b, f, tol.exact_rel),
+                };
+                out.diffs.push(Diff { metric, class, baseline: b, fresh: f, ok });
+            }
+        }
+    }
+}
+
+/// Gate `fresh` against `baseline`: every baseline metric is looked up in
+/// the fresh report and compared per its class. Extra metrics/presets in
+/// the fresh report are ignored (forward-compatible); metrics *missing*
+/// from it are structural failures.
+pub fn gate(baseline: &BenchReport, fresh: &BenchReport, tol: &Tolerance) -> GateResult {
+    let mut out = GateResult::default();
+    out.diffs.push(Diff {
+        metric: "batch".into(),
+        class: MetricClass::Exact,
+        baseline: baseline.batch as f64,
+        fresh: fresh.batch as f64,
+        ok: baseline.batch == fresh.batch,
+    });
+    diff_maps(
+        &mut out,
+        "conv_ratios",
+        MetricClass::Ratio,
+        &baseline.conv_ratios,
+        &fresh.conv_ratios,
+        tol,
+    );
+    for bp in &baseline.presets {
+        let Some(fp) = fresh.preset(&bp.spec) else {
+            out.problems.push(format!("preset {:?}: missing from fresh report", bp.spec));
+            continue;
+        };
+        let p = &bp.spec;
+        let timings = format!("{p}.timings_ns");
+        diff_maps(&mut out, &timings, MetricClass::Timing, &bp.timings_ns, &fp.timings_ns, tol);
+        let ratios = format!("{p}.ratios");
+        diff_maps(&mut out, &ratios, MetricClass::Ratio, &bp.ratios, &fp.ratios, tol);
+        if bp.energy.device != fp.energy.device {
+            out.problems.push(format!(
+                "{p}.energy.device: baseline {:?} vs fresh {:?}",
+                bp.energy.device, fp.energy.device
+            ));
+        }
+        let exact = [
+            ("flops.bwd_dense", bp.flops.bwd_dense, fp.flops.bwd_dense),
+            ("flops.bwd_d80", bp.flops.bwd_d80, fp.flops.bwd_d80),
+            ("flops.saving_frac", bp.flops.saving_frac, fp.flops.saving_frac),
+            ("energy.dense_j", bp.energy.dense_j, fp.energy.dense_j),
+            ("energy.d80_j", bp.energy.d80_j, fp.energy.d80_j),
+            ("energy.saved_j", bp.energy.saved_j, fp.energy.saved_j),
+        ];
+        for (name, b, f) in exact {
+            out.diffs.push(Diff {
+                metric: format!("{p}.{name}"),
+                class: MetricClass::Exact,
+                baseline: b,
+                fresh: f,
+                ok: exact_ok(b, f, tol.exact_rel),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// trajectory
+// ---------------------------------------------------------------------------
+
+/// Render labelled reports (oldest first) as a perf/energy trajectory
+/// table: one row per (report, preset) with the step times, the best
+/// parallel speedup, and the ledger columns.
+pub fn trajectory(entries: &[(String, BenchReport)]) -> Table {
+    let headers =
+        ["report", "preset", "serial dense", "serial d80", "par d80 t4", "GFLOPs", "saved J"];
+    let mut t = Table::new("Perf/energy trajectory", &headers);
+    for (label, rep) in entries {
+        for p in &rep.presets {
+            let timing =
+                |k: &str| p.timings_ns.get(k).map(|&n| fmt_ns(n)).unwrap_or_else(|| "-".into());
+            let ratio = |k: &str| {
+                p.ratios.get(k).map(|r| format!("{r:.2}x")).unwrap_or_else(|| "-".into())
+            };
+            t.row(vec![
+                label.clone(),
+                p.spec.clone(),
+                timing("serial_step_dense_ns"),
+                timing("serial_step_d80_ns"),
+                ratio("parallel_speedup_d80_t4"),
+                format!("{:.3}", p.flops.bwd_dense / 1e9),
+                format!("{:.6}", p.energy.saved_j),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_preset(spec: &str) -> PresetReport {
+        let (flops, energy) = preset_ledger(spec, BENCH_BATCH).unwrap();
+        let mut timings_ns = BTreeMap::new();
+        timings_ns.insert("serial_step_dense_ns".into(), 5e6);
+        timings_ns.insert("serial_step_d80_ns".into(), 3e6);
+        let mut ratios = BTreeMap::new();
+        ratios.insert("bwd_speedup_d80".into(), 5e6 / 3e6);
+        ratios.insert("parallel_speedup_dense_t2".into(), 1.5);
+        PresetReport { spec: spec.into(), timings_ns, ratios, flops, energy }
+    }
+
+    fn sample_report() -> BenchReport {
+        let mut r = BenchReport::new("native_hotpath", "smoke");
+        r.conv_ratios.insert("fused_speedup_dense".into(), 1.5);
+        r.presets.push(sample_preset("simple-cnn-d4-w16"));
+        r
+    }
+
+    #[test]
+    fn ledger_is_deterministic_and_consistent() {
+        let (f1, e1) = preset_ledger("vgg-tiny-w8", 32).unwrap();
+        let (f2, e2) = preset_ledger("vgg-tiny", 32).unwrap(); // canonicalizes
+        assert_eq!(f1, f2);
+        assert_eq!(e1, e2);
+        assert!(f1.bwd_d80 < f1.bwd_dense);
+        assert!((f1.saving_frac - (1.0 - f1.bwd_d80 / f1.bwd_dense)).abs() == 0.0);
+        // joules ledger is the estimate() of the same FLOPs
+        assert_eq!(e1.dense_j, estimate(f1.bwd_dense, &RTX_A5000).joules());
+        assert_eq!(e1.saved_j, estimate(f1.bwd_dense - f1.bwd_d80, &RTX_A5000).joules());
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let r = sample_report();
+        let text = r.to_json().to_string();
+        assert_eq!(BenchReport::parse(&text).unwrap(), r);
+        // the committed-baseline pretty form parses to the same report
+        let pretty = r.to_pretty_string();
+        assert!(pretty.ends_with("}\n"));
+        assert_eq!(BenchReport::parse(&pretty).unwrap(), r);
+    }
+
+    #[test]
+    fn gate_passes_identical_and_fails_perturbed() {
+        let base = sample_report();
+        assert!(gate(&base, &base, &Tolerance::default()).passed());
+
+        // timings may drift arbitrarily
+        let mut timing_drift = base.clone();
+        *timing_drift.presets[0].timings_ns.get_mut("serial_step_dense_ns").unwrap() *= 40.0;
+        assert!(gate(&base, &timing_drift, &Tolerance::default()).passed());
+
+        // a collapsed ratio fails
+        let mut slow = base.clone();
+        *slow.presets[0].ratios.get_mut("parallel_speedup_dense_t2").unwrap() = 0.01;
+        let res = gate(&base, &slow, &Tolerance::default());
+        assert!(!res.passed());
+        let fails = res.failures();
+        assert!(fails.iter().any(|f| f.contains("parallel_speedup_dense_t2")), "{fails:?}");
+
+        // a changed deterministic ledger value fails
+        let mut drift = base.clone();
+        drift.presets[0].flops.bwd_dense += 1.0;
+        assert!(!gate(&base, &drift, &Tolerance::default()).passed());
+    }
+
+    #[test]
+    fn gate_flags_missing_presets_and_metrics() {
+        let base = sample_report();
+        let mut empty = base.clone();
+        empty.presets.clear();
+        let res = gate(&base, &empty, &Tolerance::default());
+        assert!(!res.passed());
+        assert!(res.problems[0].contains("simple-cnn-d4-w16"));
+
+        let mut no_ratio = base.clone();
+        no_ratio.conv_ratios.clear();
+        assert!(!gate(&base, &no_ratio, &Tolerance::default()).passed());
+    }
+
+    #[test]
+    fn schema_version_mismatch_is_typed() {
+        let mut j = sample_report().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema_version".into(), Json::Num(99.0));
+        }
+        let err = BenchReport::parse(&j.to_string()).unwrap_err();
+        assert_eq!(err, ReportError::SchemaVersion { found: 99, expected: SCHEMA_VERSION });
+    }
+
+    #[test]
+    fn trajectory_renders_a_row_per_preset() {
+        let r = sample_report();
+        let t = trajectory(&[("PR6".into(), r.clone()), ("PR7".into(), r)]);
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.render().contains("simple-cnn-d4-w16"));
+    }
+}

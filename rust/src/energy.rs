@@ -7,15 +7,30 @@
 //! during hyperparameter search (Fig. 4). `rnd_phase_savings` models that.
 
 /// Hardware profile for converting FLOPs to time and energy.
+///
+/// The model is deliberately simple — sustained throughput is
+/// `peak_flops × utilization` (FLOP/s) and power draw is a constant
+/// `watts` at load — because the paper's claim is *relative* (fraction of
+/// backward compute removed), not an absolute power measurement.
+///
+/// # Examples
+///
+/// ```
+/// use ssprop::energy::{estimate, DeviceProfile};
+/// // 1 TFLOP/s peak at 50% sustained utilization → 5e11 FLOPs is one second
+/// let dev = DeviceProfile { name: "toy", peak_flops: 1e12, utilization: 0.5, watts: 100.0 };
+/// assert_eq!(estimate(5e11, &dev).seconds, 1.0);
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct DeviceProfile {
     /// Human-readable device name.
     pub name: &'static str,
-    /// Peak f32 throughput in FLOP/s.
+    /// Peak f32 throughput, FLOP/s.
     pub peak_flops: f64,
-    /// Sustained fraction of peak achieved on conv workloads.
+    /// Sustained fraction of peak achieved on conv workloads (0..=1,
+    /// dimensionless).
     pub utilization: f64,
-    /// Board power draw at load, watts.
+    /// Board power draw at load, watts (J/s).
     pub watts: f64,
 }
 
@@ -48,19 +63,59 @@ pub const CPU_TESTBED: DeviceProfile = DeviceProfile {
 pub const GRID_GCO2_PER_KWH: f64 = 390.0;
 
 /// FLOPs converted to device-time, energy and carbon on one device.
+///
+/// Produced by [`estimate`]; every field is a pure function of the input
+/// FLOPs and the [`DeviceProfile`], so reports are deterministic and safe
+/// to commit as baseline artifacts (`BENCH_native.json`, gated by
+/// `ssprop bench-check`). All fields scale linearly with `flops`.
+///
+/// # Examples
+///
+/// ```
+/// use ssprop::energy::{estimate, RTX_A5000};
+/// // one sustained device-second on the paper's testbed GPU
+/// let r = estimate(RTX_A5000.peak_flops * RTX_A5000.utilization, &RTX_A5000);
+/// assert!((r.seconds - 1.0).abs() < 1e-12);
+/// assert!((r.joules() - RTX_A5000.watts).abs() < 1e-9); // 230 W × 1 s
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EnergyReport {
     /// The FLOPs this report accounts for.
     pub flops: f64,
-    /// Device-seconds at sustained throughput.
+    /// Device-seconds at sustained throughput
+    /// (`flops / (peak_flops × utilization)`).
     pub seconds: f64,
-    /// Energy at the device's load power, kWh.
+    /// Energy at the device's load power, kWh (`seconds × watts / 3.6e6`).
     pub kwh: f64,
     /// Emissions at [`GRID_GCO2_PER_KWH`], grams CO₂-equivalent.
     pub gco2e: f64,
 }
 
+impl EnergyReport {
+    /// The energy in joules (`kwh × 3.6e6`) — the per-iteration unit the
+    /// committed bench ledger records, where kWh round to zero.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use ssprop::energy::{estimate, RTX_A5000};
+    /// let r = estimate(1e12, &RTX_A5000);
+    /// assert_eq!(r.joules(), r.kwh * 3.6e6);
+    /// ```
+    pub fn joules(&self) -> f64 {
+        self.kwh * 3.6e6
+    }
+}
+
 /// Convert `flops` into time/energy/carbon on device `dev`.
+///
+/// # Examples
+///
+/// ```
+/// use ssprop::energy::{estimate, RTX_A5000, TPU_CORE};
+/// // the same FLOPs cost less energy on a more efficient device
+/// assert!(estimate(1e15, &TPU_CORE).kwh < estimate(1e15, &RTX_A5000).kwh);
+/// ```
 pub fn estimate(flops: f64, dev: &DeviceProfile) -> EnergyReport {
     let seconds = flops / (dev.peak_flops * dev.utilization);
     let kwh = seconds * dev.watts / 3.6e6;
@@ -70,8 +125,29 @@ pub fn estimate(flops: f64, dev: &DeviceProfile) -> EnergyReport {
 /// R&D-phase savings: `runs` independent trainings (hyperparameter search),
 /// each of `flops_per_run` backward FLOPs, trained with a schedule saving
 /// `saving_frac` of backward compute.
-pub fn rnd_phase_savings(runs: usize, flops_per_run: f64, saving_frac: f64,
-                         dev: &DeviceProfile) -> EnergyReport {
+///
+/// Assumptions (paper Fig. 4): runs are independent and identically sized,
+/// the schedule's saving fraction applies uniformly to every run's
+/// backward pass (forward compute is unchanged by ssProp and excluded),
+/// and the device profile is constant across the sweep — so total savings
+/// are simply `runs × flops_per_run × saving_frac` routed through
+/// [`estimate`].
+///
+/// # Examples
+///
+/// ```
+/// use ssprop::energy::{rnd_phase_savings, RTX_A5000};
+/// // a 100-run sweep saves 100× what one run saves
+/// let one = rnd_phase_savings(1, 1e15, 0.4, &RTX_A5000);
+/// let sweep = rnd_phase_savings(100, 1e15, 0.4, &RTX_A5000);
+/// assert!((sweep.kwh / one.kwh - 100.0).abs() < 1e-9);
+/// ```
+pub fn rnd_phase_savings(
+    runs: usize,
+    flops_per_run: f64,
+    saving_frac: f64,
+    dev: &DeviceProfile,
+) -> EnergyReport {
     estimate(runs as f64 * flops_per_run * saving_frac, dev)
 }
 

@@ -40,6 +40,15 @@ pub struct LayerSet {
 // ---------------------------------------------------------------------------
 
 /// Eq. 6: dense conv backward FLOPs = (Bt·Ho·Wo)(4·Cin·K²+1)·Cout.
+///
+/// # Examples
+///
+/// ```
+/// use ssprop::flops::{conv_bwd_flops, ConvLayer};
+/// let l = ConvLayer { cin: 3, cout: 8, k: 3, hout: 4, wout: 4, counted_bn: false };
+/// // Bt=2: M = 2·4·4 = 32, N = 3·3² = 27 → 32·(4·27+1)·8
+/// assert_eq!(conv_bwd_flops(2, &l), (32 * 109 * 8) as f64);
+/// ```
 pub fn conv_bwd_flops(bt: usize, l: &ConvLayer) -> f64 {
     let m = (bt * l.hout * l.wout) as f64;
     let n = (l.cin * l.k * l.k) as f64;
@@ -59,6 +68,15 @@ pub fn conv_bwd_flops_ssprop(bt: usize, l: &ConvLayer, d: f64) -> f64 {
 /// ties rounding to even — `jnp.round` semantics, so the Rust ledger and
 /// selection agree with the Python compile path at exact .5 keep counts
 /// (e.g. C=5, D=0.5 keeps 2 channels on both sides).
+///
+/// # Examples
+///
+/// ```
+/// use ssprop::flops::keep_channels;
+/// assert_eq!(keep_channels(128, 0.8), 26);
+/// assert_eq!(keep_channels(5, 0.5), 2); // 2.5 rounds to even
+/// assert_eq!(keep_channels(10, 0.999), 1); // clamped: never drop every channel
+/// ```
 pub fn keep_channels(cout: usize, d: f64) -> usize {
     (((1.0 - d) * cout as f64).round_ties_even() as usize).clamp(1, cout)
 }
@@ -74,6 +92,15 @@ pub fn dropout_bwd_flops(bt: usize, c: usize, h: usize, w: usize) -> f64 {
 }
 
 /// Eq. 10: break-even drop rate D > 1/(4·Cin·K²+1).
+///
+/// # Examples
+///
+/// ```
+/// use ssprop::flops::drop_rate_lower_bound;
+/// // a 64-channel 3×3 conv breaks even below D = 0.1% — any practical
+/// // schedule clears the bound
+/// assert!(drop_rate_lower_bound(64, 3) < 1e-3);
+/// ```
 pub fn drop_rate_lower_bound(cin: usize, k: usize) -> f64 {
     1.0 / (4.0 * (cin * k * k) as f64 + 1.0)
 }
@@ -112,6 +139,15 @@ impl LayerSet {
     }
 
     /// Fraction of backward FLOPs saved at drop rate `d` vs dense.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use ssprop::flops::tiny_resnet;
+    /// let set = tiny_resnet(8, 1, 32, 3);
+    /// let saving = set.saving_at(32, 0.8);
+    /// assert!(saving > 0.5 && saving < 0.9, "saving {saving}");
+    /// ```
     pub fn saving_at(&self, bt: usize, d: f64) -> f64 {
         let dense = self.bwd_flops_per_iter(bt, 0.0);
         1.0 - self.bwd_flops_per_iter(bt, d) / dense

@@ -44,6 +44,7 @@
 #![warn(missing_docs)]
 
 pub mod backend;
+pub mod bench_report;
 pub mod coordinator;
 pub mod data;
 #[cfg(feature = "pjrt")]

@@ -2,13 +2,17 @@
 //!
 //! Subcommands map 1:1 onto the paper's experiments; see `ssprop help`.
 //! Native commands (quickstart, train-native, datasets, presets, flops,
-//! energy) run on the pure-Rust backend with zero setup; artifact commands
-//! (train, ddpm, tables, figures) execute AOT-compiled graphs and require
-//! a build with `--features pjrt` plus `make artifacts`.
+//! energy, bench-check) run on the pure-Rust backend with zero setup;
+//! artifact commands (train, ddpm, tables, figures) execute AOT-compiled
+//! graphs and require a build with `--features pjrt` plus `make artifacts`.
+
+use std::path::Path;
 
 use anyhow::{bail, Result};
+use ssprop::bench_report::{gate, trajectory, BenchReport, Tolerance};
 use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
 use ssprop::energy::{RTX_A5000, TPU_CORE};
+use ssprop::experiments::report::Table;
 use ssprop::experiments::{tables, Scale};
 use ssprop::schedule::{DropScheduler, Schedule};
 use ssprop::util::cli::Args;
@@ -39,6 +43,11 @@ native commands (no artifacts needed; pure-Rust backend):
   presets      print Tables 2/3 (hyperparameters)
   flops        print FLOPs parity + Eq.10/11 lower-bound tables
   energy       print the paper-scale energy/carbon projection
+  bench-check  gate a fresh bench report against the committed baseline:
+               bench-check BASELINE.json FRESH.json [--ratio-band 8.0]
+               (exits nonzero on regression; see docs/BENCHMARKS.md), or
+               print the perf/energy trajectory over a series of reports:
+               bench-check --trajectory A.json [B.json ...]
   help         this message
 
 artifact commands (build with --features pjrt, then `make artifacts`):
@@ -124,6 +133,7 @@ fn main() -> Result<()> {
             lb.print();
         }
         "energy" => tables::energy_report().print(),
+        "bench-check" => cmd_bench_check(&args)?,
         "quickstart" => cmd_quickstart(&args)?,
         "train-native" => cmd_train_native(&args)?,
         other => {
@@ -132,6 +142,75 @@ fn main() -> Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+/// The CI regression gate over committed bench artifacts: diff a fresh
+/// `BENCH_*.json` against the baseline per the tolerance policy (ratios
+/// inside a wide multiplicative band, FLOPs/joules ledger exact — see
+/// `docs/BENCHMARKS.md`) and exit nonzero on regression. With
+/// `--trajectory`, render the perf/energy trajectory table over a series
+/// of reports instead.
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    let files: Vec<&String> = args.positional.iter().skip(1).collect();
+    if args.has_flag("trajectory") || args.get("trajectory").is_some() {
+        // `--trajectory A.json` parses A.json as the flag's value; fold it
+        // back into the file list so both spellings work.
+        let mut paths: Vec<String> = Vec::new();
+        if let Some(v) = args.get("trajectory") {
+            paths.push(v.to_string());
+        }
+        paths.extend(files.iter().map(|f| f.to_string()));
+        if paths.is_empty() {
+            bail!("bench-check --trajectory needs at least one BENCH_*.json");
+        }
+        let mut entries = Vec::new();
+        for f in &paths {
+            entries.push((f.clone(), BenchReport::load(Path::new(f.as_str()))?));
+        }
+        trajectory(&entries).print();
+        return Ok(());
+    }
+    let &[baseline_path, fresh_path] = files.as_slice() else {
+        bail!("usage: ssprop bench-check BASELINE.json FRESH.json [--ratio-band 8.0]");
+    };
+    let band = parsed_flag(args, "ratio-band", Tolerance::default().ratio_band)?;
+    if band <= 1.0 {
+        bail!("--ratio-band must be > 1 (a multiplicative band around the baseline)");
+    }
+    let tol = Tolerance { ratio_band: band, ..Tolerance::default() };
+    let baseline = BenchReport::load(Path::new(baseline_path.as_str()))?;
+    let fresh = BenchReport::load(Path::new(fresh_path.as_str()))?;
+    let res = gate(&baseline, &fresh, &tol);
+
+    let fmt_metric = |v: f64| {
+        if v == v.trunc() && v.abs() < 9e15 {
+            format!("{}", v as i64)
+        } else {
+            format!("{v:.6}")
+        }
+    };
+    let mut t = Table::new(
+        &format!("bench-check: {fresh_path} vs baseline {baseline_path}"),
+        &["metric", "class", "baseline", "fresh", "status"],
+    );
+    for d in &res.diffs {
+        t.row(vec![
+            d.metric.clone(),
+            d.class.to_string(),
+            fmt_metric(d.baseline),
+            fmt_metric(d.fresh),
+            if d.ok { "ok".to_string() } else { "FAIL".to_string() },
+        ]);
+    }
+    t.print();
+    for p in &res.problems {
+        println!("problem: {p}");
+    }
+    if !res.passed() {
+        bail!("bench-check FAILED: {} metric(s) out of tolerance", res.failures().len());
+    }
+    println!("\nbench-check OK: {} metrics compared within tolerance", res.diffs.len());
     Ok(())
 }
 

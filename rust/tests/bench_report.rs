@@ -1,0 +1,180 @@
+//! The committed perf/energy trajectory: the `BENCH_native.json` baseline
+//! at the repo root must stay consistent with the live code (the
+//! deterministic Eq. 6/9 FLOPs and joules ledgers are recomputed here and
+//! compared exactly), the report schema must round-trip losslessly through
+//! `util::json`, the regression gate must pass identical runs / fail
+//! perturbed ones with the documented per-class tolerances, and the
+//! `ssprop bench-check` CLI must turn those verdicts into exit codes.
+
+use std::path::Path;
+use std::process::Command;
+
+use ssprop::bench_report::{
+    gate, preset_ledger, BenchReport, ReportError, Tolerance, BASELINE_PRESETS, SCHEMA_VERSION,
+};
+
+/// The committed baseline at the repo root (CARGO_MANIFEST_DIR = `rust/`).
+const BASELINE: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_native.json");
+
+fn baseline() -> BenchReport {
+    BenchReport::load(Path::new(BASELINE)).expect("committed BENCH_native.json loads")
+}
+
+#[test]
+fn committed_baseline_has_every_tracked_preset() {
+    let rep = baseline();
+    assert_eq!(rep.schema_version, SCHEMA_VERSION);
+    assert_eq!(rep.bench, "native_hotpath");
+    let specs: Vec<&str> = rep.presets.iter().map(|p| p.spec.as_str()).collect();
+    assert_eq!(specs, BASELINE_PRESETS, "baseline presets drifted from BASELINE_PRESETS");
+    for p in &rep.presets {
+        assert!(!p.timings_ns.is_empty(), "{}: no step times recorded", p.spec);
+        assert!(p.ratios.contains_key("bwd_speedup_d80"), "{}: missing model bwd ratio", p.spec);
+    }
+    for key in ["fused_speedup_dense", "fused_speedup_d80", "bwd_speedup_d80_nodx"] {
+        assert!(rep.conv_ratios.contains_key(key), "baseline missing conv ratio {key}");
+    }
+}
+
+/// The ledger halves of the committed baseline are not measurements — they
+/// are analytic values the code must reproduce bit-for-bit. Recompute them
+/// from the live zoo graphs and compare exactly: any drift in `flops.rs`,
+/// `energy.rs`, or the zoo geometry must show up as a deliberate baseline
+/// regeneration, never as silent skew.
+#[test]
+fn committed_ledger_matches_recomputation_exactly() {
+    let rep = baseline();
+    for p in &rep.presets {
+        let (flops, energy) = preset_ledger(&p.spec, rep.batch).expect("ledger recompute");
+        assert_eq!(p.flops, flops, "{}: FLOPs ledger drifted from committed baseline", p.spec);
+        assert_eq!(p.energy, energy, "{}: energy ledger drifted from committed baseline", p.spec);
+    }
+}
+
+#[test]
+fn schema_roundtrips_through_util_json() {
+    let rep = baseline();
+    let compact = rep.to_json().to_string();
+    assert_eq!(BenchReport::parse(&compact).unwrap(), rep);
+    // and through the pretty (committed) form, which is what save() writes
+    let pretty = rep.to_pretty_string();
+    assert_eq!(BenchReport::parse(&pretty).unwrap(), rep);
+}
+
+#[test]
+fn gate_passes_identical_and_noisy_rerun() {
+    let base = baseline();
+    let tol = Tolerance::default();
+    assert!(gate(&base, &base, &tol).passed());
+
+    // a realistic rerun: timings drift wildly, ratios wobble within band
+    let mut fresh = base.clone();
+    for p in &mut fresh.presets {
+        for v in p.timings_ns.values_mut() {
+            *v *= 23.0;
+        }
+        for v in p.ratios.values_mut() {
+            *v *= 1.4;
+        }
+    }
+    for v in fresh.conv_ratios.values_mut() {
+        *v /= 1.9;
+    }
+    let res = gate(&base, &fresh, &tol);
+    assert!(res.passed(), "noisy rerun should pass: {:?}", res.failures());
+}
+
+#[test]
+fn gate_fails_out_of_tolerance_ratio() {
+    let base = baseline();
+    let mut fresh = base.clone();
+    *fresh.conv_ratios.get_mut("fused_speedup_dense").unwrap() /= 100.0;
+    let res = gate(&base, &fresh, &Tolerance::default());
+    assert!(!res.passed());
+    assert!(res.failures().iter().any(|f| f.contains("fused_speedup_dense")));
+}
+
+#[test]
+fn gate_fails_changed_deterministic_value() {
+    let base = baseline();
+    let tol = Tolerance::default();
+
+    let mut flops_drift = base.clone();
+    flops_drift.presets[0].flops.bwd_dense += 1.0;
+    assert!(!gate(&base, &flops_drift, &tol).passed());
+
+    let mut energy_drift = base.clone();
+    energy_drift.presets[1].energy.saved_j *= 1.000001;
+    assert!(!gate(&base, &energy_drift, &tol).passed());
+
+    // but a representation-level wiggle below exact_rel is not a failure
+    let mut eps = base.clone();
+    eps.presets[0].flops.bwd_dense *= 1.0 + 1e-15;
+    assert!(gate(&base, &eps, &tol).passed());
+}
+
+#[test]
+fn gate_flags_missing_preset_as_problem() {
+    let base = baseline();
+    let mut fresh = base.clone();
+    fresh.presets.retain(|p| p.spec != "vgg-tiny-w8");
+    let res = gate(&base, &fresh, &Tolerance::default());
+    assert!(!res.passed());
+    assert!(res.problems.iter().any(|p| p.contains("vgg-tiny-w8")));
+}
+
+#[test]
+fn schema_version_mismatch_is_a_typed_error() {
+    let text = std::fs::read_to_string(BASELINE).unwrap();
+    let bumped = text.replace("\"schema_version\": 1", "\"schema_version\": 999");
+    assert_ne!(text, bumped, "baseline should carry schema_version 1");
+    match BenchReport::parse(&bumped) {
+        Err(ReportError::SchemaVersion { found, expected }) => {
+            assert_eq!(found, 999);
+            assert_eq!(expected, SCHEMA_VERSION);
+        }
+        other => panic!("expected SchemaVersion error, got {other:?}"),
+    }
+}
+
+/// End-to-end exit codes: `ssprop bench-check` must exit 0 when a fresh
+/// report matches the committed baseline and nonzero once a metric is
+/// perturbed beyond tolerance (the CI contract).
+#[test]
+fn bench_check_cli_exit_codes() {
+    let exe = env!("CARGO_BIN_EXE_ssprop");
+    let ok = Command::new(exe)
+        .args(["bench-check", BASELINE, BASELINE])
+        .output()
+        .expect("run ssprop bench-check");
+    assert!(
+        ok.status.success(),
+        "self-check should pass:\n{}\n{}",
+        String::from_utf8_lossy(&ok.stdout),
+        String::from_utf8_lossy(&ok.stderr)
+    );
+
+    let dir = std::env::temp_dir().join("ssprop_bench_report_test");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut bad = baseline();
+    bad.presets[0].flops.bwd_dense += 1.0;
+    let bad_path = dir.join("fresh_bad.json");
+    bad.save(&bad_path).unwrap();
+    let fail = Command::new(exe)
+        .args(["bench-check", BASELINE, bad_path.to_str().unwrap()])
+        .output()
+        .expect("run ssprop bench-check");
+    assert!(!fail.status.success(), "perturbed ledger must fail the gate");
+
+    // --trajectory renders a table (one row per preset) and exits 0
+    let traj = Command::new(exe)
+        .args(["bench-check", "--trajectory", BASELINE])
+        .output()
+        .expect("run ssprop bench-check --trajectory");
+    assert!(traj.status.success());
+    let out = String::from_utf8_lossy(&traj.stdout);
+    for spec in BASELINE_PRESETS {
+        assert!(out.contains(spec), "trajectory missing {spec}:\n{out}");
+    }
+}
