@@ -1,9 +1,14 @@
 //! Native-backend hot path: img2col conv forward, dense vs compacted
-//! sparse backward, the raw GEMM, and — the headline — the fused
-//! plan/workspace fwd+bwd vs the unfused op calls (the fused path builds
-//! each (M, N) im2col matrix once per step instead of twice and reuses
-//! every scratch buffer). Runs on the default build (no PJRT, no
-//! artifacts), so any machine can baseline it:
+//! sparse backward, the raw GEMM (blocked microkernel vs the naive
+//! reference, emitted as `native/gemm_speedup_*`), and — the headline —
+//! the fused plan/workspace fwd+bwd vs the unfused op calls (the fused
+//! path builds each (M, N) im2col matrix once per step instead of twice
+//! and reuses every scratch buffer). Each executor section also times the
+//! sparsity-aware backward GEMMs on the preset's actual conv shapes,
+//! dense (all channels kept) vs the paper's D=0.5, and emits the summed
+//! ratio as `native/sparse_gemm_speedup_{spec}_d50` — the FLOPs saving of
+//! the compacted backward realized as wall-clock. Runs on the default
+//! build (no PJRT, no artifacts), so any machine can baseline it:
 //!
 //! Run: `cargo bench --bench native_hotpath`
 //!
@@ -20,7 +25,7 @@
 //!
 //! `--json PATH` additionally serializes the run as a versioned
 //! `bench_report::BenchReport` (`BENCH_native.json` schema — see
-//! `docs/BENCHMARKS.md`): the fused/bwd conv ratios plus, when no
+//! `docs/BENCHMARKS.md`): the fused/bwd/gemm conv ratios plus, when no
 //! `--model` narrows the run, an executor section for **every**
 //! `BASELINE_PRESETS` zoo preset with step times, speedup ratios, and the
 //! deterministic Eq. 6/9 FLOPs + joules ledger. `ssprop bench-check` gates
@@ -30,6 +35,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::Duration;
 
+use ssprop::backend::gemm::gemm_ref;
 use ssprop::backend::im2col::im2col;
 use ssprop::backend::sparse::{select_channels, sparse_bwd_with_cols, SparseBwdWorkspace};
 use ssprop::backend::{
@@ -41,7 +47,7 @@ use ssprop::bench_report::{
     BENCH_IMG, BENCH_IN_CH,
 };
 use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
-use ssprop::util::bench::{bench, report};
+use ssprop::util::bench::{bench, fmt_ns, report};
 use ssprop::util::rng::Pcg;
 
 fn main() {
@@ -99,16 +105,28 @@ fn main() {
         report(&r);
     }
 
-    let conv_ratios = fused_section(&be, &cfg, &x, &w, &b, &g, warm, iters, budget);
+    let mut conv_ratios = fused_section(&be, &cfg, &x, &w, &b, &g, warm, iters, budget);
 
-    println!("\n-- raw GEMM (256x288 . 288x128) --");
-    let (m, k, n) = (256, 288, 128);
-    let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
-    let bb: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
-    let r = bench("native/gemm_256x288x128", warm, iters, budget, || {
-        std::hint::black_box(be.gemm(m, k, n, &a, &bb));
-    });
-    report(&r);
+    println!("\n-- raw GEMM: blocked microkernel vs naive reference --");
+    for (m, k, n) in [(256usize, 288, 128), (1024, 576, 64)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let bb: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let naive = bench(&format!("native/gemm_naive_{m}x{k}x{n}"), warm, iters, budget, || {
+            std::hint::black_box(gemm_ref(m, k, n, &a, &bb));
+        });
+        report(&naive);
+        let blocked = bench(&format!("native/gemm_{m}x{k}x{n}"), warm, iters, budget, || {
+            std::hint::black_box(be.gemm(m, k, n, &a, &bb));
+        });
+        report(&blocked);
+        let speedup = naive.median_ns / blocked.median_ns;
+        println!(
+            "{:<48} {:>11.2}x (naive / blocked median)",
+            format!("native/gemm_speedup_{m}x{k}x{n}"),
+            speedup
+        );
+        conv_ratios.insert(format!("gemm_speedup_{m}x{k}x{n}"), speedup);
+    }
 
     println!("\n-- end-to-end SimpleCNN training step (planned path) --");
     for (label, d) in [("dense", 0.0f64), ("d80", 0.8)] {
@@ -217,6 +235,14 @@ fn fused_section(
 /// tracked per preset so the residual-graph saving is visible next to the
 /// plain conv stacks.
 ///
+/// Closes with a sparse-GEMM subsection: the compacted backward
+/// (`sparse_bwd_with_cols`, dx included) on each of the preset's *unique*
+/// conv geometries, dense (all channels kept) vs the paper's D=0.5
+/// importance selection — summed medians and their ratio, emitted as
+/// `native/sparse_gemm_speedup_{spec}_d50`. Columns are prebuilt outside
+/// the timer, so the ratio isolates what the sparsity-aware GEMM packing
+/// skips.
+///
 /// Returns the section as a `PresetReport` (timings, ratios, and the
 /// deterministic FLOPs/joules ledger) for `--json` serialization.
 fn parallel_section(spec: &str, warm: usize, iters: usize, budget: Duration) -> PresetReport {
@@ -269,6 +295,50 @@ fn parallel_section(spec: &str, warm: usize, iters: usize, budget: Duration) -> 
         model_bwd_speedup
     );
     ratios.insert("bwd_speedup_d80".to_string(), model_bwd_speedup);
+
+    println!("-- sparse backward GEMMs ({slug} conv shapes, dense vs D=0.5) --");
+    let mut geoms: Vec<Conv2d> = Vec::new();
+    for gcfg in build().conv_geoms() {
+        let gcfg = gcfg.with_batch(bt);
+        if !geoms.contains(&gcfg) {
+            geoms.push(gcfg);
+        }
+    }
+    let (mut dense_total, mut d50_total) = (0f64, 0f64);
+    for (gi, gcfg) in geoms.iter().enumerate() {
+        let mut grng = Pcg::new(29, gi as u64);
+        let gx: Vec<f32> = (0..gcfg.in_len()).map(|_| grng.normal()).collect();
+        let gw: Vec<f32> = (0..gcfg.w_len()).map(|_| grng.normal() * 0.1).collect();
+        let gg: Vec<f32> = (0..gcfg.out_len()).map(|_| grng.normal()).collect();
+        let cols = im2col(gcfg, &gx);
+        let mut ws = SparseBwdWorkspace::default();
+        let all: Vec<usize> = (0..gcfg.cout).collect();
+        let keep = select_channels(gcfg, &gg, 0.5);
+        let dn = bench(&format!("native/sparse_gemm_dense_{slug}_l{gi}"), warm, iters, budget, || {
+            let out = sparse_bwd_with_cols(gcfg, &cols, &gw, &gg, &all, true, &mut ws);
+            std::hint::black_box(out);
+        });
+        report(&dn);
+        let sp = bench(&format!("native/sparse_gemm_d50_{slug}_l{gi}"), warm, iters, budget, || {
+            let out = sparse_bwd_with_cols(gcfg, &cols, &gw, &gg, &keep, true, &mut ws);
+            std::hint::black_box(out);
+        });
+        report(&sp);
+        dense_total += dn.median_ns;
+        d50_total += sp.median_ns;
+    }
+    let sparse_speedup = dense_total / d50_total;
+    println!("{:<48} {:>11}", format!("native/sparse_gemm_dense_{slug}"), fmt_ns(dense_total));
+    println!("{:<48} {:>11}", format!("native/sparse_gemm_d50_{slug}"), fmt_ns(d50_total));
+    println!(
+        "{:<48} {:>11.2}x (dense / d50 summed medians)",
+        format!("native/sparse_gemm_speedup_{slug}_d50"),
+        sparse_speedup
+    );
+    timings_ns.insert("sparse_gemm_dense_ns".to_string(), dense_total);
+    timings_ns.insert("sparse_gemm_d50_ns".to_string(), d50_total);
+    ratios.insert("sparse_gemm_speedup_d50".to_string(), sparse_speedup);
+
     let (flops, energy) = preset_ledger(&slug, bt).expect("preset ledger");
     PresetReport { spec: slug, timings_ns, ratios, flops, energy }
 }

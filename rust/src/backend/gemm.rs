@@ -1,0 +1,472 @@
+//! Cache-blocked, register-tiled f32 GEMM — the kernel behind the native
+//! backend's im2col convolutions (the ROADMAP's "single biggest lever
+//! `native_hotpath` can measure").
+//!
+//! The decomposition is the classic panel-packing one: the depth
+//! dimension is split into [`KC`]-sized blocks; each block's B rows are
+//! packed into [`NR`]-wide column panels and its A rows into [`MR`]-wide
+//! row panels; a fixed MR×NR register tile then walks the packed panels.
+//! Packing makes both microkernel operands contiguous streaming reads,
+//! with the panel sizes chosen so one A panel plus one B panel sit in L1
+//! while a whole packed A block ([`MC`]×[`KC`]) stays L2-resident. Edge
+//! tiles are zero-padded during packing, so the microkernel itself never
+//! branches on shape.
+//!
+//! Two properties the rest of the crate leans on:
+//!
+//! * **Deterministic accumulation.** Every output element accumulates its
+//!   depth products in strictly increasing depth order — KC blocks in
+//!   order, in-order within each block — so results do not depend on how
+//!   the blocking parameters land on a given shape, are identical from
+//!   run to run, and (the kernel is single-threaded; the parallel
+//!   executor shards *batches*, never a GEMM) stay bit-identical per
+//!   worker-thread count. For depths ≤ [`KC`] the summation order is
+//!   exactly the naive triple loop's ([`gemm_ref`]).
+//! * **Dense semantics.** There is no value-based zero skipping (the old
+//!   naive kernel skipped `a == 0.0` terms, silently swallowing NaN/Inf
+//!   from the B operand). Sparsity enters only *structurally*: the
+//!   [`Operand::KeptChannels`] / [`Operand::KeptRows`] views fuse the
+//!   ssProp `keep_idx` gather into the packing stage, so the compacted
+//!   backward GEMMs never read, pack, or multiply a dropped channel's
+//!   rows at all — zero by construction, not by test.
+
+/// Rows of the register tile (width of a packed A panel).
+pub const MR: usize = 4;
+/// Columns of the register tile (width of a packed B panel). Kept narrow
+/// on purpose: the dW GEMM's output columns are the *kept channels*, so a
+/// wide tile would pad small keep sets back up to dense-width work.
+pub const NR: usize = 8;
+/// Depth block: one A panel (MR×KC) plus one B panel (KC×NR) is 12 KiB —
+/// comfortably L1-resident.
+const KC: usize = 256;
+/// Row block: the packed A block (MC×KC, 64 KiB) stays L2-resident.
+const MC: usize = 64;
+/// Column block: bounds the packed B block (KC×NC) at 1 MiB.
+const NC: usize = 1024;
+
+/// Reusable packing buffers for [`gemm_into`]. Each plan/workspace owns
+/// its own pack, so the parallel executor's per-worker plans stay
+/// lock-free and the steady-state hot loop allocates nothing.
+#[derive(Debug, Clone, Default)]
+pub struct GemmPack {
+    /// Packed A block: up to MC/MR panels of KC×MR.
+    pa: Vec<f32>,
+    /// Packed B block: up to NC/NR panels of KC×NR.
+    pb: Vec<f32>,
+}
+
+impl GemmPack {
+    /// A fresh, empty pack (panel buffers grow lazily on first use).
+    pub fn new() -> GemmPack {
+        GemmPack::default()
+    }
+
+    /// Capacity of the two panel buffers (packed A, packed B); the
+    /// workspace-reuse tests pin these flat across steady-state steps.
+    pub fn caps(&self) -> [usize; 2] {
+        [self.pa.capacity(), self.pb.capacity()]
+    }
+}
+
+/// A read-only GEMM operand: how the packing stage reads logical element
+/// (row, col) of a (rows × cols) matrix. The dense layouts index straight
+/// into the slice; the `Kept*` views are what makes the backward GEMMs
+/// sparsity-aware — they gather only the ssProp `keep_idx` channels while
+/// packing, so dropped channels contribute no reads and no FLOPs.
+#[derive(Debug, Clone, Copy)]
+pub enum Operand<'a> {
+    /// Row-major (rows × cols) matrix.
+    Dense(&'a [f32]),
+    /// Transposed view: the slice holds the (cols × rows) row-major
+    /// underlying matrix; element (r, c) reads `data[c * rows + r]`.
+    Transposed(&'a [f32]),
+    /// Kept output channels of an NCHW gradient as the compacted
+    /// (Bt·Ho·Wo × k') col-form matrix `col[dY]'`: element (r, c) reads
+    /// plane `keep[c]` of image `r / hw` at pixel `r % hw`.
+    KeptChannels {
+        /// NCHW gradient, length (rows / `hw`) · `cout` · `hw`.
+        g: &'a [f32],
+        /// Kept channel indices (each < `cout`); the logical column axis.
+        keep: &'a [usize],
+        /// Total output channels in `g`.
+        cout: usize,
+        /// Spatial plane size Ho·Wo.
+        hw: usize,
+    },
+    /// Kept rows of a row-major matrix: logical row r is underlying row
+    /// `keep[r]` (the compacted OIHW weight view `col_W'ᵀ`).
+    KeptRows {
+        /// Underlying row-major matrix, rows of length cols.
+        data: &'a [f32],
+        /// Kept row indices; the logical row axis.
+        keep: &'a [usize],
+    },
+}
+
+impl Operand<'_> {
+    /// Validate the operand against its logical (rows × cols) shape.
+    fn check(&self, rows: usize, cols: usize, side: &str) {
+        match *self {
+            Operand::Dense(d) | Operand::Transposed(d) => {
+                assert_eq!(d.len(), rows * cols, "{side}: operand length");
+            }
+            Operand::KeptChannels { g, keep, cout, hw } => {
+                assert_eq!(keep.len(), cols, "{side}: kept-channel count");
+                assert!(hw > 0 && rows % hw == 0, "{side}: rows must be whole planes");
+                assert_eq!(g.len(), (rows / hw) * cout * hw, "{side}: NCHW gradient length");
+                assert!(keep.iter().all(|&o| o < cout), "{side}: keep index out of range");
+            }
+            Operand::KeptRows { data, keep } => {
+                assert_eq!(keep.len(), rows, "{side}: kept-row count");
+                let fits = keep.iter().all(|&r| (r + 1) * cols <= data.len());
+                assert!(fits, "{side}: kept row out of range");
+            }
+        }
+    }
+}
+
+/// Pack rows `i0..i0+mc` × depth `p0..p0+kc` of the (m × k) operand `a`
+/// into MR-wide row panels (`buf[panel][depth][row]`), dispatching the
+/// per-variant index math once so the inner loops stay monomorphic.
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    a: &Operand<'_>,
+    m: usize,
+    k: usize,
+    i0: usize,
+    mc: usize,
+    p0: usize,
+    kc: usize,
+    buf: &mut Vec<f32>,
+) {
+    match *a {
+        Operand::Dense(d) => pack_a_with(|r, p| d[r * k + p], i0, mc, p0, kc, buf),
+        Operand::Transposed(d) => pack_a_with(|r, p| d[p * m + r], i0, mc, p0, kc, buf),
+        Operand::KeptChannels { g, keep, cout, hw } => {
+            pack_a_with(|r, p| g[((r / hw) * cout + keep[p]) * hw + r % hw], i0, mc, p0, kc, buf)
+        }
+        Operand::KeptRows { data, keep } => {
+            pack_a_with(|r, p| data[keep[r] * k + p], i0, mc, p0, kc, buf)
+        }
+    }
+}
+
+/// Shared A-packing loop: `get(row, depth)` reads the operand; rows past
+/// the block edge pad with zeros so the microkernel never branches.
+fn pack_a_with(
+    get: impl Fn(usize, usize) -> f32,
+    i0: usize,
+    mc: usize,
+    p0: usize,
+    kc: usize,
+    buf: &mut Vec<f32>,
+) {
+    let panels = mc.div_ceil(MR);
+    buf.clear();
+    buf.resize(panels * kc * MR, 0.0);
+    for ip in 0..panels {
+        let iw = MR.min(mc - ip * MR);
+        let panel = &mut buf[ip * kc * MR..][..kc * MR];
+        for (p, prow) in panel.chunks_exact_mut(MR).enumerate() {
+            for (i, slot) in prow.iter_mut().enumerate().take(iw) {
+                *slot = get(i0 + ip * MR + i, p0 + p);
+            }
+        }
+    }
+}
+
+/// Pack depth `p0..p0+kc` × columns `j0..j0+nc` of the (k × n) operand
+/// `b` into NR-wide column panels (`buf[panel][depth][col]`).
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    b: &Operand<'_>,
+    k: usize,
+    n: usize,
+    p0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+    buf: &mut Vec<f32>,
+) {
+    match *b {
+        Operand::Dense(d) => pack_b_with(|p, c| d[p * n + c], p0, kc, j0, nc, buf),
+        Operand::Transposed(d) => pack_b_with(|p, c| d[c * k + p], p0, kc, j0, nc, buf),
+        Operand::KeptChannels { g, keep, cout, hw } => {
+            pack_b_with(|p, c| g[((p / hw) * cout + keep[c]) * hw + p % hw], p0, kc, j0, nc, buf)
+        }
+        Operand::KeptRows { data, keep } => {
+            pack_b_with(|p, c| data[keep[p] * n + c], p0, kc, j0, nc, buf)
+        }
+    }
+}
+
+/// Shared B-packing loop: `get(depth, col)` reads the operand; columns
+/// past the block edge pad with zeros.
+fn pack_b_with(
+    get: impl Fn(usize, usize) -> f32,
+    p0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+    buf: &mut Vec<f32>,
+) {
+    let panels = nc.div_ceil(NR);
+    buf.clear();
+    buf.resize(panels * kc * NR, 0.0);
+    for jp in 0..panels {
+        let jw = NR.min(nc - jp * NR);
+        let panel = &mut buf[jp * kc * NR..][..kc * NR];
+        for (p, prow) in panel.chunks_exact_mut(NR).enumerate() {
+            for (j, slot) in prow.iter_mut().enumerate().take(jw) {
+                *slot = get(p0 + p, j0 + jp * NR + j);
+            }
+        }
+    }
+}
+
+/// The register tile: `acc[MR][NR] += a_panel ⊗ b_panel` over one depth
+/// block, depth-major so each element's sum order is the plain in-order
+/// one. `chunks_exact` hands LLVM fixed-size rows, so this compiles to
+/// broadcast + FMA without `unsafe`.
+#[inline]
+fn microkernel(pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (arow, brow) in pa.chunks_exact(MR).zip(pb.chunks_exact(NR)) {
+        for (accrow, &av) in acc.iter_mut().zip(arow) {
+            for (c, &bv) in accrow.iter_mut().zip(brow) {
+                *c += av * bv;
+            }
+        }
+    }
+}
+
+/// Walk one packed (mc × kc × nc) block with the register tile, adding
+/// each tile's partial sums into `c` (row stride `n`). Zero-padded edge
+/// lanes are computed but never written back, so padding cannot leak —
+/// not even NaN × 0 artifacts.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    n: usize,
+    i0: usize,
+    mc: usize,
+    j0: usize,
+    nc: usize,
+    kc: usize,
+    pa: &[f32],
+    pb: &[f32],
+    c: &mut [f32],
+) {
+    for jp in 0..nc.div_ceil(NR) {
+        let jw = NR.min(nc - jp * NR);
+        let bpanel = &pb[jp * kc * NR..][..kc * NR];
+        for ip in 0..mc.div_ceil(MR) {
+            let iw = MR.min(mc - ip * MR);
+            let apanel = &pa[ip * kc * MR..][..kc * MR];
+            let mut acc = [[0f32; NR]; MR];
+            microkernel(apanel, bpanel, &mut acc);
+            for (i, accrow) in acc.iter().enumerate().take(iw) {
+                let crow = &mut c[(i0 + ip * MR + i) * n + j0 + jp * NR..][..jw];
+                for (cv, &av) in crow.iter_mut().zip(accrow) {
+                    *cv += av;
+                }
+            }
+        }
+    }
+}
+
+/// C(m×n) = A(m×k) · B(k×n) into `c` (cleared and resized in place),
+/// reusing `pack`'s panel buffers across calls.
+///
+/// Accumulation per output element is strictly increasing-depth (see the
+/// module docs), so results are deterministic for every shape and
+/// bit-identical to [`gemm_ref`] whenever `k` fits one depth block.
+pub fn gemm_into(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: Operand<'_>,
+    b: Operand<'_>,
+    c: &mut Vec<f32>,
+    pack: &mut GemmPack,
+) {
+    a.check(m, k, "gemm lhs");
+    b.check(k, n, "gemm rhs");
+    c.clear();
+    c.resize(m * n, 0.0);
+    for j0 in (0..n).step_by(NC) {
+        let nc = NC.min(n - j0);
+        for p0 in (0..k).step_by(KC) {
+            let kc = KC.min(k - p0);
+            pack_b(&b, k, n, p0, kc, j0, nc, &mut pack.pb);
+            for i0 in (0..m).step_by(MC) {
+                let mc = MC.min(m - i0);
+                pack_a(&a, m, k, i0, mc, p0, kc, &mut pack.pa);
+                macro_kernel(n, i0, mc, j0, nc, kc, &pack.pa, &pack.pb, c);
+            }
+        }
+    }
+}
+
+/// Allocating dense GEMM: `C = A · B` through the blocked kernel with a
+/// throwaway pack. Op-level convenience — the plan path passes its own
+/// [`GemmPack`] to [`gemm_into`] so nothing allocates per step.
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut c = Vec::new();
+    gemm_into(m, k, n, Operand::Dense(a), Operand::Dense(b), &mut c, &mut GemmPack::new());
+    c
+}
+
+/// Naive in-order triple-loop reference (no blocking, no skipping): the
+/// correctness oracle for the property tests and the "before" side of the
+/// bench's `native/gemm_speedup_*` lines.
+pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "gemm lhs length");
+    assert_eq!(b.len(), k * n, "gemm rhs length");
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        let crow = &mut c[i * n..][..n];
+        for (p, &av) in a[i * k..][..k].iter().enumerate() {
+            let brow = &b[p * n..][..n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(len: usize, f: impl Fn(usize) -> f32) -> Vec<f32> {
+        (0..len).map(f).collect()
+    }
+
+    fn mat(len: usize, mul: usize, md: usize, scale: f32, off: f32) -> Vec<f32> {
+        fill(len, |i| ((i * mul) % md) as f32 * scale - off)
+    }
+
+    #[test]
+    fn matches_reference_across_tile_edges() {
+        // shapes straddling the MR/NR/MC/KC boundaries, incl. 1-wide edges
+        let shapes =
+            [(1, 1, 1), (3, 5, 7), (4, 8, 8), (5, 9, 9), (64, 16, 8), (65, 257, 17), (70, 300, 33)];
+        for (m, k, n) in shapes {
+            let a = mat(m * k, 7, 13, 0.25, 1.5);
+            let b = mat(k * n, 5, 11, 0.5, 2.0);
+            let got = gemm(m, k, n, &a, &b);
+            let want = gemm_ref(m, k, n, &a, &b);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0), "shape ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn bitwise_reference_match_within_one_depth_block() {
+        // k ≤ KC ⇒ a single depth block ⇒ the blocked summation order is
+        // exactly the naive in-order chain
+        let (m, k, n) = (13, KC, 21);
+        let a = mat(m * k, 3, 17, 0.125, 1.0);
+        let b = mat(k * n, 11, 19, 0.25, 2.25);
+        assert_eq!(gemm(m, k, n, &a, &b), gemm_ref(m, k, n, &a, &b));
+    }
+
+    #[test]
+    fn transposed_view_matches_materialized_transpose() {
+        let (m, k, n) = (6, 10, 9);
+        let at = mat(k * m, 7, 23, 0.2, 2.0); // underlying (k × m)
+        let b = mat(k * n, 3, 13, 0.4, 1.2);
+        let mut a = vec![0f32; m * k];
+        for r in 0..m {
+            for p in 0..k {
+                a[r * k + p] = at[p * m + r];
+            }
+        }
+        let mut c = Vec::new();
+        let mut pk = GemmPack::new();
+        gemm_into(m, k, n, Operand::Transposed(&at), Operand::Dense(&b), &mut c, &mut pk);
+        assert_eq!(c, gemm(m, k, n, &a, &b), "A-side transposed view");
+        let bt = mat(n * k, 9, 29, 0.3, 1.9); // underlying (n × k)
+        let mut bm = vec![0f32; k * n];
+        for p in 0..k {
+            for j in 0..n {
+                bm[p * n + j] = bt[j * k + p];
+            }
+        }
+        gemm_into(m, k, n, Operand::Dense(&a), Operand::Transposed(&bt), &mut c, &mut pk);
+        assert_eq!(c, gemm(m, k, n, &a, &bm), "B-side transposed view");
+    }
+
+    #[test]
+    fn kept_views_equal_explicit_gathers_bitwise() {
+        // KeptChannels: (bt·hw × k') gather of an NCHW gradient
+        let (bt, cout, hw) = (2, 5, 6);
+        let g = mat(bt * cout * hw, 7, 31, 0.2, 3.0);
+        let keep = [0usize, 2, 4];
+        let rows = bt * hw;
+        let mut gck = vec![0f32; rows * keep.len()];
+        for r in 0..rows {
+            for (c, &o) in keep.iter().enumerate() {
+                gck[r * keep.len() + c] = g[((r / hw) * cout + o) * hw + r % hw];
+            }
+        }
+        let b = mat(keep.len() * 4, 3, 11, 0.5, 1.0);
+        let view = Operand::KeptChannels { g: &g, keep: &keep, cout, hw };
+        let (mut c1, mut c2) = (Vec::new(), Vec::new());
+        let pk = &mut GemmPack::new();
+        gemm_into(rows, keep.len(), 4, view, Operand::Dense(&b), &mut c1, pk);
+        gemm_into(rows, keep.len(), 4, Operand::Dense(&gck), Operand::Dense(&b), &mut c2, pk);
+        assert_eq!(c1, c2, "KeptChannels must equal the explicit gather");
+
+        // KeptRows: kept rows of a (cout × n) weight matrix as the rhs
+        let n = 7;
+        let w = mat(cout * n, 5, 17, 0.25, 2.0);
+        let mut wk = vec![0f32; keep.len() * n];
+        for (r, &o) in keep.iter().enumerate() {
+            wk[r * n..][..n].copy_from_slice(&w[o * n..][..n]);
+        }
+        let a = mat(3 * keep.len(), 9, 13, 0.4, 1.1);
+        let rows_view = Operand::KeptRows { data: &w, keep: &keep };
+        gemm_into(3, keep.len(), n, Operand::Dense(&a), rows_view, &mut c1, pk);
+        gemm_into(3, keep.len(), n, Operand::Dense(&a), Operand::Dense(&wk), &mut c2, pk);
+        assert_eq!(c1, c2, "KeptRows must equal the explicit gather");
+    }
+
+    #[test]
+    fn empty_dims_and_empty_keep_are_fine() {
+        assert!(gemm(0, 3, 4, &[], &[0.0; 12]).is_empty());
+        assert_eq!(gemm(2, 0, 3, &[], &[]), vec![0.0; 6]);
+        assert!(gemm(2, 3, 0, &[0.0; 6], &[]).is_empty());
+        // an empty keep set is a legal (if useless) 0-column operand
+        let g = vec![1.0f32; 8];
+        let view = Operand::KeptChannels { g: &g, keep: &[], cout: 2, hw: 4 };
+        let mut c = vec![99.0];
+        gemm_into(4, 0, 3, view, Operand::Dense(&[]), &mut c, &mut GemmPack::new());
+        assert_eq!(c, vec![0.0; 12]);
+    }
+
+    #[test]
+    fn nan_and_inf_propagate_like_dense_math() {
+        // 0·NaN and 0·Inf are NaN under dense semantics; the kernel must
+        // not "optimize" them away (the old zero-skip bug)
+        let c = gemm(1, 2, 2, &[0.0, 1.0], &[f32::NAN, 1.0, 2.0, 3.0]);
+        assert!(c[0].is_nan(), "0·NaN must surface as NaN");
+        assert_eq!(c[1], 3.0); // 0·1 + 1·3
+        let c = gemm(1, 1, 1, &[0.0], &[f32::INFINITY]);
+        assert!(c[0].is_nan(), "0·Inf must surface as NaN");
+    }
+
+    #[test]
+    fn pack_caps_stay_flat_on_reuse() {
+        let (m, k, n) = (37, 29, 23);
+        let a = mat(m * k, 3, 7, 0.5, 1.0);
+        let b = mat(k * n, 5, 9, 0.25, 0.5);
+        let mut pack = GemmPack::new();
+        let mut c = Vec::new();
+        gemm_into(m, k, n, Operand::Dense(&a), Operand::Dense(&b), &mut c, &mut pack);
+        let caps = pack.caps();
+        gemm_into(m, k, n, Operand::Dense(&a), Operand::Dense(&b), &mut c, &mut pack);
+        assert_eq!(pack.caps(), caps, "packing must reuse, not regrow");
+    }
+}

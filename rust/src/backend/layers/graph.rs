@@ -25,7 +25,7 @@ use super::{
     softmax_ce_core, softmax_ce_examples, FwdCtx, Layer, LayerWs, Selection, Shape, StepStats,
     INPUT_SLOT,
 };
-use crate::backend::Backend;
+use crate::backend::{Backend, Conv2d};
 use crate::flops::LayerSet;
 use crate::tensorstore::Tensor;
 
@@ -294,6 +294,16 @@ impl Graph {
         (0..self.nodes.len())
             .filter(|&i| self.node_layer(i).is_some_and(|l| l.conv_geom().is_some()))
             .count()
+    }
+
+    /// Geometry of every conv layer in node order (per-example batch
+    /// size; callers re-key with [`Conv2d::with_batch`] as needed). The
+    /// bench uses this to time the sparse backward GEMMs of a preset's
+    /// actual layer shapes.
+    pub fn conv_geoms(&self) -> Vec<Conv2d> {
+        (0..self.nodes.len())
+            .filter_map(|i| self.node_layer(i).and_then(|l| l.conv_geom()))
+            .collect()
     }
 
     /// Total conv output channels — [`StepStats::total_channels`].

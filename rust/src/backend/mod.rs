@@ -10,7 +10,9 @@
 //! default-implemented wrappers that run the same code through a throwaway
 //! plan, so existing callers and the PJRT feature keep compiling.
 //! [`NativeBackend`] implements the plan path in pure Rust (img2col GEMMs
-//! mirroring `python/compile/kernels/ref.py`), so the default build trains
+//! mirroring `python/compile/kernels/ref.py`, executed by the
+//! cache-blocked microkernel in [`gemm`] with a sparsity-aware packing
+//! path for the compacted backward), so the default build trains
 //! end-to-end on any machine with zero FFI dependencies. The PJRT
 //! whole-graph path (`runtime/`, behind the `pjrt` feature) remains the
 //! fast AOT route when compiled artifacts exist.
@@ -33,6 +35,7 @@
 //! Layout conventions follow the paper throughout: activations NCHW,
 //! weights OIHW, row-major flattened `Vec<f32>`.
 
+pub mod gemm;
 pub mod im2col;
 pub mod layers;
 pub mod native;

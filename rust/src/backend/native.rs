@@ -1,10 +1,13 @@
 //! Pure-Rust [`Backend`]: img2col GEMM forward + the compacted sparse
 //! backward from [`super::sparse`], implemented over the plan/workspace
 //! path — one im2col per layer per fused fwd+bwd, every scratch buffer
-//! borrowed from the [`Conv2dPlan`]. Zero FFI, runs anywhere — this is
-//! the crate's default executor and the correctness anchor the fixture
-//! tests pin against `python/compile/kernels/ref.py`.
+//! borrowed from the [`Conv2dPlan`]. All GEMMs run through the
+//! cache-blocked microkernel in [`super::gemm`] (pack buffers live in the
+//! plan's workspace, so per-worker plans stay lock-free). Zero FFI, runs
+//! anywhere — this is the crate's default executor and the correctness
+//! anchor the fixture tests pin against `python/compile/kernels/ref.py`.
 
+use super::gemm::{self, gemm_into, Operand};
 use super::im2col::col_w_into;
 use super::plan::Conv2dPlan;
 use super::sparse::sparse_bwd_with_cols;
@@ -20,27 +23,6 @@ impl NativeBackend {
     /// A native backend (stateless; equivalent to `NativeBackend::default()`).
     pub fn new() -> NativeBackend {
         NativeBackend
-    }
-}
-
-/// C(m×n) = A(m×k) · B(k×n) into a caller-owned buffer (zeroed first,
-/// allocation reused).
-fn gemm_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut Vec<f32>) {
-    assert_eq!(a.len(), m * k, "gemm lhs length");
-    assert_eq!(b.len(), k * n, "gemm rhs length");
-    c.clear();
-    c.resize(m * n, 0f32);
-    for i in 0..m {
-        let crow = &mut c[i * n..][..n];
-        for (p, &av) in a[i * k..][..k].iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..][..n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
     }
 }
 
@@ -61,7 +43,16 @@ impl Backend for NativeBackend {
         let (ho, wo) = (cfg.hout(), cfg.wout());
         plan.build_cols(x); // cached for the backward's dW GEMM
         col_w_into(&cfg, w, &mut plan.cw);
-        gemm_into(m, n, cfg.cout, &plan.cols, &plan.cw, &mut plan.ycol); // (M, Cout)
+        // ycol = cols · col_W  (M, Cout), blocked kernel, pack reused
+        gemm_into(
+            m,
+            n,
+            cfg.cout,
+            Operand::Dense(&plan.cols),
+            Operand::Dense(&plan.cw),
+            &mut plan.ycol,
+            &mut plan.ws.pack,
+        );
 
         // (M, Cout) -> NCHW, folding the bias in during the transpose
         let mut y = vec![0f32; cfg.out_len()];
@@ -88,7 +79,11 @@ impl Backend for NativeBackend {
     ) -> ConvGrads {
         let cfg = *plan.cfg();
         if plan.cols_valid {
-            debug_assert!(plan.cols_match(x), "plan cols were cached from a different input");
+            // Always-on, release builds included: a backward running
+            // against a *different* input's cached columns silently
+            // corrupts dW, so the cheap length + endpoint-bits
+            // fingerprint fails loudly instead of letting it through.
+            assert!(plan.cols_match(x), "plan cols were cached from a different input");
         } else {
             plan.build_cols(x);
         }
@@ -98,9 +93,7 @@ impl Backend for NativeBackend {
     }
 
     fn gemm(&self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
-        let mut c = Vec::new();
-        gemm_into(m, k, n, a, b, &mut c);
-        c
+        gemm::gemm(m, k, n, a, b)
     }
 
     fn bias_add(&self, cfg: &Conv2d, y: &mut [f32], b: &[f32]) {
@@ -131,6 +124,18 @@ mod tests {
         // (1x3) . (3x2)
         let c = be.gemm(1, 3, 2, &[1.0, 2.0, 3.0], &[1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
         assert_eq!(c, vec![14.0, 32.0]);
+    }
+
+    #[test]
+    fn nan_in_b_propagates_through_zero_a_entries() {
+        // regression: the old kernel skipped a == 0.0 terms, silently
+        // swallowing NaN/Inf coming from the B operand
+        let be = NativeBackend::new();
+        let c = be.gemm(1, 2, 2, &[0.0, 1.0], &[f32::NAN, 1.0, 2.0, 3.0]);
+        assert!(c[0].is_nan(), "0·NaN must stay NaN, not be skipped");
+        assert_eq!(c[1], 3.0); // 0·1 + 1·3
+        let c = be.gemm(1, 1, 1, &[0.0], &[f32::INFINITY]);
+        assert!(c[0].is_nan(), "0·Inf must stay NaN, not be skipped");
     }
 
     #[test]

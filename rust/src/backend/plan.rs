@@ -13,7 +13,8 @@ use super::sparse::SparseBwdWorkspace;
 use super::Conv2d;
 
 /// Length + endpoint-bits fingerprint of an input slice (collision-proof
-/// enough for a debug assertion, free enough for the hot path).
+/// enough for the always-on stale-cols guard, free enough for the hot
+/// path).
 fn fingerprint(x: &[f32]) -> (usize, u64) {
     let head = x.first().map_or(0, |v| v.to_bits() as u64);
     let tail = x.last().map_or(0, |v| v.to_bits() as u64);
@@ -37,13 +38,16 @@ pub struct Conv2dPlan {
     pub(crate) cols_valid: bool,
     cols_builds: u64,
     /// Cheap fingerprint of the input the cached cols were built from
-    /// (debug-asserted by the planned backward to catch cache misuse).
+    /// (checked always-on by the planned backward to catch cache misuse).
     cols_src: (usize, u64),
     /// (N, Cout) col-form weights for the forward GEMM.
     pub(crate) cw: Vec<f32>,
     /// (M, Cout) forward GEMM output before the NCHW transpose.
     pub(crate) ycol: Vec<f32>,
-    /// Sparse-backward scratch (compacted gradient / weight views).
+    /// Sparse-backward scratch (compacted dW/dX accumulators) plus the
+    /// GEMM pack panels. Living here — one set per plan — keeps the
+    /// parallel executor's per-worker plans lock-free: no shared packing
+    /// state, no contention on the hot path.
     pub(crate) ws: SparseBwdWorkspace,
 }
 
@@ -88,10 +92,11 @@ impl Conv2dPlan {
     }
 
     /// Capacity of every buffer (cols, cw, ycol, then the backward
-    /// scratch). Regression tests assert these stay flat across steps.
+    /// scratch: dwk, dcols, and the two GEMM pack panels). Regression
+    /// tests assert these stay flat across steps.
     pub fn buffer_caps(&self) -> [usize; 7] {
-        let [gck, dwk, cwk, dcols] = self.ws.caps();
-        [self.cols.capacity(), self.cw.capacity(), self.ycol.capacity(), gck, dwk, cwk, dcols]
+        let [dwk, dcols, pa, pb] = self.ws.caps();
+        [self.cols.capacity(), self.cw.capacity(), self.ycol.capacity(), dwk, dcols, pa, pb]
     }
 
     /// Materialize im2col(x) into the plan's column buffer and mark it live.
@@ -102,9 +107,10 @@ impl Conv2dPlan {
         self.cols_src = fingerprint(x);
     }
 
-    /// Debug guard: were the cached columns built from this `x`? (A cheap
-    /// length + endpoint fingerprint — catches the cache-misuse pattern of
-    /// a forward on one input followed by a backward on another.)
+    /// Stale-cols guard: were the cached columns built from this `x`? (A
+    /// cheap length + endpoint fingerprint — catches the cache-misuse
+    /// pattern of a forward on one input followed by a backward on
+    /// another. Checked always-on, release builds included.)
     pub(crate) fn cols_match(&self, x: &[f32]) -> bool {
         self.cols_valid && self.cols_src == fingerprint(x)
     }

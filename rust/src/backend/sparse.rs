@@ -4,6 +4,7 @@
 //! Sec. "Scheduled Sparse BP". Mirrors `ref.py::importance_ref`,
 //! `topk_mask_ref`, `keep_k_from_drop_rate`, `sparse_bwd_compact_ref`.
 
+use super::gemm::{gemm_into, GemmPack, Operand};
 use super::im2col::{col2img, im2col};
 use super::{Conv2d, ConvGrads};
 use crate::flops::keep_channels;
@@ -43,12 +44,18 @@ pub fn channel_importance(cfg: &Conv2d, g: &[f32]) -> Vec<f32> {
 
 /// Indices of the `keep` largest importances, ascending. Ties break toward
 /// the lower channel index (matching the stable argsort in the reference).
+///
+/// A NaN importance means the upstream gradients have diverged; comparing
+/// NaN would silently collapse the sort order (and select different
+/// channels per run/platform), so this fails loudly instead of training
+/// on garbage selections.
 pub fn topk_channels(imp: &[f32], keep: usize) -> Vec<usize> {
+    if let Some(bad) = imp.iter().position(|v| v.is_nan()) {
+        panic!("channel importance[{bad}] is NaN: upstream gradients diverged");
+    }
     let keep = keep.min(imp.len());
     let mut order: Vec<usize> = (0..imp.len()).collect();
-    order.sort_by(|&a, &b| {
-        imp[b].partial_cmp(&imp[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
-    });
+    order.sort_by(|&a, &b| imp[b].partial_cmp(&imp[a]).expect("not NaN").then(a.cmp(&b)));
     let mut kept = order[..keep].to_vec();
     kept.sort_unstable();
     kept
@@ -65,30 +72,28 @@ pub fn select_channels(cfg: &Conv2d, g: &[f32], drop_rate: f64) -> Vec<usize> {
     topk_channels(&channel_importance(cfg, g), keep)
 }
 
-/// Scratch buffers for [`sparse_bwd_with_cols`]: the compacted col-form
-/// gradient (`gck`, M × k'), compacted dW accumulator (`dwk`, N × k'),
-/// compacted weight view (`cwk`, N × k') and the col-form dx (`dcols`,
-/// M × N). Starts empty; every call resizes in place, so steady-state use
-/// allocates nothing (the workspace-reuse tests pin this).
+/// Scratch buffers for [`sparse_bwd_with_cols`]: the compacted dW
+/// accumulator (`dwk`, N × k'), the col-form dx (`dcols`, M × N), and the
+/// GEMM pack panels. Earlier revisions also materialized a compacted
+/// gradient (`gck`) and weight view (`cwk`); both are gone — the
+/// sparsity-aware GEMM gathers kept channels straight from the NCHW
+/// gradient and the OIHW weights while packing
+/// ([`Operand::KeptChannels`] / [`Operand::KeptRows`]). Starts empty;
+/// every call resizes in place, so steady-state use allocates nothing
+/// (the workspace-reuse tests pin this).
 #[derive(Debug, Clone, Default)]
 pub struct SparseBwdWorkspace {
-    pub(crate) gck: Vec<f32>,
     pub(crate) dwk: Vec<f32>,
-    pub(crate) cwk: Vec<f32>,
     pub(crate) dcols: Vec<f32>,
+    pub(crate) pack: GemmPack,
 }
 
 impl SparseBwdWorkspace {
-    /// Capacity of each buffer (gck, dwk, cwk, dcols).
+    /// Capacity of each buffer (dwk, dcols, packed A, packed B).
     pub fn caps(&self) -> [usize; 4] {
-        [self.gck.capacity(), self.dwk.capacity(), self.cwk.capacity(), self.dcols.capacity()]
+        let [pa, pb] = self.pack.caps();
+        [self.dwk.capacity(), self.dcols.capacity(), pa, pb]
     }
-}
-
-/// Zero-fill `buf` to `len` elements, reusing its allocation.
-fn reuse(buf: &mut Vec<f32>, len: usize) {
-    buf.clear();
-    buf.resize(len, 0.0);
 }
 
 /// Compacted img2col backward with static keep indices:
@@ -129,37 +134,18 @@ pub fn sparse_bwd_with_cols(
     ws: &mut SparseBwdWorkspace,
 ) -> ConvGrads {
     let (m, n, kp) = (cfg.m(), cfg.n(), keep_idx.len());
-    let (ho, wo) = (cfg.hout(), cfg.wout());
+    let hw = cfg.hout() * cfg.wout();
     assert!((1..=cfg.cout).contains(&kp), "keep count out of range");
     assert_eq!(cols.len(), m * n, "column matrix length");
     assert_eq!(g.len(), cfg.out_len(), "gradient length");
 
-    // col[dY]' — gather kept channels while transposing NCHW -> (M, k')
-    reuse(&mut ws.gck, m * kp);
-    for b in 0..cfg.bt {
-        for (pos, &o) in keep_idx.iter().enumerate() {
-            let plane = &g[(b * cfg.cout + o) * ho * wo..][..ho * wo];
-            for (pix, &gv) in plane.iter().enumerate() {
-                ws.gck[(b * ho * wo + pix) * kp + pos] = gv;
-            }
-        }
-    }
+    // col[dY]' is a *view*: the sparsity-aware GEMM gathers the kept
+    // channels out of the NCHW gradient while packing, so dropped
+    // channels are never read and nothing (M × k')-sized materializes.
+    let gck = Operand::KeptChannels { g, keep: keep_idx, cout: cfg.cout, hw };
 
-    // dW' = col_Xᵀ · col[dY]'  (N × k'), accumulated row-by-row over M
-    reuse(&mut ws.dwk, n * kp);
-    for mi in 0..m {
-        let crow = &cols[mi * n..][..n];
-        let grow = &ws.gck[mi * kp..][..kp];
-        for (ni, &cv) in crow.iter().enumerate() {
-            if cv == 0.0 {
-                continue;
-            }
-            let dst = &mut ws.dwk[ni * kp..][..kp];
-            for (d, &gv) in dst.iter_mut().zip(grow) {
-                *d += cv * gv;
-            }
-        }
-    }
+    // dW' = col_Xᵀ · col[dY]'  (N × k')
+    gemm_into(n, m, kp, Operand::Transposed(cols), gck, &mut ws.dwk, &mut ws.pack);
     // scatter into full (Cout, Cin, K, K)
     let mut dw = vec![0f32; cfg.w_len()];
     for (pos, &o) in keep_idx.iter().enumerate() {
@@ -169,41 +155,25 @@ pub fn sparse_bwd_with_cols(
         }
     }
 
-    // col_W' (k' columns of col_W, gathered straight from OIHW weights),
-    // then col[dX] = col[dY]' · col_W'ᵀ
+    // col[dX] = col[dY]' · col_W'ᵀ — col_W' is not materialized either:
+    // the rhs packs the kept rows of the OIHW weights directly.
     let dx = if need_dx {
         assert_eq!(w.len(), cfg.w_len(), "weight length");
-        reuse(&mut ws.cwk, n * kp);
-        for (pos, &o) in keep_idx.iter().enumerate() {
-            let wrow = &w[o * n..][..n];
-            for (ni, &wv) in wrow.iter().enumerate() {
-                ws.cwk[ni * kp + pos] = wv;
-            }
-        }
-        reuse(&mut ws.dcols, m * n);
-        for mi in 0..m {
-            let grow = &ws.gck[mi * kp..][..kp];
-            let drow = &mut ws.dcols[mi * n..][..n];
-            for (ni, d) in drow.iter_mut().enumerate() {
-                let wrow = &ws.cwk[ni * kp..][..kp];
-                let mut acc = 0f32;
-                for (gv, wv) in grow.iter().zip(wrow) {
-                    acc += gv * wv;
-                }
-                *d = acc;
-            }
-        }
+        let cwk = Operand::KeptRows { data: w, keep: keep_idx };
+        gemm_into(m, kp, n, gck, cwk, &mut ws.dcols, &mut ws.pack);
         col2img(cfg, &ws.dcols)
     } else {
         Vec::new()
     };
 
-    // db' — column sums of col[dY]', scattered to kept channels
+    // db' — Σ g over (batch, pixel) per kept channel
     let mut db = vec![0f32; cfg.cout];
-    for mi in 0..m {
-        let grow = &ws.gck[mi * kp..][..kp];
-        for (pos, &o) in keep_idx.iter().enumerate() {
-            db[o] += grow[pos];
+    for b in 0..cfg.bt {
+        for &o in keep_idx {
+            let plane = &g[(b * cfg.cout + o) * hw..][..hw];
+            for &gv in plane {
+                db[o] += gv;
+            }
         }
     }
 
@@ -248,6 +218,23 @@ mod tests {
         assert_eq!(topk_channels(&[0.5, 0.5, 0.5, 0.5], 2), vec![0, 1]);
         assert_eq!(topk_channels(&[0.1, 0.9, 0.3, 0.9], 2), vec![1, 3]);
         assert_eq!(topk_channels(&[0.1, 0.9, 0.3], 5), vec![0, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "is NaN")]
+    fn nan_importance_fails_loudly() {
+        // regression: partial_cmp(..).unwrap_or(Equal) used to let a NaN
+        // importance scramble the sort order silently
+        topk_channels(&[0.5, f32::NAN, 0.1], 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "is NaN")]
+    fn select_channels_rejects_nan_gradient() {
+        let c = cfg();
+        let mut g = vec![1.0f32; c.out_len()];
+        g[0] = f32::NAN;
+        select_channels(&c, &g, 0.5);
     }
 
     #[test]

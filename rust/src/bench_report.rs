@@ -33,8 +33,11 @@ use crate::util::bench::fmt_ns;
 use crate::util::json::{num, obj, s, Json};
 
 /// Version stamped into every report; readers reject other versions with
-/// the typed [`ReportError::SchemaVersion`].
-pub const SCHEMA_VERSION: u64 = 1;
+/// the typed [`ReportError::SchemaVersion`]. Version 2 added the
+/// `gemm_speedup_*` conv ratios (blocked microkernel vs naive reference)
+/// and the per-preset `sparse_gemm_*` metrics (sparsity-aware backward
+/// GEMMs on the preset's conv shapes, dense vs D=0.5).
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// The ssProp drop rate the ledger columns are evaluated at (the paper's
 /// D* = 0.8, Eq. 9).
@@ -125,11 +128,13 @@ pub struct PresetReport {
     /// Canonical model spec (`backend::zoo`), e.g. `resnet-tiny-w8-b1`.
     pub spec: String,
     /// Median step times in nanoseconds (`serial_step_{dense,d80}_ns`,
-    /// `parallel_step_{dense,d80}_t{2,4}_ns`). Machine-dependent — never
-    /// gated, recorded for the trajectory table.
+    /// `parallel_step_{dense,d80}_t{2,4}_ns`,
+    /// `sparse_gemm_{dense,d50}_ns`). Machine-dependent — never gated,
+    /// recorded for the trajectory table.
     pub timings_ns: BTreeMap<String, f64>,
     /// Speedup ratios (`parallel_speedup_{dense,d80}_t{2,4}`,
-    /// `bwd_speedup_d80`). Gated within [`Tolerance::ratio_band`].
+    /// `bwd_speedup_d80`, `sparse_gemm_speedup_d50`). Gated within
+    /// [`Tolerance::ratio_band`].
     pub ratios: BTreeMap<String, f64>,
     /// Eq. 6/9 FLOPs ledger (exact).
     pub flops: FlopsLedger,
@@ -148,8 +153,9 @@ pub struct BenchReport {
     pub mode: String,
     /// Executor-section batch size ([`BENCH_BATCH`]); gated exactly.
     pub batch: usize,
-    /// Conv-microbench ratios from the fixed-geometry fused section
-    /// (`fused_speedup_*`, `bwd_speedup_*`); gated within the ratio band.
+    /// Conv-microbench ratios from the fixed-geometry sections
+    /// (`fused_speedup_*`, `bwd_speedup_*`, `gemm_speedup_{m}x{k}x{n}`);
+    /// gated within the ratio band.
     pub conv_ratios: BTreeMap<String, f64>,
     /// Per-preset sections, run order.
     pub presets: Vec<PresetReport>,

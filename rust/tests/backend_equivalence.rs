@@ -4,8 +4,13 @@
 //! fresh-allocation reference (`sparse_bwd_compact`) over randomized
 //! geometries, prove `need_dx = false` is a pure subset of the full
 //! backward, and regression-test that consecutive `train_step`s reuse
-//! every plan buffer without changing the loss trajectory.
+//! every plan buffer without changing the loss trajectory. Also pins the
+//! blocked GEMM microkernel to the naive reference over randomized
+//! shapes (dense within 1e-6·k, the sparsity-aware kept-channel views
+//! exact) and proves the always-on stale-cols guard trips on a backward
+//! against a different input's cached columns.
 
+use ssprop::backend::gemm::{gemm, gemm_into, gemm_ref, GemmPack, Operand};
 use ssprop::backend::sparse::{select_channels, sparse_bwd_compact};
 use ssprop::backend::{simple_cnn, Backend, Conv2d, Conv2dPlan, NativeBackend, SimpleCnnCfg};
 use ssprop::util::prop::check_no_shrink;
@@ -54,6 +59,114 @@ fn case_data(case: &Case) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
 fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len(), "length mismatch");
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// One randomized GEMM shape (deliberately small and odd, so edges of the
+/// MR×NR register tile are hit constantly) plus a data seed.
+#[derive(Debug, Clone)]
+struct GemmCase {
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+}
+
+fn gen_gemm(r: &mut Pcg) -> GemmCase {
+    GemmCase {
+        m: 1 + r.below(40) as usize,
+        k: 1 + r.below(40) as usize,
+        n: 1 + r.below(40) as usize,
+        seed: r.next_u64(),
+    }
+}
+
+#[test]
+fn blocked_gemm_matches_reference_over_random_shapes() {
+    check_no_shrink("gemm-eq-ref", 96, gen_gemm, |c| {
+        let mut rng = Pcg::new(c.seed, 3);
+        let a: Vec<f32> = (0..c.m * c.k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..c.k * c.n).map(|_| rng.normal()).collect();
+        let got = gemm(c.m, c.k, c.n, &a, &b);
+        let want = gemm_ref(c.m, c.k, c.n, &a, &b);
+        max_abs_diff(&got, &want) <= 1e-6 * c.k as f32
+    });
+}
+
+#[test]
+fn blocked_gemm_matches_reference_at_tile_and_block_edges() {
+    // Fixed shapes straddling the microkernel's blocking constants:
+    // multiples and non-multiples of MR=4/NR=8, and sizes crossing the
+    // KC=256 depth block and MC=64 row block.
+    let mut rng = Pcg::new(0xB10C, 7);
+    for (m, k, n) in [(4, 8, 8), (5, 9, 9), (64, 256, 8), (65, 257, 17), (130, 300, 33)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let got = gemm(m, k, n, &a, &b);
+        let want = gemm_ref(m, k, n, &a, &b);
+        let diff = max_abs_diff(&got, &want);
+        assert!(diff <= 1e-6 * k as f32, "({m},{k},{n}): diff {diff}");
+    }
+}
+
+#[test]
+fn kept_channel_gemm_is_exact_vs_explicit_gather() {
+    // The sparsity-aware views (KeptChannels lhs, KeptRows rhs — the dX
+    // GEMM's shape) must be *bitwise* equal to running the dense kernel
+    // on explicitly gathered matrices: same kernel, same accumulation
+    // order, the gather is only fused into packing. Covers empty keep,
+    // all-kept, and the paper's D=0.5 selection.
+    check_no_shrink("sparse-gemm-exact", 64, gen_case, |case| {
+        let c = case.cfg;
+        let (_, w, _, g) = case_data(case);
+        let hw = c.hout() * c.wout();
+        let (m, n) = (c.bt * hw, c.n());
+        let mut pk = GemmPack::new();
+        let all: Vec<usize> = (0..c.cout).collect();
+        for keep in [Vec::new(), all, select_channels(&c, &g, 0.5)] {
+            let kp = keep.len();
+            // explicit (M, k') gather of the kept gradient channels
+            let mut gck = vec![0f32; m * kp];
+            for b in 0..c.bt {
+                for (pos, &o) in keep.iter().enumerate() {
+                    for pix in 0..hw {
+                        gck[(b * hw + pix) * kp + pos] = g[(b * c.cout + o) * hw + pix];
+                    }
+                }
+            }
+            // explicit (k', N) gather of the kept OIHW weight rows
+            let mut wk = vec![0f32; kp * n];
+            for (pos, &o) in keep.iter().enumerate() {
+                wk[pos * n..][..n].copy_from_slice(&w[o * n..][..n]);
+            }
+            let gview = Operand::KeptChannels { g: &g, keep: &keep, cout: c.cout, hw };
+            let wview = Operand::KeptRows { data: &w, keep: &keep };
+            let mut got = Vec::new();
+            gemm_into(m, kp, n, gview, wview, &mut got, &mut pk);
+            if got != gemm(m, kp, n, &gck, &wk) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+#[should_panic(expected = "plan cols were cached from a different input")]
+fn backward_on_different_input_trips_the_stale_cols_guard() {
+    // Always-on guard (not a debug_assert): forward on one input, then a
+    // backward against another input's x must fail loudly instead of
+    // silently computing dW from the wrong cached columns.
+    let be = NativeBackend::new();
+    let cfg = Conv2d { bt: 1, cin: 1, h: 4, w: 4, cout: 2, k: 3, stride: 1, padding: 1 };
+    let mut rng = Pcg::new(11, 4);
+    let x1: Vec<f32> = (0..cfg.in_len()).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..cfg.w_len()).map(|_| rng.normal()).collect();
+    let g: Vec<f32> = (0..cfg.out_len()).map(|_| rng.normal()).collect();
+    let mut plan = Conv2dPlan::new(cfg);
+    be.conv2d_fwd_planned(&mut plan, &x1, &w, None);
+    let mut x2 = x1.clone();
+    *x2.last_mut().unwrap() += 1.0;
+    be.conv2d_bwd_planned_with(&mut plan, &x2, &w, &g, &[0, 1], true);
 }
 
 #[test]

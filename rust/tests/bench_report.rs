@@ -30,8 +30,19 @@ fn committed_baseline_has_every_tracked_preset() {
     for p in &rep.presets {
         assert!(!p.timings_ns.is_empty(), "{}: no step times recorded", p.spec);
         assert!(p.ratios.contains_key("bwd_speedup_d80"), "{}: missing model bwd ratio", p.spec);
+        assert!(
+            p.ratios.contains_key("sparse_gemm_speedup_d50"),
+            "{}: missing sparse-GEMM ratio",
+            p.spec
+        );
     }
-    for key in ["fused_speedup_dense", "fused_speedup_d80", "bwd_speedup_d80_nodx"] {
+    for key in [
+        "fused_speedup_dense",
+        "fused_speedup_d80",
+        "bwd_speedup_d80_nodx",
+        "gemm_speedup_256x288x128",
+        "gemm_speedup_1024x576x64",
+    ] {
         assert!(rep.conv_ratios.contains_key(key), "baseline missing conv ratio {key}");
     }
 }
@@ -126,8 +137,8 @@ fn gate_flags_missing_preset_as_problem() {
 #[test]
 fn schema_version_mismatch_is_a_typed_error() {
     let text = std::fs::read_to_string(BASELINE).unwrap();
-    let bumped = text.replace("\"schema_version\": 1", "\"schema_version\": 999");
-    assert_ne!(text, bumped, "baseline should carry schema_version 1");
+    let bumped = text.replace("\"schema_version\": 2", "\"schema_version\": 999");
+    assert_ne!(text, bumped, "baseline should carry schema_version 2");
     match BenchReport::parse(&bumped) {
         Err(ReportError::SchemaVersion { found, expected }) => {
             assert_eq!(found, 999);
