@@ -4,7 +4,12 @@
 //!
 //! On the default build this drives the **native** backend over any zoo
 //! `--model` spec (default: the residual/BatchNorm `resnet-tiny` preset,
-//! the native counterpart of the paper's ResNet rows):
+//! the native counterpart of the paper's ResNet rows), then closes the
+//! loop as a client of the inference serving path: the ssProp-trained
+//! model is checkpointed, BN-folded where the spec has BatchNorms
+//! (`ssprop::backend::fold`), and a batch of classify requests is
+//! answered through `ssprop::coordinator::Server` — the same path the
+//! `ssprop serve` subcommand runs:
 //!
 //! ```bash
 //! cargo run --release --example classify -- --model resnet-tiny-w8-b2 \
@@ -101,11 +106,17 @@ mod pjrt_example {
 #[cfg(not(feature = "pjrt"))]
 mod native_example {
     use std::io::Write as _;
+    use std::path::Path;
 
     use anyhow::Result;
-    use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
+    use ssprop::backend::fold;
+    use ssprop::coordinator::{
+        ClassifyRequest, NativeTrainConfig, NativeTrainer, ServeConfig, Server,
+    };
     use ssprop::schedule::{DropScheduler, Schedule};
+    use ssprop::util::bench::fmt_ns;
     use ssprop::util::cli::Args;
+    use ssprop::util::rng::Pcg;
 
     fn train(
         model: &str,
@@ -157,6 +168,42 @@ mod native_example {
             )?;
         }
         println!("\nloss curves -> results/classify_loss.csv");
+
+        // Close the loop as a serving client: checkpoint the ssProp run,
+        // fold its BatchNorms where the spec has any (BN-less specs serve
+        // the raw checkpoint), and drain a queue of classify requests
+        // through the same batched path as `ssprop serve`.
+        let ck = Path::new("results/classify_ck.tstore");
+        ssprop.save_checkpoint(ck, epochs)?;
+        let folded = Path::new("results/classify_ck_folded.tstore");
+        let serve_ck = match fold::fold_checkpoint(ck, folded) {
+            Ok(s) => {
+                println!("folded {} BatchNorm(s) -> {}", s.folded, folded.display());
+                folded
+            }
+            Err(err) if err.downcast_ref::<fold::FoldError>().is_some() => {
+                println!("({err}; serving the raw checkpoint)");
+                ck
+            }
+            Err(err) => return Err(err),
+        };
+        let cfg = ServeConfig { batch: 8, threads: 2 };
+        let mut srv = Server::from_checkpoint(serve_ck, None, cfg)?;
+        let n_in = srv.input_len();
+        let mut rng = Pcg::new(7, 13);
+        let reqs: Vec<ClassifyRequest> = (0..32u64)
+            .map(|id| ClassifyRequest { id, pixels: (0..n_in).map(|_| rng.normal()).collect() })
+            .collect();
+        let (answers, stats) = srv.serve(reqs);
+        println!(
+            "serve: {} answers in {} batches  p50 {}  p99 {}  {:.1} req/s",
+            stats.answered,
+            stats.batches,
+            fmt_ns(stats.p50_ns as f64),
+            fmt_ns(stats.p99_ns as f64),
+            stats.throughput_rps
+        );
+        println!("first answer: request {} -> class {}", answers[0].id, answers[0].class);
         println!("(with --features pjrt + artifacts, this example drives the AOT ResNet-18)");
         Ok(())
     }

@@ -1,0 +1,265 @@
+//! BatchNorm folding: the checkpoint → folded-model conversion behind the
+//! inference/serving path (`docs/ARCHITECTURE.md` § Inference path).
+//!
+//! In eval mode a [`super::layers::BatchNorm2d`] is a per-channel affine
+//! map `y = scale·x + shift` with `scale = γ/√(rv+ε)` and
+//! `shift = β − rm·scale` — constants once training stops. Folding bakes
+//! that map into the *preceding* conv: `w'[o,·] = w[o,·]·scale[o]`
+//! (OIHW rows) and `b'[o] = b[o]·scale[o] + shift[o]`, after which the BN
+//! node is removed from the graph and its consumers rewire to the conv's
+//! output slot ([`Graph`]'s fold pass). The folded model answers eval
+//! queries without ever touching BN state — one GEMM per conv, no
+//! normalization pass — and `resnet-tiny`'s BN-less 1×1 projection
+//! shortcuts pass through untouched.
+//!
+//! Conv node names survive the fold, so folded state tensors keep their
+//! stable `param['{name}.w']` / `param['{name}.b']` keys and a folded
+//! checkpoint roundtrips bitwise. Folded checkpoints are marked by the
+//! [`FOLDED_TAG`] suffix on the recorded artifact
+//! (`native_{dataset}:{spec}#folded`): [`load_folded`] rebuilds the
+//! BN-free graph from the spec and restores the folded values into it.
+//! Failures are typed ([`FoldError`]): folding a spec with no BatchNorm is
+//! a [`FoldError::NoBatchNorm`] no-op signal, never a panic.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::zoo::{build_model, parse_model_spec};
+use super::Graph;
+use crate::coordinator::checkpoint::{self, artifact_dataset, artifact_model_spec};
+use crate::data;
+use crate::tensorstore::Tensor;
+
+/// Artifact-name suffix marking a folded checkpoint
+/// (`native_{dataset}:{spec}#folded`). The `#` cannot appear in the zoo's
+/// spec grammar, so raw and folded artifacts never collide.
+pub const FOLDED_TAG: &str = "#folded";
+
+/// Typed failures of the fold/serve conversion path. All variants are
+/// recoverable signals, not panics; callers downcast through
+/// [`anyhow::Error`] to react to specific cases (the serve CLI treats
+/// [`FoldError::NoBatchNorm`] as "serve unfolded").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FoldError {
+    /// The model has no foldable BatchNorm layer — folding is a no-op, and
+    /// the explicit conversion reports it instead of writing a copy.
+    NoBatchNorm {
+        /// Canonical model spec of the checkpoint.
+        spec: String,
+    },
+    /// The checkpoint is already a folded artifact; folding twice would
+    /// silently re-scale weights that no longer have BN state.
+    AlreadyFolded {
+        /// The artifact recorded in the checkpoint.
+        artifact: String,
+    },
+    /// The artifact field does not name a `native_{dataset}:{spec}` pair
+    /// this crate can rebuild a model from.
+    BadArtifact {
+        /// The artifact recorded in the checkpoint.
+        artifact: String,
+    },
+    /// [`load_folded`] was pointed at a checkpoint that is not marked
+    /// folded (train-time checkpoints load via the trainer instead).
+    NotFolded {
+        /// The artifact recorded in the checkpoint.
+        artifact: String,
+    },
+}
+
+impl fmt::Display for FoldError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FoldError::NoBatchNorm { spec } => {
+                write!(f, "model spec {spec:?} has no BatchNorm layer to fold (nothing to do)")
+            }
+            FoldError::AlreadyFolded { artifact } => {
+                write!(f, "checkpoint artifact {artifact:?} is already folded")
+            }
+            FoldError::BadArtifact { artifact } => {
+                write!(f, "artifact {artifact:?} does not name a native dataset:model pair")
+            }
+            FoldError::NotFolded { artifact } => {
+                write!(f, "checkpoint artifact {artifact:?} is not a folded checkpoint")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FoldError {}
+
+/// `true` when `artifact` carries the [`FOLDED_TAG`] suffix.
+pub fn is_folded(artifact: &str) -> bool {
+    artifact.ends_with(FOLDED_TAG)
+}
+
+/// The folded counterpart of a raw artifact name.
+pub fn folded_artifact(artifact: &str) -> String {
+    format!("{artifact}{FOLDED_TAG}")
+}
+
+/// Strip the [`FOLDED_TAG`] suffix, if present.
+pub fn base_artifact(artifact: &str) -> &str {
+    artifact.strip_suffix(FOLDED_TAG).unwrap_or(artifact)
+}
+
+/// Fold every eligible BatchNorm of a live model into its producing conv
+/// (see the module docs for the math and eligibility rules); returns the
+/// number of BN nodes folded away — `0` means the model had nothing to
+/// fold and is unchanged. The folded model computes the *eval* forward
+/// only; train it no further.
+pub fn fold_graph(model: &mut Graph) -> usize {
+    model.fold_batchnorm()
+}
+
+/// What [`fold_checkpoint`] did.
+#[derive(Debug, Clone)]
+pub struct FoldSummary {
+    /// Canonical model spec of the converted checkpoint.
+    pub spec: String,
+    /// BatchNorm nodes folded away.
+    pub folded: usize,
+    /// Artifact name written to the folded checkpoint (tagged).
+    pub artifact: String,
+    /// State leaves in the folded checkpoint.
+    pub leaves: usize,
+}
+
+/// Rebuild the (unfolded) model a native checkpoint artifact describes,
+/// resolving the input geometry and class count through the dataset
+/// registry. Typed [`FoldError::BadArtifact`] when the artifact is not a
+/// `native_{dataset}:{spec}` pair.
+pub(crate) fn model_for_artifact(artifact: &str) -> Result<Graph> {
+    let base = base_artifact(artifact);
+    let (Some(ds_name), Some(spec)) = (artifact_dataset(base), artifact_model_spec(base)) else {
+        return Err(FoldError::BadArtifact { artifact: artifact.to_string() }.into());
+    };
+    let ds = data::spec(ds_name)
+        .ok_or_else(|| FoldError::BadArtifact { artifact: artifact.to_string() })?;
+    let parsed = parse_model_spec(spec)?;
+    build_model(&parsed, ds.channels, ds.img, ds.classes, 0)
+}
+
+/// Convert a trained native checkpoint at `src` into a folded serving
+/// checkpoint at `dst`: restore the recorded model, fold its BatchNorms,
+/// and save the BN-free state under the [`FOLDED_TAG`]-marked artifact
+/// (epoch preserved). Typed errors: [`FoldError::NoBatchNorm`] when the
+/// spec has nothing to fold, [`FoldError::AlreadyFolded`] on a folded
+/// input, [`FoldError::BadArtifact`] on an unrecognized artifact.
+pub fn fold_checkpoint(src: &Path, dst: &Path) -> Result<FoldSummary> {
+    let (state, artifact, epoch) = checkpoint::load_tensors(src)?;
+    if is_folded(&artifact) {
+        return Err(FoldError::AlreadyFolded { artifact }.into());
+    }
+    let mut model = model_for_artifact(&artifact)?;
+    let tensors: Vec<(String, Tensor)> = state.into_iter().collect();
+    model.load_state_tensors(&tensors).context("restoring checkpoint state")?;
+    let folded = model.fold_batchnorm();
+    if folded == 0 {
+        return Err(FoldError::NoBatchNorm { spec: model.spec().to_string() }.into());
+    }
+    let new_state: HashMap<String, Tensor> = model.state_tensors().into_iter().collect();
+    let leaves = new_state.len();
+    let out_artifact = folded_artifact(&artifact);
+    checkpoint::save_tensors(dst, &new_state, &out_artifact, epoch)?;
+    Ok(FoldSummary { spec: model.spec().to_string(), folded, artifact: out_artifact, leaves })
+}
+
+/// Load a folded checkpoint back into a BN-free model: rebuild the graph
+/// from the artifact's spec, replay the structural fold, and restore the
+/// folded values — parameters roundtrip bitwise. Returns
+/// `(model, artifact, epoch)`. Typed [`FoldError::NotFolded`] when the
+/// checkpoint is not marked folded; truncated or corrupt tensor data is
+/// rejected by the tensorstore reader before any state is applied.
+pub fn load_folded(path: &Path) -> Result<(Graph, String, usize)> {
+    let (state, artifact, epoch) = checkpoint::load_tensors(path)?;
+    if !is_folded(&artifact) {
+        return Err(FoldError::NotFolded { artifact }.into());
+    }
+    let mut model = model_for_artifact(&artifact)?;
+    // Replay the structural fold on the freshly built graph (the interim
+    // weight scaling is irrelevant — every parameter is overwritten by the
+    // folded state below).
+    model.fold_batchnorm();
+    let tensors: Vec<(String, Tensor)> = state.into_iter().collect();
+    model.load_state_tensors(&tensors).context("restoring folded state")?;
+    Ok((model, artifact, epoch))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("ssprop_fold_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn artifact_tag_helpers() {
+        assert!(!is_folded("native_cifar10:resnet-tiny-w8-b1"));
+        let f = folded_artifact("native_cifar10:resnet-tiny-w8-b1");
+        assert_eq!(f, "native_cifar10:resnet-tiny-w8-b1#folded");
+        assert!(is_folded(&f));
+        assert_eq!(base_artifact(&f), "native_cifar10:resnet-tiny-w8-b1");
+        assert_eq!(base_artifact("plain"), "plain");
+    }
+
+    #[test]
+    fn folding_a_bnless_spec_is_a_typed_no_op() {
+        let dir = tmp_dir("nobn");
+        let src = dir.join("vgg.tstore");
+        let ds = data::spec("mnist").unwrap();
+        let parsed = parse_model_spec("vgg-tiny-w4").unwrap();
+        let model = build_model(&parsed, ds.channels, ds.img, ds.classes, 3).unwrap();
+        let state: HashMap<String, Tensor> = model.state_tensors().into_iter().collect();
+        checkpoint::save_tensors(&src, &state, "native_mnist:vgg-tiny-w4", 0).unwrap();
+        let err = fold_checkpoint(&src, &dir.join("out.tstore")).unwrap_err();
+        match err.downcast_ref::<FoldError>() {
+            Some(FoldError::NoBatchNorm { spec }) => assert_eq!(spec, "vgg-tiny-w4"),
+            other => panic!("expected NoBatchNorm, got {other:?}: {err}"),
+        }
+        assert!(!dir.join("out.tstore").exists(), "no-op must not write a folded file");
+    }
+
+    #[test]
+    fn unrecognized_artifacts_are_typed_errors() {
+        let dir = tmp_dir("badart");
+        let src = dir.join("odd.tstore");
+        let state: HashMap<String, Tensor> =
+            [("param['w']".to_string(), Tensor::from_f32(vec![1], &[1.0]))].into_iter().collect();
+        checkpoint::save_tensors(&src, &state, "resnet18_cifar10", 0).unwrap();
+        let err = fold_checkpoint(&src, &dir.join("out.tstore")).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<FoldError>(), Some(FoldError::BadArtifact { .. })),
+            "{err}"
+        );
+        // unknown dataset in an otherwise well-formed artifact
+        checkpoint::save_tensors(&src, &state, "native_svhn:vgg-tiny-w4", 0).unwrap();
+        let err = fold_checkpoint(&src, &dir.join("out.tstore")).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<FoldError>(), Some(FoldError::BadArtifact { .. })),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn load_folded_rejects_raw_checkpoints() {
+        let dir = tmp_dir("raw");
+        let src = dir.join("raw.tstore");
+        let parsed = parse_model_spec("vgg-tiny-w4").unwrap();
+        let model = build_model(&parsed, 1, 12, 4, 3).unwrap();
+        let state: HashMap<String, Tensor> = model.state_tensors().into_iter().collect();
+        checkpoint::save_tensors(&src, &state, "native_mnist:vgg-tiny-w4", 0).unwrap();
+        let err = load_folded(&src).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<FoldError>(), Some(FoldError::NotFolded { .. })),
+            "{err}"
+        );
+    }
+}

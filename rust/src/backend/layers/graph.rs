@@ -476,6 +476,125 @@ impl Graph {
         (loss_sum / bt as f64, correct as f64 / bt as f64)
     }
 
+    /// Inference-only forward walk: logits for `bt` examples in eval mode
+    /// (Dropout is the identity, BatchNorm normalizes with its running
+    /// statistics), run over the graph's own persistent workspaces so conv
+    /// im2col plans are keyed once and reused across requests — the
+    /// serving hot path ([`crate::coordinator::serve`]) allocates no
+    /// gradient accumulators and no backward scratch. Unlike
+    /// [`Graph::eval_batch`] there is no throwaway workspace set and no
+    /// loss computation; label-side bookkeeping stays with the caller.
+    /// Eval-mode layers are per-example, so the logits of example `i` are
+    /// bitwise identical whatever batch it arrives in.
+    pub fn infer_logits(&mut self, be: &dyn Backend, x: &[f32], bt: usize) -> Vec<f32> {
+        assert!(bt > 0, "empty inference batch");
+        assert_eq!(x.len(), bt * self.in_shape().volume(), "inference batch geometry");
+        self.ensure_ws(bt);
+        let mut ws = std::mem::take(&mut self.ws);
+        let ctx = FwdCtx { train: false, step: self.step, example_offset: 0 };
+        let mut acts = self.forward_collect(be, x, bt, &mut ws, &ctx);
+        self.ws = ws;
+        acts.pop().expect("forward_collect returns at least the input slot")
+    }
+
+    /// How many nodes consume `slot` (an Add merge of a slot with itself
+    /// counts twice).
+    fn slot_consumers(&self, slot: usize) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| match &n.op {
+                NodeOp::Layer { input, .. } => usize::from(*input == slot),
+                NodeOp::Add { a, b } => usize::from(*a == slot) + usize::from(*b == slot),
+            })
+            .sum()
+    }
+
+    /// Fold every eligible BatchNorm into the conv producing its input —
+    /// `w'[o,·] = w[o,·]·scale[o]`, `b'[o] = b[o]·scale[o] + shift[o]` with
+    /// `(scale, shift)` from [`Layer::bn_fold_factors`] — then remove the
+    /// BN node and rewire its consumers to the conv's output slot. A BN is
+    /// eligible when its producer is a conv layer whose output *only* that
+    /// BN consumes; anything else (BN on the graph input, BN after a
+    /// non-conv node, a conv fanning out to a skip connection) is left in
+    /// place, as are BN-less convs like `resnet-tiny`'s 1×1 projections.
+    /// Conv node names are untouched, so the folded graph's state tensors
+    /// keep their stable `param['{name}.w']` keys. Returns the number of
+    /// BN nodes folded away. The resulting graph computes the *eval*
+    /// forward only — training it would recompute batch statistics the
+    /// fold already baked in.
+    pub(crate) fn fold_batchnorm(&mut self) -> usize {
+        let mut folded = 0usize;
+        let mut j = 0usize;
+        while j < self.nodes.len() {
+            let factors = match &self.nodes[j].op {
+                NodeOp::Layer { layer, input } => layer.bn_fold_factors().map(|f| (f, *input)),
+                NodeOp::Add { .. } => None,
+            };
+            let Some(((scale, shift), in_slot)) = factors else {
+                j += 1;
+                continue;
+            };
+            let producer_is_conv = in_slot != INPUT_SLOT
+                && match &self.nodes[in_slot - 1].op {
+                    NodeOp::Layer { layer, .. } => layer.conv_geom().is_some(),
+                    NodeOp::Add { .. } => false,
+                };
+            if !producer_is_conv || self.slot_consumers(in_slot) != 1 {
+                j += 1;
+                continue;
+            }
+            // Scale the producer conv's weights row-wise (OIHW: one
+            // contiguous cin·k·k row per output channel) and fold the
+            // shift through its bias.
+            let NodeOp::Layer { layer, .. } = &mut self.nodes[in_slot - 1].op else {
+                unreachable!("producer checked to be a conv layer node");
+            };
+            let cout = layer.conv_geom().expect("producer is a conv").cout;
+            assert_eq!(scale.len(), cout, "BN channels must match conv cout");
+            let (mut w, mut b) = {
+                let ps = layer.params();
+                let w = ps.iter().find(|p| p.field == "w").expect("conv has weights");
+                let b = ps.iter().find(|p| p.field == "b").expect("conv has a bias");
+                (w.data.to_vec(), b.data.to_vec())
+            };
+            let row = w.len() / cout;
+            for o in 0..cout {
+                let s = scale[o];
+                for v in &mut w[o * row..(o + 1) * row] {
+                    *v *= s;
+                }
+                b[o] = b[o] * s + shift[o];
+            }
+            layer.load_param("w", w).expect("folded weights keep their shape");
+            layer.load_param("b", b).expect("folded bias keeps its shape");
+            // Remove the BN node and compact the slot space: its output
+            // slot j+1 redirects to the conv's slot, every later slot
+            // shifts down by one.
+            self.nodes.remove(j);
+            self.shapes.remove(j + 1);
+            self.ws.remove(j);
+            for node in &mut self.nodes {
+                let remap = |s: &mut usize| {
+                    if *s == j + 1 {
+                        *s = in_slot;
+                    } else if *s > j + 1 {
+                        *s -= 1;
+                    }
+                };
+                match &mut node.op {
+                    NodeOp::Layer { input, .. } => remap(input),
+                    NodeOp::Add { a, b } => {
+                        remap(a);
+                        remap(b);
+                    }
+                }
+            }
+            folded += 1;
+            // The node that was at j+1 now sits at j — revisit it.
+        }
+        folded
+    }
+
     /// Parameters as named tensors — `param['{name}.{field}']`, the
     /// checkpoint format shared with the AOT path (and bit-compatible with
     /// the legacy SimpleCNN's `conv{l}`/`fc` naming). Node names may
@@ -776,6 +895,111 @@ mod tests {
         assert_eq!((set.convs[0].cin, set.convs[0].cout, set.convs[0].k), (1, 4, 3));
         assert!(set.dropouts.is_empty());
         assert!(!set.convs[0].counted_bn, "no BN in this graph");
+    }
+
+    fn conv_bn_chain() -> Graph {
+        let shape = Shape::Spatial { c: 1, h: 4, w: 4 };
+        let mut rng = Pcg::new(17, 1);
+        let mut b = Graph::builder("foldable", shape);
+        let conv = Conv2dLayer::init(&mut rng, 1, 4, 4, 2, 3, 1, 1);
+        let c = b.layer("c0", INPUT_SLOT, Box::new(conv)).unwrap();
+        let bn = b.layer("bn0", c, Box::new(BatchNorm2d::new(2, 4, 4))).unwrap();
+        let r = b.layer("", bn, Box::new(ReLU)).unwrap();
+        let gap = b.layer("", r, Box::new(GlobalAvgPool::new(2, 4, 4))).unwrap();
+        b.layer("fc", gap, Box::new(Linear::init(&mut rng, 2, 3))).unwrap();
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn fold_batchnorm_removes_bn_and_preserves_eval_forward() {
+        let be = NativeBackend::new();
+        let mut m = conv_bn_chain();
+        // a couple of training steps give the BN nontrivial running stats
+        let mut rng = Pcg::new(23, 5);
+        let x: Vec<f32> = (0..4 * 16).map(|_| rng.normal()).collect();
+        let y = vec![0, 1, 2, 0];
+        for _ in 0..3 {
+            m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        }
+        let before = m.infer_logits(&be, &x, 4);
+        let layers_before = m.num_layers();
+        assert_eq!(m.fold_batchnorm(), 1);
+        assert_eq!(m.num_layers(), layers_before - 1);
+        assert!(!m.describe().contains("bn"), "{}", m.describe());
+        let names: Vec<String> = m.state_tensors().into_iter().map(|(n, _)| n).collect();
+        assert!(names.contains(&"param['c0.w']".to_string()), "{names:?}");
+        assert!(!names.iter().any(|n| n.contains("bn0")), "{names:?}");
+        let after = m.infer_logits(&be, &x, 4);
+        for (a, b) in before.iter().zip(&after) {
+            assert!((a - b).abs() <= 1e-5 * (1.0 + a.abs()), "folded logits drift: {a} vs {b}");
+        }
+        // a second pass finds nothing left to fold
+        assert_eq!(m.fold_batchnorm(), 0);
+    }
+
+    #[test]
+    fn fold_batchnorm_skips_ineligible_bns() {
+        let shape = Shape::Spatial { c: 2, h: 4, w: 4 };
+        let mut rng = Pcg::new(19, 1);
+        // BN directly on the graph input: no producer conv, must stay.
+        let mut b = Graph::builder("bn-on-input", shape);
+        let bn = b.layer("bn", INPUT_SLOT, Box::new(BatchNorm2d::new(2, 4, 4))).unwrap();
+        let gap = b.layer("", bn, Box::new(GlobalAvgPool::new(2, 4, 4))).unwrap();
+        b.layer("fc", gap, Box::new(Linear::init(&mut rng, 2, 2))).unwrap();
+        let mut m = b.finish().unwrap();
+        assert_eq!(m.fold_batchnorm(), 0);
+        assert!(m.describe().contains("bn"));
+
+        // Conv output fanning out to a skip consumer besides the BN: the
+        // fold would corrupt the skip branch, so it must be skipped.
+        let mut b = Graph::builder("fanout", shape);
+        let conv = Conv2dLayer::init(&mut rng, 2, 4, 4, 2, 3, 1, 1);
+        let c = b.layer("c0", INPUT_SLOT, Box::new(conv)).unwrap();
+        let bn = b.layer("bn0", c, Box::new(BatchNorm2d::new(2, 4, 4))).unwrap();
+        let sum = b.add(bn, c).unwrap();
+        let gap = b.layer("", sum, Box::new(GlobalAvgPool::new(2, 4, 4))).unwrap();
+        b.layer("fc", gap, Box::new(Linear::init(&mut rng, 2, 2))).unwrap();
+        let mut m = b.finish().unwrap();
+        assert_eq!(m.fold_batchnorm(), 0);
+        assert!(m.describe().contains("bn"));
+    }
+
+    #[test]
+    fn infer_logits_matches_eval_batch_and_reuses_plans() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        let mut rng = Pcg::new(29, 3);
+        let x: Vec<f32> = (0..6 * 36).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..6).map(|i| (i % 3) as i32).collect();
+        let logits = m.infer_logits(&be, &x, 6);
+        assert_eq!(logits.len(), 6 * 3);
+        // batched logits equal each example inferred alone, bitwise
+        for i in 0..6 {
+            let one = m.infer_logits(&be, &x[i * 36..(i + 1) * 36], 1);
+            for (a, b) in logits[i * 3..(i + 1) * 3].iter().zip(&one) {
+                assert_eq!(a.to_bits(), b.to_bits(), "example {i}");
+            }
+        }
+        // eval_batch's accuracy agrees with the argmax of these logits
+        let (_, acc) = m.eval_batch(&be, &x, &y);
+        let hits = (0..6)
+            .filter(|&i| {
+                let row = &logits[i * 3..(i + 1) * 3];
+                let arg = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(c, _)| c)
+                    .unwrap();
+                arg as i32 == y[i]
+            })
+            .count();
+        assert_eq!(acc, hits as f64 / 6.0);
+        // repeated same-batch inference rebuilds no conv plans beyond the
+        // per-request im2col (capacity fingerprints stay flat)
+        let caps = m.plan_caps();
+        m.infer_logits(&be, &x, 6);
+        assert_eq!(m.plan_caps(), caps, "plan capacities must not grow across requests");
     }
 
     #[test]

@@ -244,6 +244,15 @@ pub trait Layer: std::fmt::Debug + Send + Sync {
     /// Contribute this layer to the Eq. 6–9 FLOPs inventory.
     fn account_flops(&self, _set: &mut LayerSet) {}
 
+    /// BatchNorm folding hook: per-channel `(scale, shift)` such that this
+    /// layer's *eval* forward is exactly `y = scale·x + shift` — `Some` only
+    /// for [`BatchNorm2d`], whose running statistics and γ/β the fold pass
+    /// ([`crate::backend::fold`]) multiplies into the preceding conv.
+    /// Default: `None` (the layer cannot be folded away).
+    fn bn_fold_factors(&self) -> Option<(Vec<f32>, Vec<f32>)> {
+        None
+    }
+
     /// `true` when the training forward normalizes over the *batch*
     /// dimension (BatchNorm): the data-parallel executor must reduce this
     /// layer's statistics partials across shards — at a barrier, in fixed

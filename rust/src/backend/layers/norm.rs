@@ -64,6 +64,22 @@ impl BatchNorm2d {
         self.c
     }
 
+    /// Per-channel affine factors `(scale, shift)` that reproduce this
+    /// layer's *eval* forward as `y = scale·x + shift`:
+    /// `scale = γ/√(rv+ε)`, `shift = β − rm·scale` — computed with the
+    /// layer's own ε and the same FP operations the eval path uses, so
+    /// BN folding ([`crate::backend::fold`]) inherits its numerics.
+    pub fn fold_factors(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut scale = vec![0f32; self.c];
+        let mut shift = vec![0f32; self.c];
+        for ch in 0..self.c {
+            let inv = 1.0 / (self.running_var[ch] + self.eps).sqrt();
+            scale[ch] = self.gamma[ch] * inv;
+            shift[ch] = self.beta[ch] - self.running_mean[ch] * scale[ch];
+        }
+        (scale, shift)
+    }
+
     fn hw(&self) -> usize {
         self.h * self.w
     }
@@ -173,6 +189,10 @@ impl Layer for BatchNorm2d {
 
     fn needs_batch_stats(&self) -> bool {
         true
+    }
+
+    fn bn_fold_factors(&self) -> Option<(Vec<f32>, Vec<f32>)> {
+        Some(self.fold_factors())
     }
 
     fn fwd_stat_partials(&self, x: &[f32], bt: usize) -> Vec<f32> {
@@ -462,6 +482,35 @@ mod tests {
         assert!(bn.out_shape(&Shape::Spatial { c: 2, h: 2, w: 2 }).is_err());
         assert!(bn.out_shape(&Shape::Flat { features: 12 }).is_err());
         assert!(bn.needs_batch_stats());
+    }
+
+    #[test]
+    fn fold_factors_reproduce_eval_forward() {
+        let be = NativeBackend::new();
+        let mut bn = BatchNorm2d::new(2, 2, 2);
+        bn.load_param("w", vec![1.3, 0.7]).unwrap();
+        bn.load_param("b", vec![0.2, -0.1]).unwrap();
+        bn.load_param("rm", vec![0.5, -1.2]).unwrap();
+        bn.load_param("rv", vec![2.0, 0.3]).unwrap();
+        let x = data(3, 2, 4, 23);
+        let mut ws = LayerWs::default();
+        let y = bn.forward(&be, &x, 3, &mut ws, &ctx(false));
+        let (scale, shift) = bn.fold_factors();
+        let (c, hw) = (2usize, 4usize);
+        for b in 0..3 {
+            for ch in 0..c {
+                let base = (b * c + ch) * hw;
+                for i in 0..hw {
+                    let want = scale[ch] * x[base + i] + shift[ch];
+                    let got = y[base + i];
+                    assert!(
+                        (want - got).abs() < 1e-6 * (1.0 + got.abs()),
+                        "fold factors must match eval: {want} vs {got}"
+                    );
+                }
+            }
+        }
+        assert!(bn.bn_fold_factors().is_some(), "BN advertises foldability");
     }
 
     #[test]

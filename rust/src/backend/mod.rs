@@ -30,11 +30,14 @@
 //! channel selection and BatchNorm batch statistics globally at barrier
 //! rendezvous, and tree-reduces gradients in a fixed order so runs are
 //! bit-reproducible. See `docs/ARCHITECTURE.md` for the layer map and the
-//! sharding/reduction design.
+//! sharding/reduction design. For inference, [`fold`] converts trained
+//! checkpoints into BN-free folded models that the no-workspace eval walk
+//! and the `serve` subcommand run.
 //!
 //! Layout conventions follow the paper throughout: activations NCHW,
 //! weights OIHW, row-major flattened `Vec<f32>`.
 
+pub mod fold;
 pub mod gemm;
 pub mod im2col;
 pub mod layers;

@@ -544,6 +544,45 @@ impl ParallelExecutor {
         }
         (loss_sum / bt as f64, correct as f64 / bt as f64)
     }
+
+    /// Sharded inference: the logits of `bt` examples in global example
+    /// order, **bit-identical** to [`Graph::infer_logits`] at every thread
+    /// count — eval-mode layers are per-example, shards are contiguous
+    /// ranges, and the shard outputs concatenate in shard-index order.
+    /// This is the serving path's core primitive
+    /// ([`crate::coordinator::serve`]): per-worker forward workspaces (conv
+    /// plans included) persist across calls, and no gradient accumulators
+    /// or backward scratch are ever allocated. Panics on malformed batch
+    /// geometry (the request queue only coalesces well-formed requests).
+    pub fn eval_logits(
+        &mut self,
+        model: &Graph,
+        backend: &dyn Backend,
+        x: &[f32],
+        bt: usize,
+    ) -> Vec<f32> {
+        let n_in = model.in_shape().volume();
+        assert!(bt > 0 && x.len() == bt * n_in, "bad inference batch geometry");
+        let nlayers = model.num_layers();
+        let shards = shard_ranges(bt, self.cfg.threads);
+        self.ensure_worker_ws(model, &shards);
+
+        let mut outs: Vec<Vec<f32>> = shards.iter().map(|_| Vec::new()).collect();
+        std::thread::scope(|s| {
+            let worker_iter = shards.iter().zip(self.worker_ws.iter_mut()).zip(outs.iter_mut());
+            for ((range, wws), out) in worker_iter {
+                let range = range.clone();
+                s.spawn(move || {
+                    let sbt = range.end - range.start;
+                    let xs = &x[range.start * n_in..range.end * n_in];
+                    let ctx = FwdCtx { train: false, step: 0, example_offset: range.start };
+                    let mut acts = model.forward_collect(backend, xs, sbt, wws, &ctx);
+                    *out = acts.swap_remove(nlayers);
+                });
+            }
+        });
+        outs.concat()
+    }
 }
 
 #[cfg(test)]
@@ -646,6 +685,23 @@ mod tests {
             .map(|wws| wws.iter().filter_map(|w| w.plan_caps()).collect())
             .collect();
         assert_eq!(caps, caps2, "shrinking then regrowing the batch must reuse capacity");
+    }
+
+    #[test]
+    fn sharded_logits_match_serial_bitwise() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        let (x, y) = batch(10, 33);
+        m.train_step(&be, &x, &y, 0.5, 0.05).unwrap();
+        let want = m.infer_logits(&be, &x, 10);
+        for threads in [1usize, 2, 3, 8] {
+            let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+            let got = exec.eval_logits(&m, &be, &x, 10);
+            assert_eq!(got.len(), want.len());
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "t{threads} logit {i}");
+            }
+        }
     }
 
     #[test]

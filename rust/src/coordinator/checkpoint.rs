@@ -85,6 +85,14 @@ pub fn artifact_model_spec(artifact: &str) -> Option<&str> {
     artifact.split_once(':').map(|(_, spec)| spec)
 }
 
+/// Dataset name recorded in a native checkpoint's artifact field
+/// (`native_{dataset}:{model_spec}`), or `None` for artifacts without one.
+/// The serving path resolves the input geometry and class count through
+/// this (`data::spec`), so a checkpoint is self-describing.
+pub fn artifact_dataset(artifact: &str) -> Option<&str> {
+    artifact.strip_prefix("native_").and_then(|rest| rest.split_once(':')).map(|(ds, _)| ds)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,6 +121,13 @@ mod tests {
         assert_eq!(artifact_model_spec("native_mnist:vgg-tiny-w8"), Some("vgg-tiny-w8"));
         assert_eq!(artifact_model_spec("resnet18_cifar10"), None);
         assert_eq!(artifact_model_spec("native_mnist"), None);
+    }
+
+    #[test]
+    fn artifact_dataset_extraction() {
+        assert_eq!(artifact_dataset("native_cifar10:resnet-tiny-w8-b1"), Some("cifar10"));
+        assert_eq!(artifact_dataset("resnet18_cifar10"), None);
+        assert_eq!(artifact_dataset("native_mnist"), None);
     }
 
     #[test]

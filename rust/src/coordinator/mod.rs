@@ -17,15 +17,21 @@
 //!   manifest order, executes through PJRT, and re-binds state via
 //!   `feeds_input`. `ddpm.rs` reuses the same state machinery for
 //!   generation.
+//!
+//! The inference-side counterpart is [`serve`]: a [`Server`] answers
+//! batched classify requests over a BN-folded checkpoint
+//! ([`crate::backend::fold`]) with no training state allocated at all.
 
 pub mod checkpoint;
 pub mod metrics;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod serve;
 
 pub use metrics::TrainMetrics;
 pub use native::{NativeTrainConfig, NativeTrainer};
+pub use serve::{Answer, ClassifyRequest, ServeConfig, ServeError, ServeStats, Server};
 #[cfg(feature = "pjrt")]
 pub use pjrt::{run_with_state, Trainer};
 

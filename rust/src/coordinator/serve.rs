@@ -1,0 +1,434 @@
+//! Inference serving: batched classify requests over a (BN-folded) model.
+//!
+//! This is the coordinator's answer path, built from three pieces the rest
+//! of the crate already provides (`docs/ARCHITECTURE.md` § Inference
+//! path):
+//!
+//! * **Folded model.** [`Server::from_checkpoint`] accepts either a folded
+//!   checkpoint (artifact tagged [`crate::backend::fold::FOLDED_TAG`]) or a
+//!   raw training checkpoint, which it folds in memory on load
+//!   ([`crate::backend::fold`]). Specs with no BatchNorm simply serve
+//!   unfolded — a no-op, not an error. When the caller names the model it
+//!   expects (`--model`), a mismatch against the checkpoint's recorded
+//!   spec is the typed [`ServeError::SpecMismatch`] naming both.
+//! * **No-workspace walk.** Answers run through
+//!   [`ParallelExecutor::eval_logits`] — forward-only, per-worker conv
+//!   plans persisting across requests, no gradient accumulators or
+//!   backward scratch ever allocated, Dropout and BN-training branches
+//!   skipped (eval mode).
+//! * **Batching queue.** [`Server::serve`] drains a FIFO of
+//!   [`ClassifyRequest`]s, coalescing up to [`ServeConfig::batch`] requests
+//!   per inference call (the tail batch may be smaller) and sharding each
+//!   coalesced batch across the executor's threads. Answers come back in
+//!   request order and are **bit-identical** to serving the same requests
+//!   one at a time at any thread count: eval-mode layers are per-example,
+//!   so neither coalescing nor sharding changes a single bit
+//!   (`rust/tests/determinism.rs` pins this at t ∈ {1, 2, 4}).
+//!
+//! [`ServeStats`] reports the latency distribution (p50/p99 over
+//! per-request queue→answer times) and throughput, which the `ssprop
+//! serve --json` path records as `BENCH_serve.json` through
+//! [`crate::bench_report`].
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::backend::fold::{self, FoldError};
+use crate::backend::zoo::parse_model_spec;
+use crate::backend::{default_backend, Backend, ExecConfig, Graph, ParallelExecutor};
+use crate::coordinator::checkpoint;
+
+/// Typed serving failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The caller asked to serve one model but the checkpoint records
+    /// another; serving it anyway would answer with the wrong network.
+    SpecMismatch {
+        /// Canonical spec recorded in the checkpoint artifact.
+        saved: String,
+        /// Canonical spec the caller requested.
+        requested: String,
+    },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::SpecMismatch { saved, requested } => write!(
+                f,
+                "checkpoint holds model {saved:?} but {requested:?} was requested; \
+                 pass the matching --model or drop the flag to use the recorded spec"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Serving knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Most requests coalesced into one inference call (≥ 1; the queue
+    /// tail may produce a smaller final batch).
+    pub batch: usize,
+    /// Worker threads each coalesced batch is sharded over (≥ 1).
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { batch: 32, threads: 1 }
+    }
+}
+
+/// One queued classification request: an input image in the model's
+/// flattened NCHW geometry plus a caller-chosen id echoed in the answer.
+#[derive(Debug, Clone)]
+pub struct ClassifyRequest {
+    /// Caller's correlation id (answers keep request order regardless).
+    pub id: u64,
+    /// Flattened input, length = the model's input volume.
+    pub pixels: Vec<f32>,
+}
+
+/// One answered request.
+#[derive(Debug, Clone)]
+pub struct Answer {
+    /// The request's correlation id.
+    pub id: u64,
+    /// Argmax class (first index on exact ties — deterministic).
+    pub class: usize,
+    /// The full logit row, for callers that want scores or top-k.
+    pub logits: Vec<f32>,
+}
+
+/// Latency/throughput record of one [`Server::serve`] drain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeStats {
+    /// Requests answered.
+    pub answered: usize,
+    /// Inference calls issued (coalesced batches, tail included).
+    pub batches: usize,
+    /// Median per-request latency (nanoseconds, queue→answer; every
+    /// request in a coalesced batch shares its batch's wall time).
+    pub p50_ns: u64,
+    /// 99th-percentile per-request latency (nanoseconds, nearest-rank).
+    pub p99_ns: u64,
+    /// Wall time of the whole drain (nanoseconds).
+    pub total_ns: u64,
+    /// Answers per second over the whole drain.
+    pub throughput_rps: f64,
+}
+
+/// A loaded model plus the executor state needed to answer classify
+/// requests. Construct once per checkpoint and reuse — per-worker forward
+/// plans persist across [`Server::serve`] calls.
+pub struct Server {
+    model: Graph,
+    backend: Box<dyn Backend>,
+    exec: ParallelExecutor,
+    cfg: ServeConfig,
+    n_in: usize,
+    classes: usize,
+    folded: usize,
+    artifact: String,
+    epoch: usize,
+}
+
+impl fmt::Debug for Server {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Server")
+            .field("spec", &self.model.spec())
+            .field("artifact", &self.artifact)
+            .field("folded", &self.folded)
+            .field("cfg", &self.cfg)
+            .finish()
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate().skip(1) {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+impl Server {
+    /// Load a checkpoint into a serving model. Folded checkpoints
+    /// ([`crate::backend::fold::FOLDED_TAG`]) restore directly into the
+    /// BN-free graph; raw training checkpoints are folded in memory (a
+    /// spec with no BatchNorm serves unfolded — a skip, not an error).
+    /// `requested`, when given, must canonicalize to the checkpoint's
+    /// recorded spec or the typed [`ServeError::SpecMismatch`] is
+    /// returned naming both.
+    pub fn from_checkpoint(
+        path: &Path,
+        requested: Option<&str>,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        let (state, artifact, epoch) = checkpoint::load_tensors(path)?;
+        let base = fold::base_artifact(&artifact);
+        let saved_spec = checkpoint::artifact_model_spec(base)
+            .ok_or_else(|| FoldError::BadArtifact { artifact: artifact.clone() })?
+            .to_string();
+        if let Some(req) = requested {
+            let req_canon = parse_model_spec(req)?.canonical();
+            if req_canon != saved_spec {
+                let err = ServeError::SpecMismatch { saved: saved_spec, requested: req_canon };
+                return Err(err.into());
+            }
+        }
+        let mut model = fold::model_for_artifact(&artifact)?;
+        let tensors: Vec<_> = state.into_iter().collect();
+        let folded = if fold::is_folded(&artifact) {
+            // Replay the structural fold, then restore the folded values
+            // over it (the checkpoint holds exactly the folded keys).
+            let n = fold::fold_graph(&mut model);
+            model.load_state_tensors(&tensors)?;
+            n
+        } else {
+            model.load_state_tensors(&tensors)?;
+            fold::fold_graph(&mut model)
+        };
+        let n_in = model.in_shape().volume();
+        let classes = model.out_features();
+        let cfg = ServeConfig { batch: cfg.batch.max(1), threads: cfg.threads.max(1) };
+        let exec = ParallelExecutor::new(ExecConfig::with_threads(cfg.threads));
+        Ok(Server {
+            model,
+            backend: default_backend(),
+            exec,
+            cfg,
+            n_in,
+            classes,
+            folded,
+            artifact,
+            epoch,
+        })
+    }
+
+    /// Canonical spec of the serving model.
+    pub fn spec(&self) -> &str {
+        self.model.spec()
+    }
+
+    /// Artifact name recorded in the loaded checkpoint.
+    pub fn artifact(&self) -> &str {
+        &self.artifact
+    }
+
+    /// Epoch recorded in the loaded checkpoint.
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// BatchNorm nodes folded away at load (0 = serving unfolded).
+    pub fn folded(&self) -> usize {
+        self.folded
+    }
+
+    /// Flattened input length one request must carry.
+    pub fn input_len(&self) -> usize {
+        self.n_in
+    }
+
+    /// Classifier output count.
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Current serving knobs.
+    pub fn config(&self) -> ServeConfig {
+        self.cfg
+    }
+
+    /// Re-shard future batches over `threads` workers (clamped to ≥ 1).
+    /// Grown worker workspaces are kept; answers stay bit-identical.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.cfg.threads = threads.max(1);
+        self.exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+    }
+
+    /// Change the coalescing limit (clamped to ≥ 1); answers stay
+    /// bit-identical — batching never changes a logit.
+    pub fn set_batch(&mut self, batch: usize) {
+        self.cfg.batch = batch.max(1);
+    }
+
+    /// Raw logits of a prepared batch (`bt` rows), through the same
+    /// forward-only sharded walk [`Server::serve`] uses.
+    pub fn logits(&mut self, x: &[f32], bt: usize) -> Vec<f32> {
+        self.exec.eval_logits(&self.model, self.backend.as_ref(), x, bt)
+    }
+
+    /// Mean (loss, accuracy) of a labelled batch on the serving model —
+    /// the eval cross-check the determinism suite compares answers
+    /// against.
+    pub fn eval_batch(&mut self, x: &[f32], y: &[i32]) -> (f64, f64) {
+        self.exec.eval_batch(&self.model, self.backend.as_ref(), x, y)
+    }
+
+    /// Drain a request queue: coalesce up to [`ServeConfig::batch`]
+    /// requests per inference call (FIFO; the final batch may be smaller),
+    /// shard each call across the thread pool, and answer in request
+    /// order. Panics if a request's pixel length does not match the
+    /// model's input volume. Returns the answers plus the latency/
+    /// throughput record of the drain.
+    pub fn serve(&mut self, requests: Vec<ClassifyRequest>) -> (Vec<Answer>, ServeStats) {
+        let t_all = Instant::now();
+        let mut queue: VecDeque<ClassifyRequest> = requests.into();
+        let mut answers = Vec::with_capacity(queue.len());
+        let mut latencies: Vec<u64> = Vec::with_capacity(queue.len());
+        let mut batches = 0usize;
+        while !queue.is_empty() {
+            let take = queue.len().min(self.cfg.batch);
+            let t0 = Instant::now();
+            let mut ids = Vec::with_capacity(take);
+            let mut x = Vec::with_capacity(take * self.n_in);
+            for _ in 0..take {
+                let r = queue.pop_front().expect("queue checked non-empty");
+                assert_eq!(r.pixels.len(), self.n_in, "classify request geometry");
+                ids.push(r.id);
+                x.extend_from_slice(&r.pixels);
+            }
+            let logits = self.exec.eval_logits(&self.model, self.backend.as_ref(), &x, take);
+            let batch_ns = t0.elapsed().as_nanos() as u64;
+            for (row, id) in ids.into_iter().enumerate() {
+                let lg = logits[row * self.classes..(row + 1) * self.classes].to_vec();
+                answers.push(Answer { id, class: argmax(&lg), logits: lg });
+                latencies.push(batch_ns);
+            }
+            batches += 1;
+        }
+        let total_ns = t_all.elapsed().as_nanos() as u64;
+        latencies.sort_unstable();
+        let pct = |p: usize| -> u64 {
+            if latencies.is_empty() {
+                0
+            } else {
+                latencies[(latencies.len() - 1) * p / 100]
+            }
+        };
+        let throughput_rps = if total_ns == 0 {
+            0.0
+        } else {
+            answers.len() as f64 * 1e9 / total_ns as f64
+        };
+        let stats = ServeStats {
+            answered: answers.len(),
+            batches,
+            p50_ns: pct(50),
+            p99_ns: pct(99),
+            total_ns,
+            throughput_rps,
+        };
+        (answers, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    use super::*;
+    use crate::backend::build_model;
+    use crate::tensorstore::Tensor;
+    use crate::util::rng::Pcg;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("ssprop_serve_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn save_preset(path: &std::path::Path, dataset: &str, spec: &str, seed: u64) {
+        let ds = crate::data::spec(dataset).unwrap();
+        let parsed = parse_model_spec(spec).unwrap();
+        let model = build_model(&parsed, ds.channels, ds.img, ds.classes, seed).unwrap();
+        let state: HashMap<String, Tensor> = model.state_tensors().into_iter().collect();
+        let artifact = format!("native_{dataset}:{}", parsed.canonical());
+        checkpoint::save_tensors(path, &state, &artifact, 1).unwrap();
+    }
+
+    fn requests(n: usize, n_in: usize, seed: u64) -> Vec<ClassifyRequest> {
+        let mut rng = Pcg::new(seed, 9);
+        (0..n)
+            .map(|i| ClassifyRequest {
+                id: i as u64,
+                pixels: (0..n_in).map(|_| rng.normal()).collect(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn spec_mismatch_is_typed_and_names_both() {
+        let dir = tmp_dir("mismatch");
+        let ck = dir.join("vgg.tstore");
+        save_preset(&ck, "mnist", "vgg-tiny-w4", 5);
+        let err =
+            Server::from_checkpoint(&ck, Some("vgg-tiny-w8"), ServeConfig::default()).unwrap_err();
+        match err.downcast_ref::<ServeError>() {
+            Some(ServeError::SpecMismatch { saved, requested }) => {
+                assert_eq!(saved, "vgg-tiny-w4");
+                assert_eq!(requested, "vgg-tiny-w8");
+            }
+            other => panic!("expected SpecMismatch, got {other:?}: {err}"),
+        }
+        let msg = err.to_string();
+        assert!(msg.contains("vgg-tiny-w4") && msg.contains("vgg-tiny-w8"), "{msg}");
+    }
+
+    #[test]
+    fn bn_less_checkpoints_serve_unfolded() {
+        let dir = tmp_dir("nobn");
+        let ck = dir.join("vgg.tstore");
+        save_preset(&ck, "mnist", "vgg-tiny-w4", 5);
+        let srv = Server::from_checkpoint(&ck, Some("vgg-tiny-w4"), ServeConfig::default())
+            .expect("no-BN spec must serve, not error");
+        assert_eq!(srv.folded(), 0);
+        assert_eq!(srv.spec(), "vgg-tiny-w4");
+    }
+
+    #[test]
+    fn resnet_checkpoints_fold_on_load_and_answer_in_order() {
+        let dir = tmp_dir("resnet");
+        let ck = dir.join("rn.tstore");
+        save_preset(&ck, "mnist", "resnet-tiny-w4-b1", 11);
+        let cfg = ServeConfig { batch: 4, threads: 2 };
+        let mut srv = Server::from_checkpoint(&ck, None, cfg).unwrap();
+        assert!(srv.folded() > 0, "resnet-tiny carries BatchNorm to fold");
+        assert_eq!(srv.epoch(), 1);
+
+        let reqs = requests(7, srv.input_len(), 3);
+        let pixels: Vec<Vec<f32>> = reqs.iter().map(|r| r.pixels.clone()).collect();
+        let (answers, stats) = srv.serve(reqs);
+        assert_eq!(stats.answered, 7);
+        assert_eq!(stats.batches, 2, "7 requests at batch 4 coalesce as 4 + 3");
+        assert!(stats.p50_ns <= stats.p99_ns);
+        assert!(stats.throughput_rps > 0.0);
+
+        for (i, ans) in answers.iter().enumerate() {
+            assert_eq!(ans.id, i as u64, "answers keep request order");
+            let solo = srv.logits(&pixels[i], 1);
+            assert_eq!(solo.len(), ans.logits.len());
+            for (a, b) in ans.logits.iter().zip(&solo) {
+                assert_eq!(a.to_bits(), b.to_bits(), "batched answer {i} must be bitwise");
+            }
+            assert_eq!(ans.class, argmax(&solo));
+        }
+    }
+
+    #[test]
+    fn argmax_ties_break_to_first() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

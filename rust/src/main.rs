@@ -6,16 +6,22 @@
 //! artifact commands (train, ddpm, tables, figures) execute AOT-compiled
 //! graphs and require a build with `--features pjrt` plus `make artifacts`.
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Result};
-use ssprop::bench_report::{gate, trajectory, BenchReport, Tolerance};
-use ssprop::coordinator::{NativeTrainConfig, NativeTrainer};
+use ssprop::backend::fold;
+use ssprop::bench_report::{
+    gate, preset_ledger, trajectory, BenchReport, PresetReport, Tolerance, BENCH_BATCH,
+};
+use ssprop::coordinator::{ClassifyRequest, NativeTrainConfig, NativeTrainer, ServeConfig, Server};
 use ssprop::energy::{RTX_A5000, TPU_CORE};
 use ssprop::experiments::report::Table;
 use ssprop::experiments::{tables, Scale};
 use ssprop::schedule::{DropScheduler, Schedule};
+use ssprop::util::bench::fmt_ns;
 use ssprop::util::cli::Args;
+use ssprop::util::rng::Pcg;
 
 const USAGE: &str = "\
 ssprop — scheduled sparse back-propagation coordinator (paper reproduction)
@@ -39,6 +45,14 @@ native commands (no artifacts needed; pure-Rust backend):
                takes --depth/--width. --threads N shards each batch across N
                workers with deterministic gradient reduction; --include-tail
                also trains each epoch's leftover partial batch)
+  fold         bake a checkpoint's BatchNorm statistics into its conv
+               weights for serving: fold --checkpoint ck.tstore --out
+               folded.tstore (specs without BatchNorm are a typed no-op)
+  serve        answer batched classify requests from a checkpoint (folded
+               in memory when needed) and report p50/p99 latency +
+               throughput:  serve --checkpoint ck.tstore [--model SPEC]
+               [--requests 96] [--batch 32] [--threads 1] [--seed 0]
+               [--json results/BENCH_serve.json]
   datasets     print Table 1 (dataset geometry)
   presets      print Tables 2/3 (hyperparameters)
   flops        print FLOPs parity + Eq.10/11 lower-bound tables
@@ -134,6 +148,8 @@ fn main() -> Result<()> {
         }
         "energy" => tables::energy_report().print(),
         "bench-check" => cmd_bench_check(&args)?,
+        "fold" => cmd_fold(&args)?,
+        "serve" => cmd_serve(&args)?,
         "quickstart" => cmd_quickstart(&args)?,
         "train-native" => cmd_train_native(&args)?,
         other => {
@@ -211,6 +227,109 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
         bail!("bench-check FAILED: {} metric(s) out of tolerance", res.failures().len());
     }
     println!("\nbench-check OK: {} metrics compared within tolerance", res.diffs.len());
+    Ok(())
+}
+
+/// Checkpoint → folded-checkpoint conversion: bake BatchNorm statistics
+/// into the preceding conv weights (`backend::fold`) and write the BN-free
+/// state under the `#folded`-tagged artifact.
+fn cmd_fold(args: &Args) -> Result<()> {
+    let (Some(src), Some(dst)) = (args.get("checkpoint"), args.get("out")) else {
+        bail!("usage: ssprop fold --checkpoint ck.tstore --out folded.tstore");
+    };
+    let summary = fold::fold_checkpoint(Path::new(src), Path::new(dst))?;
+    println!("folded {} BatchNorm node(s) of {}", summary.folded, summary.spec);
+    println!("artifact         {}", summary.artifact);
+    println!("state leaves     {}", summary.leaves);
+    println!("checkpoint       {dst}");
+    Ok(())
+}
+
+/// Batched inference serving over a (BN-folded) checkpoint: drain a
+/// synthetic classify-request queue through the coalescing batcher and the
+/// sharded forward-only walk, report p50/p99 latency + throughput, and —
+/// with `--json` — record the run as a `BENCH_serve.json` bench report for
+/// the CI gate (docs/BENCHMARKS.md).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let Some(ck) = args.get("checkpoint") else {
+        bail!(
+            "usage: ssprop serve --checkpoint ck.tstore [--model SPEC] [--requests 96] \
+             [--batch 32] [--threads 1] [--seed 0] [--json PATH]"
+        );
+    };
+    let batch = parsed_flag(args, "batch", 32usize)?;
+    let n_requests = parsed_flag(args, "requests", 96usize)?;
+    if batch == 0 || n_requests == 0 {
+        bail!("--batch and --requests must be positive");
+    }
+    let threads = parse_threads(args)?;
+    let seed = parsed_flag(args, "seed", 0u64)?;
+    let mut srv =
+        Server::from_checkpoint(Path::new(ck), args.get("model"), ServeConfig { batch, threads })?;
+    let n_in = srv.input_len();
+    let make_requests = |seed: u64, n: usize| -> Vec<ClassifyRequest> {
+        let mut rng = Pcg::new(seed, 77);
+        (0..n)
+            .map(|i| ClassifyRequest {
+                id: i as u64,
+                pixels: (0..n_in).map(|_| rng.normal()).collect(),
+            })
+            .collect()
+    };
+
+    println!("== ssprop serve: {} ({} BN node(s) folded) ==\n", srv.spec(), srv.folded());
+    // Warm the worker plans, then take the measured drain, then the two
+    // reference drains the speedup ratios compare against: the same queue
+    // at one thread, and one request at a time.
+    srv.serve(make_requests(seed + 1, batch.min(n_requests)));
+    let (_answers, stats) = srv.serve(make_requests(seed, n_requests));
+    srv.set_threads(1);
+    srv.serve(make_requests(seed + 1, batch.min(n_requests)));
+    let (_, t1) = srv.serve(make_requests(seed, n_requests));
+    srv.set_threads(threads);
+    srv.set_batch(1);
+    let (_, single) = srv.serve(make_requests(seed, n_requests));
+    srv.set_batch(batch);
+
+    let serve_speedup = t1.total_ns.max(1) as f64 / stats.total_ns.max(1) as f64;
+    let batch_speedup = single.total_ns.max(1) as f64 / stats.total_ns.max(1) as f64;
+
+    println!("checkpoint       {ck} (epoch {})", srv.epoch());
+    println!(
+        "requests         {} over {} batch(es) (batch {batch}, threads {threads})",
+        stats.answered, stats.batches
+    );
+    println!("p50 latency      {}", fmt_ns(stats.p50_ns as f64));
+    println!("p99 latency      {}", fmt_ns(stats.p99_ns as f64));
+    println!("throughput       {:.1} req/s", stats.throughput_rps);
+    println!("serve speedup    {serve_speedup:.2}x (t{threads} vs t1)");
+    println!("batch speedup    {batch_speedup:.2}x (batch {batch} vs one-at-a-time)");
+
+    if let Some(json_path) = args.get("json") {
+        let mut rep = BenchReport::new("serve", "smoke");
+        rep.batch = batch;
+        // The ledger halves are computed at the bench harness batch size so
+        // they stay bit-identical to the BENCH_native.json entries.
+        let (flops, energy) = preset_ledger(srv.spec(), BENCH_BATCH)?;
+        let mut timings_ns = BTreeMap::new();
+        timings_ns.insert("serve_p50_ns".to_string(), stats.p50_ns as f64);
+        timings_ns.insert("serve_p99_ns".to_string(), stats.p99_ns as f64);
+        timings_ns.insert("serve_total_ns".to_string(), stats.total_ns as f64);
+        timings_ns.insert("serve_t1_total_ns".to_string(), t1.total_ns as f64);
+        timings_ns.insert("serve_single_total_ns".to_string(), single.total_ns as f64);
+        let mut ratios = BTreeMap::new();
+        ratios.insert(format!("serve_speedup_t{threads}"), serve_speedup);
+        ratios.insert(format!("batch_speedup_b{batch}"), batch_speedup);
+        rep.presets.push(PresetReport {
+            spec: srv.spec().to_string(),
+            timings_ns,
+            ratios,
+            flops,
+            energy,
+        });
+        rep.save(Path::new(json_path))?;
+        println!("bench report     {json_path}");
+    }
     Ok(())
 }
 

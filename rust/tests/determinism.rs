@@ -12,11 +12,22 @@
 //! barrier rendezvous, so runs (parameters *and* running stats) are
 //! bit-identical run-to-run per thread count, and one worker reproduces
 //! the serial step bitwise.
+//!
+//! The serving path inherits the same contract: coalescing queued classify
+//! requests into batches and sharding them across the pool must answer
+//! **bit-identically** to serving one request at a time on one thread —
+//! eval-mode layers are per-example, so neither batching nor thread count
+//! may change a logit (pinned below at t ∈ {1, 2, 4} with an uneven tail
+//! batch).
+
+use std::collections::HashMap;
 
 use ssprop::backend::{
     build_model, parse_model_spec, simple_cnn, ExecConfig, NativeBackend, ParallelExecutor,
     Sequential, SimpleCnnCfg, StepStats,
 };
+use ssprop::coordinator::{checkpoint, ClassifyRequest, ServeConfig, Server};
+use ssprop::tensorstore::Tensor;
 use ssprop::util::rng::Pcg;
 
 const CLASSES: usize = 4;
@@ -195,6 +206,84 @@ fn resnet_tiny_single_worker_reproduces_serial_bitwise() {
         let got = e.eval_batch(&serial, &be, x, y);
         assert_eq!(got.0.to_bits(), want.0.to_bits(), "t{threads} resnet eval bits");
     }
+}
+
+/// Train the residual preset a few steps on mnist-shaped data and save a
+/// raw checkpoint the serving path can fold (the artifact names a
+/// registered dataset, so the server is self-describing).
+fn serve_checkpoint(tag: &str) -> std::path::PathBuf {
+    let be = NativeBackend::new();
+    let spec = parse_model_spec("resnet-tiny-w4-b1").unwrap();
+    let mut m = build_model(&spec, 1, 28, 10, 7).unwrap();
+    let mut rng = Pcg::new(0xBEEF, 3);
+    for step in 0..3 {
+        let x: Vec<f32> = (0..6 * 28 * 28).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..6).map(|j| ((j + step) % 10) as i32).collect();
+        m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+    }
+    let dir = std::env::temp_dir().join(format!("ssprop_serve_det_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rn.tstore");
+    let state: HashMap<String, Tensor> = m.state_tensors().into_iter().collect();
+    checkpoint::save_tensors(&path, &state, "native_mnist:resnet-tiny-w4-b1", 3).unwrap();
+    path
+}
+
+fn serve_requests(n: usize, n_in: usize) -> Vec<ClassifyRequest> {
+    let mut rng = Pcg::new(0xFACE, 5);
+    (0..n)
+        .map(|i| ClassifyRequest {
+            id: i as u64,
+            pixels: (0..n_in).map(|_| rng.normal()).collect(),
+        })
+        .collect()
+}
+
+#[test]
+fn serve_batches_are_bit_identical_to_one_at_a_time_at_any_thread_count() {
+    let ck = serve_checkpoint("bitwise");
+    let n = 11usize; // at batch 4 the queue coalesces as 4 + 4 + 3 (uneven tail)
+
+    // Reference: every request served alone on a single thread.
+    let cfg1 = ServeConfig { batch: 1, threads: 1 };
+    let mut solo = Server::from_checkpoint(&ck, Some("resnet-tiny-w4-b1"), cfg1).unwrap();
+    assert!(solo.folded() > 0, "the residual preset folds its BatchNorms at load");
+    let (want, solo_stats) = solo.serve(serve_requests(n, solo.input_len()));
+    assert_eq!(solo_stats.batches, n);
+
+    for threads in [1usize, 2, 4] {
+        let cfg = ServeConfig { batch: 4, threads };
+        let mut srv = Server::from_checkpoint(&ck, None, cfg).unwrap();
+        let (got, stats) = srv.serve(serve_requests(n, srv.input_len()));
+        assert_eq!(stats.batches, 3, "11 requests at batch 4 coalesce as 4 + 4 + 3");
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.id, w.id, "answers keep request order");
+            assert_eq!(g.class, w.class, "t{threads} request {}", g.id);
+            for (a, b) in g.logits.iter().zip(&w.logits) {
+                assert_eq!(a.to_bits(), b.to_bits(), "t{threads} request {}: logit bits", g.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_answers_agree_with_eval_batch_accuracy() {
+    let ck = serve_checkpoint("evalx");
+    let cfg = ServeConfig { batch: 4, threads: 2 };
+    let mut srv = Server::from_checkpoint(&ck, None, cfg).unwrap();
+    let (n, n_in) = (10usize, srv.input_len());
+    let mut rng = Pcg::new(0xAB, 9);
+    let x: Vec<f32> = (0..n * n_in).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..n).map(|j| (j % 10) as i32).collect();
+    let reqs: Vec<ClassifyRequest> = (0..n)
+        .map(|i| ClassifyRequest { id: i as u64, pixels: x[i * n_in..(i + 1) * n_in].to_vec() })
+        .collect();
+    let (answers, stats) = srv.serve(reqs);
+    assert_eq!(stats.answered, n);
+    let hits = answers.iter().zip(&y).filter(|(a, &label)| a.class == label as usize).count();
+    let (_, acc) = srv.eval_batch(&x, &y);
+    assert_eq!(acc, hits as f64 / n as f64, "serve argmax must agree with eval accuracy");
 }
 
 #[test]

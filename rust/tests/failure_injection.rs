@@ -1,7 +1,8 @@
 //! Failure injection: every layer of the runtime must fail loudly and
 //! specifically, never silently mis-train. The manifest/tensorstore/
-//! scheduler/discovery checks run on every build; engine-level checks need
-//! the `pjrt` feature.
+//! scheduler/discovery checks run on every build, as do the serving-path
+//! checks (checkpoint/`--model` mismatch, BN-less folds, truncated folded
+//! checkpoints); engine-level checks need the `pjrt` feature.
 
 use std::io::Write as _;
 
@@ -87,6 +88,76 @@ fn native_trainer_rejects_bad_configs() {
         .expect("BCE dataset must be rejected")
         .to_string();
     assert!(err.contains("CE"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// serving-path injections: fold + serve fail typed, never panic
+// ---------------------------------------------------------------------------
+
+mod serving {
+    use std::collections::HashMap;
+
+    use super::tmp_dir;
+    use ssprop::backend::fold::{self, FoldError};
+    use ssprop::backend::{build_model, parse_model_spec};
+    use ssprop::coordinator::{checkpoint, ServeConfig, ServeError, Server};
+    use ssprop::tensorstore::Tensor;
+
+    /// Save an untrained checkpoint for `spec` on the mnist geometry
+    /// (serve and fold rebuild the model through the dataset registry, so
+    /// the artifact must name a registered dataset).
+    fn save_checkpoint(dir: &std::path::Path, file: &str, spec: &str) -> std::path::PathBuf {
+        let parsed = parse_model_spec(spec).unwrap();
+        let ds = ssprop::data::spec("mnist").unwrap();
+        let m = build_model(&parsed, ds.channels, ds.img, ds.classes, 5).unwrap();
+        let state: HashMap<String, Tensor> = m.state_tensors().into_iter().collect();
+        let path = dir.join(file);
+        let artifact = format!("native_mnist:{}", parsed.canonical());
+        checkpoint::save_tensors(&path, &state, &artifact, 1).unwrap();
+        path
+    }
+
+    #[test]
+    fn serve_model_mismatch_is_typed_and_names_both_specs() {
+        let d = tmp_dir("serve_mismatch");
+        let ck = save_checkpoint(&d, "vgg.tstore", "vgg-tiny-w4");
+        let err = Server::from_checkpoint(&ck, Some("resnet-tiny-w4-b1"), ServeConfig::default())
+            .err()
+            .expect("mismatched --model must be rejected");
+        let typed = err.downcast_ref::<ServeError>().expect("typed ServeError");
+        let ServeError::SpecMismatch { saved, requested } = typed;
+        assert_eq!(saved, "vgg-tiny-w4");
+        assert_eq!(requested, "resnet-tiny-w4-b1");
+        let msg = err.to_string();
+        assert!(msg.contains("vgg-tiny-w4") && msg.contains("resnet-tiny-w4-b1"), "{msg}");
+    }
+
+    #[test]
+    fn folding_a_bn_less_checkpoint_is_a_typed_no_op() {
+        let d = tmp_dir("fold_nobn");
+        let ck = save_checkpoint(&d, "plain.tstore", "simple-cnn-d2-w4");
+        let out = d.join("folded.tstore");
+        let err = fold::fold_checkpoint(&ck, &out).err().expect("no-BN fold must refuse");
+        match err.downcast_ref::<FoldError>() {
+            Some(FoldError::NoBatchNorm { spec }) => assert_eq!(spec, "simple-cnn-d2-w4"),
+            other => panic!("want NoBatchNorm, got {other:?}"),
+        }
+        assert!(!out.exists(), "a refused fold must not write an output file");
+    }
+
+    #[test]
+    fn truncated_folded_checkpoint_is_rejected_at_load() {
+        let d = tmp_dir("fold_trunc");
+        let ck = save_checkpoint(&d, "rn.tstore", "resnet-tiny-w4-b1");
+        let folded = d.join("rn_folded.tstore");
+        fold::fold_checkpoint(&ck, &folded).unwrap();
+        fold::load_folded(&folded).expect("the intact folded checkpoint loads");
+        // Chop the payload mid-tensor: the store reader must reject the
+        // file instead of serving a half-restored model.
+        let raw = std::fs::read(&folded).unwrap();
+        std::fs::write(&folded, &raw[..raw.len() - 64]).unwrap();
+        assert!(fold::load_folded(&folded).is_err(), "truncated checkpoint must not load");
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,188 @@
+//! Fold-equivalence property suite for the BN-folding inference path
+//! (`ssprop::backend::fold`, docs/ARCHITECTURE.md "Inference path").
+//!
+//! Three contracts are pinned here:
+//!
+//! 1. **Numerical equivalence** — for every zoo preset that carries
+//!    BatchNorm (the `resnet-tiny` family), training a few steps and then
+//!    folding the running statistics and γ/β into the preceding convs
+//!    must reproduce the unfolded eval logits within `1e-5 · (1 + |a|)`
+//!    on randomized batches. The fold is a per-output-channel affine
+//!    rewrite, so the only drift allowed is the float re-association of
+//!    `(w·x)·s` vs `(w·s)·x`.
+//! 2. **Exact identity** — when every BN is an identity in eval mode
+//!    (γ = 1, β = 0, running mean 0, and a running variance chosen so
+//!    that `1/√(rv+ε)` is *exactly* 1.0f32), folding must be a no-op on
+//!    the weights and the folded logits must match **bitwise**.
+//! 3. **Checkpoint roundtrip** — `fold_checkpoint` followed by
+//!    `load_folded` must reproduce the in-memory fold bitwise
+//!    (`flat_params` and logits), keep the stable `param['{name}.w']`
+//!    conv keys, drop every BN tensor, and tag the artifact with
+//!    `#folded`; a second save→load of the folded state is bitwise too.
+
+use std::collections::HashMap;
+
+use ssprop::backend::{build_model, fold, parse_model_spec, NativeBackend, Sequential};
+use ssprop::coordinator::checkpoint;
+use ssprop::tensorstore::Tensor;
+use ssprop::util::rng::Pcg;
+
+const CLASSES: usize = 4;
+/// Examples are (2, 12, 12) images — small enough that the deepest
+/// preset's release-mode training steps stay fast.
+const N_IN: usize = 2 * 12 * 12;
+
+/// Every zoo preset that carries BatchNorm: the residual family at two
+/// widths and two depths (the other presets are BN-free and covered by
+/// the typed-error tests in `failure_injection.rs`).
+const BN_PRESETS: &[&str] = &["resnet-tiny-w4-b1", "resnet-tiny-w8-b1", "resnet-tiny-w4-b2"];
+
+fn build(spec: &str, seed: u64) -> Sequential {
+    build_model(&parse_model_spec(spec).unwrap(), 2, 12, CLASSES, seed).unwrap()
+}
+
+fn batch(bt: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Pcg::new(seed, 2);
+    let x = (0..bt * N_IN).map(|_| rng.normal()).collect();
+    let y = (0..bt).map(|j| (j % CLASSES) as i32).collect();
+    (x, y)
+}
+
+/// A twin of `m` with identical state, BatchNorms folded away.
+fn folded_twin(m: &Sequential, spec: &str) -> (Sequential, usize) {
+    let mut twin = build(spec, 0); // weights are overwritten below
+    twin.load_state_tensors(&m.state_tensors()).unwrap();
+    let n = fold::fold_graph(&mut twin);
+    (twin, n)
+}
+
+#[test]
+fn folded_logits_match_unfolded_eval_within_1e5_for_every_bn_preset() {
+    let be = NativeBackend::new();
+    for spec in BN_PRESETS {
+        // Train a few steps so γ/β move off init and the running stats
+        // absorb real batch statistics — the fold must hold away from the
+        // identity point, not just at it.
+        let mut m = build(spec, 11);
+        for step in 0..3u64 {
+            let (x, y) = batch(6, 100 + step);
+            m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+        }
+        let (mut folded, n) = folded_twin(&m, spec);
+        assert!(n > 0, "{spec}: the residual preset has BatchNorms to fold");
+        assert_eq!(fold::fold_graph(&mut folded), 0, "{spec}: folding is idempotent");
+
+        for bseed in [7u64, 8, 9] {
+            let (x, _) = batch(5, 200 + bseed);
+            let want = m.infer_logits(&be, &x, 5);
+            let got = folded.infer_logits(&be, &x, 5);
+            assert_eq!(want.len(), got.len());
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                let tol = 1e-5 * (1.0 + a.abs());
+                assert!((a - b).abs() <= tol, "{spec} batch {bseed} logit {i}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn identity_batchnorm_folds_bitwise() {
+    // ε = 1e-5 is baked into the layer, so a literal rv = 1.0 gives a
+    // scale of 1/√(1 + ε) ≠ 1. Instead search the few ulps below
+    // 1 − ε for the running variance whose sum with ε rounds to exactly
+    // 1.0f32; with the untrained defaults γ = 1, β = 0, rm = 0 the fold
+    // factors are then scale = 1.0 and shift = +0.0 bitwise, multiplying
+    // and shifting nothing — folded and unfolded logits must agree to
+    // the bit.
+    let mut rv = 1.0f32 - 2e-5f32;
+    while rv + 1e-5f32 != 1.0f32 {
+        rv = f32::from_bits(rv.to_bits() + 1);
+    }
+    assert_eq!(1.0f32 / (rv + 1e-5f32).sqrt(), 1.0f32);
+
+    let be = NativeBackend::new();
+    let spec = "resnet-tiny-w4-b1";
+    let mut m = build(spec, 21);
+    let state: Vec<(String, Tensor)> = m
+        .state_tensors()
+        .into_iter()
+        .map(|(k, t)| {
+            if k.ends_with(".rv']") {
+                let n = t.to_f32().len();
+                (k, Tensor::from_f32(vec![n], &vec![rv; n]))
+            } else {
+                (k, t)
+            }
+        })
+        .collect();
+    m.load_state_tensors(&state).unwrap();
+
+    let (mut folded, n) = folded_twin(&m, spec);
+    assert!(n > 0);
+    let (x, _) = batch(4, 77);
+    let want = m.infer_logits(&be, &x, 4);
+    let got = folded.infer_logits(&be, &x, 4);
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "logit {i}: identity fold must be bitwise");
+    }
+}
+
+#[test]
+fn folded_checkpoints_roundtrip_bitwise() {
+    let be = NativeBackend::new();
+    let dir = std::env::temp_dir().join("ssprop_fold_roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // A short-trained raw checkpoint on the registered mnist geometry
+    // (fold_checkpoint rebuilds the model through the dataset registry,
+    // so the artifact must name a real dataset).
+    let spec = parse_model_spec("resnet-tiny-w4-b1").unwrap();
+    let mut m = build_model(&spec, 1, 28, 10, 7).unwrap();
+    let mut rng = Pcg::new(0xC0FFEE, 3);
+    for step in 0..2usize {
+        let x: Vec<f32> = (0..4 * 28 * 28).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..4).map(|j| ((j + step) % 10) as i32).collect();
+        m.train_step(&be, &x, &y, 0.0, 0.05).unwrap();
+    }
+    let raw = dir.join("raw.tstore");
+    let state: HashMap<String, Tensor> = m.state_tensors().into_iter().collect();
+    checkpoint::save_tensors(&raw, &state, "native_mnist:resnet-tiny-w4-b1", 2).unwrap();
+
+    // Fold on disk, then load the folded artifact back.
+    let folded_path = dir.join("folded.tstore");
+    let summary = fold::fold_checkpoint(&raw, &folded_path).unwrap();
+    assert!(summary.folded > 0);
+    assert_eq!(summary.spec, "resnet-tiny-w4-b1");
+    assert_eq!(summary.artifact, "native_mnist:resnet-tiny-w4-b1#folded");
+    assert!(fold::is_folded(&summary.artifact));
+
+    let (mut loaded, artifact, epoch) = fold::load_folded(&folded_path).unwrap();
+    assert_eq!(artifact, summary.artifact);
+    assert_eq!(epoch, 2);
+
+    // The in-memory fold of the same state is the bitwise reference.
+    fold::fold_graph(&mut m);
+    assert_eq!(m.flat_params(), loaded.flat_params(), "folded params roundtrip bitwise");
+
+    // Stable names: conv keys survive the fold, BN tensors are gone.
+    let keys: Vec<String> = loaded.state_tensors().into_iter().map(|(k, _)| k).collect();
+    assert!(keys.iter().any(|k| k == "param['stem.conv.w']"), "{keys:?}");
+    assert!(keys.iter().any(|k| k == "param['s0b0.conv1.w']"), "{keys:?}");
+    assert!(keys.iter().all(|k| !k.contains(".bn")), "{keys:?}");
+
+    // And the served logits agree bitwise with the in-memory fold.
+    let x: Vec<f32> = (0..3 * 28 * 28).map(|_| rng.normal()).collect();
+    let a = m.infer_logits(&be, &x, 3);
+    let b = loaded.infer_logits(&be, &x, 3);
+    for (i, (u, v)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(u.to_bits(), v.to_bits(), "logit {i}");
+    }
+
+    // A second save→load of the already-folded state is bitwise too.
+    let again = dir.join("again.tstore");
+    let st2: HashMap<String, Tensor> = loaded.state_tensors().into_iter().collect();
+    checkpoint::save_tensors(&again, &st2, &artifact, epoch).unwrap();
+    let (reload, _, _) = fold::load_folded(&again).unwrap();
+    assert_eq!(loaded.flat_params(), reload.flat_params());
+}
