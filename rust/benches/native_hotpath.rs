@@ -23,6 +23,13 @@
 //! step at the paper's D* = 0.8 — the model-level sparse-backward saving,
 //! including through residual graphs and BatchNorm).
 //!
+//! Each executor section also compares the persistent `WorkerPool`
+//! against the per-step scoped crew at D* = 0.8
+//! (`native/pool_speedup_{spec}_t{2,4}`) and the batch-prefetch training
+//! pipeline against the fully synchronous loop over short whole runs
+//! (`native/pipeline_speedup_{spec}`) — both executors/loops produce
+//! bit-identical results, so these ratios are pure wall-clock wins.
+//!
 //! `--json PATH` additionally serializes the run as a versioned
 //! `bench_report::BenchReport` (`BENCH_native.json` schema — see
 //! `docs/BENCHMARKS.md`): the fused/bwd/gemm conv ratios plus, when no
@@ -40,7 +47,7 @@ use ssprop::backend::im2col::im2col;
 use ssprop::backend::sparse::{select_channels, sparse_bwd_with_cols, SparseBwdWorkspace};
 use ssprop::backend::{
     build_model, parse_model_spec, Backend, Conv2d, Conv2dPlan, ExecConfig, NativeBackend,
-    ParallelExecutor, Sequential,
+    ParallelExecutor, Sequential, WorkerPool,
 };
 use ssprop::bench_report::{
     preset_ledger, BenchReport, PresetReport, BASELINE_PRESETS, BENCH_BATCH, BENCH_CLASSES,
@@ -288,6 +295,63 @@ fn parallel_section(spec: &str, warm: usize, iters: usize, budget: Duration) -> 
             ratios.insert(format!("parallel_speedup_{label}_t{threads}"), speedup);
         }
     }
+    // Persistent pool vs the per-step scoped crew at the paper's D* = 0.8.
+    // Both executors run the *same* shared shard bodies (bit-identical
+    // steps), so the ratio isolates what the pool amortizes: per-step
+    // thread spawn/join. Biggest on tiny models where spawn cost rivals
+    // the step itself.
+    println!("-- persistent pool vs per-step spawn ({slug}, d80) --");
+    for threads in [2usize, 4] {
+        let mut model = build();
+        let mut pool = WorkerPool::new(ExecConfig::with_threads(threads));
+        let name = format!("native/pool_step_{slug}_d80_t{threads}");
+        let r = bench(&name, warm, iters, budget, || {
+            pool.train_step(&mut model, &be, &px, &py, 0.8, 0.01).unwrap();
+        });
+        report(&r);
+        let scoped = timings_ns[&format!("parallel_step_d80_t{threads}_ns")];
+        let speedup = scoped / r.median_ns;
+        println!(
+            "{:<48} {:>11.2}x (per-step spawn / pool median)",
+            format!("native/pool_speedup_{slug}_t{threads}"),
+            speedup
+        );
+        timings_ns.insert(format!("pool_step_d80_t{threads}_ns"), r.median_ns);
+        ratios.insert(format!("pool_speedup_t{threads}"), speedup);
+    }
+
+    // Batch-prefetch pipeline vs the fully synchronous loop over short
+    // whole training runs (same trainer, same bits — `pipeline` is purely
+    // a wall-clock knob, so the ratio is the prefetch overlap realized).
+    println!("-- batch-prefetch pipeline vs sync loop ({slug}, short runs) --");
+    let train_cfg = |pipeline: bool| {
+        let mut cfg = NativeTrainConfig::quick("cifar10", 2, 4);
+        cfg.model = slug.clone();
+        cfg.batch = 16;
+        cfg.threads = 2;
+        cfg.pipeline = pipeline;
+        cfg
+    };
+    let sync = bench(&format!("native/sync_run_{slug}"), warm, iters, budget, || {
+        let mut t = NativeTrainer::new(train_cfg(false)).unwrap();
+        std::hint::black_box(t.run().unwrap());
+    });
+    report(&sync);
+    let piped = bench(&format!("native/pipeline_run_{slug}"), warm, iters, budget, || {
+        let mut t = NativeTrainer::new(train_cfg(true)).unwrap();
+        std::hint::black_box(t.run().unwrap());
+    });
+    report(&piped);
+    let pipeline_speedup = sync.median_ns / piped.median_ns;
+    println!(
+        "{:<48} {:>11.2}x (sync / pipelined median)",
+        format!("native/pipeline_speedup_{slug}"),
+        pipeline_speedup
+    );
+    timings_ns.insert("sync_run_ns".to_string(), sync.median_ns);
+    timings_ns.insert("pipeline_run_ns".to_string(), piped.median_ns);
+    ratios.insert("pipeline_speedup".to_string(), pipeline_speedup);
+
     let model_bwd_speedup = serial_medians[0] / serial_medians[1];
     println!(
         "{:<48} {:>11.2}x (serial dense / serial d80 median)",

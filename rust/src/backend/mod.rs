@@ -23,14 +23,16 @@
 //! [`Graph`] container — [`Sequential`] is its chain-shaped constructor;
 //! [`zoo`] parses `--model` specs into presets, including the
 //! `resnet-tiny` residual/BatchNorm preset, and [`simple_cnn`] is the
-//! paper's Fig. 4 model as a thin constructor over it), and [`parallel`]
-//! is the execution layer: a [`ParallelExecutor`] shards each training
-//! batch over a fixed worker count, runs the fused plan path per shard on
-//! per-worker node workspaces (no locking on the hot path), reduces
-//! channel selection and BatchNorm batch statistics globally at barrier
-//! rendezvous, and tree-reduces gradients in a fixed order so runs are
-//! bit-reproducible. See `docs/ARCHITECTURE.md` for the layer map and the
-//! sharding/reduction design. For inference, [`fold`] converts trained
+//! paper's Fig. 4 model as a thin constructor over it), and [`parallel`] /
+//! [`pool`] are the execution layer: each training batch shards over a
+//! fixed worker count, the fused plan path runs per shard on per-worker
+//! node workspaces (no locking on the hot path), channel selection and
+//! BatchNorm batch statistics reduce globally at barrier rendezvous, and
+//! gradients tree-reduce in a fixed order so runs are bit-reproducible.
+//! [`ParallelExecutor`] spawns a scoped crew per step; [`WorkerPool`] is
+//! the persistent production variant with identical bits. See
+//! `docs/ARCHITECTURE.md` for the layer map, the sharding/reduction
+//! design, and the executor lifecycle. For inference, [`fold`] converts trained
 //! checkpoints into BN-free folded models that the no-workspace eval walk
 //! and the `serve` subcommand run.
 //!
@@ -44,6 +46,7 @@ pub mod layers;
 pub mod native;
 pub mod parallel;
 pub mod plan;
+pub mod pool;
 pub mod simple_cnn;
 pub mod sparse;
 pub mod zoo;
@@ -51,6 +54,7 @@ pub mod zoo;
 pub use layers::{Graph, GraphBuilder, Layer, LayerWs, Sequential, Shape, StepStats};
 pub use native::NativeBackend;
 pub use parallel::{ExecConfig, ParallelExecutor};
+pub use pool::WorkerPool;
 pub use plan::Conv2dPlan;
 pub use simple_cnn::{simple_cnn, SimpleCnnCfg};
 pub use zoo::{build_model, parse_model_spec, ModelSpec, ModelSpecError};

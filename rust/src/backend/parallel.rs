@@ -42,16 +42,23 @@
 //!   evaluation **bit-identical** to serial evaluation at every thread
 //!   count.
 //!
-//! Worker threads are scoped to each step (`std::thread::scope`), which
-//! keeps the borrows safe without `unsafe`; the persistent state a "pool"
-//! would carry — the per-worker node workspaces — lives in the executor
-//! and is reused across steps, so steady-state steps allocate only the
-//! gradients themselves. A panicking worker (a backend invariant
-//! violation) aborts the step *loudly*: every worker owes a fixed number
-//! of rendezvous per step, and the `BarrierAttendance` guard pays any
-//! outstanding ones during unwinding, so the surviving workers are never
-//! left blocked on a barrier that cannot complete and the panic
-//! propagates out of `thread::scope` instead of deadlocking training.
+//! Two executors drive the identical shard protocol (the per-shard worker
+//! body, the reductions, and the epilogue live in shared `pub(crate)`
+//! functions below, so the two cannot diverge numerically):
+//!
+//! * [`ParallelExecutor`] spawns a scoped thread crew per step
+//!   (`std::thread::scope`) — zero `unsafe`, but each step pays thread
+//!   spawn/join. It remains the reference executor the benchmark's
+//!   `pool_speedup` lines compare against.
+//! * [`crate::backend::pool::WorkerPool`] keeps the crew alive for the
+//!   executor's lifetime and feeds it jobs over channels — the production
+//!   path for [`crate::coordinator::NativeTrainer`] and
+//!   [`crate::coordinator::serve::Server`]. A panicking worker aborts the
+//!   step *loudly* either way: every worker owes a fixed number of
+//!   rendezvous per step, and the `BarrierAttendance` guard pays any
+//!   outstanding ones during unwinding, so the surviving workers are never
+//!   left blocked on a barrier that cannot complete and the panic
+//!   propagates to the caller instead of deadlocking training.
 
 use std::sync::{Barrier, Mutex};
 
@@ -64,10 +71,18 @@ use super::{Backend, Graph, StepStats};
 use crate::flops::keep_channels;
 use crate::util::shard::shard_ranges;
 
-/// Execution-layer knobs for [`ParallelExecutor`].
+/// Upper clamp on auto-detected worker counts ([`ExecConfig::auto`]):
+/// beyond this, per-conv barrier rendezvous overhead dominates step time
+/// at zoo-preset scale. An *explicit* `threads: N` is never clamped.
+pub const MAX_AUTO_THREADS: usize = 16;
+
+/// Execution-layer knobs for [`ParallelExecutor`] and
+/// [`crate::backend::pool::WorkerPool`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecConfig {
-    /// Worker threads a batch is sharded over (≥ 1; 1 = serial layout).
+    /// Worker threads a batch is sharded over. `0` means **auto**: resolve
+    /// [`std::thread::available_parallelism`] at executor construction,
+    /// clamped to `[1, MAX_AUTO_THREADS]` (see [`ExecConfig::resolved_threads`]).
     pub threads: usize,
 }
 
@@ -78,25 +93,47 @@ impl Default for ExecConfig {
 }
 
 impl ExecConfig {
-    /// Config with `threads` workers (clamped to ≥ 1).
+    /// Config with `threads` workers (`0` = auto-detect, see
+    /// [`ExecConfig::auto`]).
     pub fn with_threads(threads: usize) -> ExecConfig {
-        ExecConfig { threads: threads.max(1) }
+        ExecConfig { threads }
+    }
+
+    /// Auto-detecting config: worker count resolves to the machine's
+    /// [`std::thread::available_parallelism`] at executor construction.
+    pub fn auto() -> ExecConfig {
+        ExecConfig { threads: 0 }
+    }
+
+    /// The concrete worker count this config resolves to: `threads` as
+    /// given when positive, otherwise [`std::thread::available_parallelism`]
+    /// clamped to `[1, MAX_AUTO_THREADS]` (the documented auto clamp —
+    /// detection failure falls back to 1, oversubscribed machines cap at
+    /// [`MAX_AUTO_THREADS`] where rendezvous overhead outgrows the shards).
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism()
+                .map_or(1, |n| n.get())
+                .clamp(1, MAX_AUTO_THREADS)
+        }
     }
 }
 
 /// Everything one shard worker hands back to the reducer after a train
 /// step.
 #[derive(Debug, Default)]
-struct ShardOut {
+pub(crate) struct ShardOut {
     /// Σ per-example losses over the shard (full-batch mean = Σ/Bt).
-    loss_sum: f64,
+    pub(crate) loss_sum: f64,
     /// Correct predictions in the shard.
-    correct: usize,
+    pub(crate) correct: usize,
     /// Per node: the parameter gradients ([`super::layers::BwdOut`]
     /// order), already in full-batch (1/Bt) units.
-    grads: Vec<Vec<Vec<f32>>>,
+    pub(crate) grads: Vec<Vec<Vec<f32>>>,
     /// Kept channels summed over conv nodes (filled by worker 0 only).
-    kept: usize,
+    pub(crate) kept: usize,
 }
 
 /// Unwind insurance for the barrier protocol. Every worker owes the same
@@ -107,8 +144,9 @@ struct ShardOut {
 /// tracks the waits still owed and pays them during unwinding, so peers
 /// proceed — at worst briefly computing on a stale or empty broadcast,
 /// whose validity asserts make *them* panic and drain the same way — and
-/// the original panic then propagates out of `std::thread::scope`,
-/// aborting the step instead of deadlocking it.
+/// the original panic then propagates to the caller (out of
+/// `std::thread::scope`, or through the pool's reply channel), aborting
+/// the step instead of deadlocking it.
 struct BarrierAttendance<'a> {
     barrier: &'a Barrier,
     remaining: std::cell::Cell<usize>,
@@ -199,12 +237,328 @@ fn reduce_stat_partials(slots: &[Mutex<Vec<f32>>]) -> Vec<f32> {
     tot
 }
 
+/// Everything a train-step shard worker reads besides its own shard range
+/// and workspaces: the (shared, read-only) model and batch, the step
+/// scalars, and the per-step rendezvous state. Both executors build one
+/// per step and hand every worker a reference — the worker body
+/// ([`run_train_shard`]) is identical either way, which is what makes the
+/// pool bit-identical to the scoped crew by construction.
+pub(crate) struct TrainShardCtx<'a> {
+    /// The model being trained (read-only during the shard phase).
+    pub(crate) model: &'a Graph,
+    /// Conv/GEMM executor.
+    pub(crate) backend: &'a dyn Backend,
+    /// Full-batch inputs (`bt × n_in`).
+    pub(crate) x: &'a [f32],
+    /// Full-batch labels.
+    pub(crate) y: &'a [i32],
+    /// Input volume per example.
+    pub(crate) n_in: usize,
+    /// Global batch size (the gradient denominator on every shard).
+    pub(crate) bt: usize,
+    /// Classifier output count.
+    pub(crate) classes: usize,
+    /// This step's scheduled ssProp drop rate.
+    pub(crate) drop_rate: f64,
+    /// Monotone step counter (dropout mask stream key).
+    pub(crate) step: u64,
+    /// The step's rendezvous barrier (one attendee per shard).
+    pub(crate) barrier: &'a Barrier,
+    /// Per-worker partial-publication slots (importance / BN statistics).
+    pub(crate) imp_slots: &'a [Mutex<Vec<f32>>],
+    /// Worker 0's keep-set broadcast slot.
+    pub(crate) keep_slot: &'a Mutex<Vec<usize>>,
+    /// Worker 0's reduced-statistics broadcast slot.
+    pub(crate) stat_slot: &'a Mutex<Vec<f32>>,
+}
+
+/// The shard worker body of one training step: forward with global BN
+/// statistics, loss in full-batch units, backward with globally-reduced
+/// channel selection, gradients left in `out` for the fixed-order
+/// reduction. Runs on a scoped thread ([`ParallelExecutor`]) or a pool
+/// worker ([`crate::backend::pool::WorkerPool`]) — same bits either way.
+pub(crate) fn run_train_shard(
+    ctx: &TrainShardCtx<'_>,
+    w: usize,
+    range: std::ops::Range<usize>,
+    wws: &mut [LayerWs],
+    out: &mut ShardOut,
+) {
+    let m = ctx.model;
+    let nn = m.num_layers();
+    let sbt = range.end - range.start;
+    let xs = &ctx.x[range.start * ctx.n_in..range.end * ctx.n_in];
+    let ys = &ctx.y[range.start..range.end];
+
+    // Fixed rendezvous budget — two per sparse conv node (selection),
+    // four per batch-normalizing node (two in the forward, two in the
+    // backward); the guard pays any outstanding waits if we unwind, so a
+    // panic here can never strand the other workers.
+    let sparse_convs = (0..nn)
+        .filter(|&i| {
+            m.node_layer(i)
+                .and_then(|l| l.conv_geom())
+                .is_some_and(|g| keep_channels(g.cout, ctx.drop_rate) < g.cout)
+        })
+        .count();
+    let bn_nodes =
+        (0..nn).filter(|&i| m.node_layer(i).is_some_and(|l| l.needs_batch_stats())).count();
+    let attendance = BarrierAttendance::new(ctx.barrier, 2 * sparse_convs + 4 * bn_nodes);
+
+    // Publish this worker's partials, rendezvous, let worker 0 reduce
+    // them in fixed shard order, rendezvous again, and read the
+    // broadcast back.
+    let reduce_stats = |part: Vec<f32>| -> Vec<f32> {
+        *ctx.imp_slots[w].lock().expect("stat slot poisoned") = part;
+        attendance.wait();
+        if w == 0 {
+            *ctx.stat_slot.lock().expect("stat broadcast poisoned") =
+                reduce_stat_partials(ctx.imp_slots);
+        }
+        attendance.wait();
+        ctx.stat_slot.lock().expect("stat broadcast poisoned").clone()
+    };
+
+    // Shard-local forward over the graph slots, in full-batch gradient
+    // units (grad_denom = bt). Dropout masks key on the global example
+    // offset, so they match serial exactly; batch-normalizing nodes
+    // reduce their moments globally before normalizing.
+    let fwd_ctx = FwdCtx { train: true, step: ctx.step, example_offset: range.start };
+    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nn + 1);
+    acts.push(xs.to_vec());
+    for i in 0..nn {
+        let next = match &m.node(i).op {
+            NodeOp::Add { a, b } => add_forward(&acts[*a], &acts[*b]),
+            NodeOp::Layer { layer, input } => {
+                if layer.needs_batch_stats() {
+                    let global = reduce_stats(layer.fwd_stat_partials(&acts[*input], sbt));
+                    layer.forward_with_stats(
+                        ctx.backend,
+                        &acts[*input],
+                        sbt,
+                        &mut wws[i],
+                        &fwd_ctx,
+                        &global,
+                        ctx.bt,
+                    )
+                } else {
+                    layer.forward(ctx.backend, &acts[*input], sbt, &mut wws[i], &fwd_ctx)
+                }
+            }
+        };
+        acts.push(next);
+    }
+    let (loss_sum, correct, dlogits) = softmax_ce_core(&acts[nn], ys, ctx.classes, ctx.bt);
+    out.loss_sum = loss_sum;
+    out.correct = correct;
+    out.grads = (0..nn).map(|_| Vec::new()).collect();
+
+    // Backward in reverse topological order over per-slot gradient
+    // accumulators (an Add merge fans the gradient to both operands).
+    // Conv selection is global: publish importance partials, rendezvous,
+    // worker 0 reduces + broadcasts; dense conv nodes skip the sync and
+    // keep everything. Batch-normalizing nodes reduce their gradient
+    // sums the same way; every other node runs locally.
+    let mut slot_grads: Vec<Option<Vec<f32>>> = (0..nn + 1).map(|_| None).collect();
+    slot_grads[nn] = Some(dlogits);
+    for i in (0..nn).rev() {
+        let g = slot_grads[i + 1].take().expect("every node output feeds a later node");
+        let (layer, input) = match &m.node(i).op {
+            NodeOp::Add { a, b } => {
+                accumulate(&mut slot_grads[*a], g.clone());
+                accumulate(&mut slot_grads[*b], g);
+                continue;
+            }
+            NodeOp::Layer { layer, input } => (layer, *input),
+        };
+        let need_dx = input != INPUT_SLOT;
+        let bwd = if layer.needs_batch_stats() {
+            let local = layer.bwd_stat_partials(&g, sbt, &wws[i]);
+            let global = reduce_stats(local.clone());
+            layer.backward_with_stats(
+                ctx.backend,
+                &acts[input],
+                &g,
+                sbt,
+                &mut wws[i],
+                &global,
+                &local,
+                need_dx,
+            )
+        } else {
+            let keep: Option<Vec<usize>> = layer.conv_geom().map(|geom| {
+                let keep_count = keep_channels(geom.cout, ctx.drop_rate);
+                if keep_count == geom.cout {
+                    return (0..geom.cout).collect();
+                }
+                let cfg = geom.with_batch(sbt);
+                *ctx.imp_slots[w].lock().expect("importance slot poisoned") =
+                    channel_abs_sums(&cfg, &g);
+                attendance.wait();
+                if w == 0 {
+                    let hw = geom.hout() * geom.wout();
+                    let sel = reduce_select(ctx.imp_slots, ctx.bt, hw, geom.cout, keep_count);
+                    *ctx.keep_slot.lock().expect("keep slot poisoned") = sel;
+                }
+                attendance.wait();
+                ctx.keep_slot.lock().expect("keep slot poisoned").clone()
+            });
+            let sel = match &keep {
+                Some(k) => Selection::Keep(k),
+                None => Selection::Local(ctx.drop_rate),
+            };
+            let ws_i = &mut wws[i];
+            layer.backward(ctx.backend, &acts[input], &g, sbt, ws_i, sel, need_dx)
+        };
+        if w == 0 {
+            out.kept += bwd.kept;
+        }
+        out.grads[i] = bwd.grads;
+        if need_dx {
+            accumulate(&mut slot_grads[input], bwd.dx);
+        }
+    }
+}
+
+/// The shard worker body of one sharded evaluation: forward the shard in
+/// eval mode and hand back its per-example losses plus correct count.
+pub(crate) fn run_eval_shard(
+    model: &Graph,
+    backend: &dyn Backend,
+    x: &[f32],
+    y: &[i32],
+    range: std::ops::Range<usize>,
+    wws: &mut [LayerWs],
+) -> (Vec<f64>, usize) {
+    let n_in = model.in_shape().volume();
+    let sbt = range.end - range.start;
+    let xs = &x[range.start * n_in..range.end * n_in];
+    let ys = &y[range.start..range.end];
+    let ctx = FwdCtx { train: false, step: 0, example_offset: range.start };
+    let acts = model.forward_collect(backend, xs, sbt, wws, &ctx);
+    softmax_ce_examples(&acts[model.num_layers()], ys, model.out_features())
+}
+
+/// The shard worker body of one sharded inference call: forward the shard
+/// in eval mode and hand back its logit rows.
+pub(crate) fn run_logits_shard(
+    model: &Graph,
+    backend: &dyn Backend,
+    x: &[f32],
+    range: std::ops::Range<usize>,
+    wws: &mut [LayerWs],
+) -> Vec<f32> {
+    let n_in = model.in_shape().volume();
+    let sbt = range.end - range.start;
+    let xs = &x[range.start * n_in..range.end * n_in];
+    let ctx = FwdCtx { train: false, step: 0, example_offset: range.start };
+    let mut acts = model.forward_collect(backend, xs, sbt, wws, &ctx);
+    acts.swap_remove(model.num_layers())
+}
+
+/// Key the per-worker workspaces to the given shard sizes. Conv plans
+/// re-key in place, and the worker axis never shrinks — a small step
+/// (e.g. the epoch-tail batch over fewer shards) parks the extra workers'
+/// workspaces instead of dropping their grown buffers, so steady-state
+/// steps allocate nothing here even when the shard count varies.
+pub(crate) fn ensure_worker_ws(
+    worker_ws: &mut Vec<Vec<LayerWs>>,
+    model: &Graph,
+    shards: &[std::ops::Range<usize>],
+) {
+    let nn = model.num_layers();
+    if worker_ws.len() < shards.len() {
+        worker_ws.resize_with(shards.len(), Vec::new);
+    }
+    for (wws, r) in worker_ws.iter_mut().zip(shards) {
+        let sbt = r.end - r.start;
+        wws.resize_with(nn, LayerWs::default);
+        for (i, ws) in wws.iter_mut().enumerate() {
+            model.node_ensure_ws(i, ws, sbt);
+        }
+    }
+}
+
+/// The train-step epilogue both executors share: reduce the shard scalars
+/// in fixed shard order, bail on a non-finite loss, tree-reduce every
+/// parameter gradient in shard-index order and apply SGD, then fold the
+/// globally-reduced batch statistics into persistent layer state from
+/// worker 0's workspace (every worker holds the identical reduced
+/// statistics, so worker 0's copy is canonical).
+pub(crate) fn apply_shard_outs(
+    model: &mut Graph,
+    worker_ws: &[Vec<LayerWs>],
+    outs: Vec<ShardOut>,
+    bt: usize,
+    drop_rate: f64,
+    lr: f32,
+) -> Result<StepStats> {
+    let nn = model.num_layers();
+    let nw = outs.len();
+
+    // Scalar reductions in fixed shard order.
+    let (mut loss_sum, mut correct) = (0f64, 0usize);
+    for o in &outs {
+        loss_sum += o.loss_sum;
+        correct += o.correct;
+    }
+    let loss = loss_sum / bt as f64;
+    if !loss.is_finite() {
+        bail!("non-finite loss at drop rate {drop_rate}");
+    }
+    let kept = outs[0].kept;
+
+    // Gradient tree-reduction (fixed shard order) + SGD updates: for
+    // each node, each parameter's shard parts reduce through the same
+    // pairwise tree the legacy executor used, then apply.
+    let mut parts: Vec<Vec<Vec<Vec<f32>>>> = (0..nn).map(|_| Vec::new()).collect();
+    for o in outs {
+        for (l, grads) in o.grads.into_iter().enumerate() {
+            for (p, gvec) in grads.into_iter().enumerate() {
+                if parts[l].len() <= p {
+                    parts[l].push(Vec::with_capacity(nw));
+                }
+                parts[l][p].push(gvec);
+            }
+        }
+    }
+    for (l, pgrads) in parts.into_iter().enumerate() {
+        if pgrads.is_empty() {
+            continue;
+        }
+        let reduced: Vec<Vec<f32>> = pgrads.into_iter().map(tree_reduce).collect();
+        for (param, grad) in model.node_params_mut(l).into_iter().zip(&reduced) {
+            for (pv, &gv) in param.iter_mut().zip(grad) {
+                *pv -= lr * gv;
+            }
+        }
+    }
+
+    // Fold the global batch statistics into persistent layer state (BN
+    // running stats) exactly once per step.
+    for i in 0..nn {
+        if let Some(ws0) = worker_ws.first().and_then(|wws| wws.get(i)) {
+            model.node_commit_stats(i, ws0);
+        }
+    }
+
+    Ok(StepStats {
+        loss,
+        acc: correct as f64 / bt as f64,
+        kept_channels: kept,
+        total_channels: model.total_channels(),
+    })
+}
+
 /// Data-parallel trainer over any [`Graph`]: owns the per-worker node
 /// workspaces and runs [`ParallelExecutor::train_step`] /
-/// [`ParallelExecutor::eval_batch`] as described in the module docs.
-/// Construct once and reuse — worker workspaces keep their buffer capacity
-/// across steps (and re-key in place when the batch size or shard sizes
-/// change, mirroring [`Graph::ensure_ws`]).
+/// [`ParallelExecutor::eval_batch`] as described in the module docs,
+/// spawning a scoped thread crew per step. Construct once and reuse —
+/// worker workspaces keep their buffer capacity across steps (and re-key
+/// in place when the batch size or shard sizes change, mirroring
+/// [`Graph::ensure_ws`]). For long-lived training/serving loops prefer
+/// [`crate::backend::pool::WorkerPool`], which amortizes the per-step
+/// thread spawn over a persistent crew with the same bits.
 #[derive(Debug)]
 pub struct ParallelExecutor {
     cfg: ExecConfig,
@@ -214,12 +568,14 @@ pub struct ParallelExecutor {
 
 impl ParallelExecutor {
     /// An executor with no allocated workspaces yet (they grow on first
-    /// step and are reused afterwards).
+    /// step and are reused afterwards). An auto config (`threads: 0`)
+    /// resolves to the machine's parallelism here, once.
     pub fn new(cfg: ExecConfig) -> ParallelExecutor {
+        let cfg = ExecConfig { threads: cfg.resolved_threads() };
         ParallelExecutor { cfg, worker_ws: Vec::new() }
     }
 
-    /// Configured worker count (shards per step; capped by the batch size
+    /// Resolved worker count (shards per step; capped by the batch size
     /// at step time).
     pub fn threads(&self) -> usize {
         self.cfg.threads
@@ -231,26 +587,6 @@ impl ParallelExecutor {
     /// in its forward).
     pub fn plan_cols_builds(&self) -> u64 {
         self.worker_ws.iter().flatten().map(|w| w.plan_cols_builds()).sum()
-    }
-
-    /// Key the per-worker workspaces to the given shard sizes. Conv plans
-    /// re-key in place, and the worker axis never shrinks — a small step
-    /// (e.g. the epoch-tail batch over fewer shards) parks the extra
-    /// workers' workspaces instead of dropping their grown buffers, so
-    /// steady-state steps allocate nothing here even when the shard count
-    /// varies.
-    fn ensure_worker_ws(&mut self, model: &Graph, shards: &[std::ops::Range<usize>]) {
-        let nn = model.num_layers();
-        if self.worker_ws.len() < shards.len() {
-            self.worker_ws.resize_with(shards.len(), Vec::new);
-        }
-        for (wws, r) in self.worker_ws.iter_mut().zip(shards) {
-            let sbt = r.end - r.start;
-            wws.resize_with(nn, LayerWs::default);
-            for (i, ws) in wws.iter_mut().enumerate() {
-                model.node_ensure_ws(i, ws, sbt);
-            }
-        }
     }
 
     /// One data-parallel SGD training step at `drop_rate`; the parallel
@@ -273,13 +609,12 @@ impl ParallelExecutor {
         if bt == 0 || x.len() != bt * n_in {
             bail!("bad batch geometry: {} inputs for {bt} labels", x.len());
         }
-        let nn = model.num_layers();
         let classes = model.out_features();
         let shards = shard_ranges(bt, self.cfg.threads);
         let nw = shards.len();
         // Only the per-worker workspaces are touched here — the model's
         // own (serial-path) workspaces stay untouched and unallocated.
-        self.ensure_worker_ws(model, &shards);
+        ensure_worker_ws(&mut self.worker_ws, model, &shards);
         let step = model.begin_step();
 
         let mut outs: Vec<ShardOut> = (0..nw).map(|_| ShardOut::default()).collect();
@@ -287,214 +622,32 @@ impl ParallelExecutor {
         let imp_slots: Vec<Mutex<Vec<f32>>> = (0..nw).map(|_| Mutex::new(Vec::new())).collect();
         let keep_slot: Mutex<Vec<usize>> = Mutex::new(Vec::new());
         let stat_slot: Mutex<Vec<f32>> = Mutex::new(Vec::new());
-        let m: &Graph = model;
+        let ctx = TrainShardCtx {
+            model,
+            backend,
+            x,
+            y,
+            n_in,
+            bt,
+            classes,
+            drop_rate,
+            step,
+            barrier: &barrier,
+            imp_slots: &imp_slots,
+            keep_slot: &keep_slot,
+            stat_slot: &stat_slot,
+        };
 
         std::thread::scope(|s| {
             let worker_iter = shards.iter().zip(self.worker_ws.iter_mut()).zip(outs.iter_mut());
             for (w, ((range, wws), out)) in worker_iter.enumerate() {
-                let (barrier, imp_slots) = (&barrier, &imp_slots);
-                let (keep_slot, stat_slot) = (&keep_slot, &stat_slot);
+                let ctx = &ctx;
                 let range = range.clone();
-                s.spawn(move || {
-                    let sbt = range.end - range.start;
-                    let xs = &x[range.start * n_in..range.end * n_in];
-                    let ys = &y[range.start..range.end];
-
-                    // Fixed rendezvous budget — two per sparse conv node
-                    // (selection), four per batch-normalizing node (two in
-                    // the forward, two in the backward); the guard pays any
-                    // outstanding waits if we unwind, so a panic here can
-                    // never strand the other workers.
-                    let sparse_convs = (0..nn)
-                        .filter(|&i| {
-                            m.node_layer(i)
-                                .and_then(|l| l.conv_geom())
-                                .is_some_and(|g| keep_channels(g.cout, drop_rate) < g.cout)
-                        })
-                        .count();
-                    let bn_nodes = (0..nn)
-                        .filter(|&i| m.node_layer(i).is_some_and(|l| l.needs_batch_stats()))
-                        .count();
-                    let attendance =
-                        BarrierAttendance::new(barrier, 2 * sparse_convs + 4 * bn_nodes);
-
-                    // Publish this worker's partials, rendezvous, let
-                    // worker 0 reduce them in fixed shard order, rendezvous
-                    // again, and read the broadcast back.
-                    let reduce_stats = |part: Vec<f32>| -> Vec<f32> {
-                        *imp_slots[w].lock().expect("stat slot poisoned") = part;
-                        attendance.wait();
-                        if w == 0 {
-                            *stat_slot.lock().expect("stat broadcast poisoned") =
-                                reduce_stat_partials(imp_slots);
-                        }
-                        attendance.wait();
-                        stat_slot.lock().expect("stat broadcast poisoned").clone()
-                    };
-
-                    // Shard-local forward over the graph slots, in
-                    // full-batch gradient units (grad_denom = bt). Dropout
-                    // masks key on the global example offset, so they
-                    // match serial exactly; batch-normalizing nodes reduce
-                    // their moments globally before normalizing.
-                    let ctx = FwdCtx { train: true, step, example_offset: range.start };
-                    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nn + 1);
-                    acts.push(xs.to_vec());
-                    for i in 0..nn {
-                        let next = match &m.node(i).op {
-                            NodeOp::Add { a, b } => add_forward(&acts[*a], &acts[*b]),
-                            NodeOp::Layer { layer, input } => {
-                                if layer.needs_batch_stats() {
-                                    let global =
-                                        reduce_stats(layer.fwd_stat_partials(&acts[*input], sbt));
-                                    layer.forward_with_stats(
-                                        backend,
-                                        &acts[*input],
-                                        sbt,
-                                        &mut wws[i],
-                                        &ctx,
-                                        &global,
-                                        bt,
-                                    )
-                                } else {
-                                    layer.forward(backend, &acts[*input], sbt, &mut wws[i], &ctx)
-                                }
-                            }
-                        };
-                        acts.push(next);
-                    }
-                    let (loss_sum, correct, dlogits) = softmax_ce_core(&acts[nn], ys, classes, bt);
-                    out.loss_sum = loss_sum;
-                    out.correct = correct;
-                    out.grads = (0..nn).map(|_| Vec::new()).collect();
-
-                    // Backward in reverse topological order over per-slot
-                    // gradient accumulators (an Add merge fans the
-                    // gradient to both operands). Conv selection is
-                    // global: publish importance partials, rendezvous,
-                    // worker 0 reduces + broadcasts; dense conv nodes skip
-                    // the sync and keep everything. Batch-normalizing
-                    // nodes reduce their gradient sums the same way;
-                    // every other node runs locally.
-                    let mut slot_grads: Vec<Option<Vec<f32>>> = (0..nn + 1).map(|_| None).collect();
-                    slot_grads[nn] = Some(dlogits);
-                    for i in (0..nn).rev() {
-                        let g =
-                            slot_grads[i + 1].take().expect("every node output feeds a later node");
-                        let (layer, input) = match &m.node(i).op {
-                            NodeOp::Add { a, b } => {
-                                accumulate(&mut slot_grads[*a], g.clone());
-                                accumulate(&mut slot_grads[*b], g);
-                                continue;
-                            }
-                            NodeOp::Layer { layer, input } => (layer, *input),
-                        };
-                        let need_dx = input != INPUT_SLOT;
-                        let bwd = if layer.needs_batch_stats() {
-                            let local = layer.bwd_stat_partials(&g, sbt, &wws[i]);
-                            let global = reduce_stats(local.clone());
-                            layer.backward_with_stats(
-                                backend,
-                                &acts[input],
-                                &g,
-                                sbt,
-                                &mut wws[i],
-                                &global,
-                                &local,
-                                need_dx,
-                            )
-                        } else {
-                            let keep: Option<Vec<usize>> = layer.conv_geom().map(|geom| {
-                                let keep_count = keep_channels(geom.cout, drop_rate);
-                                if keep_count == geom.cout {
-                                    return (0..geom.cout).collect();
-                                }
-                                let cfg = geom.with_batch(sbt);
-                                *imp_slots[w].lock().expect("importance slot poisoned") =
-                                    channel_abs_sums(&cfg, &g);
-                                attendance.wait();
-                                if w == 0 {
-                                    let hw = geom.hout() * geom.wout();
-                                    let sel =
-                                        reduce_select(imp_slots, bt, hw, geom.cout, keep_count);
-                                    *keep_slot.lock().expect("keep slot poisoned") = sel;
-                                }
-                                attendance.wait();
-                                keep_slot.lock().expect("keep slot poisoned").clone()
-                            });
-                            let sel = match &keep {
-                                Some(k) => Selection::Keep(k),
-                                None => Selection::Local(drop_rate),
-                            };
-                            let ws_i = &mut wws[i];
-                            layer.backward(backend, &acts[input], &g, sbt, ws_i, sel, need_dx)
-                        };
-                        if w == 0 {
-                            out.kept += bwd.kept;
-                        }
-                        out.grads[i] = bwd.grads;
-                        if need_dx {
-                            accumulate(&mut slot_grads[input], bwd.dx);
-                        }
-                    }
-                });
+                s.spawn(move || run_train_shard(ctx, w, range, wws, out));
             }
         });
 
-        // Scalar reductions in fixed shard order.
-        let (mut loss_sum, mut correct) = (0f64, 0usize);
-        for o in &outs {
-            loss_sum += o.loss_sum;
-            correct += o.correct;
-        }
-        let loss = loss_sum / bt as f64;
-        if !loss.is_finite() {
-            bail!("non-finite loss at drop rate {drop_rate}");
-        }
-        let kept = outs[0].kept;
-
-        // Gradient tree-reduction (fixed shard order) + SGD updates: for
-        // each node, each parameter's shard parts reduce through the same
-        // pairwise tree the legacy executor used, then apply.
-        let mut parts: Vec<Vec<Vec<Vec<f32>>>> = (0..nn).map(|_| Vec::new()).collect();
-        for o in outs {
-            for (l, grads) in o.grads.into_iter().enumerate() {
-                for (p, gvec) in grads.into_iter().enumerate() {
-                    if parts[l].len() <= p {
-                        parts[l].push(Vec::with_capacity(nw));
-                    }
-                    parts[l][p].push(gvec);
-                }
-            }
-        }
-        for (l, pgrads) in parts.into_iter().enumerate() {
-            if pgrads.is_empty() {
-                continue;
-            }
-            let reduced: Vec<Vec<f32>> = pgrads.into_iter().map(tree_reduce).collect();
-            for (param, grad) in model.node_params_mut(l).into_iter().zip(&reduced) {
-                for (pv, &gv) in param.iter_mut().zip(grad) {
-                    *pv -= lr * gv;
-                }
-            }
-        }
-
-        // Fold the global batch statistics into persistent layer state
-        // (BN running stats) exactly once per step — every worker holds
-        // the identical reduced statistics, so worker 0's workspace is
-        // the canonical copy.
-        for i in 0..nn {
-            if let Some(ws0) = self.worker_ws.first().and_then(|wws| wws.get(i)) {
-                model.node_commit_stats(i, ws0);
-            }
-        }
-
-        Ok(StepStats {
-            loss,
-            acc: correct as f64 / bt as f64,
-            kept_channels: kept,
-            total_channels: model.total_channels(),
-        })
+        apply_shard_outs(model, &self.worker_ws, outs, bt, drop_rate, lr)
     }
 
     /// Sharded forward-only evaluation: mean (loss, accuracy) over the
@@ -514,10 +667,8 @@ impl ParallelExecutor {
         let bt = y.len();
         let n_in = model.in_shape().volume();
         assert!(bt > 0 && x.len() == bt * n_in, "bad eval batch geometry");
-        let nlayers = model.num_layers();
-        let classes = model.out_features();
         let shards = shard_ranges(bt, self.cfg.threads);
-        self.ensure_worker_ws(model, &shards);
+        ensure_worker_ws(&mut self.worker_ws, model, &shards);
 
         let mut outs: Vec<(Vec<f64>, usize)> = shards.iter().map(|_| (Vec::new(), 0)).collect();
         std::thread::scope(|s| {
@@ -525,12 +676,7 @@ impl ParallelExecutor {
             for ((range, wws), out) in worker_iter {
                 let range = range.clone();
                 s.spawn(move || {
-                    let sbt = range.end - range.start;
-                    let xs = &x[range.start * n_in..range.end * n_in];
-                    let ys = &y[range.start..range.end];
-                    let ctx = FwdCtx { train: false, step: 0, example_offset: range.start };
-                    let acts = model.forward_collect(backend, xs, sbt, wws, &ctx);
-                    *out = softmax_ce_examples(&acts[nlayers], ys, classes);
+                    *out = run_eval_shard(model, backend, x, y, range, wws);
                 });
             }
         });
@@ -563,9 +709,8 @@ impl ParallelExecutor {
     ) -> Vec<f32> {
         let n_in = model.in_shape().volume();
         assert!(bt > 0 && x.len() == bt * n_in, "bad inference batch geometry");
-        let nlayers = model.num_layers();
         let shards = shard_ranges(bt, self.cfg.threads);
-        self.ensure_worker_ws(model, &shards);
+        ensure_worker_ws(&mut self.worker_ws, model, &shards);
 
         let mut outs: Vec<Vec<f32>> = shards.iter().map(|_| Vec::new()).collect();
         std::thread::scope(|s| {
@@ -573,11 +718,7 @@ impl ParallelExecutor {
             for ((range, wws), out) in worker_iter {
                 let range = range.clone();
                 s.spawn(move || {
-                    let sbt = range.end - range.start;
-                    let xs = &x[range.start * n_in..range.end * n_in];
-                    let ctx = FwdCtx { train: false, step: 0, example_offset: range.start };
-                    let mut acts = model.forward_collect(backend, xs, sbt, wws, &ctx);
-                    *out = acts.swap_remove(nlayers);
+                    *out = run_logits_shard(model, backend, x, range, wws);
                 });
             }
         });
@@ -624,10 +765,19 @@ mod tests {
     }
 
     #[test]
-    fn exec_config_clamps_threads() {
-        assert_eq!(ExecConfig::with_threads(0).threads, 1);
-        assert_eq!(ExecConfig::with_threads(3).threads, 3);
-        assert_eq!(ExecConfig::default().threads, 1);
+    fn exec_config_zero_means_auto_detect() {
+        // explicit counts pass through unresolved and unclamped
+        assert_eq!(ExecConfig::with_threads(3).resolved_threads(), 3);
+        assert_eq!(ExecConfig::with_threads(64).resolved_threads(), 64);
+        assert_eq!(ExecConfig::default().resolved_threads(), 1);
+        // auto resolves to available_parallelism within the documented clamp
+        let auto = ExecConfig::auto();
+        assert_eq!(auto, ExecConfig::with_threads(0));
+        let resolved = auto.resolved_threads();
+        assert!((1..=MAX_AUTO_THREADS).contains(&resolved), "auto resolved to {resolved}");
+        // executors resolve at construction, so threads() is always concrete
+        assert_eq!(ParallelExecutor::new(ExecConfig::auto()).threads(), resolved);
+        assert_eq!(ParallelExecutor::new(ExecConfig::with_threads(2)).threads(), 2);
     }
 
     #[test]

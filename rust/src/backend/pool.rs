@@ -1,0 +1,534 @@
+//! Persistent worker pool: the production execution layer.
+//!
+//! [`super::parallel::ParallelExecutor`] spawns and joins a fresh
+//! `std::thread::scope` crew on every step, so small presets pay thread
+//! spawn + cold-start costs per step that can dwarf the sparse-backward
+//! win itself. [`WorkerPool`] keeps the crew alive for the lifetime of a
+//! trainer or server and feeds it jobs over channels, amortizing that
+//! overhead to zero while running the *identical* shard protocol — the
+//! worker body, reductions, and epilogue are the shared `pub(crate)`
+//! functions in [`super::parallel`], so pooled steps are bit-identical
+//! to scoped-crew steps by construction (and t=1 stays bitwise-equal to
+//! the serial [`Graph::train_step`] path). The gated
+//! `native/pool_speedup_*` bench lines track the amortization.
+//!
+//! ## Job/reply shape
+//!
+//! Each worker owns one `mpsc` job channel (jobs are pinned to worker
+//! slots, because worker *w* owns the per-node workspace set
+//! `worker_ws[w]` and must be the thread that mutates it) and runs a
+//! trivial loop: receive a job, run it, repeat. A step dispatches one
+//! job per shard and blocks on a per-step reply channel until every
+//! worker has answered; replies carry the worker index plus the job's
+//! panic payload, if any. This request/reply message shape is the
+//! in-process rehearsal for the ROADMAP's coordinator/worker cluster
+//! mode, where the same jobs go cross-process.
+//!
+//! Jobs borrow the step's stack frame (the batch, the rendezvous slots,
+//! the output slots), which an `mpsc` channel cannot express — senders
+//! require `'static` payloads. [`dispatch`] therefore erases the job's
+//! lifetime with the classic scoped-pool `transmute`, and contains the
+//! unsafety by construction: it does not return until every dispatched
+//! job has replied, and a reply is sent strictly *after* the borrowed
+//! body has finished running (panicked or not), so no borrow ever
+//! outlives its referent. If a channel endpoint dies while borrowed jobs
+//! may still be live — a worker thread gone missing mid-step — the
+//! process aborts rather than risk unwinding past live borrows.
+//!
+//! ## Panic discipline
+//!
+//! A worker body that panics (a backend invariant violation) unwinds
+//! through the same `BarrierAttendance` guard the scoped crew uses, so
+//! its peers are never stranded on a barrier; the job wrapper catches
+//! the unwind, ships the payload back on the reply channel, and the
+//! worker thread survives to serve the next step. [`dispatch`] re-raises
+//! the lowest-indexed worker's payload on the calling thread
+//! (deterministic when several shards fail at once), so a mid-step fault
+//! propagates to the caller exactly like the scoped crew's
+//! `thread::scope` join — loudly, with the pool still usable afterwards.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Barrier, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use super::layers::LayerWs;
+use super::parallel::{
+    apply_shard_outs, ensure_worker_ws, run_eval_shard, run_logits_shard, run_train_shard,
+    ExecConfig, ShardOut, TrainShardCtx,
+};
+use super::{Backend, Graph, StepStats};
+use crate::util::shard::shard_ranges;
+
+/// A lifetime-erased unit of work bound for one worker thread.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// What a job reports back: its worker index and its panic payload, if
+/// the body unwound.
+type Reply = (usize, Option<Box<dyn std::any::Any + Send>>);
+
+/// Decrements the pool's live-worker count when a worker thread exits,
+/// however it exits — the observable the drop-joins tests assert on.
+struct WorkerAlive(Arc<AtomicUsize>);
+
+impl Drop for WorkerAlive {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Send one borrowed job to each of the first `bodies.len()` workers and
+/// block until every one has replied, then re-raise the lowest-indexed
+/// panic payload, if any. See the module docs for why the lifetime
+/// erasure here is sound and why channel failure aborts.
+fn dispatch(txs: &[Sender<Job>], bodies: Vec<Box<dyn FnOnce() + Send + '_>>) {
+    let nw = bodies.len();
+    let (reply_tx, reply_rx) = channel::<Reply>();
+    for (w, body) in bodies.into_iter().enumerate() {
+        let reply = reply_tx.clone();
+        let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+            let outcome = catch_unwind(AssertUnwindSafe(body));
+            // A dead reply receiver means dispatch already aborted the
+            // process; nothing useful to do with the error.
+            let _ = reply.send((w, outcome.err()));
+        });
+        // SAFETY: dispatch blocks below until all `nw` replies arrive,
+        // and each reply is sent strictly after its job body returned or
+        // unwound — so every borrow inside `job` is dead before this
+        // function (and thus the borrowed frame) can return. On any
+        // channel failure we abort instead of unwinding past the borrow.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Box<dyn FnOnce() + Send>>(job)
+        };
+        if txs[w].send(job).is_err() {
+            // The worker thread is gone and took our borrowed job with
+            // it; unwinding here could let the borrow dangle.
+            std::process::abort();
+        }
+    }
+    drop(reply_tx);
+
+    let mut first_panic: Option<Reply> = None;
+    for _ in 0..nw {
+        match reply_rx.recv() {
+            Ok((w, Some(payload))) => {
+                if first_panic.as_ref().is_none_or(|(pw, _)| w < *pw) {
+                    first_panic = Some((w, Some(payload)));
+                }
+            }
+            Ok((_, None)) => {}
+            // A worker died without replying — its borrowed job may have
+            // been dropped unrun or leaked; the frame must not unwind.
+            Err(_) => std::process::abort(),
+        }
+    }
+    if let Some((_, Some(payload))) = first_panic {
+        resume_unwind(payload);
+    }
+}
+
+/// Persistent data-parallel executor: the long-lived counterpart of
+/// [`super::parallel::ParallelExecutor`], with identical step semantics
+/// and bit-identical results at every thread count (see the module
+/// docs). Construct once per trainer/server, reuse across `train_step` /
+/// `eval_batch` / `eval_logits` calls in any order; dropping the pool
+/// closes the job channels and joins every worker.
+#[derive(Debug)]
+pub struct WorkerPool {
+    threads: usize,
+    /// One job channel per worker — jobs are pinned to the worker slot
+    /// whose workspace set they mutate.
+    txs: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    /// `worker_ws[w][i]`: worker w's workspace for graph node i. Owned
+    /// by the pool (not the worker threads) because the epilogue reads
+    /// worker 0's workspaces to commit batch statistics, and workspace
+    /// telemetry sums across all workers.
+    worker_ws: Vec<Vec<LayerWs>>,
+    live: Arc<AtomicUsize>,
+}
+
+impl WorkerPool {
+    /// Spawn the worker crew (an auto config resolves to the machine's
+    /// parallelism here, once — see [`ExecConfig::resolved_threads`]).
+    /// Workspaces grow on first use and are reused afterwards.
+    pub fn new(cfg: ExecConfig) -> WorkerPool {
+        let threads = cfg.resolved_threads();
+        let live = Arc::new(AtomicUsize::new(0));
+        let mut txs = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let (tx, rx) = channel::<Job>();
+            live.fetch_add(1, Ordering::SeqCst);
+            let alive = WorkerAlive(Arc::clone(&live));
+            let handle = std::thread::Builder::new()
+                .name(format!("ssprop-pool-{w}"))
+                .spawn(move || {
+                    let _alive = alive;
+                    // Jobs never unwind (they wrap their body in
+                    // catch_unwind), so the loop runs until the pool
+                    // drops its sender.
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .expect("spawn pool worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool { threads, txs, handles, worker_ws: Vec::new(), live }
+    }
+
+    /// Resolved worker count (shards per step; capped by the batch size
+    /// at step time).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Total im2col materializations across all worker workspaces —
+    /// advances by `conv_count × shards` per train step when the fused
+    /// path is healthy, exactly like the scoped executor's counter.
+    pub fn plan_cols_builds(&self) -> u64 {
+        self.worker_ws.iter().flatten().map(|w| w.plan_cols_builds()).sum()
+    }
+
+    /// One data-parallel SGD training step at `drop_rate` — the pooled
+    /// counterpart of [`super::parallel::ParallelExecutor::train_step`],
+    /// bit-identical to it at every thread count (same shard bodies, same
+    /// fixed-order reductions, same epilogue).
+    pub fn train_step(
+        &mut self,
+        model: &mut Graph,
+        backend: &dyn Backend,
+        x: &[f32],
+        y: &[i32],
+        drop_rate: f64,
+        lr: f32,
+    ) -> Result<StepStats> {
+        let bt = y.len();
+        let n_in = model.in_shape().volume();
+        if bt == 0 || x.len() != bt * n_in {
+            bail!("bad batch geometry: {} inputs for {bt} labels", x.len());
+        }
+        let classes = model.out_features();
+        let shards = shard_ranges(bt, self.threads);
+        let nw = shards.len();
+        ensure_worker_ws(&mut self.worker_ws, model, &shards);
+        let step = model.begin_step();
+
+        let mut outs: Vec<ShardOut> = (0..nw).map(|_| ShardOut::default()).collect();
+        let barrier = Barrier::new(nw);
+        let imp_slots: Vec<Mutex<Vec<f32>>> = (0..nw).map(|_| Mutex::new(Vec::new())).collect();
+        let keep_slot: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+        let stat_slot: Mutex<Vec<f32>> = Mutex::new(Vec::new());
+        let ctx = TrainShardCtx {
+            model,
+            backend,
+            x,
+            y,
+            n_in,
+            bt,
+            classes,
+            drop_rate,
+            step,
+            barrier: &barrier,
+            imp_slots: &imp_slots,
+            keep_slot: &keep_slot,
+            stat_slot: &stat_slot,
+        };
+
+        let worker_iter = shards.iter().zip(self.worker_ws.iter_mut()).zip(outs.iter_mut());
+        let bodies: Vec<Box<dyn FnOnce() + Send + '_>> = worker_iter
+            .enumerate()
+            .map(|(w, ((range, wws), out))| {
+                let ctx = &ctx;
+                let range = range.clone();
+                Box::new(move || run_train_shard(ctx, w, range, wws, out))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        dispatch(&self.txs, bodies);
+
+        apply_shard_outs(model, &self.worker_ws, outs, bt, drop_rate, lr)
+    }
+
+    /// Sharded forward-only evaluation — the pooled counterpart of
+    /// [`super::parallel::ParallelExecutor::eval_batch`], bit-identical
+    /// to [`Graph::eval_batch`] at every thread count. Panics on
+    /// malformed batch geometry.
+    pub fn eval_batch(
+        &mut self,
+        model: &Graph,
+        backend: &dyn Backend,
+        x: &[f32],
+        y: &[i32],
+    ) -> (f64, f64) {
+        let bt = y.len();
+        let n_in = model.in_shape().volume();
+        assert!(bt > 0 && x.len() == bt * n_in, "bad eval batch geometry");
+        let shards = shard_ranges(bt, self.threads);
+        ensure_worker_ws(&mut self.worker_ws, model, &shards);
+
+        let mut outs: Vec<(Vec<f64>, usize)> = shards.iter().map(|_| (Vec::new(), 0)).collect();
+        let worker_iter = shards.iter().zip(self.worker_ws.iter_mut()).zip(outs.iter_mut());
+        let bodies: Vec<Box<dyn FnOnce() + Send + '_>> = worker_iter
+            .map(|((range, wws), out)| {
+                let range = range.clone();
+                Box::new(move || {
+                    *out = run_eval_shard(model, backend, x, y, range, wws);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        dispatch(&self.txs, bodies);
+
+        let (mut loss_sum, mut correct) = (0f64, 0usize);
+        for (losses, c) in &outs {
+            for &l in losses {
+                loss_sum += l;
+            }
+            correct += c;
+        }
+        (loss_sum / bt as f64, correct as f64 / bt as f64)
+    }
+
+    /// Sharded inference — the pooled counterpart of
+    /// [`super::parallel::ParallelExecutor::eval_logits`], bit-identical
+    /// to [`Graph::infer_logits`] at every thread count. The serving
+    /// path's core primitive: per-worker forward workspaces (conv plans
+    /// included) persist across calls and across the pool's whole
+    /// lifetime. Panics on malformed batch geometry.
+    pub fn eval_logits(
+        &mut self,
+        model: &Graph,
+        backend: &dyn Backend,
+        x: &[f32],
+        bt: usize,
+    ) -> Vec<f32> {
+        let n_in = model.in_shape().volume();
+        assert!(bt > 0 && x.len() == bt * n_in, "bad inference batch geometry");
+        let shards = shard_ranges(bt, self.threads);
+        ensure_worker_ws(&mut self.worker_ws, model, &shards);
+
+        let mut outs: Vec<Vec<f32>> = shards.iter().map(|_| Vec::new()).collect();
+        let worker_iter = shards.iter().zip(self.worker_ws.iter_mut()).zip(outs.iter_mut());
+        let bodies: Vec<Box<dyn FnOnce() + Send + '_>> = worker_iter
+            .map(|((range, wws), out)| {
+                let range = range.clone();
+                Box::new(move || {
+                    *out = run_logits_shard(model, backend, x, range, wws);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        dispatch(&self.txs, bodies);
+        outs.concat()
+    }
+
+    /// Live worker-thread count observable (for lifecycle tests).
+    #[cfg(test)]
+    fn live_workers(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.live)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the job channels ends every worker loop; joining makes
+        // the teardown synchronous so no pool thread outlives the pool.
+        self.txs.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{
+        simple_cnn, Conv2d, Conv2dPlan, ConvGrads, NativeBackend, ParallelExecutor, Sequential,
+        SimpleCnnCfg,
+    };
+    use crate::util::rng::Pcg;
+
+    fn tiny() -> Sequential {
+        simple_cnn(SimpleCnnCfg { in_ch: 1, img: 8, classes: 3, depth: 2, width: 4, seed: 7 })
+    }
+
+    fn batch(bt: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Pcg::new(seed, 1);
+        let x = (0..bt * 64).map(|_| rng.normal()).collect();
+        let y = (0..bt).map(|i| (i % 3) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn pooled_steps_match_scoped_executor_bitwise() {
+        let be = NativeBackend::new();
+        for threads in [1usize, 2, 3] {
+            let mut m_pool = tiny();
+            let mut m_exec = tiny();
+            let mut pool = WorkerPool::new(ExecConfig::with_threads(threads));
+            let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+            for step in 0..4 {
+                let (x, y) = batch(6, 40 + step);
+                let d = if step % 2 == 0 { 0.8 } else { 0.0 };
+                let a = pool.train_step(&mut m_pool, &be, &x, &y, d, 0.05).unwrap();
+                let b = exec.train_step(&mut m_exec, &be, &x, &y, d, 0.05).unwrap();
+                assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "t{threads} step {step}");
+                assert_eq!(a.kept_channels, b.kept_channels);
+            }
+            let (x, _) = batch(5, 99);
+            let lp = pool.eval_logits(&m_pool, &be, &x, 5);
+            let le = exec.eval_logits(&m_exec, &be, &x, 5);
+            assert_eq!(lp.len(), le.len());
+            for (i, (a, b)) in lp.iter().zip(&le).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "t{threads} logit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_reuses_workspaces_and_counts_col_builds() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        let (x, y) = batch(6, 13);
+        let mut pool = WorkerPool::new(ExecConfig::with_threads(3));
+        pool.train_step(&mut m, &be, &x, &y, 0.5, 0.05).unwrap();
+        let per_step = (m.conv_count() * 3) as u64;
+        assert_eq!(pool.plan_cols_builds(), per_step, "one build per conv per worker");
+        pool.train_step(&mut m, &be, &x, &y, 0.5, 0.05).unwrap();
+        assert_eq!(pool.plan_cols_builds(), 2 * per_step);
+    }
+
+    #[test]
+    fn pool_rekeys_workspaces_across_batch_sizes() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        let mut pool = WorkerPool::new(ExecConfig::with_threads(2));
+        let (x8, y8) = batch(8, 3);
+        let (x4, y4) = batch(4, 4);
+        let s8 = pool.train_step(&mut m, &be, &x8, &y8, 0.0, 0.05).unwrap();
+        let s4 = pool.train_step(&mut m, &be, &x4, &y4, 0.0, 0.05).unwrap();
+        let s8b = pool.train_step(&mut m, &be, &x8, &y8, 0.0, 0.05).unwrap();
+        assert!(s8.loss.is_finite() && s4.loss.is_finite() && s8b.loss.is_finite());
+        let caps: Vec<Vec<[usize; 7]>> = pool
+            .worker_ws
+            .iter()
+            .map(|wws| wws.iter().filter_map(|w| w.plan_caps()).collect())
+            .collect();
+        pool.train_step(&mut m, &be, &x4, &y4, 0.0, 0.05).unwrap();
+        pool.train_step(&mut m, &be, &x8, &y8, 0.0, 0.05).unwrap();
+        let caps2: Vec<Vec<[usize; 7]>> = pool
+            .worker_ws
+            .iter()
+            .map(|wws| wws.iter().filter_map(|w| w.plan_caps()).collect())
+            .collect();
+        assert_eq!(caps, caps2, "shrinking then regrowing the batch must reuse capacity");
+    }
+
+    #[test]
+    fn drop_joins_every_worker() {
+        let pool = WorkerPool::new(ExecConfig::with_threads(4));
+        let live = pool.live_workers();
+        assert_eq!(live.load(Ordering::SeqCst), 4);
+        drop(pool);
+        assert_eq!(live.load(Ordering::SeqCst), 0, "drop must join all worker threads");
+    }
+
+    #[test]
+    fn auto_config_resolves_at_construction() {
+        let pool = WorkerPool::new(ExecConfig::auto());
+        let t = pool.threads();
+        assert!((1..=crate::backend::parallel::MAX_AUTO_THREADS).contains(&t));
+        assert_eq!(pool.live_workers().load(Ordering::SeqCst), t);
+    }
+
+    /// Delegates to the native backend but panics in the planned forward
+    /// when run on worker 0's thread — a stand-in for a backend invariant
+    /// violation inside one shard while its peers keep going.
+    #[derive(Debug)]
+    struct FaultyForward(NativeBackend);
+
+    impl Backend for FaultyForward {
+        fn name(&self) -> &'static str {
+            "faulty-forward"
+        }
+
+        fn conv2d_fwd_planned(
+            &self,
+            plan: &mut Conv2dPlan,
+            x: &[f32],
+            w: &[f32],
+            b: Option<&[f32]>,
+        ) -> Vec<f32> {
+            if std::thread::current().name() == Some("ssprop-pool-0") {
+                panic!("injected conv fault");
+            }
+            self.0.conv2d_fwd_planned(plan, x, w, b)
+        }
+
+        fn conv2d_bwd_planned_with(
+            &self,
+            plan: &mut Conv2dPlan,
+            x: &[f32],
+            w: &[f32],
+            g: &[f32],
+            keep_idx: &[usize],
+            need_dx: bool,
+        ) -> ConvGrads {
+            self.0.conv2d_bwd_planned_with(plan, x, w, g, keep_idx, need_dx)
+        }
+
+        fn gemm(&self, m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+            self.0.gemm(m, k, n, a, b)
+        }
+
+        fn bias_add(&self, cfg: &Conv2d, y: &mut [f32], b: &[f32]) {
+            self.0.bias_add(cfg, y, b)
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_loudly_and_pool_survives() {
+        let good = NativeBackend::new();
+        let bad = FaultyForward(NativeBackend::new());
+        let mut m = tiny();
+        let (x, y) = batch(8, 17);
+        let mut pool = WorkerPool::new(ExecConfig::with_threads(4));
+
+        // A healthy step first, so the fault hits warm workspaces.
+        pool.train_step(&mut m, &good, &x, &y, 0.0, 0.05).unwrap();
+
+        // Fault at D=0.8: worker 0 dies in its forward, before any of the
+        // step's selection rendezvous — its BarrierAttendance pays the
+        // outstanding waits during unwinding, so workers 1..3 drain
+        // instead of deadlocking, and dispatch re-raises the
+        // lowest-indexed payload on this thread.
+        let unwound = catch_unwind(AssertUnwindSafe(|| {
+            let _ = pool.train_step(&mut m, &bad, &x, &y, 0.8, 0.05);
+        }));
+        let payload = unwound.expect_err("worker panic must propagate to the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "injected conv fault", "the worker's own payload must surface");
+
+        // No deadlock, no dead workers: the pool keeps training.
+        assert_eq!(pool.live_workers().load(Ordering::SeqCst), 4);
+        let stats = pool.train_step(&mut m, &good, &x, &y, 0.8, 0.05).unwrap();
+        assert!(stats.loss.is_finite());
+        let live = pool.live_workers();
+        drop(pool);
+        assert_eq!(live.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        let be = NativeBackend::new();
+        let mut m = tiny();
+        let mut pool = WorkerPool::new(ExecConfig::with_threads(2));
+        assert!(pool.train_step(&mut m, &be, &[0.0; 3], &[0, 1], 0.0, 0.05).is_err());
+        assert!(pool.train_step(&mut m, &be, &[], &[], 0.0, 0.05).is_err());
+    }
+}

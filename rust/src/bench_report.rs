@@ -36,8 +36,13 @@ use crate::util::json::{num, obj, s, Json};
 /// the typed [`ReportError::SchemaVersion`]. Version 2 added the
 /// `gemm_speedup_*` conv ratios (blocked microkernel vs naive reference)
 /// and the per-preset `sparse_gemm_*` metrics (sparsity-aware backward
-/// GEMMs on the preset's conv shapes, dense vs D=0.5).
-pub const SCHEMA_VERSION: u64 = 2;
+/// GEMMs on the preset's conv shapes, dense vs D=0.5). Version 3 added
+/// the persistent-executor metrics: per-preset `pool_speedup_t{2,4}`
+/// (per-step-spawn scoped crew vs persistent [`crate::backend::WorkerPool`])
+/// and `pipeline_speedup` (batch-prefetch pipelined training run vs the
+/// fully synchronous loop), with their `pool_step_d80_t{2,4}_ns` /
+/// `pipeline_run_ns` / `sync_run_ns` timings.
+pub const SCHEMA_VERSION: u64 = 3;
 
 /// The ssProp drop rate the ledger columns are evaluated at (the paper's
 /// D* = 0.8, Eq. 9).
@@ -128,12 +133,13 @@ pub struct PresetReport {
     /// Canonical model spec (`backend::zoo`), e.g. `resnet-tiny-w8-b1`.
     pub spec: String,
     /// Median step times in nanoseconds (`serial_step_{dense,d80}_ns`,
-    /// `parallel_step_{dense,d80}_t{2,4}_ns`,
-    /// `sparse_gemm_{dense,d50}_ns`). Machine-dependent — never gated,
-    /// recorded for the trajectory table.
+    /// `parallel_step_{dense,d80}_t{2,4}_ns`, `pool_step_d80_t{2,4}_ns`,
+    /// `{pipeline,sync}_run_ns`, `sparse_gemm_{dense,d50}_ns`).
+    /// Machine-dependent — never gated, recorded for the trajectory table.
     pub timings_ns: BTreeMap<String, f64>,
     /// Speedup ratios (`parallel_speedup_{dense,d80}_t{2,4}`,
-    /// `bwd_speedup_d80`, `sparse_gemm_speedup_d50`). Gated within
+    /// `pool_speedup_t{2,4}`, `pipeline_speedup`, `bwd_speedup_d80`,
+    /// `sparse_gemm_speedup_d50`). Gated within
     /// [`Tolerance::ratio_band`].
     pub ratios: BTreeMap<String, f64>,
     /// Eq. 6/9 FLOPs ledger (exact).

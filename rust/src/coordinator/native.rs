@@ -17,8 +17,7 @@ use anyhow::{bail, Context, Result};
 
 use super::{checkpoint, TrainMetrics};
 use crate::backend::{
-    build_model, default_backend, parse_model_spec, Backend, ExecConfig, ParallelExecutor,
-    Sequential,
+    build_model, default_backend, parse_model_spec, Backend, ExecConfig, Sequential, WorkerPool,
 };
 use crate::data::{Loader, Loss, Split, SynthDataset};
 use crate::flops::LayerSet;
@@ -52,8 +51,16 @@ pub struct NativeTrainConfig {
     /// Seed for model init and the synthetic data plane.
     pub seed: u64,
     /// Worker threads for data-parallel train steps (1 = single-threaded;
-    /// batches shard across a [`ParallelExecutor`] when > 1).
+    /// batches shard across a persistent [`WorkerPool`] when > 1; 0 =
+    /// auto-detect via [`ExecConfig::auto`]'s documented clamp).
     pub threads: usize,
+    /// Pipeline the data plane: a run-long prefetch thread assembles the
+    /// next batch (including the epoch-tail re-key) while the current
+    /// step trains. Bit-identical to the synchronous path — the stream
+    /// carries the same batches in the same order — so this is purely a
+    /// wall-clock knob (the `native/pipeline_speedup_*` bench lines
+    /// track it).
+    pub pipeline: bool,
     /// Also train on each epoch's tail partial batch (the `train_n %
     /// batch` leftover the fixed-geometry loaders otherwise drop). Plans
     /// are prewarmed for both batch sizes, so the tail step re-keys
@@ -80,6 +87,7 @@ impl NativeTrainConfig {
             scheduler: DropScheduler::paper_default(epochs, iters_per_epoch),
             seed: 0,
             threads: 1,
+            pipeline: true,
             include_tail: false,
             verbose: false,
         }
@@ -104,9 +112,11 @@ pub struct NativeTrainer {
     /// Loss/acc curves, FLOPs ledger, wall-clock.
     pub metrics: TrainMetrics,
     backend: Box<dyn Backend>,
-    /// Data-parallel executor; drives `step` (and sharded evaluation)
-    /// when `cfg.threads > 1`.
-    executor: ParallelExecutor,
+    /// Persistent data-parallel worker pool; drives `step` (and sharded
+    /// evaluation) when the resolved thread count exceeds 1. Lives as
+    /// long as the trainer, so its workers and their plan/workspace sets
+    /// are reused across every step, evaluation, and epoch.
+    pool: WorkerPool,
 }
 
 impl NativeTrainer {
@@ -132,9 +142,6 @@ impl NativeTrainer {
         }
         if cfg.depth == 0 || cfg.width == 0 {
             bail!("depth/width must be positive");
-        }
-        if cfg.threads == 0 {
-            bail!("threads must be positive (1 = single-threaded)");
         }
         if cfg.batch > spec.train_n || cfg.batch > spec.test_n {
             bail!(
@@ -164,7 +171,7 @@ impl NativeTrainer {
         let ds = SynthDataset::new(spec.clone(), cfg.seed);
         let loader = Loader::new(ds.clone(), Split::Train, cfg.batch);
         let test_loader = Loader::new(ds, Split::Test, cfg.batch);
-        let executor = ParallelExecutor::new(ExecConfig::with_threads(cfg.threads));
+        let pool = WorkerPool::new(ExecConfig::with_threads(cfg.threads));
         Ok(NativeTrainer {
             cfg,
             model,
@@ -174,8 +181,14 @@ impl NativeTrainer {
             layers,
             metrics: TrainMetrics::default(),
             backend,
-            executor,
+            pool,
         })
+    }
+
+    /// Resolved worker count (`cfg.threads`, or the auto-detected count
+    /// when the config asked for `0`).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// Name of the backend executing the conv ops.
@@ -183,12 +196,12 @@ impl NativeTrainer {
         self.backend.name()
     }
 
-    /// Total im2col builds across the model's and the executor's conv
-    /// plans — advances by exactly `conv_count` per training step
-    /// single-thread (or `conv_count × workers` data-parallel) when the
-    /// fused path is healthy.
+    /// Total im2col builds across the model's and the pool's conv plans —
+    /// advances by exactly `conv_count` per training step single-thread
+    /// (or `conv_count × workers` data-parallel) when the fused path is
+    /// healthy.
     pub fn plan_cols_builds(&self) -> u64 {
-        self.model.plan_cols_builds() + self.executor.plan_cols_builds()
+        self.model.plan_cols_builds() + self.pool.plan_cols_builds()
     }
 
     /// Full-batch iterations per epoch after capping to the dataset size.
@@ -206,13 +219,14 @@ impl NativeTrainer {
     }
 
     /// One training step at drop rate `d`; returns (loss, acc). Routes
-    /// through the data-parallel executor when `cfg.threads > 1` (sharded
-    /// batch, globally-selected channels, tree-reduced gradients) and
-    /// through the serial [`Sequential::train_step`] otherwise.
+    /// through the persistent worker pool when the resolved thread count
+    /// exceeds 1 (sharded batch, globally-selected channels, tree-reduced
+    /// gradients) and through the serial [`Sequential::train_step`]
+    /// otherwise.
     pub fn step(&mut self, batch: &crate::data::Batch, d: f64) -> Result<(f64, f64)> {
         let lr = self.cfg.lr as f32;
-        let stats = if self.executor.threads() > 1 {
-            self.executor.train_step(
+        let stats = if self.pool.threads() > 1 {
+            self.pool.train_step(
                 &mut self.model,
                 self.backend.as_ref(),
                 &batch.x,
@@ -227,65 +241,124 @@ impl NativeTrainer {
     }
 
     /// Run the configured number of epochs. Returns final test (loss, acc).
+    ///
+    /// With [`NativeTrainConfig::pipeline`] on (the default), the data
+    /// plane is a run-long prefetch stream: the next batch — including
+    /// the epoch-tail partial batch, whose smaller geometry re-keys conv
+    /// plans — materializes on a producer thread while the current step
+    /// trains, and the next epoch's batches keep flowing while this
+    /// thread evaluates. Both paths see the same batches in the same
+    /// order and train them at the same scheduled rates, so their
+    /// loss/parameter trajectories are bit-identical; only wall-clock
+    /// differs.
     pub fn run(&mut self) -> Result<(f64, f64)> {
-        let ipe_full = self.full_iters_per_epoch();
-        let ipe = self.iters_per_epoch();
-        let mut it = 0usize;
-        for epoch in 0..self.cfg.epochs {
-            let rx = self.loader.prefetch_epoch(epoch, 4);
-            let t0 = Instant::now();
-            for (b, batch) in rx.iter().enumerate() {
-                if b >= ipe_full {
-                    break;
-                }
-                let d = self.cfg.scheduler.rate_at(it);
-                let (loss, acc) = self.step(&batch, d)?;
-                self.metrics.record_iter(loss, acc, d, &self.layers, batch.batch_size);
-                it += 1;
-            }
-            if self.cfg.include_tail {
-                let order = self.loader.epoch_order(epoch);
-                if let Some(tail) = self.loader.tail_batch(&order) {
-                    // The tail belongs to this epoch: train it at the
-                    // epoch's current scheduled rate *without* advancing
-                    // the schedule counter — the scheduler's horizon was
-                    // built from iters_per_epoch full batches, so epoch-
-                    // keyed schedules (the paper's bar) keep their phase.
-                    let d = self.cfg.scheduler.rate_at(it.saturating_sub(1));
-                    let (loss, acc) = self.step(&tail, d)?;
-                    self.metrics.record_iter(loss, acc, d, &self.layers, tail.batch_size);
-                }
-            }
-            self.metrics.record_epoch(t0.elapsed());
-            if self.cfg.verbose {
-                let m = &self.metrics;
-                println!(
-                    "epoch {epoch:>3}  loss {:.4}  acc {:.3}  drop {:.2}  ({} iters)",
-                    m.last_epoch_loss(ipe),
-                    m.last_epoch_acc(ipe),
-                    self.cfg.scheduler.rate_at(it.saturating_sub(1)),
-                    ipe
-                );
-            }
+        if self.cfg.pipeline {
+            self.run_pipelined()?;
+        } else {
+            self.run_sync()?;
         }
         let fin = self.evaluate();
         self.metrics.record_eval(self.cfg.epochs.saturating_sub(1), fin.0, fin.1);
         Ok(fin)
     }
 
+    /// The pipelined epoch loop: consume [`Loader::prefetch_run`]'s
+    /// cross-epoch stream, stepping each item as it lands.
+    fn run_pipelined(&mut self) -> Result<()> {
+        let ipe_full = self.full_iters_per_epoch();
+        let ipe = self.iters_per_epoch();
+        let rx = self.loader.prefetch_run(self.cfg.epochs, ipe_full, self.cfg.include_tail, 4);
+        let mut it = 0usize;
+        let mut epoch = 0usize;
+        let mut t0 = Instant::now();
+        for item in rx.iter() {
+            if item.epoch > epoch {
+                self.metrics.record_epoch(t0.elapsed());
+                self.log_epoch(epoch, ipe, it);
+                epoch = item.epoch;
+                t0 = Instant::now();
+            }
+            // The tail belongs to its epoch: it trains at the epoch's
+            // current scheduled rate *without* advancing the schedule
+            // counter — the scheduler's horizon was built from
+            // iters_per_epoch full batches, so epoch-keyed schedules
+            // (the paper's bar) keep their phase.
+            let d = if item.is_tail {
+                self.cfg.scheduler.rate_at(it.saturating_sub(1))
+            } else {
+                self.cfg.scheduler.rate_at(it)
+            };
+            let (loss, acc) = self.step(&item.batch, d)?;
+            self.metrics.record_iter(loss, acc, d, &self.layers, item.batch.batch_size);
+            if !item.is_tail {
+                it += 1;
+            }
+        }
+        self.metrics.record_epoch(t0.elapsed());
+        self.log_epoch(epoch, ipe, it);
+        Ok(())
+    }
+
+    /// The synchronous epoch loop: materialize every batch inline, right
+    /// before its step — the reference the `native/pipeline_speedup_*`
+    /// bench lines (and the pipeline determinism suite) compare against.
+    fn run_sync(&mut self) -> Result<()> {
+        let ipe_full = self.full_iters_per_epoch();
+        let ipe = self.iters_per_epoch();
+        let mut it = 0usize;
+        for epoch in 0..self.cfg.epochs {
+            let t0 = Instant::now();
+            let order = self.loader.epoch_order(epoch);
+            for b in 0..ipe_full {
+                let batch = self.loader.batch(&order, b);
+                let d = self.cfg.scheduler.rate_at(it);
+                let (loss, acc) = self.step(&batch, d)?;
+                self.metrics.record_iter(loss, acc, d, &self.layers, batch.batch_size);
+                it += 1;
+            }
+            if self.cfg.include_tail {
+                if let Some(tail) = self.loader.tail_batch(&order) {
+                    // Same tail discipline as the pipelined path: the
+                    // epoch's current rate, no counter advance.
+                    let d = self.cfg.scheduler.rate_at(it.saturating_sub(1));
+                    let (loss, acc) = self.step(&tail, d)?;
+                    self.metrics.record_iter(loss, acc, d, &self.layers, tail.batch_size);
+                }
+            }
+            self.metrics.record_epoch(t0.elapsed());
+            self.log_epoch(epoch, ipe, it);
+        }
+        Ok(())
+    }
+
+    /// Per-epoch progress line (when `cfg.verbose`).
+    fn log_epoch(&self, epoch: usize, ipe: usize, it: usize) {
+        if self.cfg.verbose {
+            let m = &self.metrics;
+            println!(
+                "epoch {epoch:>3}  loss {:.4}  acc {:.3}  drop {:.2}  ({} iters)",
+                m.last_epoch_loss(ipe),
+                m.last_epoch_acc(ipe),
+                self.cfg.scheduler.rate_at(it.saturating_sub(1)),
+                ipe
+            );
+        }
+    }
+
     /// Mean (loss, acc) over the test split (forward only). Shards each
-    /// eval batch across the executor's workers when `cfg.threads > 1` —
-    /// bit-identical to the serial evaluation at any thread count (the
-    /// reducer sums per-example losses in global example order).
+    /// eval batch across the pool's workers when the resolved thread
+    /// count exceeds 1 — bit-identical to the serial evaluation at any
+    /// thread count (the reducer sums per-example losses in global
+    /// example order).
     pub fn evaluate(&mut self) -> (f64, f64) {
         let order = self.test_loader.epoch_order(0);
         let nb = self.test_loader.batches_per_epoch().max(1);
         let (mut sl, mut sa) = (0.0, 0.0);
         for b in 0..nb {
             let batch = self.test_loader.batch(&order, b);
-            let (l, a) = if self.executor.threads() > 1 {
+            let (l, a) = if self.pool.threads() > 1 {
                 let be = self.backend.as_ref();
-                self.executor.eval_batch(&self.model, be, &batch.x, &batch.y_class)
+                self.pool.eval_batch(&self.model, be, &batch.x, &batch.y_class)
             } else {
                 self.model.eval_batch(self.backend.as_ref(), &batch.x, &batch.y_class)
             };
@@ -342,11 +415,20 @@ mod tests {
     }
 
     #[test]
-    fn rejects_zero_threads() {
+    fn zero_threads_resolves_to_auto_detected_pool() {
         let mut cfg = quick_cfg();
         cfg.threads = 0;
-        let err = NativeTrainer::new(cfg).err().expect("must reject").to_string();
-        assert!(err.contains("threads"), "{err}");
+        let t = NativeTrainer::new(cfg).unwrap();
+        let resolved = t.threads();
+        assert!(
+            (1..=crate::backend::parallel::MAX_AUTO_THREADS).contains(&resolved),
+            "auto resolved to {resolved}"
+        );
+        assert_eq!(
+            resolved,
+            ExecConfig::auto().resolved_threads(),
+            "the trainer's pool uses the documented auto clamp"
+        );
     }
 
     #[test]
@@ -493,6 +575,36 @@ mod tests {
         let rates = &t.metrics.drop_rates;
         assert!(rates[..5].iter().all(|&d| d == 0.0), "epoch 0 (incl. tail) is dense: {rates:?}");
         assert!(rates[5..].iter().all(|&d| d == 0.8), "epoch 1 (incl. tail) is sparse: {rates:?}");
+    }
+
+    #[test]
+    fn pipelined_run_is_bit_identical_to_sync_run_including_tail_rekey() {
+        // batch 30 on mnist (train_n 2048) leaves an 8-example tail, so
+        // the stream exercises the mid-run plan re-key; 2 epochs + the
+        // EpochBar schedule exercise the tail's no-counter-advance rule.
+        for threads in [1usize, 2] {
+            let mk = |pipeline: bool| {
+                let mut cfg = NativeTrainConfig::quick("mnist", 2, 4);
+                cfg.batch = 30;
+                cfg.include_tail = true;
+                cfg.threads = threads;
+                cfg.pipeline = pipeline;
+                cfg.scheduler =
+                    DropScheduler::new(Schedule::EpochBar { period_epochs: 2 }, 0.8, 2, 4);
+                NativeTrainer::new(cfg).unwrap()
+            };
+            let mut piped = mk(true);
+            let mut sync = mk(false);
+            let fin_piped = piped.run().unwrap();
+            let fin_sync = sync.run().unwrap();
+            assert_eq!(fin_piped, fin_sync, "t{threads}: final eval must be bitwise equal");
+            assert_eq!(piped.metrics.losses.len(), 10, "(4 full + tail) x 2 epochs");
+            for (i, (a, b)) in piped.metrics.losses.iter().zip(&sync.metrics.losses).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "t{threads} step {i} loss");
+            }
+            assert_eq!(piped.metrics.drop_rates, sync.metrics.drop_rates, "same schedule phase");
+            assert_eq!(piped.metrics.flops_actual, sync.metrics.flops_actual);
+        }
     }
 
     #[test]

@@ -12,14 +12,15 @@
 //!   expects (`--model`), a mismatch against the checkpoint's recorded
 //!   spec is the typed [`ServeError::SpecMismatch`] naming both.
 //! * **No-workspace walk.** Answers run through
-//!   [`ParallelExecutor::eval_logits`] — forward-only, per-worker conv
-//!   plans persisting across requests, no gradient accumulators or
-//!   backward scratch ever allocated, Dropout and BN-training branches
-//!   skipped (eval mode).
+//!   [`WorkerPool::eval_logits`] — forward-only, per-worker conv plans
+//!   persisting across requests *and* across drains (the pool's workers
+//!   live as long as the server), no gradient accumulators or backward
+//!   scratch ever allocated, Dropout and BN-training branches skipped
+//!   (eval mode).
 //! * **Batching queue.** [`Server::serve`] drains a FIFO of
 //!   [`ClassifyRequest`]s, coalescing up to [`ServeConfig::batch`] requests
 //!   per inference call (the tail batch may be smaller) and sharding each
-//!   coalesced batch across the executor's threads. Answers come back in
+//!   coalesced batch across the pool's threads. Answers come back in
 //!   request order and are **bit-identical** to serving the same requests
 //!   one at a time at any thread count: eval-mode layers are per-example,
 //!   so neither coalescing nor sharding changes a single bit
@@ -39,7 +40,7 @@ use anyhow::Result;
 
 use crate::backend::fold::{self, FoldError};
 use crate::backend::zoo::parse_model_spec;
-use crate::backend::{default_backend, Backend, ExecConfig, Graph, ParallelExecutor};
+use crate::backend::{default_backend, Backend, ExecConfig, Graph, WorkerPool};
 use crate::coordinator::checkpoint;
 
 /// Typed serving failures.
@@ -75,7 +76,8 @@ pub struct ServeConfig {
     /// Most requests coalesced into one inference call (≥ 1; the queue
     /// tail may produce a smaller final batch).
     pub batch: usize,
-    /// Worker threads each coalesced batch is sharded over (≥ 1).
+    /// Worker threads each coalesced batch is sharded over (0 =
+    /// auto-detect via [`ExecConfig::auto`]'s documented clamp).
     pub threads: usize,
 }
 
@@ -124,13 +126,14 @@ pub struct ServeStats {
     pub throughput_rps: f64,
 }
 
-/// A loaded model plus the executor state needed to answer classify
-/// requests. Construct once per checkpoint and reuse — per-worker forward
-/// plans persist across [`Server::serve`] calls.
+/// A loaded model plus the persistent worker pool needed to answer
+/// classify requests. Construct once per checkpoint and reuse — the
+/// pool's workers and their per-worker forward plans persist across
+/// [`Server::serve`] calls.
 pub struct Server {
     model: Graph,
     backend: Box<dyn Backend>,
-    exec: ParallelExecutor,
+    pool: WorkerPool,
     cfg: ServeConfig,
     n_in: usize,
     classes: usize,
@@ -199,12 +202,13 @@ impl Server {
         };
         let n_in = model.in_shape().volume();
         let classes = model.out_features();
-        let cfg = ServeConfig { batch: cfg.batch.max(1), threads: cfg.threads.max(1) };
-        let exec = ParallelExecutor::new(ExecConfig::with_threads(cfg.threads));
+        // threads = 0 is meaningful (auto-detect); only batch clamps.
+        let pool = WorkerPool::new(ExecConfig::with_threads(cfg.threads));
+        let cfg = ServeConfig { batch: cfg.batch.max(1), threads: pool.threads() };
         Ok(Server {
             model,
             backend: default_backend(),
-            exec,
+            pool,
             cfg,
             n_in,
             classes,
@@ -244,16 +248,24 @@ impl Server {
         self.classes
     }
 
-    /// Current serving knobs.
+    /// Current serving knobs (`threads` is always the resolved count,
+    /// even when the server was configured with `0` = auto).
     pub fn config(&self) -> ServeConfig {
         self.cfg
     }
 
-    /// Re-shard future batches over `threads` workers (clamped to ≥ 1).
-    /// Grown worker workspaces are kept; answers stay bit-identical.
+    /// Resolved worker count of the serving pool.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Re-shard future batches over `threads` workers (`0` = auto-detect).
+    /// Replaces the worker pool — the old workers join, fresh ones spawn —
+    /// so workspaces restart cold; answers stay bit-identical at any
+    /// thread count regardless.
     pub fn set_threads(&mut self, threads: usize) {
-        self.cfg.threads = threads.max(1);
-        self.exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+        self.pool = WorkerPool::new(ExecConfig::with_threads(threads));
+        self.cfg.threads = self.pool.threads();
     }
 
     /// Change the coalescing limit (clamped to ≥ 1); answers stay
@@ -265,14 +277,14 @@ impl Server {
     /// Raw logits of a prepared batch (`bt` rows), through the same
     /// forward-only sharded walk [`Server::serve`] uses.
     pub fn logits(&mut self, x: &[f32], bt: usize) -> Vec<f32> {
-        self.exec.eval_logits(&self.model, self.backend.as_ref(), x, bt)
+        self.pool.eval_logits(&self.model, self.backend.as_ref(), x, bt)
     }
 
     /// Mean (loss, accuracy) of a labelled batch on the serving model —
     /// the eval cross-check the determinism suite compares answers
     /// against.
     pub fn eval_batch(&mut self, x: &[f32], y: &[i32]) -> (f64, f64) {
-        self.exec.eval_batch(&self.model, self.backend.as_ref(), x, y)
+        self.pool.eval_batch(&self.model, self.backend.as_ref(), x, y)
     }
 
     /// Drain a request queue: coalesce up to [`ServeConfig::batch`]
@@ -298,7 +310,7 @@ impl Server {
                 ids.push(r.id);
                 x.extend_from_slice(&r.pixels);
             }
-            let logits = self.exec.eval_logits(&self.model, self.backend.as_ref(), &x, take);
+            let logits = self.pool.eval_logits(&self.model, self.backend.as_ref(), &x, take);
             let batch_ns = t0.elapsed().as_nanos() as u64;
             for (row, id) in ids.into_iter().enumerate() {
                 let lg = logits[row * self.classes..(row + 1) * self.classes].to_vec();
@@ -430,5 +442,48 @@ mod tests {
     fn argmax_ties_break_to_first() {
         assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
         assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn zero_threads_serves_on_an_auto_sized_pool() {
+        let dir = tmp_dir("auto");
+        let ck = dir.join("vgg.tstore");
+        save_preset(&ck, "mnist", "vgg-tiny-w4", 5);
+        let cfg = ServeConfig { batch: 4, threads: 0 };
+        let mut srv = Server::from_checkpoint(&ck, None, cfg).unwrap();
+        let resolved = srv.threads();
+        assert!(
+            (1..=crate::backend::parallel::MAX_AUTO_THREADS).contains(&resolved),
+            "auto resolved to {resolved}"
+        );
+        assert_eq!(srv.config().threads, resolved, "config reports the resolved count");
+        let (answers, stats) = srv.serve(requests(5, srv.input_len(), 2));
+        assert_eq!(stats.answered, 5);
+        assert_eq!(answers.len(), 5);
+        // set_threads(0) re-resolves rather than clamping to 1
+        srv.set_threads(0);
+        assert_eq!(srv.threads(), resolved);
+    }
+
+    #[test]
+    fn repeated_drains_on_one_server_are_bitwise_identical() {
+        let dir = tmp_dir("redrain");
+        let ck = dir.join("rn.tstore");
+        save_preset(&ck, "mnist", "resnet-tiny-w4-b1", 11);
+        let cfg = ServeConfig { batch: 4, threads: 2 };
+        let mut srv = Server::from_checkpoint(&ck, None, cfg).unwrap();
+        let reqs = requests(7, srv.input_len(), 3);
+        let (first, _) = srv.serve(reqs.clone());
+        // Same queue again on the same (now warm) pool: the workers and
+        // their plan workspaces are reused, and every bit must match.
+        let (second, _) = srv.serve(reqs);
+        assert_eq!(first.len(), second.len());
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.class, b.class);
+            for (la, lb) in a.logits.iter().zip(&b.logits) {
+                assert_eq!(la.to_bits(), lb.to_bits(), "re-drain must be bitwise");
+            }
+        }
     }
 }

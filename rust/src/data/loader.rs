@@ -159,10 +159,69 @@ impl Loader {
         rx
     }
 
+    /// Spawn a single run-long prefetch thread streaming every training
+    /// batch of every epoch in order — up to `iters_per_epoch` full
+    /// batches per epoch (capped by [`Loader::batches_per_epoch`]), then
+    /// the epoch-tail partial batch when `include_tail` holds and one
+    /// exists. This is the trainer's pipelined data plane: the next batch
+    /// (including the tail's different geometry, which re-keys conv
+    /// plans) materializes while the current step trains, and the next
+    /// epoch's batches keep flowing while the trainer evaluates between
+    /// epochs. Batches are built by the same [`Loader::epoch_order`] /
+    /// [`Loader::batch`] / [`Loader::tail_batch`] calls the synchronous
+    /// path makes, in the same order, so the stream's contents are
+    /// bit-identical to non-pipelined loading by construction.
+    pub fn prefetch_run(
+        &self,
+        epochs: usize,
+        iters_per_epoch: usize,
+        include_tail: bool,
+        depth: usize,
+    ) -> mpsc::Receiver<RunItem> {
+        let (tx, rx) = mpsc::sync_channel(depth);
+        let loader = Loader {
+            ds: self.ds.clone(),
+            split: self.split,
+            batch_size: self.batch_size,
+            mean: self.mean,
+            std: self.std,
+        };
+        thread::spawn(move || {
+            for epoch in 0..epochs {
+                let order = loader.epoch_order(epoch);
+                for b in 0..iters_per_epoch.min(loader.batches_per_epoch()) {
+                    let item = RunItem { epoch, is_tail: false, batch: loader.batch(&order, b) };
+                    if tx.send(item).is_err() {
+                        return; // consumer dropped — stop generating
+                    }
+                }
+                if include_tail {
+                    if let Some(batch) = loader.tail_batch(&order) {
+                        if tx.send(RunItem { epoch, is_tail: true, batch }).is_err() {
+                            return;
+                        }
+                    }
+                }
+            }
+        });
+        rx
+    }
+
     /// Loss family of the underlying dataset (CE or BCE).
     pub fn loss(&self) -> Loss {
         self.ds.spec.loss
     }
+}
+
+/// One item of the cross-epoch prefetch stream ([`Loader::prefetch_run`]).
+#[derive(Debug, Clone)]
+pub struct RunItem {
+    /// The epoch this batch belongs to.
+    pub epoch: usize,
+    /// True for the epoch-tail partial batch (smaller geometry).
+    pub is_tail: bool,
+    /// The materialized batch.
+    pub batch: Batch,
 }
 
 fn estimate_stats(ds: &SynthDataset) -> (f32, f32) {
@@ -297,6 +356,46 @@ mod tests {
         let streamed: Vec<f32> = batches.iter().flat_map(|b| b.x.clone()).collect();
         let sync: Vec<f32> = (0..68).flat_map(|b| l.batch(&order, b).x).collect();
         assert_eq!(streamed, sync, "stream matches the sync slices the tail excludes");
+    }
+
+    #[test]
+    fn prefetch_run_streams_epochs_in_order_with_tails() {
+        // mnist train is 2048 examples; batch 30 → 68 full batches + 8-tail
+        let l = loader("mnist", 30);
+        let items: Vec<RunItem> = l.prefetch_run(2, usize::MAX, true, 2).iter().collect();
+        assert_eq!(items.len(), 2 * 69, "68 full + 1 tail per epoch");
+        for epoch in 0..2 {
+            let chunk = &items[epoch * 69..(epoch + 1) * 69];
+            assert!(chunk.iter().all(|i| i.epoch == epoch));
+            assert!(chunk[..68].iter().all(|i| !i.is_tail && i.batch.batch_size == 30));
+            assert!(chunk[68].is_tail && chunk[68].batch.batch_size == 8);
+            // bit-identical to the synchronous path, tail included
+            let order = l.epoch_order(epoch);
+            for (b, item) in chunk[..68].iter().enumerate() {
+                let sync = l.batch(&order, b);
+                assert_eq!(item.batch.x, sync.x);
+                assert_eq!(item.batch.y_class, sync.y_class);
+            }
+            let tail = l.tail_batch(&order).unwrap();
+            assert_eq!(chunk[68].batch.x, tail.x);
+            assert_eq!(chunk[68].batch.y_class, tail.y_class);
+        }
+    }
+
+    #[test]
+    fn prefetch_run_respects_iter_cap_and_tail_opt_out() {
+        let l = loader("mnist", 30);
+        let capped: Vec<RunItem> = l.prefetch_run(2, 4, true, 2).iter().collect();
+        assert_eq!(capped.len(), 2 * 5, "4 capped full batches + the tail per epoch");
+        assert!(capped.iter().filter(|i| i.is_tail).count() == 2);
+        let no_tail: Vec<RunItem> = l.prefetch_run(1, 4, false, 2).iter().collect();
+        assert_eq!(no_tail.len(), 4);
+        assert!(no_tail.iter().all(|i| !i.is_tail));
+        // an evenly-dividing batch size never emits a tail item
+        let even = loader("mnist", 32);
+        let items: Vec<RunItem> = even.prefetch_run(1, usize::MAX, true, 2).iter().collect();
+        assert_eq!(items.len(), 64);
+        assert!(items.iter().all(|i| !i.is_tail));
     }
 
     #[test]

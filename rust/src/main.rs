@@ -32,27 +32,31 @@ native commands (no artifacts needed; pure-Rust backend):
   quickstart   train a zoo model with the paper's scheduler and print the
                FLOPs/energy ledger   [--dataset cifar10] [--model simple-cnn]
                [--epochs 4] [--iters 24] [--target-drop 0.8] [--seed 0]
-               [--threads 1]
+               [--threads 1 (0 = auto)]
   train-native full native training  --dataset cifar10 [--model simple-cnn]
                [--depth 2] [--width 8] [--batch 16] [--epochs 3] [--iters 16]
                [--lr 0.3]
                [--schedule epoch-bar|constant|linear|cosine|bar|iter-bar|warmup-bar]
                [--target-drop 0.8] [--period 2] [--seed 0] [--threads 1]
-               [--include-tail] [--save ck.tstore] [--verbose]
+               [--include-tail] [--no-pipeline] [--save ck.tstore] [--verbose]
                (--model picks a zoo preset: simple-cnn[-dD-wW], vgg-tiny[-wW],
                dropout-cnn[-wW-pP], resnet-tiny[-wW-bB] (residual blocks +
                BatchNorm, W channels x B blocks per stage); bare simple-cnn
                takes --depth/--width. --threads N shards each batch across N
-               workers with deterministic gradient reduction; --include-tail
-               also trains each epoch's leftover partial batch)
+               persistent pool workers with deterministic gradient reduction,
+               0 auto-detects the count; --include-tail also trains each
+               epoch's leftover partial batch; --no-pipeline disables the
+               batch-prefetch pipeline — a wall-clock knob, bits identical)
   fold         bake a checkpoint's BatchNorm statistics into its conv
                weights for serving: fold --checkpoint ck.tstore --out
                folded.tstore (specs without BatchNorm are a typed no-op)
   serve        answer batched classify requests from a checkpoint (folded
                in memory when needed) and report p50/p99 latency +
                throughput:  serve --checkpoint ck.tstore [--model SPEC]
-               [--requests 96] [--batch 32] [--threads 1] [--seed 0]
-               [--json results/BENCH_serve.json]
+               [--requests 96] [--batch 32] [--threads 1 (0 = auto)]
+               [--seed 0] [--repeat 1] [--json results/BENCH_serve.json]
+               (--repeat N drains the same queue N times on one persistent
+               server and fails loudly if any drain's answers differ bitwise)
   datasets     print Table 1 (dataset geometry)
   presets      print Tables 2/3 (hyperparameters)
   flops        print FLOPs parity + Eq.10/11 lower-bound tables
@@ -115,15 +119,12 @@ fn parse_horizon_and_target(
     Ok((epochs, iters, target))
 }
 
-/// Parse `--threads` (default 1 = single-threaded), rejecting 0 and
+/// Parse `--threads` (default 1 = single-threaded; 0 = auto-detect via
+/// `ExecConfig::auto`'s documented clamp), erroring on negative or
 /// non-numeric values here so the CLI fails with a clean message instead
 /// of a constructor error or a silent fallback.
 fn parse_threads(args: &Args) -> Result<usize> {
-    let threads = parsed_flag(args, "threads", 1usize)?;
-    if threads == 0 {
-        bail!("--threads must be positive (1 = single-threaded)");
-    }
-    Ok(threads)
+    parsed_flag(args, "threads", 1usize)
 }
 
 /// Parse an optional flag strictly: absent uses the default, garbage is an
@@ -254,7 +255,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let Some(ck) = args.get("checkpoint") else {
         bail!(
             "usage: ssprop serve --checkpoint ck.tstore [--model SPEC] [--requests 96] \
-             [--batch 32] [--threads 1] [--seed 0] [--json PATH]"
+             [--batch 32] [--threads 1] [--seed 0] [--repeat 1] [--json PATH]"
         );
     };
     let batch = parsed_flag(args, "batch", 32usize)?;
@@ -263,9 +264,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("--batch and --requests must be positive");
     }
     let threads = parse_threads(args)?;
+    let repeat = parsed_flag(args, "repeat", 1usize)?;
+    if repeat == 0 {
+        bail!("--repeat must be positive (1 = a single measured drain)");
+    }
     let seed = parsed_flag(args, "seed", 0u64)?;
     let mut srv =
         Server::from_checkpoint(Path::new(ck), args.get("model"), ServeConfig { batch, threads })?;
+    // 0 means auto-detect; every report below names the resolved count.
+    let threads = srv.threads();
     let n_in = srv.input_len();
     let make_requests = |seed: u64, n: usize| -> Vec<ClassifyRequest> {
         let mut rng = Pcg::new(seed, 77);
@@ -282,7 +289,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // reference drains the speedup ratios compare against: the same queue
     // at one thread, and one request at a time.
     srv.serve(make_requests(seed + 1, batch.min(n_requests)));
-    let (_answers, stats) = srv.serve(make_requests(seed, n_requests));
+    let (answers, stats) = srv.serve(make_requests(seed, n_requests));
+    // --repeat N: re-drain the identical queue on the same (persistent)
+    // server and require every answer to match the first drain bitwise —
+    // the pool-reuse determinism check CI runs ahead of the bench gates.
+    for pass in 1..repeat {
+        let (again, _) = srv.serve(make_requests(seed, n_requests));
+        let same = again.len() == answers.len()
+            && again.iter().zip(answers.iter()).all(|(a, b)| {
+                a.id == b.id
+                    && a.class == b.class
+                    && a.logits.len() == b.logits.len()
+                    && a.logits
+                        .iter()
+                        .zip(b.logits.iter())
+                        .all(|(x, y)| x.to_bits() == y.to_bits())
+            });
+        if !same {
+            bail!(
+                "serve --repeat: drain {} diverged bitwise from drain 1 on the same queue",
+                pass + 1
+            );
+        }
+    }
+    if repeat > 1 {
+        println!("repeat drains    {repeat} drains of the same queue, answers bitwise-identical");
+    }
     srv.set_threads(1);
     srv.serve(make_requests(seed + 1, batch.min(n_requests)));
     let (_, t1) = srv.serve(make_requests(seed, n_requests));
@@ -370,6 +402,7 @@ fn cmd_train_native(args: &Args) -> Result<()> {
     cfg.seed = parsed_flag(args, "seed", 0u64)?;
     cfg.threads = parse_threads(args)?;
     cfg.include_tail = args.has_flag("include-tail") || args.get("include-tail").is_some();
+    cfg.pipeline = !(args.has_flag("no-pipeline") || args.get("no-pipeline").is_some());
     cfg.scheduler = DropScheduler::new(schedule, target, epochs, iters);
     cfg.verbose = args.has_flag("verbose") || args.get("verbose").is_some();
 
@@ -386,7 +419,7 @@ fn cmd_train_native(args: &Args) -> Result<()> {
 fn print_native_summary(t: &NativeTrainer, loss: f64, acc: f64) {
     let m = &t.metrics;
     println!("\nbackend          {}", t.backend_name());
-    println!("threads          {}", t.cfg.threads);
+    println!("threads          {}", t.threads());
     println!("dataset          {}", t.cfg.dataset);
     println!("model            {} ({})", t.model_spec, t.model.describe());
     println!("final test loss  {loss:.4}");

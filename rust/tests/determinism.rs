@@ -13,6 +13,14 @@
 //! bit-identical run-to-run per thread count, and one worker reproduces
 //! the serial step bitwise.
 //!
+//! The persistent [`WorkerPool`] carries the exact same contract as the
+//! per-step scoped crew — it runs the same shared shard bodies — so
+//! pooled runs are pinned bitwise against scoped runs at every thread
+//! count (t8 included; CI runs the `t8`-named tests in release), pool
+//! *reuse* across train/eval phases is pinned against fresh executors,
+//! and the batch-prefetch training pipeline is pinned bitwise against the
+//! fully synchronous loop (epoch-tail re-key included).
+//!
 //! The serving path inherits the same contract: coalescing queued classify
 //! requests into batches and sharding them across the pool must answer
 //! **bit-identically** to serving one request at a time on one thread —
@@ -24,9 +32,12 @@ use std::collections::HashMap;
 
 use ssprop::backend::{
     build_model, parse_model_spec, simple_cnn, ExecConfig, NativeBackend, ParallelExecutor,
-    Sequential, SimpleCnnCfg, StepStats,
+    Sequential, SimpleCnnCfg, StepStats, WorkerPool,
 };
-use ssprop::coordinator::{checkpoint, ClassifyRequest, ServeConfig, Server};
+use ssprop::coordinator::{
+    checkpoint, ClassifyRequest, NativeTrainConfig, NativeTrainer, ServeConfig, Server,
+};
+use ssprop::schedule::{DropScheduler, Schedule};
 use ssprop::tensorstore::Tensor;
 use ssprop::util::rng::Pcg;
 
@@ -284,6 +295,151 @@ fn serve_answers_agree_with_eval_batch_accuracy() {
     let hits = answers.iter().zip(&y).filter(|(a, &label)| a.class == label as usize).count();
     let (_, acc) = srv.eval_batch(&x, &y);
     assert_eq!(acc, hits as f64 / n as f64, "serve argmax must agree with eval accuracy");
+}
+
+#[test]
+fn pooled_runs_match_scoped_executor_bitwise_up_to_t8() {
+    // The persistent pool dispatches the same shared shard bodies the
+    // scoped crew spawns, so at every worker count — t8's
+    // more-workers-than-examples shape included — a pooled run must
+    // reproduce the scoped run's parameters bit-for-bit.
+    let be = NativeBackend::new();
+    let bt = 12;
+    let data = batches(bt);
+    for threads in [1usize, 2, 4, 8] {
+        let scoped = {
+            let mut m = model();
+            let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+            for (step, (x, y)) in data.iter().take(4).enumerate() {
+                exec.train_step(&mut m, &be, x, y, drop_at(step + 1), 0.05).unwrap();
+            }
+            m.flat_params()
+        };
+        let pooled = {
+            let mut m = model();
+            let mut pool = WorkerPool::new(ExecConfig::with_threads(threads));
+            for (step, (x, y)) in data.iter().take(4).enumerate() {
+                pool.train_step(&mut m, &be, x, y, drop_at(step + 1), 0.05).unwrap();
+            }
+            m.flat_params()
+        };
+        assert_eq!(scoped, pooled, "t{threads}: pooled run must match the scoped crew bitwise");
+    }
+}
+
+#[test]
+fn resnet_tiny_pooled_t8_matches_scoped_bitwise() {
+    // Same pin through the residual/BatchNorm graph: the pool's barrier
+    // rendezvous reduces BN statistics in the same fixed shard order, so
+    // parameters *and* running stats match the scoped crew bitwise at t8.
+    let be = NativeBackend::new();
+    let bt = 12;
+    let data = batches(bt);
+    for threads in [2usize, 8] {
+        let run = |pool_mode: bool| {
+            let mut m = resnet();
+            let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+            let mut pool = WorkerPool::new(ExecConfig::with_threads(threads));
+            for (step, (x, y)) in data.iter().take(3).enumerate() {
+                if pool_mode {
+                    pool.train_step(&mut m, &be, x, y, drop_at(step + 1), 0.05).unwrap();
+                } else {
+                    exec.train_step(&mut m, &be, x, y, drop_at(step + 1), 0.05).unwrap();
+                }
+            }
+            m.flat_params()
+        };
+        assert_eq!(run(false), run(true), "t{threads}: resnet pooled vs scoped bits");
+    }
+}
+
+#[test]
+fn single_worker_pool_reproduces_serial_bitwise() {
+    // t=1 is the strongest pin: one pool worker replays the exact serial
+    // computation, so even the weights are bit-identical step by step.
+    let be = NativeBackend::new();
+    let bt = 6;
+    let data = batches(bt);
+    let mut serial = model();
+    let mut pooled = model();
+    let mut pool = WorkerPool::new(ExecConfig::with_threads(1));
+    for (step, (x, y)) in data.iter().enumerate() {
+        let d = drop_at(step + 1); // start sparse: selection must agree too
+        let a = serial.train_step(&be, x, y, d, 0.05).unwrap();
+        let b = pool.train_step(&mut pooled, &be, x, y, d, 0.05).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step} loss");
+        assert_eq!(a.kept_channels, b.kept_channels, "step {step} selection");
+        assert_eq!(serial.flat_params(), pooled.flat_params(), "step {step} weights");
+    }
+}
+
+#[test]
+fn pool_reuse_across_train_and_eval_matches_fresh_executors() {
+    // One pool reused across interleaved train/eval phases (the trainer
+    // and server lifecycle) must be bit-identical to running each phase
+    // on a freshly constructed scoped executor.
+    let be = NativeBackend::new();
+    let bt = 12;
+    let data = batches(bt);
+    for threads in [1usize, 2, 4] {
+        let mut m_ref = model();
+        let mut m_pool = model();
+        let mut pool = WorkerPool::new(ExecConfig::with_threads(threads));
+        for phase in 0..2 {
+            // train phase: 3 steps, fresh executor on the reference side
+            let mut exec = ParallelExecutor::new(ExecConfig::with_threads(threads));
+            for (step, (x, y)) in data.iter().skip(phase * 3).take(3).enumerate() {
+                let d = drop_at(phase * 3 + step);
+                exec.train_step(&mut m_ref, &be, x, y, d, 0.05).unwrap();
+                pool.train_step(&mut m_pool, &be, x, y, d, 0.05).unwrap();
+            }
+            // eval phase: fresh executor again on the reference side
+            let (x, y) = &data[7 + phase];
+            let mut exec2 = ParallelExecutor::new(ExecConfig::with_threads(threads));
+            let want = exec2.eval_batch(&m_ref, &be, x, y);
+            let got = pool.eval_batch(&m_pool, &be, x, y);
+            assert_eq!(got.0.to_bits(), want.0.to_bits(), "t{threads} phase {phase} eval loss");
+            assert_eq!(got.1, want.1, "t{threads} phase {phase} eval accuracy");
+        }
+        assert_eq!(
+            m_ref.flat_params(),
+            m_pool.flat_params(),
+            "t{threads}: reused pool must end bit-identical to fresh executors"
+        );
+    }
+}
+
+#[test]
+fn pipelined_training_is_bit_identical_to_sync_at_every_thread_count() {
+    // The batch-prefetch pipeline assembles the next batch while the
+    // current one trains; the stream delivers the same batches (epoch-tail
+    // included, with its workspace re-key at the smaller batch size) in
+    // the same order, so whole runs must match the synchronous loop
+    // bitwise — final eval, every per-step loss, and the FLOPs ledger.
+    for threads in [1usize, 2, 4] {
+        let mk = |pipeline: bool| {
+            let mut cfg = NativeTrainConfig::quick("mnist", 2, 4);
+            cfg.batch = 30; // 2048 examples -> an uneven tail of 8 per epoch
+            cfg.threads = threads;
+            cfg.include_tail = true;
+            cfg.pipeline = pipeline;
+            cfg.scheduler =
+                DropScheduler::new(Schedule::EpochBar { period_epochs: 2 }, 0.8, 2, 4);
+            let mut t = NativeTrainer::new(cfg).unwrap();
+            let (loss, acc) = t.run().unwrap();
+            (loss, acc, t.metrics.losses.clone(), t.metrics.flops_actual)
+        };
+        let (l_s, a_s, losses_s, fl_s) = mk(false);
+        let (l_p, a_p, losses_p, fl_p) = mk(true);
+        assert_eq!(l_s.to_bits(), l_p.to_bits(), "t{threads}: final eval loss bits");
+        assert_eq!(a_s, a_p, "t{threads}: final eval accuracy");
+        assert_eq!(losses_s.len(), 10, "(4 capped full batches + tail) x 2 epochs");
+        assert_eq!(losses_p.len(), losses_s.len());
+        for (i, (p, s)) in losses_p.iter().zip(&losses_s).enumerate() {
+            assert_eq!(p.to_bits(), s.to_bits(), "t{threads} step {i}: loss bits");
+        }
+        assert_eq!(fl_p, fl_s, "t{threads}: FLOPs ledger");
+    }
 }
 
 #[test]
