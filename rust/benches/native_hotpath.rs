@@ -1,6 +1,8 @@
 //! Native-backend hot path: img2col conv forward, dense vs compacted
 //! sparse backward, the raw GEMM (blocked microkernel vs the naive
-//! reference, emitted as `native/gemm_speedup_*`), and — the headline —
+//! reference, emitted as `native/gemm_speedup_*`, plus the runtime-
+//! dispatched SIMD kernel vs the portable scalar one on the same blocked
+//! loop nest, `native/gemm_simd_speedup_*`), and — the headline —
 //! the fused plan/workspace fwd+bwd vs the unfused op calls (the fused
 //! path builds each (M, N) im2col matrix once per step instead of twice
 //! and reuses every scratch buffer). Each executor section also times the
@@ -42,7 +44,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::Duration;
 
-use ssprop::backend::gemm::gemm_ref;
+use ssprop::backend::gemm::{gemm_into_tiled, gemm_ref, nr_for, GemmPack, Kernel, Operand, NR, NR2};
 use ssprop::backend::im2col::im2col;
 use ssprop::backend::sparse::{select_channels, sparse_bwd_with_cols, SparseBwdWorkspace};
 use ssprop::backend::{
@@ -133,6 +135,51 @@ fn main() {
             speedup
         );
         conv_ratios.insert(format!("gemm_speedup_{m}x{k}x{n}"), speedup);
+
+        // Same blocked loop nest, portable scalar kernel vs the
+        // runtime-dispatched SIMD one — isolates the vector win from the
+        // cache blocking (both shapes take the wide NR2 panel here).
+        let kernel = Kernel::active();
+        let mut pack = GemmPack::new();
+        let mut c = vec![0f32; m * n];
+        let scalar = bench(&format!("native/gemm_scalar_{m}x{k}x{n}"), warm, iters, budget, || {
+            gemm_into_tiled(
+                m,
+                k,
+                n,
+                Operand::Dense(&a),
+                Operand::Dense(&bb),
+                &mut c,
+                &mut pack,
+                Kernel::Scalar,
+                nr_for(n),
+            );
+            std::hint::black_box(&mut c);
+        });
+        report(&scalar);
+        let simd = bench(&format!("native/gemm_simd_{m}x{k}x{n}"), warm, iters, budget, || {
+            gemm_into_tiled(
+                m,
+                k,
+                n,
+                Operand::Dense(&a),
+                Operand::Dense(&bb),
+                &mut c,
+                &mut pack,
+                kernel,
+                nr_for(n),
+            );
+            std::hint::black_box(&mut c);
+        });
+        report(&simd);
+        let simd_speedup = scalar.median_ns / simd.median_ns;
+        println!(
+            "{:<48} {:>11.2}x (scalar / {} median)",
+            format!("native/gemm_simd_speedup_{m}x{k}x{n}"),
+            simd_speedup,
+            kernel.name()
+        );
+        conv_ratios.insert(format!("gemm_simd_speedup_{m}x{k}x{n}"), simd_speedup);
     }
 
     println!("\n-- end-to-end SimpleCNN training step (planned path) --");
@@ -248,7 +295,10 @@ fn fused_section(
 /// importance selection — summed medians and their ratio, emitted as
 /// `native/sparse_gemm_speedup_{spec}_d50`. Columns are prebuilt outside
 /// the timer, so the ratio isolates what the sparsity-aware GEMM packing
-/// skips.
+/// skips. A second subsection times the same dW-shaped GEMMs dense at
+/// both B-panel widths and emits `native/sparse_gemm_nr16_speedup_{spec}`
+/// (nr8 / nr16 summed medians) — the wide-tile win the keep-count
+/// heuristic forgoes when it narrows the panel.
 ///
 /// Returns the section as a `PresetReport` (timings, ratios, and the
 /// deterministic FLOPs/joules ledger) for `--json` serialization.
@@ -402,6 +452,53 @@ fn parallel_section(spec: &str, warm: usize, iters: usize, budget: Duration) -> 
     timings_ns.insert("sparse_gemm_dense_ns".to_string(), dense_total);
     timings_ns.insert("sparse_gemm_d50_ns".to_string(), d50_total);
     ratios.insert("sparse_gemm_speedup_d50".to_string(), sparse_speedup);
+
+    // Wide (NR2 = 16) vs narrow (NR = 8) B-panels on dense dW-shaped GEMMs
+    // ((Cin·K·K, M) · (M, Cout)) over the same unique conv geometries,
+    // active kernel on both sides. The outputs are bit-identical — the
+    // summed-median ratio is exactly what the keep-count heuristic trades
+    // away when a small keep set narrows the panel.
+    println!("-- dW GEMM tile width ({slug} conv shapes, NR 8 vs 16) --");
+    let kernel = Kernel::active();
+    let (mut nr8_total, mut nr16_total) = (0f64, 0f64);
+    for (gi, gcfg) in geoms.iter().enumerate() {
+        let (gm, gk, gn) = (gcfg.n(), gcfg.m(), gcfg.cout);
+        let mut wrng = Pcg::new(31, gi as u64);
+        let wa: Vec<f32> = (0..gm * gk).map(|_| wrng.normal()).collect();
+        let wb: Vec<f32> = (0..gk * gn).map(|_| wrng.normal()).collect();
+        let mut pack = GemmPack::new();
+        let mut c = vec![0f32; gm * gn];
+        for (nr, total) in [(NR, &mut nr8_total), (NR2, &mut nr16_total)] {
+            let name = format!("native/sparse_gemm_nr{nr}_{slug}_l{gi}");
+            let r = bench(&name, warm, iters, budget, || {
+                gemm_into_tiled(
+                    gm,
+                    gk,
+                    gn,
+                    Operand::Dense(&wa),
+                    Operand::Dense(&wb),
+                    &mut c,
+                    &mut pack,
+                    kernel,
+                    nr,
+                );
+                std::hint::black_box(&mut c);
+            });
+            report(&r);
+            *total += r.median_ns;
+        }
+    }
+    let nr16_speedup = nr8_total / nr16_total;
+    println!("{:<48} {:>11}", format!("native/sparse_gemm_nr8_{slug}"), fmt_ns(nr8_total));
+    println!("{:<48} {:>11}", format!("native/sparse_gemm_nr16_{slug}"), fmt_ns(nr16_total));
+    println!(
+        "{:<48} {:>11.2}x (nr8 / nr16 summed medians)",
+        format!("native/sparse_gemm_nr16_speedup_{slug}"),
+        nr16_speedup
+    );
+    timings_ns.insert("sparse_gemm_nr8_ns".to_string(), nr8_total);
+    timings_ns.insert("sparse_gemm_nr16_ns".to_string(), nr16_total);
+    ratios.insert("sparse_gemm_nr16_speedup".to_string(), nr16_speedup);
 
     let (flops, energy) = preset_ledger(&slug, bt).expect("preset ledger");
     PresetReport { spec: slug, timings_ns, ratios, flops, energy }

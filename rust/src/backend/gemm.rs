@@ -4,24 +4,51 @@
 //!
 //! The decomposition is the classic panel-packing one: the depth
 //! dimension is split into [`KC`]-sized blocks; each block's B rows are
-//! packed into [`NR`]-wide column panels and its A rows into [`MR`]-wide
-//! row panels; a fixed MR×NR register tile then walks the packed panels.
-//! Packing makes both microkernel operands contiguous streaming reads,
-//! with the panel sizes chosen so one A panel plus one B panel sit in L1
-//! while a whole packed A block ([`MC`]×[`KC`]) stays L2-resident. Edge
-//! tiles are zero-padded during packing, so the microkernel itself never
-//! branches on shape.
+//! packed into `nr`-wide column panels ([`NR`] or [`NR2`], see below) and
+//! its A rows into [`MR`]-wide row panels; a fixed MR×nr register tile
+//! then walks the packed panels. Packing makes both microkernel operands
+//! contiguous streaming reads, with the panel sizes chosen so one A panel
+//! plus one B panel sit in L1 while a whole packed A block
+//! ([`MC`]×[`KC`]) stays L2-resident. Edge tiles are zero-padded during
+//! packing (and only edge tiles — full tiles are plain copies), so the
+//! microkernel itself never branches on shape.
+//!
+//! # Kernel dispatch
+//!
+//! The register tile is implemented by a family of microkernels behind
+//! the [`Kernel`] descriptor: a portable scalar kernel (the reference),
+//! plus explicit x86-64 SIMD kernels (SSE2 and AVX2) that vectorize
+//! **across the NR (output-column) dimension** with separate mul+add —
+//! never FMA contraction — so every output element keeps the exact
+//! scalar per-element operation sequence. The kernel is selected once
+//! per process via [`Kernel::active`] (`is_x86_feature_detected!` at
+//! first use, overridable with `SSPROP_GEMM_KERNEL={scalar,sse2,avx2}`
+//! for CI A/B runs) and never re-read, so every worker thread agrees.
+//!
+//! # Tile width
+//!
+//! B panels pack at two widths: narrow [`NR`] = 8 and wide [`NR2`] = 16.
+//! The width is chosen by [`nr_for`] as a pure function of the GEMM's
+//! output-column count — for the sparse dW GEMM the output columns *are*
+//! the ssProp kept channels, so small keep sets (high-sparsity epochs)
+//! stay on the narrow tile while dense/low-sparsity steps take the wide
+//! one. Width never depends on timing, and (because column lanes are
+//! independent) never changes a single output bit.
 //!
 //! Two properties the rest of the crate leans on:
 //!
 //! * **Deterministic accumulation.** Every output element accumulates its
 //!   depth products in strictly increasing depth order — KC blocks in
-//!   order, in-order within each block — so results do not depend on how
-//!   the blocking parameters land on a given shape, are identical from
-//!   run to run, and (the kernel is single-threaded; the parallel
-//!   executor shards *batches*, never a GEMM) stay bit-identical per
-//!   worker-thread count. For depths ≤ [`KC`] the summation order is
-//!   exactly the naive triple loop's ([`gemm_ref`]).
+//!   order, in-order within each block — so results do not depend on the
+//!   kernel, the tile width, or how the blocking parameters land on a
+//!   given shape, are identical from run to run, and (the kernel is
+//!   single-threaded; the parallel executor shards *batches*, never a
+//!   GEMM) stay bit-identical per worker-thread count. For depths ≤
+//!   [`KC`] the summation order is exactly the naive triple loop's
+//!   ([`gemm_ref`]). SIMD lanes map to output columns, and each lane does
+//!   one mul then one add per depth step — the same two roundings, in the
+//!   same order, as the scalar chain — so scalar/SSE2/AVX2 and NR8/NR16
+//!   outputs are bitwise equal always.
 //! * **Dense semantics.** There is no value-based zero skipping (the old
 //!   naive kernel skipped `a == 0.0` terms, silently swallowing NaN/Inf
 //!   from the B operand). Sparsity enters only *structurally*: the
@@ -30,19 +57,139 @@
 //!   backward GEMMs never read, pack, or multiply a dropped channel's
 //!   rows at all — zero by construction, not by test.
 
+use std::sync::OnceLock;
+
 /// Rows of the register tile (width of a packed A panel).
 pub const MR: usize = 4;
-/// Columns of the register tile (width of a packed B panel). Kept narrow
-/// on purpose: the dW GEMM's output columns are the *kept channels*, so a
-/// wide tile would pad small keep sets back up to dense-width work.
+/// Narrow columns of the register tile (width of a narrow packed B
+/// panel). Kept small on purpose: the dW GEMM's output columns are the
+/// *kept channels*, so a wide tile would pad small keep sets back up to
+/// dense-width work.
 pub const NR: usize = 8;
-/// Depth block: one A panel (MR×KC) plus one B panel (KC×NR) is 12 KiB —
-/// comfortably L1-resident.
+/// Wide columns of the register tile: two AVX2 vectors per tile row.
+/// [`nr_for`] picks this width when the output-column count (the keep
+/// count, for the sparse dW GEMM) fills at least one wide panel.
+pub const NR2: usize = 16;
+/// Depth block: one A panel (MR×KC) plus one wide B panel (KC×NR2) is
+/// 20 KiB — comfortably L1-resident.
 const KC: usize = 256;
 /// Row block: the packed A block (MC×KC, 64 KiB) stays L2-resident.
 const MC: usize = 64;
 /// Column block: bounds the packed B block (KC×NC) at 1 MiB.
 const NC: usize = 1024;
+
+/// The microkernel accumulator: one wide tile, of which only the first
+/// `nr` lanes of each row are packed/meaningful. Narrow-width kernels
+/// simply leave the upper lanes at zero; write-back never reads past the
+/// live column count anyway.
+type Acc = [[f32; NR2]; MR];
+
+/// One microkernel implementation, selected once per process. All
+/// variants produce bitwise-identical output (see the module docs); they
+/// differ only in how many output-column lanes each instruction covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar reference tile (any target).
+    Scalar,
+    /// x86-64 SSE2 tile: 4-lane `__m128` vectors across the columns.
+    /// SSE2 is part of the x86-64 baseline, so this is the portable
+    /// x86-64 fallback.
+    Sse2,
+    /// x86-64 AVX2 tile: 8-lane `__m256` vectors across the columns
+    /// (one per tile row at NR=8, two at NR=16).
+    Avx2,
+}
+
+/// The once-resolved process-wide kernel choice (see [`Kernel::active`]).
+static ACTIVE_KERNEL: OnceLock<Kernel> = OnceLock::new();
+
+impl Kernel {
+    /// Every kernel in preference order (fastest first). Test suites walk
+    /// this, filtered by [`Kernel::available`].
+    pub const ALL: [Kernel; 3] = [Kernel::Avx2, Kernel::Sse2, Kernel::Scalar];
+
+    /// The kernel's `SSPROP_GEMM_KERNEL` / report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Sse2 => "sse2",
+            Kernel::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse a `SSPROP_GEMM_KERNEL` / report name.
+    pub fn parse(name: &str) -> Option<Kernel> {
+        match name {
+            "scalar" => Some(Kernel::Scalar),
+            "sse2" => Some(Kernel::Sse2),
+            "avx2" => Some(Kernel::Avx2),
+            _ => None,
+        }
+    }
+
+    /// Whether this kernel can run on the current host.
+    pub fn available(self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            Kernel::Sse2 => cfg!(target_arch = "x86_64"),
+            Kernel::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    /// The best kernel the current host supports (AVX2 → SSE2 → scalar).
+    pub fn detect() -> Kernel {
+        Kernel::ALL.into_iter().find(|k| k.available()).unwrap_or(Kernel::Scalar)
+    }
+
+    /// The process-wide kernel, resolved exactly once: the
+    /// `SSPROP_GEMM_KERNEL` override if set (panicking loudly on an
+    /// unknown name or a kernel this host cannot run — a silent fallback
+    /// would fake CI A/B results), else [`Kernel::detect`]. Pool and
+    /// executor constructors force this before spawning workers, so
+    /// every worker reads the same settled value.
+    pub fn active() -> Kernel {
+        *ACTIVE_KERNEL.get_or_init(|| match std::env::var("SSPROP_GEMM_KERNEL") {
+            Ok(name) => {
+                let k = Kernel::parse(&name).unwrap_or_else(|| {
+                    panic!(
+                        "SSPROP_GEMM_KERNEL={name:?}: unknown kernel \
+                         (expected scalar, sse2, or avx2)"
+                    )
+                });
+                assert!(
+                    k.available(),
+                    "SSPROP_GEMM_KERNEL={name:?}: kernel is not supported on this host"
+                );
+                k
+            }
+            Err(_) => Kernel::detect(),
+        })
+    }
+}
+
+/// Tile width for a GEMM with `out_cols` output columns — the keep-count
+/// heuristic. For the sparse dW GEMM the output columns are the kept
+/// channels, so small keep sets stay on the narrow tile (no padding a
+/// 3-channel keep set up to 16 lanes of work) while dense and
+/// low-sparsity steps take the wide one. A pure function of shape —
+/// never timing — so runs stay reproducible; and since column lanes are
+/// independent, the choice never changes output bits.
+pub fn nr_for(out_cols: usize) -> usize {
+    if out_cols >= NR2 {
+        NR2
+    } else {
+        NR
+    }
+}
 
 /// Reusable packing buffers for [`gemm_into`]. Each plan/workspace owns
 /// its own pack, so the parallel executor's per-worker plans stay
@@ -51,7 +198,8 @@ const NC: usize = 1024;
 pub struct GemmPack {
     /// Packed A block: up to MC/MR panels of KC×MR.
     pa: Vec<f32>,
-    /// Packed B block: up to NC/NR panels of KC×NR.
+    /// Packed B block: up to NC/nr panels of KC×nr, sized for whichever
+    /// tile width ([`NR`] or [`NR2`]) the current call packs at.
     pb: Vec<f32>,
 }
 
@@ -125,6 +273,21 @@ impl Operand<'_> {
     }
 }
 
+/// Set `buf` to exactly `len` slots *without* zero-filling slots the
+/// packing loops are about to overwrite anyway. (A plain
+/// `clear`+`resize` zero-writes the whole block every call; the packing
+/// loops then write every live slot a second time. Only edge-tile pad
+/// lanes actually need zeros, and the pack loops write those
+/// explicitly.) Growth beyond the previous length still zero-fills the
+/// new tail, which is harmless and happens once per high-water mark.
+fn prep_pack_buf(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() > len {
+        buf.truncate(len);
+    } else if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+}
+
 /// Pack rows `i0..i0+mc` × depth `p0..p0+kc` of the (m × k) operand `a`
 /// into MR-wide row panels (`buf[panel][depth][row]`), dispatching the
 /// per-variant index math once so the inner loops stay monomorphic.
@@ -151,8 +314,10 @@ fn pack_a(
     }
 }
 
-/// Shared A-packing loop: `get(row, depth)` reads the operand; rows past
-/// the block edge pad with zeros so the microkernel never branches.
+/// Shared A-packing loop: `get(row, depth)` reads the operand. Full
+/// panels are plain copies (every slot written); only the final partial
+/// panel, if any, zero-pads its missing row lanes — so the buffer is
+/// written exactly once per slot with no blanket re-zeroing.
 fn pack_a_with(
     get: impl Fn(usize, usize) -> f32,
     i0: usize,
@@ -162,21 +327,20 @@ fn pack_a_with(
     buf: &mut Vec<f32>,
 ) {
     let panels = mc.div_ceil(MR);
-    buf.clear();
-    buf.resize(panels * kc * MR, 0.0);
+    prep_pack_buf(buf, panels * kc * MR);
     for ip in 0..panels {
         let iw = MR.min(mc - ip * MR);
         let panel = &mut buf[ip * kc * MR..][..kc * MR];
         for (p, prow) in panel.chunks_exact_mut(MR).enumerate() {
-            for (i, slot) in prow.iter_mut().enumerate().take(iw) {
-                *slot = get(i0 + ip * MR + i, p0 + p);
+            for (i, slot) in prow.iter_mut().enumerate() {
+                *slot = if i < iw { get(i0 + ip * MR + i, p0 + p) } else { 0.0 };
             }
         }
     }
 }
 
 /// Pack depth `p0..p0+kc` × columns `j0..j0+nc` of the (k × n) operand
-/// `b` into NR-wide column panels (`buf[panel][depth][col]`).
+/// `b` into `nr`-wide column panels (`buf[panel][depth][col]`).
 #[allow(clippy::too_many_arguments)]
 fn pack_b(
     b: &Operand<'_>,
@@ -186,56 +350,153 @@ fn pack_b(
     kc: usize,
     j0: usize,
     nc: usize,
+    nr: usize,
     buf: &mut Vec<f32>,
 ) {
     match *b {
-        Operand::Dense(d) => pack_b_with(|p, c| d[p * n + c], p0, kc, j0, nc, buf),
-        Operand::Transposed(d) => pack_b_with(|p, c| d[c * k + p], p0, kc, j0, nc, buf),
-        Operand::KeptChannels { g, keep, cout, hw } => {
-            pack_b_with(|p, c| g[((p / hw) * cout + keep[c]) * hw + p % hw], p0, kc, j0, nc, buf)
-        }
+        Operand::Dense(d) => pack_b_with(|p, c| d[p * n + c], p0, kc, j0, nc, nr, buf),
+        Operand::Transposed(d) => pack_b_with(|p, c| d[c * k + p], p0, kc, j0, nc, nr, buf),
+        Operand::KeptChannels { g, keep, cout, hw } => pack_b_with(
+            |p, c| g[((p / hw) * cout + keep[c]) * hw + p % hw],
+            p0,
+            kc,
+            j0,
+            nc,
+            nr,
+            buf,
+        ),
         Operand::KeptRows { data, keep } => {
-            pack_b_with(|p, c| data[keep[p] * n + c], p0, kc, j0, nc, buf)
+            pack_b_with(|p, c| data[keep[p] * n + c], p0, kc, j0, nc, nr, buf)
         }
     }
 }
 
-/// Shared B-packing loop: `get(depth, col)` reads the operand; columns
-/// past the block edge pad with zeros.
+/// Shared B-packing loop: `get(depth, col)` reads the operand. As with
+/// [`pack_a_with`], full panels are plain copies and only the final
+/// partial panel zero-pads its missing column lanes.
+#[allow(clippy::too_many_arguments)]
 fn pack_b_with(
     get: impl Fn(usize, usize) -> f32,
     p0: usize,
     kc: usize,
     j0: usize,
     nc: usize,
+    nr: usize,
     buf: &mut Vec<f32>,
 ) {
-    let panels = nc.div_ceil(NR);
-    buf.clear();
-    buf.resize(panels * kc * NR, 0.0);
+    let panels = nc.div_ceil(nr);
+    prep_pack_buf(buf, panels * kc * nr);
     for jp in 0..panels {
-        let jw = NR.min(nc - jp * NR);
-        let panel = &mut buf[jp * kc * NR..][..kc * NR];
-        for (p, prow) in panel.chunks_exact_mut(NR).enumerate() {
-            for (j, slot) in prow.iter_mut().enumerate().take(jw) {
-                *slot = get(p0 + p, j0 + jp * NR + j);
+        let jw = nr.min(nc - jp * nr);
+        let panel = &mut buf[jp * kc * nr..][..kc * nr];
+        for (p, prow) in panel.chunks_exact_mut(nr).enumerate() {
+            for (j, slot) in prow.iter_mut().enumerate() {
+                *slot = if j < jw { get(p0 + p, j0 + jp * nr + j) } else { 0.0 };
             }
         }
     }
 }
 
-/// The register tile: `acc[MR][NR] += a_panel ⊗ b_panel` over one depth
-/// block, depth-major so each element's sum order is the plain in-order
-/// one. `chunks_exact` hands LLVM fixed-size rows, so this compiles to
-/// broadcast + FMA without `unsafe`.
+/// The portable register tile: `acc[MR][..nr] += a_panel ⊗ b_panel` over
+/// one depth block, depth-major so each element's sum order is the plain
+/// in-order one. Also the semantic reference the SIMD tiles must match
+/// bit-for-bit.
 #[inline]
-fn microkernel(pa: &[f32], pb: &[f32], acc: &mut [[f32; NR]; MR]) {
-    for (arow, brow) in pa.chunks_exact(MR).zip(pb.chunks_exact(NR)) {
+fn microkernel_scalar(pa: &[f32], pb: &[f32], nr: usize, acc: &mut Acc) {
+    for (arow, brow) in pa.chunks_exact(MR).zip(pb.chunks_exact(nr)) {
         for (accrow, &av) in acc.iter_mut().zip(arow) {
-            for (c, &bv) in accrow.iter_mut().zip(brow) {
-                *c += av * bv;
+            for (cv, &bv) in accrow.iter_mut().zip(brow) {
+                *cv += av * bv;
             }
         }
+    }
+}
+
+/// x86-64 SIMD register tiles. Both vectorize across the NR
+/// (output-column) dimension and use *separate* mul then add — never an
+/// FMA, whose single rounding would diverge from the scalar chain — so
+/// each column lane performs exactly the scalar kernel's operation
+/// sequence and the results are bitwise identical to [`microkernel_scalar`].
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{Acc, MR};
+    use core::arch::x86_64::*;
+
+    /// SSE2 tile: `nr/4` four-lane column vectors per tile row,
+    /// accumulated in registers across the depth block.
+    ///
+    /// # Safety
+    /// Caller guarantees `pa.len() = kc·MR`, `pb.len() = kc·nr`, and
+    /// `nr ∈ {8, 16}`. SSE2 itself is part of the x86-64 baseline.
+    pub unsafe fn sse2(pa: &[f32], pb: &[f32], nr: usize, acc: &mut Acc) {
+        debug_assert!(nr == 8 || nr == 16);
+        let nv = nr / 4;
+        let mut vacc = [[_mm_setzero_ps(); 4]; MR];
+        for (arow, brow) in pa.chunks_exact(MR).zip(pb.chunks_exact(nr)) {
+            let mut bv = [_mm_setzero_ps(); 4];
+            for (v, slot) in bv.iter_mut().enumerate().take(nv) {
+                *slot = _mm_loadu_ps(brow.as_ptr().add(v * 4));
+            }
+            for (vrow, &av) in vacc.iter_mut().zip(arow) {
+                let a = _mm_set1_ps(av);
+                for (cacc, &b) in vrow.iter_mut().zip(&bv).take(nv) {
+                    *cacc = _mm_add_ps(*cacc, _mm_mul_ps(a, b));
+                }
+            }
+        }
+        for (row, vrow) in acc.iter_mut().zip(&vacc) {
+            for (v, &vec) in vrow.iter().enumerate().take(nv) {
+                _mm_storeu_ps(row.as_mut_ptr().add(v * 4), vec);
+            }
+        }
+    }
+
+    /// AVX2 tile: `nr/8` eight-lane column vectors per tile row,
+    /// accumulated in registers across the depth block.
+    ///
+    /// # Safety
+    /// Caller guarantees `pa.len() = kc·MR`, `pb.len() = kc·nr`,
+    /// `nr ∈ {8, 16}`, and that the host supports AVX2
+    /// ([`super::Kernel::available`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn avx2(pa: &[f32], pb: &[f32], nr: usize, acc: &mut Acc) {
+        debug_assert!(nr == 8 || nr == 16);
+        let nv = nr / 8;
+        let mut vacc = [[_mm256_setzero_ps(); 2]; MR];
+        for (arow, brow) in pa.chunks_exact(MR).zip(pb.chunks_exact(nr)) {
+            let mut bv = [_mm256_setzero_ps(); 2];
+            for (v, slot) in bv.iter_mut().enumerate().take(nv) {
+                *slot = _mm256_loadu_ps(brow.as_ptr().add(v * 8));
+            }
+            for (vrow, &av) in vacc.iter_mut().zip(arow) {
+                let a = _mm256_set1_ps(av);
+                for (cacc, &b) in vrow.iter_mut().zip(&bv).take(nv) {
+                    *cacc = _mm256_add_ps(*cacc, _mm256_mul_ps(a, b));
+                }
+            }
+        }
+        for (row, vrow) in acc.iter_mut().zip(&vacc) {
+            for (v, &vec) in vrow.iter().enumerate().take(nv) {
+                _mm256_storeu_ps(row.as_mut_ptr().add(v * 8), vec);
+            }
+        }
+    }
+}
+
+/// Run the selected microkernel over one panel pair into a zeroed tile.
+#[inline]
+fn run_tile(kernel: Kernel, pa: &[f32], pb: &[f32], nr: usize, acc: &mut Acc) {
+    match kernel {
+        Kernel::Scalar => microkernel_scalar(pa, pb, nr, acc),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: panel lengths are kc·MR / kc·nr by construction,
+        // nr ∈ {NR, NR2}, and gemm_into_tiled asserted availability.
+        Kernel::Sse2 => unsafe { x86::sse2(pa, pb, nr, acc) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above; Avx2.available() implies the CPU has AVX2.
+        Kernel::Avx2 => unsafe { x86::avx2(pa, pb, nr, acc) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Kernel::Sse2 | Kernel::Avx2 => unreachable!("x86-64 kernel on a non-x86-64 host"),
     }
 }
 
@@ -251,20 +512,22 @@ fn macro_kernel(
     j0: usize,
     nc: usize,
     kc: usize,
+    nr: usize,
+    kernel: Kernel,
     pa: &[f32],
     pb: &[f32],
     c: &mut [f32],
 ) {
-    for jp in 0..nc.div_ceil(NR) {
-        let jw = NR.min(nc - jp * NR);
-        let bpanel = &pb[jp * kc * NR..][..kc * NR];
+    for jp in 0..nc.div_ceil(nr) {
+        let jw = nr.min(nc - jp * nr);
+        let bpanel = &pb[jp * kc * nr..][..kc * nr];
         for ip in 0..mc.div_ceil(MR) {
             let iw = MR.min(mc - ip * MR);
             let apanel = &pa[ip * kc * MR..][..kc * MR];
-            let mut acc = [[0f32; NR]; MR];
-            microkernel(apanel, bpanel, &mut acc);
+            let mut acc = [[0f32; NR2]; MR];
+            run_tile(kernel, apanel, bpanel, nr, &mut acc);
             for (i, accrow) in acc.iter().enumerate().take(iw) {
-                let crow = &mut c[(i0 + ip * MR + i) * n + j0 + jp * NR..][..jw];
+                let crow = &mut c[(i0 + ip * MR + i) * n + j0 + jp * nr..][..jw];
                 for (cv, &av) in crow.iter_mut().zip(accrow) {
                     *cv += av;
                 }
@@ -274,11 +537,13 @@ fn macro_kernel(
 }
 
 /// C(m×n) = A(m×k) · B(k×n) into `c` (cleared and resized in place),
-/// reusing `pack`'s panel buffers across calls.
+/// reusing `pack`'s panel buffers across calls, with the process-wide
+/// [`Kernel::active`] microkernel and the [`nr_for`] tile width.
 ///
 /// Accumulation per output element is strictly increasing-depth (see the
-/// module docs), so results are deterministic for every shape and
-/// bit-identical to [`gemm_ref`] whenever `k` fits one depth block.
+/// module docs), so results are deterministic for every shape, kernel,
+/// and width, and bit-identical to [`gemm_ref`] whenever `k` fits one
+/// depth block.
 pub fn gemm_into(
     m: usize,
     k: usize,
@@ -288,6 +553,28 @@ pub fn gemm_into(
     c: &mut Vec<f32>,
     pack: &mut GemmPack,
 ) {
+    gemm_into_tiled(m, k, n, a, b, c, pack, Kernel::active(), nr_for(n));
+}
+
+/// [`gemm_into`] with an explicit microkernel and B-panel tile width
+/// (`nr` ∈ {[`NR`], [`NR2`]}). Call sites that know their sparsity
+/// structure pass `nr_for(keep_count)` here; the equivalence suite and
+/// the bench use it to pin every kernel × width combination against the
+/// reference. Output bits do not depend on either argument.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into_tiled(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: Operand<'_>,
+    b: Operand<'_>,
+    c: &mut Vec<f32>,
+    pack: &mut GemmPack,
+    kernel: Kernel,
+    nr: usize,
+) {
+    assert!(nr == NR || nr == NR2, "tile width must be NR ({NR}) or NR2 ({NR2}), got {nr}");
+    assert!(kernel.available(), "GEMM kernel {:?} is not supported on this host", kernel.name());
     a.check(m, k, "gemm lhs");
     b.check(k, n, "gemm rhs");
     c.clear();
@@ -296,11 +583,11 @@ pub fn gemm_into(
         let nc = NC.min(n - j0);
         for p0 in (0..k).step_by(KC) {
             let kc = KC.min(k - p0);
-            pack_b(&b, k, n, p0, kc, j0, nc, &mut pack.pb);
+            pack_b(&b, k, n, p0, kc, j0, nc, nr, &mut pack.pb);
             for i0 in (0..m).step_by(MC) {
                 let mc = MC.min(m - i0);
                 pack_a(&a, m, k, i0, mc, p0, kc, &mut pack.pa);
-                macro_kernel(n, i0, mc, j0, nc, kc, &pack.pa, &pack.pb, c);
+                macro_kernel(n, i0, mc, j0, nc, kc, nr, kernel, &pack.pa, &pack.pb, c);
             }
         }
     }
@@ -346,6 +633,11 @@ mod tests {
         fill(len, |i| ((i * mul) % md) as f32 * scale - off)
     }
 
+    /// Every kernel this host can actually run.
+    fn kernels() -> Vec<Kernel> {
+        Kernel::ALL.into_iter().filter(|k| k.available()).collect()
+    }
+
     #[test]
     fn matches_reference_across_tile_edges() {
         // shapes straddling the MR/NR/MC/KC boundaries, incl. 1-wide edges
@@ -365,11 +657,165 @@ mod tests {
     #[test]
     fn bitwise_reference_match_within_one_depth_block() {
         // k ≤ KC ⇒ a single depth block ⇒ the blocked summation order is
-        // exactly the naive in-order chain
+        // exactly the naive in-order chain — for every kernel and width
         let (m, k, n) = (13, KC, 21);
         let a = mat(m * k, 3, 17, 0.125, 1.0);
         let b = mat(k * n, 11, 19, 0.25, 2.25);
-        assert_eq!(gemm(m, k, n, &a, &b), gemm_ref(m, k, n, &a, &b));
+        let want = gemm_ref(m, k, n, &a, &b);
+        assert_eq!(gemm(m, k, n, &a, &b), want);
+        let mut c = Vec::new();
+        let mut pk = GemmPack::new();
+        for kernel in kernels() {
+            for nr in [NR, NR2] {
+                gemm_into_tiled(
+                    m,
+                    k,
+                    n,
+                    Operand::Dense(&a),
+                    Operand::Dense(&b),
+                    &mut c,
+                    &mut pk,
+                    kernel,
+                    nr,
+                );
+                assert_eq!(c, want, "kernel {:?} nr {nr}", kernel.name());
+            }
+        }
+    }
+
+    #[test]
+    fn kernels_and_widths_agree_bitwise_beyond_one_depth_block() {
+        // k > KC exercises the cross-block accumulation; every kernel ×
+        // width combination must still agree to the bit
+        let (m, k, n) = (9, 2 * KC + 37, 23);
+        let a = mat(m * k, 7, 29, 0.0625, 0.9);
+        let b = mat(k * n, 5, 23, 0.125, 1.1);
+        let mut want = Vec::new();
+        let mut pk = GemmPack::new();
+        gemm_into_tiled(
+            m,
+            k,
+            n,
+            Operand::Dense(&a),
+            Operand::Dense(&b),
+            &mut want,
+            &mut pk,
+            Kernel::Scalar,
+            NR,
+        );
+        let mut c = Vec::new();
+        for kernel in kernels() {
+            for nr in [NR, NR2] {
+                gemm_into_tiled(
+                    m,
+                    k,
+                    n,
+                    Operand::Dense(&a),
+                    Operand::Dense(&b),
+                    &mut c,
+                    &mut pk,
+                    kernel,
+                    nr,
+                );
+                assert_eq!(c, want, "kernel {:?} nr {nr}", kernel.name());
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_names_round_trip_and_unknowns_are_rejected() {
+        for k in Kernel::ALL {
+            assert_eq!(Kernel::parse(k.name()), Some(k));
+        }
+        assert_eq!(Kernel::parse("avx512"), None);
+        assert_eq!(Kernel::parse("AVX2"), None, "names are case-sensitive");
+        assert!(Kernel::Scalar.available(), "scalar must run everywhere");
+        assert!(Kernel::detect().available());
+        // active() settles once and keeps answering the same kernel
+        assert_eq!(Kernel::active(), Kernel::active());
+        assert!(Kernel::active().available());
+    }
+
+    #[test]
+    fn pack_bits_identical_to_zero_filled_reference() {
+        // the edge-only padding fast path must produce byte-identical
+        // panels to a full zero-fill-then-write reference, even when the
+        // buffer is dirty from a previous, larger pack
+        fn ref_pack_a(
+            get: impl Fn(usize, usize) -> f32,
+            i0: usize,
+            mc: usize,
+            p0: usize,
+            kc: usize,
+        ) -> Vec<f32> {
+            let panels = mc.div_ceil(MR);
+            let mut buf = vec![0f32; panels * kc * MR];
+            for ip in 0..panels {
+                let iw = MR.min(mc - ip * MR);
+                let panel = &mut buf[ip * kc * MR..][..kc * MR];
+                for (p, prow) in panel.chunks_exact_mut(MR).enumerate() {
+                    for (i, slot) in prow.iter_mut().enumerate().take(iw) {
+                        *slot = get(i0 + ip * MR + i, p0 + p);
+                    }
+                }
+            }
+            buf
+        }
+        fn ref_pack_b(
+            get: impl Fn(usize, usize) -> f32,
+            p0: usize,
+            kc: usize,
+            j0: usize,
+            nc: usize,
+            nr: usize,
+        ) -> Vec<f32> {
+            let panels = nc.div_ceil(nr);
+            let mut buf = vec![0f32; panels * kc * nr];
+            for jp in 0..panels {
+                let jw = nr.min(nc - jp * nr);
+                let panel = &mut buf[jp * kc * nr..][..kc * nr];
+                for (p, prow) in panel.chunks_exact_mut(nr).enumerate() {
+                    for (j, slot) in prow.iter_mut().enumerate().take(jw) {
+                        *slot = get(p0 + p, j0 + jp * nr + j);
+                    }
+                }
+            }
+            buf
+        }
+
+        let (m, k, n) = (11, 19, 27);
+        let a = mat(m * k, 7, 31, 0.5, 3.0);
+        let b = mat(k * n, 3, 29, 0.25, 2.0);
+        let mut buf = Vec::new();
+        // dirty the buffer with a larger pack first so stale panels and a
+        // shrinking length are both exercised
+        pack_a(&Operand::Dense(&a), m, k, 0, m, 0, k, &mut buf);
+        for (i0, mc, p0, kc) in [(0, m, 0, k), (4, 7, 8, 11), (8, 3, 16, 3)] {
+            pack_a(&Operand::Dense(&a), m, k, i0, mc, p0, kc, &mut buf);
+            let want = ref_pack_a(|r, p| a[r * k + p], i0, mc, p0, kc);
+            assert_eq!(buf, want, "pack_a ({i0},{mc},{p0},{kc})");
+        }
+        let mut buf = Vec::new();
+        pack_b(&Operand::Dense(&b), k, n, 0, k, 0, n, NR2, &mut buf);
+        for nr in [NR, NR2] {
+            for (p0, kc, j0, nc) in [(0, k, 0, n), (8, 11, 4, 21), (16, 3, 24, 3)] {
+                pack_b(&Operand::Dense(&b), k, n, p0, kc, j0, nc, nr, &mut buf);
+                let want = ref_pack_b(|p, c| b[p * n + c], p0, kc, j0, nc, nr);
+                assert_eq!(buf, want, "pack_b ({p0},{kc},{j0},{nc}) nr {nr}");
+            }
+        }
+    }
+
+    #[test]
+    fn nr_heuristic_is_pure_and_narrow_below_one_wide_panel() {
+        assert_eq!(nr_for(0), NR);
+        assert_eq!(nr_for(1), NR);
+        assert_eq!(nr_for(NR2 - 1), NR);
+        assert_eq!(nr_for(NR2), NR2);
+        assert_eq!(nr_for(1000), NR2);
+        for n in 0..64 {
+            assert_eq!(nr_for(n), nr_for(n), "pure function of shape");
+        }
     }
 
     #[test]
@@ -449,12 +895,43 @@ mod tests {
     #[test]
     fn nan_and_inf_propagate_like_dense_math() {
         // 0·NaN and 0·Inf are NaN under dense semantics; the kernel must
-        // not "optimize" them away (the old zero-skip bug)
-        let c = gemm(1, 2, 2, &[0.0, 1.0], &[f32::NAN, 1.0, 2.0, 3.0]);
-        assert!(c[0].is_nan(), "0·NaN must surface as NaN");
-        assert_eq!(c[1], 3.0); // 0·1 + 1·3
-        let c = gemm(1, 1, 1, &[0.0], &[f32::INFINITY]);
-        assert!(c[0].is_nan(), "0·Inf must surface as NaN");
+        // not "optimize" them away (the old zero-skip bug) — in any
+        // kernel or width
+        for kernel in kernels() {
+            for nr in [NR, NR2] {
+                let mut c = Vec::new();
+                let mut pk = GemmPack::new();
+                let a = [0.0, 1.0];
+                let b = [f32::NAN, 1.0, 2.0, 3.0];
+                gemm_into_tiled(
+                    1,
+                    2,
+                    2,
+                    Operand::Dense(&a),
+                    Operand::Dense(&b),
+                    &mut c,
+                    &mut pk,
+                    kernel,
+                    nr,
+                );
+                assert!(c[0].is_nan(), "0·NaN must surface as NaN ({:?})", kernel.name());
+                assert_eq!(c[1], 3.0); // 0·1 + 1·3
+                let a = [0.0];
+                let b = [f32::INFINITY];
+                gemm_into_tiled(
+                    1,
+                    1,
+                    1,
+                    Operand::Dense(&a),
+                    Operand::Dense(&b),
+                    &mut c,
+                    &mut pk,
+                    kernel,
+                    nr,
+                );
+                assert!(c[0].is_nan(), "0·Inf must surface as NaN ({:?})", kernel.name());
+            }
+        }
     }
 
     #[test]
@@ -464,9 +941,35 @@ mod tests {
         let b = mat(k * n, 5, 9, 0.25, 0.5);
         let mut pack = GemmPack::new();
         let mut c = Vec::new();
-        gemm_into(m, k, n, Operand::Dense(&a), Operand::Dense(&b), &mut c, &mut pack);
+        for nr in [NR, NR2, NR, NR2] {
+            // alternating widths must also settle: pb's high-water mark
+            // is the wide packing, after which neither buffer regrows
+            gemm_into_tiled(
+                m,
+                k,
+                n,
+                Operand::Dense(&a),
+                Operand::Dense(&b),
+                &mut c,
+                &mut pack,
+                Kernel::active(),
+                nr,
+            );
+        }
         let caps = pack.caps();
-        gemm_into(m, k, n, Operand::Dense(&a), Operand::Dense(&b), &mut c, &mut pack);
+        for nr in [NR, NR2] {
+            gemm_into_tiled(
+                m,
+                k,
+                n,
+                Operand::Dense(&a),
+                Operand::Dense(&b),
+                &mut c,
+                &mut pack,
+                Kernel::active(),
+                nr,
+            );
+        }
         assert_eq!(pack.caps(), caps, "packing must reuse, not regrow");
     }
 }

@@ -7,7 +7,7 @@
 //! anywhere — this is the crate's default executor and the correctness
 //! anchor the fixture tests pin against `python/compile/kernels/ref.py`.
 
-use super::gemm::{self, gemm_into, Operand};
+use super::gemm::{self, gemm_into_tiled, nr_for, Kernel, Operand};
 use super::im2col::col_w_into;
 use super::plan::Conv2dPlan;
 use super::sparse::sparse_bwd_with_cols;
@@ -43,8 +43,9 @@ impl Backend for NativeBackend {
         let (ho, wo) = (cfg.hout(), cfg.wout());
         plan.build_cols(x); // cached for the backward's dW GEMM
         col_w_into(&cfg, w, &mut plan.cw);
-        // ycol = cols · col_W  (M, Cout), blocked kernel, pack reused
-        gemm_into(
+        // ycol = cols · col_W  (M, Cout), blocked kernel, pack reused;
+        // the forward is dense, so the tile width follows Cout
+        gemm_into_tiled(
             m,
             n,
             cfg.cout,
@@ -52,6 +53,8 @@ impl Backend for NativeBackend {
             Operand::Dense(&plan.cw),
             &mut plan.ycol,
             &mut plan.ws.pack,
+            Kernel::active(),
+            nr_for(cfg.cout),
         );
 
         // (M, Cout) -> NCHW, folding the bias in during the transpose

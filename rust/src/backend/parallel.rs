@@ -84,11 +84,17 @@ pub struct ExecConfig {
     /// [`std::thread::available_parallelism`] at executor construction,
     /// clamped to `[1, MAX_AUTO_THREADS]` (see [`ExecConfig::resolved_threads`]).
     pub threads: usize,
+    /// Pin pool worker `w` to CPU core `w` (Linux `sched_setaffinity`;
+    /// off by default). Purely a placement hint — results are
+    /// bit-identical with or without pinning, since shard arithmetic
+    /// never depends on where it runs. A no-op (with a warning at pool
+    /// construction) on platforms without the raw syscall path.
+    pub affinity: bool,
 }
 
 impl Default for ExecConfig {
     fn default() -> Self {
-        ExecConfig { threads: 1 }
+        ExecConfig { threads: 1, affinity: false }
     }
 }
 
@@ -96,13 +102,19 @@ impl ExecConfig {
     /// Config with `threads` workers (`0` = auto-detect, see
     /// [`ExecConfig::auto`]).
     pub fn with_threads(threads: usize) -> ExecConfig {
-        ExecConfig { threads }
+        ExecConfig { threads, affinity: false }
     }
 
     /// Auto-detecting config: worker count resolves to the machine's
     /// [`std::thread::available_parallelism`] at executor construction.
     pub fn auto() -> ExecConfig {
-        ExecConfig { threads: 0 }
+        ExecConfig { threads: 0, affinity: false }
+    }
+
+    /// Builder toggle for [`ExecConfig::affinity`].
+    pub fn with_affinity(mut self, affinity: bool) -> ExecConfig {
+        self.affinity = affinity;
+        self
     }
 
     /// The concrete worker count this config resolves to: `threads` as
@@ -119,6 +131,47 @@ impl ExecConfig {
                 .clamp(1, MAX_AUTO_THREADS)
         }
     }
+}
+
+/// Whether [`pin_current_thread`] can actually pin on this target: the
+/// raw-`syscall` `sched_setaffinity` path below is Linux/x86-64 only (no
+/// libc in the offline dependency set to go through).
+pub(crate) fn affinity_supported() -> bool {
+    cfg!(all(target_os = "linux", target_arch = "x86_64"))
+}
+
+/// Pin the calling thread to CPU core `core`. Purely a cache/NUMA
+/// placement hint behind [`ExecConfig::affinity`]: output bits never
+/// depend on where a shard runs. Returns whether the kernel accepted
+/// the mask (a core index beyond the machine is simply refused).
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+pub(crate) fn pin_current_thread(core: usize) -> bool {
+    // sched_setaffinity(0 /* this thread */, len, mask) via the raw
+    // syscall; the 1024-bit mask mirrors glibc's cpu_set_t.
+    let mut mask = [0u64; 16];
+    mask[(core / 64) % mask.len()] |= 1u64 << (core % 64);
+    let ret: i64;
+    // SAFETY: syscall 203 only reads `len` bytes of `mask`, which
+    // outlives the call; rcx/r11 are the instruction's only clobbers.
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203i64 => ret,
+            in("rdi") 0i64,
+            in("rsi") std::mem::size_of_val(&mask) as i64,
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+    }
+    ret == 0
+}
+
+/// Unsupported-platform fallback: never pins (the pool already warned).
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+pub(crate) fn pin_current_thread(_core: usize) -> bool {
+    false
 }
 
 /// Everything one shard worker hands back to the reducer after a train
@@ -571,7 +624,10 @@ impl ParallelExecutor {
     /// step and are reused afterwards). An auto config (`threads: 0`)
     /// resolves to the machine's parallelism here, once.
     pub fn new(cfg: ExecConfig) -> ParallelExecutor {
-        let cfg = ExecConfig { threads: cfg.resolved_threads() };
+        // Settle the process-wide GEMM kernel before any worker thread
+        // exists, so every shard dispatches the same microkernel.
+        let _ = super::gemm::Kernel::active();
+        let cfg = ExecConfig { threads: cfg.resolved_threads(), affinity: cfg.affinity };
         ParallelExecutor { cfg, worker_ws: Vec::new() }
     }
 

@@ -156,7 +156,17 @@ impl WorkerPool {
     /// parallelism here, once — see [`ExecConfig::resolved_threads`]).
     /// Workspaces grow on first use and are reused afterwards.
     pub fn new(cfg: ExecConfig) -> WorkerPool {
+        // Settle the process-wide GEMM kernel before any worker exists —
+        // workers then read the already-resolved value and can never
+        // disagree about which microkernel a shard dispatches.
+        let _ = super::gemm::Kernel::active();
         let threads = cfg.resolved_threads();
+        if cfg.affinity && !super::parallel::affinity_supported() {
+            eprintln!(
+                "warning: affinity requested but core pinning is unsupported on this \
+                 platform; workers run unpinned (results are identical either way)"
+            );
+        }
         let live = Arc::new(AtomicUsize::new(0));
         let mut txs = Vec::with_capacity(threads);
         let mut handles = Vec::with_capacity(threads);
@@ -164,10 +174,17 @@ impl WorkerPool {
             let (tx, rx) = channel::<Job>();
             live.fetch_add(1, Ordering::SeqCst);
             let alive = WorkerAlive(Arc::clone(&live));
+            let pin = cfg.affinity;
             let handle = std::thread::Builder::new()
                 .name(format!("ssprop-pool-{w}"))
                 .spawn(move || {
                     let _alive = alive;
+                    if pin && !super::parallel::pin_current_thread(w) {
+                        // A refused mask (core index beyond the machine,
+                        // cgroup restriction) is only a lost hint — the
+                        // shard math is placement-independent.
+                        eprintln!("warning: could not pin pool worker {w} to core {w}");
+                    }
                     // Jobs never unwind (they wrap their body in
                     // catch_unwind), so the loop runs until the pool
                     // drops its sender.
@@ -387,6 +404,25 @@ mod tests {
             for (i, (a, b)) in lp.iter().zip(&le).enumerate() {
                 assert_eq!(a.to_bits(), b.to_bits(), "t{threads} logit {i}");
             }
+        }
+    }
+
+    #[test]
+    fn affinity_hint_leaves_bits_unchanged() {
+        // --affinity is a placement hint only: a pinned pool must
+        // reproduce an unpinned pool bit-for-bit (whether or not the
+        // kernel accepted the masks on this machine)
+        let be = NativeBackend::new();
+        let mut m_pin = tiny();
+        let mut m_free = tiny();
+        let mut pinned = WorkerPool::new(ExecConfig::with_threads(2).with_affinity(true));
+        let mut free = WorkerPool::new(ExecConfig::with_threads(2));
+        for step in 0..3 {
+            let (x, y) = batch(6, 70 + step);
+            let a = pinned.train_step(&mut m_pin, &be, &x, &y, 0.8, 0.05).unwrap();
+            let b = free.train_step(&mut m_free, &be, &x, &y, 0.8, 0.05).unwrap();
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step}");
+            assert_eq!(a.kept_channels, b.kept_channels);
         }
     }
 

@@ -4,7 +4,7 @@
 //! Sec. "Scheduled Sparse BP". Mirrors `ref.py::importance_ref`,
 //! `topk_mask_ref`, `keep_k_from_drop_rate`, `sparse_bwd_compact_ref`.
 
-use super::gemm::{gemm_into, GemmPack, Operand};
+use super::gemm::{gemm_into_tiled, nr_for, GemmPack, Kernel, Operand};
 use super::im2col::{col2img, im2col};
 use super::{Conv2d, ConvGrads};
 use crate::flops::keep_channels;
@@ -144,8 +144,22 @@ pub fn sparse_bwd_with_cols(
     // channels are never read and nothing (M × k')-sized materializes.
     let gck = Operand::KeptChannels { g, keep: keep_idx, cout: cfg.cout, hw };
 
-    // dW' = col_Xᵀ · col[dY]'  (N × k')
-    gemm_into(n, m, kp, Operand::Transposed(cols), gck, &mut ws.dwk, &mut ws.pack);
+    // dW' = col_Xᵀ · col[dY]'  (N × k') — the output columns are the
+    // kept channels, so the tile width follows the keep count: small
+    // keep sets (high-sparsity steps) stay on the narrow tile, dense
+    // steps take the wide one. Pure shape function; bits unaffected.
+    let kernel = Kernel::active();
+    gemm_into_tiled(
+        n,
+        m,
+        kp,
+        Operand::Transposed(cols),
+        gck,
+        &mut ws.dwk,
+        &mut ws.pack,
+        kernel,
+        nr_for(kp),
+    );
     // scatter into full (Cout, Cin, K, K)
     let mut dw = vec![0f32; cfg.w_len()];
     for (pos, &o) in keep_idx.iter().enumerate() {
@@ -160,7 +174,9 @@ pub fn sparse_bwd_with_cols(
     let dx = if need_dx {
         assert_eq!(w.len(), cfg.w_len(), "weight length");
         let cwk = Operand::KeptRows { data: w, keep: keep_idx };
-        gemm_into(m, kp, n, gck, cwk, &mut ws.dcols, &mut ws.pack);
+        // output columns here are the dense patch width N, not the keep
+        // set — the width heuristic sees the dense shape
+        gemm_into_tiled(m, kp, n, gck, cwk, &mut ws.dcols, &mut ws.pack, kernel, nr_for(n));
         col2img(cfg, &ws.dcols)
     } else {
         Vec::new()

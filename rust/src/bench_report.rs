@@ -26,8 +26,9 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::backend::gemm::Kernel;
 use crate::backend::{build_model, parse_model_spec};
-use crate::energy::{estimate, RTX_A5000};
+use crate::energy::{estimate, CPU_TESTBED, RTX_A5000, TPU_CORE};
 use crate::experiments::report::Table;
 use crate::util::bench::fmt_ns;
 use crate::util::json::{num, obj, s, Json};
@@ -41,8 +42,15 @@ use crate::util::json::{num, obj, s, Json};
 /// (per-step-spawn scoped crew vs persistent [`crate::backend::WorkerPool`])
 /// and `pipeline_speedup` (batch-prefetch pipelined training run vs the
 /// fully synchronous loop), with their `pool_step_d80_t{2,4}_ns` /
-/// `pipeline_run_ns` / `sync_run_ns` timings.
-pub const SCHEMA_VERSION: u64 = 3;
+/// `pipeline_run_ns` / `sync_run_ns` timings. Version 4 added the
+/// SIMD-dispatch metrics: the report-level `kernel` field (the
+/// [`crate::backend::gemm::Kernel`] the run dispatched, gated as an
+/// exact-match string like `device`), the `gemm_simd_speedup_{m}x{k}x{n}`
+/// conv ratios (portable scalar tile vs the dispatched SIMD tile on the
+/// same blocked kernel), and the per-preset `sparse_gemm_nr16_speedup`
+/// ratio with its `sparse_gemm_nr{8,16}_ns` timings (narrow vs wide
+/// B-panel tile on the preset's dense-keep dW shapes).
+pub const SCHEMA_VERSION: u64 = 4;
 
 /// The ssProp drop rate the ledger columns are evaluated at (the paper's
 /// D* = 0.8, Eq. 9).
@@ -60,6 +68,11 @@ pub const BENCH_BATCH: usize = 32;
 /// Zoo presets the committed `BENCH_native.json` baseline tracks (and the
 /// `--json` bench run measures), canonical spec form.
 pub const BASELINE_PRESETS: &[&str] = &["simple-cnn-d4-w16", "vgg-tiny-w8", "resnet-tiny-w8-b1"];
+
+/// Device-profile names a report may legally carry in `energy.device`
+/// (the [`crate::energy`] profiles). Anything else is refused on load
+/// with [`ReportError::UnknownValue`] naming the offending key.
+pub const KNOWN_DEVICES: &[&str] = &[RTX_A5000.name, TPU_CORE.name, CPU_TESTBED.name];
 
 /// Typed error for reading/validating a bench report.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -82,6 +95,15 @@ pub enum ReportError {
     },
     /// The document parses as JSON but violates the report schema.
     Malformed(String),
+    /// A machine-identity field (`kernel`, `energy.device`) holds a
+    /// string this build does not know. Refusing up front beats gating
+    /// timings against a mismatched machine silently.
+    UnknownValue {
+        /// Offending field, e.g. `kernel` or `resnet-tiny-w8-b1.energy.device`.
+        key: String,
+        /// The unrecognized string found there.
+        value: String,
+    },
 }
 
 impl fmt::Display for ReportError {
@@ -93,6 +115,9 @@ impl fmt::Display for ReportError {
                 write!(f, "bench report schema_version {found} (this build reads {expected})")
             }
             ReportError::Malformed(e) => write!(f, "malformed bench report: {e}"),
+            ReportError::UnknownValue { key, value } => {
+                write!(f, "bench report field {key} holds unknown value {value:?}")
+            }
         }
     }
 }
@@ -157,6 +182,11 @@ pub struct BenchReport {
     pub bench: String,
     /// `smoke` (CI-sized) or `full`.
     pub mode: String,
+    /// GEMM microkernel the run dispatched
+    /// ([`crate::backend::gemm::Kernel::name`]: `scalar`/`sse2`/`avx2`).
+    /// A machine-identity field like `device` — gated as an exact string
+    /// match, and validated against the known kernel names on load.
+    pub kernel: String,
     /// Executor-section batch size ([`BENCH_BATCH`]); gated exactly.
     pub batch: usize,
     /// Conv-microbench ratios from the fixed-geometry sections
@@ -324,6 +354,7 @@ impl BenchReport {
             schema_version: SCHEMA_VERSION,
             bench: bench.to_string(),
             mode: mode.to_string(),
+            kernel: Kernel::active().name().to_string(),
             batch: BENCH_BATCH,
             conv_ratios: BTreeMap::new(),
             presets: Vec::new(),
@@ -336,6 +367,7 @@ impl BenchReport {
             ("batch", num(self.batch as f64)),
             ("bench", s(&self.bench)),
             ("conv_ratios", map_json(&self.conv_ratios)),
+            ("kernel", s(&self.kernel)),
             ("mode", s(&self.mode)),
             ("presets", Json::Arr(self.presets.iter().map(PresetReport::to_json).collect())),
             ("schema_version", num(self.schema_version as f64)),
@@ -362,10 +394,27 @@ impl BenchReport {
         let presets_json = j.arr_field("presets").map_err(ReportError::Malformed)?;
         let presets =
             presets_json.iter().map(PresetReport::from_json).collect::<Result<Vec<_>, _>>()?;
+        let kernel = str_of(j, "kernel")?;
+        // Machine-identity strings are validated up front with the typed
+        // error naming the offending key: a baseline produced by an
+        // unknown kernel or device must refuse to gate, not silently
+        // compare timings across machines.
+        if Kernel::parse(&kernel).is_none() {
+            return Err(ReportError::UnknownValue { key: "kernel".into(), value: kernel });
+        }
+        for p in &presets {
+            if !KNOWN_DEVICES.contains(&p.energy.device.as_str()) {
+                return Err(ReportError::UnknownValue {
+                    key: format!("{}.energy.device", p.spec),
+                    value: p.energy.device.clone(),
+                });
+            }
+        }
         Ok(BenchReport {
             schema_version: found,
             bench: str_of(j, "bench")?,
             mode: str_of(j, "mode")?,
+            kernel,
             batch: j.usize_field("batch").map_err(ReportError::Malformed)?,
             conv_ratios: map_from_json(j, "conv_ratios")?,
             presets,
@@ -551,6 +600,13 @@ pub fn gate(baseline: &BenchReport, fresh: &BenchReport, tol: &Tolerance) -> Gat
         fresh: fresh.batch as f64,
         ok: baseline.batch == fresh.batch,
     });
+    if baseline.kernel != fresh.kernel {
+        out.problems.push(format!(
+            "kernel: baseline {:?} vs fresh {:?} (different dispatch — regenerate the \
+             baseline or set SSPROP_GEMM_KERNEL to match)",
+            baseline.kernel, fresh.kernel
+        ));
+    }
     diff_maps(
         &mut out,
         "conv_ratios",
@@ -720,6 +776,51 @@ mod tests {
         }
         let err = BenchReport::parse(&j.to_string()).unwrap_err();
         assert_eq!(err, ReportError::SchemaVersion { found: 99, expected: SCHEMA_VERSION });
+    }
+
+    #[test]
+    fn report_records_the_active_kernel() {
+        let r = sample_report();
+        assert_eq!(r.kernel, Kernel::active().name());
+        assert!(Kernel::parse(&r.kernel).is_some());
+    }
+
+    #[test]
+    fn unknown_kernel_or_device_is_refused_with_the_offending_key() {
+        // an unknown kernel string must not gate silently
+        let mut j = sample_report().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("kernel".into(), Json::Str("quantum".into()));
+        }
+        let err = BenchReport::parse(&j.to_string()).unwrap_err();
+        assert_eq!(
+            err,
+            ReportError::UnknownValue { key: "kernel".into(), value: "quantum".into() }
+        );
+        assert!(err.to_string().contains("kernel"), "{err}");
+
+        // ... and neither must an unknown device profile
+        let mut bad_dev = sample_report();
+        bad_dev.presets[0].energy.device = "Abacus 9000".into();
+        let err = BenchReport::parse(&bad_dev.to_json().to_string()).unwrap_err();
+        assert_eq!(
+            err,
+            ReportError::UnknownValue {
+                key: "simple-cnn-d4-w16.energy.device".into(),
+                value: "Abacus 9000".into(),
+            }
+        );
+        assert!(err.to_string().contains("energy.device"), "{err}");
+    }
+
+    #[test]
+    fn gate_fails_kernel_mismatch_as_structural_problem() {
+        let base = sample_report();
+        let mut other = base.clone();
+        other.kernel = if base.kernel == "scalar" { "avx2".into() } else { "scalar".into() };
+        let res = gate(&base, &other, &Tolerance::default());
+        assert!(!res.passed());
+        assert!(res.problems.iter().any(|p| p.contains("kernel")), "{:?}", res.problems);
     }
 
     #[test]

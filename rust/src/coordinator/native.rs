@@ -66,6 +66,10 @@ pub struct NativeTrainConfig {
     /// are prewarmed for both batch sizes, so the tail step re-keys
     /// without reallocating.
     pub include_tail: bool,
+    /// Pin pool worker `w` to CPU core `w` (Linux/x86-64 only; a no-op
+    /// with a warning elsewhere). A placement hint for the OS scheduler —
+    /// the trained bits are identical either way.
+    pub affinity: bool,
     /// Print per-epoch progress lines.
     pub verbose: bool,
 }
@@ -89,6 +93,7 @@ impl NativeTrainConfig {
             threads: 1,
             pipeline: true,
             include_tail: false,
+            affinity: false,
             verbose: false,
         }
     }
@@ -171,7 +176,8 @@ impl NativeTrainer {
         let ds = SynthDataset::new(spec.clone(), cfg.seed);
         let loader = Loader::new(ds.clone(), Split::Train, cfg.batch);
         let test_loader = Loader::new(ds, Split::Test, cfg.batch);
-        let pool = WorkerPool::new(ExecConfig::with_threads(cfg.threads));
+        let pool =
+            WorkerPool::new(ExecConfig::with_threads(cfg.threads).with_affinity(cfg.affinity));
         Ok(NativeTrainer {
             cfg,
             model,

@@ -38,7 +38,8 @@ native commands (no artifacts needed; pure-Rust backend):
                [--lr 0.3]
                [--schedule epoch-bar|constant|linear|cosine|bar|iter-bar|warmup-bar]
                [--target-drop 0.8] [--period 2] [--seed 0] [--threads 1]
-               [--include-tail] [--no-pipeline] [--save ck.tstore] [--verbose]
+               [--include-tail] [--no-pipeline] [--affinity] [--save ck.tstore]
+               [--verbose]
                (--model picks a zoo preset: simple-cnn[-dD-wW], vgg-tiny[-wW],
                dropout-cnn[-wW-pP], resnet-tiny[-wW-bB] (residual blocks +
                BatchNorm, W channels x B blocks per stage); bare simple-cnn
@@ -46,7 +47,9 @@ native commands (no artifacts needed; pure-Rust backend):
                persistent pool workers with deterministic gradient reduction,
                0 auto-detects the count; --include-tail also trains each
                epoch's leftover partial batch; --no-pipeline disables the
-               batch-prefetch pipeline — a wall-clock knob, bits identical)
+               batch-prefetch pipeline — a wall-clock knob, bits identical;
+               --affinity pins pool worker w to core w on Linux/x86-64 — a
+               placement hint, bits identical, no-op elsewhere)
   fold         bake a checkpoint's BatchNorm statistics into its conv
                weights for serving: fold --checkpoint ck.tstore --out
                folded.tstore (specs without BatchNorm are a typed no-op)
@@ -403,6 +406,7 @@ fn cmd_train_native(args: &Args) -> Result<()> {
     cfg.threads = parse_threads(args)?;
     cfg.include_tail = args.has_flag("include-tail") || args.get("include-tail").is_some();
     cfg.pipeline = !(args.has_flag("no-pipeline") || args.get("no-pipeline").is_some());
+    cfg.affinity = args.has_flag("affinity") || args.get("affinity").is_some();
     cfg.scheduler = DropScheduler::new(schedule, target, epochs, iters);
     cfg.verbose = args.has_flag("verbose") || args.get("verbose").is_some();
 

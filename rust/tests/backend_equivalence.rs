@@ -7,10 +7,14 @@
 //! every plan buffer without changing the loss trajectory. Also pins the
 //! blocked GEMM microkernel to the naive reference over randomized
 //! shapes (dense within 1e-6·k, the sparsity-aware kept-channel views
-//! exact) and proves the always-on stale-cols guard trips on a backward
-//! against a different input's cached columns.
+//! exact), pins every SIMD kernel at every B-panel width *bitwise* to the
+//! portable scalar kernel (awkward column counts, keep counts straddling
+//! both widths, and random shapes), and proves the always-on stale-cols
+//! guard trips on a backward against a different input's cached columns.
 
-use ssprop::backend::gemm::{gemm, gemm_into, gemm_ref, GemmPack, Operand};
+use ssprop::backend::gemm::{
+    gemm, gemm_into, gemm_into_tiled, gemm_ref, GemmPack, Kernel, Operand, NR, NR2,
+};
 use ssprop::backend::sparse::{select_channels, sparse_bwd_compact};
 use ssprop::backend::{simple_cnn, Backend, Conv2d, Conv2dPlan, NativeBackend, SimpleCnnCfg};
 use ssprop::util::prop::check_no_shrink;
@@ -106,6 +110,139 @@ fn blocked_gemm_matches_reference_at_tile_and_block_edges() {
         let diff = max_abs_diff(&got, &want);
         assert!(diff <= 1e-6 * k as f32, "({m},{k},{n}): diff {diff}");
     }
+}
+
+/// The kernels runnable on this host, in dispatch-preference order —
+/// always at least [`Kernel::Scalar`].
+fn runnable_kernels() -> Vec<Kernel> {
+    Kernel::ALL.into_iter().filter(|k| k.available()).collect()
+}
+
+#[test]
+fn simd_kernels_and_tile_widths_agree_bitwise_on_awkward_column_counts() {
+    // Output-column counts with n mod 16 ∈ {1, 7, 9, 15}: both below and
+    // above one wide panel, so every kernel hits partial NR8 *and* NR16
+    // edge tiles. k = 37 fits one depth block, so every kernel × width
+    // must be bitwise equal to the naive reference outright.
+    let kernels = runnable_kernels();
+    let mut rng = Pcg::new(0x51D0, 13);
+    let mut pack = GemmPack::new();
+    for n in [1usize, 7, 9, 15, 17, 23, 41, 63] {
+        let (m, k) = (13usize, 37usize);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let want = gemm_ref(m, k, n, &a, &b);
+        for &kernel in &kernels {
+            for nr in [NR, NR2] {
+                let mut got = Vec::new();
+                gemm_into_tiled(
+                    m,
+                    k,
+                    n,
+                    Operand::Dense(&a),
+                    Operand::Dense(&b),
+                    &mut got,
+                    &mut pack,
+                    kernel,
+                    nr,
+                );
+                assert_eq!(got, want, "({m},{k},{n}) {kernel:?} nr={nr} vs reference");
+            }
+        }
+    }
+}
+
+#[test]
+fn kept_channel_keep_counts_agree_bitwise_across_kernels_and_widths() {
+    // The dW GEMM's output-column count IS the keep count; pin every
+    // kernel × width on keep sets straddling both panel widths:
+    // {0, 1, NR−1, NR, NR+1, all}. The anchor is the naive reference on
+    // explicitly gathered matrices (K = bt·hw fits one depth block).
+    let kernels = runnable_kernels();
+    let (bt, hw, cout, np) = (2usize, 9, NR + 4, 11usize);
+    let m = bt * hw;
+    let mut rng = Pcg::new(0xD3, 19);
+    let cols: Vec<f32> = (0..m * np).map(|_| rng.normal()).collect();
+    let g: Vec<f32> = (0..bt * cout * hw).map(|_| rng.normal()).collect();
+    let mut pack = GemmPack::new();
+    for kp in [0usize, 1, NR - 1, NR, NR + 1, cout] {
+        let keep: Vec<usize> = (0..kp).collect();
+        // colsᵀ (np × m), explicitly materialized for the reference
+        let mut at = vec![0f32; np * m];
+        for r in 0..m {
+            for c in 0..np {
+                at[c * m + r] = cols[r * np + c];
+            }
+        }
+        // explicit (m × kp) gather of the kept gradient channels
+        let mut gck = vec![0f32; m * kp];
+        for b in 0..bt {
+            for (pos, &o) in keep.iter().enumerate() {
+                for pix in 0..hw {
+                    gck[(b * hw + pix) * kp + pos] = g[(b * cout + o) * hw + pix];
+                }
+            }
+        }
+        let want = gemm_ref(np, m, kp, &at, &gck);
+        for &kernel in &kernels {
+            for nr in [NR, NR2] {
+                let mut got = Vec::new();
+                gemm_into_tiled(
+                    np,
+                    m,
+                    kp,
+                    Operand::Transposed(&cols),
+                    Operand::KeptChannels { g: &g, keep: &keep, cout, hw },
+                    &mut got,
+                    &mut pack,
+                    kernel,
+                    nr,
+                );
+                assert_eq!(got, want, "kp={kp} {kernel:?} nr={nr} vs gathered reference");
+            }
+        }
+    }
+}
+
+#[test]
+fn all_kernels_and_widths_are_bitwise_equal_over_random_shapes() {
+    // Kernel and panel width are pure dispatch choices: over random
+    // shapes every combination must produce the same bits (the scalar
+    // NR=8 result is the anchor; k may exceed one depth block here, so
+    // the naive reference is deliberately NOT consulted).
+    let kernels = runnable_kernels();
+    check_no_shrink("gemm-kernel-eq", 64, gen_gemm, |c| {
+        let mut rng = Pcg::new(c.seed, 3);
+        let a: Vec<f32> = (0..c.m * c.k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..c.k * c.n).map(|_| rng.normal()).collect();
+        let mut pack = GemmPack::new();
+        let mut anchor: Option<Vec<f32>> = None;
+        for &kernel in &kernels {
+            for nr in [NR, NR2] {
+                let mut got = Vec::new();
+                gemm_into_tiled(
+                    c.m,
+                    c.k,
+                    c.n,
+                    Operand::Dense(&a),
+                    Operand::Dense(&b),
+                    &mut got,
+                    &mut pack,
+                    kernel,
+                    nr,
+                );
+                match &anchor {
+                    None => anchor = Some(got),
+                    Some(w) => {
+                        if &got != w {
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+        true
+    });
 }
 
 #[test]

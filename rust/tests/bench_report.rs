@@ -27,12 +27,22 @@ fn committed_baseline_has_every_tracked_preset() {
     assert_eq!(rep.bench, "native_hotpath");
     let specs: Vec<&str> = rep.presets.iter().map(|p| p.spec.as_str()).collect();
     assert_eq!(specs, BASELINE_PRESETS, "baseline presets drifted from BASELINE_PRESETS");
+    assert!(
+        ssprop::backend::gemm::Kernel::parse(&rep.kernel).is_some(),
+        "baseline kernel {:?} is not a known kernel name",
+        rep.kernel
+    );
     for p in &rep.presets {
         assert!(!p.timings_ns.is_empty(), "{}: no step times recorded", p.spec);
         assert!(p.ratios.contains_key("bwd_speedup_d80"), "{}: missing model bwd ratio", p.spec);
         assert!(
             p.ratios.contains_key("sparse_gemm_speedup_d50"),
             "{}: missing sparse-GEMM ratio",
+            p.spec
+        );
+        assert!(
+            p.ratios.contains_key("sparse_gemm_nr16_speedup"),
+            "{}: missing wide-tile sparse-GEMM ratio (schema v4)",
             p.spec
         );
     }
@@ -42,6 +52,8 @@ fn committed_baseline_has_every_tracked_preset() {
         "bwd_speedup_d80_nodx",
         "gemm_speedup_256x288x128",
         "gemm_speedup_1024x576x64",
+        "gemm_simd_speedup_256x288x128",
+        "gemm_simd_speedup_1024x576x64",
     ] {
         assert!(rep.conv_ratios.contains_key(key), "baseline missing conv ratio {key}");
     }
@@ -137,8 +149,9 @@ fn gate_flags_missing_preset_as_problem() {
 #[test]
 fn schema_version_mismatch_is_a_typed_error() {
     let text = std::fs::read_to_string(BASELINE).unwrap();
-    let bumped = text.replace("\"schema_version\": 2", "\"schema_version\": 999");
-    assert_ne!(text, bumped, "baseline should carry schema_version 2");
+    let tag = format!("\"schema_version\": {SCHEMA_VERSION}");
+    let bumped = text.replace(&tag, "\"schema_version\": 999");
+    assert_ne!(text, bumped, "baseline should carry the current schema_version");
     match BenchReport::parse(&bumped) {
         Err(ReportError::SchemaVersion { found, expected }) => {
             assert_eq!(found, 999);
@@ -187,5 +200,46 @@ fn bench_check_cli_exit_codes() {
     let out = String::from_utf8_lossy(&traj.stdout);
     for spec in BASELINE_PRESETS {
         assert!(out.contains(spec), "trajectory missing {spec}:\n{out}");
+    }
+}
+
+/// A baseline stamped with an unknown `kernel` (or `device`) string must
+/// fail `bench-check` with a typed error naming the offending key — not
+/// gate timings against a mismatched machine silently.
+#[test]
+fn bench_check_refuses_unknown_kernel_naming_the_key() {
+    let exe = env!("CARGO_BIN_EXE_ssprop");
+    let dir = std::env::temp_dir().join("ssprop_bench_report_unknown_kernel");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let text = std::fs::read_to_string(BASELINE).unwrap();
+    let rep = BenchReport::parse(&text).unwrap();
+    let tag = format!("\"kernel\": \"{}\"", rep.kernel);
+    let bad = text.replace(&tag, "\"kernel\": \"turboencabulator\"");
+    assert_ne!(text, bad, "baseline should carry a kernel field");
+    let bad_path = dir.join("baseline_bad_kernel.json");
+    std::fs::write(&bad_path, &bad).unwrap();
+
+    // ... whether the bad string sits in the baseline or the fresh report
+    let bad_str = bad_path.to_str().unwrap();
+    for args in [[bad_str, BASELINE], [BASELINE, bad_str]] {
+        let out = Command::new(exe)
+            .arg("bench-check")
+            .args(args)
+            .output()
+            .expect("run ssprop bench-check");
+        assert!(!out.status.success(), "unknown kernel must fail the gate");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("kernel"), "error must name the offending key:\n{err}");
+        assert!(err.contains("turboencabulator"), "error must show the value:\n{err}");
+    }
+
+    // the parse layer carries the same information as a typed value
+    match BenchReport::parse(&bad) {
+        Err(ReportError::UnknownValue { key, value }) => {
+            assert_eq!(key, "kernel");
+            assert_eq!(value, "turboencabulator");
+        }
+        other => panic!("expected UnknownValue, got {other:?}"),
     }
 }
